@@ -1,0 +1,95 @@
+//! Hashing-substrate throughput (supports Table 2's preprocessing numbers
+//! and DESIGN.md §Perf).  Reports ns/doc and hashes/s for every hashing
+//! method at paper-relevant parameters.
+//!
+//! Run: `cargo bench --bench bench_hashing`
+
+use bbit_mh::hashing::minwise::{BbitMinHash, MinwiseHasher, PermutationMinwise};
+use bbit_mh::hashing::permutation::FeistelPermutation;
+use bbit_mh::hashing::rp::RandomProjection;
+use bbit_mh::hashing::universal::{UniversalFamily, UniversalHash};
+use bbit_mh::hashing::vw::VwHasher;
+use bbit_mh::util::bench::{black_box, Bench};
+use bbit_mh::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xBE7C);
+    let d = 1u64 << 30;
+    let doc: Vec<u32> = rng
+        .sample_distinct(d, 800)
+        .into_iter()
+        .map(|x| x as u32)
+        .collect();
+    let mut b = Bench::default();
+
+    // raw 2-universal hash
+    let h = UniversalHash::draw(&mut rng);
+    b.bench_elems("universal_hash/800_indices", 800, || {
+        let mut acc = 0u64;
+        for &t in &doc {
+            acc ^= h.hash(t, d);
+        }
+        acc
+    });
+
+    // minwise at the paper's k values
+    for k in [30usize, 200, 500] {
+        let mh = MinwiseHasher::draw(k, d, &mut rng);
+        let mut out = vec![0u64; k];
+        b.bench_elems(&format!("minwise/k={k}/nnz=800"), (k * 800) as u64, || {
+            mh.hash_into(&doc, &mut out);
+            out[0]
+        });
+    }
+
+    // b-bit pack path (hash + truncate + pack)
+    let bb = BbitMinHash::draw(200, 8, d, &mut rng);
+    let mut scratch = vec![0u64; 200];
+    let mut codes = vec![0u16; 200];
+    b.bench_elems("bbit_codes/b=8_k=200/nnz=800", 200 * 800, || {
+        bb.codes_into(&doc, &mut scratch, &mut codes);
+        codes[0]
+    });
+
+    // permutation-based minwise (Figure 8 arm) — Feistel costs more per
+    // application; this quantifies the gap vs 2-universal
+    let perms: Vec<FeistelPermutation> =
+        (0..64).map(|_| FeistelPermutation::draw(d, &mut rng)).collect();
+    let pm = PermutationMinwise::new(perms);
+    let mut out = vec![0u64; 64];
+    b.bench_elems("perm_minwise/k=64/nnz=800", 64 * 800, || {
+        pm.hash_into(&doc, &mut out);
+        out[0]
+    });
+
+    // VW hashing at paper bin counts
+    for bins in [1024usize, 16384] {
+        let vw = VwHasher::draw(bins, &mut rng);
+        let mut out = vec![0.0f32; bins];
+        b.bench_elems(&format!("vw_hash/bins={bins}/nnz=800"), 800, || {
+            out.fill(0.0);
+            vw.hash_into(&doc, &mut out);
+            black_box(out[0])
+        });
+    }
+
+    // random projections (much slower per sample — why the paper's world
+    // moved to hashing; k small on purpose)
+    let rp = RandomProjection::new(16, 1.0, &mut rng);
+    b.bench_elems("random_projection/k=16/nnz=800", 16 * 800, || {
+        rp.project_set(&doc)[0]
+    });
+
+    // packed-codes roundtrip
+    let fam = UniversalFamily::draw(200, d, &mut rng);
+    let _ = fam;
+    let mut pc = bbit_mh::encode::packed::PackedCodes::new(8, 200);
+    pc.push_row(&codes).unwrap();
+    b.bench_elems("packed_get/row_of_200", 200, || {
+        let mut acc = 0u16;
+        for j in 0..200 {
+            acc ^= pc.get(0, j);
+        }
+        acc
+    });
+}

@@ -1,0 +1,60 @@
+//! End-to-end pipeline throughput + ablations over the coordinator's
+//! tuning knobs (worker count, chunk size, queue depth) — the DESIGN.md
+//! §Perf L3 target is that hashing saturates the parse rate.
+//!
+//! Run: `cargo bench --bench bench_pipeline`
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::util::bench::Bench;
+
+fn main() {
+    let base = CorpusGenerator::new(CorpusConfig {
+        n_docs: 800,
+        vocab: 2500,
+        zipf_alpha: 1.05,
+        mean_tokens: 28.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed: 0x9199,
+    })
+    .generate();
+    let cfg = ExpandConfig { vocab: 2500, dim: 1 << 30, three_way_rate: 30, seed: 4 };
+    let ds = expand_dataset(&cfg, &base);
+    println!("corpus: {} docs, mean nnz {:.0}\n", ds.len(), ds.stats().nnz_mean);
+    let job = HashJob::Bbit { b: 8, k: 200, d: 1 << 30, seed: 11 };
+    let mut b = Bench::quick();
+
+    // worker scaling
+    for workers in [1usize, 2, 4, bbit_mh::config::available_workers()] {
+        let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 128, queue_depth: 4 });
+        b.bench_elems(&format!("pipeline/workers={workers}"), ds.len() as u64, || {
+            pipe.run(dataset_chunks(&ds, 128), &job).unwrap().1.docs
+        });
+    }
+
+    // chunk-size ablation (scheduling granularity vs channel overhead)
+    for chunk in [16usize, 64, 256, 1024] {
+        let pipe = Pipeline::new(PipelineConfig {
+            workers: bbit_mh::config::available_workers(),
+            chunk_size: chunk,
+            queue_depth: 4,
+        });
+        b.bench_elems(&format!("pipeline/chunk={chunk}"), ds.len() as u64, || {
+            pipe.run(dataset_chunks(&ds, chunk), &job).unwrap().1.docs
+        });
+    }
+
+    // queue-depth ablation (backpressure head-room)
+    for depth in [1usize, 2, 8] {
+        let pipe = Pipeline::new(PipelineConfig {
+            workers: bbit_mh::config::available_workers(),
+            chunk_size: 128,
+            queue_depth: depth,
+        });
+        b.bench_elems(&format!("pipeline/queue_depth={depth}"), ds.len() as u64, || {
+            pipe.run(dataset_chunks(&ds, 128), &job).unwrap().1.docs
+        });
+    }
+}

@@ -1,0 +1,76 @@
+//! Table 2 micro-benchmark: LibSVM parse rate vs hashing rate (per worker
+//! count), on an in-memory corpus so disk speed doesn't pollute the
+//! comparison.
+//!
+//! Run: `cargo bench --bench bench_preprocess`
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::libsvm::{LibsvmReader, LibsvmWriter};
+use bbit_mh::util::bench::Bench;
+
+fn main() {
+    let n_docs = 500;
+    let base = CorpusGenerator::new(CorpusConfig {
+        n_docs,
+        vocab: 3000,
+        zipf_alpha: 1.05,
+        mean_tokens: 30.0,
+        class_signal: 0.55,
+        pos_fraction: 0.47,
+        seed: 0x9E,
+    })
+    .generate();
+    let cfg = ExpandConfig { vocab: 3000, dim: 1 << 30, three_way_rate: 30, seed: 1 };
+    let ds = expand_dataset(&cfg, &base);
+    let mut buf = Vec::new();
+    {
+        let mut w = LibsvmWriter::new(&mut buf);
+        w.write_dataset(&ds).unwrap();
+        w.finish().unwrap();
+    }
+    println!(
+        "corpus: {n_docs} docs, mean nnz {:.0}, {:.1} MB libsvm\n",
+        ds.stats().nnz_mean,
+        buf.len() as f64 / 1e6
+    );
+
+    let mut b = Bench::quick();
+
+    // (1) the paper's "data loading": full parse of the byte buffer
+    b.bench_elems("libsvm_parse/docs", n_docs as u64, || {
+        let mut n = 0usize;
+        for ex in LibsvmReader::new(&buf[..]).binary() {
+            n += ex.unwrap().nnz();
+        }
+        n
+    });
+
+    // (2) preprocessing at k=500 across worker counts
+    for workers in [1usize, 2, bbit_mh::config::available_workers()] {
+        let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 64, queue_depth: 4 });
+        b.bench_elems(
+            &format!("pipeline_bbit/k=500_w={workers}/docs"),
+            n_docs as u64,
+            || {
+                let (out, _) = pipe
+                    .run(
+                        dataset_chunks(&ds, 64),
+                        &HashJob::Bbit { b: 16, k: 500, d: 1 << 30, seed: 7 },
+                    )
+                    .unwrap();
+                out.len()
+            },
+        );
+    }
+
+    // (3) VW preprocessing for comparison
+    let pipe = Pipeline::new(PipelineConfig::default());
+    b.bench_elems("pipeline_vw/bins=1024/docs", n_docs as u64, || {
+        let (out, _) = pipe
+            .run(dataset_chunks(&ds, 64), &HashJob::Vw { bins: 1024, seed: 7 })
+            .unwrap();
+        out.len()
+    });
+}

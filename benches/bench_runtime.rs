@@ -1,0 +1,80 @@
+//! PJRT artifact execution latency — the L1/L2 hot-path numbers
+//! (per-batch preprocessing and per-chunk training through the AOT'd HLO).
+//!
+//! Requires `make artifacts`; prints a skip message otherwise.
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use std::path::Path;
+
+use bbit_mh::hashing::universal::UniversalFamily;
+use bbit_mh::runtime::{MinhashEngine, PjrtRuntime, TrainEngine, VwEngine};
+use bbit_mh::util::bench::Bench;
+use bbit_mh::util::Rng;
+
+fn main() {
+    let rt = match PjrtRuntime::cpu(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping runtime bench (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let mut rng = Rng::new(0xBEC);
+    let mut b = Bench::quick();
+
+    // --- minhash artifact: full 256-doc batch, realistic nnz ---
+    for name in ["minhash_k200", "minhash_k512"] {
+        let engine = MinhashEngine::new(&rt, name).unwrap();
+        let family = UniversalFamily::draw(engine.k, engine.d_space, &mut rng);
+        let sets: Vec<Vec<u32>> = (0..engine.batch)
+            .map(|_| {
+                rng.sample_distinct(engine.d_space, 800)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+        b.bench_elems(&format!("pjrt/{name}/batch256"), engine.batch as u64, || {
+            engine.minhash_batch(&refs, &family).unwrap().len()
+        });
+    }
+
+    // --- vw artifact ---
+    let engine = VwEngine::new(&rt, "vw_bins1024").unwrap();
+    let sets: Vec<Vec<u32>> = (0..engine.batch)
+        .map(|_| {
+            rng.sample_distinct(1 << 30, 800)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+    b.bench_elems("pjrt/vw_bins1024/batch256", engine.batch as u64, || {
+        engine.hash_batch(&refs, [1, 2, 3, 4]).unwrap().len()
+    });
+
+    // --- train + predict artifacts ---
+    for name in ["train_logistic_b8_k200", "train_sqhinge_b8_k200"] {
+        let mut engine = TrainEngine::new(&rt, name, "predict_b8_k200").unwrap();
+        let codes: Vec<i32> = (0..engine.chunk * engine.k)
+            .map(|_| rng.below(256) as i32)
+            .collect();
+        let y: Vec<f32> = (0..engine.chunk)
+            .map(|_| if rng.bool() { 1.0 } else { -1.0 })
+            .collect();
+        let steps = engine.chunk / engine.batch;
+        b.bench_elems(
+            &format!("pjrt/{name}/chunk2048 ({steps} sgd steps)"),
+            engine.chunk as u64,
+            || {
+                engine.train_chunk(&codes, &y, 0.1, 1e-4).unwrap();
+            },
+        );
+        b.bench_elems("pjrt/predict_b8_k200/rows2048", 2048, || {
+            engine.margins(&codes[..2048 * engine.k]).unwrap().len()
+        });
+    }
+}

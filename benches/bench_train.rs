@@ -1,0 +1,87 @@
+//! Training-time micro-benchmarks (the Figures 2/4/7 timing shapes):
+//! solver cost as a function of representation (b-bit vs VW), k, and C.
+//!
+//! Run: `cargo bench --bench bench_train`
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::solver::{
+    train_lr, train_sgd, train_svm, LrConfig, SgdConfig, SvmConfig,
+};
+use bbit_mh::util::bench::Bench;
+
+fn main() {
+    let base = CorpusGenerator::new(CorpusConfig {
+        n_docs: 1000,
+        vocab: 2000,
+        zipf_alpha: 1.05,
+        mean_tokens: 25.0,
+        class_signal: 0.55,
+        pos_fraction: 0.5,
+        seed: 0x7124,
+    })
+    .generate();
+    let cfg = ExpandConfig { vocab: 2000, dim: 1 << 30, three_way_rate: 30, seed: 2 };
+    let ds = expand_dataset(&cfg, &base);
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let mut b = Bench::quick();
+
+    // --- b-bit representations: SVM + LR time vs k (Figure 2/4 shape) ---
+    for k in [30usize, 100, 200] {
+        let (out, _) = pipe
+            .run(dataset_chunks(&ds, 128), &HashJob::Bbit { b: 8, k, d: 1 << 30, seed: 3 })
+            .unwrap();
+        let bb = out.into_bbit().unwrap();
+        b.bench_elems(&format!("svm_dcd/bbit_b8_k{k}/docs"), bb.len() as u64, || {
+            train_svm(&bb, &SvmConfig::with_c(1.0)).1.iterations
+        });
+        b.bench_elems(&format!("lr_newton/bbit_b8_k{k}/docs"), bb.len() as u64, || {
+            train_lr(&bb, &LrConfig::with_c(1.0)).1.iterations
+        });
+        b.bench_elems(&format!("sgd_logistic/bbit_b8_k{k}/docs"), bb.len() as u64, || {
+            train_sgd(&bb, &SgdConfig { epochs: 3, ..Default::default() }).1.iterations
+        });
+    }
+
+    // --- VW representations: time vs bins (Figure 7 shape) ---
+    for bins in [256usize, 1024, 4096] {
+        let (out, _) = pipe
+            .run(dataset_chunks(&ds, 128), &HashJob::Vw { bins, seed: 5 })
+            .unwrap();
+        let vw = out.into_vw().unwrap();
+        b.bench_elems(&format!("svm_dcd/vw_bins{bins}/docs"), vw.len() as u64, || {
+            train_svm(&vw, &SvmConfig::with_c(1.0)).1.iterations
+        });
+        b.bench_elems(&format!("lr_newton/vw_bins{bins}/docs"), vw.len() as u64, || {
+            train_lr(&vw, &LrConfig::with_c(1.0)).1.iterations
+        });
+    }
+
+    // --- shrinking ablation (DESIGN.md: why the default is off) ---
+    let (out, _) = pipe
+        .run(dataset_chunks(&ds, 128), &HashJob::Bbit { b: 8, k: 200, d: 1 << 30, seed: 3 })
+        .unwrap();
+    let bb_s = out.into_bbit().unwrap();
+    for shrinking in [false, true] {
+        b.bench(&format!("svm_dcd/shrinking={shrinking}/b8_k200"), || {
+            train_svm(
+                &bb_s,
+                &SvmConfig { c: 1.0, eps: 1e-3, max_iter: 1000, shrinking, ..Default::default() },
+            )
+            .1
+            .iterations
+        });
+    }
+
+    // --- C dependence (Figures 2/4 x-axis) ---
+    let (out, _) = pipe
+        .run(dataset_chunks(&ds, 128), &HashJob::Bbit { b: 8, k: 100, d: 1 << 30, seed: 3 })
+        .unwrap();
+    let bb = out.into_bbit().unwrap();
+    for c in [0.01, 1.0, 100.0] {
+        b.bench(&format!("svm_dcd/b8_k100_C{c}"), || {
+            train_svm(&bb, &SvmConfig::with_c(c)).1.iterations
+        });
+    }
+}

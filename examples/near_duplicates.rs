@@ -1,0 +1,79 @@
+//! Re-using the hashed dataset beyond learning (paper Section 6): the same
+//! packed b-bit signatures that feed the solvers drive near-duplicate
+//! detection through banded LSH — no second pass over the raw data.
+//!
+//! Run: `cargo run --release --example near_duplicates`
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::data::dataset::{Example, SparseDataset};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::hashing::lsh::{LshConfig, LshIndex};
+use bbit_mh::util::Rng;
+
+fn main() -> bbit_mh::Result<()> {
+    // corpus with planted near-duplicates: every 10th document is a
+    // lightly-perturbed copy of its predecessor
+    let base = CorpusGenerator::new(CorpusConfig {
+        n_docs: 1000,
+        vocab: 1 << 20,
+        zipf_alpha: 1.02,
+        mean_tokens: 300.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed: 0xD0C5,
+    })
+    .generate();
+    let mut rng = Rng::new(42);
+    let mut ds = SparseDataset::new(base.dim);
+    let mut planted = Vec::new();
+    for i in 0..base.len() {
+        let (idx, _) = base.row(i);
+        ds.push(&Example::binary(base.labels[i], idx.to_vec()));
+        if i % 10 == 9 {
+            // perturb ~4% of tokens → resemblance ≈ 0.92
+            let mut copy: Vec<u32> = idx.to_vec();
+            for _ in 0..copy.len() / 25 {
+                let pos = rng.below_usize(copy.len());
+                copy[pos] = rng.below(base.dim) as u32;
+            }
+            planted.push((ds.len() as u32 - 1, ds.len() as u32));
+            ds.push(&Example::binary(base.labels[i], copy));
+        }
+    }
+    println!("corpus: {} docs, {} planted near-duplicate pairs", ds.len(), planted.len());
+
+    // one hashing pass (the same codes a classifier would train on)
+    let job = HashJob::Bbit { b: 8, k: 64, d: ds.dim, seed: 7 };
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let (hashed, report) = pipe.run(dataset_chunks(&ds, 256), &job)?;
+    let hashed = hashed.into_bbit()?;
+    println!(
+        "hashed in {:.3}s → {} KB of signatures",
+        report.wall_seconds,
+        hashed.codes.ideal_bytes() / 1024
+    );
+
+    // LSH: 16 bands × 4 rows → threshold ≈ 0.5 resemblance
+    let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+    println!(
+        "LSH bands=16 rows=4: S-curve threshold R ≈ {:.2}, P(cand | R=0.9) = {:.3}",
+        cfg.threshold(),
+        cfg.candidate_probability(0.9)
+    );
+    let index = LshIndex::build(&hashed.codes, cfg)?;
+    let pairs = index.near_duplicate_pairs(0.55);
+    let found = planted
+        .iter()
+        .filter(|&&(a, b)| pairs.iter().any(|&(x, y, _)| (x, y) == (a, b)))
+        .count();
+    println!(
+        "found {} candidate pairs; recall on planted duplicates: {}/{} ({:.0}%), {} non-planted",
+        pairs.len(),
+        found,
+        planted.len(),
+        100.0 * found as f64 / planted.len() as f64,
+        pairs.len() - found,
+    );
+    assert!(found * 10 >= planted.len() * 9, "recall below 90%");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Head-to-head at equal storage: b-bit minwise hashing vs VW feature
+//! hashing (the paper's Section 5 punchline, Figures 5–6).
+//!
+//! Budgets the same number of bits per document for both methods and shows
+//! that b-bit minwise hashing wins decisively — VW needs orders of
+//! magnitude more storage for the same accuracy.
+//!
+//! Run: `cargo run --release --example vw_comparison`
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
+use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::report::{fnum, Table};
+use bbit_mh::util::Rng;
+
+fn main() -> bbit_mh::Result<()> {
+    let base = CorpusGenerator::new(CorpusConfig {
+        n_docs: 2000,
+        vocab: 3000,
+        zipf_alpha: 1.05,
+        mean_tokens: 30.0,
+        class_signal: 0.55,
+        pos_fraction: 0.47,
+        seed: 0x7E57,
+    })
+    .generate();
+    let cfg = ExpandConfig { vocab: 3000, dim: 1 << 30, three_way_rate: 30, seed: 0xEE };
+    let expanded = expand_dataset(&cfg, &base);
+    let (train_raw, test_raw) = expanded.split(0.5, &mut Rng::new(9));
+    println!(
+        "expanded corpus: {} docs, D = 2^30, mean nnz = {:.0}\n",
+        expanded.len(),
+        expanded.stats().nnz_mean
+    );
+
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let sched = Scheduler::new(bbit_mh::config::available_workers());
+    let c = 1.0;
+    let mut t = Table::new(
+        "equal-storage comparison (SVM, C=1): bits/doc -> accuracy",
+        &["method", "params", "storage bits/doc", "test acc %"],
+    );
+
+    // b-bit arm: (b, k) pairs at growing budgets
+    for (b, k) in [(1u32, 64usize), (2, 64), (4, 64), (8, 64), (8, 128), (8, 256)] {
+        let job = HashJob::Bbit { b, k, d: 1 << 30, seed: 0x4A5E };
+        let (tr, _) = pipe.run(dataset_chunks(&train_raw, 256), &job)?;
+        let (te, _) = pipe.run(dataset_chunks(&test_raw, 256), &job)?;
+        let o = sched.run_grid(
+            &tr.into_bbit()?,
+            &te.into_bbit()?,
+            &[TrainJob { tag: String::new(), solver: SolverKind::SvmDcd, c }],
+        )?;
+        t.row(&[
+            "b-bit minwise".into(),
+            format!("b={b} k={k}"),
+            (b as u64 * k as u64).to_string(),
+            fnum(100.0 * o[0].test_accuracy),
+        ]);
+    }
+
+    // VW arm: bins at the same bit budgets (32-bit entries, §5.3 accounting)
+    for bins in [16usize, 64, 256, 1024, 4096] {
+        let job = HashJob::Vw { bins, seed: 0x77 };
+        let (tr, _) = pipe.run(dataset_chunks(&train_raw, 256), &job)?;
+        let (te, _) = pipe.run(dataset_chunks(&test_raw, 256), &job)?;
+        let o = sched.run_grid(
+            &tr.into_vw()?,
+            &te.into_vw()?,
+            &[TrainJob { tag: String::new(), solver: SolverKind::SvmDcd, c }],
+        )?;
+        t.row(&[
+            "VW".into(),
+            format!("k={bins} bins"),
+            (bins as u64 * 32).to_string(),
+            fnum(100.0 * o[0].test_accuracy),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "reading: at ~512 bits/doc, 8-bit minwise (k=64) should beat VW with 4096 bins \
+         (131072 bits/doc) — the paper's 10-100x storage gap."
+    );
+    Ok(())
+}

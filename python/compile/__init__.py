@@ -1,0 +1,11 @@
+"""Build-time compile package: L1 pallas kernels + L2 jax model + AOT.
+
+Importing this package enables 64-bit jax types: the 2-universal hash
+arithmetic ((c1 + c2*t) mod p with p = 2^31 - 1) requires uint64
+intermediates; without x64 jnp silently downgrades them to uint32 and the
+hashes collide with the rust implementation's.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- minhash:  k-way 2-universal minwise hashing (preprocessing, Table 2)
+- vw:       VW signed Count-Min feature hashing (baseline, Eq. 14)
+- linear:   gather-sum margins over b-bit expanded codes (Section 3)
+- ref:      pure-jnp oracles for all of the above
+"""
+
+from .linear import bbit_margins
+from .minhash import minhash
+from .vw import vw_hash
+
+__all__ = ["bbit_margins", "minhash", "vw_hash"]

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: margins of a linear model over b-bit expanded codes.
+
+Section 3 of the paper expands each hashed data point into a 2^b * k
+binary vector with exactly k ones at columns j*2^b + code_j.  The dot
+product w . x_i therefore reduces to a k-way gather-sum; this kernel
+computes a whole minibatch of margins with the weight vector staged once
+into VMEM and re-used across the document tile (the dominant read is w,
+which is why keeping it tile-resident matters -- see DESIGN.md Section 6).
+
+The scatter half of the SGD step lives at L2 (model.py) as a jnp
+``.at[].add`` so it lowers to a native HLO scatter; the gather/margin half
+is the compute hot spot and lives here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Document-axis tile.  128 rows × k=200 codes (100 KB int32) + the
+# 2^b·k weight vector (200 KB f32 at b=8, k=200) stay comfortably inside
+# VMEM; fewer grid steps also cut interpret-mode dispatch overhead ~4×
+# on the CPU path (§Perf).
+BLOCK_B = 128
+
+
+def _margins_kernel(w_ref, codes_ref, out_ref, *, b):
+    codes = codes_ref[...]  # [BLOCK_B, k]
+    k = codes.shape[1]
+    offsets = jnp.arange(k, dtype=jnp.int32) * (1 << b)
+    cols = codes + offsets[None, :]
+    w = w_ref[...]  # [2^b * k] VMEM-resident for the tile
+    out_ref[...] = jnp.sum(w[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def bbit_margins(w, codes, *, b: int):
+    """Margins w.x for every row of a [N, k] int32 code matrix.
+
+    w: [2^b * k] float32 weight vector; codes values must be < 2^b.
+    Returns [N] float32.
+    """
+    n, k = codes.shape
+    if n % BLOCK_B != 0:
+        raise ValueError(f"batch {n} must be a multiple of {BLOCK_B}")
+    dim = (1 << b) * k
+    if w.shape != (dim,):
+        raise ValueError(f"w must have shape ({dim},), got {w.shape}")
+    grid = (n // BLOCK_B,)
+    return pl.pallas_call(
+        functools.partial(_margins_kernel, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(w, codes)

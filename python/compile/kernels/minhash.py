@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: k-way 2-universal minwise hashing.
+
+This is the paper's preprocessing hot spot (Section 6 / Table 2): for each
+document (a set of feature indices) apply k independent 2-universal hashes
+h_j(t) = ((c1_j + c2_j * t) mod p) mod D and keep the minimum over the
+document's nonzeros.  The paper offloads this to a GPU; here it is a Pallas
+kernel so the same computation AOT-lowers into the HLO artifact the rust
+coordinator executes via PJRT.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the grid tiles the document
+axis; each grid step stages one [BLOCK_B, max_nnz] int32 index tile into
+VMEM (BlockSpec), then sweeps the nonzero axis in NNZ_CHUNK-sized slabs,
+updating a [BLOCK_B, k] running minimum that stays VMEM-resident for the
+whole tile.  The inner [BLOCK_B, NNZ_CHUNK, k] hash lattice is pure VPU
+integer work (mul/add/mod/min); nothing touches the MXU.  Under
+interpret=True the same schedule runs as numpy loops, which is what the CPU
+PJRT client executes.
+
+Integer ranges: indices < 2^30 <= D, c2 < p = 2^31 - 1, so
+c1 + c2 * t < 2^62 -- products stay inside uint64 with no overflow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PRIME
+
+# Document-axis tile. 8 keeps the interpret-mode lattice small (16 measured
+# 8% slower on CPU: the u64 lattice falls out of L2); on a real
+# TPU the VMEM budget (Section 6 of DESIGN.md) admits 128.
+BLOCK_B = 8
+# Nonzero-axis slab swept by the inner loop.
+NNZ_CHUNK = 128
+
+
+def _minhash_kernel(idx_ref, mask_ref, c1_ref, c2_ref, out_ref, *, p, d_space):
+    """One grid step: minwise-hash BLOCK_B documents against all k hashes."""
+    c1 = c1_ref[...].astype(jnp.uint64)  # [k]
+    c2 = c2_ref[...].astype(jnp.uint64)  # [k]
+    nnz = idx_ref.shape[1]
+    k = c1.shape[0]
+    sentinel = jnp.uint64(d_space)
+
+    def body(chunk, running_min):
+        start = chunk * NNZ_CHUNK
+        idx = jax.lax.dynamic_slice(
+            idx_ref[...], (0, start), (idx_ref.shape[0], NNZ_CHUNK)
+        ).astype(jnp.uint64)
+        msk = jax.lax.dynamic_slice(
+            mask_ref[...], (0, start), (mask_ref.shape[0], NNZ_CHUNK)
+        )
+        # [B, C, k] hash lattice; VPU integer ops only.
+        h = (c1[None, None, :] + c2[None, None, :] * idx[:, :, None]) % jnp.uint64(p)
+        h = h % jnp.uint64(d_space)
+        h = jnp.where(msk[:, :, None] != 0, h, sentinel)
+        return jnp.minimum(running_min, jnp.min(h, axis=1))
+
+    n_chunks = nnz // NNZ_CHUNK
+    init = jnp.full((idx_ref.shape[0], k), sentinel, dtype=jnp.uint64)
+    result = jax.lax.fori_loop(0, n_chunks, body, init)
+    out_ref[...] = result.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("d_space",))
+def minhash(idx, mask, c1, c2, *, d_space: int):
+    """Minwise-hash a padded batch of index sets.
+
+    idx:  [B, NNZ] int32  (NNZ must be a multiple of NNZ_CHUNK, B of BLOCK_B;
+                           callers pad -- see model.pad_batch)
+    mask: [B, NNZ] int32
+    c1, c2: [k] uint32    2-universal parameters (c2 in [1, p))
+    returns [B, k] int32 minwise values in [0, d_space]; d_space marks an
+    empty set.
+    """
+    bsz, nnz = idx.shape
+    if nnz % NNZ_CHUNK != 0:
+        raise ValueError(f"NNZ {nnz} must be a multiple of {NNZ_CHUNK}")
+    if bsz % BLOCK_B != 0:
+        raise ValueError(f"batch {bsz} must be a multiple of {BLOCK_B}")
+    k = c1.shape[0]
+    grid = (bsz // BLOCK_B,)
+    return pl.pallas_call(
+        functools.partial(_minhash_kernel, p=PRIME, d_space=d_space),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, nnz), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, nnz), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k), jnp.int32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(idx, mask, c1, c2)

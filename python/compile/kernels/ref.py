@@ -1,0 +1,120 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+the most obvious possible jnp (no tiling, no loops, no tricks).  pytest +
+hypothesis compare kernel output against these oracles over random shapes,
+dtypes and parameter draws; the rust test-suite additionally cross-checks
+its native implementations against the AOT'd artifacts, closing the loop
+rust <-> HLO <-> pallas <-> ref.
+
+Conventions shared by all layers (documented once, here):
+
+- A data point is a *set* of feature indices ("nonzeros") in
+  Omega = {0, .., D-1}; batches are padded to a fixed max-nnz with
+  ``mask == 0`` marking padding slots.
+- 2-universal hash family (paper Eq. 17):
+      h_j(t) = ((c1_j + c2_j * t) mod p) mod D
+  with prime p > D.  We fix p = 2^31 - 1 (Mersenne) inside the kernels:
+  indices there are < 2^30 and c2 < p, so c1 + c2*t < 2^62 keeps all
+  products within uint64.
+- Minwise value of a set under h_j is min over nonzeros of h_j(t); the
+  b-bit code keeps the lowest b bits (paper Section 2).
+- The expanded feature vector of a code row is 2^b * k dimensional with
+  exactly k ones at positions j * 2^b + code_j (paper Section 3) -- all
+  linear algebra below uses the equivalent gather form.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Prime used inside kernels/refs (see module docstring).
+PRIME = (1 << 31) - 1
+
+
+def minhash_ref(idx, mask, c1, c2, *, d_space: int):
+    """Minwise hashing oracle.
+
+    idx:  [B, NNZ] int32   feature indices (padded)
+    mask: [B, NNZ] int32   1 = real nonzero, 0 = padding
+    c1:   [k]      uint32  2-universal offsets,  uniform in [0, p)
+    c2:   [k]      uint32  2-universal slopes,   uniform in [1, p)
+    returns z: [B, k] int32, z[i, j] = min_{t in S_i} h_j(t), or d_space
+    for an empty set (sentinel, matches the kernel).
+    """
+    idx = idx.astype(jnp.uint64)[:, :, None]  # [B, NNZ, 1]
+    c1 = c1.astype(jnp.uint64)[None, None, :]  # [1, 1, k]
+    c2 = c2.astype(jnp.uint64)[None, None, :]
+    h = ((c1 + c2 * idx) % jnp.uint64(PRIME)) % jnp.uint64(d_space)
+    h = jnp.where(mask[:, :, None] != 0, h, jnp.uint64(d_space))
+    return jnp.min(h, axis=1).astype(jnp.int32)
+
+
+def bbit_codes_ref(z, b: int):
+    """Lowest-b-bit truncation of minwise values (paper Section 2)."""
+    return jnp.bitwise_and(z, (1 << b) - 1)
+
+
+def vw_hash_ref(idx, mask, a1, a2, s1, s2, *, num_bins: int):
+    """VW / feature-hashing oracle (paper Eq. 14, binary data u_t in {0,1}).
+
+    bin(t)  = ((a1 + a2*t) mod p) mod num_bins
+    sign(t) = +1 if ((s1 + s2*t) mod p) is even else -1   (the r_t, s = 1)
+    out[i, j] = sum_{t in S_i} sign(t) * 1{bin(t) == j}
+    """
+    t = idx.astype(jnp.uint64)
+    hb = ((jnp.uint64(a1) + jnp.uint64(a2) * t) % jnp.uint64(PRIME)) % jnp.uint64(
+        num_bins
+    )
+    hs = (jnp.uint64(s1) + jnp.uint64(s2) * t) % jnp.uint64(PRIME)
+    sign = jnp.where(hs % jnp.uint64(2) == 0, 1.0, -1.0) * (mask != 0)
+    onehot = hb[:, :, None] == jnp.arange(num_bins, dtype=jnp.uint64)[None, None, :]
+    return jnp.sum(sign[:, :, None] * onehot, axis=1).astype(jnp.float32)
+
+
+def expand_cols_ref(codes, b: int):
+    """Column indices of the k ones in the 2^b*k expansion (Section 3)."""
+    k = codes.shape[-1]
+    offsets = jnp.arange(k, dtype=jnp.int32) * (1 << b)
+    return codes.astype(jnp.int32) + offsets
+
+
+def margins_ref(w, codes, b: int):
+    """w . x_i for the expanded representation == gather-sum."""
+    cols = expand_cols_ref(codes, b)
+    return jnp.sum(w[cols], axis=-1)
+
+
+def logistic_grad_coef_ref(margins, y):
+    """d loss / d margin for logistic loss log(1 + exp(-y m))."""
+    return -y / (1.0 + jnp.exp(y * margins))
+
+
+def sqhinge_grad_coef_ref(margins, y):
+    """d loss / d margin for squared hinge max(1 - y m, 0)^2."""
+    viol = jnp.maximum(1.0 - y * margins, 0.0)
+    return -2.0 * y * viol
+
+
+def sgd_step_ref(w, codes, y, lr, lam, *, b: int, loss: str):
+    """One minibatch SGD step on  lam/2 |w|^2 + mean_i loss_i.
+
+    Returns the updated weight vector.  This is the oracle for the fused
+    train-step path (pallas gather kernel + jnp scatter in model.py).
+    """
+    cols = expand_cols_ref(codes, b)
+    m = jnp.sum(w[cols], axis=-1)
+    if loss == "logistic":
+        g = logistic_grad_coef_ref(m, y)
+    elif loss == "sqhinge":
+        g = sqhinge_grad_coef_ref(m, y)
+    else:
+        raise ValueError(f"unknown loss {loss!r}")
+    bsz = codes.shape[0]
+    w = w * (1.0 - lr * lam)
+    upd = (
+        jnp.zeros_like(w)
+        .at[cols.reshape(-1)]
+        .add(jnp.repeat(g, codes.shape[1]) / bsz)
+    )
+    return w - lr * upd

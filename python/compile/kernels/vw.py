@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: VW feature hashing (signed Count-Min, paper Eq. 14).
+
+The comparison baseline: every nonzero index t is hashed to a bin
+bin(t) = ((a1 + a2 t) mod p) mod k and accumulated with a +/-1 sign drawn
+from a second 2-universal hash (the bias-correcting r_t of Weinberger et
+al., s = 1).  For binary data the hashed vector is
+g_j = sum_{t in S} sign(t) * 1{bin(t) = j}.
+
+TPU mapping: grid over document tiles; the inner loop sweeps nonzero slabs
+and accumulates a [BLOCK_B, k] register tile via a one-hot compare against
+a lane iota -- the Pallas analogue of the CUDA scatter-into-shared-memory
+the original implementation uses.  Scatter-free, so it vectorizes on the
+VPU without atomics.
+
+The four hash parameters (a1, a2, s1, s2) arrive as a [4] uint32 runtime
+input so one AOT artifact serves every seed the coordinator draws.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PRIME
+
+BLOCK_B = 8
+NNZ_CHUNK = 128
+
+
+def _vw_kernel(idx_ref, mask_ref, params_ref, out_ref, *, num_bins, p):
+    nnz = idx_ref.shape[1]
+    params = params_ref[...].astype(jnp.uint64)  # [4] = a1, a2, s1, s2
+    a1, a2, s1, s2 = params[0], params[1], params[2], params[3]
+    bins_iota = jnp.arange(num_bins, dtype=jnp.uint64)[None, None, :]
+
+    def body(chunk, acc):
+        start = chunk * NNZ_CHUNK
+        t = jax.lax.dynamic_slice(
+            idx_ref[...], (0, start), (idx_ref.shape[0], NNZ_CHUNK)
+        ).astype(jnp.uint64)
+        msk = jax.lax.dynamic_slice(
+            mask_ref[...], (0, start), (mask_ref.shape[0], NNZ_CHUNK)
+        )
+        hb = ((a1 + a2 * t) % jnp.uint64(p)) % jnp.uint64(num_bins)
+        hs = (s1 + s2 * t) % jnp.uint64(p)
+        sign = jnp.where(hs % jnp.uint64(2) == 0, 1.0, -1.0) * (msk != 0)
+        onehot = (hb[:, :, None] == bins_iota).astype(jnp.float32)
+        return acc + jnp.sum(sign[:, :, None].astype(jnp.float32) * onehot, axis=1)
+
+    n_chunks = nnz // NNZ_CHUNK
+    init = jnp.zeros((idx_ref.shape[0], num_bins), dtype=jnp.float32)
+    out_ref[...] = jax.lax.fori_loop(0, n_chunks, body, init)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins",))
+def vw_hash(idx, mask, params, *, num_bins: int):
+    """VW-hash a padded batch of binary index sets to [B, num_bins] float32.
+
+    params: [4] uint32 = (a1, a2, s1, s2); a1/a2 parameterize the bin
+    hash, s1/s2 the sign hash, both 2-universal with prime PRIME.
+    num_bins is the paper's k for VW.
+    """
+    bsz, nnz = idx.shape
+    if nnz % NNZ_CHUNK != 0:
+        raise ValueError(f"NNZ {nnz} must be a multiple of {NNZ_CHUNK}")
+    if bsz % BLOCK_B != 0:
+        raise ValueError(f"batch {bsz} must be a multiple of {BLOCK_B}")
+    grid = (bsz // BLOCK_B,)
+    return pl.pallas_call(
+        functools.partial(_vw_kernel, num_bins=num_bins, p=PRIME),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, nnz), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, nnz), lambda i: (i, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, num_bins), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, num_bins), jnp.float32),
+        interpret=True,
+    )(idx, mask, params)

@@ -1,0 +1,138 @@
+"""L2: the jax compute graph AOT-lowered for the rust coordinator.
+
+Entry points (each becomes one HLO-text artifact; shapes are fixed at
+lowering time by aot.py and recorded in the manifest):
+
+- preprocess_minhash: batched minwise hashing (wraps the L1 pallas kernel).
+- preprocess_vw:      batched VW hashing (wraps the L1 pallas kernel).
+- train_chunk_{logistic,sqhinge}: a lax.scan over minibatches of b-bit
+  codes performing SGD steps on  lam/2 |w|^2 + mean loss  -- the whole
+  chunk runs device-side with the weight buffer donated, so the rust hot
+  loop does one PJRT execute per chunk, not per step.
+- predict_margins:    margins for evaluation / accuracy.
+
+Everything here is callable from python for tests, but at run time only
+the lowered HLO is used (python is never on the request path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bbit_margins, minhash, vw_hash
+from .kernels.ref import (
+    logistic_grad_coef_ref,
+    sqhinge_grad_coef_ref,
+)
+
+
+def preprocess_minhash(idx, mask, c1, c2, *, d_space: int):
+    """[B, NNZ] padded index sets -> [B, k] int32 minwise values."""
+    return minhash(idx, mask, c1, c2, d_space=d_space)
+
+
+def preprocess_vw(idx, mask, params, *, num_bins):
+    """[B, NNZ] padded index sets -> [B, num_bins] float32 VW vectors.
+
+    params: [4] uint32 = (a1, a2, s1, s2) hash parameters.
+    """
+    return vw_hash(idx, mask, params, num_bins=num_bins)
+
+
+def _grad_coef(loss: str):
+    if loss == "logistic":
+        return logistic_grad_coef_ref
+    if loss == "sqhinge":
+        return sqhinge_grad_coef_ref
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def sgd_step(w, codes, y, lr, lam, *, b: int, loss: str):
+    """One minibatch SGD step; pallas gather for margins, HLO scatter for
+    the update. Mirrors kernels.ref.sgd_step_ref exactly."""
+    k = codes.shape[1]
+    m = bbit_margins(w, codes, b=b)
+    g = _grad_coef(loss)(m, y)
+    offsets = jnp.arange(k, dtype=jnp.int32) * (1 << b)
+    cols = (codes + offsets[None, :]).reshape(-1)
+    bsz = codes.shape[0]
+    w = w * (1.0 - lr * lam)
+    upd = jnp.zeros_like(w).at[cols].add(jnp.repeat(g, k) / bsz)
+    return w - lr * upd
+
+
+def train_chunk(w, codes, y, lr0, lam, step0, *, b: int, loss: str, batch: int):
+    """Scan SGD over a [N, k] chunk split into N/batch minibatches.
+
+    lr decays as lr0 / (1 + step * lam * lr0)  (Bottou's schedule); step0
+    carries the global step count across chunks so the schedule is
+    continuous over the epoch. Returns (w', steps_done).
+    """
+    n, k = codes.shape
+    if n % batch != 0:
+        raise ValueError(f"chunk rows {n} must be a multiple of batch {batch}")
+    n_steps = n // batch
+    codes_r = codes.reshape(n_steps, batch, k)
+    y_r = y.reshape(n_steps, batch)
+
+    def body(carry, xs):
+        w, step = carry
+        cb, yb = xs
+        lr = lr0 / (1.0 + step.astype(jnp.float32) * lam * lr0)
+        w = sgd_step(w, cb, yb, lr, lam, b=b, loss=loss)
+        return (w, step + 1), ()
+
+    (w, step), _ = jax.lax.scan(body, (w, step0), (codes_r, y_r))
+    return w, step
+
+
+def predict_margins(w, codes, *, b: int):
+    """[N, k] codes -> [N] float32 margins (sign = predicted label)."""
+    return bbit_margins(w, codes, b=b)
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with static configuration, used by aot.py for lowering and by
+# the python test-suite directly.
+# ---------------------------------------------------------------------------
+
+
+def jit_preprocess_minhash(d_space: int):
+    return jax.jit(functools.partial(preprocess_minhash, d_space=d_space))
+
+
+def jit_preprocess_vw(num_bins: int):
+    return jax.jit(functools.partial(preprocess_vw, num_bins=num_bins))
+
+
+def jit_train_chunk(b: int, loss: str, batch: int):
+    return jax.jit(
+        functools.partial(train_chunk, b=b, loss=loss, batch=batch),
+        donate_argnums=(0,),
+    )
+
+
+def jit_predict(b: int):
+    return jax.jit(functools.partial(predict_margins, b=b))
+
+
+def pad_batch(rows, max_nnz: int, batch: int, pad_multiple_nnz: int = 128):
+    """Pack a list of python index lists into padded idx/mask arrays.
+
+    Test/debug helper mirroring what the rust coordinator does natively.
+    """
+    import numpy as np
+
+    nnz = max(max_nnz, pad_multiple_nnz)
+    nnz = ((nnz + pad_multiple_nnz - 1) // pad_multiple_nnz) * pad_multiple_nnz
+    bsz = ((len(rows) + batch - 1) // batch) * batch
+    idx = np.zeros((bsz, nnz), dtype=np.int32)
+    mask = np.zeros((bsz, nnz), dtype=np.int32)
+    for i, row in enumerate(rows):
+        row = row[:nnz]
+        idx[i, : len(row)] = row
+        mask[i, : len(row)] = 1
+    return jnp.asarray(idx), jnp.asarray(mask)

@@ -1,0 +1,94 @@
+"""Pallas VW kernel vs oracle + the estimator properties of Section 5."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import PRIME, vw_hash_ref
+from compile.kernels.vw import BLOCK_B, NNZ_CHUNK, vw_hash
+
+RNG = np.random.default_rng(0x5757)
+
+
+def padded_batch(rows, nnz):
+    bsz = ((len(rows) + BLOCK_B - 1) // BLOCK_B) * BLOCK_B
+    idx = np.zeros((bsz, nnz), dtype=np.int32)
+    mask = np.zeros((bsz, nnz), dtype=np.int32)
+    for i, r in enumerate(rows):
+        idx[i, : len(r)] = r
+        mask[i, : len(r)] = 1
+    return jnp.asarray(idx), jnp.asarray(mask)
+
+
+def draw_params(rng):
+    a1 = int(rng.integers(0, PRIME))
+    a2 = int(rng.integers(1, PRIME))
+    s1 = int(rng.integers(0, PRIME))
+    s2 = int(rng.integers(1, PRIME))
+    return a1, a2, s1, s2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_rows=st.integers(1, 10),
+    nnz_chunks=st.integers(1, 3),
+    bins_log2=st.integers(1, 9),
+    d_log2=st.integers(10, 30),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_matches_ref(n_rows, nnz_chunks, bins_log2, d_log2, seed):
+    rng = np.random.default_rng(seed)
+    nnz = nnz_chunks * NNZ_CHUNK
+    bins = 1 << bins_log2
+    d_space = 1 << d_log2
+    rows = [
+        np.unique(rng.integers(0, d_space, size=rng.integers(1, nnz + 1)))
+        for _ in range(n_rows)
+    ]
+    idx, mask = padded_batch(rows, nnz)
+    a1, a2, s1, s2 = draw_params(rng)
+    params = jnp.asarray([a1, a2, s1, s2], dtype=jnp.uint32)
+    got = np.asarray(vw_hash(idx, mask, params, num_bins=bins))
+    want = np.asarray(vw_hash_ref(idx, mask, a1, a2, s1, s2, num_bins=bins))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_l1_mass_preserved():
+    """Each nonzero lands in exactly one bin with weight +-1, so the sum of
+    |bin| counts... cannot exceed nnz; and sum of bins^2 == nnz when there
+    are no within-bin collisions cancelling."""
+    nnz = NNZ_CHUNK
+    rows = [RNG.choice(1 << 20, size=57, replace=False)]
+    idx, mask = padded_batch(rows, nnz)
+    params = jnp.asarray(draw_params(RNG), dtype=jnp.uint32)
+    g = np.asarray(vw_hash(idx, mask, params, num_bins=4096))[0]
+    # with 4096 bins and 57 items collisions are rare but possible; the sum
+    # of absolute bin masses changes parity only through cancellation:
+    assert np.sum(np.abs(g)) <= 57
+    assert np.sum(np.abs(g)) % 2 == 57 % 2  # cancellation removes pairs
+
+
+def test_inner_product_unbiased():
+    """E[g1 . g2] = u1 . u2 = |S1 ^ S2| for binary data (paper Eq. 15),
+    checked by averaging over many parameter draws."""
+    d_space = 1 << 22
+    shared = RNG.choice(d_space, size=60, replace=False)
+    only1 = RNG.choice(d_space, size=40, replace=False)
+    only2 = RNG.choice(d_space, size=40, replace=False)
+    s1v = np.unique(np.concatenate([shared, only1]))
+    s2v = np.unique(np.concatenate([shared, only2]))
+    a_true = len(np.intersect1d(s1v, s2v))
+    idx, mask = padded_batch([s1v, s2v], NNZ_CHUNK)
+    bins = 256
+    trials = 150
+    ests = []
+    for _ in range(trials):
+        params = jnp.asarray(draw_params(RNG), dtype=jnp.uint32)
+        g = np.asarray(vw_hash(idx, mask, params, num_bins=bins))
+        ests.append(float(g[0] @ g[1]))
+    est = np.mean(ests)
+    # Var ~= (f1*f2 + a^2 - 2*sum u1^2u2^2)/k per Eq. 16; loose 5-sigma gate
+    var = (len(s1v) * len(s2v) + a_true**2) / bins
+    tol = 5 * np.sqrt(var / trials)
+    assert abs(est - a_true) < tol, (est, a_true, tol)

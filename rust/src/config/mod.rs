@@ -1,0 +1,211 @@
+//! Configuration system: typed config structs parsed from a minimal
+//! TOML-subset file (`key = value` lines under `[section]` headers) and/or
+//! `--key=value` CLI overrides.  Hand-rolled because the offline crate set
+//! ships no serde/toml; the subset is documented in README §Configuration.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Raw parsed config: section → key → value.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse the TOML subset: `[section]` headers, `key = value` pairs,
+    /// `#` comments.  Values keep their raw string form; typed getters
+    /// convert on access.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", no + 1))
+            })?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set(&mut self, dotted: &str, value: &str) -> Result<()> {
+        let (section, key) = dotted.split_once('.').ok_or_else(|| {
+            Error::Config(format!("override {dotted:?} must be section.key"))
+        })?;
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn typed<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                Error::Config(format!("bad value for {section}.{key}: {s:?}"))
+            }),
+        }
+    }
+}
+
+/// Top-level pipeline + experiment configuration with defaults chosen so
+/// `bbit-mh experiments all` finishes on a laptop.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Corpus scale (documents). Paper: 677,399 for rcv1.
+    pub n_docs: usize,
+    /// Base vocabulary before expansion.
+    pub vocab: u32,
+    /// Expanded dimensionality D.
+    pub dim: u64,
+    /// Train fraction (paper: 0.5 for rcv1, 0.8 for webspam).
+    pub train_frac: f64,
+    /// Hashing workers in the pipeline.
+    pub workers: usize,
+    /// Chunk size (documents) flowing through the pipeline.
+    pub chunk_size: usize,
+    /// Bounded-queue depth between pipeline stages (backpressure).
+    pub queue_depth: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Where artifacts live.
+    pub artifacts_dir: String,
+    /// Where experiment CSVs land.
+    pub results_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            n_docs: 4000,
+            vocab: 4000,
+            dim: 1 << 30,
+            train_frac: 0.5,
+            workers: available_workers(),
+            chunk_size: 256,
+            queue_depth: 4,
+            seed: 0xB_B17,
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+        }
+    }
+}
+
+/// Default worker count: physical parallelism minus one for the reader.
+pub fn available_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+impl Config {
+    /// Build from a raw config's `[pipeline]`/`[data]` sections.
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let d = Config::default();
+        Ok(Config {
+            n_docs: raw.typed("data", "n_docs", d.n_docs)?,
+            vocab: raw.typed("data", "vocab", d.vocab)?,
+            dim: raw.typed("data", "dim", d.dim)?,
+            train_frac: raw.typed("data", "train_frac", d.train_frac)?,
+            workers: raw.typed("pipeline", "workers", d.workers)?,
+            chunk_size: raw.typed("pipeline", "chunk_size", d.chunk_size)?,
+            queue_depth: raw.typed("pipeline", "queue_depth", d.queue_depth)?,
+            seed: raw.typed("pipeline", "seed", d.seed)?,
+            artifacts_dir: raw
+                .get("paths", "artifacts")
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            results_dir: raw
+                .get("paths", "results")
+                .unwrap_or(&d.results_dir)
+                .to_string(),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.train_frac <= 0.0 || self.train_frac >= 1.0 {
+            return Err(Error::Config("train_frac must be in (0,1)".into()));
+        }
+        if self.workers == 0 || self.chunk_size == 0 || self.queue_depth == 0 {
+            return Err(Error::Config("workers/chunk_size/queue_depth must be > 0".into()));
+        }
+        if self.vocab as u64 >= self.dim {
+            return Err(Error::Config("vocab must be < dim".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let raw = RawConfig::parse(
+            "# top comment\n[data]\nn_docs = 100 # inline\nvocab = 500\n\n[pipeline]\nworkers = 2\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("data", "n_docs"), Some("100"));
+        assert_eq!(raw.get("pipeline", "workers"), Some("2"));
+        assert_eq!(raw.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn typed_conversion_and_defaults() {
+        let raw = RawConfig::parse("[data]\nn_docs = 123\n").unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert_eq!(cfg.n_docs, 123);
+        assert_eq!(cfg.vocab, Config::default().vocab); // default preserved
+    }
+
+    #[test]
+    fn overrides() {
+        let mut raw = RawConfig::default();
+        raw.set("data.n_docs", "77").unwrap();
+        assert_eq!(Config::from_raw(&raw).unwrap().n_docs, 77);
+        assert!(raw.set("missingdot", "x").is_err());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let raw = RawConfig::parse("[data]\nn_docs = notanumber\n").unwrap();
+        assert!(Config::from_raw(&raw).is_err());
+        assert!(RawConfig::parse("keyonly\n").is_err());
+    }
+
+    #[test]
+    fn validation() {
+        let mut cfg = Config::default();
+        cfg.validate().unwrap();
+        cfg.train_frac = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.train_frac = 0.5;
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+    }
+}

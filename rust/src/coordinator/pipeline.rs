@@ -1,0 +1,427 @@
+//! The streaming preprocessing pipeline.
+//!
+//! Topology (all std threads, bounded channels = backpressure):
+//!
+//! ```text
+//!   reader ──sync_channel(queue_depth)──▶ worker×W ──channel──▶ collector
+//!   (LibSVM parse / generator)   (minwise+b-bit pack, or VW)   (reorder +
+//!                                                               splice)
+//! ```
+//!
+//! - The reader is the paper's "data loading" stage (Table 2 column 1);
+//!   workers are the "preprocessing" stage (column 2); swapping the worker
+//!   body for the PJRT [`MinhashEngine`](crate::runtime::MinhashEngine)
+//!   gives column 3 (the accelerated path).
+//! - Workers pull from one shared queue — natural load balancing (a slow
+//!   chunk doesn't stall siblings), with chunk ids restoring deterministic
+//!   output order in the collector regardless of completion order.
+//! - `try_send`-then-`send` on the reader side counts backpressure stalls:
+//!   if the hashing stage cannot keep up with parsing, stalls > 0 and the
+//!   bounded queue caps memory at `queue_depth · chunk_size` examples.
+//!
+//! The pipeline's integrity invariant — every input example appears in the
+//! output exactly once, in input order — is enforced by construction
+//! (chunk-id reordering) and property-tested in
+//! `rust/tests/prop_coordinator.rs`.
+
+use std::sync::mpsc::{channel, sync_channel, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::data::dataset::{Example, SparseDataset};
+use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
+use crate::hashing::minwise::BbitMinHash;
+use crate::hashing::vw::VwHasher;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// What the hash workers compute.
+#[derive(Clone, Debug)]
+pub enum HashJob {
+    /// k-way minwise hashing truncated to b bits, packed (the paper's
+    /// method, Sections 2–3).
+    Bbit { b: u32, k: usize, d: u64, seed: u64 },
+    /// VW signed feature hashing into `bins` bins (Section 5).
+    Vw { bins: usize, seed: u64 },
+}
+
+/// Pipeline tuning knobs (a view of [`crate::config::Config`]).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub workers: usize,
+    pub chunk_size: usize,
+    pub queue_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            workers: crate::config::available_workers(),
+            chunk_size: 256,
+            queue_depth: 4,
+        }
+    }
+}
+
+/// Hashed output: packed b-bit codes or a VW CSR dataset.
+pub enum PipelineOutput {
+    Bbit(BbitDataset),
+    Vw(SparseDataset),
+}
+
+impl PipelineOutput {
+    pub fn len(&self) -> usize {
+        match self {
+            PipelineOutput::Bbit(d) => d.len(),
+            PipelineOutput::Vw(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn into_bbit(self) -> Result<BbitDataset> {
+        match self {
+            PipelineOutput::Bbit(d) => Ok(d),
+            _ => Err(Error::Pipeline("expected b-bit output".into())),
+        }
+    }
+
+    pub fn into_vw(self) -> Result<SparseDataset> {
+        match self {
+            PipelineOutput::Vw(d) => Ok(d),
+            _ => Err(Error::Pipeline("expected VW output".into())),
+        }
+    }
+}
+
+/// Timing/health report (feeds Table 2 and the pipeline bench).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    pub docs: usize,
+    pub chunks: usize,
+    /// Seconds the reader spent producing chunks (parse/generate).
+    pub read_seconds: f64,
+    /// CPU-seconds summed across hash workers.
+    pub hash_cpu_seconds: f64,
+    /// End-to-end wall-clock.
+    pub wall_seconds: f64,
+    /// Times the reader hit a full queue (backpressure events).
+    pub backpressure_stalls: u64,
+    /// Chunks processed per worker (load-balance visibility).
+    pub per_worker_chunks: Vec<usize>,
+}
+
+/// The streaming orchestrator.
+pub struct Pipeline {
+    pub cfg: PipelineConfig,
+}
+
+type ChunkResult<O> = (usize, O);
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig) -> Self {
+        assert!(cfg.workers > 0 && cfg.chunk_size > 0 && cfg.queue_depth > 0);
+        Pipeline { cfg }
+    }
+
+    /// Generic fan-out/fan-in over chunks; returns per-chunk outputs in
+    /// chunk order plus the report.  `work(chunk, worker_id)` runs on
+    /// worker threads.
+    pub fn run_chunks<O, W>(
+        &self,
+        source: impl Iterator<Item = Result<Vec<Example>>> + Send,
+        work: W,
+    ) -> Result<(Vec<O>, PipelineReport)>
+    where
+        O: Send,
+        W: Fn(&[Example], usize) -> Result<O> + Send + Sync,
+    {
+        let wall0 = Instant::now();
+        let mut report = PipelineReport {
+            per_worker_chunks: vec![0; self.cfg.workers],
+            ..Default::default()
+        };
+
+        std::thread::scope(|scope| -> Result<(Vec<O>, PipelineReport)> {
+            let (chunk_tx, chunk_rx) = sync_channel::<(usize, Vec<Example>)>(self.cfg.queue_depth);
+            let chunk_rx = Arc::new(Mutex::new(chunk_rx));
+            let (out_tx, out_rx) = channel::<Result<ChunkResult<(O, usize, f64)>>>();
+
+            // ---- reader (this scope's own thread) ----
+            let reader = scope.spawn(move || -> Result<(usize, usize, f64, u64)> {
+                let t0 = Instant::now();
+                let mut docs = 0usize;
+                let mut chunks = 0usize;
+                let mut stalls = 0u64;
+                for (chunk_id, chunk) in source.enumerate() {
+                    let chunk = chunk?;
+                    docs += chunk.len();
+                    chunks += 1;
+                    match chunk_tx.try_send((chunk_id, chunk)) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(v)) => {
+                            stalls += 1;
+                            chunk_tx.send(v).map_err(|_| {
+                                Error::Pipeline("workers hung up".into())
+                            })?;
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            return Err(Error::Pipeline("workers hung up".into()));
+                        }
+                    }
+                }
+                Ok((docs, chunks, t0.elapsed().as_secs_f64(), stalls))
+            });
+
+            // ---- workers ----
+            let work = &work;
+            for wid in 0..self.cfg.workers {
+                let rx = chunk_rx.clone();
+                let tx = out_tx.clone();
+                scope.spawn(move || {
+                    loop {
+                        let msg = rx.lock().unwrap().recv();
+                        let (chunk_id, chunk) = match msg {
+                            Ok(v) => v,
+                            Err(_) => break, // reader done, queue drained
+                        };
+                        let t0 = Instant::now();
+                        let out = work(&chunk, wid)
+                            .map(|o| (chunk_id, (o, wid, t0.elapsed().as_secs_f64())));
+                        if tx.send(out).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(out_tx);
+            drop(chunk_rx);
+
+            // ---- collector (current thread): reorder by chunk id ----
+            let mut pending: std::collections::BTreeMap<usize, O> =
+                std::collections::BTreeMap::new();
+            for msg in out_rx {
+                let (chunk_id, (out, wid, secs)) = msg?;
+                report.hash_cpu_seconds += secs;
+                report.per_worker_chunks[wid] += 1;
+                pending.insert(chunk_id, out);
+            }
+            let (docs, chunks, read_secs, stalls) = reader
+                .join()
+                .map_err(|_| Error::Pipeline("reader panicked".into()))??;
+            report.docs = docs;
+            report.chunks = chunks;
+            report.read_seconds = read_secs;
+            report.backpressure_stalls = stalls;
+            if pending.len() != chunks {
+                return Err(Error::Pipeline(format!(
+                    "lost chunks: got {} of {}",
+                    pending.len(),
+                    chunks
+                )));
+            }
+            // BTreeMap iterates in ascending chunk order
+            let ordered: Vec<O> = pending.into_values().collect();
+            report.wall_seconds = wall0.elapsed().as_secs_f64();
+            Ok((ordered, report))
+        })
+    }
+
+    /// Run a [`HashJob`] over a chunk stream, assembling the hashed dataset.
+    pub fn run(
+        &self,
+        source: impl Iterator<Item = Result<Vec<Example>>> + Send,
+        job: &HashJob,
+    ) -> Result<(PipelineOutput, PipelineReport)> {
+        match job {
+            HashJob::Bbit { b, k, d, seed } => {
+                let hasher = Arc::new(BbitMinHash::draw(*k, *b, *d, &mut Rng::new(*seed)));
+                let (chunks, report) = self.run_chunks(source, {
+                    let hasher = hasher.clone();
+                    move |chunk: &[Example], _wid| {
+                        let mut codes = PackedCodes::new(hasher.b, hasher.k());
+                        let mut labels = Vec::with_capacity(chunk.len());
+                        let mut scratch = vec![0u64; hasher.k()];
+                        let mut row = vec![0u16; hasher.k()];
+                        for ex in chunk {
+                            hasher.codes_into(&ex.indices, &mut scratch, &mut row);
+                            codes.push_row(&row)?;
+                            labels.push(ex.label);
+                        }
+                        Ok((codes, labels))
+                    }
+                })?;
+                let mut all = PackedCodes::new(*b, *k);
+                let mut labels = Vec::new();
+                for (codes, ls) in chunks {
+                    all.extend(&codes)?;
+                    labels.extend(ls);
+                }
+                Ok((PipelineOutput::Bbit(BbitDataset::new(all, labels)), report))
+            }
+            HashJob::Vw { bins, seed } => {
+                let hasher = Arc::new(VwHasher::draw(*bins, &mut Rng::new(*seed)));
+                let (chunks, report) = self.run_chunks(source, {
+                    let hasher = hasher.clone();
+                    move |chunk: &[Example], _wid| {
+                        let mut rows = Vec::with_capacity(chunk.len());
+                        for ex in chunk {
+                            let pairs = hasher.hash_sparse(&ex.indices);
+                            rows.push((ex.label, pairs));
+                        }
+                        Ok(rows)
+                    }
+                })?;
+                let mut ds = SparseDataset::new(*bins as u64);
+                ds.values = Some(Vec::new());
+                for rows in chunks {
+                    for (label, pairs) in rows {
+                        ds.push(&Example {
+                            label,
+                            indices: pairs.iter().map(|p| p.0).collect(),
+                            values: Some(pairs.iter().map(|p| p.1).collect()),
+                        });
+                    }
+                }
+                Ok((PipelineOutput::Vw(ds), report))
+            }
+        }
+    }
+}
+
+/// Turn an in-memory dataset into the chunk stream the pipeline consumes
+/// (tests and benches; production path streams from LibSVM files).
+pub fn dataset_chunks(
+    ds: &SparseDataset,
+    chunk_size: usize,
+) -> impl Iterator<Item = Result<Vec<Example>>> + '_ {
+    let plan = crate::coordinator::sharding::ShardPlan::new(ds.len(), chunk_size);
+    let assignments: Vec<_> = plan.iter().collect();
+    assignments.into_iter().map(move |a| {
+        Ok((a.row0..a.row0 + a.rows)
+            .map(|i| {
+                let (idx, vals) = ds.row(i);
+                Example {
+                    label: ds.labels[i],
+                    indices: idx.to_vec(),
+                    values: vals.map(|v| v.to_vec()),
+                }
+            })
+            .collect())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen::{CorpusConfig, CorpusGenerator};
+
+    fn corpus(n: usize) -> SparseDataset {
+        CorpusGenerator::new(CorpusConfig {
+            n_docs: n,
+            vocab: 1000,
+            zipf_alpha: 1.05,
+            mean_tokens: 20.0,
+            class_signal: 0.5,
+            pos_fraction: 0.5,
+            seed: 99,
+        })
+        .generate()
+    }
+
+    #[test]
+    fn bbit_pipeline_matches_sequential() {
+        let ds = corpus(300);
+        let job = HashJob::Bbit { b: 8, k: 32, d: 1 << 20, seed: 5 };
+        let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 32, queue_depth: 2 });
+        let (out, report) = pipe.run(dataset_chunks(&ds, 32), &job).unwrap();
+        let bb = out.into_bbit().unwrap();
+        assert_eq!(bb.len(), 300);
+        assert_eq!(report.docs, 300);
+        assert_eq!(report.chunks, 10);
+        // sequential reference
+        let hasher = BbitMinHash::draw(32, 8, 1 << 20, &mut Rng::new(5));
+        for i in 0..ds.len() {
+            assert_eq!(bb.codes.row(i), hasher.codes(ds.row(i).0), "row {i}");
+            assert_eq!(bb.labels[i], ds.labels[i]);
+        }
+    }
+
+    #[test]
+    fn vw_pipeline_matches_sequential() {
+        let ds = corpus(100);
+        let job = HashJob::Vw { bins: 64, seed: 7 };
+        let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 17, queue_depth: 2 });
+        let (out, _) = pipe.run(dataset_chunks(&ds, 17), &job).unwrap();
+        let vw = out.into_vw().unwrap();
+        vw.validate().unwrap();
+        assert_eq!(vw.len(), 100);
+        let hasher = VwHasher::draw(64, &mut Rng::new(7));
+        for i in 0..ds.len() {
+            let mut dense = vec![0.0f32; 64];
+            hasher.hash_into(ds.row(i).0, &mut dense);
+            let (idx, vals) = vw.row(i);
+            let mut got = vec![0.0f32; 64];
+            for (t, v) in idx.iter().zip(vals.unwrap()) {
+                got[*t as usize] = *v;
+            }
+            assert_eq!(got, dense, "row {i}");
+        }
+    }
+
+    #[test]
+    fn single_worker_and_tiny_queue() {
+        let ds = corpus(50);
+        let job = HashJob::Bbit { b: 4, k: 8, d: 1 << 16, seed: 1 };
+        let pipe = Pipeline::new(PipelineConfig { workers: 1, chunk_size: 7, queue_depth: 1 });
+        let (out, report) = pipe.run(dataset_chunks(&ds, 7), &job).unwrap();
+        assert_eq!(out.len(), 50);
+        assert_eq!(report.per_worker_chunks, vec![8]);
+    }
+
+    #[test]
+    fn worker_errors_propagate() {
+        let ds = corpus(40);
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 8, queue_depth: 2 });
+        let result: Result<(Vec<()>, _)> =
+            pipe.run_chunks(dataset_chunks(&ds, 8), |chunk, _| {
+                if chunk[0].indices.len() < 10_000 {
+                    Err(Error::Pipeline("injected".into()))
+                } else {
+                    Ok(())
+                }
+            });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn reader_errors_propagate() {
+        let source = vec![
+            Ok(vec![Example::binary(1, vec![1])]),
+            Err(Error::Io(std::io::Error::other("disk gone"))),
+        ];
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 1, queue_depth: 1 });
+        let out = pipe.run(source.into_iter(), &HashJob::Bbit { b: 1, k: 4, d: 16, seed: 0 });
+        assert!(out.is_err());
+    }
+
+    #[test]
+    fn order_is_deterministic_across_worker_counts() {
+        let ds = corpus(200);
+        let job = HashJob::Bbit { b: 2, k: 16, d: 1 << 18, seed: 3 };
+        let run = |workers| {
+            let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 13, queue_depth: 3 });
+            let (out, _) = pipe.run(dataset_chunks(&ds, 13), &job).unwrap();
+            out.into_bbit().unwrap()
+        };
+        let a = run(1);
+        let b = run(7);
+        assert_eq!(a.labels, b.labels);
+        for i in 0..a.len() {
+            assert_eq!(a.codes.row(i), b.codes.row(i));
+        }
+    }
+}

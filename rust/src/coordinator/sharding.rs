@@ -1,0 +1,91 @@
+//! Shard planning for the preprocessing pipeline.
+//!
+//! Chunks flow to workers through a shared bounded queue (pull model =
+//! natural load balancing); the *plan* here assigns each chunk a stable
+//! shard id and output row range so workers can write their results into
+//! disjoint regions of the packed output without synchronization, and the
+//! collector can verify nothing was lost or duplicated — the pipeline's
+//! integrity invariant (proptested in `rust/tests/prop_coordinator.rs`).
+
+/// A contiguous range of example rows assigned to one chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkAssignment {
+    pub chunk_id: usize,
+    /// First global row of this chunk.
+    pub row0: usize,
+    /// Rows in this chunk.
+    pub rows: usize,
+}
+
+/// Deterministic chunk → row-range plan for a dataset of `n` rows split
+/// into `chunk_size` chunks.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub n: usize,
+    pub chunk_size: usize,
+}
+
+impl ShardPlan {
+    pub fn new(n: usize, chunk_size: usize) -> Self {
+        assert!(chunk_size > 0);
+        ShardPlan { n, chunk_size }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n.div_ceil(self.chunk_size)
+    }
+
+    pub fn assignment(&self, chunk_id: usize) -> ChunkAssignment {
+        let row0 = chunk_id * self.chunk_size;
+        debug_assert!(row0 < self.n || self.n == 0);
+        ChunkAssignment {
+            chunk_id,
+            row0,
+            rows: self.chunk_size.min(self.n - row0),
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = ChunkAssignment> + '_ {
+        (0..self.n_chunks()).map(|c| self.assignment(c))
+    }
+
+    /// True iff the assignments tile `[0, n)` exactly once (the invariant
+    /// the collector re-checks at runtime).
+    pub fn covers_exactly(&self) -> bool {
+        let mut next = 0usize;
+        for a in self.iter() {
+            if a.row0 != next || a.rows == 0 {
+                return false;
+            }
+            next += a.rows;
+        }
+        next == self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_tiling() {
+        for n in [0usize, 1, 9, 10, 11, 100, 4097] {
+            for cs in [1usize, 3, 10, 256] {
+                let p = ShardPlan::new(n, cs);
+                assert!(p.covers_exactly(), "n={n} cs={cs}");
+                assert_eq!(
+                    p.iter().map(|a| a.rows).sum::<usize>(),
+                    n,
+                    "n={n} cs={cs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn last_chunk_is_short() {
+        let p = ShardPlan::new(25, 10);
+        assert_eq!(p.n_chunks(), 3);
+        assert_eq!(p.assignment(2), ChunkAssignment { chunk_id: 2, row0: 20, rows: 5 });
+    }
+}

@@ -1,0 +1,283 @@
+//! In-memory sparse dataset (CSR) + the Table-1 statistics.
+//!
+//! The paper's data are binary (sets of feature indices); values are
+//! optional so VW-hashed (real-valued) datasets reuse the same container.
+
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// One example: a label in {−1, +1} and a sorted set of feature indices
+/// (with optional real values; `None` ⇒ binary / all-ones).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub label: i8,
+    pub indices: Vec<u32>,
+    pub values: Option<Vec<f32>>,
+}
+
+impl Example {
+    pub fn binary(label: i8, mut indices: Vec<u32>) -> Self {
+        indices.sort_unstable();
+        indices.dedup();
+        Example { label, indices, values: None }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Squared L2 norm (= nnz for binary data).
+    pub fn norm_sq(&self) -> f64 {
+        match &self.values {
+            None => self.indices.len() as f64,
+            Some(v) => v.iter().map(|x| (*x as f64) * (*x as f64)).sum(),
+        }
+    }
+}
+
+/// CSR sparse dataset with labels.
+#[derive(Clone, Debug, Default)]
+pub struct SparseDataset {
+    /// Feature-space dimensionality D.
+    pub dim: u64,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    /// `None` ⇒ binary dataset (all values 1.0).
+    pub values: Option<Vec<f32>>,
+    pub labels: Vec<i8>,
+}
+
+impl SparseDataset {
+    pub fn new(dim: u64) -> Self {
+        SparseDataset { dim, indptr: vec![0], indices: Vec::new(), values: None, labels: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn push(&mut self, ex: &Example) {
+        debug_assert!(ex.indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted+unique");
+        self.indices.extend_from_slice(&ex.indices);
+        match (&mut self.values, &ex.values) {
+            (Some(vs), Some(ev)) => vs.extend_from_slice(ev),
+            (Some(vs), None) => vs.extend(std::iter::repeat(1.0).take(ex.indices.len())),
+            (None, Some(ev)) => {
+                // promote to valued: backfill ones
+                let mut vs = vec![1.0f32; self.indices.len() - ex.indices.len()];
+                vs.extend_from_slice(ev);
+                self.values = Some(vs);
+            }
+            (None, None) => {}
+        }
+        self.indptr.push(self.indices.len());
+        self.labels.push(ex.label);
+    }
+
+    pub fn from_examples(dim: u64, examples: &[Example]) -> Self {
+        let mut ds = SparseDataset::new(dim);
+        for ex in examples {
+            ds.push(ex);
+        }
+        ds
+    }
+
+    /// Row accessor: (indices, values) — values empty slice for binary.
+    pub fn row(&self, i: usize) -> (&[u32], Option<&[f32]>) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (
+            &self.indices[lo..hi],
+            self.values.as_ref().map(|v| &v[lo..hi]),
+        )
+    }
+
+    pub fn nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    pub fn total_nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Table-1 statistics: n, D, median/mean nonzeros.
+    pub fn stats(&self) -> DatasetStats {
+        let nnzs: Vec<f64> = (0..self.len()).map(|i| self.nnz(i) as f64).collect();
+        DatasetStats {
+            n: self.len(),
+            dim: self.dim,
+            nnz_median: crate::util::stats::median(&nnzs),
+            nnz_mean: crate::util::stats::mean(&nnzs),
+            pos_fraction: self.labels.iter().filter(|&&y| y > 0).count() as f64
+                / self.len().max(1) as f64,
+            bytes_libsvm: self.approx_libsvm_bytes(),
+        }
+    }
+
+    /// Approximate on-disk LibSVM size (the "24 GB / 200 GB" numbers are in
+    /// this format): label + " idx:val" per nonzero.
+    pub fn approx_libsvm_bytes(&self) -> u64 {
+        let mut bytes = 0u64;
+        for i in 0..self.len() {
+            bytes += 3; // label + newline
+            let (idx, _) = self.row(i);
+            for &t in idx {
+                bytes += 3 + (t.max(1) as f64).log10().floor() as u64 + 1;
+            }
+        }
+        bytes
+    }
+
+    /// Random split into (train, test) with `train_frac` of examples in
+    /// train — the paper uses 50/50 for rcv1, 80/20 for webspam.
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (SparseDataset, SparseDataset) {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        let n_train = (self.len() as f64 * train_frac).round() as usize;
+        let mut train = SparseDataset::new(self.dim);
+        let mut test = SparseDataset::new(self.dim);
+        if self.values.is_some() {
+            train.values = Some(Vec::new());
+            test.values = Some(Vec::new());
+        }
+        for (pos, &i) in order.iter().enumerate() {
+            let (idx, vals) = self.row(i);
+            let ex = Example {
+                label: self.labels[i],
+                indices: idx.to_vec(),
+                values: vals.map(|v| v.to_vec()),
+            };
+            if pos < n_train {
+                train.push(&ex);
+            } else {
+                test.push(&ex);
+            }
+        }
+        (train, test)
+    }
+
+    /// Iterate examples (allocating per row; for streaming use `row`).
+    pub fn iter(&self) -> impl Iterator<Item = Example> + '_ {
+        (0..self.len()).map(move |i| {
+            let (idx, vals) = self.row(i);
+            Example {
+                label: self.labels[i],
+                indices: idx.to_vec(),
+                values: vals.map(|v| v.to_vec()),
+            }
+        })
+    }
+
+    /// Validate CSR invariants; used by the pipeline's integrity check.
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.len() != self.labels.len() + 1 {
+            return Err(Error::InvalidArg("indptr/labels length mismatch".into()));
+        }
+        if *self.indptr.last().unwrap() != self.indices.len() {
+            return Err(Error::InvalidArg("indptr tail != nnz".into()));
+        }
+        if let Some(v) = &self.values {
+            if v.len() != self.indices.len() {
+                return Err(Error::InvalidArg("values/indices length mismatch".into()));
+            }
+        }
+        for i in 0..self.len() {
+            let (idx, _) = self.row(i);
+            if !idx.windows(2).all(|w| w[0] < w[1]) {
+                return Err(Error::InvalidArg(format!("row {i} not sorted+unique")));
+            }
+            if idx.last().is_some_and(|&t| t as u64 >= self.dim) {
+                return Err(Error::InvalidArg(format!("row {i} index out of range")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The Table-1 row for a dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub n: usize,
+    pub dim: u64,
+    pub nnz_median: f64,
+    pub nnz_mean: f64,
+    pub pos_fraction: f64,
+    pub bytes_libsvm: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> SparseDataset {
+        SparseDataset::from_examples(
+            100,
+            &[
+                Example::binary(1, vec![3, 1, 2]),
+                Example::binary(-1, vec![10, 20]),
+                Example::binary(1, vec![5]),
+            ],
+        )
+    }
+
+    #[test]
+    fn push_and_row_roundtrip() {
+        let ds = toy();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.row(0).0, &[1, 2, 3]);
+        assert_eq!(ds.row(1).0, &[10, 20]);
+        assert_eq!(ds.nnz(2), 1);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn stats_match_table1_shape() {
+        let s = toy().stats();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.dim, 100);
+        assert!((s.nnz_mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.nnz_median, 2.0);
+        assert!((s.pos_fraction - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_partitions_examples() {
+        let mut rng = Rng::new(1);
+        let mut examples = Vec::new();
+        for i in 0..100u32 {
+            examples.push(Example::binary(if i % 2 == 0 { 1 } else { -1 }, vec![i]));
+        }
+        let ds = SparseDataset::from_examples(200, &examples);
+        let (tr, te) = ds.split(0.8, &mut rng);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        // every original example appears exactly once across the split
+        let mut seen: Vec<u32> = tr.iter().chain(te.iter()).map(|e| e.indices[0]).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn valued_promotion() {
+        let mut ds = SparseDataset::new(50);
+        ds.push(&Example::binary(1, vec![1, 2]));
+        ds.push(&Example { label: -1, indices: vec![3], values: Some(vec![2.5]) });
+        let (_, vals) = ds.row(0);
+        assert_eq!(vals.unwrap(), &[1.0, 1.0]);
+        let (_, vals) = ds.row(1);
+        assert_eq!(vals.unwrap(), &[2.5]);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_rows() {
+        let mut ds = SparseDataset::new(5);
+        ds.indptr = vec![0, 2];
+        ds.indices = vec![4, 1]; // unsorted
+        ds.labels = vec![1];
+        assert!(ds.validate().is_err());
+    }
+}

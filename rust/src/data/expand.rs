@@ -1,0 +1,227 @@
+//! Feature expansion: original + all pairwise + 1/30 of 3-way combinations.
+//!
+//! This is the paper's own construction for the 200 GB dataset
+//! (Section 1/4: "original features + all pairwise combinations (products)
+//! of features + 1/30 of the 3-way combinations").  For *binary* data a
+//! product of features is their co-occurrence indicator, so expansion maps
+//! a token set T to the feature set
+//!
+//! - unigram t            → feature id `t`                       (exact)
+//! - pair (t1 < t2)       → feature id `V + pairIndex(t1, t2)`   (exact
+//!   combinatorial numbering — collision-free, like the paper's explicit
+//!   dimensions)
+//! - triple (t1<t2<t3)    → kept iff `mix(t1,t2,t3) % 30 == 0`
+//!   (deterministic 1/30 subsample), id hashed into the tail region
+//!   `[V + C(V,2), D)`.
+//!
+//! With V = 12000 the exact regions cover 12000 + 71,994,000 ≈ 2^26.1
+//! dimensions and the triple tail fills the rest of D = 2^30 — giving the
+//! r = f/D → 0 regime of the paper's Eq. 5.
+
+use crate::data::dataset::{Example, SparseDataset};
+
+/// Expansion configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpandConfig {
+    /// Base vocabulary size V (indices in input examples must be < V).
+    pub vocab: u32,
+    /// Target dimensionality D of the expanded space.
+    pub dim: u64,
+    /// Keep one out of `three_way_rate` 3-way combinations (paper: 30).
+    pub three_way_rate: u32,
+    /// Seed for the triple-id mixing hash.
+    pub seed: u64,
+}
+
+impl ExpandConfig {
+    pub fn rcv1_like(vocab: u32) -> Self {
+        ExpandConfig { vocab, dim: 1 << 30, three_way_rate: 30, seed: 0x3A93 }
+    }
+
+    /// First feature id of the pairwise region.
+    pub fn pair_base(&self) -> u64 {
+        self.vocab as u64
+    }
+
+    /// Number of pairwise ids: C(V, 2).
+    pub fn pair_count(&self) -> u64 {
+        let v = self.vocab as u64;
+        v * (v - 1) / 2
+    }
+
+    /// First feature id of the (hashed) 3-way region.
+    pub fn triple_base(&self) -> u64 {
+        self.pair_base() + self.pair_count()
+    }
+
+    /// Size of the 3-way region.
+    pub fn triple_space(&self) -> u64 {
+        self.dim - self.triple_base()
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.triple_base() >= self.dim {
+            return Err(crate::Error::InvalidArg(format!(
+                "dim {} too small for vocab {} (pairs need {})",
+                self.dim,
+                self.vocab,
+                self.triple_base()
+            )));
+        }
+        if self.dim > u32::MAX as u64 + 1 {
+            return Err(crate::Error::InvalidArg(
+                "expanded dim must fit u32 feature indices".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Exact combinatorial index of the pair (t1 < t2) in row-major order:
+/// pairs (0,1), (0,2), .., (0,V−1), (1,2), ..
+#[inline]
+pub fn pair_index(t1: u64, t2: u64, v: u64) -> u64 {
+    debug_assert!(t1 < t2 && t2 < v);
+    t1 * v - t1 * (t1 + 1) / 2 + (t2 - t1 - 1)
+}
+
+/// 64-bit mix of a triple (order-sensitive; callers pass sorted triples).
+#[inline]
+fn mix3(t1: u32, t2: u32, t3: u32, seed: u64) -> u64 {
+    let mut z = (t1 as u64) << 42 ^ (t2 as u64) << 21 ^ t3 as u64 ^ seed;
+    z = (z ^ (z >> 33)).wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    z = (z ^ (z >> 33)).wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    z ^ (z >> 33)
+}
+
+/// Expand one example's token set into the high-dimensional feature set.
+pub fn expand_example(cfg: &ExpandConfig, ex: &Example) -> Example {
+    let t = &ex.indices;
+    debug_assert!(t.iter().all(|&x| x < cfg.vocab));
+    let l = t.len();
+    let v = cfg.vocab as u64;
+    let mut out: Vec<u32> =
+        Vec::with_capacity(l + l * (l - 1) / 2 + l * l * l / (6 * cfg.three_way_rate as usize).max(1));
+    // unigrams (region [0, V))
+    out.extend_from_slice(t);
+    // pairwise (exact, region [V, V + C(V,2)))
+    let pair_base = cfg.pair_base();
+    for i in 0..l {
+        for j in (i + 1)..l {
+            out.push((pair_base + pair_index(t[i] as u64, t[j] as u64, v)) as u32);
+        }
+    }
+    // 3-way, 1/30 deterministic subsample, hashed into the tail region
+    let triple_base = cfg.triple_base();
+    let triple_space = cfg.triple_space();
+    let rate = cfg.three_way_rate as u64;
+    for i in 0..l {
+        for j in (i + 1)..l {
+            for k in (j + 1)..l {
+                let h = mix3(t[i], t[j], t[k], cfg.seed);
+                if h % rate == 0 {
+                    out.push((triple_base + (h / rate) % triple_space) as u32);
+                }
+            }
+        }
+    }
+    Example::binary(ex.label, out)
+}
+
+/// Expand a whole dataset (memory-resident; the pipeline does this
+/// streaming, chunk by chunk).
+pub fn expand_dataset(cfg: &ExpandConfig, ds: &SparseDataset) -> SparseDataset {
+    let mut out = SparseDataset::new(cfg.dim);
+    for ex in ds.iter() {
+        out.push(&expand_example(cfg, &ex));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_index_is_a_bijection() {
+        let v = 50u64;
+        let mut seen = std::collections::HashSet::new();
+        for t1 in 0..v {
+            for t2 in (t1 + 1)..v {
+                let idx = pair_index(t1, t2, v);
+                assert!(idx < v * (v - 1) / 2);
+                assert!(seen.insert(idx), "collision at ({t1},{t2})");
+            }
+        }
+        assert_eq!(seen.len() as u64, v * (v - 1) / 2);
+    }
+
+    #[test]
+    fn expansion_counts_match_formula() {
+        let cfg = ExpandConfig { vocab: 100, dim: 1 << 20, three_way_rate: 1, seed: 1 };
+        cfg.validate().unwrap();
+        let ex = Example::binary(1, (0..10).collect());
+        let expanded = expand_example(&cfg, &ex);
+        // 10 unigrams + 45 pairs + 120 triples (rate 1 keeps all), minus
+        // possible triple-hash collisions in the tail region
+        assert!(expanded.nnz() >= 10 + 45 + 115 && expanded.nnz() <= 175);
+    }
+
+    #[test]
+    fn three_way_rate_thins_triples() {
+        let cfg30 = ExpandConfig { vocab: 200, dim: 1 << 26, three_way_rate: 30, seed: 5 };
+        let cfg1 = ExpandConfig { three_way_rate: 1, ..cfg30 };
+        let ex = Example::binary(1, (0..30).collect());
+        let n30 = expand_example(&cfg30, &ex).nnz() as f64;
+        let n1 = expand_example(&cfg1, &ex).nnz() as f64;
+        let base = (30 + 435) as f64;
+        let triples30 = n30 - base;
+        let triples1 = n1 - base;
+        // C(30,3) = 4060 triples; at rate 30 expect ~135
+        assert!(triples1 > 3800.0, "{triples1}");
+        assert!(triples30 > 60.0 && triples30 < 260.0, "{triples30}");
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_regions_disjoint() {
+        let cfg = ExpandConfig::rcv1_like(12_000);
+        cfg.validate().unwrap();
+        let ex = Example::binary(-1, vec![5, 17, 3000, 11_999]);
+        let a = expand_example(&cfg, &ex);
+        let b = expand_example(&cfg, &ex);
+        assert_eq!(a, b);
+        // unigrams in [0, V); pairs in [V, triple_base); triples above
+        let uni = a.indices.iter().filter(|&&i| (i as u64) < cfg.pair_base()).count();
+        let pairs = a
+            .indices
+            .iter()
+            .filter(|&&i| (cfg.pair_base()..cfg.triple_base()).contains(&(i as u64)))
+            .count();
+        assert_eq!(uni, 4);
+        assert_eq!(pairs, 6);
+    }
+
+    #[test]
+    fn expanded_dataset_is_valid_and_sparser_than_dim() {
+        let cfg = ExpandConfig { vocab: 500, dim: 1 << 22, three_way_rate: 30, seed: 2 };
+        let base = crate::data::gen::CorpusGenerator::new(
+            crate::data::gen::CorpusConfig {
+                n_docs: 20,
+                vocab: 500,
+                zipf_alpha: 1.05,
+                mean_tokens: 20.0,
+                class_signal: 0.5,
+                pos_fraction: 0.5,
+                seed: 3,
+            },
+        )
+        .generate();
+        let big = expand_dataset(&cfg, &base);
+        big.validate().unwrap();
+        assert_eq!(big.len(), 20);
+        let s = big.stats();
+        // r = f/D must be tiny (the Eq. 5 regime)
+        assert!(s.nnz_mean / cfg.dim as f64 % 1.0 < 1e-3);
+        assert!(s.nnz_mean > base.stats().nnz_mean);
+    }
+}

@@ -1,0 +1,188 @@
+//! Synthetic rcv1-like / webspam-like corpus generator.
+//!
+//! Substitution for the paper's proprietary-scale datasets (DESIGN.md §5):
+//! we cannot ship rcv1 or webspam, so we generate a corpus with the three
+//! properties every claim in the paper actually depends on:
+//!
+//! 1. **binary, sparse, high-dimensional** data (sets of token/feature ids
+//!    with Zipfian frequencies, like parsed n-gram text);
+//! 2. **label signal carried by set resemblance**: same-class documents
+//!    draw from the same class-conditional token distribution, so their
+//!    pairwise resemblance is higher — which is exactly the signal minwise
+//!    hashing preserves and random-sign hashing damages;
+//! 3. **r = f/D → 0** after feature expansion (so the Eq. 5 sparse limit
+//!    applies, as in the paper).
+//!
+//! Each document is a set of base tokens; `expand.rs` then applies the
+//! paper's own construction (unigrams + pairwise + 1/30 of 3-way) to blow
+//! the dimensionality up.
+
+use crate::data::dataset::{Example, SparseDataset};
+use crate::util::rng::Zipf;
+use crate::util::Rng;
+
+/// Corpus generator configuration.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    /// Number of documents.
+    pub n_docs: usize,
+    /// Base vocabulary size (rcv1's original feature count scaled down).
+    pub vocab: u32,
+    /// Zipf exponent of token frequencies.
+    pub zipf_alpha: f64,
+    /// Mean document length in tokens (Poisson).
+    pub mean_tokens: f64,
+    /// Fraction of tokens drawn from the class-conditional distribution
+    /// (the rest come from a shared background — controls class
+    /// separability and within-class resemblance).
+    pub class_signal: f64,
+    /// Fraction of positive-class documents.
+    pub pos_fraction: f64,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+impl CorpusConfig {
+    /// rcv1-like preset (before expansion): moderately long docs over a
+    /// 12k vocabulary; expansion takes D to 2^30 (see expand.rs).
+    pub fn rcv1_like(n_docs: usize, seed: u64) -> Self {
+        CorpusConfig {
+            n_docs,
+            vocab: 12_000,
+            zipf_alpha: 1.05,
+            mean_tokens: 40.0,
+            class_signal: 0.55,
+            pos_fraction: 0.47, // rcv1 CCAT-ish balance
+            seed,
+        }
+    }
+
+    /// webspam-like preset: no expansion, denser documents, used for the
+    /// Figure 8 permutation-vs-universal comparison (needs a feasible D).
+    pub fn webspam_like(n_docs: usize, seed: u64) -> Self {
+        CorpusConfig {
+            n_docs,
+            vocab: 1 << 20,
+            zipf_alpha: 1.02,
+            mean_tokens: 350.0,
+            class_signal: 0.5,
+            pos_fraction: 0.61, // webspam's 61% positive
+            seed,
+        }
+    }
+}
+
+/// Class-conditional token model: the positive class samples token ranks
+/// through a per-class rank rotation of the shared Zipf, so both classes
+/// see the same marginal frequency law but different token identities.
+pub struct CorpusGenerator {
+    cfg: CorpusConfig,
+    zipf: Zipf,
+    /// Per-class rank rotation offsets (class 0 = negative, 1 = positive).
+    rot: [u32; 2],
+}
+
+impl CorpusGenerator {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        assert!(cfg.vocab >= 16 && cfg.n_docs > 0);
+        let zipf = Zipf::new(cfg.vocab as u64, cfg.zipf_alpha);
+        // rotate class-1 ranks by a third of the vocabulary
+        let rot = [0, cfg.vocab / 3];
+        CorpusGenerator { cfg, zipf, rot }
+    }
+
+    /// Map a sampled rank to a token id for `class`, rotating the rank
+    /// order so classes prefer different tokens.
+    #[inline]
+    fn class_token(&self, rank: u64, class: usize) -> u32 {
+        ((rank as u32).wrapping_add(self.rot[class])) % self.cfg.vocab
+    }
+
+    /// Generate one document: (label, sorted unique token set).
+    pub fn gen_doc(&self, rng: &mut Rng) -> Example {
+        let positive = rng.f64() < self.cfg.pos_fraction;
+        let class = positive as usize;
+        let len = rng.poisson(self.cfg.mean_tokens).max(3) as usize;
+        let mut tokens = Vec::with_capacity(len);
+        for _ in 0..len {
+            let rank = self.zipf.sample(rng);
+            let tok = if rng.f64() < self.cfg.class_signal {
+                self.class_token(rank, class)
+            } else {
+                // shared background: un-rotated rank order
+                rank as u32
+            };
+            tokens.push(tok);
+        }
+        Example::binary(if positive { 1 } else { -1 }, tokens)
+    }
+
+    /// Generate the full corpus as a dataset over the base vocabulary.
+    pub fn generate(&self) -> SparseDataset {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut ds = SparseDataset::new(self.cfg.vocab as u64);
+        for _ in 0..self.cfg.n_docs {
+            ds.push(&self.gen_doc(&mut rng));
+        }
+        ds
+    }
+
+    pub fn config(&self) -> &CorpusConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::minwise::resemblance;
+
+    #[test]
+    fn corpus_is_reproducible() {
+        let cfg = CorpusConfig::rcv1_like(50, 7);
+        let a = CorpusGenerator::new(cfg.clone()).generate();
+        let b = CorpusGenerator::new(cfg).generate();
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn documents_look_like_text() {
+        let ds = CorpusGenerator::new(CorpusConfig::rcv1_like(200, 11)).generate();
+        let s = ds.stats();
+        assert_eq!(s.n, 200);
+        // Poisson(40) minus dedup: tokens repeat under Zipf, so expect
+        // roughly 20–40 distinct tokens per doc.
+        assert!(s.nnz_mean > 10.0 && s.nnz_mean < 45.0, "{}", s.nnz_mean);
+        assert!(s.pos_fraction > 0.3 && s.pos_fraction < 0.65);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn same_class_docs_are_more_similar() {
+        // The property the whole reproduction rests on: within-class
+        // resemblance must exceed across-class resemblance.
+        let ds = CorpusGenerator::new(CorpusConfig::rcv1_like(300, 13)).generate();
+        let (mut within, mut across) = (Vec::new(), Vec::new());
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let r = resemblance(ds.row(i).0, ds.row(j).0);
+                if ds.labels[i] == ds.labels[j] {
+                    within.push(r);
+                } else {
+                    across.push(r);
+                }
+            }
+        }
+        let w = crate::util::stats::mean(&within);
+        let a = crate::util::stats::mean(&across);
+        assert!(w > 1.3 * a, "within {w} across {a}");
+    }
+
+    #[test]
+    fn webspam_preset_is_denser() {
+        let ds = CorpusGenerator::new(CorpusConfig::webspam_like(50, 17)).generate();
+        assert!(ds.stats().nnz_mean > 100.0);
+        assert_eq!(ds.dim, 1 << 20);
+    }
+}

@@ -1,0 +1,353 @@
+//! Streaming LibSVM-format reader/writer.
+//!
+//! All the paper's datasets are "in LibSVM format", and its Table 2
+//! measures *data-loading time* as the baseline every preprocessing cost is
+//! compared against — so parsing speed matters and reading is fully
+//! streaming (constant memory, chunked), never whole-file.
+//!
+//! Format per line: `<label> <idx>:<val> <idx>:<val> ...` with 1-based or
+//! 0-based indices (we accept both, preserving the raw index), `+1/-1/0/1`
+//! labels, `#` comments, and blank lines skipped.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::dataset::{Example, SparseDataset};
+use crate::{Error, Result};
+
+/// Streaming reader yielding one [`Example`] per data line.
+pub struct LibsvmReader<R: Read> {
+    lines: std::io::Lines<BufReader<R>>,
+    line_no: usize,
+    /// Treat all values as 1.0 and store a binary example (the paper's
+    /// datasets are binary; skipping float parsing doubles throughput).
+    pub binary: bool,
+}
+
+impl LibsvmReader<File> {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Ok(LibsvmReader::new(File::open(path)?))
+    }
+}
+
+impl<R: Read> LibsvmReader<R> {
+    pub fn new(inner: R) -> Self {
+        LibsvmReader {
+            lines: BufReader::with_capacity(1 << 20, inner).lines(),
+            line_no: 0,
+            binary: false,
+        }
+    }
+
+    pub fn binary(mut self) -> Self {
+        self.binary = true;
+        self
+    }
+
+    fn parse_line(&self, line: &str) -> Result<Option<Example>> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().ok_or_else(|| Error::LibsvmParse {
+            line: self.line_no,
+            msg: "missing label".into(),
+        })?;
+        let label: i8 = match label_tok {
+            "+1" | "1" => 1,
+            "-1" => -1,
+            "0" => -1, // some dumps use 0/1
+            other => other.parse::<f32>().map(|v| if v > 0.0 { 1 } else { -1 }).map_err(
+                |_| Error::LibsvmParse {
+                    line: self.line_no,
+                    msg: format!("bad label {other:?}"),
+                },
+            )?,
+        };
+        let mut indices = Vec::new();
+        let mut values: Vec<f32> = Vec::new();
+        let mut all_ones = true;
+        for tok in parts {
+            if tok.starts_with('#') {
+                break;
+            }
+            let (i_str, v_str) = tok.split_once(':').ok_or_else(|| Error::LibsvmParse {
+                line: self.line_no,
+                msg: format!("bad feature token {tok:?}"),
+            })?;
+            let idx: u32 = i_str.parse().map_err(|_| Error::LibsvmParse {
+                line: self.line_no,
+                msg: format!("bad index {i_str:?}"),
+            })?;
+            indices.push(idx);
+            if !self.binary {
+                let v: f32 = v_str.parse().map_err(|_| Error::LibsvmParse {
+                    line: self.line_no,
+                    msg: format!("bad value {v_str:?}"),
+                })?;
+                if v != 1.0 {
+                    all_ones = false;
+                }
+                values.push(v);
+            }
+        }
+        // normalize: sorted unique indices (values follow their index)
+        if !indices.windows(2).all(|w| w[0] < w[1]) {
+            if self.binary || all_ones {
+                indices.sort_unstable();
+                indices.dedup();
+            } else {
+                let mut pairs: Vec<(u32, f32)> =
+                    indices.iter().copied().zip(values.iter().copied()).collect();
+                pairs.sort_unstable_by_key(|p| p.0);
+                pairs.dedup_by_key(|p| p.0);
+                indices = pairs.iter().map(|p| p.0).collect();
+                values = pairs.iter().map(|p| p.1).collect();
+            }
+        }
+        let values = if self.binary || all_ones { None } else { Some(values) };
+        Ok(Some(Example { label, indices, values }))
+    }
+}
+
+impl<R: Read> Iterator for LibsvmReader<R> {
+    type Item = Result<Example>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            self.line_no += 1;
+            match self.lines.next()? {
+                Err(e) => return Some(Err(e.into())),
+                Ok(line) => match self.parse_line(&line) {
+                    Err(e) => return Some(Err(e)),
+                    Ok(Some(ex)) => return Some(Ok(ex)),
+                    Ok(None) => continue, // comment/blank
+                },
+            }
+        }
+    }
+}
+
+/// Chunked streaming: yields `Vec<Example>` of at most `chunk_size` — the
+/// unit of work the preprocessing pipeline shards across workers.
+pub struct ChunkedReader<R: Read> {
+    reader: LibsvmReader<R>,
+    chunk_size: usize,
+}
+
+impl<R: Read> ChunkedReader<R> {
+    pub fn new(reader: LibsvmReader<R>, chunk_size: usize) -> Self {
+        assert!(chunk_size > 0);
+        ChunkedReader { reader, chunk_size }
+    }
+}
+
+impl<R: Read> Iterator for ChunkedReader<R> {
+    type Item = Result<Vec<Example>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let mut chunk = Vec::with_capacity(self.chunk_size);
+        for ex in self.reader.by_ref() {
+            match ex {
+                Ok(e) => {
+                    chunk.push(e);
+                    if chunk.len() == self.chunk_size {
+                        return Some(Ok(chunk));
+                    }
+                }
+                Err(e) => return Some(Err(e)),
+            }
+        }
+        if chunk.is_empty() {
+            None
+        } else {
+            Some(Ok(chunk))
+        }
+    }
+}
+
+/// Load a whole file into a [`SparseDataset`] (tests / small inputs only;
+/// the pipeline path stays streaming).
+pub fn load<P: AsRef<Path>>(path: P, dim: u64) -> Result<SparseDataset> {
+    let mut ds = SparseDataset::new(dim);
+    for ex in LibsvmReader::open(path)? {
+        ds.push(&ex?);
+    }
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Streaming writer.
+pub struct LibsvmWriter<W: Write> {
+    out: BufWriter<W>,
+}
+
+impl LibsvmWriter<File> {
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Ok(LibsvmWriter::new(File::create(path)?))
+    }
+}
+
+impl<W: Write> LibsvmWriter<W> {
+    pub fn new(inner: W) -> Self {
+        LibsvmWriter { out: BufWriter::with_capacity(1 << 20, inner) }
+    }
+
+    pub fn write_example(&mut self, ex: &Example) -> Result<()> {
+        let mut line = String::with_capacity(ex.indices.len() * 12 + 4);
+        line.push_str(if ex.label > 0 { "+1" } else { "-1" });
+        match &ex.values {
+            None => {
+                for &i in &ex.indices {
+                    line.push(' ');
+                    push_u32(&mut line, i);
+                    line.push_str(":1");
+                }
+            }
+            Some(vals) => {
+                for (&i, &v) in ex.indices.iter().zip(vals) {
+                    line.push(' ');
+                    push_u32(&mut line, i);
+                    line.push(':');
+                    line.push_str(&format_value(v));
+                }
+            }
+        }
+        line.push('\n');
+        self.out.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_dataset(&mut self, ds: &SparseDataset) -> Result<()> {
+        for ex in ds.iter() {
+            self.write_example(&ex)?;
+        }
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn push_u32(s: &mut String, v: u32) {
+    let mut buf = [0u8; 10];
+    let mut i = buf.len();
+    let mut v = v;
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    s.push_str(std::str::from_utf8(&buf[i..]).unwrap());
+}
+
+fn format_value(v: f32) -> String {
+    if v == v.trunc() && v.abs() < 1e7 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_binary() {
+        let data = "+1 1:1 5:1 9:1\n-1 2:1 3:1\n";
+        let exs: Vec<Example> =
+            LibsvmReader::new(data.as_bytes()).map(|e| e.unwrap()).collect();
+        assert_eq!(exs.len(), 2);
+        assert_eq!(exs[0].label, 1);
+        assert_eq!(exs[0].indices, vec![1, 5, 9]);
+        assert!(exs[0].values.is_none()); // all-ones detected as binary
+        assert_eq!(exs[1].label, -1);
+    }
+
+    #[test]
+    fn parse_values_and_comments() {
+        let data = "# header\n\n1 3:0.5 7:2\n0 1:1\n";
+        let exs: Vec<Example> =
+            LibsvmReader::new(data.as_bytes()).map(|e| e.unwrap()).collect();
+        assert_eq!(exs.len(), 2);
+        assert_eq!(exs[0].values.as_ref().unwrap(), &[0.5, 2.0]);
+        assert_eq!(exs[1].label, -1); // 0 mapped to -1
+    }
+
+    #[test]
+    fn parse_unsorted_indices_normalized() {
+        let data = "+1 9:1 1:1 5:1\n";
+        let ex = LibsvmReader::new(data.as_bytes()).next().unwrap().unwrap();
+        assert_eq!(ex.indices, vec![1, 5, 9]);
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let data = "+1 1:1\nbogus line here\n";
+        let mut rd = LibsvmReader::new(data.as_bytes());
+        assert!(rd.next().unwrap().is_ok());
+        let err = rd.next().unwrap().unwrap_err();
+        match err {
+            Error::LibsvmParse { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_write_read() {
+        let mut buf = Vec::new();
+        {
+            let mut w = LibsvmWriter::new(&mut buf);
+            w.write_example(&Example::binary(1, vec![2, 4, 6])).unwrap();
+            w.write_example(&Example {
+                label: -1,
+                indices: vec![1, 3],
+                values: Some(vec![0.25, 4.0]),
+            })
+            .unwrap();
+            w.finish().unwrap();
+        }
+        let exs: Vec<Example> =
+            LibsvmReader::new(&buf[..]).map(|e| e.unwrap()).collect();
+        assert_eq!(exs[0], Example::binary(1, vec![2, 4, 6]));
+        assert_eq!(exs[1].values.as_ref().unwrap(), &[0.25, 4.0]);
+    }
+
+    #[test]
+    fn chunked_reader_covers_everything_once() {
+        let mut data = String::new();
+        for i in 0..25 {
+            data.push_str(&format!("+1 {}:1\n", i + 1));
+        }
+        let chunks: Vec<Vec<Example>> =
+            ChunkedReader::new(LibsvmReader::new(data.as_bytes()), 10)
+                .map(|c| c.unwrap())
+                .collect();
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 10);
+        assert_eq!(chunks[2].len(), 5);
+        let all: Vec<u32> =
+            chunks.iter().flatten().map(|e| e.indices[0]).collect();
+        assert_eq!(all, (1..=25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn binary_mode_skips_values() {
+        let data = "+1 3:7.5 9:2\n";
+        let ex = LibsvmReader::new(data.as_bytes())
+            .binary()
+            .next()
+            .unwrap()
+            .unwrap();
+        assert!(ex.values.is_none());
+        assert_eq!(ex.indices, vec![3, 9]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Run-time expansion of b-bit codes into the 2^b × k representation
+//! (paper Section 3).
+//!
+//! A code row (c_1, .., c_k) expands to a binary vector of length 2^b·k
+//! with exactly k ones at columns `j·2^b + c_j`.  Two consumers:
+//!
+//! - the native solvers use the *implicit* form — a [`BbitDataset`] that
+//!   yields expansion columns per row without materializing anything;
+//! - `to_sparse_dataset` materializes explicit CSR for feeding any
+//!   off-the-shelf solver (the paper feeds LIBLINEAR exactly this way) and
+//!   for the LibSVM export path.
+
+use crate::data::dataset::{Example, SparseDataset};
+use crate::encode::packed::PackedCodes;
+
+/// A b-bit hashed dataset in implicit expanded form.
+#[derive(Clone, Debug)]
+pub struct BbitDataset {
+    pub codes: PackedCodes,
+    pub labels: Vec<i8>,
+}
+
+impl BbitDataset {
+    pub fn new(codes: PackedCodes, labels: Vec<i8>) -> Self {
+        assert_eq!(codes.n, labels.len());
+        BbitDataset { codes, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Expanded dimensionality 2^b · k.
+    pub fn dim(&self) -> usize {
+        (1usize << self.codes.b) * self.codes.k
+    }
+
+    /// Expansion columns of row `i` into `out` (length k, strictly
+    /// increasing — column j lives in block j).
+    pub fn cols_into(&self, i: usize, out: &mut [u32]) {
+        let b = self.codes.b as usize;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = ((j << b) + self.codes.get(i, j) as usize) as u32;
+        }
+    }
+
+    pub fn cols(&self, i: usize) -> Vec<u32> {
+        let mut out = vec![0; self.codes.k];
+        self.cols_into(i, &mut out);
+        out
+    }
+
+    /// Materialize explicit CSR (what the paper feeds to LIBLINEAR).
+    pub fn to_sparse_dataset(&self) -> SparseDataset {
+        let mut ds = SparseDataset::new(self.dim() as u64);
+        let mut cols = vec![0u32; self.codes.k];
+        for i in 0..self.len() {
+            self.cols_into(i, &mut cols);
+            ds.push(&Example { label: self.labels[i], indices: cols.clone(), values: None });
+        }
+        ds
+    }
+
+    /// Unpacked i32 code matrix rows [i0, i0+rows) in row-major order —
+    /// the input layout of the PJRT train/predict artifacts.
+    pub fn codes_i32(&self, i0: usize, rows: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(rows * self.codes.k);
+        for i in i0..(i0 + rows).min(self.len()) {
+            for j in 0..self.codes.k {
+                out.push(self.codes.get(i, j) as i32);
+            }
+        }
+        // pad with row 0-codes to the requested size (callers mask by count)
+        out.resize(rows * self.codes.k, 0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy(b: u32, k: usize, n: usize, seed: u64) -> BbitDataset {
+        let mut rng = Rng::new(seed);
+        let mut pc = PackedCodes::new(b, k);
+        let mut labels = Vec::new();
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| rng.below(1 << b) as u16).collect();
+            pc.push_row(&row).unwrap();
+            labels.push(if rng.bool() { 1 } else { -1 });
+        }
+        BbitDataset::new(pc, labels)
+    }
+
+    #[test]
+    fn cols_land_in_their_blocks() {
+        let ds = toy(8, 20, 10, 1);
+        for i in 0..ds.len() {
+            let cols = ds.cols(i);
+            assert_eq!(cols.len(), 20);
+            for (j, &c) in cols.iter().enumerate() {
+                let block = (c as usize) >> 8;
+                assert_eq!(block, j);
+                assert_eq!((c as usize) & 0xFF, ds.codes.get(i, j) as usize);
+            }
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn csr_matches_implicit() {
+        let ds = toy(4, 7, 25, 2);
+        let csr = ds.to_sparse_dataset();
+        csr.validate().unwrap();
+        assert_eq!(csr.dim, 16 * 7);
+        for i in 0..ds.len() {
+            assert_eq!(csr.row(i).0, &ds.cols(i)[..]);
+            assert_eq!(csr.labels[i], ds.labels[i]);
+            assert_eq!(csr.nnz(i), 7); // exactly k ones
+        }
+    }
+
+    #[test]
+    fn codes_i32_layout() {
+        let ds = toy(8, 5, 4, 3);
+        let m = ds.codes_i32(1, 2);
+        assert_eq!(m.len(), 10);
+        for j in 0..5 {
+            assert_eq!(m[j], ds.codes.get(1, j) as i32);
+            assert_eq!(m[5 + j], ds.codes.get(2, j) as i32);
+        }
+        // padding beyond the end is zero
+        let padded = ds.codes_i32(3, 4);
+        assert!(padded[5..].iter().all(|&v| v == 0));
+    }
+}

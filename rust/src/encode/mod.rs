@@ -1,0 +1,13 @@
+//! Hashed-data encodings.
+//!
+//! - [`packed`]: the paper's `n·b·k`-bit storage — b-bit codes bit-packed
+//!   into words, the whole point of b-bit minwise hashing (Section 2/3).
+//! - [`expansion`]: run-time expansion of a code row into the `2^b × k`
+//!   binary vector fed to a linear solver (Section 3), in both explicit
+//!   CSR form and the implicit offsets+codes form the solvers and the PJRT
+//!   train artifacts consume.
+
+pub mod expansion;
+pub mod packed;
+
+pub use packed::PackedCodes;

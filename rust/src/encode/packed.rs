@@ -1,0 +1,344 @@
+//! Bit-packed b-bit code matrix: n rows × k codes × b bits each.
+//!
+//! This is the on-disk / in-memory format whose size — `n·b·k` bits — is
+//! the storage the paper trades against VW's `k` 16/32-bit bins
+//! (Section 5.3).  Codes are packed little-endian into u64 words with rows
+//! padded to a word boundary so rows can be accessed independently (and
+//! sharded workers can write disjoint row ranges without synchronization).
+
+use crate::{Error, Result};
+
+/// Packed b-bit codes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedCodes {
+    /// Bits per code (1..=16).
+    pub b: u32,
+    /// Codes per row (the paper's k).
+    pub k: usize,
+    /// Number of rows.
+    pub n: usize,
+    /// Words per row (row stride).
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl PackedCodes {
+    pub fn new(b: u32, k: usize) -> Self {
+        assert!((1..=16).contains(&b), "b must be 1..=16");
+        let words_per_row = (k * b as usize).div_ceil(64);
+        PackedCodes { b, k, n: 0, words_per_row, data: Vec::new() }
+    }
+
+    /// Pre-allocate `n` zeroed rows (for parallel writers).
+    pub fn zeroed(b: u32, k: usize, n: usize) -> Self {
+        let mut pc = PackedCodes::new(b, k);
+        pc.n = n;
+        pc.data = vec![0; pc.words_per_row * n];
+        pc
+    }
+
+    /// Storage in bytes actually allocated.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+
+    /// The paper's idealized storage: exactly n·b·k bits, in bytes.
+    pub fn ideal_bytes(&self) -> u64 {
+        (self.n as u64 * self.b as u64 * self.k as u64).div_ceil(8)
+    }
+
+    /// Append one row of codes (each `< 2^b`).
+    pub fn push_row(&mut self, codes: &[u16]) -> Result<()> {
+        if codes.len() != self.k {
+            return Err(Error::InvalidArg(format!(
+                "row has {} codes, expected k={}",
+                codes.len(),
+                self.k
+            )));
+        }
+        let limit = 1u32 << self.b;
+        let row = self.n;
+        self.data.resize(self.data.len() + self.words_per_row, 0);
+        self.n += 1;
+        for (j, &c) in codes.iter().enumerate() {
+            if (c as u32) >= limit {
+                self.n -= 1;
+                self.data.truncate(self.data.len() - self.words_per_row);
+                return Err(Error::InvalidArg(format!(
+                    "code {c} out of range for b={}",
+                    self.b
+                )));
+            }
+            self.set(row, j, c);
+        }
+        Ok(())
+    }
+
+    /// Write code (row, j) — rows must already exist (`zeroed` or pushed).
+    #[inline]
+    pub fn set(&mut self, row: usize, j: usize, code: u16) {
+        debug_assert!(row < self.n && j < self.k);
+        debug_assert!((code as u32) < (1 << self.b));
+        let bit = j * self.b as usize;
+        let word = row * self.words_per_row + bit / 64;
+        let off = bit % 64;
+        let mask = ((1u64 << self.b) - 1) << off;
+        self.data[word] = (self.data[word] & !mask) | ((code as u64) << off);
+        let spill = off + self.b as usize;
+        if spill > 64 {
+            let hi_bits = spill - 64;
+            let hi_mask = (1u64 << hi_bits) - 1;
+            let hi = (code as u64) >> (self.b as usize - hi_bits);
+            self.data[word + 1] = (self.data[word + 1] & !hi_mask) | hi;
+        }
+    }
+
+    /// Read code (row, j).
+    #[inline]
+    pub fn get(&self, row: usize, j: usize) -> u16 {
+        debug_assert!(row < self.n && j < self.k);
+        let bit = j * self.b as usize;
+        let word = row * self.words_per_row + bit / 64;
+        let off = bit % 64;
+        let mut v = self.data[word] >> off;
+        let spill = off + self.b as usize;
+        if spill > 64 {
+            v |= self.data[word + 1] << (64 - off);
+        }
+        (v & ((1u64 << self.b) - 1)) as u16
+    }
+
+    /// Unpack one row into `out` (length k).
+    pub fn row_into(&self, row: usize, out: &mut [u16]) {
+        debug_assert_eq!(out.len(), self.k);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.get(row, j);
+        }
+    }
+
+    pub fn row(&self, row: usize) -> Vec<u16> {
+        let mut out = vec![0; self.k];
+        self.row_into(row, &mut out);
+        out
+    }
+
+    /// Merge rows from `other` (same b, k) after this one's rows — used by
+    /// the pipeline collector to splice shard outputs.
+    pub fn extend(&mut self, other: &PackedCodes) -> Result<()> {
+        if self.b != other.b || self.k != other.k {
+            return Err(Error::InvalidArg("packed geometry mismatch".into()));
+        }
+        self.data.extend_from_slice(&other.data);
+        self.n += other.n;
+        Ok(())
+    }
+
+    /// Copy a whole row from `other` at `src` into `self` at `dst`
+    /// (geometries must match; rows are word-aligned so this is a memcpy).
+    pub fn copy_row_from(&mut self, dst: usize, other: &PackedCodes, src: usize) {
+        debug_assert_eq!(self.words_per_row, other.words_per_row);
+        let (a, b) = (dst * self.words_per_row, src * other.words_per_row);
+        self.data[a..a + self.words_per_row]
+            .copy_from_slice(&other.data[b..b + other.words_per_row]);
+    }
+
+    /// Serialize to a writer: magic, geometry header, then little-endian
+    /// words.  This is the "hashed dataset on disk" the paper re-uses
+    /// across C-sweeps and experiments.
+    pub fn save<W: std::io::Write>(&self, mut w: W) -> Result<()> {
+        w.write_all(b"BBMH")?;
+        for v in [self.b as u64, self.k as u64, self.n as u64] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for word in &self.data {
+            w.write_all(&word.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader (counterpart of [`save`]).
+    pub fn load<R: std::io::Read>(mut r: R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"BBMH" {
+            return Err(Error::InvalidArg("bad packed-codes magic".into()));
+        }
+        let mut buf = [0u8; 8];
+        let mut next = || -> Result<u64> {
+            r.read_exact(&mut buf)?;
+            Ok(u64::from_le_bytes(buf))
+        };
+        let (b, k, n) = (next()? as u32, next()? as usize, next()? as usize);
+        if !(1..=16).contains(&b) {
+            return Err(Error::InvalidArg(format!("bad b={b} in header")));
+        }
+        let mut pc = PackedCodes::zeroed(b, k, n);
+        let mut bytes = vec![0u8; pc.data.len() * 8];
+        r.read_exact(&mut bytes)?;
+        for (i, chunk) in bytes.chunks_exact(8).enumerate() {
+            pc.data[i] = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(pc)
+    }
+
+    /// Re-truncate to fewer bits: from stored b-bit codes derive b'-bit
+    /// codes (b' ≤ b) by masking — the paper's "store 16 bits once, use
+    /// any b ≤ 16" trick the experiment harness exploits.
+    pub fn truncate_bits(&self, b_new: u32) -> Result<PackedCodes> {
+        if b_new > self.b {
+            return Err(Error::InvalidArg(format!(
+                "cannot widen {} -> {} bits",
+                self.b, b_new
+            )));
+        }
+        let mut out = PackedCodes::zeroed(b_new, self.k, self.n);
+        // u32 intermediate: (1u16 << 16) would wrap for b_new == 16
+        let mask = ((1u32 << b_new) - 1) as u16;
+        for i in 0..self.n {
+            for j in 0..self.k {
+                out.set(i, j, self.get(i, j) & mask);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Keep only the first `k_new ≤ k` hash columns — lets one k=500 hash
+    /// pass serve every smaller k in a sweep (minwise hashes are
+    /// independent, so a prefix is a valid smaller family).
+    pub fn truncate_k(&self, k_new: usize) -> Result<PackedCodes> {
+        if k_new > self.k {
+            return Err(Error::InvalidArg(format!(
+                "cannot widen k {} -> {}",
+                self.k, k_new
+            )));
+        }
+        let mut out = PackedCodes::zeroed(self.b, k_new, self.n);
+        for i in 0..self.n {
+            for j in 0..k_new {
+                out.set(i, j, self.get(i, j));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_b() {
+        let mut rng = Rng::new(91);
+        for b in 1..=16u32 {
+            let k = 37; // deliberately not word-aligned
+            let mut pc = PackedCodes::new(b, k);
+            let mut rows = Vec::new();
+            for _ in 0..50 {
+                let row: Vec<u16> =
+                    (0..k).map(|_| rng.below(1 << b) as u16).collect();
+                pc.push_row(&row).unwrap();
+                rows.push(row);
+            }
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(&pc.row(i), row, "b={b} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_word_boundary_b12() {
+        // b=12, k=37: bit offsets hit 60 → codes straddle word boundaries
+        let mut pc = PackedCodes::new(12, 37);
+        let row: Vec<u16> = (0..37).map(|j| (j * 111 % 4096) as u16).collect();
+        pc.push_row(&row).unwrap();
+        assert_eq!(pc.row(0), row);
+    }
+
+    #[test]
+    fn rejects_out_of_range_codes() {
+        let mut pc = PackedCodes::new(4, 3);
+        assert!(pc.push_row(&[1, 2, 16]).is_err());
+        assert_eq!(pc.n, 0); // failed push leaves no partial row
+        assert!(pc.push_row(&[1, 2, 15]).is_ok());
+    }
+
+    #[test]
+    fn storage_is_nbk_bits_up_to_row_padding() {
+        let pc = PackedCodes::zeroed(8, 200, 1000);
+        let ideal = pc.ideal_bytes() as f64;
+        let actual = pc.storage_bytes() as f64;
+        assert!(actual >= ideal);
+        assert!(actual < 1.05 * ideal, "padding overhead too large");
+    }
+
+    #[test]
+    fn set_get_random_access() {
+        let mut rng = Rng::new(97);
+        let mut pc = PackedCodes::zeroed(5, 64, 100);
+        let mut mirror = vec![vec![0u16; 64]; 100];
+        for _ in 0..5000 {
+            let (r, j) = (rng.below_usize(100), rng.below_usize(64));
+            let c = rng.below(32) as u16;
+            pc.set(r, j, c);
+            mirror[r][j] = c;
+        }
+        for r in 0..100 {
+            assert_eq!(pc.row(r), mirror[r]);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(101);
+        let mut pc = PackedCodes::new(11, 23);
+        for _ in 0..40 {
+            let row: Vec<u16> = (0..23).map(|_| rng.below(1 << 11) as u16).collect();
+            pc.push_row(&row).unwrap();
+        }
+        let mut buf = Vec::new();
+        pc.save(&mut buf).unwrap();
+        let back = PackedCodes::load(&buf[..]).unwrap();
+        assert_eq!(pc, back);
+        assert!(PackedCodes::load(&b"XXXX123"[..]).is_err());
+    }
+
+    #[test]
+    fn truncate_bits_masks() {
+        let mut pc = PackedCodes::new(16, 4);
+        pc.push_row(&[0xABCD, 0x1234, 0xFFFF, 0x0080]).unwrap();
+        // b_new == b must be the identity (regression: u16 shift wrap)
+        let t16 = pc.truncate_bits(16).unwrap();
+        assert_eq!(t16.row(0), pc.row(0));
+        let t8 = pc.truncate_bits(8).unwrap();
+        assert_eq!(t8.row(0), vec![0xCD, 0x34, 0xFF, 0x80]);
+        let t1 = pc.truncate_bits(1).unwrap();
+        assert_eq!(t1.row(0), vec![1, 0, 1, 0]);
+        assert!(t8.truncate_bits(12).is_err());
+    }
+
+    #[test]
+    fn truncate_k_prefixes() {
+        let mut pc = PackedCodes::new(8, 6);
+        pc.push_row(&[1, 2, 3, 4, 5, 6]).unwrap();
+        let t = pc.truncate_k(3).unwrap();
+        assert_eq!(t.row(0), vec![1, 2, 3]);
+        assert_eq!(t.k, 3);
+        assert!(pc.truncate_k(7).is_err());
+    }
+
+    #[test]
+    fn extend_and_copy_row() {
+        let mut a = PackedCodes::new(8, 16);
+        let mut b = PackedCodes::new(8, 16);
+        a.push_row(&[1; 16]).unwrap();
+        b.push_row(&[2; 16]).unwrap();
+        b.push_row(&[3; 16]).unwrap();
+        a.extend(&b).unwrap();
+        assert_eq!(a.n, 3);
+        assert_eq!(a.row(2), vec![3; 16]);
+        let mut c = PackedCodes::zeroed(8, 16, 3);
+        c.copy_row_from(0, &a, 2);
+        assert_eq!(c.row(0), vec![3; 16]);
+    }
+}

@@ -1,0 +1,40 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every layer of the coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("libsvm parse error at line {line}: {msg}")]
+    LibsvmParse { line: usize, msg: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    #[error("solver error: {0}")]
+    Solver(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,257 @@
+//! Shared experiment context: scaled-down dataset construction, one-time
+//! hashing passes, and per-(b, k) views.
+//!
+//! Scaling strategy (DESIGN.md §4): the paper's expanded rcv1 is
+//! n = 677,399 / D ≈ 1.01e9 / 200 GB; the default scale keeps every
+//! *structural* property (binary sparse sets, resemblance-borne labels,
+//! r = f/D → 0, the same expansion rule) at laptop size.  `--scale paper`
+//! raises the knobs for bigger machines.
+//!
+//! The 16-bit trick: minwise values are hashed **once** per corpus at
+//! `k = kmax`, stored as 16-bit codes; every (b ≤ 16, k ≤ kmax) cell of a
+//! figure grid is derived by `truncate_bits`/`truncate_k` — exactly how
+//! the paper re-uses one preprocessing pass across its whole grid.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use crate::data::dataset::SparseDataset;
+use crate::data::expand::{expand_dataset, ExpandConfig};
+use crate::data::gen::{CorpusConfig, CorpusGenerator};
+use crate::encode::expansion::BbitDataset;
+use crate::report::Table;
+use crate::util::Rng;
+use crate::Result;
+
+/// Which solver a comparison uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverSel {
+    Svm,
+    Lr,
+}
+
+impl SolverSel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverSel::Svm => "linear SVM",
+            SolverSel::Lr => "logistic regression",
+        }
+    }
+}
+
+/// Experiment scale knobs.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub n_docs: usize,
+    pub vocab: u32,
+    pub mean_tokens: f64,
+    /// Expanded dimensionality D.
+    pub dim: u64,
+    /// One-time hashing width; every k in `k_grid` must be ≤ kmax.
+    pub kmax: usize,
+    pub k_grid: Vec<usize>,
+    pub b_grid: Vec<u32>,
+    pub c_grid: Vec<f64>,
+    /// VW bin grid (paper: 2^5..2^14).
+    pub vw_bins_grid: Vec<usize>,
+    /// Figure-8 averaging runs (paper: 50).
+    pub fig8_runs: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub results_dir: String,
+}
+
+impl Scale {
+    /// Laptop scale — `experiments all` in minutes.
+    pub fn small() -> Self {
+        Scale {
+            n_docs: 3000,
+            vocab: 3000,
+            mean_tokens: 30.0,
+            dim: 1 << 30,
+            kmax: 256,
+            k_grid: vec![30, 64, 128, 256],
+            b_grid: vec![1, 2, 4, 8, 12, 16],
+            c_grid: crate::coordinator::scheduler::paper_c_grid(),
+            vw_bins_grid: vec![32, 64, 128, 256, 512, 1024, 2048, 4096],
+            fig8_runs: 10,
+            seed: 0xB_B17,
+            workers: crate::config::available_workers(),
+            results_dir: "results".into(),
+        }
+    }
+
+    /// Closer to the paper's grid (hours, big RAM).
+    pub fn paper() -> Self {
+        Scale {
+            n_docs: 40_000,
+            vocab: 12_000,
+            mean_tokens: 40.0,
+            kmax: 512,
+            k_grid: vec![30, 50, 100, 150, 200, 300, 500],
+            vw_bins_grid: (5..=14).map(|e| 1usize << e).collect(),
+            fig8_runs: 50,
+            ..Scale::small()
+        }
+    }
+
+    /// CI scale — seconds; used by integration tests.
+    pub fn tiny() -> Self {
+        Scale {
+            n_docs: 400,
+            vocab: 800,
+            mean_tokens: 15.0,
+            dim: 1 << 26,
+            kmax: 64,
+            k_grid: vec![16, 64],
+            b_grid: vec![1, 4, 8],
+            c_grid: vec![0.1, 1.0],
+            vw_bins_grid: vec![64, 256, 1024],
+            fig8_runs: 3,
+            seed: 0xB_B17,
+            workers: 2,
+            results_dir: "results".into(),
+        }
+    }
+}
+
+/// Lazily-built shared state for all experiments.
+pub struct Ctx {
+    pub scale: Scale,
+    /// Expanded rcv1-like split.
+    rcv1: Option<(SparseDataset, SparseDataset)>,
+    /// 16-bit kmax-wide codes for (train, test).
+    codes16: Option<(crate::encode::packed::PackedCodes, crate::encode::packed::PackedCodes)>,
+    /// Cache of derived (b, k) views.
+    views: BTreeMap<(u32, usize), (BbitDataset, BbitDataset)>,
+    /// webspam-like corpus for Figure 8.
+    webspam: Option<(SparseDataset, SparseDataset)>,
+}
+
+impl Ctx {
+    pub fn new(scale: Scale) -> Self {
+        Ctx { scale, rcv1: None, codes16: None, views: BTreeMap::new(), webspam: None }
+    }
+
+    pub fn pipeline(&self) -> Pipeline {
+        Pipeline::new(PipelineConfig {
+            workers: self.scale.workers,
+            chunk_size: 256,
+            queue_depth: 4,
+        })
+    }
+
+    /// The expanded rcv1-like (train, test) pair, built on first use.
+    pub fn rcv1(&mut self) -> Result<&(SparseDataset, SparseDataset)> {
+        if self.rcv1.is_none() {
+            let s = &self.scale;
+            eprintln!(
+                "[ctx] generating rcv1-like corpus: n={} vocab={} (expansion to D=2^{})",
+                s.n_docs,
+                s.vocab,
+                s.dim.trailing_zeros()
+            );
+            let base = CorpusGenerator::new(CorpusConfig {
+                n_docs: s.n_docs,
+                vocab: s.vocab,
+                zipf_alpha: 1.05,
+                mean_tokens: s.mean_tokens,
+                class_signal: 0.55,
+                pos_fraction: 0.47,
+                seed: s.seed,
+            })
+            .generate();
+            let cfg = ExpandConfig { vocab: s.vocab, dim: s.dim, three_way_rate: 30, seed: s.seed ^ 0xEE };
+            cfg.validate()?;
+            let expanded = expand_dataset(&cfg, &base);
+            // paper: 50/50 split for rcv1
+            let (train, test) = expanded.split(0.5, &mut Rng::new(s.seed ^ 0x51));
+            self.rcv1 = Some((train, test));
+        }
+        Ok(self.rcv1.as_ref().unwrap())
+    }
+
+    /// One-time 16-bit × kmax hashing pass over the rcv1 split (through
+    /// the production pipeline), cached.
+    fn codes16(&mut self) -> Result<&(crate::encode::packed::PackedCodes, crate::encode::packed::PackedCodes)> {
+        if self.codes16.is_none() {
+            let kmax = self.scale.kmax;
+            let seed = self.scale.seed ^ 0x4A5E;
+            let dim = self.scale.dim;
+            let pipe = self.pipeline();
+            let (train, test) = self.rcv1()?.clone();
+            eprintln!("[ctx] hashing corpus once at b=16, k={kmax}");
+            let job = HashJob::Bbit { b: 16, k: kmax, d: dim, seed };
+            let (out_tr, _) = pipe.run(dataset_chunks(&train, 256), &job)?;
+            let (out_te, _) = pipe.run(dataset_chunks(&test, 256), &job)?;
+            let tr = out_tr.into_bbit()?;
+            let te = out_te.into_bbit()?;
+            debug_assert_eq!(tr.labels, train.labels);
+            self.codes16 = Some((tr.codes, te.codes));
+        }
+        Ok(self.codes16.as_ref().unwrap())
+    }
+
+    /// (train, test) b-bit view for one grid cell, derived from the 16-bit
+    /// pass and cached.
+    pub fn bbit_view(&mut self, b: u32, k: usize) -> Result<&(BbitDataset, BbitDataset)> {
+        if !self.views.contains_key(&(b, k)) {
+            let (tr_labels, te_labels) = {
+                let (train, test) = self.rcv1()?;
+                (train.labels.clone(), test.labels.clone())
+            };
+            let (c_tr, c_te) = self.codes16()?;
+            let tr = c_tr.truncate_k(k)?.truncate_bits(b)?;
+            let te = c_te.truncate_k(k)?.truncate_bits(b)?;
+            self.views.insert(
+                (b, k),
+                (BbitDataset::new(tr, tr_labels), BbitDataset::new(te, te_labels)),
+            );
+        }
+        Ok(&self.views[&(b, k)])
+    }
+
+    /// VW-hash the rcv1 split into `bins` (not cached — each bins value is
+    /// used once per run).
+    pub fn vw_view(&mut self, bins: usize) -> Result<(SparseDataset, SparseDataset)> {
+        let seed = self.scale.seed ^ 0x77;
+        let pipe = self.pipeline();
+        let (train, test) = self.rcv1()?.clone();
+        let job = HashJob::Vw { bins, seed };
+        let (out_tr, _) = pipe.run(dataset_chunks(&train, 256), &job)?;
+        let (out_te, _) = pipe.run(dataset_chunks(&test, 256), &job)?;
+        Ok((out_tr.into_vw()?, out_te.into_vw()?))
+    }
+
+    /// webspam-like (train, test) pair (no expansion; for Figure 8).
+    pub fn webspam(&mut self) -> Result<&(SparseDataset, SparseDataset)> {
+        if self.webspam.is_none() {
+            let s = &self.scale;
+            // scale webspam along with the rcv1 preset but keep D feasible
+            // for explicit permutation tables
+            let ds = CorpusGenerator::new(CorpusConfig {
+                n_docs: s.n_docs.min(2000),
+                vocab: 1 << 18,
+                zipf_alpha: 1.02,
+                mean_tokens: 4.0 * s.mean_tokens,
+                class_signal: 0.5,
+                pos_fraction: 0.61,
+                seed: s.seed ^ 0x3B,
+            })
+            .generate();
+            // paper: 80/20 split for webspam
+            let (train, test) = ds.split(0.8, &mut Rng::new(s.seed ^ 0x82));
+            self.webspam = Some((train, test));
+        }
+        Ok(self.webspam.as_ref().unwrap())
+    }
+
+    /// Print a table and save its CSV under `results/`.
+    pub fn emit(&self, t: &Table, csv_name: &str) -> Result<()> {
+        println!("{}", t.render());
+        let path = std::path::Path::new(&self.scale.results_dir).join(csv_name);
+        t.write_csv(&path)?;
+        eprintln!("[csv] {}", path.display());
+        Ok(())
+    }
+}

@@ -1,0 +1,104 @@
+//! Figure 8: true permutations vs 2-universal hashing on webspam-like
+//! data, averaged over many runs (paper: 50; scaled by `fig8_runs`).
+//!
+//! Section 7's claim: the simplest 2-universal family is statistically
+//! indistinguishable from true permutations for learning — the curves
+//! should overlap within Monte-Carlo noise.  The "true permutation" arm
+//! uses the storage-free Feistel bijection (DESIGN.md §5 substitution;
+//! exact Fisher–Yates tables are also implemented and used at small D in
+//! the unit tests).
+
+use crate::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
+use crate::data::dataset::SparseDataset;
+use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
+use crate::hashing::minwise::{bbit_truncate, MinwiseHasher, PermutationMinwise};
+use crate::hashing::permutation::FeistelPermutation;
+use crate::report::{fnum, Table};
+use crate::util::stats;
+use crate::util::Rng;
+use crate::Result;
+
+use super::Ctx;
+
+fn hash_with<FH>(ds: &SparseDataset, k: usize, b: u32, mut hash_into: FH) -> BbitDataset
+where
+    FH: FnMut(&[u32], &mut [u64]),
+{
+    let mut pc = PackedCodes::new(b, k);
+    let mut scratch = vec![0u64; k];
+    let mut row = vec![0u16; k];
+    for i in 0..ds.len() {
+        hash_into(ds.row(i).0, &mut scratch);
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = bbit_truncate(scratch[j], b);
+        }
+        pc.push_row(&row).unwrap();
+    }
+    BbitDataset::new(pc, ds.labels.clone())
+}
+
+pub fn run(ctx: &mut Ctx) -> Result<Vec<Table>> {
+    let scale = ctx.scale.clone();
+    let (train, test) = ctx.webspam()?.clone();
+    let d = train.dim;
+    let b = 8u32;
+    let k_list: Vec<usize> = scale.k_grid.iter().copied().take(3).collect();
+    let c_list = [0.1, 1.0, 10.0];
+    let runs = scale.fig8_runs;
+    let sched = Scheduler::new(scale.workers);
+
+    let mut t = Table::new(
+        &format!(
+            "webspam-like accuracy: permutations vs 2-universal hashing (Figure 8 shape, b={b}, {runs}-run mean±sd)"
+        ),
+        &["solver", "k", "C", "perm acc %", "2u acc %", "perm sd", "2u sd"],
+    );
+
+    for kind in [SolverKind::SvmDcd, SolverKind::LrNewton] {
+        for &k in &k_list {
+            for &c in &c_list {
+                let (mut acc_perm, mut acc_univ) = (Vec::new(), Vec::new());
+                for run in 0..runs {
+                    let seed = scale.seed ^ (run as u64) << 8 ^ k as u64;
+                    // permutation arm
+                    let mut rng = Rng::new(seed);
+                    let perms: Vec<FeistelPermutation> =
+                        (0..k).map(|_| FeistelPermutation::draw(d, &mut rng)).collect();
+                    let pm = PermutationMinwise::new(perms);
+                    let tr = hash_with(&train, k, b, |s, out| pm.hash_into(s, out));
+                    let te = hash_with(&test, k, b, |s, out| pm.hash_into(s, out));
+                    let o = sched.run_grid(
+                        &tr,
+                        &te,
+                        &[TrainJob { tag: String::new(), solver: kind, c }],
+                    )?;
+                    acc_perm.push(100.0 * o[0].test_accuracy);
+                    // 2-universal arm (independent draw)
+                    let mut rng = Rng::new(seed ^ 0xABCD);
+                    let mh = MinwiseHasher::draw(k, d, &mut rng);
+                    let tr = hash_with(&train, k, b, |s, out| mh.hash_into(s, out));
+                    let te = hash_with(&test, k, b, |s, out| mh.hash_into(s, out));
+                    let o = sched.run_grid(
+                        &tr,
+                        &te,
+                        &[TrainJob { tag: String::new(), solver: kind, c }],
+                    )?;
+                    acc_univ.push(100.0 * o[0].test_accuracy);
+                }
+                t.row(&[
+                    format!("{kind:?}"),
+                    k.to_string(),
+                    c.to_string(),
+                    fnum(stats::mean(&acc_perm)),
+                    fnum(stats::mean(&acc_univ)),
+                    fnum(stats::stddev(&acc_perm)),
+                    fnum(stats::stddev(&acc_univ)),
+                ]);
+            }
+            eprintln!("[fig8] {kind:?} k={k} done");
+        }
+    }
+    ctx.emit(&t, "fig8_perm_vs_universal.csv")?;
+    Ok(vec![t])
+}

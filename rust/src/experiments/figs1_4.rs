@@ -1,0 +1,110 @@
+//! Figures 1–4: b-bit minwise hashing accuracy and training time on the
+//! expanded rcv1-like dataset, across the (b, k, C) grid.
+//!
+//! Figure 1/3: test accuracy vs C, one curve per (b, k) — SVM / LR.
+//! Figure 2/4: training time vs C for the same grid.
+//! Paper headline to reproduce: k = 30, b = 12 already exceeds 90%
+//! accuracy; k ≥ 200–300 approaches the full-data accuracy, and larger b
+//! (more bits) dominates smaller b at equal k.
+
+use crate::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
+use crate::report::{fnum, Table};
+use crate::Result;
+
+use super::context::SolverSel;
+use super::Ctx;
+
+pub fn run_svm(ctx: &mut Ctx) -> Result<Vec<Table>> {
+    run_grid(ctx, SolverSel::Svm, "fig1_svm_accuracy", "fig2_svm_time")
+}
+
+pub fn run_lr(ctx: &mut Ctx) -> Result<Vec<Table>> {
+    run_grid(ctx, SolverSel::Lr, "fig3_lr_accuracy", "fig4_lr_time")
+}
+
+fn run_grid(
+    ctx: &mut Ctx,
+    solver: SolverSel,
+    acc_name: &str,
+    time_name: &str,
+) -> Result<Vec<Table>> {
+    let scale = ctx.scale.clone();
+    let kind = match solver {
+        SolverSel::Svm => SolverKind::SvmDcd,
+        SolverSel::Lr => SolverKind::LrNewton,
+    };
+    let mut acc_t = Table::new(
+        &format!("{} test accuracy on rcv1-like (Figures 1/3 shape)", solver.name()),
+        &["b", "k", "C", "test acc %", "train acc %"],
+    );
+    let mut time_t = Table::new(
+        &format!("{} training time on rcv1-like (Figures 2/4 shape)", solver.name()),
+        &["b", "k", "C", "train seconds", "iterations"],
+    );
+    let sched = Scheduler::new(scale.workers);
+    for &b in &scale.b_grid {
+        for &k in &scale.k_grid {
+            let (train, test) = ctx.bbit_view(b, k)?;
+            let jobs: Vec<TrainJob> = scale
+                .c_grid
+                .iter()
+                .map(|&c| TrainJob { tag: format!("b={b} k={k}"), solver: kind, c })
+                .collect();
+            let outcomes = sched.run_grid(train, test, &jobs)?;
+            for o in outcomes {
+                acc_t.row(&[
+                    b.to_string(),
+                    k.to_string(),
+                    o.c.to_string(),
+                    fnum(100.0 * o.test_accuracy),
+                    fnum(100.0 * o.train_accuracy),
+                ]);
+                time_t.row(&[
+                    b.to_string(),
+                    k.to_string(),
+                    o.c.to_string(),
+                    fnum(o.train_seconds),
+                    o.iterations.to_string(),
+                ]);
+            }
+            eprintln!("[{}] b={b} k={k} done", acc_name);
+        }
+    }
+    ctx.emit(&acc_t, &format!("{acc_name}.csv"))?;
+    ctx.emit(&time_t, &format!("{time_name}.csv"))?;
+
+    // headline check rows (what EXPERIMENTS.md quotes)
+    let mut headline = Table::new(
+        "headline: best test accuracy per (b, k) over the C grid",
+        &["b", "k", "best test acc %"],
+    );
+    summarize_best(&acc_t, &mut headline);
+    println!("{}", headline.render());
+    Ok(vec![acc_t, time_t, headline])
+}
+
+/// Group accuracy rows by (b, k) and keep the best over C.
+fn summarize_best(acc: &Table, out: &mut Table) {
+    use std::collections::BTreeMap;
+    let mut best: BTreeMap<(u32, usize), f64> = BTreeMap::new();
+    for row in acc_rows(acc) {
+        let key = (row.0, row.1);
+        let e = best.entry(key).or_insert(f64::MIN);
+        *e = e.max(row.3);
+    }
+    for ((b, k), v) in best {
+        out.row(&[b.to_string(), k.to_string(), fnum(v)]);
+    }
+}
+
+/// Parse back the string rows (cheap + keeps Table the single source).
+fn acc_rows(t: &Table) -> impl Iterator<Item = (u32, usize, f64, f64)> + '_ {
+    t.rows_raw().iter().map(|r| {
+        (
+            r[0].parse().unwrap(),
+            r[1].parse().unwrap(),
+            r[2].parse().unwrap(),
+            r[3].parse().unwrap(),
+        )
+    })
+}

@@ -1,0 +1,67 @@
+//! Experiment harnesses — one per table/figure of the paper (DESIGN.md §4).
+//!
+//! Every harness prints paper-style rows through [`crate::report::Table`]
+//! and writes a CSV under `results/` so the figures can be re-plotted.
+//! `bbit-mh experiments all` regenerates everything recorded in
+//! EXPERIMENTS.md.
+//!
+//! | id | paper artifact | module |
+//! |----|----------------|--------|
+//! | `table1` | Table 1 (dataset stats) | [`table1`] |
+//! | `fig1`..`fig4` | b-bit accuracy/time grids (SVM, LR) | [`figs1_4`] |
+//! | `fig5`,`fig6` | VW vs b-bit accuracy | [`figs5_7`] |
+//! | `fig7` | VW vs 8-bit train time | [`figs5_7`] |
+//! | `fig8` | permutations vs 2-universal | [`fig8`] |
+//! | `table2` | loading vs preprocessing cost | [`table2`] |
+//! | `variance` | Eqs. 2/7/13/16 validation | [`variance`] |
+//! | `fig9` | VW-on-top-of-16-bit trick (§5.4) | [`fig9`] |
+
+pub mod context;
+pub mod fig8;
+pub mod fig9;
+pub mod figs1_4;
+pub mod figs5_7;
+pub mod table1;
+pub mod table2;
+pub mod variance;
+
+use crate::report::Table;
+use crate::Result;
+
+pub use context::{Ctx, Scale};
+
+/// Run one experiment by id; returns the rendered tables.
+pub fn run(id: &str, ctx: &mut Ctx) -> Result<Vec<Table>> {
+    match id {
+        "table1" => table1::run(ctx),
+        "fig1" | "fig2" => figs1_4::run_svm(ctx),
+        "fig3" | "fig4" => figs1_4::run_lr(ctx),
+        "fig5" => figs5_7::run_accuracy(ctx, context::SolverSel::Svm),
+        "fig6" => figs5_7::run_accuracy(ctx, context::SolverSel::Lr),
+        "fig7" => figs5_7::run_time(ctx),
+        "fig8" => fig8::run(ctx),
+        "table2" => table2::run(ctx),
+        "variance" => variance::run(ctx),
+        "fig9" => fig9::run(ctx),
+        other => Err(crate::Error::InvalidArg(format!(
+            "unknown experiment {other:?} (try: {})",
+            ALL_IDS.join(", ")
+        ))),
+    }
+}
+
+/// Every experiment id, in presentation order.
+pub const ALL_IDS: [&str; 9] = [
+    "table1", "fig1", "fig3", "fig5", "fig6", "fig7", "fig8", "table2", "variance",
+];
+
+/// Run everything (the `experiments all` path; fig2/fig4 are emitted by
+/// fig1/fig3 runs, fig9 is opt-in because of its memory footprint).
+pub fn run_all(ctx: &mut Ctx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for id in ALL_IDS {
+        eprintln!("--- experiment {id} ---");
+        tables.extend(run(id, ctx)?);
+    }
+    Ok(tables)
+}

@@ -1,0 +1,59 @@
+//! Table 1: dataset statistics (n, D, nonzeros median/mean, split).
+
+use crate::report::{fnum, Table};
+use crate::Result;
+
+use super::Ctx;
+
+pub fn run(ctx: &mut Ctx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 1 — dataset information (paper: webspam 24 GB n=350000 D=16.6M nnz~3889/3728 80/20; rcv1 200 GB n=677399 D=1.01e9 nnz~3051/12062 50/50)",
+        &["dataset", "examples (n)", "dims (D)", "nnz median", "nnz mean", "libsvm size", "split"],
+    );
+    {
+        let (tr, te) = ctx.webspam()?;
+        let mut all = tr.clone();
+        for ex in te.iter() {
+            all.push(&ex);
+        }
+        let s = all.stats();
+        t.row(&[
+            "webspam-like (gen)".into(),
+            s.n.to_string(),
+            s.dim.to_string(),
+            fnum(s.nnz_median),
+            fnum(s.nnz_mean),
+            human_bytes(s.bytes_libsvm),
+            "80% / 20%".into(),
+        ]);
+    }
+    {
+        let (tr, te) = ctx.rcv1()?;
+        let mut all = tr.clone();
+        for ex in te.iter() {
+            all.push(&ex);
+        }
+        let s = all.stats();
+        t.row(&[
+            "rcv1-like expanded (gen)".into(),
+            s.n.to_string(),
+            s.dim.to_string(),
+            fnum(s.nnz_median),
+            fnum(s.nnz_mean),
+            human_bytes(s.bytes_libsvm),
+            "50% / 50%".into(),
+        ]);
+    }
+    ctx.emit(&t, "table1.csv")?;
+    Ok(vec![t])
+}
+
+pub fn human_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.1} GB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.1} MB", b as f64 / (1u64 << 20) as f64)
+    } else {
+        format!("{:.1} KB", b as f64 / (1u64 << 10) as f64)
+    }
+}

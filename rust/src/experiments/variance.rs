@@ -1,0 +1,157 @@
+//! Variance validation: the closed forms of Eqs. 2, 7, 13, 16 against
+//! Monte-Carlo estimates from the actual hashers.
+//!
+//! This is the theory underpinning the paper's Section 5.3 storage
+//! argument (and the reason VW needs orders of magnitude more space):
+//! - minwise:  Var(R̂_M) = R(1−R)/k                          (Eq. 2)
+//! - b-bit:    Var(R̂_b) = P_b(1−P_b)/(k(1−C_{2,b})²)         (Eq. 7)
+//! - RP:       Var(â)   = (Σu₁²Σu₂² + a² + (s−3)Σu₁²u₂²)/k   (Eq. 13)
+//! - VW:       Var(â)   = (s−1)Σu₁²u₂² + (… − 2Σu₁²u₂²)/k    (Eq. 16)
+
+use crate::hashing::estimators;
+use crate::hashing::minwise::{bbit_truncate, resemblance, MinwiseHasher};
+use crate::hashing::rp::{estimate_inner_product, RandomProjection};
+use crate::hashing::vw::VwHasher;
+use crate::report::{fnum, Table};
+use crate::util::{stats, Rng};
+use crate::Result;
+
+use super::Ctx;
+
+/// A synthetic pair of binary sets with controllable resemblance.
+fn make_pair(d: u64, shared: usize, only: usize, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let sh: Vec<u32> = rng.sample_distinct(d / 2, shared).into_iter().map(|x| x as u32).collect();
+    let mut s1 = sh.clone();
+    let mut s2 = sh;
+    s1.extend(rng.sample_distinct(d / 4, only).into_iter().map(|x| x as u32 + (d / 2) as u32));
+    s2.extend(rng.sample_distinct(d / 4, only).into_iter().map(|x| x as u32 + (3 * d / 4) as u32));
+    s1.sort_unstable();
+    s2.sort_unstable();
+    (s1, s2)
+}
+
+pub fn run(ctx: &mut Ctx) -> Result<Vec<Table>> {
+    let trials = if ctx.scale.n_docs <= 500 { 200 } else { 600 };
+    let d = 1u64 << 26;
+    let mut rng = Rng::new(ctx.scale.seed ^ 0x7A8);
+    let (s1, s2) = make_pair(d, 240, 120, &mut rng);
+    let r = resemblance(&s1, &s2);
+    let (f1, f2) = (s1.len(), s2.len());
+    let a = r / (1.0 + r) * (f1 + f2) as f64;
+
+    // ---- minwise + b-bit (Eqs. 2 and 7) ----
+    let mut t1 = Table::new(
+        &format!(
+            "variance of resemblance estimators (R={:.3}, {} trials) — Eq. 2 / Eq. 7",
+            r, trials
+        ),
+        &["estimator", "k", "empirical var", "theory var", "ratio"],
+    );
+    for &k in &[64usize, 256] {
+        let mut est_full = Vec::new();
+        let mut est_b: std::collections::BTreeMap<u32, Vec<f64>> = Default::default();
+        for _ in 0..trials {
+            let mh = MinwiseHasher::draw(k, d, &mut rng);
+            let (z1, z2) = (mh.hash(&s1), mh.hash(&s2));
+            let matches = z1.iter().zip(&z2).filter(|(a, b)| a == b).count();
+            est_full.push(matches as f64 / k as f64);
+            for &b in &[1u32, 4, 8] {
+                let pb = z1
+                    .iter()
+                    .zip(&z2)
+                    .filter(|(x, y)| bbit_truncate(**x, b) == bbit_truncate(**y, b))
+                    .count() as f64
+                    / k as f64;
+                // Eq. 6 unbiased correction in the sparse limit
+                let c = 0.5f64.powi(b as i32);
+                est_b.entry(b).or_default().push((pb - c) / (1.0 - c));
+            }
+        }
+        t1.row(&[
+            "minwise (Eq. 2)".into(),
+            k.to_string(),
+            fnum(stats::variance(&est_full)),
+            fnum(estimators::var_minwise(r, k)),
+            fnum(stats::variance(&est_full) / estimators::var_minwise(r, k)),
+        ]);
+        for (b, est) in &est_b {
+            let theory = estimators::var_bbit(r, 0.0, 0.0, *b, k);
+            t1.row(&[
+                format!("{b}-bit (Eq. 7)"),
+                k.to_string(),
+                fnum(stats::variance(est)),
+                fnum(theory),
+                fnum(stats::variance(est) / theory),
+            ]);
+        }
+    }
+    ctx.emit(&t1, "variance_minwise.csv")?;
+
+    // ---- RP and VW (Eqs. 13 and 16), sweep s ----
+    let sum_sq1 = f1 as f64;
+    let sum_sq2 = f2 as f64;
+    let sum_prod_sq = a; // binary data: Σu₁²u₂² = |S1∩S2|
+    let mut t2 = Table::new(
+        &format!(
+            "variance of inner-product estimators (a={a:.0}, {trials} trials) — Eq. 13 / Eq. 16; s=1 makes them equal"
+        ),
+        &["estimator", "s", "k", "empirical var", "theory var", "ratio"],
+    );
+    let k = 128usize;
+    for &s in &[1.0f64, 3.0] {
+        let mut est_rp = Vec::new();
+        for _ in 0..trials {
+            let rp = RandomProjection::new(k, s, &mut rng);
+            let (v1, v2) = (rp.project_set(&s1), rp.project_set(&s2));
+            est_rp.push(estimate_inner_product(&v1, &v2));
+        }
+        let theory = estimators::var_rp(sum_sq1, sum_sq2, a, sum_prod_sq, s, k);
+        t2.row(&[
+            "RP (Eq. 13)".into(),
+            s.to_string(),
+            k.to_string(),
+            fnum(stats::variance(&est_rp)),
+            fnum(theory),
+            fnum(stats::variance(&est_rp) / theory),
+        ]);
+    }
+    for &s in &[1.0f64, 3.0] {
+        let mut est_vw = Vec::new();
+        let items1: Vec<(u32, f32)> = s1.iter().map(|&t| (t, 1.0)).collect();
+        let items2: Vec<(u32, f32)> = s2.iter().map(|&t| (t, 1.0)).collect();
+        for trial in 0..trials {
+            let h = VwHasher::draw(k, &mut rng);
+            let seed = trial as u64 ^ 0x5EED;
+            let (g1, g2) = (
+                h.hash_real_with_s(&items1, s, seed),
+                h.hash_real_with_s(&items2, s, seed),
+            );
+            est_vw.push(g1.iter().zip(&g2).map(|(a, b)| (*a as f64) * (*b as f64)).sum());
+        }
+        let theory = estimators::var_vw(sum_sq1, sum_sq2, a, sum_prod_sq, s, k);
+        t2.row(&[
+            "VW (Eq. 16)".into(),
+            s.to_string(),
+            k.to_string(),
+            fnum(stats::variance(&est_vw)),
+            fnum(theory),
+            fnum(stats::variance(&est_vw) / theory),
+        ]);
+    }
+    ctx.emit(&t2, "variance_rp_vw.csv")?;
+
+    // ---- Section 5.3: storage ratio at equal variance ----
+    let mut t3 = Table::new(
+        "storage needed by VW (32-bit entries) vs b-bit minwise at equal resemblance variance (§5.3)",
+        &["R", "b", "k_bbit", "VW/bbit storage ratio"],
+    );
+    for &rr in &[0.2f64, 0.5, 0.8] {
+        for &b in &[1u32, 4, 8] {
+            let ratio =
+                estimators::equal_variance_storage_ratio(rr, f1, f2, b, 200, 32);
+            t3.row(&[rr.to_string(), b.to_string(), "200".into(), fnum(ratio)]);
+        }
+    }
+    ctx.emit(&t3, "variance_storage_ratio.csv")?;
+    Ok(vec![t1, t2, t3])
+}

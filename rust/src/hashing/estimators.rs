@@ -1,0 +1,266 @@
+//! Estimators and their exact variance formulas (paper Eqs. 1–7, 12–16).
+//!
+//! These closed forms are what Section 5.3's "b-bit needs 10–100× less
+//! storage than VW at the same variance" argument rests on; the
+//! `experiments variance` harness checks every formula against Monte-Carlo
+//! estimates produced by the actual hashers.
+
+/// Eq. 2: Var(R̂_M) = R(1−R)/k — the k-permutation minwise estimator.
+pub fn var_minwise(r: f64, k: usize) -> f64 {
+    r * (1.0 - r) / k as f64
+}
+
+/// The A_{1,b}/A_{2,b} helper of Theorem 1 (Eq. 3), computed via
+/// `exp`/`ln_1p`/`exp_m1` so the `r → 0` limit is numerically exact
+/// (naive `powf` + subtraction cancels catastrophically for r ≲ 1e-8).
+fn a_coeff(r: f64, b: u32) -> f64 {
+    let pow = (1u64 << b) as f64;
+    // (1-r)^(2^b - 1) = exp((2^b - 1)·ln(1-r))
+    let log1m = (-r).ln_1p();
+    let one_minus = ((pow - 1.0) * log1m).exp();
+    // 1 - (1-r)^(2^b) = -expm1(2^b·ln(1-r))
+    let denom = -(pow * log1m).exp_m1();
+    r * one_minus / denom
+}
+
+/// Theorem 1 (Eq. 3): C_{1,b} and C_{2,b} for general sparsities
+/// r1 = f1/D, r2 = f2/D.
+pub fn c_coeffs(r1: f64, r2: f64, b: u32) -> (f64, f64) {
+    // Degenerate fully-sparse limit (Eq. 4): both coefficients → 2^-b.
+    if r1 <= 0.0 && r2 <= 0.0 {
+        let c = 0.5f64.powi(b as i32);
+        return (c, c);
+    }
+    let a1 = a_coeff(r1.max(1e-300), b);
+    let a2 = a_coeff(r2.max(1e-300), b);
+    let w1 = r1 / (r1 + r2);
+    let w2 = r2 / (r1 + r2);
+    let c1 = a1 * w2 + a2 * w1;
+    let c2 = a1 * w1 + a2 * w2;
+    (c1, c2)
+}
+
+/// Theorem 1 (Eq. 3): the b-bit collision probability
+/// P_b = C_{1,b} + (1 − C_{2,b})·R.
+pub fn p_b(r: f64, r1: f64, r2: f64, b: u32) -> f64 {
+    let (c1, c2) = c_coeffs(r1, r2, b);
+    c1 + (1.0 - c2) * r
+}
+
+/// Eq. 5: the sparse-data limit P_b = 2^−b + (1 − 2^−b)·R.
+pub fn p_b_sparse(r: f64, b: u32) -> f64 {
+    let c = 0.5f64.powi(b as i32);
+    c + (1.0 - c) * r
+}
+
+/// Eq. 6: unbiased R̂_b from an empirical P̂_b.
+pub fn r_hat_from_p_hat(p_hat: f64, r1: f64, r2: f64, b: u32) -> f64 {
+    let (c1, c2) = c_coeffs(r1, r2, b);
+    (p_hat - c1) / (1.0 - c2)
+}
+
+/// Eq. 7: Var(R̂_b) = P_b(1−P_b) / (k·(1−C_{2,b})²).
+pub fn var_bbit(r: f64, r1: f64, r2: f64, b: u32, k: usize) -> f64 {
+    let (c1, c2) = c_coeffs(r1, r2, b);
+    let pb = c1 + (1.0 - c2) * r;
+    pb * (1.0 - pb) / (k as f64 * (1.0 - c2) * (1.0 - c2))
+}
+
+/// Eq. 13: Var(â_rp,s) for random projections with the Eq.-10 family.
+/// `sum_sq1 = Σu1², sum_sq2 = Σu2², a = Σu1u2, sum_prod_sq = Σu1²u2²`.
+pub fn var_rp(
+    sum_sq1: f64,
+    sum_sq2: f64,
+    a: f64,
+    sum_prod_sq: f64,
+    s: f64,
+    k: usize,
+) -> f64 {
+    (sum_sq1 * sum_sq2 + a * a + (s - 3.0) * sum_prod_sq) / k as f64
+}
+
+/// Eq. 16: Var(â_vw,s); at s = 1 this reduces to Eq. 13's value
+/// (`var_rp` with s = 1).
+pub fn var_vw(
+    sum_sq1: f64,
+    sum_sq2: f64,
+    a: f64,
+    sum_prod_sq: f64,
+    s: f64,
+    k: usize,
+) -> f64 {
+    (s - 1.0) * sum_prod_sq
+        + (sum_sq1 * sum_sq2 + a * a - 2.0 * sum_prod_sq) / k as f64
+}
+
+/// Storage (bits per data point) of b-bit minwise hashing: exactly b·k.
+pub fn storage_bits_bbit(b: u32, k: usize) -> u64 {
+    b as u64 * k as u64
+}
+
+/// Storage (bits per data point) of VW with `bins` dense entries stored at
+/// `bits_per_entry` (the paper budgets 16 or 32; Section 5.3).
+pub fn storage_bits_vw(bins: usize, bits_per_entry: u32) -> u64 {
+    bins as u64 * bits_per_entry as u64
+}
+
+/// Storage ratio VW/b-bit needed for *equal variance* on resemblance
+/// estimation of two binary sets — the Section 5.3 headline.  Computes the
+/// k_vw for which Var(â_vw)/normalization matches Var(R̂_b) at k_b samples,
+/// then compares bits.
+pub fn equal_variance_storage_ratio(
+    r: f64,
+    f1: usize,
+    f2: usize,
+    b: u32,
+    k_b: usize,
+    bits_per_vw_entry: u32,
+) -> f64 {
+    let a = r / (1.0 + r) * (f1 + f2) as f64; // |S1∩S2| from R
+    let target = var_bbit(r, 0.0, 0.0, b, k_b); // sparse limit
+    // VW estimates a, not R; convert Var(â) to Var(R̂) via the delta
+    // method on R = a/(f1+f2−a): dR/da = (f1+f2)/(f1+f2−a)².
+    let denom = (f1 + f2) as f64 - a;
+    let drda = (f1 + f2) as f64 / (denom * denom);
+    // binary data: Σu² = f, Σu1²u2² = a
+    let var_a_at = |k: f64| (f1 as f64 * f2 as f64 + a * a - 2.0 * a) / k;
+    // solve var_a(k)·drda² = target  →  k = var_a(1)·drda²/target
+    let k_vw = var_a_at(1.0) * drda * drda / target;
+    storage_bits_vw(k_vw.ceil() as usize, bits_per_vw_entry) as f64
+        / storage_bits_bbit(b, k_b) as f64
+}
+
+/// 3-way resemblance R₃ = |S1∩S2∩S3| / |S1∪S2∪S3| from full minwise
+/// values (the extension of Section 2 the paper cites as [24]): the
+/// minimum of a permuted union is uniform over the union, so the event
+/// "all three minwise values collide" has probability exactly R₃.
+/// `z1/z2/z3` are k-wide minwise vectors from the *same* hash family.
+pub fn three_way_resemblance_hat(z1: &[u64], z2: &[u64], z3: &[u64]) -> f64 {
+    debug_assert!(z1.len() == z2.len() && z2.len() == z3.len());
+    if z1.is_empty() {
+        return 0.0;
+    }
+    let hits = z1
+        .iter()
+        .zip(z2)
+        .zip(z3)
+        .filter(|((a, b), c)| a == b && b == c)
+        .count();
+    hits as f64 / z1.len() as f64
+}
+
+/// Variance of the 3-way estimator: Bernoulli with p = R₃ ⇒ R₃(1−R₃)/k.
+pub fn var_three_way(r3: f64, k: usize) -> f64 {
+    r3 * (1.0 - r3) / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_limit_matches_theorem() {
+        // Eq. 4: as r1, r2 → 0, C_{1,b} = C_{2,b} = 2^−b.
+        for b in [1u32, 2, 4, 8, 16] {
+            let (c1, c2) = c_coeffs(1e-12, 1e-12, b);
+            let expect = 0.5f64.powi(b as i32);
+            assert!((c1 - expect).abs() < 1e-6, "b={b} c1={c1}");
+            assert!((c2 - expect).abs() < 1e-6);
+            assert!((p_b(0.3, 1e-12, 1e-12, b) - p_b_sparse(0.3, b)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pb_monotone_in_r() {
+        for b in [1u32, 4, 8] {
+            let mut last = 0.0;
+            for i in 0..=10 {
+                let r = i as f64 / 10.0;
+                let p = p_b_sparse(r, b);
+                assert!(p >= last);
+                last = p;
+            }
+            assert!((p_b_sparse(1.0, b) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn var_bbit_decreases_with_b_and_k() {
+        let r = 0.4;
+        assert!(var_bbit(r, 0.0, 0.0, 1, 100) > var_bbit(r, 0.0, 0.0, 8, 100));
+        assert!(var_bbit(r, 0.0, 0.0, 4, 100) > var_bbit(r, 0.0, 0.0, 4, 1000));
+    }
+
+    #[test]
+    fn vw_variance_equals_rp_at_s1() {
+        // the Section 5.2 punchline
+        let (f1, f2, a, spsq) = (1000.0, 800.0, 300.0, 300.0);
+        for k in [10usize, 100, 1000] {
+            let v_rp = var_rp(f1, f2, a, spsq, 1.0, k);
+            let v_vw = var_vw(f1, f2, a, spsq, 1.0, k);
+            assert!((v_rp - v_vw).abs() / v_rp < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn vw_variance_has_non_vanishing_term_for_s_gt_1() {
+        let (f1, f2, a, spsq) = (1000.0, 800.0, 300.0, 300.0);
+        let v = var_vw(f1, f2, a, spsq, 3.0, 1_000_000_000);
+        assert!(v > 2.0 * spsq - 1e-9, "residual term must survive k→∞: {v}");
+    }
+
+    #[test]
+    fn r_hat_inverts_p_b() {
+        for b in [1u32, 2, 8] {
+            for r in [0.1, 0.5, 0.9] {
+                let (r1, r2) = (0.01, 0.02);
+                let p = p_b(r, r1, r2, b);
+                let r_back = r_hat_from_p_hat(p, r1, r2, b);
+                assert!((r_back - r).abs() < 1e-10, "b={b} r={r} got {r_back}");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_ratio_is_large() {
+        // Section 5.3: VW needs 10–100× (or more) the storage of b-bit
+        // minwise hashing at equal variance for typical R.
+        let ratio = equal_variance_storage_ratio(0.5, 4000, 4000, 8, 200, 32);
+        assert!(ratio > 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn three_way_estimator_is_unbiased() {
+        use crate::hashing::minwise::MinwiseHasher;
+        use crate::util::Rng;
+        let mut rng = Rng::new(0x333);
+        let d = 1u64 << 24;
+        let core: Vec<u32> =
+            rng.sample_distinct(d / 2, 120).into_iter().map(|x| x as u32).collect();
+        let mut sets: Vec<Vec<u32>> = (0..3).map(|_| core.clone()).collect();
+        for (i, s) in sets.iter_mut().enumerate() {
+            s.extend(
+                rng.sample_distinct(d / 8, 60)
+                    .into_iter()
+                    .map(|x| x as u32 + ((i as u32 + 1) << 27)),
+            );
+            s.sort_unstable();
+        }
+        // ground truth: |∩| = 120, |∪| = 120 + 3·60
+        let r3 = 120.0 / (120.0 + 180.0) as f64;
+        let k = 4096;
+        let mh = MinwiseHasher::draw(k, d, &mut rng);
+        let zs: Vec<Vec<u64>> = sets.iter().map(|s| mh.hash(s)).collect();
+        let r3_hat = three_way_resemblance_hat(&zs[0], &zs[1], &zs[2]);
+        let sigma = var_three_way(r3, k).sqrt();
+        assert!((r3_hat - r3).abs() < 5.0 * sigma, "{r3_hat} vs {r3}");
+        assert_eq!(three_way_resemblance_hat(&[], &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn var_minwise_eq2() {
+        assert!((var_minwise(0.5, 100) - 0.0025).abs() < 1e-12);
+        assert_eq!(var_minwise(0.0, 10), 0.0);
+        assert_eq!(var_minwise(1.0, 10), 0.0);
+    }
+}

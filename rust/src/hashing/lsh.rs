@@ -1,0 +1,232 @@
+//! Banded LSH over minwise signatures: near-neighbor search and
+//! near-duplicate detection.
+//!
+//! Section 6 of the paper: *"Once the hashed data have been generated,
+//! they can be used and re-used for many tasks such as supervised
+//! learning, clustering, duplicate detections, near-neighbor search"* —
+//! this module is that re-use path.  Classic banding (Broder'97 /
+//! Indyk–Motwani): split the k-wide signature into `bands` bands of
+//! `rows_per_band` values; two documents become candidates iff they agree
+//! on *all* rows of at least one band.  For resemblance R the candidate
+//! probability is `1 − (1 − R^r)^b` — the familiar S-curve whose threshold
+//! sits near `(1/b)^(1/r)`.
+//!
+//! Works on full minwise values or on b-bit codes (b ≥ 4 recommended for
+//! banding: 1-bit rows collide randomly half the time, so use more rows).
+
+use std::collections::HashMap;
+
+use crate::encode::packed::PackedCodes;
+
+/// Banding configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LshConfig {
+    pub bands: usize,
+    pub rows_per_band: usize,
+}
+
+impl LshConfig {
+    /// Probability two documents with resemblance `r` become candidates.
+    pub fn candidate_probability(&self, r: f64) -> f64 {
+        1.0 - (1.0 - r.powi(self.rows_per_band as i32)).powi(self.bands as i32)
+    }
+
+    /// The S-curve threshold `(1/b)^(1/r)` — resemblance at which the
+    /// candidate probability crosses ~0.5.
+    pub fn threshold(&self) -> f64 {
+        (1.0 / self.bands as f64).powf(1.0 / self.rows_per_band as f64)
+    }
+
+    pub fn signature_width(&self) -> usize {
+        self.bands * self.rows_per_band
+    }
+}
+
+/// An LSH index over b-bit code rows.
+pub struct LshIndex<'a> {
+    cfg: LshConfig,
+    codes: &'a PackedCodes,
+    /// One hash table per band: band-key → row ids.
+    tables: Vec<HashMap<u64, Vec<u32>>>,
+}
+
+impl<'a> LshIndex<'a> {
+    /// Build the index; `codes.k` must be ≥ `cfg.signature_width()`.
+    pub fn build(codes: &'a PackedCodes, cfg: LshConfig) -> crate::Result<Self> {
+        if codes.k < cfg.signature_width() {
+            return Err(crate::Error::InvalidArg(format!(
+                "signature needs {} codes, have k={}",
+                cfg.signature_width(),
+                codes.k
+            )));
+        }
+        let mut tables: Vec<HashMap<u64, Vec<u32>>> = vec![HashMap::new(); cfg.bands];
+        for row in 0..codes.n {
+            for (band, table) in tables.iter_mut().enumerate() {
+                let key = band_key(codes, row, band, cfg.rows_per_band);
+                table.entry(key).or_default().push(row as u32);
+            }
+        }
+        Ok(LshIndex { cfg, codes, tables })
+    }
+
+    pub fn config(&self) -> LshConfig {
+        self.cfg
+    }
+
+    /// Candidate rows for a query signature (deduplicated, sorted; the
+    /// query row itself is included if indexed).
+    pub fn candidates_for_row(&self, row: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (band, table) in self.tables.iter().enumerate() {
+            let key = band_key(self.codes, row, band, self.cfg.rows_per_band);
+            if let Some(ids) = table.get(&key) {
+                out.extend_from_slice(ids);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// All near-duplicate *pairs* (i < j) whose verified code-collision
+    /// fraction is ≥ `min_code_agreement` (estimating P_b of Eq. 3/5 —
+    /// candidates are verified against the full signature, the standard
+    /// LSH filter-then-verify step).
+    pub fn near_duplicate_pairs(&self, min_code_agreement: f64) -> Vec<(u32, u32, f64)> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for table in &self.tables {
+            for ids in table.values() {
+                if ids.len() < 2 {
+                    continue;
+                }
+                for (a_pos, &i) in ids.iter().enumerate() {
+                    for &j in &ids[a_pos + 1..] {
+                        let key = ((i as u64) << 32) | j as u64;
+                        if !seen.insert(key) {
+                            continue;
+                        }
+                        let agreement = code_agreement(self.codes, i as usize, j as usize);
+                        if agreement >= min_code_agreement {
+                            out.push((i, j, agreement));
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        out
+    }
+}
+
+/// Mix the `rows_per_band` codes of one band into a 64-bit table key.
+fn band_key(codes: &PackedCodes, row: usize, band: usize, rows_per_band: usize) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64 ^ (band as u64) << 32;
+    for r in 0..rows_per_band {
+        let c = codes.get(row, band * rows_per_band + r) as u64;
+        h ^= c.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// Fraction of agreeing codes between two rows — the P̂_b estimate.
+pub fn code_agreement(codes: &PackedCodes, i: usize, j: usize) -> f64 {
+    let hits = (0..codes.k).filter(|&q| codes.get(i, q) == codes.get(j, q)).count();
+    hits as f64 / codes.k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::minwise::BbitMinHash;
+    use crate::util::Rng;
+
+    /// Corpus of documents where pairs (2i, 2i+1) are near-duplicates and
+    /// everything else is unrelated.
+    fn dup_codes(n_pairs: usize, b: u32, k: usize, seed: u64) -> PackedCodes {
+        let mut rng = Rng::new(seed);
+        let d = 1u64 << 24;
+        let bb = BbitMinHash::draw(k, b, d, &mut rng);
+        let mut pc = PackedCodes::new(b, k);
+        for _ in 0..n_pairs {
+            let base: Vec<u32> =
+                rng.sample_distinct(d, 300).into_iter().map(|x| x as u32).collect();
+            let mut near = base.clone();
+            // perturb ~5% of the elements → R ≈ 0.90
+            for _ in 0..15 {
+                let pos = rng.below_usize(near.len());
+                near[pos] = rng.below(d) as u32;
+            }
+            near.sort_unstable();
+            near.dedup();
+            pc.push_row(&bb.codes(&base)).unwrap();
+            pc.push_row(&bb.codes(&near)).unwrap();
+        }
+        pc
+    }
+
+    #[test]
+    fn s_curve_math() {
+        let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+        assert_eq!(cfg.signature_width(), 64);
+        assert!(cfg.candidate_probability(0.95) > 0.99);
+        assert!(cfg.candidate_probability(0.2) < 0.05);
+        let th = cfg.threshold();
+        assert!((cfg.candidate_probability(th) - 0.63).abs() < 0.05); // 1-1/e
+    }
+
+    #[test]
+    fn finds_planted_duplicates_with_few_false_positives() {
+        let k = 64;
+        let pc = dup_codes(25, 8, k, 0xD0B);
+        let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+        let idx = LshIndex::build(&pc, cfg).unwrap();
+        let pairs = idx.near_duplicate_pairs(0.6);
+        // every planted pair found…
+        for i in 0..25u32 {
+            assert!(
+                pairs.iter().any(|&(a, b, _)| (a, b) == (2 * i, 2 * i + 1)),
+                "missing planted pair {i}"
+            );
+        }
+        // …and nothing else (verification step kills chance candidates)
+        assert_eq!(pairs.len(), 25, "{pairs:?}");
+        for &(_, _, agreement) in &pairs {
+            assert!(agreement > 0.6);
+        }
+    }
+
+    #[test]
+    fn candidates_include_self_and_duplicate() {
+        let pc = dup_codes(5, 8, 64, 0xD1B);
+        let idx =
+            LshIndex::build(&pc, LshConfig { bands: 16, rows_per_band: 4 }).unwrap();
+        let cands = idx.candidates_for_row(0);
+        assert!(cands.contains(&0));
+        assert!(cands.contains(&1), "near-duplicate must be a candidate");
+    }
+
+    #[test]
+    fn rejects_too_narrow_signature() {
+        let pc = dup_codes(2, 8, 16, 1);
+        assert!(LshIndex::build(&pc, LshConfig { bands: 8, rows_per_band: 4 }).is_err());
+    }
+
+    #[test]
+    fn code_agreement_estimates_pb() {
+        // agreement between unrelated rows ≈ 2^-b (Eq. 5 with R = 0)
+        let pc = dup_codes(50, 4, 64, 0xD2B);
+        let mut total = 0.0;
+        let mut count = 0;
+        for i in (0..100).step_by(2) {
+            for j in ((i + 2)..100).step_by(2) {
+                total += code_agreement(&pc, i, j);
+                count += 1;
+            }
+        }
+        let mean = total / count as f64;
+        assert!((mean - 1.0 / 16.0).abs() < 0.02, "{mean}");
+    }
+}

@@ -1,0 +1,26 @@
+//! Hashing substrates: everything Section 2, 5 and 7 of the paper depend on.
+//!
+//! - [`universal`]: 2-universal hash family `h(t) = ((c1 + c2·t) mod p) mod D`
+//!   (paper Eq. 17) — the industry-standard replacement for permutations.
+//! - [`permutation`]: *true* random permutations, both table-backed
+//!   (Fisher–Yates) and storage-free (Feistel bijection) — the Figure 8
+//!   comparator.
+//! - [`minwise`]: k-way minwise hashing and b-bit truncation (Section 2).
+//! - [`vw`]: the VW hashing algorithm (signed Count-Min, Eq. 14).
+//! - [`rp`]: random projections with the sparse `s`-family (Eq. 11).
+//! - [`estimators`]: resemblance/inner-product estimators and their exact
+//!   variance formulas (Eqs. 2, 3–7, 13, 16) used by the variance bench.
+//! - [`lsh`]: banded LSH over the signatures — the near-duplicate /
+//!   near-neighbor re-use path of Section 6.
+
+pub mod estimators;
+pub mod lsh;
+pub mod minwise;
+pub mod permutation;
+pub mod rp;
+pub mod universal;
+pub mod vw;
+
+pub use minwise::{BbitMinHash, MinwiseHasher};
+pub use universal::{UniversalHash, PRIME};
+pub use vw::VwHasher;

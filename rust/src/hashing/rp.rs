@@ -1,0 +1,142 @@
+//! Random projections with the sparse `s`-family (paper Section 5.1).
+//!
+//! Projects a D-dim vector to k dims with `v_j = Σ_i u_i · r_{ij}` where
+//! `r_{ij} ∈ {±√s w.p. 1/(2s), 0 w.p. 1−1/s}` (Eq. 11; s = 1 is the dense
+//! Rademacher case, s = 3 is Achlioptas, large s is "very sparse random
+//! projections").  `r_{ij}` is drawn deterministically from `(seed, i, j)`
+//! so the implicit D×k matrix is never materialized — required for
+//! D ≈ 2^30.
+//!
+//! The variance experiment (`experiments variance`) uses this module to
+//! verify Eq. 13 and its identity with the VW variance (Eq. 16) at s = 1.
+
+use crate::util::Rng;
+
+/// Implicit D×k sparse projection matrix.
+#[derive(Clone, Debug)]
+pub struct RandomProjection {
+    pub k: usize,
+    pub s: f64,
+    seed: u64,
+}
+
+impl RandomProjection {
+    pub fn new(k: usize, s: f64, rng: &mut Rng) -> Self {
+        assert!(s >= 1.0);
+        RandomProjection { k, s, seed: rng.next_u64() }
+    }
+
+    /// Matrix entry r_{ij} (deterministic in (seed, i, j)).
+    #[inline]
+    pub fn entry(&self, i: u32, j: u32) -> f64 {
+        let mut z = (i as u64) << 32 | j as u64;
+        z ^= self.seed;
+        z = (z ^ (z >> 33)).wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        z = (z ^ (z >> 33)).wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+        z ^= z >> 33;
+        let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let inv2s = 1.0 / (2.0 * self.s);
+        if u < inv2s {
+            self.s.sqrt()
+        } else if u < 2.0 * inv2s {
+            -self.s.sqrt()
+        } else {
+            0.0
+        }
+    }
+
+    /// Project a sparse vector given as (index, value) pairs.
+    pub fn project(&self, items: &[(u32, f32)]) -> Vec<f64> {
+        let mut v = vec![0.0f64; self.k];
+        for &(i, u) in items {
+            if u == 0.0 {
+                continue;
+            }
+            for (j, vj) in v.iter_mut().enumerate() {
+                let r = self.entry(i, j as u32);
+                if r != 0.0 {
+                    *vj += u as f64 * r;
+                }
+            }
+        }
+        v
+    }
+
+    /// Project a binary set (all values 1).
+    pub fn project_set(&self, set: &[u32]) -> Vec<f64> {
+        let items: Vec<(u32, f32)> = set.iter().map(|&t| (t, 1.0)).collect();
+        self.project(&items)
+    }
+}
+
+/// Unbiased inner-product estimator `â = (1/k) Σ v1_j v2_j` (Eq. 12).
+pub fn estimate_inner_product(v1: &[f64], v2: &[f64]) -> f64 {
+    debug_assert_eq!(v1.len(), v2.len());
+    v1.iter().zip(v2).map(|(a, b)| a * b).sum::<f64>() / v1.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_have_unit_variance_and_zero_mean() {
+        let mut rng = Rng::new(81);
+        for &s in &[1.0, 3.0, 10.0] {
+            let rp = RandomProjection::new(1, s, &mut rng);
+            let n = 400_000;
+            let (mut sum, mut sumsq) = (0.0, 0.0);
+            for i in 0..n {
+                let r = rp.entry(i, 0);
+                sum += r;
+                sumsq += r * r;
+            }
+            let mean = sum / n as f64;
+            let var = sumsq / n as f64 - mean * mean;
+            assert!(mean.abs() < 0.02, "s={s} mean {mean}");
+            assert!((var - 1.0).abs() < 0.03, "s={s} var {var}");
+        }
+    }
+
+    #[test]
+    fn inner_product_unbiased() {
+        // E[â] = a over independent seeds (Eq. 12).
+        let mut rng = Rng::new(83);
+        let d = 1u64 << 20;
+        let shared: Vec<u32> =
+            rng.sample_distinct(d, 50).into_iter().map(|x| x as u32).collect();
+        let mut s1 = shared.clone();
+        let mut s2 = shared;
+        s1.extend(rng.sample_distinct(d, 30).into_iter().map(|x| x as u32 | 1 << 21));
+        s2.extend(rng.sample_distinct(d, 30).into_iter().map(|x| x as u32 | 1 << 22));
+        let a_true = 50.0;
+        let k = 64;
+        let trials = 200;
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            let rp = RandomProjection::new(k, 1.0, &mut rng);
+            let (v1, v2) = (rp.project_set(&s1), rp.project_set(&s2));
+            sum += estimate_inner_product(&v1, &v2);
+        }
+        let est = sum / trials as f64;
+        // Var ≈ (f1 f2 + a²)/k (Eq. 13 with s=1, binary data)
+        let var = (80.0 * 80.0 + a_true * a_true) / k as f64;
+        let tol = 5.0 * (var / trials as f64).sqrt();
+        assert!((est - a_true).abs() < tol, "est {est} tol {tol}");
+    }
+
+    #[test]
+    fn projection_is_linear() {
+        let mut rng = Rng::new(89);
+        let rp = RandomProjection::new(16, 3.0, &mut rng);
+        let a = vec![(1u32, 1.0f32), (5, 2.0)];
+        let b = vec![(1u32, 2.0f32), (9, -1.0)];
+        let combined = vec![(1u32, 3.0f32), (5, 2.0), (9, -1.0)];
+        let va = rp.project(&a);
+        let vb = rp.project(&b);
+        let vc = rp.project(&combined);
+        for j in 0..16 {
+            assert!((va[j] + vb[j] - vc[j]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! 2-universal hashing (paper Eq. 17 and Section 7).
+//!
+//! `h(t) = ((c1 + c2·t) mod p) mod D` with prime `p`, `c1 ∈ [0, p)`,
+//! `c2 ∈ [1, p)`.  We use the Mersenne prime `p = 2^31 − 1`, the same value
+//! baked into the Pallas kernels (`python/compile/kernels/ref.py::PRIME`),
+//! so rust and the AOT artifacts produce **identical** hash values — the
+//! cross-layer integration tests rely on this.
+//!
+//! The modular reduction uses the classic Mersenne shift-add trick
+//! (`x mod (2^s − 1)` via fold + conditional subtract), avoiding the
+//! hardware divide on the hot path.
+
+use crate::util::Rng;
+
+/// The Mersenne prime 2^31 − 1 shared with the Pallas kernels.
+pub const PRIME: u64 = (1 << 31) - 1;
+
+/// Reduce `x mod (2^31 − 1)` without a divide.
+///
+/// Valid for any `x < 2^62` (two folds bring it under `2·p`, the final
+/// conditional subtract finishes).  All callers produce
+/// `c1 + c2·t ≤ (p−1) + (p−1)·(D−1) < 2^62` for `D ≤ 2^31`.
+#[inline(always)]
+pub fn mod_mersenne31(x: u64) -> u64 {
+    // each fold: x = (x & p) + (x >> 31), strictly decreasing above p
+    let x = (x & PRIME) + (x >> 31);
+    let x = (x & PRIME) + (x >> 31);
+    if x >= PRIME {
+        x - PRIME
+    } else {
+        x
+    }
+}
+
+/// One member of the 2-universal family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UniversalHash {
+    pub c1: u32,
+    pub c2: u32,
+}
+
+impl UniversalHash {
+    /// Draw parameters uniformly: `c1 ∈ [0, p)`, `c2 ∈ [1, p)`.
+    pub fn draw(rng: &mut Rng) -> Self {
+        UniversalHash {
+            c1: rng.range_u32(0, PRIME as u32),
+            c2: rng.range_u32(1, PRIME as u32),
+        }
+    }
+
+    /// `((c1 + c2·t) mod p)` — the raw hash in `[0, p)`.
+    #[inline(always)]
+    pub fn raw(&self, t: u32) -> u64 {
+        mod_mersenne31(self.c1 as u64 + self.c2 as u64 * t as u64)
+    }
+
+    /// `h(t) = raw(t) mod d` — rehashed position in `[0, d)`.
+    #[inline(always)]
+    pub fn hash(&self, t: u32, d: u64) -> u64 {
+        // d is a power of two in all our configurations → mask;
+        // fall back to % for generality.
+        if d.is_power_of_two() {
+            self.raw(t) & (d - 1)
+        } else {
+            self.raw(t) % d
+        }
+    }
+}
+
+/// A batch of `k` independent 2-universal hash functions.  Storing the
+/// whole family is 8k bytes — the paper's point (Section 7) is that this
+/// replaces k permutation tables of 4·D bytes each.
+#[derive(Clone, Debug)]
+pub struct UniversalFamily {
+    pub fns: Vec<UniversalHash>,
+    pub d: u64,
+}
+
+impl UniversalFamily {
+    pub fn draw(k: usize, d: u64, rng: &mut Rng) -> Self {
+        UniversalFamily {
+            fns: (0..k).map(|_| UniversalHash::draw(rng)).collect(),
+            d,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.fns.len()
+    }
+
+    /// The (c1, c2) parameter arrays in the layout the PJRT minhash
+    /// artifact expects as inputs.
+    pub fn param_arrays(&self) -> (Vec<u32>, Vec<u32>) {
+        (
+            self.fns.iter().map(|h| h.c1).collect(),
+            self.fns.iter().map(|h| h.c2).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mod_mersenne_matches_divide() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100_000 {
+            let x = rng.next_u64() >> 2; // < 2^62
+            assert_eq!(mod_mersenne31(x), x % PRIME, "x={x}");
+        }
+        // boundary cases
+        for x in [0, 1, PRIME - 1, PRIME, PRIME + 1, (1 << 62) - 1] {
+            assert_eq!(mod_mersenne31(x), x % PRIME, "x={x}");
+        }
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_in_range() {
+        let mut rng = Rng::new(5);
+        let h = UniversalHash::draw(&mut rng);
+        let d = 1u64 << 30;
+        for t in [0u32, 1, 12345, u32::MAX >> 2] {
+            let v = h.hash(t, d);
+            assert!(v < d);
+            assert_eq!(v, h.hash(t, d));
+        }
+    }
+
+    #[test]
+    fn family_collision_rate_is_universal() {
+        // For a 2-universal family, Pr[h(a) == h(b)] ≈ 1/d for a != b.
+        let mut rng = Rng::new(7);
+        let d = 1024u64;
+        let trials = 20_000;
+        let mut collisions = 0;
+        for _ in 0..trials {
+            let h = UniversalHash::draw(&mut rng);
+            let a = rng.range_u32(0, 1 << 30);
+            let b = rng.range_u32(0, 1 << 30);
+            if a != b && h.hash(a, d) == h.hash(b, d) {
+                collisions += 1;
+            }
+        }
+        let rate = collisions as f64 / trials as f64;
+        assert!(rate < 3.0 / d as f64, "rate {rate}");
+    }
+
+    #[test]
+    fn non_power_of_two_domain() {
+        let mut rng = Rng::new(11);
+        let h = UniversalHash::draw(&mut rng);
+        for t in 0..1000u32 {
+            assert!(h.hash(t, 999) < 999);
+        }
+    }
+
+    #[test]
+    fn param_arrays_roundtrip() {
+        let mut rng = Rng::new(13);
+        let fam = UniversalFamily::draw(8, 1 << 20, &mut rng);
+        let (c1, c2) = fam.param_arrays();
+        assert_eq!(c1.len(), 8);
+        for (i, f) in fam.fns.iter().enumerate() {
+            assert_eq!(c1[i], f.c1);
+            assert_eq!(c2[i], f.c2);
+            assert!(f.c2 >= 1);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! The VW hashing algorithm (paper Section 5.2, Eq. 14).
+//!
+//! Signed Count-Min: every feature index t is hashed to a bin
+//! `bin(t) = ((a1 + a2·t) mod p) mod k` and accumulated with a ±1 sign
+//! from an independent 2-universal hash (the bias-correcting `r_t` of
+//! Weinberger et al., which is the `s = 1` member of the sparse-projection
+//! family — see Eq. 16 and the discussion around it).
+//!
+//! For the paper's binary data the hashed vector is
+//! `g_j = Σ_{t∈S} sign(t)·1{bin(t) = j}`.  The generalized `s ≥ 1` variant
+//! (used by the variance experiment to demonstrate the non-vanishing
+//! `(s−1)Σu²u²` term) drops elements with probability `1 − 1/s` and scales
+//! survivors by √s, exactly Eq. 11 applied per-coordinate.
+//!
+//! Matches the Pallas `vw` kernel bit-for-bit on the s = 1 path (same
+//! prime, same parameter layout).
+
+use crate::hashing::universal::{mod_mersenne31, UniversalHash};
+use crate::util::Rng;
+
+/// VW feature hasher with `k` bins.
+#[derive(Clone, Debug)]
+pub struct VwHasher {
+    pub bin_hash: UniversalHash,
+    pub sign_hash: UniversalHash,
+    pub bins: usize,
+}
+
+impl VwHasher {
+    pub fn draw(bins: usize, rng: &mut Rng) -> Self {
+        assert!(bins >= 1);
+        VwHasher {
+            bin_hash: UniversalHash::draw(rng),
+            sign_hash: UniversalHash::draw(rng),
+            bins,
+        }
+    }
+
+    /// The (a1, a2, s1, s2) array the PJRT `vw` artifact takes as input.
+    pub fn param_array(&self) -> [u32; 4] {
+        [self.bin_hash.c1, self.bin_hash.c2, self.sign_hash.c1, self.sign_hash.c2]
+    }
+
+    #[inline]
+    pub fn bin(&self, t: u32) -> usize {
+        (self.bin_hash.raw(t) % self.bins as u64) as usize
+    }
+
+    #[inline]
+    pub fn sign(&self, t: u32) -> f32 {
+        // even raw hash → +1, odd → −1 (matches the kernel)
+        if self.sign_hash.raw(t) & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Hash a binary set into a dense `k`-bin vector (accumulates into
+    /// `out`, which must be zeroed by the caller; length `bins`).
+    pub fn hash_into(&self, set: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.bins);
+        let (a1, a2) = (self.bin_hash.c1 as u64, self.bin_hash.c2 as u64);
+        let (s1, s2) = (self.sign_hash.c1 as u64, self.sign_hash.c2 as u64);
+        for &t in set {
+            let hb = (mod_mersenne31(a1 + a2 * t as u64) % self.bins as u64) as usize;
+            let sg = if mod_mersenne31(s1 + s2 * t as u64) & 1 == 0 {
+                1.0f32
+            } else {
+                -1.0f32
+            };
+            out[hb] += sg;
+        }
+    }
+
+    /// Allocating wrapper around [`hash_into`].
+    pub fn hash(&self, set: &[u32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.bins];
+        self.hash_into(set, &mut out);
+        out
+    }
+
+    /// Sparse output as sorted (bin, value) pairs with zero bins dropped —
+    /// what the CSR assembly in the pipeline consumes when `bins` is large.
+    pub fn hash_sparse(&self, set: &[u32]) -> Vec<(u32, f32)> {
+        let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(set.len());
+        for &t in set {
+            pairs.push((self.bin(t) as u32, self.sign(t)));
+        }
+        pairs.sort_unstable_by_key(|p| p.0);
+        let mut out: Vec<(u32, f32)> = Vec::with_capacity(pairs.len());
+        for (b, v) in pairs {
+            match out.last_mut() {
+                Some(last) if last.0 == b => last.1 += v,
+                _ => out.push((b, v)),
+            }
+        }
+        out.retain(|&(_, v)| v != 0.0);
+        out
+    }
+
+    /// Generalized-`s` variant for *real-valued* vectors (Eq. 14 with the
+    /// Eq. 11 sparse distribution): used by the variance experiment.  Each
+    /// coordinate's `r_t ∈ {±√s w.p. 1/(2s), 0 w.p. 1−1/s}` is drawn
+    /// deterministically from `(seed, t)`.
+    pub fn hash_real_with_s(
+        &self,
+        items: &[(u32, f32)],
+        s: f64,
+        seed: u64,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.bins];
+        for &(t, u) in items {
+            let r = sparse_r(t, s, seed);
+            if r != 0.0 {
+                out[self.bin(t)] += u * r as f32;
+            }
+        }
+        out
+    }
+}
+
+/// The Eq.-11 random variable r_t, drawn deterministically from (t, seed):
+/// ±√s each with probability 1/(2s), 0 otherwise.  s = 1 gives the ±1
+/// Rademacher variable VW requires.
+pub fn sparse_r(t: u32, s: f64, seed: u64) -> f64 {
+    debug_assert!(s >= 1.0);
+    let mut z = (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seed;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    if u < 1.0 / (2.0 * s) {
+        s.sqrt()
+    } else if u < 1.0 / s {
+        -s.sqrt()
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_and_sparse_agree() {
+        let mut rng = Rng::new(61);
+        let h = VwHasher::draw(128, &mut rng);
+        let set: Vec<u32> =
+            rng.sample_distinct(1 << 28, 300).into_iter().map(|x| x as u32).collect();
+        let dense = h.hash(&set);
+        let sparse = h.hash_sparse(&set);
+        let mut from_sparse = vec![0.0f32; 128];
+        for (b, v) in sparse {
+            from_sparse[b as usize] = v;
+        }
+        assert_eq!(dense, from_sparse);
+    }
+
+    #[test]
+    fn mass_conservation() {
+        // each item contributes ±1 to exactly one bin
+        let mut rng = Rng::new(67);
+        let h = VwHasher::draw(1 << 14, &mut rng);
+        let set: Vec<u32> =
+            rng.sample_distinct(1 << 28, 500).into_iter().map(|x| x as u32).collect();
+        let g = h.hash(&set);
+        let l1: f32 = g.iter().map(|v| v.abs()).sum();
+        assert!(l1 <= 500.0);
+        assert_eq!(l1 as i64 % 2, 500 % 2); // cancellation removes pairs
+    }
+
+    #[test]
+    fn inner_product_unbiased_over_draws() {
+        // E[g1·g2] = |S1 ∩ S2| (Eq. 15); average over many parameter draws.
+        let mut rng = Rng::new(71);
+        let d = 1u64 << 24;
+        let shared: Vec<u32> =
+            rng.sample_distinct(d, 80).into_iter().map(|x| x as u32).collect();
+        let mut s1 = shared.clone();
+        let mut s2 = shared;
+        s1.extend(rng.sample_distinct(d, 40).into_iter().map(|x| x as u32 | 1 << 25));
+        s2.extend(rng.sample_distinct(d, 40).into_iter().map(|x| x as u32 | 1 << 26));
+        s1.sort_unstable();
+        s2.sort_unstable();
+        let a_true = crate::hashing::minwise::resemblance(&s1, &s2)
+            * (s1.len() + s2.len()) as f64
+            / (1.0 + crate::hashing::minwise::resemblance(&s1, &s2));
+        let bins = 256;
+        let trials = 300;
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            let h = VwHasher::draw(bins, &mut rng);
+            let (g1, g2) = (h.hash(&s1), h.hash(&s2));
+            sum += g1.iter().zip(&g2).map(|(a, b)| (a * b) as f64).sum::<f64>();
+        }
+        let est = sum / trials as f64;
+        let var = (s1.len() * s2.len()) as f64 / bins as f64 + a_true * a_true / bins as f64;
+        let tol = 5.0 * (var / trials as f64).sqrt() + 1.0;
+        assert!((est - a_true).abs() < tol, "est {est} true {a_true} tol {tol}");
+    }
+
+    #[test]
+    fn sparse_r_distribution() {
+        let s = 4.0;
+        let n = 200_000u32;
+        let (mut pos, mut neg, mut zero) = (0u32, 0u32, 0u32);
+        for t in 0..n {
+            let r = sparse_r(t, s, 99);
+            if r > 0.0 {
+                pos += 1;
+                assert!((r - 2.0).abs() < 1e-12);
+            } else if r < 0.0 {
+                neg += 1;
+            } else {
+                zero += 1;
+            }
+        }
+        let f = |c: u32| c as f64 / n as f64;
+        assert!((f(pos) - 1.0 / 8.0).abs() < 0.01, "{}", f(pos));
+        assert!((f(neg) - 1.0 / 8.0).abs() < 0.01);
+        assert!((f(zero) - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn param_array_layout_matches_kernel_convention() {
+        let mut rng = Rng::new(73);
+        let h = VwHasher::draw(64, &mut rng);
+        let p = h.param_array();
+        assert_eq!(p[0], h.bin_hash.c1);
+        assert_eq!(p[1], h.bin_hash.c2);
+        assert_eq!(p[2], h.sign_hash.c1);
+        assert_eq!(p[3], h.sign_hash.c2);
+    }
+}

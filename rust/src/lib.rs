@@ -1,0 +1,45 @@
+//! # bbit-mh — b-bit minwise hashing for large-scale linear learning
+//!
+//! A production-shaped reproduction of Li, Shrivastava & König (2011),
+//! *"Training Logistic Regression and SVM on 200GB Data Using b-Bit Minwise
+//! Hashing and Comparisons with Vowpal Wabbit (VW)"*.
+//!
+//! The crate is the **layer-3 coordinator** of a three-layer stack:
+//!
+//! - **L1** (build-time python): Pallas kernels for k-way minwise hashing,
+//!   VW feature hashing and b-bit gather margins (`python/compile/kernels/`).
+//! - **L2** (build-time python): jax train/predict graphs composing the
+//!   kernels, AOT-lowered to HLO text (`python/compile/model.py`, `aot.py`).
+//! - **L3** (this crate): streaming data pipeline, hashing substrates,
+//!   LIBLINEAR-style solvers, the experiment harness for every table and
+//!   figure of the paper, and a PJRT runtime executing the AOT artifacts.
+//!
+//! Python is never on the request path: `make artifacts` runs once, after
+//! which the `bbit-mh` binary is self-contained.
+//!
+//! ## Module map (see DESIGN.md for the full system inventory)
+//!
+//! | module | paper dependency |
+//! |---|---|
+//! | [`data`] | LibSVM streaming IO, rcv1-like generator, feature expansion |
+//! | [`hashing`] | minwise / b-bit / VW / RP + estimator variance theory |
+//! | [`encode`] | `n·b·k`-bit packed codes, 2^b×k expansion (Section 3) |
+//! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD (the LIBLINEAR substrate) |
+//! | [`coordinator`] | sharded streaming preprocessing + training scheduler |
+//! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
+//! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod encode;
+pub mod error;
+pub mod experiments;
+pub mod hashing;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,488 @@
+//! `bbit-mh` — the layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   gen-data     generate the rcv1-like corpus (optionally expanded) as LibSVM
+//!   preprocess   stream a LibSVM file through the hashing pipeline
+//!   train        train + evaluate on a hashed dataset
+//!   experiments  regenerate a paper table/figure (or `all`)
+//!   runtime-info check the PJRT artifacts load and run
+//!
+//! The argument parser is hand-rolled (the offline crate set has no clap);
+//! flags are `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+use bbit_mh::coordinator::pipeline::{HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
+use bbit_mh::data::expand::{expand_example, ExpandConfig};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use bbit_mh::experiments::{self, Ctx, Scale};
+use bbit_mh::{Error, Result};
+
+const USAGE: &str = "\
+bbit-mh — b-bit minwise hashing for large-scale linear learning
+  (reproduction of Li, Shrivastava & König 2011; see README.md)
+
+USAGE:
+  bbit-mh gen-data --out FILE [--n 4000] [--vocab 4000] [--expanded] [--seed N]
+  bbit-mh preprocess --input FILE --out FILE --method bbit|vw
+             [--b 8] [--k 200] [--bins 1024] [--dim 1073741824]
+             [--workers N] [--seed N]
+  bbit-mh train --input FILE --solver svm|lr [--c 1.0] [--cv FOLDS]
+             [--method bbit|vw|none] [--b 8] [--k 200] [--bins 1024]
+             [--train-frac 0.5] [--seed N] [--save-model FILE]
+  bbit-mh classify --model FILE --input FILE [--out FILE]
+  bbit-mh experiments ID [--scale tiny|small|paper] [--results DIR]
+             (IDs: table1 fig1 fig3 fig5 fig6 fig7 fig8 table2 variance fig9 all)
+  bbit-mh runtime-info [--artifacts DIR]
+  bbit-mh help
+";
+
+/// Minimal flag parser: positional args then `--key value` / `--key=value`.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("bad --{key} value {v:?}"))),
+        }
+    }
+
+    fn required(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::InvalidArg(format!("missing --{key}")))
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "gen-data" => cmd_gen_data(&args),
+        "preprocess" => cmd_preprocess(&args),
+        "train" => cmd_train(&args),
+        "classify" => cmd_classify(&args),
+        "experiments" => cmd_experiments(&args),
+        "runtime-info" => cmd_runtime_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::InvalidArg(format!("unknown command {other:?}; try help"))),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let out = args.required("out")?;
+    let n: usize = args.get("n", 4000)?;
+    let vocab: u32 = args.get("vocab", 4000)?;
+    let seed: u64 = args.get("seed", 0xB_B17)?;
+    let expanded = args.has("expanded");
+    let corpus = CorpusGenerator::new(CorpusConfig {
+        n_docs: n,
+        vocab,
+        zipf_alpha: 1.05,
+        mean_tokens: args.get("mean-tokens", 30.0)?,
+        class_signal: 0.55,
+        pos_fraction: 0.47,
+        seed,
+    })
+    .generate();
+    let mut writer = LibsvmWriter::create(out)?;
+    if expanded {
+        let cfg = ExpandConfig {
+            vocab,
+            dim: args.get("dim", 1u64 << 30)?,
+            three_way_rate: 30,
+            seed: seed ^ 0xEE,
+        };
+        cfg.validate()?;
+        for ex in corpus.iter() {
+            writer.write_example(&expand_example(&cfg, &ex))?;
+        }
+    } else {
+        writer.write_dataset(&corpus)?;
+    }
+    writer.finish()?;
+    let s = corpus.stats();
+    eprintln!(
+        "wrote {} docs (base nnz mean {:.1}{}) to {}",
+        n,
+        s.nnz_mean,
+        if expanded { ", expanded" } else { "" },
+        out
+    );
+    Ok(())
+}
+
+fn cmd_preprocess(args: &Args) -> Result<()> {
+    let input = args.required("input")?;
+    let out = args.required("out")?;
+    let method = args.get("method", "bbit".to_string())?;
+    let workers: usize = args.get("workers", bbit_mh::config::available_workers())?;
+    let seed: u64 = args.get("seed", 1)?;
+    let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
+    let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
+    match method.as_str() {
+        "bbit" => {
+            let job = HashJob::Bbit {
+                b: args.get("b", 8u32)?,
+                k: args.get("k", 200usize)?,
+                d: args.get("dim", 1u64 << 30)?,
+                seed,
+            };
+            let (outp, report) = pipe.run(source, &job)?;
+            let bb = outp.into_bbit()?;
+            let f = std::fs::File::create(out)?;
+            bb.codes.save(std::io::BufWriter::new(f))?;
+            // labels ride alongside
+            std::fs::write(
+                format!("{out}.labels"),
+                bb.labels
+                    .iter()
+                    .map(|l| l.to_string())
+                    .collect::<Vec<_>>()
+                    .join("\n"),
+            )?;
+            eprintln!(
+                "hashed {} docs in {:.2}s wall ({:.2}s read, {:.2} hash-cpu-s, {} stalls) -> {} ({} ideal bytes)",
+                report.docs,
+                report.wall_seconds,
+                report.read_seconds,
+                report.hash_cpu_seconds,
+                report.backpressure_stalls,
+                out,
+                bb.codes.ideal_bytes(),
+            );
+        }
+        "vw" => {
+            let job = HashJob::Vw { bins: args.get("bins", 1024usize)?, seed };
+            let (outp, report) = pipe.run(source, &job)?;
+            let ds = outp.into_vw()?;
+            let mut w = LibsvmWriter::create(out)?;
+            w.write_dataset(&ds)?;
+            w.finish()?;
+            eprintln!(
+                "VW-hashed {} docs in {:.2}s wall -> {out}",
+                report.docs, report.wall_seconds
+            );
+        }
+        other => return Err(Error::InvalidArg(format!("unknown method {other:?}"))),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let input = args.required("input")?;
+    let solver = args.get("solver", "svm".to_string())?;
+    let c: f64 = args.get("c", 1.0)?;
+    let seed: u64 = args.get("seed", 3)?;
+    let train_frac: f64 = args.get("train-frac", 0.5)?;
+    let method = args.get("method", "bbit".to_string())?;
+
+    let dim: u64 = args.get("dim", 1u64 << 30)?;
+    let raw = bbit_mh::data::libsvm::load(input, dim)?;
+    let (train_raw, test_raw) = raw.split(train_frac, &mut bbit_mh::util::Rng::new(seed));
+    eprintln!(
+        "loaded {} examples ({} train / {} test)",
+        raw.len(),
+        train_raw.len(),
+        test_raw.len()
+    );
+
+    let kind = match solver.as_str() {
+        "svm" => SolverKind::SvmDcd,
+        "lr" => SolverKind::LrNewton,
+        other => return Err(Error::InvalidArg(format!("unknown solver {other:?}"))),
+    };
+    let job = vec![TrainJob { tag: String::new(), solver: kind, c }];
+    let cv_folds: usize = args.get("cv", 0)?;
+    let outcome = match method.as_str() {
+        "bbit" => {
+            let pipe = Pipeline::new(PipelineConfig::default());
+            let hash = HashJob::Bbit {
+                b: args.get("b", 8u32)?,
+                k: args.get("k", 200usize)?,
+                d: dim,
+                seed: seed ^ 0x4A5E,
+            };
+            let (tr, _) = pipe.run(
+                bbit_mh::coordinator::pipeline::dataset_chunks(&train_raw, 256),
+                &hash,
+            )?;
+            let (te, _) = pipe.run(
+                bbit_mh::coordinator::pipeline::dataset_chunks(&test_raw, 256),
+                &hash,
+            )?;
+            let (tr, te) = (tr.into_bbit()?, te.into_bbit()?);
+            if let Some(model_path) = args.flags.get("save-model") {
+                // fit on the train half at the requested C, persist the
+                // model + hashing recipe for `classify`
+                let model = match kind {
+                    SolverKind::SvmDcd => {
+                        bbit_mh::solver::train_svm(
+                            &tr,
+                            &bbit_mh::solver::SvmConfig::with_c(c),
+                        )
+                        .0
+                    }
+                    SolverKind::LrNewton => {
+                        bbit_mh::solver::train_lr(
+                            &tr,
+                            &bbit_mh::solver::LrConfig::with_c(c),
+                        )
+                        .0
+                    }
+                };
+                let saved = bbit_mh::solver::SavedModel {
+                    b: args.get("b", 8u32)?,
+                    k: args.get("k", 200usize)?,
+                    d: dim,
+                    seed: seed ^ 0x4A5E,
+                    model,
+                };
+                saved.save(model_path)?;
+                eprintln!("saved model to {model_path}");
+            }
+            if cv_folds >= 2 {
+                // C selection by k-fold CV on the hashed training half —
+                // the paper's "many C values on one preprocessing pass"
+                let report = bbit_mh::solver::cross_validate(
+                    &tr,
+                    kind,
+                    &bbit_mh::coordinator::scheduler::paper_c_grid(),
+                    cv_folds,
+                    seed,
+                    bbit_mh::config::available_workers(),
+                )?;
+                for p in &report.points {
+                    eprintln!(
+                        "  cv C={:<8} acc {:.3}% ± {:.3}",
+                        p.c,
+                        100.0 * p.mean_accuracy,
+                        100.0 * p.std_accuracy
+                    );
+                }
+                eprintln!("cv selected C = {}", report.best_c);
+                let job =
+                    vec![TrainJob { tag: String::new(), solver: kind, c: report.best_c }];
+                return print_outcome(
+                    &solver,
+                    &method,
+                    report.best_c,
+                    &Scheduler::new(1).run_grid(&tr, &te, &job)?[0],
+                );
+            }
+            Scheduler::new(1).run_grid(&tr, &te, &job)?
+        }
+        "vw" => {
+            let pipe = Pipeline::new(PipelineConfig::default());
+            let hash = HashJob::Vw { bins: args.get("bins", 1024usize)?, seed: seed ^ 0x77 };
+            let (tr, _) = pipe.run(
+                bbit_mh::coordinator::pipeline::dataset_chunks(&train_raw, 256),
+                &hash,
+            )?;
+            let (te, _) = pipe.run(
+                bbit_mh::coordinator::pipeline::dataset_chunks(&test_raw, 256),
+                &hash,
+            )?;
+            Scheduler::new(1).run_grid(&tr.into_vw()?, &te.into_vw()?, &job)?
+        }
+        "none" => Scheduler::new(1).run_grid(&train_raw, &test_raw, &job)?,
+        other => return Err(Error::InvalidArg(format!("unknown method {other:?}"))),
+    };
+    print_outcome(&solver, &method, c, &outcome[0])
+}
+
+fn print_outcome(
+    solver: &str,
+    method: &str,
+    c: f64,
+    o: &bbit_mh::coordinator::scheduler::TrainOutcome,
+) -> Result<()> {
+    println!(
+        "solver={solver} method={method} C={c}: test acc {:.3}% (train {:.3}%), {:.3}s, {} iters{}",
+        100.0 * o.test_accuracy,
+        100.0 * o.train_accuracy,
+        o.train_seconds,
+        o.iterations,
+        if o.converged { "" } else { " (hit iteration cap)" },
+    );
+    Ok(())
+}
+
+/// Score raw LibSVM documents with a saved model — the L3 "request path":
+/// parse → minwise hash → b-bit gather margin, no python, no retraining.
+fn cmd_classify(args: &Args) -> Result<()> {
+    let model_path = args.required("model")?;
+    let input = args.required("input")?;
+    let saved = bbit_mh::solver::SavedModel::load(model_path)?;
+    let mut scratch = saved.scratch();
+    let mut out: Box<dyn std::io::Write> = match args.flags.get("out") {
+        Some(p) => Box::new(std::io::BufWriter::new(std::fs::File::create(p)?)),
+        None => Box::new(std::io::BufWriter::new(std::io::stdout())),
+    };
+    let (mut n, mut correct) = (0usize, 0usize);
+    let t0 = std::time::Instant::now();
+    for ex in LibsvmReader::open(input)?.binary() {
+        let ex = ex?;
+        let margin = saved.margin(&ex.indices, &mut scratch);
+        let pred: i8 = if margin >= 0.0 { 1 } else { -1 };
+        writeln!(out, "{pred} {margin:.6}")?;
+        n += 1;
+        if pred == ex.label {
+            correct += 1;
+        }
+    }
+    out.flush()?;
+    let secs = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "classified {n} docs in {secs:.3}s ({:.0} docs/s); accuracy vs file labels: {:.3}%",
+        n as f64 / secs.max(1e-9),
+        100.0 * correct as f64 / n.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let mut scale = match args.get("scale", "small".to_string())?.as_str() {
+        "tiny" => Scale::tiny(),
+        "small" => Scale::small(),
+        "paper" => Scale::paper(),
+        other => return Err(Error::InvalidArg(format!("unknown scale {other:?}"))),
+    };
+    if let Some(dir) = args.flags.get("results") {
+        scale.results_dir = dir.clone();
+    }
+    scale.seed = args.get("seed", scale.seed)?;
+    let mut ctx = Ctx::new(scale);
+    let t0 = std::time::Instant::now();
+    if id == "all" {
+        experiments::run_all(&mut ctx)?;
+    } else {
+        experiments::run(&id, &mut ctx)?;
+    }
+    eprintln!("experiments '{id}' finished in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv(&["fig1", "--scale", "tiny", "--seed=42", "--expanded"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert_eq!(a.get::<String>("scale", "x".into()).unwrap(), "tiny");
+        assert_eq!(a.get::<u64>("seed", 0).unwrap(), 42);
+        assert!(a.has("expanded"));
+        assert_eq!(a.get::<usize>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_values_and_missing_required() {
+        let a = Args::parse(&argv(&["--n", "notanum"])).unwrap();
+        assert!(a.get::<usize>("n", 0).is_err());
+        assert!(a.required("out").is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = Args::parse(&argv(&["--expanded", "--n", "5"])).unwrap();
+        assert!(a.has("expanded"));
+        assert_eq!(a.get::<usize>("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_command_is_an_error() {
+        assert!(run(&argv(&["frobnicate"])).is_err());
+        assert!(run(&argv(&["help"])).is_ok());
+        assert!(run(&argv(&[])).is_ok());
+    }
+
+    #[test]
+    fn experiments_rejects_unknown_scale_and_id() {
+        assert!(run(&argv(&["experiments", "table1", "--scale", "galactic"])).is_err());
+        assert!(run(&argv(&["experiments", "figZZ", "--scale", "tiny"])).is_err());
+    }
+}
+
+fn cmd_runtime_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts", "artifacts".to_string())?;
+    let rt = bbit_mh::runtime::PjrtRuntime::cpu(Path::new(&dir))?;
+    println!("PJRT platform: {}", rt.platform());
+    for (name, spec) in &rt.manifest.artifacts {
+        print!(
+            "  {name}: {} inputs, {} outputs, consts {{",
+            spec.inputs.len(),
+            spec.outputs.len()
+        );
+        for (k, v) in &spec.consts {
+            print!(" {k}={v}");
+        }
+        println!(" }}");
+        rt.load(name)?; // compile to prove it loads
+    }
+    println!("all {} artifacts compiled OK", rt.manifest.artifacts.len());
+    Ok(())
+}

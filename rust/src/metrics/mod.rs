@@ -1,0 +1,204 @@
+//! Lightweight metrics: counters, gauges, timers and histograms with a
+//! printable registry.  The pipeline and experiment harnesses report
+//! through this module so every table in EXPERIMENTS.md comes from one
+//! code path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotone counter (atomic; shared across pipeline threads).
+#[derive(Default, Debug)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Wall-clock timer accumulating seconds (atomic micros internally).
+#[derive(Default, Debug)]
+pub struct Timer {
+    micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Timer {
+    /// Time one closure invocation.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn observe(&self, seconds: f64) {
+        self.micros
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.micros.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_seconds(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.seconds() / c as f64
+        }
+    }
+}
+
+/// Fixed-bucket histogram (log-spaced), good enough for queue depths and
+/// latency distributions in the pipeline.
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket i counts values in [2^i-1, 2^i) scaled by `unit`
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: (0..32).map(|_| AtomicU64::new(0)).collect() }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        let idx = (64 - v.leading_zeros()).min(31) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Upper-bound estimate of the p-quantile (0..=1).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << i).saturating_sub(1).max(if i == 0 { 0 } else { 1 << (i - 1) });
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Named metric registry (string keys, printable summary).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    timers: Mutex<BTreeMap<String, std::sync::Arc<Timer>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn timer(&self, name: &str) -> std::sync::Arc<Timer> {
+        self.timers
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render a two-column summary of everything observed.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name:<40} {}\n", c.get()));
+        }
+        for (name, t) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name:<40} {:.3}s over {} obs (mean {:.3}ms)\n",
+                t.seconds(),
+                t.count(),
+                t.mean_seconds() * 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let reg = Registry::default();
+        reg.counter("docs").add(10);
+        reg.counter("docs").inc();
+        assert_eq!(reg.counter("docs").get(), 11);
+        let t = reg.timer("hash");
+        let v = t.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.count(), 1);
+        assert!(t.seconds() >= 0.0);
+        let s = reg.summary();
+        assert!(s.contains("docs") && s.contains("hash"));
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::default();
+        for v in 1..=1000u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 1000);
+        let med = h.quantile(0.5);
+        assert!((256..=1024).contains(&med), "{med}");
+        assert!(h.quantile(1.0) >= 512);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let reg = std::sync::Arc::new(Registry::default());
+        let c = reg.counter("x");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

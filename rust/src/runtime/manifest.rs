@@ -1,0 +1,236 @@
+//! Artifact manifest parser.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` describing every
+//! lowered HLO module: file name, baked-in constants (p, d_space, b, k,
+//! batch, …) and input/output dtypes+shapes.  Line-oriented records:
+//!
+//! ```text
+//! artifact minhash_k200
+//! file minhash_k200.hlo.txt
+//! const k 200
+//! input arg0 int32 256x1024
+//! output int32 256x200
+//! end
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Tensor dtype as named in the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    I64,
+    U64,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            "int64" => DType::I64,
+            "uint64" => DType::U64,
+            other => return Err(Error::Manifest(format!("unknown dtype {other:?}"))),
+        })
+    }
+}
+
+/// A tensor specification (dtype + shape; empty shape = scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(dtype: &str, dims: &str) -> Result<Self> {
+        let dtype = DType::parse(dtype)?;
+        let shape = if dims == "scalar" {
+            Vec::new()
+        } else {
+            dims.split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::Manifest(format!("bad dim {d:?}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// One AOT'd artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub consts: BTreeMap<String, i64>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Integer constant baked at lowering time (e.g. k, batch, d_space).
+    pub fn konst(&self, key: &str) -> Result<i64> {
+        self.consts
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Manifest(format!("{}: missing const {key}", self.name)))
+    }
+}
+
+/// The parsed manifest: name → spec.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest { artifacts: BTreeMap::new(), dir: dir.to_path_buf() };
+        let mut cur: Option<ArtifactSpec> = None;
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut toks = line.split_ascii_whitespace();
+            let tag = toks.next().unwrap();
+            let rest: Vec<&str> = toks.collect();
+            let bad = |msg: &str| Error::Manifest(format!("line {}: {msg}", no + 1));
+            match (tag, rest.as_slice()) {
+                ("artifact", [name]) => {
+                    if cur.is_some() {
+                        return Err(bad("nested artifact record"));
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        file: PathBuf::new(),
+                        consts: BTreeMap::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                ("file", [f]) => {
+                    cur.as_mut().ok_or_else(|| bad("file outside artifact"))?.file =
+                        dir.join(f);
+                }
+                ("const", [key, val]) => {
+                    let v: i64 =
+                        val.parse().map_err(|_| bad(&format!("bad const {val:?}")))?;
+                    cur.as_mut()
+                        .ok_or_else(|| bad("const outside artifact"))?
+                        .consts
+                        .insert(key.to_string(), v);
+                }
+                ("input", [_name, dtype, dims]) => {
+                    let spec = TensorSpec::parse(dtype, dims)?;
+                    cur.as_mut().ok_or_else(|| bad("input outside artifact"))?.inputs.push(spec);
+                }
+                ("output", [dtype, dims]) => {
+                    let spec = TensorSpec::parse(dtype, dims)?;
+                    cur.as_mut().ok_or_else(|| bad("output outside artifact"))?.outputs.push(spec);
+                }
+                ("end", []) => {
+                    let spec = cur.take().ok_or_else(|| bad("end without artifact"))?;
+                    if spec.file.as_os_str().is_empty() {
+                        return Err(bad("artifact missing file"));
+                    }
+                    m.artifacts.insert(spec.name.clone(), spec);
+                }
+                _ => return Err(bad(&format!("unrecognized line {line:?}"))),
+            }
+        }
+        if cur.is_some() {
+            return Err(Error::Manifest("unterminated artifact record".into()));
+        }
+        Ok(m)
+    }
+
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown artifact {name:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact minhash_k200
+file minhash_k200.hlo.txt
+const p 2147483647
+const k 200
+input arg0 int32 256x1024
+input arg1 int32 256x1024
+input arg2 uint32 200
+input arg3 uint32 200
+output int32 256x200
+end
+artifact train_logistic_b8_k200
+file train_logistic_b8_k200.hlo.txt
+const b 8
+input arg0 float32 51200
+input arg3 float32 scalar
+output float32 51200
+output int32 scalar
+end
+";
+
+    #[test]
+    fn parses_records() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let mh = m.get("minhash_k200").unwrap();
+        assert_eq!(mh.konst("k").unwrap(), 200);
+        assert_eq!(mh.inputs.len(), 4);
+        assert_eq!(mh.inputs[0].shape, vec![256, 1024]);
+        assert_eq!(mh.inputs[2].dtype, DType::U32);
+        assert_eq!(mh.outputs[0].elements(), 256 * 200);
+        assert_eq!(mh.file, Path::new("/tmp/a/minhash_k200.hlo.txt"));
+        let tr = m.get("train_logistic_b8_k200").unwrap();
+        assert_eq!(tr.inputs[1].shape, Vec::<usize>::new()); // scalar
+        assert_eq!(tr.inputs[1].elements(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("const x 1\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("artifact a\nend\n", Path::new(".")).is_err()); // no file
+        assert!(Manifest::parse("artifact a\nfile f\n", Path::new(".")).is_err()); // no end
+        assert!(Manifest::parse("artifact a\nfile f\ninput x badtype 2\nend\n", Path::new("."))
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.get("nope").is_err());
+        assert!(m.get("minhash_k200").unwrap().konst("zzz").is_err());
+    }
+}

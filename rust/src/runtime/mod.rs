@@ -1,0 +1,432 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile on the CPU client,
+//! execute from the coordinator's hot path.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  Text is the interchange format
+//! because jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects.
+//!
+//! [`PjrtRuntime`] caches compiled executables by artifact name; the
+//! high-level engines ([`MinhashEngine`], [`VwEngine`], [`TrainEngine`])
+//! wrap padding, literal construction and output unpacking for the three
+//! artifact families (preprocess / train / predict).
+
+pub mod manifest;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::encode::packed::PackedCodes;
+use crate::hashing::universal::UniversalFamily;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::{Error, Result};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with positional literal inputs; returns the flattened tuple
+    /// outputs (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} inputs, artifact wants {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Client + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<LoadedArtifact>>>,
+}
+
+impl PjrtRuntime {
+    /// CPU PJRT client over the artifact directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load+compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedArtifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = Arc::new(LoadedArtifact { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+}
+
+fn lit_2d_i32(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Batched minwise hashing through the PJRT `minhash_*` artifact — the
+/// paper's GPU-preprocessing path (Table 2, last column).
+pub struct MinhashEngine {
+    artifact: Arc<LoadedArtifact>,
+    /// Documents per execute call.
+    pub batch: usize,
+    /// Padded nonzeros per document.
+    pub nnz: usize,
+    /// Number of hash functions k.
+    pub k: usize,
+    /// Rehash space D.
+    pub d_space: u64,
+}
+
+impl MinhashEngine {
+    /// `name` is `minhash_k200` / `minhash_k512` (see aot.py).
+    pub fn new(rt: &PjrtRuntime, name: &str) -> Result<Self> {
+        let artifact = rt.load(name)?;
+        let spec = &artifact.spec;
+        let (batch, k, nnz, d_space) = (
+            spec.konst("batch")? as usize,
+            spec.konst("k")? as usize,
+            spec.konst("nnz")? as usize,
+            spec.konst("d_space")? as u64,
+        );
+        Ok(MinhashEngine { artifact, batch, nnz, k, d_space })
+    }
+
+    /// Minwise-hash up to `batch` sets with the family's parameters; rows
+    /// longer than the padded width are an error (callers chunk/fall back).
+    /// Returns row-major `[rows, k]` minwise values.
+    pub fn minhash_batch(
+        &self,
+        sets: &[&[u32]],
+        family: &UniversalFamily,
+    ) -> Result<Vec<u32>> {
+        if sets.len() > self.batch {
+            return Err(Error::InvalidArg(format!(
+                "batch {} exceeds artifact batch {}",
+                sets.len(),
+                self.batch
+            )));
+        }
+        if family.k() != self.k {
+            return Err(Error::InvalidArg(format!(
+                "family k={} != artifact k={}",
+                family.k(),
+                self.k
+            )));
+        }
+        let mut idx = vec![0i32; self.batch * self.nnz];
+        let mut mask = vec![0i32; self.batch * self.nnz];
+        for (r, set) in sets.iter().enumerate() {
+            if set.len() > self.nnz {
+                return Err(Error::InvalidArg(format!(
+                    "row {r} has {} nonzeros > padded {}",
+                    set.len(),
+                    self.nnz
+                )));
+            }
+            let base = r * self.nnz;
+            for (c, &t) in set.iter().enumerate() {
+                idx[base + c] = t as i32;
+                mask[base + c] = 1;
+            }
+        }
+        let (c1, c2) = family.param_arrays();
+        let outputs = self.artifact.execute(&[
+            lit_2d_i32(&idx, self.batch, self.nnz)?,
+            lit_2d_i32(&mask, self.batch, self.nnz)?,
+            xla::Literal::vec1(&c1),
+            xla::Literal::vec1(&c2),
+        ])?;
+        let z: Vec<i32> = outputs[0].to_vec()?;
+        Ok(z[..sets.len() * self.k].iter().map(|&v| v as u32).collect())
+    }
+
+    /// Hash + b-bit truncate straight into a [`PackedCodes`] (rows appended).
+    pub fn codes_batch(
+        &self,
+        sets: &[&[u32]],
+        family: &UniversalFamily,
+        b: u32,
+        out: &mut PackedCodes,
+    ) -> Result<()> {
+        let z = self.minhash_batch(sets, family)?;
+        let mask = (1u32 << b) - 1;
+        let mut row = vec![0u16; self.k];
+        for r in 0..sets.len() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = (z[r * self.k + j] & mask) as u16;
+            }
+            out.push_row(&row)?;
+        }
+        Ok(())
+    }
+}
+
+/// Size-routing wrapper over two [`MinhashEngine`]s: documents are routed
+/// to the smallest padded-nnz artifact they fit, each bucket flushing as a
+/// full batch.  Padded work is wasted work — on corpora where most
+/// documents are short this cuts the accelerated preprocessing cost by
+/// roughly `nnz_large / nnz_small` (§Perf; the coordinator's answer to
+/// the paper's "preprocessing is trivially parallelizable" at the batch
+/// level).  Output codes are re-emitted in input order.
+pub struct RoutedMinhash {
+    /// Engines sorted by ascending padded nnz; a document routes to the
+    /// first one it fits.
+    tiers: Vec<MinhashEngine>,
+}
+
+impl RoutedMinhash {
+    /// Build from artifact names (any count ≥ 1, any order; all must share
+    /// k and d).  Convenience: [`new`] keeps the original two-tier call.
+    pub fn from_names(rt: &PjrtRuntime, names: &[&str]) -> Result<Self> {
+        if names.is_empty() {
+            return Err(Error::InvalidArg("need at least one engine".into()));
+        }
+        let mut tiers = names
+            .iter()
+            .map(|n| MinhashEngine::new(rt, n))
+            .collect::<Result<Vec<_>>>()?;
+        tiers.sort_by_key(|e| e.nnz);
+        let (k, d) = (tiers[0].k, tiers[0].d_space);
+        if tiers.iter().any(|e| e.k != k || e.d_space != d) {
+            return Err(Error::InvalidArg("routed engines must share k and d".into()));
+        }
+        if tiers.windows(2).any(|w| w[0].nnz == w[1].nnz) {
+            return Err(Error::InvalidArg("duplicate nnz tier".into()));
+        }
+        Ok(RoutedMinhash { tiers })
+    }
+
+    pub fn new(rt: &PjrtRuntime, small_name: &str, large_name: &str) -> Result<Self> {
+        Self::from_names(rt, &[small_name, large_name])
+    }
+
+    pub fn k(&self) -> usize {
+        self.tiers[0].k
+    }
+
+    pub fn d_space(&self) -> u64 {
+        self.tiers[0].d_space
+    }
+
+    /// Minwise-hash any number of sets, routing by size and batching per
+    /// tier.  Returns row-major `[sets.len(), k]` minwise values in input
+    /// order.
+    pub fn minhash_all(
+        &self,
+        sets: &[&[u32]],
+        family: &UniversalFamily,
+    ) -> Result<Vec<u32>> {
+        let k = self.k();
+        let mut out = vec![0u32; sets.len() * k];
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.tiers.len()];
+        'docs: for (pos, set) in sets.iter().enumerate() {
+            for (tier, engine) in self.tiers.iter().enumerate() {
+                if set.len() <= engine.nnz {
+                    buckets[tier].push(pos);
+                    continue 'docs;
+                }
+            }
+            return Err(Error::InvalidArg(format!(
+                "document {pos} has {} nonzeros > largest padded {}",
+                set.len(),
+                self.tiers.last().unwrap().nnz
+            )));
+        }
+        for (tier, members) in buckets.iter().enumerate() {
+            let engine = &self.tiers[tier];
+            for batch in members.chunks(engine.batch) {
+                let refs: Vec<&[u32]> = batch.iter().map(|&p| sets[p]).collect();
+                let z = engine.minhash_batch(&refs, family)?;
+                for (row, &pos) in batch.iter().enumerate() {
+                    out[pos * k..(pos + 1) * k]
+                        .copy_from_slice(&z[row * k..(row + 1) * k]);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// VW hashing through the PJRT `vw_bins*` artifact.
+pub struct VwEngine {
+    artifact: Arc<LoadedArtifact>,
+    pub batch: usize,
+    pub nnz: usize,
+    pub bins: usize,
+}
+
+impl VwEngine {
+    pub fn new(rt: &PjrtRuntime, name: &str) -> Result<Self> {
+        let artifact = rt.load(name)?;
+        let spec = &artifact.spec;
+        Ok(VwEngine {
+            batch: spec.konst("batch")? as usize,
+            nnz: spec.konst("nnz")? as usize,
+            bins: spec.konst("bins")? as usize,
+            artifact,
+        })
+    }
+
+    /// Returns row-major `[rows, bins]` hashed vectors.
+    pub fn hash_batch(&self, sets: &[&[u32]], params: [u32; 4]) -> Result<Vec<f32>> {
+        if sets.len() > self.batch {
+            return Err(Error::InvalidArg("batch too large".into()));
+        }
+        let mut idx = vec![0i32; self.batch * self.nnz];
+        let mut mask = vec![0i32; self.batch * self.nnz];
+        for (r, set) in sets.iter().enumerate() {
+            if set.len() > self.nnz {
+                return Err(Error::InvalidArg(format!(
+                    "row {r} has {} nonzeros > padded {}",
+                    set.len(),
+                    self.nnz
+                )));
+            }
+            let base = r * self.nnz;
+            for (c, &t) in set.iter().enumerate() {
+                idx[base + c] = t as i32;
+                mask[base + c] = 1;
+            }
+        }
+        let outputs = self.artifact.execute(&[
+            lit_2d_i32(&idx, self.batch, self.nnz)?,
+            lit_2d_i32(&mask, self.batch, self.nnz)?,
+            xla::Literal::vec1(&params[..]),
+        ])?;
+        let v: Vec<f32> = outputs[0].to_vec()?;
+        Ok(v[..sets.len() * self.bins].to_vec())
+    }
+}
+
+/// SGD training + prediction over b-bit codes through the PJRT
+/// `train_{loss}_b*_k*` / `predict_b*_k*` artifacts.  A device-side scan
+/// runs `chunk/batch` minibatch steps per execute call; python is not
+/// involved.
+pub struct TrainEngine {
+    train: Arc<LoadedArtifact>,
+    predict: Arc<LoadedArtifact>,
+    /// Weight vector (host copy; ping-ponged through the artifact).
+    pub w: Vec<f32>,
+    pub b: u32,
+    pub k: usize,
+    pub chunk: usize,
+    pub batch: usize,
+    pub pred_n: usize,
+    step: i32,
+}
+
+impl TrainEngine {
+    pub fn new(rt: &PjrtRuntime, train_name: &str, predict_name: &str) -> Result<Self> {
+        let train = rt.load(train_name)?;
+        let predict = rt.load(predict_name)?;
+        let spec = &train.spec;
+        let dim = spec.konst("dim")? as usize;
+        Ok(TrainEngine {
+            b: spec.konst("b")? as u32,
+            k: spec.konst("k")? as usize,
+            chunk: spec.konst("chunk")? as usize,
+            batch: spec.konst("batch")? as usize,
+            pred_n: predict.spec.konst("n")? as usize,
+            w: vec![0.0; dim],
+            train,
+            predict,
+            step: 0,
+        })
+    }
+
+    /// Run one chunk of SGD steps on row-major `[rows, k]` codes
+    /// (`rows ≤ chunk`).  Short chunks are padded by wrapping rows, which
+    /// keeps the decay schedule continuous — callers pass full chunks
+    /// except possibly the last.
+    pub fn train_chunk(
+        &mut self,
+        codes: &[i32],
+        labels: &[f32],
+        lr0: f32,
+        lambda: f32,
+    ) -> Result<()> {
+        let rows = labels.len();
+        if rows == 0 {
+            return Ok(());
+        }
+        if codes.len() != rows * self.k {
+            return Err(Error::InvalidArg("codes/labels shape mismatch".into()));
+        }
+        let mut c = vec![0i32; self.chunk * self.k];
+        let mut y = vec![0f32; self.chunk];
+        for r in 0..self.chunk {
+            let src = r % rows;
+            c[r * self.k..(r + 1) * self.k]
+                .copy_from_slice(&codes[src * self.k..(src + 1) * self.k]);
+            y[r] = labels[src];
+        }
+        let outputs = self.train.execute(&[
+            xla::Literal::vec1(&self.w[..]),
+            lit_2d_i32(&c, self.chunk, self.k)?,
+            xla::Literal::vec1(&y),
+            xla::Literal::scalar(lr0),
+            xla::Literal::scalar(lambda),
+            xla::Literal::scalar(self.step),
+        ])?;
+        self.w = outputs[0].to_vec()?;
+        self.step = outputs[1].to_vec::<i32>()?[0];
+        Ok(())
+    }
+
+    /// Margins for row-major `[rows, k]` codes (internally batched to the
+    /// predict artifact's row count).
+    pub fn margins(&self, codes: &[i32]) -> Result<Vec<f32>> {
+        let rows = codes.len() / self.k;
+        let mut out = Vec::with_capacity(rows);
+        let mut i0 = 0usize;
+        while i0 < rows {
+            let take = (rows - i0).min(self.pred_n);
+            let mut c = vec![0i32; self.pred_n * self.k];
+            c[..take * self.k]
+                .copy_from_slice(&codes[i0 * self.k..(i0 + take) * self.k]);
+            let outputs = self.predict.execute(&[
+                xla::Literal::vec1(&self.w[..]),
+                lit_2d_i32(&c, self.pred_n, self.k)?,
+            ])?;
+            let m: Vec<f32> = outputs[0].to_vec()?;
+            out.extend_from_slice(&m[..take]);
+            i0 += take;
+        }
+        Ok(out)
+    }
+
+    pub fn steps_done(&self) -> i32 {
+        self.step
+    }
+
+    pub fn reset(&mut self) {
+        self.w.fill(0.0);
+        self.step = 0;
+    }
+}

@@ -1,0 +1,181 @@
+//! k-fold cross-validation over hashed data — the workflow the paper's
+//! preprocessing-amortization argument is about (Sections 1 and 6: "a
+//! learning task may need to re-use the same (hashed) dataset to perform
+//! many cross-validations and parameter tuning").
+//!
+//! Folds are materialized once from a [`BbitDataset`] (row copies are
+//! word-aligned memcpys) and every (C, fold) job runs through the
+//! coordinator's scheduler, so a full CV grid costs one hashing pass plus
+//! cheap trainings.
+
+use crate::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
+use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
+use crate::util::stats;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Result of one C value across folds.
+#[derive(Clone, Debug)]
+pub struct CvPoint {
+    pub c: f64,
+    pub fold_accuracies: Vec<f64>,
+    pub mean_accuracy: f64,
+    pub std_accuracy: f64,
+}
+
+/// Cross-validation report: every grid point plus the winner.
+#[derive(Clone, Debug)]
+pub struct CvReport {
+    pub points: Vec<CvPoint>,
+    pub best_c: f64,
+}
+
+/// Split rows into `folds` deterministic shuffled folds.
+fn fold_assignments(n: usize, folds: usize, seed: u64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut order);
+    let mut fold_of = vec![0usize; n];
+    for (pos, &row) in order.iter().enumerate() {
+        fold_of[row] = pos % folds;
+    }
+    fold_of
+}
+
+fn subset(data: &BbitDataset, rows: &[usize]) -> BbitDataset {
+    let mut pc = PackedCodes::zeroed(data.codes.b, data.codes.k, rows.len());
+    let mut labels = Vec::with_capacity(rows.len());
+    for (dst, &src) in rows.iter().enumerate() {
+        pc.copy_row_from(dst, &data.codes, src);
+        labels.push(data.labels[src]);
+    }
+    BbitDataset::new(pc, labels)
+}
+
+/// Run `folds`-fold CV for `solver` over `c_grid`; `threads` parallelizes
+/// the (C × fold) job matrix.
+pub fn cross_validate(
+    data: &BbitDataset,
+    solver: SolverKind,
+    c_grid: &[f64],
+    folds: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<CvReport> {
+    if folds < 2 || data.len() < folds {
+        return Err(Error::InvalidArg(format!(
+            "need >= 2 folds and n >= folds (n={}, folds={folds})",
+            data.len()
+        )));
+    }
+    if c_grid.is_empty() {
+        return Err(Error::InvalidArg("empty C grid".into()));
+    }
+    let fold_of = fold_assignments(data.len(), folds, seed);
+    // materialize train/val pairs once, reuse across the whole C grid
+    let mut pairs = Vec::with_capacity(folds);
+    for f in 0..folds {
+        let (mut tr_rows, mut va_rows) = (Vec::new(), Vec::new());
+        for (row, &fo) in fold_of.iter().enumerate() {
+            if fo == f {
+                va_rows.push(row);
+            } else {
+                tr_rows.push(row);
+            }
+        }
+        pairs.push((subset(data, &tr_rows), subset(data, &va_rows)));
+    }
+
+    let sched = Scheduler::new(threads);
+    let mut points = Vec::with_capacity(c_grid.len());
+    for &c in c_grid {
+        let mut accs = Vec::with_capacity(folds);
+        for (tr, va) in &pairs {
+            let out = sched.run_grid(
+                tr,
+                va,
+                &[TrainJob { tag: String::new(), solver, c }],
+            )?;
+            accs.push(out[0].test_accuracy);
+        }
+        points.push(CvPoint {
+            c,
+            mean_accuracy: stats::mean(&accs),
+            std_accuracy: stats::stddev(&accs),
+            fold_accuracies: accs,
+        });
+    }
+    let best_c = points
+        .iter()
+        .max_by(|a, b| a.mean_accuracy.partial_cmp(&b.mean_accuracy).unwrap())
+        .unwrap()
+        .c;
+    Ok(CvReport { points, best_c })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn learnable(n: usize, seed: u64) -> BbitDataset {
+        let (b, k) = (4u32, 16usize);
+        let mut rng = Rng::new(seed);
+        let mut pc = PackedCodes::new(b, k);
+        let mut labels = Vec::new();
+        for _ in 0..n {
+            let pos = rng.bool();
+            let row: Vec<u16> = (0..k)
+                .map(|_| {
+                    if pos {
+                        rng.below(8) as u16
+                    } else {
+                        8 + rng.below(8) as u16
+                    }
+                })
+                .collect();
+            pc.push_row(&row).unwrap();
+            labels.push(if pos { 1 } else { -1 });
+        }
+        BbitDataset::new(pc, labels)
+    }
+
+    #[test]
+    fn folds_partition_rows() {
+        let f = fold_assignments(103, 5, 7);
+        assert_eq!(f.len(), 103);
+        let mut counts = [0usize; 5];
+        for &x in &f {
+            counts[x] += 1;
+        }
+        // balanced within 1
+        assert!(counts.iter().all(|&c| (20..=21).contains(&c)), "{counts:?}");
+    }
+
+    #[test]
+    fn cv_finds_a_reasonable_c_and_is_deterministic() {
+        let data = learnable(300, 3);
+        let grid = [0.0001, 0.01, 1.0];
+        let a = cross_validate(&data, SolverKind::SvmDcd, &grid, 4, 11, 2).unwrap();
+        let b = cross_validate(&data, SolverKind::SvmDcd, &grid, 4, 11, 1).unwrap();
+        assert_eq!(a.best_c, b.best_c);
+        assert_eq!(a.points.len(), 3);
+        // separable codes: the larger Cs must dominate the tiny one
+        let acc_of = |r: &CvReport, c: f64| {
+            r.points.iter().find(|p| p.c == c).unwrap().mean_accuracy
+        };
+        assert!(acc_of(&a, 1.0) >= acc_of(&a, 0.0001));
+        assert!(acc_of(&a, a.best_c) > 0.9);
+        for p in &a.points {
+            assert_eq!(p.fold_accuracies.len(), 4);
+        }
+    }
+
+    #[test]
+    fn cv_rejects_degenerate_inputs() {
+        let data = learnable(10, 5);
+        assert!(cross_validate(&data, SolverKind::SvmDcd, &[1.0], 1, 0, 1).is_err());
+        assert!(cross_validate(&data, SolverKind::SvmDcd, &[], 3, 0, 1).is_err());
+        assert!(cross_validate(&data, SolverKind::SvmDcd, &[1.0], 11, 0, 1).is_err());
+    }
+}

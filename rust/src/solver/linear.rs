@@ -1,0 +1,246 @@
+//! Linear-model core: the [`FeatureMatrix`] abstraction, trained-model
+//! container, and evaluation.
+
+use crate::data::dataset::SparseDataset;
+use crate::encode::expansion::BbitDataset;
+
+/// Row-access abstraction all solvers train against.
+///
+/// Implemented by raw/VW CSR data ([`SparseDataset`]) and by implicit
+/// b-bit expanded data ([`BbitDataset`]) — the latter never materializes
+/// its 2^b·k one-hot vectors; `dot`/`axpy` walk the k blocks directly.
+pub trait FeatureMatrix: Sync {
+    fn n(&self) -> usize;
+    fn dim(&self) -> usize;
+    /// Label in {−1.0, +1.0}.
+    fn label(&self, i: usize) -> f32;
+    /// xᵢ · w
+    fn dot(&self, i: usize, w: &[f32]) -> f32;
+    /// w += alpha · xᵢ
+    fn axpy(&self, i: usize, alpha: f32, w: &mut [f32]);
+    /// ‖xᵢ‖²
+    fn norm_sq(&self, i: usize) -> f32;
+}
+
+impl FeatureMatrix for SparseDataset {
+    fn n(&self) -> usize {
+        self.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim as usize
+    }
+
+    #[inline]
+    fn label(&self, i: usize) -> f32 {
+        self.labels[i] as f32
+    }
+
+    #[inline]
+    fn dot(&self, i: usize, w: &[f32]) -> f32 {
+        let (idx, vals) = self.row(i);
+        match vals {
+            None => idx.iter().map(|&t| w[t as usize]).sum(),
+            Some(vs) => idx
+                .iter()
+                .zip(vs)
+                .map(|(&t, &v)| w[t as usize] * v)
+                .sum(),
+        }
+    }
+
+    #[inline]
+    fn axpy(&self, i: usize, alpha: f32, w: &mut [f32]) {
+        let (idx, vals) = self.row(i);
+        match vals {
+            None => {
+                for &t in idx {
+                    w[t as usize] += alpha;
+                }
+            }
+            Some(vs) => {
+                for (&t, &v) in idx.iter().zip(vs) {
+                    w[t as usize] += alpha * v;
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn norm_sq(&self, i: usize) -> f32 {
+        let (idx, vals) = self.row(i);
+        match vals {
+            None => idx.len() as f32,
+            Some(vs) => vs.iter().map(|v| v * v).sum(),
+        }
+    }
+}
+
+impl FeatureMatrix for BbitDataset {
+    fn n(&self) -> usize {
+        self.len()
+    }
+
+    fn dim(&self) -> usize {
+        BbitDataset::dim(self)
+    }
+
+    #[inline]
+    fn label(&self, i: usize) -> f32 {
+        self.labels[i] as f32
+    }
+
+    #[inline]
+    fn dot(&self, i: usize, w: &[f32]) -> f32 {
+        let b = self.codes.b as usize;
+        let mut acc = 0.0;
+        for j in 0..self.codes.k {
+            acc += w[(j << b) + self.codes.get(i, j) as usize];
+        }
+        acc
+    }
+
+    #[inline]
+    fn axpy(&self, i: usize, alpha: f32, w: &mut [f32]) {
+        let b = self.codes.b as usize;
+        for j in 0..self.codes.k {
+            w[(j << b) + self.codes.get(i, j) as usize] += alpha;
+        }
+    }
+
+    #[inline]
+    fn norm_sq(&self, _i: usize) -> f32 {
+        // exactly k ones per expanded row (Section 3)
+        self.codes.k as f32
+    }
+}
+
+/// A trained linear model.
+#[derive(Clone, Debug)]
+pub struct LinearModel {
+    pub w: Vec<f32>,
+}
+
+impl LinearModel {
+    pub fn zeros(dim: usize) -> Self {
+        LinearModel { w: vec![0.0; dim] }
+    }
+
+    pub fn margin<F: FeatureMatrix>(&self, data: &F, i: usize) -> f32 {
+        data.dot(i, &self.w)
+    }
+
+    pub fn predict<F: FeatureMatrix>(&self, data: &F, i: usize) -> i8 {
+        if self.margin(data, i) >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+/// Classification accuracy of `model` on `data`.
+pub fn accuracy<F: FeatureMatrix>(model: &LinearModel, data: &F) -> f64 {
+    if data.n() == 0 {
+        return 0.0;
+    }
+    let correct = (0..data.n())
+        .filter(|&i| model.predict(data, i) as f32 == data.label(i))
+        .count();
+    correct as f64 / data.n() as f64
+}
+
+/// Common training telemetry every solver reports.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    /// Outer iterations (or epochs) executed.
+    pub iterations: usize,
+    /// Final objective value (primal).
+    pub objective: f64,
+    /// Whether the stopping tolerance was reached (vs iteration cap).
+    pub converged: bool,
+    /// Wall-clock seconds spent in the solver.
+    pub train_seconds: f64,
+}
+
+/// Primal objective 0.5‖w‖² + C·Σ loss(yᵢ·mᵢ) — shared by solvers/tests.
+pub fn primal_objective<F: FeatureMatrix>(
+    data: &F,
+    w: &[f32],
+    c: f64,
+    loss: impl Fn(f64) -> f64,
+) -> f64 {
+    let reg: f64 = 0.5 * w.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+    let total: f64 = (0..data.n())
+        .map(|i| loss(data.label(i) as f64 * data.dot(i, w) as f64))
+        .sum();
+    reg + c * total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Example;
+    use crate::encode::packed::PackedCodes;
+
+    fn csr() -> SparseDataset {
+        SparseDataset::from_examples(
+            8,
+            &[
+                Example::binary(1, vec![0, 1]),
+                Example::binary(-1, vec![2, 3]),
+            ],
+        )
+    }
+
+    #[test]
+    fn csr_dot_axpy_norm() {
+        let ds = csr();
+        let mut w = vec![0.0f32; 8];
+        ds.axpy(0, 2.0, &mut w);
+        assert_eq!(&w[..4], &[2.0, 2.0, 0.0, 0.0]);
+        assert_eq!(ds.dot(0, &w), 4.0);
+        assert_eq!(ds.dot(1, &w), 0.0);
+        assert_eq!(ds.norm_sq(0), 2.0);
+    }
+
+    #[test]
+    fn valued_rows() {
+        let mut ds = SparseDataset::new(4);
+        ds.push(&Example { label: 1, indices: vec![1, 3], values: Some(vec![0.5, -2.0]) });
+        let mut w = vec![1.0f32; 4];
+        assert_eq!(ds.dot(0, &w), 0.5 - 2.0);
+        ds.axpy(0, 1.0, &mut w);
+        assert_eq!(w, vec![1.0, 1.5, 1.0, -1.0]);
+        assert_eq!(ds.norm_sq(0), 0.25 + 4.0);
+    }
+
+    #[test]
+    fn bbit_matches_materialized_csr() {
+        let mut pc = PackedCodes::new(4, 6);
+        pc.push_row(&[0, 3, 7, 15, 2, 9]).unwrap();
+        pc.push_row(&[1, 1, 1, 1, 1, 1]).unwrap();
+        let bb = BbitDataset::new(pc, vec![1, -1]);
+        let csr = bb.to_sparse_dataset();
+        let mut w: Vec<f32> = (0..bb.dim()).map(|i| (i % 13) as f32 * 0.1).collect();
+        for i in 0..2 {
+            assert!((FeatureMatrix::dot(&bb, i, &w) - csr.dot(i, &w)).abs() < 1e-5);
+            assert_eq!(FeatureMatrix::norm_sq(&bb, i), 6.0);
+        }
+        let mut w2 = w.clone();
+        FeatureMatrix::axpy(&bb, 0, 0.5, &mut w);
+        csr.axpy(0, 0.5, &mut w2);
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let ds = csr();
+        let mut model = LinearModel::zeros(8);
+        model.w[0] = 1.0; // predicts +1 for row 0, +1 (margin 0) for row 1
+        assert_eq!(accuracy(&model, &ds), 0.5);
+        model.w[2] = -1.0;
+        model.w[3] = -1.0;
+        assert_eq!(accuracy(&model, &ds), 1.0);
+    }
+}

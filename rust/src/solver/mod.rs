@@ -1,0 +1,24 @@
+//! The linear-learning substrate (the paper's LIBLINEAR dependency,
+//! reimplemented): L2-regularized linear SVM via dual coordinate descent
+//! (Hsieh et al., ICML'08 — LIBLINEAR's `-s 1`/`-s 3` solvers) and
+//! L2-regularized logistic regression via Newton-CG (the TRON family,
+//! LIBLINEAR's `-s 0`), plus an SGD solver matching the semantics of the
+//! AOT'd PJRT train artifacts.
+//!
+//! All solvers are generic over [`FeatureMatrix`], so the same code trains
+//! on raw CSR data, VW-hashed real-valued data, and implicit b-bit
+//! expanded data (Section 3) without materializing the 2^b·k vectors.
+
+pub mod cv;
+pub mod dcd_svm;
+pub mod linear;
+pub mod lr_newton;
+pub mod model_io;
+pub mod sgd;
+
+pub use cv::{cross_validate, CvReport};
+pub use dcd_svm::{train_svm, SvmConfig, SvmLoss};
+pub use linear::{accuracy, FeatureMatrix, LinearModel, TrainStats};
+pub use lr_newton::{train_lr, LrConfig};
+pub use model_io::SavedModel;
+pub use sgd::{train_sgd, SgdConfig, SgdLoss};

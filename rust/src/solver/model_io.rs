@@ -1,0 +1,189 @@
+//! Trained-model persistence: weights + the hashing recipe needed to
+//! classify raw documents later.
+//!
+//! Because every hash family in this crate derives deterministically from
+//! a `u64` seed (DESIGN.md §5b), a model file only stores `(b, k, d,
+//! seed)` plus the weight vector — the loader re-draws the identical
+//! family and the `classify` CLI can score raw LibSVM documents without
+//! any other state.  Text header + little-endian f32 weights.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::hashing::minwise::BbitMinHash;
+use crate::solver::linear::LinearModel;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Everything needed to classify a raw document.
+#[derive(Clone, Debug)]
+pub struct SavedModel {
+    pub b: u32,
+    pub k: usize,
+    pub d: u64,
+    pub seed: u64,
+    pub model: LinearModel,
+}
+
+impl SavedModel {
+    /// Re-draw the (deterministic) hash family this model was trained with.
+    pub fn hasher(&self) -> BbitMinHash {
+        BbitMinHash::draw(self.k, self.b, self.d, &mut Rng::new(self.seed))
+    }
+
+    /// Margin for one raw document (set of feature indices).
+    pub fn margin(&self, set: &[u32], scratch: &mut ClassifyScratch) -> f32 {
+        scratch.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
+        let bshift = self.b as usize;
+        let mut acc = 0.0f32;
+        for (j, &c) in scratch.codes.iter().enumerate() {
+            acc += self.model.w[(j << bshift) + c as usize];
+        }
+        acc
+    }
+
+    pub fn scratch(&self) -> ClassifyScratch {
+        ClassifyScratch {
+            hasher: self.hasher(),
+            z: vec![0u64; self.k],
+            codes: vec![0u16; self.k],
+        }
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "BBMH-MODEL v1")?;
+        writeln!(w, "b {}", self.b)?;
+        writeln!(w, "k {}", self.k)?;
+        writeln!(w, "d {}", self.d)?;
+        writeln!(w, "seed {}", self.seed)?;
+        writeln!(w, "dim {}", self.model.w.len())?;
+        writeln!(w, "weights")?;
+        for x in &self.model.w {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let mut r = BufReader::new(f);
+        // read header lines until "weights"
+        let mut header = String::new();
+        let mut byte = [0u8; 1];
+        loop {
+            r.read_exact(&mut byte)?;
+            header.push(byte[0] as char);
+            if header.ends_with("weights\n") {
+                break;
+            }
+            if header.len() > 4096 {
+                return Err(Error::InvalidArg("model header too large".into()));
+            }
+        }
+        let mut lines = header.lines();
+        if lines.next() != Some("BBMH-MODEL v1") {
+            return Err(Error::InvalidArg("bad model magic".into()));
+        }
+        let mut get = |key: &str| -> Result<u64> {
+            let line = lines
+                .next()
+                .ok_or_else(|| Error::InvalidArg(format!("missing {key}")))?;
+            let (k, v) = line
+                .split_once(' ')
+                .ok_or_else(|| Error::InvalidArg(format!("bad line {line:?}")))?;
+            if k != key {
+                return Err(Error::InvalidArg(format!("expected {key}, got {k}")));
+            }
+            v.parse()
+                .map_err(|_| Error::InvalidArg(format!("bad {key} value {v:?}")))
+        };
+        let b = get("b")? as u32;
+        let k = get("k")? as usize;
+        let d = get("d")?;
+        let seed = get("seed")?;
+        let dim = get("dim")? as usize;
+        if dim != (1usize << b) * k {
+            return Err(Error::InvalidArg(format!(
+                "dim {dim} inconsistent with 2^{b}·{k}"
+            )));
+        }
+        let mut bytes = vec![0u8; dim * 4];
+        r.read_exact(&mut bytes)?;
+        let w: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(SavedModel { b, k, d, seed, model: LinearModel { w } })
+    }
+}
+
+/// Reusable per-thread classification scratch (hash family + buffers).
+pub struct ClassifyScratch {
+    hasher: BbitMinHash,
+    z: Vec<u64>,
+    codes: Vec<u16>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+    use crate::data::gen::{CorpusConfig, CorpusGenerator};
+    use crate::solver::dcd_svm::{train_svm, SvmConfig};
+    use crate::solver::linear::accuracy;
+
+    #[test]
+    fn save_load_roundtrip_and_classify_consistency() {
+        let corpus =
+            CorpusGenerator::new(CorpusConfig::rcv1_like(400, 77)).generate();
+        let (b, k, d, seed) = (8u32, 64usize, corpus.dim, 0x5EED1u64);
+        let job = HashJob::Bbit { b, k, d, seed };
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 64, queue_depth: 2 });
+        let (hashed, _) = pipe.run(dataset_chunks(&corpus, 64), &job).unwrap();
+        let hashed = hashed.into_bbit().unwrap();
+        let (model, _) = train_svm(&hashed, &SvmConfig::with_c(1.0));
+        let acc_direct = accuracy(&model, &hashed);
+        assert!(acc_direct > 0.9);
+
+        let saved = SavedModel { b, k, d, seed, model };
+        let dir = std::env::temp_dir().join(format!("bbmh_model_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bbmh");
+        saved.save(&path).unwrap();
+        let loaded = SavedModel::load(&path).unwrap();
+        assert_eq!(loaded.b, b);
+        assert_eq!(loaded.model.w, saved.model.w);
+
+        // classifying raw documents must match the trained-path accuracy
+        let mut scratch = loaded.scratch();
+        let correct = (0..corpus.len())
+            .filter(|&i| {
+                let m = loaded.margin(corpus.row(i).0, &mut scratch);
+                (m >= 0.0) == (corpus.labels[i] > 0)
+            })
+            .count();
+        let acc_raw = correct as f64 / corpus.len() as f64;
+        assert!((acc_raw - acc_direct).abs() < 1e-9, "{acc_raw} vs {acc_direct}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_corruption() {
+        let dir = std::env::temp_dir().join(format!("bbmh_badmodel_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bbmh");
+        std::fs::write(&path, b"NOT A MODEL\nweights\n").unwrap();
+        assert!(SavedModel::load(&path).is_err());
+        // truncated weights
+        std::fs::write(
+            &path,
+            b"BBMH-MODEL v1\nb 4\nk 2\nd 1024\nseed 1\ndim 32\nweights\nxx",
+        )
+        .unwrap();
+        assert!(SavedModel::load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,193 @@
+//! SGD solver with Bottou's learning-rate schedule.
+//!
+//! Two roles: (a) the "online algorithm" the paper's loading-time argument
+//! mentions (Section 1); (b) the *native twin* of the AOT'd PJRT train
+//! artifacts — `train_chunk` in `python/compile/model.py` implements the
+//! same update, so the cross-layer parity test drives both on identical
+//! data and requires near-identical weights.
+//!
+//! Objective (per-example averaged):  λ/2 ‖w‖² + (1/n) Σ loss(yᵢ wᵀxᵢ),
+//! with λ = 1/(C·n) mapping to the paper's C convention.  Minibatch step:
+//!
+//!   w ← (1 − η λ) w − η · (1/B) Σ_{i∈batch} ∂loss/∂m · xᵢ,
+//!   η(t) = η₀ / (1 + t·λ·η₀).
+
+use std::time::Instant;
+
+use crate::solver::linear::{FeatureMatrix, LinearModel, TrainStats};
+
+/// Loss selector matching the PJRT artifact pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SgdLoss {
+    Logistic,
+    SquaredHinge,
+}
+
+impl SgdLoss {
+    /// dLoss/dMargin at (margin, label).
+    #[inline]
+    pub fn grad_coef(self, m: f32, y: f32) -> f32 {
+        match self {
+            SgdLoss::Logistic => -y / (1.0 + (y * m).exp()),
+            SgdLoss::SquaredHinge => -2.0 * y * (1.0 - y * m).max(0.0),
+        }
+    }
+
+    #[inline]
+    pub fn loss(self, m: f64, y: f64) -> f64 {
+        match self {
+            SgdLoss::Logistic => {
+                let ym = y * m;
+                if ym > 0.0 {
+                    (-ym).exp().ln_1p()
+                } else {
+                    -ym + ym.exp().ln_1p()
+                }
+            }
+            SgdLoss::SquaredHinge => {
+                let v = (1.0 - y * m).max(0.0);
+                v * v
+            }
+        }
+    }
+}
+
+/// Solver configuration.
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    pub loss: SgdLoss,
+    /// Initial learning rate η₀.
+    pub lr0: f64,
+    /// Regularization λ (use `lambda_from_c` to map from the paper's C).
+    pub lambda: f64,
+    pub epochs: usize,
+    pub batch: usize,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { loss: SgdLoss::Logistic, lr0: 0.5, lambda: 1e-4, epochs: 10, batch: 256 }
+    }
+}
+
+/// λ = 1/(C·n): the SVM/LR "C" convention to per-example λ.
+pub fn lambda_from_c(c: f64, n: usize) -> f64 {
+    1.0 / (c * n as f64)
+}
+
+/// Train by minibatch SGD.  Deterministic: fixed in-order minibatches, the
+/// same order as the PJRT `train_chunk` artifact scans (no shuffling, so
+/// the parity test can compare weights).
+pub fn train_sgd<F: FeatureMatrix>(data: &F, cfg: &SgdConfig) -> (LinearModel, TrainStats) {
+    let t0 = Instant::now();
+    let n = data.n();
+    let mut w = vec![0.0f32; data.dim()];
+    let mut step = 0u64;
+    let mut stats = TrainStats::default();
+    let mut coefs: Vec<f32> = Vec::with_capacity(cfg.batch);
+    for _ in 0..cfg.epochs {
+        let mut i0 = 0;
+        while i0 < n {
+            let bsz = cfg.batch.min(n - i0);
+            let lr = cfg.lr0 / (1.0 + step as f64 * cfg.lambda * cfg.lr0);
+            // margins/grad coefficients first (batch semantics: all margins
+            // computed against the pre-update w, matching the artifact)
+            coefs.clear();
+            for i in i0..i0 + bsz {
+                let m = data.dot(i, &w);
+                coefs.push(cfg.loss.grad_coef(m, data.label(i)));
+            }
+            // decay + accumulate
+            let decay = (1.0 - lr * cfg.lambda) as f32;
+            if decay != 1.0 {
+                w.iter_mut().for_each(|x| *x *= decay);
+            }
+            let scale = (lr / bsz as f64) as f32;
+            for (off, i) in (i0..i0 + bsz).enumerate() {
+                let g = coefs[off];
+                if g != 0.0 {
+                    data.axpy(i, -scale * g, &mut w);
+                }
+            }
+            step += 1;
+            i0 += bsz;
+        }
+        stats.iterations += 1;
+    }
+    stats.converged = true;
+    stats.objective = {
+        let reg = 0.5
+            * cfg.lambda
+            * w.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+        let avg: f64 = (0..n)
+            .map(|i| cfg.loss.loss(data.dot(i, &w) as f64, data.label(i) as f64))
+            .sum::<f64>()
+            / n as f64;
+        reg + avg
+    };
+    stats.train_seconds = t0.elapsed().as_secs_f64();
+    (LinearModel { w }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{Example, SparseDataset};
+    use crate::solver::linear::accuracy;
+    use crate::util::Rng;
+
+    fn separable(n: usize, seed: u64) -> SparseDataset {
+        let mut rng = Rng::new(seed);
+        let mut examples = Vec::new();
+        for _ in 0..n {
+            let pos = rng.bool();
+            let base = if pos { 0 } else { 16 };
+            let feats: Vec<u32> =
+                (0..6).map(|_| base + rng.below(16) as u32).collect();
+            examples.push(Example::binary(if pos { 1 } else { -1 }, feats));
+        }
+        SparseDataset::from_examples(32, &examples)
+    }
+
+    #[test]
+    fn learns_separable_data_both_losses() {
+        let ds = separable(512, 51);
+        for loss in [SgdLoss::Logistic, SgdLoss::SquaredHinge] {
+            let cfg = SgdConfig { loss, epochs: 20, batch: 64, ..Default::default() };
+            let (model, _) = train_sgd(&ds, &cfg);
+            assert!(accuracy(&model, &ds) > 0.97, "{loss:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = separable(128, 53);
+        let cfg = SgdConfig::default();
+        let (m1, _) = train_sgd(&ds, &cfg);
+        let (m2, _) = train_sgd(&ds, &cfg);
+        assert_eq!(m1.w, m2.w);
+    }
+
+    #[test]
+    fn objective_decreases_over_epochs() {
+        let ds = separable(256, 57);
+        let short = train_sgd(&ds, &SgdConfig { epochs: 1, ..Default::default() });
+        let long = train_sgd(&ds, &SgdConfig { epochs: 15, ..Default::default() });
+        assert!(long.1.objective < short.1.objective);
+    }
+
+    #[test]
+    fn grad_coefs_match_losses() {
+        // logistic at m=0: -y/2; sqhinge at (m=0,y=1): -2
+        assert!((SgdLoss::Logistic.grad_coef(0.0, 1.0) + 0.5).abs() < 1e-6);
+        assert!((SgdLoss::SquaredHinge.grad_coef(0.0, 1.0) + 2.0).abs() < 1e-6);
+        // no gradient beyond the margin for hinge
+        assert_eq!(SgdLoss::SquaredHinge.grad_coef(2.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn lambda_from_c_mapping() {
+        assert!((lambda_from_c(1.0, 1000) - 1e-3).abs() < 1e-12);
+        assert!((lambda_from_c(10.0, 100) - 1e-3).abs() < 1e-12);
+    }
+}

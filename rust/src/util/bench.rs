@@ -1,0 +1,180 @@
+//! Micro-benchmark harness (criterion-style, dependency-free).
+//!
+//! The image's offline crate set does not include criterion, so the
+//! `benches/` binaries (declared `harness = false`) use this module: warmup,
+//! adaptive iteration count targeting a fixed measurement window, and
+//! mean/σ/median/p95 reporting in a criterion-like one-line format.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration across measurement batches.
+    pub ns_per_iter: Vec<f64>,
+    /// Optional throughput denominator (elements processed per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.ns_per_iter)
+    }
+
+    /// Human-readable line, criterion-like.
+    pub fn report(&self) -> String {
+        let mean = self.mean_ns();
+        let sd = stats::stddev(&self.ns_per_iter);
+        let med = stats::median(&self.ns_per_iter);
+        let mut line = format!(
+            "{:<44} time: [{} ± {} med {}]",
+            self.name,
+            fmt_ns(mean),
+            fmt_ns(sd),
+            fmt_ns(med),
+        );
+        if let Some(elems) = self.elements {
+            let per_sec = elems as f64 / (mean * 1e-9);
+            line.push_str(&format!("  thrpt: {}/s", fmt_count(per_sec)));
+        }
+        line
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_count(c: f64) -> String {
+    if c >= 1e9 {
+        format!("{:.2}G", c / 1e9)
+    } else if c >= 1e6 {
+        format!("{:.2}M", c / 1e6)
+    } else if c >= 1e3 {
+        format!("{:.2}K", c / 1e3)
+    } else {
+        format!("{c:.1}")
+    }
+}
+
+/// Benchmark runner with a fixed measurement budget per case.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    batches: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new(Duration::from_millis(300), Duration::from_secs(1), 10)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: Duration, measure: Duration, batches: usize) -> Self {
+        Bench { warmup, measure, batches, results: Vec::new() }
+    }
+
+    /// Quick profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Bench::new(Duration::from_millis(50), Duration::from_millis(400), 5)
+    }
+
+    /// Run `f` repeatedly; `f` must return something observable to prevent
+    /// the optimizer from deleting the work (returned value is black-boxed).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.bench_with_elements(name, None, &mut f)
+    }
+
+    /// As [`bench`], reporting throughput as `elements`/iteration/second.
+    pub fn bench_elems<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: F,
+    ) -> &Measurement {
+        self.bench_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_with_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Measurement {
+        // Warmup + calibration: find iters that fill measure/batches.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters as f64;
+        let batch_time = self.measure.as_secs_f64() / self.batches as f64;
+        let iters = ((batch_time / per_iter).ceil() as u64).max(1);
+
+        let mut ns = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let m = Measurement { name: name.to_string(), ns_per_iter: ns, elements };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Optimizer barrier (stable-rust equivalent of `std::hint::black_box`,
+/// kept as a wrapper so benches read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            3,
+        );
+        let m = b.bench("noop-ish", || 1 + 1).clone();
+        assert!(m.mean_ns() > 0.0);
+        assert_eq!(m.ns_per_iter.len(), 3);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::new(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            2,
+        );
+        let m = b.bench_elems("sum", 1000, || (0..1000u64).sum::<u64>());
+        assert!(m.report().contains("thrpt"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities: deterministic PRNG, micro-bench harness,
+//! and stats helpers.  Hand-rolled (no external deps) so every randomized
+//! result in the repo is reproducible from a single `u64` seed.
+
+pub mod bench;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,110 @@
+//! Smoke-run every experiment harness at CI (tiny) scale: each must
+//! produce non-empty tables and its claims' minimal sanity conditions.
+
+use bbit_mh::experiments::{self, Ctx, Scale};
+
+fn tiny_ctx() -> Ctx {
+    let mut s = Scale::tiny();
+    s.results_dir = std::env::temp_dir()
+        .join(format!("bbit_results_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    Ctx::new(s)
+}
+
+#[test]
+fn table1_reports_both_datasets() {
+    let mut ctx = tiny_ctx();
+    let tables = experiments::run("table1", &mut ctx).unwrap();
+    assert_eq!(tables[0].n_rows(), 2);
+}
+
+#[test]
+fn fig1_accuracy_increases_with_b() {
+    let mut ctx = tiny_ctx();
+    let tables = experiments::run("fig1", &mut ctx).unwrap();
+    // headline table is last: rows of (b, k, best-acc)
+    let headline = tables.last().unwrap();
+    let get = |b: &str, k: &str| -> f64 {
+        headline
+            .rows_raw()
+            .iter()
+            .find(|r| r[0] == b && r[1] == k)
+            .unwrap()[2]
+            .parse()
+            .unwrap()
+    };
+    let k = "64";
+    assert!(get("8", k) > get("1", k) + 5.0, "b=8 must beat b=1 clearly");
+    assert!(get("4", k) > get("1", k));
+}
+
+#[test]
+fn fig5_bbit_beats_vw_at_far_less_storage() {
+    let mut ctx = tiny_ctx();
+    let tables =
+        experiments::run("fig5", &mut ctx).unwrap();
+    let t = &tables[0];
+    // rows: (method, k, C, acc, bits)
+    let rows: Vec<(String, f64, u64)> = t
+        .rows_raw()
+        .iter()
+        .map(|r| (r[0].clone(), r[3].parse().unwrap(), r[4].parse().unwrap()))
+        .collect();
+    // the paper's claim, storage-normalized: whatever accuracy 8-bit
+    // minwise reaches at its *smallest* budget, VW needs a multiple of
+    // that storage to match it.
+    let bbit_min_bits = rows
+        .iter()
+        .filter(|r| r.0.starts_with("8-bit"))
+        .map(|r| r.2)
+        .min()
+        .unwrap();
+    let bbit_acc_at_min = rows
+        .iter()
+        .filter(|r| r.0.starts_with("8-bit") && r.2 == bbit_min_bits)
+        .map(|r| r.1)
+        .fold(0.0f64, f64::max);
+    let vw_bits_to_match = rows
+        .iter()
+        .filter(|r| r.0 == "VW" && r.1 >= bbit_acc_at_min)
+        .map(|r| r.2)
+        .min();
+    match vw_bits_to_match {
+        None => {} // no VW config matches at all — claim holds trivially
+        Some(bits) => assert!(
+            bits >= 4 * bbit_min_bits,
+            "VW matched {bbit_acc_at_min}% with only {bits} bits vs b-bit {bbit_min_bits}"
+        ),
+    }
+}
+
+#[test]
+fn variance_tables_track_theory() {
+    let mut ctx = tiny_ctx();
+    let tables = experiments::run("variance", &mut ctx).unwrap();
+    // first table: ratio column (index 4) near 1 for every estimator
+    for row in tables[0].rows_raw() {
+        let ratio: f64 = row[4].parse().unwrap();
+        assert!((0.6..1.6).contains(&ratio), "{row:?}");
+    }
+    // storage-ratio table strictly > 5x everywhere
+    for row in tables[2].rows_raw() {
+        let ratio: f64 = row[3].parse().unwrap();
+        assert!(ratio > 5.0, "{row:?}");
+    }
+}
+
+#[test]
+fn fig8_permutation_and_universal_overlap() {
+    let mut ctx = tiny_ctx();
+    let tables = experiments::run("fig8", &mut ctx).unwrap();
+    for row in tables[0].rows_raw() {
+        let (perm, univ): (f64, f64) = (row[3].parse().unwrap(), row[4].parse().unwrap());
+        let sd: f64 = row[5].parse::<f64>().unwrap().max(row[6].parse().unwrap());
+        assert!(
+            (perm - univ).abs() <= 3.0 * sd.max(0.5),
+            "arms diverge: {row:?}"
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Integration tests: the full generate -> expand -> pipeline -> train ->
+//! evaluate flow, plus cross-module behaviours no unit test covers.
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
+use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use bbit_mh::hashing::minwise::resemblance;
+use bbit_mh::util::Rng;
+
+fn expanded_corpus(n: usize, seed: u64) -> bbit_mh::data::SparseDataset {
+    let base = CorpusGenerator::new(CorpusConfig {
+        n_docs: n,
+        vocab: 1200,
+        zipf_alpha: 1.05,
+        mean_tokens: 22.0,
+        class_signal: 0.55,
+        pos_fraction: 0.5,
+        seed,
+    })
+    .generate();
+    let cfg = ExpandConfig { vocab: 1200, dim: 1 << 28, three_way_rate: 30, seed: seed ^ 1 };
+    expand_dataset(&cfg, &base)
+}
+
+#[test]
+fn end_to_end_bbit_beats_chance_and_vw_at_equal_storage() {
+    let ds = expanded_corpus(900, 0x1E57);
+    let (train_raw, test_raw) = ds.split(0.5, &mut Rng::new(2));
+    let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 128, queue_depth: 2 });
+    let sched = Scheduler::new(2);
+
+    // b-bit: b=8, k=64 => 512 bits/doc
+    let job = HashJob::Bbit { b: 8, k: 64, d: 1 << 28, seed: 5 };
+    let (tr, _) = pipe.run(dataset_chunks(&train_raw, 128), &job).unwrap();
+    let (te, _) = pipe.run(dataset_chunks(&test_raw, 128), &job).unwrap();
+    let (tr, te) = (tr.into_bbit().unwrap(), te.into_bbit().unwrap());
+    let bbit = sched
+        .run_grid(&tr, &te, &[TrainJob { tag: String::new(), solver: SolverKind::SvmDcd, c: 1.0 }])
+        .unwrap()[0]
+        .test_accuracy;
+
+    // VW at the same storage: 16 bins x 32 bits = 512 bits/doc
+    let job = HashJob::Vw { bins: 16, seed: 7 };
+    let (tr, _) = pipe.run(dataset_chunks(&train_raw, 128), &job).unwrap();
+    let (te, _) = pipe.run(dataset_chunks(&test_raw, 128), &job).unwrap();
+    let (tr, te) = (tr.into_vw().unwrap(), te.into_vw().unwrap());
+    let vw = sched
+        .run_grid(&tr, &te, &[TrainJob { tag: String::new(), solver: SolverKind::SvmDcd, c: 1.0 }])
+        .unwrap()[0]
+        .test_accuracy;
+
+    assert!(bbit > 0.75, "b-bit accuracy too low: {bbit}");
+    assert!(
+        bbit > vw + 0.03,
+        "paper's core claim violated at equal storage: bbit={bbit} vw={vw}"
+    );
+}
+
+#[test]
+fn hashing_preserves_resemblance_ordering() {
+    // documents more similar in raw space stay more similar in code space
+    let ds = expanded_corpus(60, 0xABC);
+    let job = HashJob::Bbit { b: 16, k: 128, d: 1 << 28, seed: 9 };
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let (out, _) = pipe.run(dataset_chunks(&ds, 32), &job).unwrap();
+    let bb = out.into_bbit().unwrap();
+    let mut rng = Rng::new(11);
+    let mut agree = 0;
+    let mut total = 0;
+    for _ in 0..3000 {
+        let (i, j, l) = (
+            rng.below_usize(60),
+            rng.below_usize(60),
+            rng.below_usize(60),
+        );
+        if i == j || j == l || i == l {
+            continue;
+        }
+        let r_ij = resemblance(ds.row(i).0, ds.row(j).0);
+        let r_il = resemblance(ds.row(i).0, ds.row(l).0);
+        if (r_ij - r_il).abs() < 0.03 {
+            continue; // too close to call under sampling noise
+        }
+        let m_ij = (0..128).filter(|&q| bb.codes.get(i, q) == bb.codes.get(j, q)).count();
+        let m_il = (0..128).filter(|&q| bb.codes.get(i, q) == bb.codes.get(l, q)).count();
+        total += 1;
+        if (r_ij > r_il) == (m_ij > m_il) {
+            agree += 1;
+        }
+    }
+    assert!(total > 30, "not enough separated triples ({total})");
+    assert!(
+        agree as f64 / total as f64 > 0.75,
+        "ordering broken: {agree}/{total}"
+    );
+}
+
+#[test]
+fn libsvm_file_pipeline_equals_in_memory_pipeline() {
+    let ds = expanded_corpus(150, 0xF11E);
+    let dir = std::env::temp_dir().join(format!("bbit_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ds.svm");
+    {
+        let mut w = LibsvmWriter::create(&path).unwrap();
+        w.write_dataset(&ds).unwrap();
+        w.finish().unwrap();
+    }
+    let job = HashJob::Bbit { b: 8, k: 32, d: 1 << 28, seed: 21 };
+    let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 40, queue_depth: 2 });
+    let (mem, _) = pipe.run(dataset_chunks(&ds, 40), &job).unwrap();
+    let source = ChunkedReader::new(LibsvmReader::open(&path).unwrap().binary(), 40);
+    let (file, _) = pipe.run(source, &job).unwrap();
+    let (mem, file) = (mem.into_bbit().unwrap(), file.into_bbit().unwrap());
+    assert_eq!(mem.len(), file.len());
+    assert_eq!(mem.labels, file.labels);
+    for i in 0..mem.len() {
+        assert_eq!(mem.codes.row(i), file.codes.row(i), "row {i}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn scheduler_c_sweep_on_hashed_data_shows_accuracy_plateau() {
+    // the Figures 1/3 qualitative shape: accuracy rises with C then plateaus
+    let ds = expanded_corpus(800, 0x51EE);
+    let (train_raw, test_raw) = ds.split(0.5, &mut Rng::new(4));
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let job = HashJob::Bbit { b: 8, k: 128, d: 1 << 28, seed: 31 };
+    let (tr, _) = pipe.run(dataset_chunks(&train_raw, 128), &job).unwrap();
+    let (te, _) = pipe.run(dataset_chunks(&test_raw, 128), &job).unwrap();
+    let (tr, te) = (tr.into_bbit().unwrap(), te.into_bbit().unwrap());
+    let jobs: Vec<TrainJob> = [0.0001, 0.01, 1.0, 10.0]
+        .iter()
+        .map(|&c| TrainJob { tag: String::new(), solver: SolverKind::SvmDcd, c })
+        .collect();
+    let out = Scheduler::new(4).run_grid(&tr, &te, &jobs).unwrap();
+    let accs: Vec<f64> = out.iter().map(|o| o.test_accuracy).collect();
+    // tiny C underfits; the C>=1 end must beat it
+    assert!(
+        accs[2].max(accs[3]) > accs[0] + 0.02,
+        "no C-shape: {accs:?}"
+    );
+}
+
+#[test]
+fn error_paths_surface_cleanly() {
+    // missing file
+    assert!(LibsvmReader::open("/definitely/not/here.svm").is_err());
+    // malformed libsvm inside pipeline propagates
+    let bad = "+1 3:1\nnot a line\n";
+    let dir = std::env::temp_dir().join(format!("bbit_bad_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.svm");
+    std::fs::write(&path, bad).unwrap();
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let source = ChunkedReader::new(LibsvmReader::open(&path).unwrap().binary(), 8);
+    let out = pipe.run(source, &HashJob::Bbit { b: 4, k: 8, d: 1 << 20, seed: 1 });
+    assert!(out.is_err());
+    std::fs::remove_dir_all(dir).ok();
+}

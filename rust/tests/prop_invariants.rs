@@ -1,0 +1,332 @@
+//! Property-based tests over coordinator/substrate invariants.
+//!
+//! The offline crate set has no proptest, so this file uses a small
+//! generate-and-check harness (`cases`) driven by the crate's seeded PRNG:
+//! hundreds of random cases per property, with the failing seed printed so
+//! any counterexample is reproducible with `SEED=<n> cargo test`.
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::sharding::ShardPlan;
+use bbit_mh::data::dataset::{Example, SparseDataset};
+use bbit_mh::data::libsvm::{LibsvmReader, LibsvmWriter};
+use bbit_mh::encode::expansion::BbitDataset;
+use bbit_mh::encode::packed::PackedCodes;
+use bbit_mh::hashing::minwise::{resemblance, BbitMinHash, MinwiseHasher};
+use bbit_mh::hashing::permutation::{FeistelPermutation, Permutation};
+use bbit_mh::solver::linear::FeatureMatrix;
+use bbit_mh::util::Rng;
+
+/// Run `body(case_rng, case_no)` for `n` random cases, printing the seed on
+/// failure so any counterexample reproduces with `SEED=<n> cargo test`.
+fn cases(n: usize, tag: &str, body: impl Fn(&mut Rng, usize)) {
+    let base = std::env::var("SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD15EA5Eu64);
+    for case in 0..n {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            panic!("property {tag:?} failed at case {case} (SEED={seed}): {e:?}");
+        }
+    }
+}
+
+fn random_set(rng: &mut Rng, d: u64, max_len: usize) -> Vec<u32> {
+    let len = 1 + rng.below_usize(max_len);
+    rng.sample_distinct(d, len.min(d as usize))
+        .into_iter()
+        .map(|x| x as u32)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// hashing invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_minwise_subset_monotonicity() {
+    // min over a superset can only be <= min over the subset
+    cases(100, "minwise_subset", |rng, _| {
+        let d = 1u64 << (16 + rng.below(12) as u32);
+        let sup = random_set(rng, d, 300);
+        let take = 1 + rng.below_usize(sup.len());
+        let sub: Vec<u32> = sup[..take].to_vec();
+        let mh = MinwiseHasher::draw(1 + rng.below_usize(32), d, rng);
+        let (zs, zp) = (mh.hash(&sub), mh.hash(&sup));
+        for (a, b) in zs.iter().zip(&zp) {
+            assert!(b <= a, "superset min must not exceed subset min");
+        }
+    });
+}
+
+#[test]
+fn prop_minwise_identical_sets_collide_everywhere() {
+    cases(50, "minwise_identical", |rng, _| {
+        let d = 1u64 << 20;
+        let s = random_set(rng, d, 200);
+        let mh = MinwiseHasher::draw(16, d, rng);
+        assert_eq!(mh.hash(&s), mh.hash(&s));
+        // and a permuted copy
+        let mut s2 = s.clone();
+        rng.shuffle(&mut s2);
+        assert_eq!(mh.hash(&s), mh.hash(&s2));
+    });
+}
+
+#[test]
+fn prop_bbit_code_range() {
+    cases(60, "bbit_range", |rng, _| {
+        let b = 1 + rng.below(16) as u32;
+        let d = 1u64 << 24;
+        let bb = BbitMinHash::draw(8, b, d, rng);
+        let s = random_set(rng, d, 100);
+        for c in bb.codes(&s) {
+            assert!((c as u32) < (1u32 << b));
+        }
+    });
+}
+
+#[test]
+fn prop_feistel_bijection_random_domains() {
+    cases(20, "feistel", |rng, _| {
+        let d = 2 + rng.below(5000);
+        let p = FeistelPermutation::draw(d, rng);
+        let mut seen = vec![false; d as usize];
+        for t in 0..d {
+            let v = p.apply(t);
+            assert!(v < d && !seen[v as usize]);
+            seen[v as usize] = true;
+        }
+    });
+}
+
+#[test]
+fn prop_resemblance_bounds_and_symmetry() {
+    cases(100, "resemblance", |rng, _| {
+        let d = 1u64 << 16;
+        let (mut a, mut b) = (random_set(rng, d, 150), random_set(rng, d, 150));
+        a.sort_unstable();
+        b.sort_unstable();
+        let r1 = resemblance(&a, &b);
+        let r2 = resemblance(&b, &a);
+        assert!((0.0..=1.0).contains(&r1));
+        assert_eq!(r1, r2);
+        assert_eq!(resemblance(&a, &a), 1.0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// encoding invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_packed_roundtrip_random_geometry() {
+    cases(80, "packed_roundtrip", |rng, _| {
+        let b = 1 + rng.below(16) as u32;
+        let k = 1 + rng.below_usize(70);
+        let n = 1 + rng.below_usize(30);
+        let mut pc = PackedCodes::new(b, k);
+        let mut rows = Vec::new();
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| rng.below(1 << b) as u16).collect();
+            pc.push_row(&row).unwrap();
+            rows.push(row);
+        }
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(&pc.row(i), row);
+        }
+        // save/load roundtrip preserves everything
+        let mut buf = Vec::new();
+        pc.save(&mut buf).unwrap();
+        assert_eq!(PackedCodes::load(&buf[..]).unwrap(), pc);
+    });
+}
+
+#[test]
+fn prop_truncate_bits_commutes_with_masking() {
+    cases(60, "truncate_bits", |rng, _| {
+        let b = 2 + rng.below(15) as u32;
+        let b2 = 1 + rng.below(b as u64 - 1) as u32;
+        let k = 1 + rng.below_usize(40);
+        let mut pc = PackedCodes::new(b, k);
+        let row: Vec<u16> = (0..k).map(|_| rng.below(1 << b) as u16).collect();
+        pc.push_row(&row).unwrap();
+        let t = pc.truncate_bits(b2).unwrap();
+        let mask = (1u16 << b2) - 1;
+        for j in 0..k {
+            assert_eq!(t.get(0, j), row[j] & mask);
+        }
+    });
+}
+
+#[test]
+fn prop_bbit_dot_matches_materialized_expansion() {
+    cases(40, "bbit_dot", |rng, _| {
+        let b = 1 + rng.below(8) as u32;
+        let k = 1 + rng.below_usize(30);
+        let n = 1 + rng.below_usize(20);
+        let mut pc = PackedCodes::new(b, k);
+        let mut labels = Vec::new();
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| rng.below(1 << b) as u16).collect();
+            pc.push_row(&row).unwrap();
+            labels.push(if rng.bool() { 1i8 } else { -1 });
+        }
+        let bb = BbitDataset::new(pc, labels);
+        let csr = bb.to_sparse_dataset();
+        let w: Vec<f32> = (0..bb.dim()).map(|_| rng.f32() - 0.5).collect();
+        for i in 0..n {
+            let a = FeatureMatrix::dot(&bb, i, &w);
+            let c = csr.dot(i, &w);
+            assert!((a - c).abs() < 1e-4, "row {i}: {a} vs {c}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants (routing / batching / state)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shard_plan_tiles_exactly() {
+    cases(200, "shard_plan", |rng, _| {
+        let n = rng.below_usize(10_000);
+        let cs = 1 + rng.below_usize(500);
+        let plan = ShardPlan::new(n, cs);
+        assert!(plan.covers_exactly());
+        let total: usize = plan.iter().map(|a| a.rows).sum();
+        assert_eq!(total, n);
+    });
+}
+
+#[test]
+fn prop_pipeline_preserves_every_example_in_order() {
+    // the central routing/batching invariant: any (workers, chunk, queue)
+    // configuration must emit exactly the input rows, in input order
+    cases(12, "pipeline_integrity", |rng, _| {
+        let n = 20 + rng.below_usize(300);
+        let d = 1u64 << 18;
+        let mut ds = SparseDataset::new(d);
+        for i in 0..n {
+            let mut set = random_set(rng, d - 2, 30);
+            set.push((d - 1) as u32);
+            set.sort_unstable();
+            set.dedup();
+            ds.push(&Example::binary(if i % 3 == 0 { 1 } else { -1 }, set));
+        }
+        let workers = 1 + rng.below_usize(6);
+        let chunk = 1 + rng.below_usize(50);
+        let depth = 1 + rng.below_usize(4);
+        let k = 1 + rng.below_usize(16);
+        let b = 1 + rng.below(8) as u32;
+        let job = HashJob::Bbit { b, k, d, seed: 99 };
+        let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: chunk, queue_depth: depth });
+        let (out, report) = pipe.run(dataset_chunks(&ds, chunk), &job).unwrap();
+        let bb = out.into_bbit().unwrap();
+        assert_eq!(bb.len(), n, "row count");
+        assert_eq!(report.docs, n);
+        assert_eq!(bb.labels, ds.labels, "label order");
+        // spot-check rows against the sequential hasher
+        let hasher = BbitMinHash::draw(k, b, d, &mut Rng::new(99));
+        for i in (0..n).step_by(17.max(n / 7)) {
+            assert_eq!(bb.codes.row(i), hasher.codes(ds.row(i).0), "row {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_libsvm_roundtrip_arbitrary_examples() {
+    cases(60, "libsvm_roundtrip", |rng, _| {
+        let n = 1 + rng.below_usize(20);
+        let mut examples = Vec::new();
+        for _ in 0..n {
+            let set = random_set(rng, 1 << 28, 50);
+            if rng.bool() {
+                examples.push(Example::binary(if rng.bool() { 1 } else { -1 }, set));
+            } else {
+                let vals: Vec<f32> =
+                    set.iter().map(|_| (rng.below(1000) as f32) / 8.0 + 0.125).collect();
+                examples.push(Example {
+                    label: if rng.bool() { 1 } else { -1 },
+                    indices: set,
+                    values: Some(vals),
+                });
+            }
+        }
+        let mut buf = Vec::new();
+        {
+            let mut w = LibsvmWriter::new(&mut buf);
+            for ex in &examples {
+                w.write_example(ex).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        let back: Vec<Example> =
+            LibsvmReader::new(&buf[..]).map(|e| e.unwrap()).collect();
+        assert_eq!(back.len(), examples.len());
+        for (a, b) in examples.iter().zip(&back) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.indices, b.indices);
+            match (&a.values, &b.values) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    for (u, v) in x.iter().zip(y) {
+                        assert!((u - v).abs() < 1e-4);
+                    }
+                }
+                other => panic!("value presence mismatch {other:?}"),
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// solver invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_svm_tighter_eps_never_worse_objective() {
+    use bbit_mh::solver::{train_svm, SvmConfig};
+    cases(10, "svm_objective", |rng, _| {
+        let n = 50 + rng.below_usize(100);
+        let d = 40u64;
+        let mut ds = SparseDataset::new(d);
+        for _ in 0..n {
+            ds.push(&Example::binary(
+                if rng.bool() { 1 } else { -1 },
+                random_set(rng, d, 8),
+            ));
+        }
+        let c = [0.01, 0.1, 1.0][rng.below_usize(3)];
+        let loose = train_svm(&ds, &SvmConfig { eps: 0.5, c, ..Default::default() });
+        let tight =
+            train_svm(&ds, &SvmConfig { eps: 1e-5, max_iter: 2000, c, ..Default::default() });
+        assert!(
+            tight.1.objective <= loose.1.objective + 1e-6 * loose.1.objective.abs().max(1.0),
+            "tight {} loose {}",
+            tight.1.objective,
+            loose.1.objective
+        );
+    });
+}
+
+#[test]
+fn prop_sgd_determinism_across_runs() {
+    use bbit_mh::solver::{train_sgd, SgdConfig};
+    cases(10, "sgd_determinism", |rng, _| {
+        let n = 30 + rng.below_usize(100);
+        let mut ds = SparseDataset::new(64);
+        for _ in 0..n {
+            ds.push(&Example::binary(
+                if rng.bool() { 1 } else { -1 },
+                random_set(rng, 64, 10),
+            ));
+        }
+        let cfg = SgdConfig { epochs: 2, batch: 16, ..Default::default() };
+        assert_eq!(train_sgd(&ds, &cfg).0.w, train_sgd(&ds, &cfg).0.w);
+    });
+}

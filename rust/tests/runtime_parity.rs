@@ -1,0 +1,286 @@
+//! Cross-layer integration tests: the PJRT artifacts (pallas kernels AOT'd
+//! through jax → HLO text) must agree with the native rust substrates on
+//! identical inputs.  This closes the loop rust ⇄ HLO ⇄ pallas ⇄ jnp-ref:
+//! the python suite pins pallas == ref, these tests pin rust == HLO.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); tests are skipped
+//! with a message if the manifest is missing so `cargo test` stays green
+//! in a fresh checkout.
+
+use std::path::Path;
+
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::encode::packed::PackedCodes;
+use bbit_mh::hashing::minwise::BbitMinHash;
+use bbit_mh::hashing::universal::UniversalFamily;
+use bbit_mh::hashing::vw::VwHasher;
+use bbit_mh::runtime::{MinhashEngine, PjrtRuntime, TrainEngine, VwEngine};
+use bbit_mh::solver::sgd::{train_sgd, SgdConfig, SgdLoss};
+use bbit_mh::util::Rng;
+
+// The PJRT client is not Sync, so each test builds its own runtime (cheap:
+// compilation of these small modules is tens of milliseconds).
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtRuntime::cpu(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests (no artifacts?): {e}");
+            None
+        }
+    }
+}
+
+macro_rules! require_rt {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
+}
+
+fn sample_sets(n: usize, d: u64, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = 1 + rng.below_usize(400);
+            rng.sample_distinct(d.min(1 << 30), len)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn minhash_artifact_matches_native_hasher() {
+    let rt = &require_rt!();
+    let engine = MinhashEngine::new(rt, "minhash_k200").unwrap();
+    assert_eq!(engine.k, 200);
+    let mut rng = Rng::new(0xA11CE);
+    let family = UniversalFamily::draw(engine.k, engine.d_space, &mut rng);
+    let sets = sample_sets(20, engine.d_space, 42);
+    let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+    let z = engine.minhash_batch(&refs, &family).unwrap();
+
+    // native twin over the same family
+    let hasher = bbit_mh::hashing::minwise::MinwiseHasher { family: family.clone() };
+    let mut scratch = vec![0u64; engine.k];
+    for (r, set) in sets.iter().enumerate() {
+        hasher.hash_into(set, &mut scratch);
+        for j in 0..engine.k {
+            assert_eq!(
+                z[r * engine.k + j] as u64,
+                scratch[j],
+                "row {r} hash {j} disagrees"
+            );
+        }
+    }
+}
+
+#[test]
+fn minhash_artifact_bbit_codes_roundtrip() {
+    let rt = &require_rt!();
+    let engine = MinhashEngine::new(rt, "minhash_k200").unwrap();
+    let mut rng = Rng::new(0xB0B);
+    let family = UniversalFamily::draw(engine.k, engine.d_space, &mut rng);
+    let sets = sample_sets(10, engine.d_space, 77);
+    let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+    let mut packed = PackedCodes::new(8, engine.k);
+    engine.codes_batch(&refs, &family, 8, &mut packed).unwrap();
+    assert_eq!(packed.n, 10);
+    // native b-bit codes from the same family
+    let bb = BbitMinHash {
+        hasher: bbit_mh::hashing::minwise::MinwiseHasher { family },
+        b: 8,
+    };
+    for (r, set) in sets.iter().enumerate() {
+        assert_eq!(packed.row(r), bb.codes(set), "row {r}");
+    }
+}
+
+#[test]
+fn vw_artifact_matches_native_hasher() {
+    let rt = &require_rt!();
+    let engine = VwEngine::new(rt, "vw_bins1024").unwrap();
+    let mut rng = Rng::new(0x77);
+    let hasher = VwHasher::draw(engine.bins, &mut rng);
+    let sets = sample_sets(12, 1 << 30, 99);
+    let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+    let got = engine.hash_batch(&refs, hasher.param_array()).unwrap();
+    for (r, set) in sets.iter().enumerate() {
+        let mut want = vec![0.0f32; engine.bins];
+        hasher.hash_into(set, &mut want);
+        assert_eq!(
+            &got[r * engine.bins..(r + 1) * engine.bins],
+            &want[..],
+            "row {r}"
+        );
+    }
+}
+
+/// Build a small correlated code dataset shared by the train parity tests.
+fn code_data(
+    n: usize,
+    k: usize,
+    b: u32,
+    seed: u64,
+) -> (bbit_mh::encode::expansion::BbitDataset, Vec<i32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut pc = PackedCodes::new(b, k);
+    let mut labels = Vec::new();
+    let half = 1u64 << (b - 1);
+    for _ in 0..n {
+        let pos = rng.bool();
+        let row: Vec<u16> = (0..k)
+            .map(|_| {
+                if pos {
+                    rng.below(half) as u16
+                } else {
+                    (half + rng.below(half)) as u16
+                }
+            })
+            .collect();
+        pc.push_row(&row).unwrap();
+        labels.push(if pos { 1i8 } else { -1 });
+    }
+    let ds = bbit_mh::encode::expansion::BbitDataset::new(pc, labels);
+    let codes_i32 = ds.codes_i32(0, n);
+    let y: Vec<f32> = ds.labels.iter().map(|&l| l as f32).collect();
+    (ds, codes_i32, y)
+}
+
+#[test]
+fn train_artifact_matches_native_sgd() {
+    let rt = &require_rt!();
+    let mut engine = TrainEngine::new(rt, "train_logistic_b8_k200", "predict_b8_k200").unwrap();
+    let n = engine.chunk; // one full chunk => identical minibatch layout
+    let (ds, codes, y) = code_data(n, engine.k, engine.b, 0xC0DE);
+    let (lr0, lambda) = (0.5f32, 1e-4f32);
+    engine.train_chunk(&codes, &y, lr0, lambda).unwrap();
+    assert_eq!(engine.steps_done() as usize, n / engine.batch);
+
+    let native = train_sgd(
+        &ds,
+        &SgdConfig {
+            loss: SgdLoss::Logistic,
+            lr0: lr0 as f64,
+            lambda: lambda as f64,
+            epochs: 1,
+            batch: engine.batch,
+        },
+    )
+    .0;
+    let max_diff = engine
+        .w
+        .iter()
+        .zip(&native.w)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-4, "PJRT vs native SGD weights differ by {max_diff}");
+}
+
+#[test]
+fn predict_artifact_matches_native_margins() {
+    let rt = &require_rt!();
+    let mut engine = TrainEngine::new(rt, "train_sqhinge_b8_k200", "predict_b8_k200").unwrap();
+    let (ds, codes, y) = code_data(engine.chunk, engine.k, engine.b, 0xFACE);
+    engine.train_chunk(&codes, &y, 0.5, 1e-4).unwrap();
+    let margins = engine.margins(&codes).unwrap();
+    assert_eq!(margins.len(), ds.len());
+    // native margins with the engine's weights
+    use bbit_mh::solver::linear::FeatureMatrix;
+    for i in (0..ds.len()).step_by(97) {
+        let want = ds.dot(i, &engine.w);
+        assert!(
+            (margins[i] - want).abs() < 1e-4 * (1.0 + want.abs()),
+            "row {i}: {} vs {want}",
+            margins[i]
+        );
+    }
+    // trained on separable codes → high accuracy through the PJRT path
+    let correct = margins
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(m, &l)| (**m >= 0.0) == (l > 0))
+        .count();
+    assert!(correct as f64 / ds.len() as f64 > 0.95);
+}
+
+#[test]
+fn routed_minhash_matches_native_and_preserves_order() {
+    use bbit_mh::runtime::RoutedMinhash;
+    let rt = &require_rt!();
+    let routed = RoutedMinhash::new(rt, "minhash_k512_nnz512", "minhash_k512").unwrap();
+    let mut rng = Rng::new(0x0707);
+    let family = UniversalFamily::draw(routed.k(), routed.d_space(), &mut rng);
+    // mix of short (routes small) and long (routes large) documents
+    let mut sets: Vec<Vec<u32>> = Vec::new();
+    for i in 0..40 {
+        let len = if i % 3 == 0 { 600 + rng.below_usize(1200) } else { 1 + rng.below_usize(500) };
+        sets.push(
+            rng.sample_distinct(routed.d_space(), len)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect(),
+        );
+    }
+    let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+    let z = routed.minhash_all(&refs, &family).unwrap();
+    let hasher = bbit_mh::hashing::minwise::MinwiseHasher { family };
+    let mut scratch = vec![0u64; routed.k()];
+    for (r, set) in sets.iter().enumerate() {
+        hasher.hash_into(set, &mut scratch);
+        for j in 0..routed.k() {
+            assert_eq!(z[r * routed.k() + j] as u64, scratch[j], "row {r} hash {j}");
+        }
+    }
+    // oversize documents error cleanly
+    let huge: Vec<u32> = (0..3000u32).collect();
+    assert!(routed.minhash_all(&[&huge], &hasher.family).is_err());
+}
+
+#[test]
+fn pipeline_with_pjrt_worker_matches_native_pipeline() {
+    // The Table-2 "GPU column" path: pipeline whose worker body calls the
+    // PJRT minhash engine must produce the same packed codes as the native
+    // multi-threaded path.
+    let rt = &require_rt!();
+    let engine = MinhashEngine::new(rt, "minhash_k200").unwrap();
+    let corpus = CorpusGenerator::new(CorpusConfig {
+        n_docs: 300,
+        vocab: 2000,
+        zipf_alpha: 1.05,
+        mean_tokens: 25.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed: 5,
+    })
+    .generate();
+
+    let k = engine.k;
+    let b = 8u32;
+    let mut rng = Rng::new(123);
+    let family = UniversalFamily::draw(k, engine.d_space, &mut rng);
+
+    // PJRT path (single engine, batched)
+    let mut packed = PackedCodes::new(b, k);
+    let mut batch: Vec<&[u32]> = Vec::new();
+    for i in 0..corpus.len() {
+        batch.push(corpus.row(i).0);
+        if batch.len() == engine.batch || i + 1 == corpus.len() {
+            engine.codes_batch(&batch, &family, b, &mut packed).unwrap();
+            batch.clear();
+        }
+    }
+
+    // native path
+    let hasher = BbitMinHash {
+        hasher: bbit_mh::hashing::minwise::MinwiseHasher { family },
+        b,
+    };
+    for i in 0..corpus.len() {
+        assert_eq!(packed.row(i), hasher.codes(corpus.row(i).0), "row {i}");
+    }
+}
