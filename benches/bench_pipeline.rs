@@ -5,8 +5,10 @@
 //! Run: `cargo bench --bench bench_pipeline`
 
 use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
 use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::solver::{SgdConfig, SgdLoss};
 use bbit_mh::util::bench::Bench;
 
 fn main() {
@@ -56,5 +58,56 @@ fn main() {
         b.bench_elems(&format!("pipeline/queue_depth={depth}"), ds.len() as u64, || {
             pipe.run(dataset_chunks(&ds, 128), &job).unwrap().1.docs
         });
+    }
+
+    // sink comparison: same hash job through the three out-of-core sinks
+    // (collect = materialize in memory, cache = stream to disk,
+    //  train = one-pass SGD), plus the reorder-window high-water mark
+    let pipe = Pipeline::new(PipelineConfig {
+        workers: bbit_mh::config::available_workers(),
+        chunk_size: 128,
+        queue_depth: 4,
+    });
+    let sink_job = HashJob::Bbit { b: 8, k: 64, d: 1 << 30, seed: 11 };
+    let mut peaks: Vec<(String, usize)> = Vec::new();
+
+    let mut peak = 0usize;
+    b.bench_elems("pipeline/sink=collect", ds.len() as u64, || {
+        let (out, report) = pipe.run(dataset_chunks(&ds, 128), &sink_job).unwrap();
+        peak = peak.max(report.reorder_peak);
+        out.len()
+    });
+    peaks.push(("collect".into(), peak));
+
+    let cache_path = std::env::temp_dir().join(format!("bbit_bench_{}.cache", std::process::id()));
+    let mut peak = 0usize;
+    b.bench_elems("pipeline/sink=cache", ds.len() as u64, || {
+        let mut sink = CacheSink::create(&cache_path, 8, 64, 1 << 30, 11).unwrap();
+        let report = pipe.run_sink(dataset_chunks(&ds, 128), &sink_job, &mut sink).unwrap();
+        peak = peak.max(report.reorder_peak);
+        report.docs
+    });
+    peaks.push(("cache".into(), peak));
+    std::fs::remove_file(&cache_path).ok();
+
+    let sgd = SgdConfig {
+        loss: SgdLoss::Logistic,
+        lr0: 0.5,
+        lambda: 1e-4,
+        epochs: 1,
+        batch: 256,
+    };
+    let mut peak = 0usize;
+    b.bench_elems("pipeline/sink=train", ds.len() as u64, || {
+        let mut sink = TrainSink::new(sgd.clone(), 8, 64);
+        let report = pipe.run_sink(dataset_chunks(&ds, 128), &sink_job, &mut sink).unwrap();
+        peak = peak.max(report.reorder_peak);
+        report.docs
+    });
+    peaks.push(("train".into(), peak));
+
+    println!("\nreorder-window peaks (chunks; hard bound = 2·(workers+queue_depth)):");
+    for (name, peak) in &peaks {
+        println!("  sink={name:<8} peak={peak}");
     }
 }

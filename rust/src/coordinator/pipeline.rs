@@ -3,9 +3,10 @@
 //! Topology (all std threads, bounded channels = backpressure):
 //!
 //! ```text
-//!   reader ──sync_channel(queue_depth)──▶ worker×W ──channel──▶ collector
-//!   (LibSVM parse / generator)   (minwise+b-bit pack, or VW)   (reorder +
-//!                                                               splice)
+//!   reader ──sync_channel(queue_depth)──▶ worker×W ──sync_channel──▶ collector ──▶ sink
+//!   (LibSVM parse / generator)    (minwise+b-bit pack, or VW)   (bounded     (collect |
+//!                                                                reorder      cache |
+//!                                                                window)      train)
 //! ```
 //!
 //! - The reader is the paper's "data loading" stage (Table 2 column 1);
@@ -15,19 +16,32 @@
 //! - Workers pull from one shared queue — natural load balancing (a slow
 //!   chunk doesn't stall siblings), with chunk ids restoring deterministic
 //!   output order in the collector regardless of completion order.
-//! - `try_send`-then-`send` on the reader side counts backpressure stalls:
-//!   if the hashing stage cannot keep up with parsing, stalls > 0 and the
-//!   bounded queue caps memory at `queue_depth · chunk_size` examples.
+//! - The collector holds only the *reorder window*: chunks that completed
+//!   ahead of the next-in-order chunk.  Each chunk is re-emitted into the
+//!   [`PipelineSink`](crate::coordinator::sink) the moment its predecessors
+//!   have been, then dropped.  An admission-credit loop (collector returns
+//!   one token per emitted chunk; the reader blocks without a token) hard-
+//!   bounds chunks in flight at `2·(workers + queue_depth)`, so peak
+//!   collector memory — reported as [`PipelineReport::reorder_peak`] — is
+//!   set by the window, never by corpus size.  The old end-of-run
+//!   buffer-the-whole-dataset behavior survives only inside
+//!   [`CollectSink`](crate::coordinator::sink::CollectSink).
+//! - `try_send`-then-`send` on the reader side counts backpressure stalls
+//!   *and* the seconds spent blocked ([`PipelineReport::stall_seconds`]):
+//!   if hashing cannot keep up with parsing, stalls > 0 and the bounded
+//!   queues cap memory at roughly
+//!   `(queue_depth + workers + out-queue) · chunk_size` examples.
 //!
 //! The pipeline's integrity invariant — every input example appears in the
 //! output exactly once, in input order — is enforced by construction
-//! (chunk-id reordering) and property-tested in
-//! `rust/tests/prop_coordinator.rs`.
+//! (chunk-id reordering, emitted-count check) and property-tested in
+//! `rust/tests/prop_invariants.rs`.
 
-use std::sync::mpsc::{channel, sync_channel, TrySendError};
+use std::sync::mpsc::{sync_channel, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::coordinator::sink::{CollectSink, HashedChunk, PipelineSink};
 use crate::data::dataset::{Example, SparseDataset};
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
@@ -102,14 +116,35 @@ impl PipelineOutput {
 pub struct PipelineReport {
     pub docs: usize,
     pub chunks: usize,
-    /// Seconds the reader spent producing chunks (parse/generate).
+    /// Seconds the reader spent *producing* chunks (parse/generate) —
+    /// excludes time blocked on a full worker queue, which lands in
+    /// [`stall_seconds`](Self::stall_seconds).  This is the paper's
+    /// Table-2 "data loading" column; folding backpressure waits into it
+    /// would overstate loading cost whenever hashing is the bottleneck.
     pub read_seconds: f64,
+    /// Seconds the reader spent blocked on backpressure — waiting for an
+    /// admission credit or handing a chunk to a full worker queue (the
+    /// wall-clock cost of the events counted by
+    /// [`backpressure_stalls`](Self::backpressure_stalls)).
+    pub stall_seconds: f64,
     /// CPU-seconds summed across hash workers.
     pub hash_cpu_seconds: f64,
+    /// Seconds the collector spent inside the sink (`consume` + `finish`)
+    /// — disk time for a cache sink, solver time for a train sink.
+    pub sink_seconds: f64,
     /// End-to-end wall-clock.
     pub wall_seconds: f64,
-    /// Times the reader hit a full queue (backpressure events).
+    /// Backpressure events: each time the reader blocked waiting for an
+    /// admission credit or for space in the worker queue.  A single chunk
+    /// can count both (credit wait, then full queue), so this is an event
+    /// count, not a chunk count; [`stall_seconds`](Self::stall_seconds)
+    /// carries the wall-clock cost.
     pub backpressure_stalls: u64,
+    /// High-water mark of the collector's reorder window in chunks: the
+    /// most chunks ever held waiting for an earlier chunk to complete.
+    /// Hard-bounded at `2·(workers + queue_depth)` by the admission-credit
+    /// loop — never grows with corpus size.
+    pub reorder_peak: usize,
     /// Chunks processed per worker (load-balance visibility).
     pub per_worker_chunks: Vec<usize>,
 }
@@ -127,17 +162,22 @@ impl Pipeline {
         Pipeline { cfg }
     }
 
-    /// Generic fan-out/fan-in over chunks; returns per-chunk outputs in
-    /// chunk order plus the report.  `work(chunk, worker_id)` runs on
-    /// worker threads.
-    pub fn run_chunks<O, W>(
+    /// Generic fan-out/fan-in over chunks with *incremental in-order
+    /// delivery*: `work(chunk, worker_id)` runs on worker threads, and
+    /// `emit(chunk_id, output)` runs on the collector (calling) thread,
+    /// called exactly once per chunk in ascending chunk order, as soon as
+    /// all predecessors have been emitted.  Completed-but-early chunks
+    /// wait in a reorder window whose high-water mark is reported.
+    pub fn run_chunks_each<O, W, E>(
         &self,
         source: impl Iterator<Item = Result<Vec<Example>>> + Send,
         work: W,
-    ) -> Result<(Vec<O>, PipelineReport)>
+        mut emit: E,
+    ) -> Result<PipelineReport>
     where
         O: Send,
         W: Fn(&[Example], usize) -> Result<O> + Send + Sync,
+        E: FnMut(usize, O) -> Result<()>,
     {
         let wall0 = Instant::now();
         let mut report = PipelineReport {
@@ -145,35 +185,69 @@ impl Pipeline {
             ..Default::default()
         };
 
-        std::thread::scope(|scope| -> Result<(Vec<O>, PipelineReport)> {
+        // In-flight admission window: the reader consumes one credit per
+        // chunk and the collector returns it once the chunk is emitted to
+        // the sink, so at most `window` chunks exist anywhere in the
+        // pipeline (queues + workers + reorder buffer) at once.
+        let window = 2 * (self.cfg.workers + self.cfg.queue_depth);
+
+        std::thread::scope(|scope| -> Result<PipelineReport> {
             let (chunk_tx, chunk_rx) = sync_channel::<(usize, Vec<Example>)>(self.cfg.queue_depth);
             let chunk_rx = Arc::new(Mutex::new(chunk_rx));
-            let (out_tx, out_rx) = channel::<Result<ChunkResult<(O, usize, f64)>>>();
+            // Bounded so a slow sink backpressures workers (and through
+            // them the reader) instead of letting finished chunks pile up.
+            let (out_tx, out_rx) = sync_channel::<Result<ChunkResult<(O, usize, f64)>>>(
+                self.cfg.workers + self.cfg.queue_depth,
+            );
+            let (credit_tx, credit_rx) = sync_channel::<()>(window);
+            for _ in 0..window {
+                credit_tx.try_send(()).expect("credit prefill cannot overflow");
+            }
 
             // ---- reader (this scope's own thread) ----
-            let reader = scope.spawn(move || -> Result<(usize, usize, f64, u64)> {
+            let reader = scope.spawn(move || -> Result<(usize, usize, f64, u64, f64)> {
                 let t0 = Instant::now();
                 let mut docs = 0usize;
                 let mut chunks = 0usize;
                 let mut stalls = 0u64;
+                let mut stall_secs = 0.0f64;
                 for (chunk_id, chunk) in source.enumerate() {
                     let chunk = chunk?;
                     docs += chunk.len();
                     chunks += 1;
+                    // admission credit: blocks once `window` chunks are in
+                    // flight, bounding collector memory structurally
+                    match credit_rx.try_recv() {
+                        Ok(()) => {}
+                        Err(TryRecvError::Empty) => {
+                            stalls += 1;
+                            let blocked = Instant::now();
+                            credit_rx.recv().map_err(|_| {
+                                Error::Pipeline("collector hung up".into())
+                            })?;
+                            stall_secs += blocked.elapsed().as_secs_f64();
+                        }
+                        Err(TryRecvError::Disconnected) => {
+                            return Err(Error::Pipeline("collector hung up".into()));
+                        }
+                    }
                     match chunk_tx.try_send((chunk_id, chunk)) {
                         Ok(()) => {}
                         Err(TrySendError::Full(v)) => {
                             stalls += 1;
+                            let blocked = Instant::now();
                             chunk_tx.send(v).map_err(|_| {
                                 Error::Pipeline("workers hung up".into())
                             })?;
+                            stall_secs += blocked.elapsed().as_secs_f64();
                         }
                         Err(TrySendError::Disconnected(_)) => {
                             return Err(Error::Pipeline("workers hung up".into()));
                         }
                     }
                 }
-                Ok((docs, chunks, t0.elapsed().as_secs_f64(), stalls))
+                let read_secs = t0.elapsed().as_secs_f64() - stall_secs;
+                Ok((docs, chunks, read_secs, stalls, stall_secs))
             });
 
             // ---- workers ----
@@ -189,8 +263,16 @@ impl Pipeline {
                             Err(_) => break, // reader done, queue drained
                         };
                         let t0 = Instant::now();
-                        let out = work(&chunk, wid)
-                            .map(|o| (chunk_id, (o, wid, t0.elapsed().as_secs_f64())));
+                        // a panicking chunk must still produce a message:
+                        // with admission credits, a silently lost chunk
+                        // would wedge the reader instead of failing the run
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || work(&chunk, wid),
+                        ))
+                        .unwrap_or_else(|_| {
+                            Err(Error::Pipeline(format!("worker {wid} panicked")))
+                        })
+                        .map(|o| (chunk_id, (o, wid, t0.elapsed().as_secs_f64())));
                         if tx.send(out).is_err() {
                             break;
                         }
@@ -200,47 +282,80 @@ impl Pipeline {
             drop(out_tx);
             drop(chunk_rx);
 
-            // ---- collector (current thread): reorder by chunk id ----
-            let mut pending: std::collections::BTreeMap<usize, O> =
+            // ---- collector (current thread): bounded reorder window ----
+            // Chunks that completed ahead of order wait here; everything
+            // in order is emitted immediately and dropped.
+            let mut reorder: std::collections::BTreeMap<usize, O> =
                 std::collections::BTreeMap::new();
+            let mut next_chunk = 0usize;
             for msg in out_rx {
                 let (chunk_id, (out, wid, secs)) = msg?;
                 report.hash_cpu_seconds += secs;
                 report.per_worker_chunks[wid] += 1;
-                pending.insert(chunk_id, out);
+                reorder.insert(chunk_id, out);
+                report.reorder_peak = report.reorder_peak.max(reorder.len());
+                while let Some(out) = reorder.remove(&next_chunk) {
+                    let t0 = Instant::now();
+                    emit(next_chunk, out)?;
+                    report.sink_seconds += t0.elapsed().as_secs_f64();
+                    next_chunk += 1;
+                    // return the admission credit (never blocks: in-channel
+                    // credits ≤ capacity by conservation; reader-gone is fine)
+                    let _ = credit_tx.try_send(());
+                }
             }
-            let (docs, chunks, read_secs, stalls) = reader
+            let (docs, chunks, read_secs, stalls, stall_secs) = reader
                 .join()
                 .map_err(|_| Error::Pipeline("reader panicked".into()))??;
             report.docs = docs;
             report.chunks = chunks;
             report.read_seconds = read_secs;
+            report.stall_seconds = stall_secs;
             report.backpressure_stalls = stalls;
-            if pending.len() != chunks {
+            if next_chunk != chunks || !reorder.is_empty() {
                 return Err(Error::Pipeline(format!(
-                    "lost chunks: got {} of {}",
-                    pending.len(),
-                    chunks
+                    "lost chunks: emitted {} of {}",
+                    next_chunk, chunks
                 )));
             }
-            // BTreeMap iterates in ascending chunk order
-            let ordered: Vec<O> = pending.into_values().collect();
             report.wall_seconds = wall0.elapsed().as_secs_f64();
-            Ok((ordered, report))
+            Ok(report)
         })
     }
 
-    /// Run a [`HashJob`] over a chunk stream, assembling the hashed dataset.
-    pub fn run(
+    /// Fan-out/fan-in returning per-chunk outputs in chunk order plus the
+    /// report (materializing form of [`run_chunks_each`](Self::run_chunks_each)).
+    pub fn run_chunks<O, W>(
+        &self,
+        source: impl Iterator<Item = Result<Vec<Example>>> + Send,
+        work: W,
+    ) -> Result<(Vec<O>, PipelineReport)>
+    where
+        O: Send,
+        W: Fn(&[Example], usize) -> Result<O> + Send + Sync,
+    {
+        let mut outputs = Vec::new();
+        let report = self.run_chunks_each(source, work, |_, o| {
+            outputs.push(o);
+            Ok(())
+        })?;
+        Ok((outputs, report))
+    }
+
+    /// Run a [`HashJob`] over a chunk stream, pushing hashed chunks into
+    /// `sink` incrementally in input order — the out-of-core entry point.
+    /// The sink's `finish` is called (and timed) before returning.
+    pub fn run_sink<S: PipelineSink>(
         &self,
         source: impl Iterator<Item = Result<Vec<Example>>> + Send,
         job: &HashJob,
-    ) -> Result<(PipelineOutput, PipelineReport)> {
-        match job {
+        sink: &mut S,
+    ) -> Result<PipelineReport> {
+        let mut report = match job {
             HashJob::Bbit { b, k, d, seed } => {
-                let hasher = Arc::new(BbitMinHash::draw(*k, *b, *d, &mut Rng::new(*seed)));
-                let (chunks, report) = self.run_chunks(source, {
-                    let hasher = hasher.clone();
+                let hasher = BbitMinHash::draw(*k, *b, *d, &mut Rng::new(*seed));
+                self.run_chunks_each(
+                    source,
                     move |chunk: &[Example], _wid| {
                         let mut codes = PackedCodes::new(hasher.b, hasher.k());
                         let mut labels = Vec::with_capacity(chunk.len());
@@ -251,44 +366,47 @@ impl Pipeline {
                             codes.push_row(&row)?;
                             labels.push(ex.label);
                         }
-                        Ok((codes, labels))
-                    }
-                })?;
-                let mut all = PackedCodes::new(*b, *k);
-                let mut labels = Vec::new();
-                for (codes, ls) in chunks {
-                    all.extend(&codes)?;
-                    labels.extend(ls);
-                }
-                Ok((PipelineOutput::Bbit(BbitDataset::new(all, labels)), report))
+                        Ok(HashedChunk::Bbit { codes, labels })
+                    },
+                    |_, chunk| sink.consume(chunk),
+                )?
             }
             HashJob::Vw { bins, seed } => {
-                let hasher = Arc::new(VwHasher::draw(*bins, &mut Rng::new(*seed)));
-                let (chunks, report) = self.run_chunks(source, {
-                    let hasher = hasher.clone();
+                let hasher = VwHasher::draw(*bins, &mut Rng::new(*seed));
+                self.run_chunks_each(
+                    source,
                     move |chunk: &[Example], _wid| {
                         let mut rows = Vec::with_capacity(chunk.len());
                         for ex in chunk {
                             let pairs = hasher.hash_sparse(&ex.indices);
                             rows.push((ex.label, pairs));
                         }
-                        Ok(rows)
-                    }
-                })?;
-                let mut ds = SparseDataset::new(*bins as u64);
-                ds.values = Some(Vec::new());
-                for rows in chunks {
-                    for (label, pairs) in rows {
-                        ds.push(&Example {
-                            label,
-                            indices: pairs.iter().map(|p| p.0).collect(),
-                            values: Some(pairs.iter().map(|p| p.1).collect()),
-                        });
-                    }
-                }
-                Ok((PipelineOutput::Vw(ds), report))
+                        Ok(HashedChunk::Vw { rows })
+                    },
+                    |_, chunk| sink.consume(chunk),
+                )?
             }
-        }
+        };
+        let t0 = Instant::now();
+        sink.finish()?;
+        report.sink_seconds += t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Run a [`HashJob`] over a chunk stream, assembling the hashed
+    /// dataset in memory (a [`run_sink`](Self::run_sink) with a
+    /// [`CollectSink`] — the materializing path tests and experiments use).
+    pub fn run(
+        &self,
+        source: impl Iterator<Item = Result<Vec<Example>>> + Send,
+        job: &HashJob,
+    ) -> Result<(PipelineOutput, PipelineReport)> {
+        let mut sink = match job {
+            HashJob::Bbit { b, k, .. } => CollectSink::bbit(*b, *k),
+            HashJob::Vw { bins, .. } => CollectSink::vw(*bins),
+        };
+        let report = self.run_sink(source, job, &mut sink)?;
+        Ok((sink.into_output(), report))
     }
 }
 
@@ -342,6 +460,7 @@ mod tests {
         assert_eq!(bb.len(), 300);
         assert_eq!(report.docs, 300);
         assert_eq!(report.chunks, 10);
+        assert!(report.reorder_peak >= 1);
         // sequential reference
         let hasher = BbitMinHash::draw(32, 8, 1 << 20, &mut Rng::new(5));
         for i in 0..ds.len() {
@@ -380,6 +499,9 @@ mod tests {
         let (out, report) = pipe.run(dataset_chunks(&ds, 7), &job).unwrap();
         assert_eq!(out.len(), 50);
         assert_eq!(report.per_worker_chunks, vec![8]);
+        // one worker completes chunks strictly in order, so the reorder
+        // window never holds more than the chunk being emitted
+        assert_eq!(report.reorder_peak, 1);
     }
 
     #[test]
@@ -398,6 +520,23 @@ mod tests {
     }
 
     #[test]
+    fn sink_errors_propagate() {
+        let ds = corpus(40);
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 8, queue_depth: 2 });
+        let mut emitted = 0usize;
+        let result = pipe.run_chunks_each(
+            dataset_chunks(&ds, 8),
+            |_, _| Ok(()),
+            |_, ()| {
+                emitted += 1;
+                Err(Error::Pipeline("sink full".into()))
+            },
+        );
+        assert!(result.is_err());
+        assert_eq!(emitted, 1, "emit must stop at the first sink error");
+    }
+
+    #[test]
     fn reader_errors_propagate() {
         let source = vec![
             Ok(vec![Example::binary(1, vec![1])]),
@@ -406,6 +545,18 @@ mod tests {
         let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 1, queue_depth: 1 });
         let out = pipe.run(source.into_iter(), &HashJob::Bbit { b: 1, k: 4, d: 16, seed: 0 });
         assert!(out.is_err());
+    }
+
+    #[test]
+    fn empty_source_yields_empty_output() {
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 4, queue_depth: 1 });
+        let source = std::iter::empty::<Result<Vec<Example>>>();
+        let (out, report) = pipe
+            .run(source, &HashJob::Bbit { b: 8, k: 16, d: 1 << 20, seed: 0 })
+            .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(report.chunks, 0);
+        assert_eq!(report.reorder_peak, 0);
     }
 
     #[test]
@@ -423,5 +574,25 @@ mod tests {
         for i in 0..a.len() {
             assert_eq!(a.codes.row(i), b.codes.row(i));
         }
+    }
+
+    #[test]
+    fn emit_order_is_ascending_and_complete() {
+        let ds = corpus(230);
+        let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 9, queue_depth: 2 });
+        let mut seen = Vec::new();
+        let report = pipe
+            .run_chunks_each(
+                dataset_chunks(&ds, 9),
+                |chunk, _| Ok(chunk.len()),
+                |id, len| {
+                    seen.push((id, len));
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(seen.len(), report.chunks);
+        assert!(seen.iter().enumerate().all(|(i, &(id, _))| i == id));
+        assert_eq!(seen.iter().map(|&(_, l)| l).sum::<usize>(), 230);
     }
 }

@@ -1,0 +1,246 @@
+//! Pipeline sinks: where in-order hashed chunks go.
+//!
+//! The collector stage of [`Pipeline`](crate::coordinator::pipeline) used
+//! to buffer every chunk until end-of-run and assemble one giant in-memory
+//! dataset — fine for the paper's figures at toy scale, fatal for its
+//! headline 200GB workload.  Sinks invert that: the collector re-emits
+//! chunks *incrementally in input order* and pushes each one into a
+//! [`PipelineSink`], after which the chunk is dropped.  Three sinks cover
+//! the out-of-core workflow:
+//!
+//! - [`CollectSink`] — accumulate in memory (the old behavior; every
+//!   existing caller and experiment goes through it unchanged);
+//! - [`CacheSink`] — append to the on-disk hashed cache
+//!   ([`encode::cache`](crate::encode::cache)): hash once, train many
+//!   times;
+//! - [`TrainSink`] — feed a streaming SGD trainer
+//!   ([`SgdStream`](crate::solver::SgdStream)) directly: one-pass
+//!   hash-and-train with nothing materialized at all.
+//!
+//! Sinks run on the collector thread, strictly in chunk order, so a sink
+//! never needs internal synchronization or reordering of its own.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, Write};
+use std::path::Path;
+
+use crate::coordinator::pipeline::PipelineOutput;
+use crate::data::dataset::SparseDataset;
+use crate::encode::cache::CacheWriter;
+use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
+use crate::solver::{LinearModel, SgdConfig, SgdStream, TrainStats};
+use crate::{Error, Result};
+
+/// One hashed chunk, as produced by the workers and re-ordered by the
+/// collector.
+pub enum HashedChunk {
+    /// Packed b-bit codes + labels for a run of consecutive input rows.
+    Bbit { codes: PackedCodes, labels: Vec<i8> },
+    /// VW-hashed rows as (label, sorted sparse pairs).
+    Vw { rows: Vec<(i8, Vec<(u32, f32)>)> },
+}
+
+impl HashedChunk {
+    pub fn len(&self) -> usize {
+        match self {
+            HashedChunk::Bbit { labels, .. } => labels.len(),
+            HashedChunk::Vw { rows } => rows.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Consumer of in-order hashed chunks.
+///
+/// `consume` is called once per chunk, in input order, on the collector
+/// thread; `finish` exactly once after the last chunk (flush buffers,
+/// patch headers, apply the tail minibatch, ...).
+pub trait PipelineSink {
+    fn consume(&mut self, chunk: HashedChunk) -> Result<()>;
+
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// In-memory accumulation — preserves the original `Pipeline::run`
+/// contract ([`PipelineOutput`] with rows in input order).
+pub struct CollectSink {
+    out: PipelineOutput,
+}
+
+impl CollectSink {
+    /// Collect b-bit chunks into a [`BbitDataset`].
+    pub fn bbit(b: u32, k: usize) -> Self {
+        CollectSink {
+            out: PipelineOutput::Bbit(BbitDataset::new(PackedCodes::new(b, k), Vec::new())),
+        }
+    }
+
+    /// Collect VW chunks into a valued [`SparseDataset`] over `bins` bins.
+    pub fn vw(bins: usize) -> Self {
+        let mut ds = SparseDataset::new(bins as u64);
+        ds.values = Some(Vec::new());
+        CollectSink { out: PipelineOutput::Vw(ds) }
+    }
+
+    pub fn into_output(self) -> PipelineOutput {
+        self.out
+    }
+}
+
+impl PipelineSink for CollectSink {
+    fn consume(&mut self, chunk: HashedChunk) -> Result<()> {
+        match (&mut self.out, chunk) {
+            (PipelineOutput::Bbit(ds), HashedChunk::Bbit { codes, labels }) => {
+                ds.codes.extend(&codes)?;
+                ds.labels.extend(labels);
+                Ok(())
+            }
+            (PipelineOutput::Vw(ds), HashedChunk::Vw { rows }) => {
+                for (label, pairs) in rows {
+                    ds.push_parts(label, &pairs);
+                }
+                Ok(())
+            }
+            _ => Err(Error::Pipeline("sink/chunk kind mismatch".into())),
+        }
+    }
+}
+
+/// Stream chunks into the on-disk hashed cache.
+pub struct CacheSink<W: Write + Seek> {
+    writer: CacheWriter<W>,
+}
+
+impl CacheSink<BufWriter<File>> {
+    /// Create a cache file recording the hashing recipe `(b, k, d, seed)`.
+    pub fn create<P: AsRef<Path>>(path: P, b: u32, k: usize, d: u64, seed: u64) -> Result<Self> {
+        Ok(CacheSink { writer: CacheWriter::create(path, b, k, d, seed)? })
+    }
+}
+
+impl<W: Write + Seek> CacheSink<W> {
+    pub fn new(writer: CacheWriter<W>) -> Self {
+        CacheSink { writer }
+    }
+
+    /// Rows written so far.
+    pub fn rows_written(&self) -> u64 {
+        self.writer.rows_written()
+    }
+}
+
+impl<W: Write + Seek> PipelineSink for CacheSink<W> {
+    fn consume(&mut self, chunk: HashedChunk) -> Result<()> {
+        match chunk {
+            HashedChunk::Bbit { codes, labels } => self.writer.write_chunk(&codes, &labels),
+            HashedChunk::Vw { .. } => {
+                Err(Error::Pipeline("cache sink only stores b-bit chunks".into()))
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.writer.finalize()
+    }
+}
+
+/// One-pass hash-and-train: chunks go straight into a streaming SGD
+/// update; nothing is materialized.  `finish` applies the tail minibatch,
+/// so after the pipeline returns, [`into_result`](Self::into_result) holds
+/// exactly the weights materialize-then-`train_sgd` (1 epoch) would have
+/// produced on the same chunk stream.
+pub struct TrainSink {
+    stream: SgdStream,
+}
+
+impl TrainSink {
+    pub fn new(cfg: SgdConfig, b: u32, k: usize) -> Self {
+        TrainSink { stream: SgdStream::new(cfg, b, k) }
+    }
+
+    /// Rows trained on so far.
+    pub fn rows_seen(&self) -> u64 {
+        self.stream.rows_seen()
+    }
+
+    pub fn into_result(self) -> (LinearModel, TrainStats) {
+        self.stream.finalize()
+    }
+}
+
+impl PipelineSink for TrainSink {
+    fn consume(&mut self, chunk: HashedChunk) -> Result<()> {
+        match chunk {
+            HashedChunk::Bbit { codes, labels } => self.stream.push_chunk(codes, labels),
+            HashedChunk::Vw { .. } => {
+                Err(Error::Pipeline("train sink only accepts b-bit chunks".into()))
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.stream.end_epoch();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bbit_chunk(b: u32, k: usize, rows: &[(u16, i8)]) -> HashedChunk {
+        let mut codes = PackedCodes::new(b, k);
+        let mut labels = Vec::new();
+        for &(c, l) in rows {
+            codes.push_row(&vec![c; k]).unwrap();
+            labels.push(l);
+        }
+        HashedChunk::Bbit { codes, labels }
+    }
+
+    #[test]
+    fn collect_sink_accumulates_in_order() {
+        let mut sink = CollectSink::bbit(4, 3);
+        sink.consume(bbit_chunk(4, 3, &[(1, 1), (2, -1)])).unwrap();
+        sink.consume(bbit_chunk(4, 3, &[(3, 1)])).unwrap();
+        sink.finish().unwrap();
+        let ds = sink.into_output().into_bbit().unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.labels, vec![1, -1, 1]);
+        assert_eq!(ds.codes.row(2), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn kind_mismatch_is_an_error() {
+        let mut sink = CollectSink::bbit(4, 3);
+        assert!(sink.consume(HashedChunk::Vw { rows: vec![] }).is_err());
+        let mut sink = CollectSink::vw(8);
+        assert!(sink.consume(bbit_chunk(4, 3, &[(1, 1)])).is_err());
+        let mut cache = CacheSink::new(
+            CacheWriter::new(std::io::Cursor::new(Vec::new()), 4, 3, 16, 0).unwrap(),
+        );
+        assert!(cache.consume(HashedChunk::Vw { rows: vec![] }).is_err());
+        let mut train = TrainSink::new(SgdConfig::default(), 4, 3);
+        assert!(train.consume(HashedChunk::Vw { rows: vec![] }).is_err());
+    }
+
+    #[test]
+    fn vw_collect_uses_push_parts() {
+        let mut sink = CollectSink::vw(8);
+        sink.consume(HashedChunk::Vw {
+            rows: vec![(1, vec![(0, 1.5), (3, -1.0)]), (-1, vec![(2, 1.0)])],
+        })
+        .unwrap();
+        let ds = sink.into_output().into_vw().unwrap();
+        ds.validate().unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(0).0, &[0, 3]);
+        assert_eq!(ds.row(0).1.unwrap(), &[1.5, -1.0]);
+    }
+}

@@ -78,6 +78,30 @@ impl SparseDataset {
         self.labels.push(ex.label);
     }
 
+    /// Append a row directly from sorted-unique `(index, value)` pairs —
+    /// the pipeline's VW assembly path, which otherwise had to collect the
+    /// pairs into two fresh vectors just to build a throwaway [`Example`].
+    pub fn push_parts(&mut self, label: i8, parts: &[(u32, f32)]) {
+        debug_assert!(
+            parts.windows(2).all(|w| w[0].0 < w[1].0),
+            "parts must be sorted+unique by index"
+        );
+        self.indices.extend(parts.iter().map(|p| p.0));
+        match &mut self.values {
+            Some(vs) => vs.extend(parts.iter().map(|p| p.1)),
+            None => {
+                if parts.iter().any(|p| p.1 != 1.0) {
+                    // promote to valued: backfill ones (same as `push`)
+                    let mut vs = vec![1.0f32; self.indices.len() - parts.len()];
+                    vs.extend(parts.iter().map(|p| p.1));
+                    self.values = Some(vs);
+                }
+            }
+        }
+        self.indptr.push(self.indices.len());
+        self.labels.push(label);
+    }
+
     pub fn from_examples(dim: u64, examples: &[Example]) -> Self {
         let mut ds = SparseDataset::new(dim);
         for ex in examples {
@@ -258,6 +282,43 @@ mod tests {
         let mut seen: Vec<u32> = tr.iter().chain(te.iter()).map(|e| e.indices[0]).collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn push_parts_matches_push() {
+        let mut by_example = SparseDataset::new(64);
+        by_example.values = Some(Vec::new());
+        let mut by_parts = SparseDataset::new(64);
+        by_parts.values = Some(Vec::new());
+        let rows: Vec<(i8, Vec<(u32, f32)>)> = vec![
+            (1, vec![(2, 0.5), (7, -1.0)]),
+            (-1, vec![(0, 3.0)]),
+            (1, vec![]),
+        ];
+        for (label, pairs) in &rows {
+            by_example.push(&Example {
+                label: *label,
+                indices: pairs.iter().map(|p| p.0).collect(),
+                values: Some(pairs.iter().map(|p| p.1).collect()),
+            });
+            by_parts.push_parts(*label, pairs);
+        }
+        by_parts.validate().unwrap();
+        assert_eq!(by_parts.indptr, by_example.indptr);
+        assert_eq!(by_parts.indices, by_example.indices);
+        assert_eq!(by_parts.values, by_example.values);
+        assert_eq!(by_parts.labels, by_example.labels);
+    }
+
+    #[test]
+    fn push_parts_binary_promotion() {
+        let mut ds = SparseDataset::new(16);
+        ds.push_parts(1, &[(1, 1.0), (5, 1.0)]);
+        assert!(ds.values.is_none()); // all-ones stays binary
+        ds.push_parts(-1, &[(2, 2.5)]);
+        let vs = ds.values.as_ref().unwrap();
+        assert_eq!(vs, &[1.0, 1.0, 2.5]); // backfilled like `push`
+        ds.validate().unwrap();
     }
 
     #[test]

@@ -340,6 +340,63 @@ mod tests {
     }
 
     #[test]
+    fn empty_and_comment_lines_at_eof() {
+        // trailing blank/comment lines must not produce a phantom example
+        // or a trailing empty chunk
+        let data = "+1 1:1\n-1 2:1\n\n\n# trailing comment\n\n";
+        let chunks: Vec<Vec<Example>> =
+            ChunkedReader::new(LibsvmReader::new(data.as_bytes()), 2)
+                .map(|c| c.unwrap())
+                .collect();
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].len(), 2);
+        // a file of only blanks/comments yields no chunks at all
+        let empty = "\n# nothing\n\n";
+        assert_eq!(
+            ChunkedReader::new(LibsvmReader::new(empty.as_bytes()), 4).count(),
+            0
+        );
+    }
+
+    #[test]
+    fn chunk_size_larger_than_file() {
+        let data = "+1 1:1\n-1 2:1\n+1 3:1\n";
+        let chunks: Vec<Vec<Example>> =
+            ChunkedReader::new(LibsvmReader::new(data.as_bytes()), 1000)
+                .map(|c| c.unwrap())
+                .collect();
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].len(), 3);
+        assert_eq!(chunks[0][2].indices, vec![3]);
+    }
+
+    #[test]
+    fn malformed_record_mid_stream_surfaces_line_number_through_chunks() {
+        // blanks and comments before the bad record keep line numbers and
+        // example counts out of sync — the error must report the *file*
+        // line, and examples parsed before it must still come through
+        let data = "+1 1:1\n\n# note\n-1 2:1\nbroken:record:here\n+1 4:1\n";
+        let mut rd = ChunkedReader::new(LibsvmReader::new(data.as_bytes()), 2);
+        let first = rd.next().unwrap().unwrap();
+        assert_eq!(first.len(), 2); // the two good examples before the error
+        let err = rd.next().unwrap().unwrap_err();
+        match err {
+            Error::LibsvmParse { line, msg } => {
+                assert_eq!(line, 5, "wrong line: {msg}");
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+        // a bad record *inside* a chunk surfaces the error, not a partial chunk
+        let data = "+1 1:1\nbogus\n+1 2:1\n";
+        let mut rd = ChunkedReader::new(LibsvmReader::new(data.as_bytes()), 10);
+        let err = rd.next().unwrap().unwrap_err();
+        match err {
+            Error::LibsvmParse { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
     fn binary_mode_skips_values() {
         let data = "+1 3:7.5 9:2\n";
         let ex = LibsvmReader::new(data.as_bytes())

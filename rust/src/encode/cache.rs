@@ -1,0 +1,466 @@
+//! On-disk hashed-dataset cache — hash a corpus once, train on it many
+//! times.
+//!
+//! The paper's economics (Sections 1 and 6) hinge on preprocessing being a
+//! one-time cost amortized over every (solver, C, b, k≤K) sweep that
+//! follows; fwumious wabbit ships the same shape as its "input cache"
+//! (scenario 1 of its BENCHMARK.md: generate the cache once, then run many
+//! fast training passes over it).  This module is that artifact for b-bit
+//! codes: a sequential, checksummed record stream a 200GB-scale corpus can
+//! be written to and replayed from in constant memory.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! ```text
+//!   magic  b"BBHC"
+//!   u32    format version (= 1)
+//!   u32    b            ┐
+//!   u64    k            │ the hashing recipe: any reader can verify a
+//!   u64    d            │ model trained from this cache used the same
+//!   u64    seed         │ (b, k, d, seed) minwise family
+//!   u64    n            ┘ total rows (patched on finalize; u64::MAX while
+//!                         the writer is still open — readers reject it)
+//!   repeated chunk records:
+//!     u32    rows in this chunk
+//!     u64    payload bytes (= rows labels + rows·stride packed words)
+//!     [i8]   labels (one byte per row)
+//!     [u64]  packed code words (row-major, PackedCodes layout)
+//!     u64    FNV-1a checksum over the rows field + payload bytes
+//! ```
+//!
+//! Records are chunk-granular on purpose: the writer is fed by the
+//! pipeline's in-order collector ([`CacheSink`](crate::coordinator::sink)),
+//! and the reader replays the identical chunk stream into the streaming
+//! trainer, so `hash → cache → train` and `hash → train` see byte-identical
+//! data in identical order.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
+use crate::{Error, Result};
+
+/// File magic for the hashed-chunk cache.
+pub const CACHE_MAGIC: &[u8; 4] = b"BBHC";
+/// Current format version.
+pub const CACHE_VERSION: u32 = 1;
+/// Header bytes before the first record (magic + version + 5 meta fields).
+const HEADER_BYTES: u64 = 4 + 4 + 4 + 8 + 8 + 8 + 8;
+/// Byte offset of the `n` field (patched by `finalize`).
+const N_OFFSET: u64 = HEADER_BYTES - 8;
+/// Placeholder `n` while a writer is open; readers reject it.
+const N_UNFINALIZED: u64 = u64::MAX;
+
+/// The hashing recipe + row count stored in the cache header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheMeta {
+    /// Bits per code.
+    pub b: u32,
+    /// Codes per row (the paper's k).
+    pub k: usize,
+    /// Original feature-space dimensionality D.
+    pub d: u64,
+    /// Seed of the minwise family the codes were drawn with.
+    pub seed: u64,
+    /// Total rows across all records.
+    pub n: u64,
+}
+
+impl CacheMeta {
+    /// Expanded dimensionality 2^b · k a solver trains against.
+    pub fn expanded_dim(&self) -> usize {
+        (1usize << self.b) * self.k
+    }
+}
+
+/// Incremental FNV-1a (64-bit) — per-record integrity, not cryptographic.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &byte in bytes {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Buffered, append-only cache writer.  Records go out as chunks arrive;
+/// [`finalize`](Self::finalize) patches the row count into the header.
+pub struct CacheWriter<W: Write + Seek> {
+    out: W,
+    meta: CacheMeta,
+    stride: usize,
+    finalized: bool,
+    /// Reusable record-payload staging buffer (labels + words serialized
+    /// once, then checksummed and written as single bulk calls).
+    scratch: Vec<u8>,
+}
+
+impl CacheWriter<BufWriter<File>> {
+    /// Create (truncating) a cache file for the given hashing recipe.
+    pub fn create<P: AsRef<Path>>(path: P, b: u32, k: usize, d: u64, seed: u64) -> Result<Self> {
+        CacheWriter::new(BufWriter::with_capacity(1 << 20, File::create(path)?), b, k, d, seed)
+    }
+}
+
+impl<W: Write + Seek> CacheWriter<W> {
+    pub fn new(mut out: W, b: u32, k: usize, d: u64, seed: u64) -> Result<Self> {
+        if !(1..=16).contains(&b) {
+            return Err(Error::InvalidArg(format!("b must be 1..=16, got {b}")));
+        }
+        out.write_all(CACHE_MAGIC)?;
+        out.write_all(&CACHE_VERSION.to_le_bytes())?;
+        out.write_all(&b.to_le_bytes())?;
+        for v in [k as u64, d, seed, N_UNFINALIZED] {
+            out.write_all(&v.to_le_bytes())?;
+        }
+        let stride = (k * b as usize).div_ceil(64);
+        Ok(CacheWriter {
+            out,
+            meta: CacheMeta { b, k, d, seed, n: 0 },
+            stride,
+            finalized: false,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Rows written so far.
+    pub fn rows_written(&self) -> u64 {
+        self.meta.n
+    }
+
+    /// Append one hashed chunk as a checksummed record.
+    pub fn write_chunk(&mut self, codes: &PackedCodes, labels: &[i8]) -> Result<()> {
+        if self.finalized {
+            return Err(Error::InvalidArg("cache writer already finalized".into()));
+        }
+        if codes.b != self.meta.b || codes.k != self.meta.k {
+            return Err(Error::InvalidArg(format!(
+                "chunk geometry (b={}, k={}) does not match cache (b={}, k={})",
+                codes.b, codes.k, self.meta.b, self.meta.k
+            )));
+        }
+        if codes.n != labels.len() {
+            return Err(Error::InvalidArg(format!(
+                "chunk has {} rows but {} labels",
+                codes.n,
+                labels.len()
+            )));
+        }
+        if codes.n == 0 {
+            return Ok(()); // empty chunks carry no information
+        }
+        let rows = u32::try_from(codes.n)
+            .map_err(|_| Error::InvalidArg("chunk larger than u32 rows".into()))?;
+        // stage the payload once (labels as two's-complement bytes, then
+        // little-endian words) so checksum + IO run over whole slices
+        self.scratch.clear();
+        self.scratch.reserve(codes.n + 8 * codes.words().len());
+        self.scratch.extend(labels.iter().map(|&l| l as u8));
+        for &word in codes.words() {
+            self.scratch.extend_from_slice(&word.to_le_bytes());
+        }
+        let payload_len = self.scratch.len() as u64;
+        let mut sum = Fnv1a::new();
+        sum.update(&rows.to_le_bytes());
+        sum.update(&self.scratch);
+        self.out.write_all(&rows.to_le_bytes())?;
+        self.out.write_all(&payload_len.to_le_bytes())?;
+        self.out.write_all(&self.scratch)?;
+        self.out.write_all(&sum.finish().to_le_bytes())?;
+        self.meta.n += codes.n as u64;
+        Ok(())
+    }
+
+    /// Patch the header row count and flush.  Idempotent; a cache that was
+    /// never finalized (crash mid-write) is rejected by the reader.
+    pub fn finalize(&mut self) -> Result<()> {
+        if self.finalized {
+            return Ok(());
+        }
+        self.out.seek(SeekFrom::Start(N_OFFSET))?;
+        self.out.write_all(&self.meta.n.to_le_bytes())?;
+        self.out.seek(SeekFrom::End(0))?;
+        self.out.flush()?;
+        self.finalized = true;
+        Ok(())
+    }
+}
+
+/// Sequential cache reader: header up front, then one chunk per
+/// [`next_chunk`](Self::next_chunk) call with checksum verification —
+/// constant memory regardless of corpus size.
+pub struct CacheReader<R: Read> {
+    inner: R,
+    meta: CacheMeta,
+    stride: usize,
+    rows_read: u64,
+    poisoned: bool,
+}
+
+impl CacheReader<BufReader<File>> {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        CacheReader::new(BufReader::with_capacity(1 << 20, File::open(path)?))
+    }
+}
+
+impl<R: Read> CacheReader<R> {
+    pub fn new(mut inner: R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        inner.read_exact(&mut magic)?;
+        if &magic != CACHE_MAGIC {
+            return Err(Error::InvalidArg("bad cache magic (not a BBHC file)".into()));
+        }
+        let mut u32buf = [0u8; 4];
+        inner.read_exact(&mut u32buf)?;
+        let version = u32::from_le_bytes(u32buf);
+        if version != CACHE_VERSION {
+            return Err(Error::InvalidArg(format!(
+                "unsupported cache version {version} (expected {CACHE_VERSION})"
+            )));
+        }
+        inner.read_exact(&mut u32buf)?;
+        let b = u32::from_le_bytes(u32buf);
+        if !(1..=16).contains(&b) {
+            return Err(Error::InvalidArg(format!("corrupt cache header: b={b}")));
+        }
+        let mut u64buf = [0u8; 8];
+        let mut next = |r: &mut R| -> Result<u64> {
+            r.read_exact(&mut u64buf)?;
+            Ok(u64::from_le_bytes(u64buf))
+        };
+        let k = next(&mut inner)? as usize;
+        let d = next(&mut inner)?;
+        let seed = next(&mut inner)?;
+        let n = next(&mut inner)?;
+        if n == N_UNFINALIZED {
+            return Err(Error::InvalidArg(
+                "cache was never finalized (writer crashed mid-write?)".into(),
+            ));
+        }
+        let stride = (k * b as usize).div_ceil(64);
+        Ok(CacheReader {
+            inner,
+            meta: CacheMeta { b, k, d, seed, n },
+            stride,
+            rows_read: 0,
+            poisoned: false,
+        })
+    }
+
+    /// The hashing recipe + row count from the header.
+    pub fn meta(&self) -> CacheMeta {
+        self.meta
+    }
+
+    /// Read and verify the next chunk record; `None` once all `meta.n`
+    /// rows have been replayed.
+    pub fn next_chunk(&mut self) -> Result<Option<(PackedCodes, Vec<i8>)>> {
+        if self.poisoned {
+            return Err(Error::InvalidArg("cache reader poisoned by earlier error".into()));
+        }
+        if self.rows_read >= self.meta.n {
+            return Ok(None);
+        }
+        match self.read_record() {
+            Ok(chunk) => Ok(Some(chunk)),
+            Err(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn read_record(&mut self) -> Result<(PackedCodes, Vec<i8>)> {
+        let mut u32buf = [0u8; 4];
+        let mut u64buf = [0u8; 8];
+        self.inner.read_exact(&mut u32buf)?;
+        let rows = u32::from_le_bytes(u32buf) as usize;
+        self.inner.read_exact(&mut u64buf)?;
+        let payload_len = u64::from_le_bytes(u64buf);
+        let expect = rows as u64 + 8 * rows as u64 * self.stride as u64;
+        if rows == 0 || payload_len != expect {
+            return Err(Error::InvalidArg(format!(
+                "corrupt cache record at row {}: {} rows, payload {} (expected {})",
+                self.rows_read, rows, payload_len, expect
+            )));
+        }
+        if self.rows_read + rows as u64 > self.meta.n {
+            return Err(Error::InvalidArg(format!(
+                "cache records overrun header count ({} + {} > {})",
+                self.rows_read, rows, self.meta.n
+            )));
+        }
+        let mut sum = Fnv1a::new();
+        sum.update(&u32buf);
+        let mut label_bytes = vec![0u8; rows];
+        self.inner.read_exact(&mut label_bytes)?;
+        sum.update(&label_bytes);
+        let mut word_bytes = vec![0u8; 8 * rows * self.stride];
+        self.inner.read_exact(&mut word_bytes)?;
+        sum.update(&word_bytes);
+        self.inner.read_exact(&mut u64buf)?;
+        let stored = u64::from_le_bytes(u64buf);
+        if stored != sum.finish() {
+            return Err(Error::InvalidArg(format!(
+                "cache checksum mismatch at row {} (stored {stored:#018x}, computed {:#018x})",
+                self.rows_read,
+                sum.finish()
+            )));
+        }
+        let labels: Vec<i8> = label_bytes.into_iter().map(|v| v as i8).collect();
+        let words: Vec<u64> = word_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let codes = PackedCodes::from_words(self.meta.b, self.meta.k, rows, words)?;
+        self.rows_read += rows as u64;
+        Ok((codes, labels))
+    }
+
+    /// Materialize the whole cache (small inputs / batch solvers; the
+    /// streaming trainer never calls this).
+    pub fn read_all(mut self) -> Result<BbitDataset> {
+        let mut all = PackedCodes::new(self.meta.b, self.meta.k);
+        let mut labels = Vec::new();
+        while let Some((codes, ls)) = self.next_chunk()? {
+            all.extend(&codes)?;
+            labels.extend(ls);
+        }
+        Ok(BbitDataset::new(all, labels))
+    }
+}
+
+impl<R: Read> Iterator for CacheReader<R> {
+    type Item = Result<(PackedCodes, Vec<i8>)>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_chunk().transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::io::Cursor;
+
+    fn random_chunk(b: u32, k: usize, rows: usize, rng: &mut Rng) -> (PackedCodes, Vec<i8>) {
+        let mut pc = PackedCodes::new(b, k);
+        let mut labels = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let row: Vec<u16> = (0..k).map(|_| rng.below(1 << b) as u16).collect();
+            pc.push_row(&row).unwrap();
+            labels.push(if rng.bool() { 1 } else { -1 });
+        }
+        (pc, labels)
+    }
+
+    /// Property-style roundtrip over geometries and ragged chunk sizes.
+    #[test]
+    fn roundtrip_random_geometries() {
+        let mut rng = Rng::new(0xCAFE);
+        for &(b, k) in &[(1u32, 64usize), (7, 33), (8, 200), (12, 37), (16, 5)] {
+            let sizes = [1usize, 17, 256, 3];
+            let mut buf = Cursor::new(Vec::new());
+            let mut w = CacheWriter::new(&mut buf, b, k, 1 << 30, 42).unwrap();
+            let mut chunks = Vec::new();
+            for &rows in &sizes {
+                let (pc, ls) = random_chunk(b, k, rows, &mut rng);
+                w.write_chunk(&pc, &ls).unwrap();
+                chunks.push((pc, ls));
+            }
+            w.finalize().unwrap();
+            w.finalize().unwrap(); // idempotent
+            buf.set_position(0);
+            let mut r = CacheReader::new(&mut buf).unwrap();
+            let meta = r.meta();
+            assert_eq!(
+                meta,
+                CacheMeta { b, k, d: 1 << 30, seed: 42, n: sizes.iter().sum::<usize>() as u64 }
+            );
+            for (pc, ls) in &chunks {
+                let (got_pc, got_ls) = r.next_chunk().unwrap().unwrap();
+                assert_eq!(&got_pc, pc, "b={b} k={k}");
+                assert_eq!(&got_ls, ls);
+            }
+            assert!(r.next_chunk().unwrap().is_none());
+            assert!(r.next_chunk().unwrap().is_none()); // fused
+        }
+    }
+
+    #[test]
+    fn empty_cache_roundtrips() {
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, 8, 16, 1 << 20, 7).unwrap();
+        let empty = PackedCodes::new(8, 16);
+        w.write_chunk(&empty, &[]).unwrap(); // dropped, not an error
+        w.finalize().unwrap();
+        buf.set_position(0);
+        let ds = CacheReader::new(&mut buf).unwrap().read_all().unwrap();
+        assert_eq!(ds.len(), 0);
+    }
+
+    #[test]
+    fn unfinalized_cache_is_rejected() {
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, 8, 16, 1 << 20, 7).unwrap();
+        let (pc, ls) = random_chunk(8, 16, 5, &mut Rng::new(1));
+        w.write_chunk(&pc, &ls).unwrap();
+        // no finalize
+        drop(w);
+        buf.set_position(0);
+        assert!(CacheReader::new(&mut buf).is_err());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut rng = Rng::new(9);
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, 8, 32, 1 << 20, 3).unwrap();
+        let (pc, ls) = random_chunk(8, 32, 40, &mut rng);
+        w.write_chunk(&pc, &ls).unwrap();
+        w.finalize().unwrap();
+        let mut bytes = buf.into_inner();
+        // flip one payload byte past the header
+        let target = HEADER_BYTES as usize + 12 + 7;
+        bytes[target] ^= 0x40;
+        let mut r = CacheReader::new(Cursor::new(bytes)).unwrap();
+        assert!(r.next_chunk().is_err());
+        assert!(r.next_chunk().is_err()); // poisoned stays poisoned
+    }
+
+    #[test]
+    fn truncated_cache_is_detected() {
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, 4, 8, 1 << 16, 1).unwrap();
+        let (pc, ls) = random_chunk(4, 8, 10, &mut Rng::new(2));
+        w.write_chunk(&pc, &ls).unwrap();
+        w.finalize().unwrap();
+        let bytes = buf.into_inner();
+        let cut = &bytes[..bytes.len() - 9]; // lose the tail of the record
+        let mut r = CacheReader::new(Cursor::new(cut.to_vec())).unwrap();
+        assert!(r.next_chunk().is_err());
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected_by_writer() {
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, 8, 16, 1 << 20, 7).unwrap();
+        let (pc, ls) = random_chunk(8, 17, 3, &mut Rng::new(3));
+        assert!(w.write_chunk(&pc, &ls).is_err());
+        let (pc, _) = random_chunk(8, 16, 3, &mut Rng::new(4));
+        assert!(w.write_chunk(&pc, &[1, -1]).is_err()); // label count
+    }
+}

@@ -6,8 +6,12 @@
 //!   binary vector fed to a linear solver (Section 3), in both explicit
 //!   CSR form and the implicit offsets+codes form the solvers and the PJRT
 //!   train artifacts consume.
+//! - [`cache`]: the on-disk hashed-chunk cache (checksummed record stream)
+//!   behind the "hash once, train many times" out-of-core workflow.
 
+pub mod cache;
 pub mod expansion;
 pub mod packed;
 
+pub use cache::{CacheMeta, CacheReader, CacheWriter};
 pub use packed::PackedCodes;

@@ -42,6 +42,44 @@ impl PackedCodes {
         self.data.len() * 8
     }
 
+    /// Words per row (the row stride) — the unit [`words`](Self::words) is
+    /// laid out in.
+    pub fn stride(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// The raw packed words (row-major, `stride()` words per row) — the
+    /// exact payload the on-disk cache records serialize.
+    pub fn words(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Rebuild from raw packed words (inverse of [`words`](Self::words));
+    /// `data.len()` must equal `stride · n` for the (b, k) geometry.
+    pub fn from_words(b: u32, k: usize, n: usize, data: Vec<u64>) -> Result<Self> {
+        if !(1..=16).contains(&b) {
+            return Err(Error::InvalidArg(format!("b must be 1..=16, got {b}")));
+        }
+        let words_per_row = (k * b as usize).div_ceil(64);
+        if data.len() != words_per_row * n {
+            return Err(Error::InvalidArg(format!(
+                "packed payload has {} words, expected {} ({} rows × stride {})",
+                data.len(),
+                words_per_row * n,
+                n,
+                words_per_row
+            )));
+        }
+        Ok(PackedCodes { b, k, n, words_per_row, data })
+    }
+
+    /// Drop all rows, keeping the (b, k) geometry and the allocation — the
+    /// streaming trainer reuses one buffer per minibatch.
+    pub fn clear(&mut self) {
+        self.n = 0;
+        self.data.clear();
+    }
+
     /// The paper's idealized storage: exactly n·b·k bits, in bytes.
     pub fn ideal_bytes(&self) -> u64 {
         (self.n as u64 * self.b as u64 * self.k as u64).div_ceil(8)
@@ -325,6 +363,28 @@ mod tests {
         assert_eq!(t.row(0), vec![1, 2, 3]);
         assert_eq!(t.k, 3);
         assert!(pc.truncate_k(7).is_err());
+    }
+
+    #[test]
+    fn words_from_words_roundtrip_and_clear() {
+        let mut rng = Rng::new(77);
+        let mut pc = PackedCodes::new(9, 29);
+        for _ in 0..17 {
+            let row: Vec<u16> = (0..29).map(|_| rng.below(1 << 9) as u16).collect();
+            pc.push_row(&row).unwrap();
+        }
+        let back =
+            PackedCodes::from_words(pc.b, pc.k, pc.n, pc.words().to_vec()).unwrap();
+        assert_eq!(pc, back);
+        // geometry mismatches are rejected, not UB
+        assert!(PackedCodes::from_words(9, 29, 16, pc.words().to_vec()).is_err());
+        assert!(PackedCodes::from_words(77, 29, 17, pc.words().to_vec()).is_err());
+        let mut cleared = back;
+        cleared.clear();
+        assert_eq!(cleared.n, 0);
+        assert!(cleared.words().is_empty());
+        cleared.push_row(&[0; 29]).unwrap(); // still usable after clear
+        assert_eq!(cleared.n, 1);
     }
 
     #[test]

@@ -23,11 +23,24 @@
 //! |---|---|
 //! | [`data`] | LibSVM streaming IO, rcv1-like generator, feature expansion |
 //! | [`hashing`] | minwise / b-bit / VW / RP + estimator variance theory |
-//! | [`encode`] | `n·b·k`-bit packed codes, 2^b×k expansion (Section 3) |
-//! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD (the LIBLINEAR substrate) |
-//! | [`coordinator`] | sharded streaming preprocessing + training scheduler |
+//! | [`encode`] | `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), on-disk hashed cache |
+//! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form |
+//! | [`coordinator`] | streaming pipeline (reader → workers → collector → sink) + scheduler |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
+//!
+//! ## Out-of-core workflow (the paper's 200GB story)
+//!
+//! The pipeline's collector re-emits hashed chunks incrementally, in input
+//! order, into a pluggable [`coordinator::sink::PipelineSink`]:
+//!
+//! 1. `preprocess --cache-out` streams packed b-bit chunks to the
+//!    checksummed on-disk cache ([`encode::cache`]) — hash the corpus once;
+//! 2. `train --cache` replays that cache through batch solvers or the
+//!    streaming SGD trainer ([`solver::SgdStream`]) for as many
+//!    (solver, C, epoch) sweeps as needed;
+//! 3. `train --stream` skips the cache entirely: one pass, hash-and-train,
+//!    nothing materialized.
 
 pub mod config;
 pub mod coordinator;

@@ -16,10 +16,14 @@ use std::process::ExitCode;
 
 use bbit_mh::coordinator::pipeline::{HashJob, Pipeline, PipelineConfig};
 use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
+use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
 use bbit_mh::data::expand::{expand_example, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use bbit_mh::encode::cache::CacheReader;
+use bbit_mh::encode::expansion::BbitDataset;
 use bbit_mh::experiments::{self, Ctx, Scale};
+use bbit_mh::solver::{LinearModel, SgdConfig, SgdLoss};
 use bbit_mh::{Error, Result};
 
 const USAGE: &str = "\
@@ -28,12 +32,23 @@ bbit-mh — b-bit minwise hashing for large-scale linear learning
 
 USAGE:
   bbit-mh gen-data --out FILE [--n 4000] [--vocab 4000] [--expanded] [--seed N]
-  bbit-mh preprocess --input FILE --out FILE --method bbit|vw
+  bbit-mh preprocess --input FILE (--out FILE | --cache-out FILE) --method bbit|vw
              [--b 8] [--k 200] [--bins 1024] [--dim 1073741824]
              [--workers N] [--seed N]
+             (--cache-out streams b-bit chunks to the on-disk hashed cache:
+              hash once, train many times, constant memory)
   bbit-mh train --input FILE --solver svm|lr [--c 1.0] [--cv FOLDS]
              [--method bbit|vw|none] [--b 8] [--k 200] [--bins 1024]
              [--train-frac 0.5] [--seed N] [--save-model FILE]
+  bbit-mh train --cache FILE [--solver sgd|svm|lr] [--c 1.0] [--epochs 5]
+             [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda L]
+             [--eval] [--save-model FILE]
+             (multi-epoch replay of a hashed cache; sgd streams in O(dim)
+              memory; --eval adds a train-accuracy pass over the cache)
+  bbit-mh train --input FILE --stream [--b 8] [--k 200] [--dim D] [--seed N]
+             [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
+             [--save-model FILE]
+             (one-pass hash-and-train: nothing materialized, prints progressive loss)
   bbit-mh classify --model FILE --input FILE [--out FILE]
   bbit-mh experiments ID [--scale tiny|small|paper] [--results DIR]
              (IDs: table1 fig1 fig3 fig5 fig6 fig7 fig8 table2 variance fig9 all)
@@ -166,7 +181,6 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 
 fn cmd_preprocess(args: &Args) -> Result<()> {
     let input = args.required("input")?;
-    let out = args.required("out")?;
     let method = args.get("method", "bbit".to_string())?;
     let workers: usize = args.get("workers", bbit_mh::config::available_workers())?;
     let seed: u64 = args.get("seed", 1)?;
@@ -174,12 +188,30 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
     let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
     match method.as_str() {
         "bbit" => {
-            let job = HashJob::Bbit {
-                b: args.get("b", 8u32)?,
-                k: args.get("k", 200usize)?,
-                d: args.get("dim", 1u64 << 30)?,
-                seed,
-            };
+            let b: u32 = args.get("b", 8u32)?;
+            let k: usize = args.get("k", 200usize)?;
+            let d: u64 = args.get("dim", 1u64 << 30)?;
+            let job = HashJob::Bbit { b, k, d, seed };
+            if let Some(cache_out) = args.flags.get("cache-out") {
+                // out-of-core path: chunks stream to disk as they are
+                // hashed; memory stays bounded by the pipeline queues
+                let mut sink = CacheSink::create(cache_out, b, k, d, seed)?;
+                let report = pipe.run_sink(source, &job, &mut sink)?;
+                eprintln!(
+                    "hashed {} docs in {:.2}s wall ({:.2}s read + {:.2}s stalled, \
+                     {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks) -> {}",
+                    report.docs,
+                    report.wall_seconds,
+                    report.read_seconds,
+                    report.stall_seconds,
+                    report.hash_cpu_seconds,
+                    report.sink_seconds,
+                    report.reorder_peak,
+                    cache_out,
+                );
+                return Ok(());
+            }
+            let out = args.required("out")?;
             let (outp, report) = pipe.run(source, &job)?;
             let bb = outp.into_bbit()?;
             let f = std::fs::File::create(out)?;
@@ -205,6 +237,12 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             );
         }
         "vw" => {
+            if args.has("cache-out") {
+                return Err(Error::InvalidArg(
+                    "--cache-out stores packed b-bit codes; use --method bbit".into(),
+                ));
+            }
+            let out = args.required("out")?;
             let job = HashJob::Vw { bins: args.get("bins", 1024usize)?, seed };
             let (outp, report) = pipe.run(source, &job)?;
             let ds = outp.into_vw()?;
@@ -221,7 +259,154 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--loss` flag for the streaming SGD paths.
+fn sgd_loss_flag(args: &Args) -> Result<SgdLoss> {
+    match args.get("loss", "logistic".to_string())?.as_str() {
+        "logistic" => Ok(SgdLoss::Logistic),
+        "sqhinge" | "hinge" => Ok(SgdLoss::SquaredHinge),
+        other => Err(Error::InvalidArg(format!("unknown loss {other:?}"))),
+    }
+}
+
+/// Streaming accuracy of `model` over a hashed cache (one sequential pass).
+fn cache_accuracy(path: &str, model: &LinearModel) -> Result<f64> {
+    let mut reader = CacheReader::open(path)?;
+    let (mut n, mut correct) = (0u64, 0u64);
+    while let Some((codes, labels)) = reader.next_chunk()? {
+        let ds = BbitDataset::new(codes, labels);
+        for i in 0..ds.len() {
+            n += 1;
+            if model.predict(&ds, i) == ds.labels[i] {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / n.max(1) as f64)
+}
+
+/// `train --cache FILE`: replay an on-disk hashed cache — the "hash once,
+/// train many times" half of the out-of-core workflow.
+fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
+    let solver = args.get("solver", "sgd".to_string())?;
+    let c: f64 = args.get("c", 1.0)?;
+    let meta = CacheReader::open(cache)?.meta();
+    eprintln!(
+        "cache {cache}: {} docs, b={} k={} d={} (hash seed {})",
+        meta.n, meta.b, meta.k, meta.d, meta.seed
+    );
+    let model = match solver.as_str() {
+        "sgd" => {
+            let cfg = SgdConfig {
+                loss: sgd_loss_flag(args)?,
+                lr0: args.get("lr0", 0.5)?,
+                lambda: args.get(
+                    "lambda",
+                    bbit_mh::solver::sgd::lambda_from_c(c, meta.n as usize),
+                )?,
+                epochs: args.get("epochs", 5usize)?,
+                batch: args.get("batch", 256usize)?,
+            };
+            let (model, stats) = bbit_mh::solver::train_from_cache(cache, &cfg)?;
+            // the accuracy pass re-reads the whole cache — opt-in so the
+            // model-search loop pays epochs reads, not epochs + 1
+            let acc = if args.has("eval") {
+                format!(", train acc {:.3}%", 100.0 * cache_accuracy(cache, &model)?)
+            } else {
+                String::new()
+            };
+            println!(
+                "solver=sgd method=cache epochs={}: progressive loss {:.4}{}, {:.3}s",
+                stats.iterations, stats.objective, acc, stats.train_seconds,
+            );
+            model
+        }
+        "svm" | "lr" => {
+            // batch solvers need random access: materialize, then train
+            // at the requested C on the whole cache
+            let ds = CacheReader::open(cache)?.read_all()?;
+            let (model, stats) = match solver.as_str() {
+                "svm" => bbit_mh::solver::train_svm(&ds, &bbit_mh::solver::SvmConfig::with_c(c)),
+                _ => bbit_mh::solver::train_lr(&ds, &bbit_mh::solver::LrConfig::with_c(c)),
+            };
+            let acc = bbit_mh::solver::accuracy(&model, &ds);
+            println!(
+                "solver={solver} method=cache C={c}: train acc {:.3}%, {:.3}s, {} iters{}",
+                100.0 * acc,
+                stats.train_seconds,
+                stats.iterations,
+                if stats.converged { "" } else { " (hit iteration cap)" },
+            );
+            model
+        }
+        other => return Err(Error::InvalidArg(format!("unknown solver {other:?}"))),
+    };
+    if let Some(model_path) = args.flags.get("save-model") {
+        let saved = bbit_mh::solver::SavedModel {
+            b: meta.b,
+            k: meta.k,
+            d: meta.d,
+            seed: meta.seed,
+            model,
+        };
+        saved.save(model_path)?;
+        eprintln!("saved model to {model_path}");
+    }
+    Ok(())
+}
+
+/// `train --input FILE --stream`: one-pass hash-and-train.  Nothing is
+/// materialized — parsed chunks flow through the hash workers straight
+/// into the streaming SGD update.
+fn cmd_train_stream(args: &Args) -> Result<()> {
+    let input = args.required("input")?;
+    let b: u32 = args.get("b", 8u32)?;
+    let k: usize = args.get("k", 200usize)?;
+    let d: u64 = args.get("dim", 1u64 << 30)?;
+    let seed: u64 = args.get("seed", 1)?;
+    let cfg = SgdConfig {
+        loss: sgd_loss_flag(args)?,
+        lr0: args.get("lr0", 0.5)?,
+        // n is unknown until the stream ends, so λ cannot be derived from
+        // C here — take it directly
+        lambda: args.get("lambda", 1e-4)?,
+        epochs: 1,
+        batch: args.get("batch", 256usize)?,
+    };
+    let workers: usize = args.get("workers", bbit_mh::config::available_workers())?;
+    let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
+    let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
+    let job = HashJob::Bbit { b, k, d, seed };
+    let mut sink = TrainSink::new(cfg, b, k);
+    let report = pipe.run_sink(source, &job, &mut sink)?;
+    let (model, stats) = sink.into_result();
+    println!(
+        "solver=sgd method=stream: one-pass trained on {} docs, progressive loss {:.4}, \
+         {:.2}s wall ({:.2}s read + {:.2}s stalled, {:.2} hash-cpu-s, {:.2}s solver, \
+         reorder peak {} chunks)",
+        report.docs,
+        stats.objective,
+        report.wall_seconds,
+        report.read_seconds,
+        report.stall_seconds,
+        report.hash_cpu_seconds,
+        report.sink_seconds,
+        report.reorder_peak,
+    );
+    if let Some(model_path) = args.flags.get("save-model") {
+        let saved = bbit_mh::solver::SavedModel { b, k, d, seed, model };
+        saved.save(model_path)?;
+        eprintln!("saved model to {model_path}");
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    if let Some(cache) = args.flags.get("cache") {
+        return cmd_train_cache(args, cache.as_str());
+    }
+    if args.has("stream") {
+        return cmd_train_stream(args);
+    }
     let input = args.required("input")?;
     let solver = args.get("solver", "svm".to_string())?;
     let c: f64 = args.get("c", 1.0)?;

@@ -8,6 +8,10 @@
 //! All solvers are generic over [`FeatureMatrix`], so the same code trains
 //! on raw CSR data, VW-hashed real-valued data, and implicit b-bit
 //! expanded data (Section 3) without materializing the 2^b·k vectors.
+//! The SGD solver additionally has a streaming form ([`SgdStream`],
+//! `train_sgd_stream`, `train_from_cache`) that consumes hashed chunks
+//! from the pipeline or the on-disk cache in O(dim + batch) memory — the
+//! out-of-core path for corpora that never fit in RAM.
 
 pub mod cv;
 pub mod dcd_svm;
@@ -21,4 +25,4 @@ pub use dcd_svm::{train_svm, SvmConfig, SvmLoss};
 pub use linear::{accuracy, FeatureMatrix, LinearModel, TrainStats};
 pub use lr_newton::{train_lr, LrConfig};
 pub use model_io::SavedModel;
-pub use sgd::{train_sgd, SgdConfig, SgdLoss};
+pub use sgd::{train_from_cache, train_sgd, train_sgd_stream, SgdConfig, SgdLoss, SgdStream};

@@ -12,9 +12,14 @@
 //!   w ← (1 − η λ) w − η · (1/B) Σ_{i∈batch} ∂loss/∂m · xᵢ,
 //!   η(t) = η₀ / (1 + t·λ·η₀).
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::encode::cache::CacheReader;
+use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
 use crate::solver::linear::{FeatureMatrix, LinearModel, TrainStats};
+use crate::{Error, Result};
 
 /// Loss selector matching the PJRT artifact pair.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,6 +134,235 @@ pub fn train_sgd<F: FeatureMatrix>(data: &F, cfg: &SgdConfig) -> (LinearModel, T
     (LinearModel { w }, stats)
 }
 
+/// Streaming twin of [`train_sgd`] for b-bit chunk streams.
+///
+/// Holds the weight vector plus at most one minibatch of buffered rows —
+/// memory is O(dim + batch·k), independent of corpus size.  Rows arrive in
+/// chunks (from the pipeline's [`TrainSink`](crate::coordinator::sink) or
+/// a cache replay); the trainer re-batches them into exactly the minibatch
+/// sequence [`train_sgd`] would visit, so for the same row order, batch
+/// size, and epoch count the final weights are identical to
+/// materialize-then-`train_sgd` (the integration test asserts this).
+///
+/// One pass = `push_chunk`… then [`end_epoch`](Self::end_epoch) (which
+/// flushes the final partial minibatch exactly like `train_sgd`'s tail
+/// batch).  Multi-epoch training replays the stream and calls `end_epoch`
+/// after each pass; the step counter (and thus the learning-rate schedule)
+/// carries across epochs, as in `train_sgd`.
+pub struct SgdStream {
+    cfg: SgdConfig,
+    b: u32,
+    k: usize,
+    w: Vec<f32>,
+    step: u64,
+    /// Partial minibatch (always < cfg.batch rows between calls).
+    buf: BbitDataset,
+    row_scratch: Vec<u16>,
+    coefs: Vec<f32>,
+    rows_seen: u64,
+    epochs_done: usize,
+    loss_sum: f64,
+    t0: Instant,
+}
+
+impl SgdStream {
+    pub fn new(cfg: SgdConfig, b: u32, k: usize) -> Self {
+        assert!(cfg.batch > 0, "batch must be positive");
+        let dim = (1usize << b) * k;
+        SgdStream {
+            cfg,
+            b,
+            k,
+            w: vec![0.0f32; dim],
+            step: 0,
+            buf: BbitDataset::new(PackedCodes::new(b, k), Vec::new()),
+            row_scratch: vec![0u16; k],
+            coefs: Vec::new(),
+            rows_seen: 0,
+            epochs_done: 0,
+            loss_sum: 0.0,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Expanded dimensionality 2^b · k of the weight vector.
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Rows consumed so far (across all epochs).
+    pub fn rows_seen(&self) -> u64 {
+        self.rows_seen
+    }
+
+    /// Mean pre-update loss over every row seen so far — VW-style
+    /// progressive validation (each row is scored before the model has
+    /// trained on it within its minibatch).
+    pub fn progressive_loss(&self) -> f64 {
+        self.loss_sum / self.rows_seen.max(1) as f64
+    }
+
+    /// Feed one hashed chunk (by value — the pipeline sink and the cache
+    /// reader both own their chunks); applies a minibatch update every
+    /// time `cfg.batch` rows have accumulated.  A chunk that aligns with
+    /// the minibatch boundary (empty buffer, exactly `batch` rows — the
+    /// CLI default: pipeline chunk_size == SGD batch) is consumed in place
+    /// with no per-row unpack/repack.
+    pub fn push_chunk(&mut self, codes: PackedCodes, labels: Vec<i8>) -> Result<()> {
+        if codes.b != self.b || codes.k != self.k {
+            return Err(Error::InvalidArg(format!(
+                "chunk geometry (b={}, k={}) does not match trainer (b={}, k={})",
+                codes.b, codes.k, self.b, self.k
+            )));
+        }
+        if codes.n != labels.len() {
+            return Err(Error::InvalidArg(format!(
+                "chunk has {} rows but {} labels",
+                codes.n,
+                labels.len()
+            )));
+        }
+        if self.buf.is_empty() && codes.n == self.cfg.batch {
+            // aligned fast path: one whole minibatch, zero copies
+            let chunk = BbitDataset::new(codes, labels);
+            Self::minibatch_step(
+                &self.cfg,
+                &mut self.w,
+                &mut self.step,
+                &mut self.rows_seen,
+                &mut self.loss_sum,
+                &mut self.coefs,
+                &chunk,
+            );
+            return Ok(());
+        }
+        for i in 0..codes.n {
+            codes.row_into(i, &mut self.row_scratch);
+            self.buf.codes.push_row(&self.row_scratch)?;
+            self.buf.labels.push(labels[i]);
+            if self.buf.len() == self.cfg.batch {
+                self.apply_buffered_batch();
+            }
+        }
+        Ok(())
+    }
+
+    /// End the current pass: flush the partial tail minibatch (identical
+    /// to `train_sgd`'s final `min(batch, n - i0)` batch of an epoch).
+    pub fn end_epoch(&mut self) {
+        self.apply_buffered_batch();
+        self.epochs_done += 1;
+    }
+
+    fn apply_buffered_batch(&mut self) {
+        Self::minibatch_step(
+            &self.cfg,
+            &mut self.w,
+            &mut self.step,
+            &mut self.rows_seen,
+            &mut self.loss_sum,
+            &mut self.coefs,
+            &self.buf,
+        );
+        self.buf.codes.clear();
+        self.buf.labels.clear();
+    }
+
+    /// One `train_sgd` minibatch step over all rows of `data` (an
+    /// associated fn taking fields explicitly so callers can pass either
+    /// the internal buffer or a borrowed whole chunk).
+    #[allow(clippy::too_many_arguments)]
+    fn minibatch_step(
+        cfg: &SgdConfig,
+        w: &mut [f32],
+        step: &mut u64,
+        rows_seen: &mut u64,
+        loss_sum: &mut f64,
+        coefs: &mut Vec<f32>,
+        data: &BbitDataset,
+    ) {
+        let bsz = data.len();
+        if bsz == 0 {
+            return;
+        }
+        let lr = cfg.lr0 / (1.0 + *step as f64 * cfg.lambda * cfg.lr0);
+        coefs.clear();
+        for i in 0..bsz {
+            let m = data.dot(i, w);
+            let y = data.labels[i] as f32;
+            coefs.push(cfg.loss.grad_coef(m, y));
+            *loss_sum += cfg.loss.loss(m as f64, y as f64);
+        }
+        let decay = (1.0 - lr * cfg.lambda) as f32;
+        if decay != 1.0 {
+            w.iter_mut().for_each(|x| *x *= decay);
+        }
+        let scale = (lr / bsz as f64) as f32;
+        for (i, &g) in coefs.iter().enumerate() {
+            if g != 0.0 {
+                data.axpy(i, -scale * g, w);
+            }
+        }
+        *step += 1;
+        *rows_seen += bsz as u64;
+    }
+
+    /// Read-only view of the current weights (mid-stream evaluation).
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Consume the trainer.  `TrainStats.objective` is the *progressive
+    /// loss* (no second pass over data that may already be gone), not the
+    /// batch objective `train_sgd` reports.
+    pub fn finalize(self) -> (LinearModel, TrainStats) {
+        let stats = TrainStats {
+            iterations: self.epochs_done,
+            objective: self.progressive_loss(),
+            converged: true,
+            train_seconds: self.t0.elapsed().as_secs_f64(),
+        };
+        (LinearModel { w: self.w }, stats)
+    }
+}
+
+/// Single-pass hash-and-train: drain a chunk stream through [`SgdStream`].
+/// `cfg.epochs` is ignored — a stream can only be seen once; replay a
+/// cache via [`train_from_cache`] for multi-epoch training.
+pub fn train_sgd_stream<I>(
+    chunks: I,
+    b: u32,
+    k: usize,
+    cfg: &SgdConfig,
+) -> Result<(LinearModel, TrainStats)>
+where
+    I: Iterator<Item = Result<(PackedCodes, Vec<i8>)>>,
+{
+    let mut stream = SgdStream::new(cfg.clone(), b, k);
+    for chunk in chunks {
+        let (codes, labels) = chunk?;
+        stream.push_chunk(codes, labels)?;
+    }
+    stream.end_epoch();
+    Ok(stream.finalize())
+}
+
+/// Multi-epoch streaming training from an on-disk hashed cache: replays
+/// the cache `cfg.epochs` times through one [`SgdStream`] — the fwumious
+/// "train over the cache" scenario, in constant memory.
+pub fn train_from_cache<P: AsRef<Path>>(path: P, cfg: &SgdConfig) -> Result<(LinearModel, TrainStats)> {
+    let meta = CacheReader::open(&path)?.meta();
+    let mut stream = SgdStream::new(cfg.clone(), meta.b, meta.k);
+    for _ in 0..cfg.epochs.max(1) {
+        let mut reader = CacheReader::open(&path)?;
+        while let Some((codes, labels)) = reader.next_chunk()? {
+            stream.push_chunk(codes, labels)?;
+        }
+        stream.end_epoch();
+    }
+    Ok(stream.finalize())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +423,117 @@ mod tests {
     fn lambda_from_c_mapping() {
         assert!((lambda_from_c(1.0, 1000) - 1e-3).abs() < 1e-12);
         assert!((lambda_from_c(10.0, 100) - 1e-3).abs() < 1e-12);
+    }
+
+    fn random_bbit(b: u32, k: usize, n: usize, seed: u64) -> BbitDataset {
+        let mut rng = Rng::new(seed);
+        let mut pc = PackedCodes::new(b, k);
+        let mut labels = Vec::new();
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| rng.below(1 << b) as u16).collect();
+            pc.push_row(&row).unwrap();
+            labels.push(if rng.bool() { 1 } else { -1 });
+        }
+        BbitDataset::new(pc, labels)
+    }
+
+    /// Slice rows [lo, hi) of a BbitDataset into a standalone chunk.
+    fn chunk_of(ds: &BbitDataset, lo: usize, hi: usize) -> (PackedCodes, Vec<i8>) {
+        let mut pc = PackedCodes::new(ds.codes.b, ds.codes.k);
+        let mut row = vec![0u16; ds.codes.k];
+        for i in lo..hi {
+            ds.codes.row_into(i, &mut row);
+            pc.push_row(&row).unwrap();
+        }
+        (pc, ds.labels[lo..hi].to_vec())
+    }
+
+    #[test]
+    fn stream_matches_batch_across_ragged_chunks_and_epochs() {
+        let ds = random_bbit(4, 24, 157, 0xD1CE);
+        // batch=32 does not divide 157 and chunk boundaries (13) never
+        // align with minibatch boundaries — the re-batching must hide both
+        let cfg = SgdConfig { epochs: 3, batch: 32, lambda: 1e-3, ..Default::default() };
+        let (reference, _) = train_sgd(&ds, &cfg);
+        let mut stream = SgdStream::new(cfg.clone(), 4, 24);
+        for _ in 0..cfg.epochs {
+            let mut lo = 0;
+            while lo < ds.len() {
+                let hi = (lo + 13).min(ds.len());
+                let (pc, ls) = chunk_of(&ds, lo, hi);
+                stream.push_chunk(pc, ls).unwrap();
+                lo = hi;
+            }
+            stream.end_epoch();
+        }
+        assert_eq!(stream.rows_seen(), (ds.len() * cfg.epochs) as u64);
+        let (model, stats) = stream.finalize();
+        assert_eq!(stats.iterations, 3);
+        let max_diff = model
+            .w
+            .iter()
+            .zip(&reference.w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-6, "stream/batch weight divergence: {max_diff}");
+    }
+
+    #[test]
+    fn train_sgd_stream_single_pass_matches_one_epoch() {
+        let ds = random_bbit(8, 10, 90, 0xBEEF);
+        let cfg = SgdConfig { epochs: 1, batch: 16, ..Default::default() };
+        let (reference, _) = train_sgd(&ds, &cfg);
+        let chunks: Vec<_> = (0..ds.len())
+            .step_by(7)
+            .map(|lo| Ok(chunk_of(&ds, lo, (lo + 7).min(ds.len()))))
+            .collect();
+        let (model, stats) = train_sgd_stream(chunks.into_iter(), 8, 10, &cfg).unwrap();
+        assert!(stats.objective.is_finite());
+        let max_diff = model
+            .w
+            .iter()
+            .zip(&reference.w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-6, "divergence: {max_diff}");
+    }
+
+    #[test]
+    fn stream_rejects_geometry_mismatch() {
+        let mut stream = SgdStream::new(SgdConfig::default(), 8, 16);
+        let ds = random_bbit(8, 17, 4, 1);
+        let (pc, ls) = chunk_of(&ds, 0, 4);
+        assert!(stream.push_chunk(pc, ls).is_err());
+        let ds = random_bbit(4, 16, 4, 2);
+        let (pc, ls) = chunk_of(&ds, 0, 4);
+        assert!(stream.push_chunk(pc, ls).is_err());
+        let ds = random_bbit(8, 16, 4, 3);
+        let (pc, _) = chunk_of(&ds, 0, 4);
+        assert!(stream.push_chunk(pc, vec![1]).is_err());
+    }
+
+    #[test]
+    fn aligned_chunks_take_the_zero_copy_path_and_still_match() {
+        // chunk size == batch size: every chunk hits the in-place fast
+        // path; weights must be identical to the batch reference anyway
+        let ds = random_bbit(6, 12, 128, 0xA11);
+        let cfg = SgdConfig { epochs: 2, batch: 32, ..Default::default() };
+        let (reference, _) = train_sgd(&ds, &cfg);
+        let mut stream = SgdStream::new(cfg.clone(), 6, 12);
+        for _ in 0..cfg.epochs {
+            for lo in (0..ds.len()).step_by(32) {
+                let (pc, ls) = chunk_of(&ds, lo, lo + 32);
+                stream.push_chunk(pc, ls).unwrap();
+            }
+            stream.end_epoch();
+        }
+        let (model, _) = stream.finalize();
+        let max_diff = model
+            .w
+            .iter()
+            .zip(&reference.w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-6, "fast-path divergence: {max_diff}");
     }
 }

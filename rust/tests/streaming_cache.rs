@@ -1,0 +1,176 @@
+//! Out-of-core integration tests: the sink-based pipeline, the on-disk
+//! hashed cache, and one-pass hash-and-train.
+//!
+//! Acceptance invariants (ISSUE 1):
+//! - stream-train ≡ materialize-then-train: a `TrainSink` run produces the
+//!   same weights (within fp tolerance) as hashing, materializing, and
+//!   calling `train_sgd` on the same seed/corpus;
+//! - cache roundtrip: pipeline → `CacheSink` → `CacheReader` reproduces
+//!   the `CollectSink` output exactly (codes, labels, order), and training
+//!   from the cache matches training from memory;
+//! - the collector's reorder window tracks in-flight work, not corpus
+//!   size (high-water-mark stat).
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::SparseDataset;
+use bbit_mh::encode::cache::CacheReader;
+use bbit_mh::solver::{train_from_cache, train_sgd, SgdConfig, SgdLoss};
+
+fn corpus(n: usize, seed: u64) -> SparseDataset {
+    CorpusGenerator::new(CorpusConfig {
+        n_docs: n,
+        vocab: 1500,
+        zipf_alpha: 1.05,
+        mean_tokens: 24.0,
+        class_signal: 0.55,
+        pos_fraction: 0.5,
+        seed,
+    })
+    .generate()
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bbit_stream_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("hashed.cache")
+}
+
+fn max_weight_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+#[test]
+fn stream_train_equals_materialize_then_train() {
+    let ds = corpus(700, 0x57E4);
+    let job = HashJob::Bbit { b: 8, k: 48, d: 1 << 24, seed: 17 };
+    let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 37, queue_depth: 2 });
+    let cfg = SgdConfig {
+        loss: SgdLoss::Logistic,
+        lr0: 0.5,
+        lambda: 1e-3,
+        epochs: 1,
+        batch: 64,
+    };
+
+    // reference: hash → materialize → batch train_sgd
+    let (out, _) = pipe.run(dataset_chunks(&ds, 37), &job).unwrap();
+    let materialized = out.into_bbit().unwrap();
+    let (reference, _) = train_sgd(&materialized, &cfg);
+
+    // one-pass: hash → TrainSink, nothing materialized
+    let mut sink = TrainSink::new(cfg.clone(), 8, 48);
+    let report = pipe.run_sink(dataset_chunks(&ds, 37), &job, &mut sink).unwrap();
+    assert_eq!(report.docs, 700);
+    assert_eq!(sink.rows_seen(), 700);
+    let (streamed, stats) = sink.into_result();
+    assert_eq!(stats.iterations, 1);
+    assert!(stats.objective.is_finite());
+
+    let diff = max_weight_diff(&streamed.w, &reference.w);
+    assert!(diff < 1e-6, "stream-train deviates from materialize-then-train: {diff}");
+}
+
+#[test]
+fn cache_write_read_train_roundtrip() {
+    let ds = corpus(500, 0xCAC4E);
+    let job = HashJob::Bbit { b: 6, k: 40, d: 1 << 22, seed: 23 };
+    let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 41, queue_depth: 2 });
+    let path = tmp_path("roundtrip");
+
+    // write once through the cache sink
+    let mut sink = CacheSink::create(&path, 6, 40, 1 << 22, 23).unwrap();
+    let report = pipe.run_sink(dataset_chunks(&ds, 41), &job, &mut sink).unwrap();
+    assert_eq!(report.docs, 500);
+    assert_eq!(sink.rows_written(), 500);
+
+    // in-memory reference via the collect path
+    let (out, _) = pipe.run(dataset_chunks(&ds, 41), &job).unwrap();
+    let reference = out.into_bbit().unwrap();
+
+    // header carries the hashing recipe; payload is byte-identical
+    let reader = CacheReader::open(&path).unwrap();
+    let meta = reader.meta();
+    assert_eq!((meta.b, meta.k, meta.d, meta.seed, meta.n), (6, 40, 1 << 22, 23, 500));
+    let replayed = reader.read_all().unwrap();
+    assert_eq!(replayed.len(), reference.len());
+    assert_eq!(replayed.labels, reference.labels);
+    assert_eq!(replayed.codes.words(), reference.codes.words());
+
+    // multi-epoch cache replay == multi-epoch batch training on the
+    // materialized dataset
+    let cfg = SgdConfig {
+        loss: SgdLoss::SquaredHinge,
+        lr0: 0.5,
+        lambda: 5e-4,
+        epochs: 3,
+        batch: 32,
+    };
+    let (from_cache, stats) = train_from_cache(&path, &cfg).unwrap();
+    assert_eq!(stats.iterations, 3);
+    let (from_memory, _) = train_sgd(&reference, &cfg);
+    let diff = max_weight_diff(&from_cache.w, &from_memory.w);
+    assert!(diff < 1e-6, "cache-train deviates from in-memory train: {diff}");
+
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn cache_detects_corruption_end_to_end() {
+    let ds = corpus(120, 0xBAD);
+    let job = HashJob::Bbit { b: 8, k: 16, d: 1 << 20, seed: 3 };
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 25, queue_depth: 2 });
+    let path = tmp_path("corrupt");
+    let mut sink = CacheSink::create(&path, 8, 16, 1 << 20, 3).unwrap();
+    pipe.run_sink(dataset_chunks(&ds, 25), &job, &mut sink).unwrap();
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2; // somewhere inside a record payload
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut reader = CacheReader::open(&path).unwrap();
+    let mut failed = false;
+    loop {
+        match reader.next_chunk() {
+            Ok(Some(_)) => continue,
+            Ok(None) => break,
+            Err(_) => {
+                failed = true;
+                break;
+            }
+        }
+    }
+    assert!(failed, "flipped byte went undetected");
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn reorder_window_tracks_inflight_work_not_corpus_size() {
+    // 1000 docs / chunk_size 10 = 100 chunks, far more than can ever be
+    // in flight with 4 workers + queue_depth 2 — a collector that buffered
+    // until end-of-run (the old behavior) would peak at ~100
+    let ds = corpus(1000, 0x9EAD);
+    let job = HashJob::Bbit { b: 4, k: 16, d: 1 << 20, seed: 7 };
+    let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 10, queue_depth: 2 });
+    let (_, report) = pipe.run(dataset_chunks(&ds, 10), &job).unwrap();
+    assert_eq!(report.chunks, 100);
+    assert!(report.reorder_peak >= 1);
+    assert!(
+        report.reorder_peak < report.chunks / 2,
+        "reorder window ({}) scales with corpus ({} chunks) — collector is buffering",
+        report.reorder_peak,
+        report.chunks
+    );
+    // with one worker completion order is emission order: the hard bound
+    let pipe1 = Pipeline::new(PipelineConfig { workers: 1, chunk_size: 10, queue_depth: 2 });
+    let (_, report1) = pipe1.run(dataset_chunks(&ds, 10), &job).unwrap();
+    assert_eq!(report1.reorder_peak, 1);
+    // stall accounting: blocked-send time is reported separately from
+    // productive read time and both fit inside the wall clock
+    assert!(report.stall_seconds >= 0.0);
+    assert!(report.read_seconds >= 0.0);
+    assert!(report.read_seconds + report.stall_seconds <= report.wall_seconds + 0.05);
+}
