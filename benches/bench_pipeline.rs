@@ -4,10 +4,11 @@
 //!
 //! Run: `cargo bench --bench bench_pipeline`
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
 use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::solver::{SgdConfig, SgdLoss};
 use bbit_mh::util::bench::Bench;
 
@@ -25,7 +26,7 @@ fn main() {
     let cfg = ExpandConfig { vocab: 2500, dim: 1 << 30, three_way_rate: 30, seed: 4 };
     let ds = expand_dataset(&cfg, &base);
     println!("corpus: {} docs, mean nnz {:.0}\n", ds.len(), ds.stats().nnz_mean);
-    let job = HashJob::Bbit { b: 8, k: 200, d: 1 << 30, seed: 11 };
+    let job = EncoderSpec::Bbit { b: 8, k: 200, d: 1 << 30, seed: 11 };
     let mut b = Bench::quick();
 
     // worker scaling
@@ -68,7 +69,7 @@ fn main() {
         chunk_size: 128,
         queue_depth: 4,
     });
-    let sink_job = HashJob::Bbit { b: 8, k: 64, d: 1 << 30, seed: 11 };
+    let sink_job = EncoderSpec::Bbit { b: 8, k: 64, d: 1 << 30, seed: 11 };
     let mut peaks: Vec<(String, usize)> = Vec::new();
 
     let mut peak = 0usize;
@@ -82,7 +83,7 @@ fn main() {
     let cache_path = std::env::temp_dir().join(format!("bbit_bench_{}.cache", std::process::id()));
     let mut peak = 0usize;
     b.bench_elems("pipeline/sink=cache", ds.len() as u64, || {
-        let mut sink = CacheSink::create(&cache_path, 8, 64, 1 << 30, 11).unwrap();
+        let mut sink = CacheSink::create(&cache_path, &sink_job).unwrap();
         let report = pipe.run_sink(dataset_chunks(&ds, 128), &sink_job, &mut sink).unwrap();
         peak = peak.max(report.reorder_peak);
         report.docs
@@ -109,5 +110,21 @@ fn main() {
     println!("\nreorder-window peaks (chunks; hard bound = 2·(workers+queue_depth)):");
     for (name, peak) in &peaks {
         println!("  sink={name:<8} peak={peak}");
+    }
+
+    // encoder throughput: the same corpus through the trait-object worker
+    // path for each scheme at comparable storage (bbit/oph: 8 bits × 200;
+    // vw: 1024 bins).  OPH's one-pass hashing should dominate bbit's
+    // k-pass hashing here — that gap is the scheme's whole point.
+    println!();
+    let encoder_specs = [
+        ("bbit", EncoderSpec::Bbit { b: 8, k: 200, d: 1 << 30, seed: 11 }),
+        ("vw", EncoderSpec::Vw { bins: 1024, seed: 11 }),
+        ("oph", EncoderSpec::Oph { bins: 200, b: 8, seed: 11 }),
+    ];
+    for (name, spec) in &encoder_specs {
+        b.bench_elems(&format!("pipeline/encoder={name}"), ds.len() as u64, || {
+            pipe.run(dataset_chunks(&ds, 128), spec).unwrap().1.docs
+        });
     }
 }

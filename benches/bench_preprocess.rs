@@ -4,10 +4,11 @@
 //!
 //! Run: `cargo bench --bench bench_preprocess`
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::libsvm::{LibsvmReader, LibsvmWriter};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::util::bench::Bench;
 
 fn main() {
@@ -57,7 +58,7 @@ fn main() {
                 let (out, _) = pipe
                     .run(
                         dataset_chunks(&ds, 64),
-                        &HashJob::Bbit { b: 16, k: 500, d: 1 << 30, seed: 7 },
+                        &EncoderSpec::Bbit { b: 16, k: 500, d: 1 << 30, seed: 7 },
                     )
                     .unwrap();
                 out.len()
@@ -69,7 +70,7 @@ fn main() {
     let pipe = Pipeline::new(PipelineConfig::default());
     b.bench_elems("pipeline_vw/bins=1024/docs", n_docs as u64, || {
         let (out, _) = pipe
-            .run(dataset_chunks(&ds, 64), &HashJob::Vw { bins: 1024, seed: 7 })
+            .run(dataset_chunks(&ds, 64), &EncoderSpec::Vw { bins: 1024, seed: 7 })
             .unwrap();
         out.len()
     });

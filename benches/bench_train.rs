@@ -3,9 +3,10 @@
 //!
 //! Run: `cargo bench --bench bench_train`
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::solver::{
     train_lr, train_sgd, train_svm, LrConfig, SgdConfig, SvmConfig,
 };
@@ -30,7 +31,7 @@ fn main() {
     // --- b-bit representations: SVM + LR time vs k (Figure 2/4 shape) ---
     for k in [30usize, 100, 200] {
         let (out, _) = pipe
-            .run(dataset_chunks(&ds, 128), &HashJob::Bbit { b: 8, k, d: 1 << 30, seed: 3 })
+            .run(dataset_chunks(&ds, 128), &EncoderSpec::Bbit { b: 8, k, d: 1 << 30, seed: 3 })
             .unwrap();
         let bb = out.into_bbit().unwrap();
         b.bench_elems(&format!("svm_dcd/bbit_b8_k{k}/docs"), bb.len() as u64, || {
@@ -47,7 +48,7 @@ fn main() {
     // --- VW representations: time vs bins (Figure 7 shape) ---
     for bins in [256usize, 1024, 4096] {
         let (out, _) = pipe
-            .run(dataset_chunks(&ds, 128), &HashJob::Vw { bins, seed: 5 })
+            .run(dataset_chunks(&ds, 128), &EncoderSpec::Vw { bins, seed: 5 })
             .unwrap();
         let vw = out.into_vw().unwrap();
         b.bench_elems(&format!("svm_dcd/vw_bins{bins}/docs"), vw.len() as u64, || {
@@ -60,7 +61,7 @@ fn main() {
 
     // --- shrinking ablation (DESIGN.md: why the default is off) ---
     let (out, _) = pipe
-        .run(dataset_chunks(&ds, 128), &HashJob::Bbit { b: 8, k: 200, d: 1 << 30, seed: 3 })
+        .run(dataset_chunks(&ds, 128), &EncoderSpec::Bbit { b: 8, k: 200, d: 1 << 30, seed: 3 })
         .unwrap();
     let bb_s = out.into_bbit().unwrap();
     for shrinking in [false, true] {
@@ -76,7 +77,7 @@ fn main() {
 
     // --- C dependence (Figures 2/4 x-axis) ---
     let (out, _) = pipe
-        .run(dataset_chunks(&ds, 128), &HashJob::Bbit { b: 8, k: 100, d: 1 << 30, seed: 3 })
+        .run(dataset_chunks(&ds, 128), &EncoderSpec::Bbit { b: 8, k: 100, d: 1 << 30, seed: 3 })
         .unwrap();
     let bb = out.into_bbit().unwrap();
     for c in [0.01, 1.0, 100.0] {

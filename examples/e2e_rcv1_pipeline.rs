@@ -18,11 +18,12 @@
 
 use std::time::Instant;
 
-use bbit_mh::coordinator::pipeline::{HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{Pipeline, PipelineConfig};
 use bbit_mh::coordinator::scheduler::{paper_c_grid, Scheduler, SolverKind, TrainJob};
 use bbit_mh::data::expand::{expand_example, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::encode::expansion::BbitDataset;
 use bbit_mh::report::{fnum, Table};
 use bbit_mh::runtime::{PjrtRuntime, TrainEngine};
@@ -74,7 +75,7 @@ fn main() -> bbit_mh::Result<()> {
     let t0 = Instant::now();
     let pipe = Pipeline::new(PipelineConfig::default());
     let source = ChunkedReader::new(LibsvmReader::open(&svm_path)?.binary(), 256);
-    let job = HashJob::Bbit { b, k, d: dim, seed: seed ^ 0x4A5E };
+    let job = EncoderSpec::Bbit { b, k, d: dim, seed: seed ^ 0x4A5E };
     let (hashed, report) = pipe.run(source, &job)?;
     let hashed = hashed.into_bbit()?;
     let hash_s = t0.elapsed().as_secs_f64();

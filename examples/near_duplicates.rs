@@ -4,9 +4,10 @@
 //!
 //! Run: `cargo run --release --example near_duplicates`
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::data::dataset::{Example, SparseDataset};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::hashing::lsh::{LshConfig, LshIndex};
 use bbit_mh::util::Rng;
 
@@ -43,7 +44,7 @@ fn main() -> bbit_mh::Result<()> {
     println!("corpus: {} docs, {} planted near-duplicate pairs", ds.len(), planted.len());
 
     // one hashing pass (the same codes a classifier would train on)
-    let job = HashJob::Bbit { b: 8, k: 64, d: ds.dim, seed: 7 };
+    let job = EncoderSpec::Bbit { b: 8, k: 64, d: ds.dim, seed: 7 };
     let pipe = Pipeline::new(PipelineConfig::default());
     let (hashed, report) = pipe.run(dataset_chunks(&ds, 256), &job)?;
     let hashed = hashed.into_bbit()?;

@@ -6,10 +6,11 @@
 
 use std::time::Instant;
 
-use bbit_mh::coordinator::pipeline::{HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{Pipeline, PipelineConfig};
 use bbit_mh::data::expand::{expand_example, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::hashing::universal::UniversalFamily;
 use bbit_mh::runtime::{MinhashEngine, PjrtRuntime, RoutedMinhash};
 use bbit_mh::util::Rng;
@@ -58,7 +59,7 @@ fn main() -> bbit_mh::Result<()> {
         let t = Instant::now();
         let (out, _) = pipe.run(
             ChunkedReader::new(LibsvmReader::open(&path)?.binary(), 256),
-            &HashJob::Bbit { b: 16, k, d: 1 << 30, seed: 11 },
+            &EncoderSpec::Bbit { b: 16, k, d: 1 << 30, seed: 11 },
         )?;
         let secs = t.elapsed().as_secs_f64();
         assert_eq!(out.len(), n_docs);

@@ -4,8 +4,9 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::solver::{accuracy, train_svm, SvmConfig};
 use bbit_mh::util::Rng;
 
@@ -24,7 +25,7 @@ fn main() -> bbit_mh::Result<()> {
     // 2. Preprocess through the streaming pipeline: k = 200 minwise hashes
     //    per document, keep the lowest b = 8 bits of each, pack.
     let (b, k) = (8, 200);
-    let job = HashJob::Bbit { b, k, d: corpus.dim, seed: 1 };
+    let job = EncoderSpec::Bbit { b, k, d: corpus.dim, seed: 1 };
     let pipe = Pipeline::new(PipelineConfig::default());
     let (train_hashed, report) = pipe.run(dataset_chunks(&train_raw, 256), &job)?;
     let (test_hashed, _) = pipe.run(dataset_chunks(&test_raw, 256), &job)?;

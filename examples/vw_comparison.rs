@@ -7,10 +7,11 @@
 //!
 //! Run: `cargo run --release --example vw_comparison`
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
 use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::report::{fnum, Table};
 use bbit_mh::util::Rng;
 
@@ -44,7 +45,7 @@ fn main() -> bbit_mh::Result<()> {
 
     // b-bit arm: (b, k) pairs at growing budgets
     for (b, k) in [(1u32, 64usize), (2, 64), (4, 64), (8, 64), (8, 128), (8, 256)] {
-        let job = HashJob::Bbit { b, k, d: 1 << 30, seed: 0x4A5E };
+        let job = EncoderSpec::Bbit { b, k, d: 1 << 30, seed: 0x4A5E };
         let (tr, _) = pipe.run(dataset_chunks(&train_raw, 256), &job)?;
         let (te, _) = pipe.run(dataset_chunks(&test_raw, 256), &job)?;
         let o = sched.run_grid(
@@ -62,7 +63,7 @@ fn main() -> bbit_mh::Result<()> {
 
     // VW arm: bins at the same bit budgets (32-bit entries, §5.3 accounting)
     for bins in [16usize, 64, 256, 1024, 4096] {
-        let job = HashJob::Vw { bins, seed: 0x77 };
+        let job = EncoderSpec::Vw { bins, seed: 0x77 };
         let (tr, _) = pipe.run(dataset_chunks(&train_raw, 256), &job)?;
         let (te, _) = pipe.run(dataset_chunks(&test_raw, 256), &job)?;
         let o = sched.run_grid(

@@ -1,18 +1,22 @@
 //! Layer-3 coordination: the streaming preprocessing pipeline (reader →
-//! sharded hash workers → collector → sink, with bounded-queue
+//! sharded encode workers → collector → sink, with bounded-queue
 //! backpressure), the pluggable sinks behind the out-of-core workflow
 //! (collect in memory / write the on-disk hashed cache / train as chunks
 //! arrive), and the training-job scheduler that fans a (method, b, k, C)
 //! grid across threads — the "re-use the hashed data for many C values"
 //! workflow the paper's preprocessing-cost argument is built on
 //! (Sections 1 and 6).
+//!
+//! The workers are scheme-agnostic: they run whatever
+//! [`FeatureEncoder`](crate::encode::encoder::FeatureEncoder) the
+//! caller's [`EncoderSpec`](crate::encode::encoder::EncoderSpec) draws.
 
 pub mod pipeline;
 pub mod scheduler;
 pub mod sharding;
 pub mod sink;
 
-pub use pipeline::{HashJob, Pipeline, PipelineConfig, PipelineOutput, PipelineReport};
+pub use pipeline::{Pipeline, PipelineConfig, PipelineOutput, PipelineReport};
 pub use scheduler::{Scheduler, TrainJob, TrainOutcome};
 pub use sharding::ShardPlan;
-pub use sink::{CacheSink, CollectSink, HashedChunk, PipelineSink, TrainSink};
+pub use sink::{CacheSink, CollectSink, PipelineSink, TrainSink};

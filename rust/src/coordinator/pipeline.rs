@@ -4,15 +4,18 @@
 //!
 //! ```text
 //!   reader ──sync_channel(queue_depth)──▶ worker×W ──sync_channel──▶ collector ──▶ sink
-//!   (LibSVM parse / generator)    (minwise+b-bit pack, or VW)   (bounded     (collect |
-//!                                                                reorder      cache |
-//!                                                                window)      train)
+//!   (LibSVM parse / generator)    (FeatureEncoder::encode_chunk:   (bounded     (collect |
+//!                                  bbit / vw / rp / oph)            reorder      cache |
+//!                                                                   window)      train)
 //! ```
 //!
 //! - The reader is the paper's "data loading" stage (Table 2 column 1);
-//!   workers are the "preprocessing" stage (column 2); swapping the worker
-//!   body for the PJRT [`MinhashEngine`](crate::runtime::MinhashEngine)
-//!   gives column 3 (the accelerated path).
+//!   workers are the "preprocessing" stage (column 2) and run a shared
+//!   [`FeatureEncoder`] trait object — the scheme (b-bit minwise, VW,
+//!   random projections, OPH, ...) is decided by the [`EncoderSpec`] and
+//!   never by the pipeline itself.  Swapping the worker body for the PJRT
+//!   [`MinhashEngine`](crate::runtime::MinhashEngine) gives column 3 (the
+//!   accelerated path).
 //! - Workers pull from one shared queue — natural load balancing (a slow
 //!   chunk doesn't stall siblings), with chunk ids restoring deterministic
 //!   output order in the collector regardless of completion order.
@@ -41,24 +44,19 @@ use std::sync::mpsc::{sync_channel, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::sink::{CollectSink, HashedChunk, PipelineSink};
+use crate::coordinator::sink::{CollectSink, PipelineSink};
 use crate::data::dataset::{Example, SparseDataset};
+use crate::encode::encoder::{EncoderSpec, FeatureEncoder};
 use crate::encode::expansion::BbitDataset;
-use crate::encode::packed::PackedCodes;
-use crate::hashing::minwise::BbitMinHash;
-use crate::hashing::vw::VwHasher;
-use crate::util::Rng;
 use crate::{Error, Result};
 
-/// What the hash workers compute.
-#[derive(Clone, Debug)]
-pub enum HashJob {
-    /// k-way minwise hashing truncated to b bits, packed (the paper's
-    /// method, Sections 2–3).
-    Bbit { b: u32, k: usize, d: u64, seed: u64 },
-    /// VW signed feature hashing into `bins` bins (Section 5).
-    Vw { bins: usize, seed: u64 },
-}
+/// What the hash workers compute — legacy name for [`EncoderSpec`].
+///
+/// The closed two-variant `HashJob` enum became the open scheme space of
+/// [`EncoderSpec`]; the old `HashJob::Bbit { .. }` / `HashJob::Vw { .. }`
+/// constructors are the same variants with the same fields.
+#[deprecated(note = "use EncoderSpec (encode::encoder); HashJob is a thin alias")]
+pub type HashJob = EncoderSpec;
 
 /// Pipeline tuning knobs (a view of [`crate::config::Config`]).
 #[derive(Clone, Debug)]
@@ -78,17 +76,18 @@ impl Default for PipelineConfig {
     }
 }
 
-/// Hashed output: packed b-bit codes or a VW CSR dataset.
+/// Materialized encoded output: packed b-bit codes (b-bit minwise, OPH)
+/// or a sparse CSR dataset (VW, RP).
 pub enum PipelineOutput {
-    Bbit(BbitDataset),
-    Vw(SparseDataset),
+    Packed(BbitDataset),
+    Sparse(SparseDataset),
 }
 
 impl PipelineOutput {
     pub fn len(&self) -> usize {
         match self {
-            PipelineOutput::Bbit(d) => d.len(),
-            PipelineOutput::Vw(d) => d.len(),
+            PipelineOutput::Packed(d) => d.len(),
+            PipelineOutput::Sparse(d) => d.len(),
         }
     }
 
@@ -96,18 +95,28 @@ impl PipelineOutput {
         self.len() == 0
     }
 
-    pub fn into_bbit(self) -> Result<BbitDataset> {
+    pub fn into_packed(self) -> Result<BbitDataset> {
         match self {
-            PipelineOutput::Bbit(d) => Ok(d),
-            _ => Err(Error::Pipeline("expected b-bit output".into())),
+            PipelineOutput::Packed(d) => Ok(d),
+            _ => Err(Error::Pipeline("expected packed-code output".into())),
         }
     }
 
-    pub fn into_vw(self) -> Result<SparseDataset> {
+    pub fn into_sparse(self) -> Result<SparseDataset> {
         match self {
-            PipelineOutput::Vw(d) => Ok(d),
-            _ => Err(Error::Pipeline("expected VW output".into())),
+            PipelineOutput::Sparse(d) => Ok(d),
+            _ => Err(Error::Pipeline("expected sparse output".into())),
         }
+    }
+
+    /// Legacy spelling of [`into_packed`](Self::into_packed).
+    pub fn into_bbit(self) -> Result<BbitDataset> {
+        self.into_packed()
+    }
+
+    /// Legacy spelling of [`into_sparse`](Self::into_sparse).
+    pub fn into_vw(self) -> Result<SparseDataset> {
+        self.into_sparse()
     }
 }
 
@@ -342,70 +351,50 @@ impl Pipeline {
         Ok((outputs, report))
     }
 
-    /// Run a [`HashJob`] over a chunk stream, pushing hashed chunks into
-    /// `sink` incrementally in input order — the out-of-core entry point.
-    /// The sink's `finish` is called (and timed) before returning.
-    pub fn run_sink<S: PipelineSink>(
+    /// Run an already-drawn [`FeatureEncoder`] over a chunk stream,
+    /// pushing encoded chunks into `sink` incrementally in input order —
+    /// the out-of-core entry point.  The encoder is shared by reference
+    /// across all workers; the sink's `finish` is called (and timed)
+    /// before returning.
+    pub fn run_encoder<S: PipelineSink>(
         &self,
         source: impl Iterator<Item = Result<Vec<Example>>> + Send,
-        job: &HashJob,
+        encoder: &dyn FeatureEncoder,
         sink: &mut S,
     ) -> Result<PipelineReport> {
-        let mut report = match job {
-            HashJob::Bbit { b, k, d, seed } => {
-                let hasher = BbitMinHash::draw(*k, *b, *d, &mut Rng::new(*seed));
-                self.run_chunks_each(
-                    source,
-                    move |chunk: &[Example], _wid| {
-                        let mut codes = PackedCodes::new(hasher.b, hasher.k());
-                        let mut labels = Vec::with_capacity(chunk.len());
-                        let mut scratch = vec![0u64; hasher.k()];
-                        let mut row = vec![0u16; hasher.k()];
-                        for ex in chunk {
-                            hasher.codes_into(&ex.indices, &mut scratch, &mut row);
-                            codes.push_row(&row)?;
-                            labels.push(ex.label);
-                        }
-                        Ok(HashedChunk::Bbit { codes, labels })
-                    },
-                    |_, chunk| sink.consume(chunk),
-                )?
-            }
-            HashJob::Vw { bins, seed } => {
-                let hasher = VwHasher::draw(*bins, &mut Rng::new(*seed));
-                self.run_chunks_each(
-                    source,
-                    move |chunk: &[Example], _wid| {
-                        let mut rows = Vec::with_capacity(chunk.len());
-                        for ex in chunk {
-                            let pairs = hasher.hash_sparse(&ex.indices);
-                            rows.push((ex.label, pairs));
-                        }
-                        Ok(HashedChunk::Vw { rows })
-                    },
-                    |_, chunk| sink.consume(chunk),
-                )?
-            }
-        };
+        let mut report = self.run_chunks_each(
+            source,
+            |chunk: &[Example], _wid| encoder.encode_chunk(chunk),
+            |_, chunk| sink.consume(chunk),
+        )?;
         let t0 = Instant::now();
         sink.finish()?;
         report.sink_seconds += t0.elapsed().as_secs_f64();
         Ok(report)
     }
 
-    /// Run a [`HashJob`] over a chunk stream, assembling the hashed
+    /// Draw the encoder an [`EncoderSpec`] describes and run it into
+    /// `sink` (see [`run_encoder`](Self::run_encoder)).
+    pub fn run_sink<S: PipelineSink>(
+        &self,
+        source: impl Iterator<Item = Result<Vec<Example>>> + Send,
+        spec: &EncoderSpec,
+        sink: &mut S,
+    ) -> Result<PipelineReport> {
+        let encoder = spec.encoder()?;
+        self.run_encoder(source, encoder.as_ref(), sink)
+    }
+
+    /// Run an [`EncoderSpec`] over a chunk stream, assembling the encoded
     /// dataset in memory (a [`run_sink`](Self::run_sink) with a
     /// [`CollectSink`] — the materializing path tests and experiments use).
     pub fn run(
         &self,
         source: impl Iterator<Item = Result<Vec<Example>>> + Send,
-        job: &HashJob,
+        spec: &EncoderSpec,
     ) -> Result<(PipelineOutput, PipelineReport)> {
-        let mut sink = match job {
-            HashJob::Bbit { b, k, .. } => CollectSink::bbit(*b, *k),
-            HashJob::Vw { bins, .. } => CollectSink::vw(*bins),
-        };
-        let report = self.run_sink(source, job, &mut sink)?;
+        let mut sink = CollectSink::for_spec(spec)?;
+        let report = self.run_sink(source, spec, &mut sink)?;
         Ok((sink.into_output(), report))
     }
 }
@@ -436,6 +425,9 @@ pub fn dataset_chunks(
 mod tests {
     use super::*;
     use crate::data::gen::{CorpusConfig, CorpusGenerator};
+    use crate::hashing::minwise::BbitMinHash;
+    use crate::hashing::vw::VwHasher;
+    use crate::util::Rng;
 
     fn corpus(n: usize) -> SparseDataset {
         CorpusGenerator::new(CorpusConfig {
@@ -453,15 +445,16 @@ mod tests {
     #[test]
     fn bbit_pipeline_matches_sequential() {
         let ds = corpus(300);
-        let job = HashJob::Bbit { b: 8, k: 32, d: 1 << 20, seed: 5 };
+        let spec = EncoderSpec::Bbit { b: 8, k: 32, d: 1 << 20, seed: 5 };
         let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 32, queue_depth: 2 });
-        let (out, report) = pipe.run(dataset_chunks(&ds, 32), &job).unwrap();
-        let bb = out.into_bbit().unwrap();
+        let (out, report) = pipe.run(dataset_chunks(&ds, 32), &spec).unwrap();
+        let bb = out.into_packed().unwrap();
         assert_eq!(bb.len(), 300);
         assert_eq!(report.docs, 300);
         assert_eq!(report.chunks, 10);
         assert!(report.reorder_peak >= 1);
-        // sequential reference
+        // sequential reference: the trait path must match the direct
+        // hasher draw bit-for-bit (the pre-redesign worker body)
         let hasher = BbitMinHash::draw(32, 8, 1 << 20, &mut Rng::new(5));
         for i in 0..ds.len() {
             assert_eq!(bb.codes.row(i), hasher.codes(ds.row(i).0), "row {i}");
@@ -472,10 +465,10 @@ mod tests {
     #[test]
     fn vw_pipeline_matches_sequential() {
         let ds = corpus(100);
-        let job = HashJob::Vw { bins: 64, seed: 7 };
+        let spec = EncoderSpec::Vw { bins: 64, seed: 7 };
         let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 17, queue_depth: 2 });
-        let (out, _) = pipe.run(dataset_chunks(&ds, 17), &job).unwrap();
-        let vw = out.into_vw().unwrap();
+        let (out, _) = pipe.run(dataset_chunks(&ds, 17), &spec).unwrap();
+        let vw = out.into_sparse().unwrap();
         vw.validate().unwrap();
         assert_eq!(vw.len(), 100);
         let hasher = VwHasher::draw(64, &mut Rng::new(7));
@@ -492,11 +485,41 @@ mod tests {
     }
 
     #[test]
+    fn oph_pipeline_matches_sequential() {
+        // the proof-of-openness scheme goes through the identical
+        // trait-object worker path as bbit/vw
+        let ds = corpus(150);
+        let spec = EncoderSpec::Oph { bins: 48, b: 6, seed: 13 };
+        let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 19, queue_depth: 2 });
+        let (out, report) = pipe.run(dataset_chunks(&ds, 19), &spec).unwrap();
+        let bb = out.into_packed().unwrap();
+        assert_eq!(report.docs, 150);
+        assert_eq!(bb.codes.k, 48);
+        let hasher =
+            crate::hashing::oph::OnePermutationHasher::draw(48, 6, &mut Rng::new(13));
+        for i in 0..ds.len() {
+            assert_eq!(bb.codes.row(i), hasher.codes(ds.row(i).0), "row {i}");
+        }
+    }
+
+    #[test]
+    fn rp_pipeline_collects_sparse_projections() {
+        let ds = corpus(60);
+        let spec = EncoderSpec::Rp { proj: 24, s: 3.0, seed: 3 };
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 16, queue_depth: 2 });
+        let (out, _) = pipe.run(dataset_chunks(&ds, 16), &spec).unwrap();
+        let rp = out.into_sparse().unwrap();
+        rp.validate().unwrap();
+        assert_eq!(rp.len(), 60);
+        assert_eq!(rp.dim, 24);
+    }
+
+    #[test]
     fn single_worker_and_tiny_queue() {
         let ds = corpus(50);
-        let job = HashJob::Bbit { b: 4, k: 8, d: 1 << 16, seed: 1 };
+        let spec = EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 16, seed: 1 };
         let pipe = Pipeline::new(PipelineConfig { workers: 1, chunk_size: 7, queue_depth: 1 });
-        let (out, report) = pipe.run(dataset_chunks(&ds, 7), &job).unwrap();
+        let (out, report) = pipe.run(dataset_chunks(&ds, 7), &spec).unwrap();
         assert_eq!(out.len(), 50);
         assert_eq!(report.per_worker_chunks, vec![8]);
         // one worker completes chunks strictly in order, so the reorder
@@ -543,7 +566,8 @@ mod tests {
             Err(Error::Io(std::io::Error::other("disk gone"))),
         ];
         let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 1, queue_depth: 1 });
-        let out = pipe.run(source.into_iter(), &HashJob::Bbit { b: 1, k: 4, d: 16, seed: 0 });
+        let out =
+            pipe.run(source.into_iter(), &EncoderSpec::Bbit { b: 1, k: 4, d: 16, seed: 0 });
         assert!(out.is_err());
     }
 
@@ -552,7 +576,7 @@ mod tests {
         let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 4, queue_depth: 1 });
         let source = std::iter::empty::<Result<Vec<Example>>>();
         let (out, report) = pipe
-            .run(source, &HashJob::Bbit { b: 8, k: 16, d: 1 << 20, seed: 0 })
+            .run(source, &EncoderSpec::Bbit { b: 8, k: 16, d: 1 << 20, seed: 0 })
             .unwrap();
         assert!(out.is_empty());
         assert_eq!(report.chunks, 0);
@@ -562,11 +586,11 @@ mod tests {
     #[test]
     fn order_is_deterministic_across_worker_counts() {
         let ds = corpus(200);
-        let job = HashJob::Bbit { b: 2, k: 16, d: 1 << 18, seed: 3 };
+        let spec = EncoderSpec::Bbit { b: 2, k: 16, d: 1 << 18, seed: 3 };
         let run = |workers| {
             let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 13, queue_depth: 3 });
-            let (out, _) = pipe.run(dataset_chunks(&ds, 13), &job).unwrap();
-            out.into_bbit().unwrap()
+            let (out, _) = pipe.run(dataset_chunks(&ds, 13), &spec).unwrap();
+            out.into_packed().unwrap()
         };
         let a = run(1);
         let b = run(7);

@@ -1,4 +1,4 @@
-//! Pipeline sinks: where in-order hashed chunks go.
+//! Pipeline sinks: where in-order encoded chunks go.
 //!
 //! The collector stage of [`Pipeline`](crate::coordinator::pipeline) used
 //! to buffer every chunk until end-of-run and assemble one giant in-memory
@@ -17,8 +17,12 @@
 //!   ([`SgdStream`](crate::solver::SgdStream)) directly: one-pass
 //!   hash-and-train with nothing materialized at all.
 //!
-//! Sinks run on the collector thread, strictly in chunk order, so a sink
-//! never needs internal synchronization or reordering of its own.
+//! Sinks consume [`EncodedChunk`]s and are scheme-agnostic up to chunk
+//! *shape*: any packed-code encoder (b-bit minwise, OPH) can feed the
+//! cache and the streaming trainer; any sparse encoder (VW, RP) collects
+//! into a CSR dataset.  Sinks run on the collector thread, strictly in
+//! chunk order, so a sink never needs internal synchronization or
+//! reordering of its own.
 
 use std::fs::File;
 use std::io::{BufWriter, Seek, Write};
@@ -27,40 +31,19 @@ use std::path::Path;
 use crate::coordinator::pipeline::PipelineOutput;
 use crate::data::dataset::SparseDataset;
 use crate::encode::cache::CacheWriter;
+use crate::encode::encoder::{EncodedChunk, EncoderSpec};
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
 use crate::solver::{LinearModel, SgdConfig, SgdStream, TrainStats};
 use crate::{Error, Result};
 
-/// One hashed chunk, as produced by the workers and re-ordered by the
-/// collector.
-pub enum HashedChunk {
-    /// Packed b-bit codes + labels for a run of consecutive input rows.
-    Bbit { codes: PackedCodes, labels: Vec<i8> },
-    /// VW-hashed rows as (label, sorted sparse pairs).
-    Vw { rows: Vec<(i8, Vec<(u32, f32)>)> },
-}
-
-impl HashedChunk {
-    pub fn len(&self) -> usize {
-        match self {
-            HashedChunk::Bbit { labels, .. } => labels.len(),
-            HashedChunk::Vw { rows } => rows.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
-
-/// Consumer of in-order hashed chunks.
+/// Consumer of in-order encoded chunks.
 ///
 /// `consume` is called once per chunk, in input order, on the collector
 /// thread; `finish` exactly once after the last chunk (flush buffers,
 /// patch headers, apply the tail minibatch, ...).
 pub trait PipelineSink {
-    fn consume(&mut self, chunk: HashedChunk) -> Result<()>;
+    fn consume(&mut self, chunk: EncodedChunk) -> Result<()>;
 
     fn finish(&mut self) -> Result<()> {
         Ok(())
@@ -74,18 +57,29 @@ pub struct CollectSink {
 }
 
 impl CollectSink {
-    /// Collect b-bit chunks into a [`BbitDataset`].
-    pub fn bbit(b: u32, k: usize) -> Self {
+    /// Collect packed-code chunks into a [`BbitDataset`] of geometry
+    /// `(b, k)` — b-bit minwise and OPH land here.
+    pub fn packed(b: u32, k: usize) -> Self {
         CollectSink {
-            out: PipelineOutput::Bbit(BbitDataset::new(PackedCodes::new(b, k), Vec::new())),
+            out: PipelineOutput::Packed(BbitDataset::new(PackedCodes::new(b, k), Vec::new())),
         }
     }
 
-    /// Collect VW chunks into a valued [`SparseDataset`] over `bins` bins.
-    pub fn vw(bins: usize) -> Self {
-        let mut ds = SparseDataset::new(bins as u64);
+    /// Collect sparse chunks into a valued [`SparseDataset`] over `dim`
+    /// hashed dimensions — VW and RP land here.
+    pub fn sparse(dim: usize) -> Self {
+        let mut ds = SparseDataset::new(dim as u64);
         ds.values = Some(Vec::new());
-        CollectSink { out: PipelineOutput::Vw(ds) }
+        CollectSink { out: PipelineOutput::Sparse(ds) }
+    }
+
+    /// The right collector for a spec (packed vs. sparse output).
+    pub fn for_spec(spec: &EncoderSpec) -> Result<Self> {
+        spec.validate()?;
+        Ok(match spec.packed_geometry() {
+            Some((b, k)) => CollectSink::packed(b, k),
+            None => CollectSink::sparse(spec.output_dim()),
+        })
     }
 
     pub fn into_output(self) -> PipelineOutput {
@@ -94,14 +88,14 @@ impl CollectSink {
 }
 
 impl PipelineSink for CollectSink {
-    fn consume(&mut self, chunk: HashedChunk) -> Result<()> {
+    fn consume(&mut self, chunk: EncodedChunk) -> Result<()> {
         match (&mut self.out, chunk) {
-            (PipelineOutput::Bbit(ds), HashedChunk::Bbit { codes, labels }) => {
+            (PipelineOutput::Packed(ds), EncodedChunk::Packed { codes, labels }) => {
                 ds.codes.extend(&codes)?;
                 ds.labels.extend(labels);
                 Ok(())
             }
-            (PipelineOutput::Vw(ds), HashedChunk::Vw { rows }) => {
+            (PipelineOutput::Sparse(ds), EncodedChunk::Sparse { rows }) => {
                 for (label, pairs) in rows {
                     ds.push_parts(label, &pairs);
                 }
@@ -112,15 +106,16 @@ impl PipelineSink for CollectSink {
     }
 }
 
-/// Stream chunks into the on-disk hashed cache.
+/// Stream packed-code chunks into the on-disk hashed cache.
 pub struct CacheSink<W: Write + Seek> {
     writer: CacheWriter<W>,
 }
 
 impl CacheSink<BufWriter<File>> {
-    /// Create a cache file recording the hashing recipe `(b, k, d, seed)`.
-    pub fn create<P: AsRef<Path>>(path: P, b: u32, k: usize, d: u64, seed: u64) -> Result<Self> {
-        Ok(CacheSink { writer: CacheWriter::create(path, b, k, d, seed)? })
+    /// Create a cache file recording the encoder spec (must be a
+    /// packed-code scheme; the cache stores [`PackedCodes`] records).
+    pub fn create<P: AsRef<Path>>(path: P, spec: &EncoderSpec) -> Result<Self> {
+        Ok(CacheSink { writer: CacheWriter::create(path, spec)? })
     }
 }
 
@@ -136,11 +131,11 @@ impl<W: Write + Seek> CacheSink<W> {
 }
 
 impl<W: Write + Seek> PipelineSink for CacheSink<W> {
-    fn consume(&mut self, chunk: HashedChunk) -> Result<()> {
+    fn consume(&mut self, chunk: EncodedChunk) -> Result<()> {
         match chunk {
-            HashedChunk::Bbit { codes, labels } => self.writer.write_chunk(&codes, &labels),
-            HashedChunk::Vw { .. } => {
-                Err(Error::Pipeline("cache sink only stores b-bit chunks".into()))
+            EncodedChunk::Packed { codes, labels } => self.writer.write_chunk(&codes, &labels),
+            EncodedChunk::Sparse { .. } => {
+                Err(Error::Pipeline("cache sink only stores packed-code chunks".into()))
             }
         }
     }
@@ -164,6 +159,18 @@ impl TrainSink {
         TrainSink { stream: SgdStream::new(cfg, b, k) }
     }
 
+    /// A trainer sized for a packed-code encoder spec (errors for sparse
+    /// schemes — streaming SGD consumes [`PackedCodes`] chunks).
+    pub fn for_spec(cfg: SgdConfig, spec: &EncoderSpec) -> Result<Self> {
+        let (b, k) = spec.packed_geometry().ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "streaming SGD needs a packed-code encoder; {} emits sparse rows",
+                spec.scheme()
+            ))
+        })?;
+        Ok(TrainSink::new(cfg, b, k))
+    }
+
     /// Rows trained on so far.
     pub fn rows_seen(&self) -> u64 {
         self.stream.rows_seen()
@@ -175,11 +182,11 @@ impl TrainSink {
 }
 
 impl PipelineSink for TrainSink {
-    fn consume(&mut self, chunk: HashedChunk) -> Result<()> {
+    fn consume(&mut self, chunk: EncodedChunk) -> Result<()> {
         match chunk {
-            HashedChunk::Bbit { codes, labels } => self.stream.push_chunk(codes, labels),
-            HashedChunk::Vw { .. } => {
-                Err(Error::Pipeline("train sink only accepts b-bit chunks".into()))
+            EncodedChunk::Packed { codes, labels } => self.stream.push_chunk(codes, labels),
+            EncodedChunk::Sparse { .. } => {
+                Err(Error::Pipeline("train sink only accepts packed-code chunks".into()))
             }
         }
     }
@@ -194,21 +201,21 @@ impl PipelineSink for TrainSink {
 mod tests {
     use super::*;
 
-    fn bbit_chunk(b: u32, k: usize, rows: &[(u16, i8)]) -> HashedChunk {
+    fn packed_chunk(b: u32, k: usize, rows: &[(u16, i8)]) -> EncodedChunk {
         let mut codes = PackedCodes::new(b, k);
         let mut labels = Vec::new();
         for &(c, l) in rows {
             codes.push_row(&vec![c; k]).unwrap();
             labels.push(l);
         }
-        HashedChunk::Bbit { codes, labels }
+        EncodedChunk::Packed { codes, labels }
     }
 
     #[test]
     fn collect_sink_accumulates_in_order() {
-        let mut sink = CollectSink::bbit(4, 3);
-        sink.consume(bbit_chunk(4, 3, &[(1, 1), (2, -1)])).unwrap();
-        sink.consume(bbit_chunk(4, 3, &[(3, 1)])).unwrap();
+        let mut sink = CollectSink::packed(4, 3);
+        sink.consume(packed_chunk(4, 3, &[(1, 1), (2, -1)])).unwrap();
+        sink.consume(packed_chunk(4, 3, &[(3, 1)])).unwrap();
         sink.finish().unwrap();
         let ds = sink.into_output().into_bbit().unwrap();
         assert_eq!(ds.len(), 3);
@@ -218,22 +225,45 @@ mod tests {
 
     #[test]
     fn kind_mismatch_is_an_error() {
-        let mut sink = CollectSink::bbit(4, 3);
-        assert!(sink.consume(HashedChunk::Vw { rows: vec![] }).is_err());
-        let mut sink = CollectSink::vw(8);
-        assert!(sink.consume(bbit_chunk(4, 3, &[(1, 1)])).is_err());
+        let mut sink = CollectSink::packed(4, 3);
+        assert!(sink.consume(EncodedChunk::Sparse { rows: vec![] }).is_err());
+        let mut sink = CollectSink::sparse(8);
+        assert!(sink.consume(packed_chunk(4, 3, &[(1, 1)])).is_err());
+        let spec = EncoderSpec::Bbit { b: 4, k: 3, d: 16, seed: 0 };
         let mut cache = CacheSink::new(
-            CacheWriter::new(std::io::Cursor::new(Vec::new()), 4, 3, 16, 0).unwrap(),
+            CacheWriter::new(std::io::Cursor::new(Vec::new()), &spec).unwrap(),
         );
-        assert!(cache.consume(HashedChunk::Vw { rows: vec![] }).is_err());
+        assert!(cache.consume(EncodedChunk::Sparse { rows: vec![] }).is_err());
         let mut train = TrainSink::new(SgdConfig::default(), 4, 3);
-        assert!(train.consume(HashedChunk::Vw { rows: vec![] }).is_err());
+        assert!(train.consume(EncodedChunk::Sparse { rows: vec![] }).is_err());
     }
 
     #[test]
-    fn vw_collect_uses_push_parts() {
-        let mut sink = CollectSink::vw(8);
-        sink.consume(HashedChunk::Vw {
+    fn for_spec_picks_the_matching_collector() {
+        let packed = CollectSink::for_spec(&EncoderSpec::Oph { bins: 6, b: 2, seed: 1 }).unwrap();
+        assert!(matches!(packed.into_output(), PipelineOutput::Packed(_)));
+        let sparse = CollectSink::for_spec(&EncoderSpec::Rp { proj: 5, s: 1.0, seed: 1 }).unwrap();
+        match sparse.into_output() {
+            PipelineOutput::Sparse(ds) => assert_eq!(ds.dim, 5),
+            _ => panic!("rp must collect sparse"),
+        }
+    }
+
+    #[test]
+    fn train_sink_for_spec_rejects_sparse_schemes() {
+        assert!(TrainSink::for_spec(SgdConfig::default(), &EncoderSpec::Vw { bins: 8, seed: 0 })
+            .is_err());
+        assert!(TrainSink::for_spec(
+            SgdConfig::default(),
+            &EncoderSpec::Oph { bins: 8, b: 4, seed: 0 }
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn sparse_collect_uses_push_parts() {
+        let mut sink = CollectSink::sparse(8);
+        sink.consume(EncodedChunk::Sparse {
             rows: vec![(1, vec![(0, 1.5), (3, -1.0)]), (-1, vec![(2, 1.0)])],
         })
         .unwrap();

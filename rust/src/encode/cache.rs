@@ -5,22 +5,27 @@
 //! one-time cost amortized over every (solver, C, b, k≤K) sweep that
 //! follows; fwumious wabbit ships the same shape as its "input cache"
 //! (scenario 1 of its BENCHMARK.md: generate the cache once, then run many
-//! fast training passes over it).  This module is that artifact for b-bit
-//! codes: a sequential, checksummed record stream a 200GB-scale corpus can
-//! be written to and replayed from in constant memory.
+//! fast training passes over it).  This module is that artifact for packed
+//! b-bit codes — whichever [`FeatureEncoder`](crate::encode::encoder)
+//! scheme produced them (b-bit minwise, OPH, ...): a sequential,
+//! checksummed record stream a 200GB-scale corpus can be written to and
+//! replayed from in constant memory.
 //!
 //! ## Layout (all integers little-endian)
 //!
+//! v2 (current — written by every [`CacheWriter`]):
+//!
 //! ```text
 //!   magic  b"BBHC"
-//!   u32    format version (= 1)
-//!   u32    b            ┐
-//!   u64    k            │ the hashing recipe: any reader can verify a
-//!   u64    d            │ model trained from this cache used the same
-//!   u64    seed         │ (b, k, d, seed) minwise family
-//!   u64    n            ┘ total rows (patched on finalize; u64::MAX while
+//!   u32    format version (= 2)
+//!   u32    scheme tag     ┐
+//!   u32    p0             │ the EncoderSpec, via
+//!   u64    p1             │ EncoderSpec::header_fields — any reader can
+//!   u64    p2             │ verify a model trained from this cache used
+//!   u64    seed           ┘ the same encoder family
+//!   u64    n              total rows (patched on finalize; u64::MAX while
 //!                         the writer is still open — readers reject it)
-//!   repeated chunk records:
+//!   repeated chunk records (identical to v1):
 //!     u32    rows in this chunk
 //!     u64    payload bytes (= rows labels + rows·stride packed words)
 //!     [i8]   labels (one byte per row)
@@ -28,7 +33,20 @@
 //!     u64    FNV-1a checksum over the rows field + payload bytes
 //! ```
 //!
-//! Records are chunk-granular on purpose: the writer is fed by the
+//! v1 (legacy — still readable; always b-bit minwise):
+//!
+//! ```text
+//!   magic  b"BBHC"
+//!   u32    format version (= 1)
+//!   u32    b / u64 k / u64 d / u64 seed   (⇒ EncoderSpec::Bbit)
+//!   u64    n
+//!   repeated chunk records as above
+//! ```
+//!
+//! Only packed-code schemes are cacheable (the record payload *is* the
+//! [`PackedCodes`] word stream); the v2 header's tag space covers the
+//! sparse schemes too so the format never needs another bump to learn
+//! them.  Records are chunk-granular on purpose: the writer is fed by the
 //! pipeline's in-order collector ([`CacheSink`](crate::coordinator::sink)),
 //! and the reader replays the identical chunk stream into the streaming
 //! trainer, so `hash → cache → train` and `hash → train` see byte-identical
@@ -38,40 +56,39 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
+use crate::encode::encoder::EncoderSpec;
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
 use crate::{Error, Result};
 
 /// File magic for the hashed-chunk cache.
 pub const CACHE_MAGIC: &[u8; 4] = b"BBHC";
-/// Current format version.
-pub const CACHE_VERSION: u32 = 1;
-/// Header bytes before the first record (magic + version + 5 meta fields).
-const HEADER_BYTES: u64 = 4 + 4 + 4 + 8 + 8 + 8 + 8;
-/// Byte offset of the `n` field (patched by `finalize`).
-const N_OFFSET: u64 = HEADER_BYTES - 8;
+/// Current format version (v2: scheme-tagged spec header).
+pub const CACHE_VERSION: u32 = 2;
+/// Oldest version the reader still accepts.
+pub const CACHE_VERSION_MIN: u32 = 1;
+/// v2 header bytes before the first record
+/// (magic + version + tag + p0 + p1 + p2 + seed + n).
+const HEADER_BYTES_V2: u64 = 4 + 4 + 4 + 4 + 8 + 8 + 8 + 8;
+/// Byte offset of the v2 `n` field (patched by `finalize`).
+const N_OFFSET_V2: u64 = HEADER_BYTES_V2 - 8;
 /// Placeholder `n` while a writer is open; readers reject it.
 const N_UNFINALIZED: u64 = u64::MAX;
 
-/// The hashing recipe + row count stored in the cache header.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// The encoder recipe + row count stored in the cache header.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CacheMeta {
-    /// Bits per code.
-    pub b: u32,
-    /// Codes per row (the paper's k).
-    pub k: usize,
-    /// Original feature-space dimensionality D.
-    pub d: u64,
-    /// Seed of the minwise family the codes were drawn with.
-    pub seed: u64,
+    /// The encoder the cached codes were produced with.
+    pub spec: EncoderSpec,
     /// Total rows across all records.
     pub n: u64,
 }
 
 impl CacheMeta {
-    /// Expanded dimensionality 2^b · k a solver trains against.
+    /// Encoded dimensionality (2^b·k for packed schemes) a solver trains
+    /// against.
     pub fn expanded_dim(&self) -> usize {
-        (1usize << self.b) * self.k
+        self.spec.output_dim()
     }
 }
 
@@ -95,11 +112,24 @@ impl Fnv1a {
     }
 }
 
+/// The packed-geometry (b, codes-per-row, stride) of a cacheable spec.
+fn packed_geometry(spec: &EncoderSpec) -> Result<(u32, usize, usize)> {
+    let (b, k) = spec.packed_geometry().ok_or_else(|| {
+        Error::InvalidArg(format!(
+            "cache stores packed b-bit codes; encoder scheme {:?} emits sparse rows",
+            spec.scheme()
+        ))
+    })?;
+    Ok((b, k, (k * b as usize).div_ceil(64)))
+}
+
 /// Buffered, append-only cache writer.  Records go out as chunks arrive;
 /// [`finalize`](Self::finalize) patches the row count into the header.
 pub struct CacheWriter<W: Write + Seek> {
     out: W,
     meta: CacheMeta,
+    b: u32,
+    k: usize,
     stride: usize,
     finalized: bool,
     /// Reusable record-payload staging buffer (labels + words serialized
@@ -108,27 +138,29 @@ pub struct CacheWriter<W: Write + Seek> {
 }
 
 impl CacheWriter<BufWriter<File>> {
-    /// Create (truncating) a cache file for the given hashing recipe.
-    pub fn create<P: AsRef<Path>>(path: P, b: u32, k: usize, d: u64, seed: u64) -> Result<Self> {
-        CacheWriter::new(BufWriter::with_capacity(1 << 20, File::create(path)?), b, k, d, seed)
+    /// Create (truncating) a cache file for the given encoder spec.
+    pub fn create<P: AsRef<Path>>(path: P, spec: &EncoderSpec) -> Result<Self> {
+        CacheWriter::new(BufWriter::with_capacity(1 << 20, File::create(path)?), spec)
     }
 }
 
 impl<W: Write + Seek> CacheWriter<W> {
-    pub fn new(mut out: W, b: u32, k: usize, d: u64, seed: u64) -> Result<Self> {
-        if !(1..=16).contains(&b) {
-            return Err(Error::InvalidArg(format!("b must be 1..=16, got {b}")));
-        }
+    pub fn new(mut out: W, spec: &EncoderSpec) -> Result<Self> {
+        spec.validate()?;
+        let (b, k, stride) = packed_geometry(spec)?;
+        let (tag, p0, p1, p2, seed) = spec.header_fields();
         out.write_all(CACHE_MAGIC)?;
         out.write_all(&CACHE_VERSION.to_le_bytes())?;
-        out.write_all(&b.to_le_bytes())?;
-        for v in [k as u64, d, seed, N_UNFINALIZED] {
+        out.write_all(&tag.to_le_bytes())?;
+        out.write_all(&p0.to_le_bytes())?;
+        for v in [p1, p2, seed, N_UNFINALIZED] {
             out.write_all(&v.to_le_bytes())?;
         }
-        let stride = (k * b as usize).div_ceil(64);
         Ok(CacheWriter {
             out,
-            meta: CacheMeta { b, k, d, seed, n: 0 },
+            meta: CacheMeta { spec: *spec, n: 0 },
+            b,
+            k,
             stride,
             finalized: false,
             scratch: Vec::new(),
@@ -145,10 +177,10 @@ impl<W: Write + Seek> CacheWriter<W> {
         if self.finalized {
             return Err(Error::InvalidArg("cache writer already finalized".into()));
         }
-        if codes.b != self.meta.b || codes.k != self.meta.k {
+        if codes.b != self.b || codes.k != self.k {
             return Err(Error::InvalidArg(format!(
                 "chunk geometry (b={}, k={}) does not match cache (b={}, k={})",
-                codes.b, codes.k, self.meta.b, self.meta.k
+                codes.b, codes.k, self.b, self.k
             )));
         }
         if codes.n != labels.len() {
@@ -189,7 +221,7 @@ impl<W: Write + Seek> CacheWriter<W> {
         if self.finalized {
             return Ok(());
         }
-        self.out.seek(SeekFrom::Start(N_OFFSET))?;
+        self.out.seek(SeekFrom::Start(N_OFFSET_V2))?;
         self.out.write_all(&self.meta.n.to_le_bytes())?;
         self.out.seek(SeekFrom::End(0))?;
         self.out.flush()?;
@@ -198,12 +230,14 @@ impl<W: Write + Seek> CacheWriter<W> {
     }
 }
 
-/// Sequential cache reader: header up front, then one chunk per
-/// [`next_chunk`](Self::next_chunk) call with checksum verification —
+/// Sequential cache reader: header up front (v1 or v2), then one chunk
+/// per [`next_chunk`](Self::next_chunk) call with checksum verification —
 /// constant memory regardless of corpus size.
 pub struct CacheReader<R: Read> {
     inner: R,
     meta: CacheMeta,
+    b: u32,
+    k: usize,
     stride: usize,
     rows_read: u64,
     poisoned: bool,
@@ -223,43 +257,62 @@ impl<R: Read> CacheReader<R> {
             return Err(Error::InvalidArg("bad cache magic (not a BBHC file)".into()));
         }
         let mut u32buf = [0u8; 4];
-        inner.read_exact(&mut u32buf)?;
-        let version = u32::from_le_bytes(u32buf);
-        if version != CACHE_VERSION {
-            return Err(Error::InvalidArg(format!(
-                "unsupported cache version {version} (expected {CACHE_VERSION})"
-            )));
-        }
-        inner.read_exact(&mut u32buf)?;
-        let b = u32::from_le_bytes(u32buf);
-        if !(1..=16).contains(&b) {
-            return Err(Error::InvalidArg(format!("corrupt cache header: b={b}")));
-        }
         let mut u64buf = [0u8; 8];
-        let mut next = |r: &mut R| -> Result<u64> {
+        let mut next_u32 = |r: &mut R| -> Result<u32> {
+            r.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        let mut next_u64 = |r: &mut R| -> Result<u64> {
             r.read_exact(&mut u64buf)?;
             Ok(u64::from_le_bytes(u64buf))
         };
-        let k = next(&mut inner)? as usize;
-        let d = next(&mut inner)?;
-        let seed = next(&mut inner)?;
-        let n = next(&mut inner)?;
+        let version = next_u32(&mut inner)?;
+        let (spec, n) = match version {
+            // v1: fixed b-bit header {b, k, d, seed}
+            1 => {
+                let b = next_u32(&mut inner)?;
+                let k = next_u64(&mut inner)? as usize;
+                let d = next_u64(&mut inner)?;
+                let seed = next_u64(&mut inner)?;
+                let n = next_u64(&mut inner)?;
+                (EncoderSpec::Bbit { b, k, d, seed }, n)
+            }
+            // v2: scheme-tagged EncoderSpec
+            2 => {
+                let tag = next_u32(&mut inner)?;
+                let p0 = next_u32(&mut inner)?;
+                let p1 = next_u64(&mut inner)?;
+                let p2 = next_u64(&mut inner)?;
+                let seed = next_u64(&mut inner)?;
+                let n = next_u64(&mut inner)?;
+                (EncoderSpec::from_header_fields(tag, p0, p1, p2, seed)?, n)
+            }
+            v => {
+                return Err(Error::InvalidArg(format!(
+                    "unsupported cache version {v} (expected {CACHE_VERSION_MIN}..={CACHE_VERSION})"
+                )))
+            }
+        };
+        spec.validate()
+            .map_err(|e| Error::InvalidArg(format!("corrupt cache header: {e}")))?;
         if n == N_UNFINALIZED {
             return Err(Error::InvalidArg(
                 "cache was never finalized (writer crashed mid-write?)".into(),
             ));
         }
-        let stride = (k * b as usize).div_ceil(64);
+        let (b, k, stride) = packed_geometry(&spec)?;
         Ok(CacheReader {
             inner,
-            meta: CacheMeta { b, k, d, seed, n },
+            meta: CacheMeta { spec, n },
+            b,
+            k,
             stride,
             rows_read: 0,
             poisoned: false,
         })
     }
 
-    /// The hashing recipe + row count from the header.
+    /// The encoder recipe + row count from the header.
     pub fn meta(&self) -> CacheMeta {
         self.meta
     }
@@ -324,7 +377,7 @@ impl<R: Read> CacheReader<R> {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        let codes = PackedCodes::from_words(self.meta.b, self.meta.k, rows, words)?;
+        let codes = PackedCodes::from_words(self.b, self.k, rows, words)?;
         self.rows_read += rows as u64;
         Ok((codes, labels))
     }
@@ -332,7 +385,7 @@ impl<R: Read> CacheReader<R> {
     /// Materialize the whole cache (small inputs / batch solvers; the
     /// streaming trainer never calls this).
     pub fn read_all(mut self) -> Result<BbitDataset> {
-        let mut all = PackedCodes::new(self.meta.b, self.meta.k);
+        let mut all = PackedCodes::new(self.b, self.k);
         let mut labels = Vec::new();
         while let Some((codes, ls)) = self.next_chunk()? {
             all.extend(&codes)?;
@@ -367,6 +420,10 @@ mod tests {
         (pc, labels)
     }
 
+    fn bbit_spec(b: u32, k: usize, d: u64, seed: u64) -> EncoderSpec {
+        EncoderSpec::Bbit { b, k, d, seed }
+    }
+
     /// Property-style roundtrip over geometries and ragged chunk sizes.
     #[test]
     fn roundtrip_random_geometries() {
@@ -374,7 +431,8 @@ mod tests {
         for &(b, k) in &[(1u32, 64usize), (7, 33), (8, 200), (12, 37), (16, 5)] {
             let sizes = [1usize, 17, 256, 3];
             let mut buf = Cursor::new(Vec::new());
-            let mut w = CacheWriter::new(&mut buf, b, k, 1 << 30, 42).unwrap();
+            let spec = bbit_spec(b, k, 1 << 30, 42);
+            let mut w = CacheWriter::new(&mut buf, &spec).unwrap();
             let mut chunks = Vec::new();
             for &rows in &sizes {
                 let (pc, ls) = random_chunk(b, k, rows, &mut rng);
@@ -386,10 +444,7 @@ mod tests {
             buf.set_position(0);
             let mut r = CacheReader::new(&mut buf).unwrap();
             let meta = r.meta();
-            assert_eq!(
-                meta,
-                CacheMeta { b, k, d: 1 << 30, seed: 42, n: sizes.iter().sum::<usize>() as u64 }
-            );
+            assert_eq!(meta, CacheMeta { spec, n: sizes.iter().sum::<usize>() as u64 });
             for (pc, ls) in &chunks {
                 let (got_pc, got_ls) = r.next_chunk().unwrap().unwrap();
                 assert_eq!(&got_pc, pc, "b={b} k={k}");
@@ -401,9 +456,83 @@ mod tests {
     }
 
     #[test]
+    fn oph_spec_roundtrips_through_header() {
+        let mut rng = Rng::new(0x0F4);
+        let spec = EncoderSpec::Oph { bins: 24, b: 6, seed: 9 };
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, &spec).unwrap();
+        let (pc, ls) = random_chunk(6, 24, 11, &mut rng);
+        w.write_chunk(&pc, &ls).unwrap();
+        w.finalize().unwrap();
+        buf.set_position(0);
+        let mut r = CacheReader::new(&mut buf).unwrap();
+        assert_eq!(r.meta().spec, spec);
+        assert_eq!(r.meta().n, 11);
+        assert_eq!(r.meta().expanded_dim(), (1 << 6) * 24);
+        let (got, _) = r.next_chunk().unwrap().unwrap();
+        assert_eq!(got, pc);
+    }
+
+    #[test]
+    fn sparse_specs_are_rejected_by_writer() {
+        let buf = Cursor::new(Vec::new());
+        assert!(CacheWriter::new(buf, &EncoderSpec::Vw { bins: 64, seed: 1 }).is_err());
+        let buf = Cursor::new(Vec::new());
+        assert!(CacheWriter::new(buf, &EncoderSpec::Rp { proj: 64, s: 1.0, seed: 1 }).is_err());
+    }
+
+    /// Hand-written v1 bytes must keep parsing as EncoderSpec::Bbit.
+    #[test]
+    fn v1_cache_is_still_readable() {
+        let (b, k, d, seed) = (8u32, 16usize, 1u64 << 20, 7u64);
+        let mut rng = Rng::new(0x01d);
+        let (pc, ls) = random_chunk(b, k, 5, &mut rng);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CACHE_MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        bytes.extend_from_slice(&b.to_le_bytes());
+        for v in [k as u64, d, seed, 5u64] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        // one v1 record (same record format as v2)
+        let stride = (k * b as usize).div_ceil(64);
+        let rows = 5u32;
+        let mut payload = Vec::new();
+        payload.extend(ls.iter().map(|&l| l as u8));
+        for &word in pc.words() {
+            payload.extend_from_slice(&word.to_le_bytes());
+        }
+        assert_eq!(payload.len(), 5 + 8 * 5 * stride);
+        let mut sum = Fnv1a::new();
+        sum.update(&rows.to_le_bytes());
+        sum.update(&payload);
+        bytes.extend_from_slice(&rows.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&sum.finish().to_le_bytes());
+
+        let mut r = CacheReader::new(Cursor::new(bytes)).unwrap();
+        assert_eq!(r.meta().spec, EncoderSpec::Bbit { b, k, d, seed });
+        assert_eq!(r.meta().n, 5);
+        let (got_pc, got_ls) = r.next_chunk().unwrap().unwrap();
+        assert_eq!(got_pc, pc);
+        assert_eq!(got_ls, ls);
+        assert!(r.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CACHE_MAGIC);
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 40]);
+        assert!(CacheReader::new(Cursor::new(bytes)).is_err());
+    }
+
+    #[test]
     fn empty_cache_roundtrips() {
         let mut buf = Cursor::new(Vec::new());
-        let mut w = CacheWriter::new(&mut buf, 8, 16, 1 << 20, 7).unwrap();
+        let mut w = CacheWriter::new(&mut buf, &bbit_spec(8, 16, 1 << 20, 7)).unwrap();
         let empty = PackedCodes::new(8, 16);
         w.write_chunk(&empty, &[]).unwrap(); // dropped, not an error
         w.finalize().unwrap();
@@ -415,7 +544,7 @@ mod tests {
     #[test]
     fn unfinalized_cache_is_rejected() {
         let mut buf = Cursor::new(Vec::new());
-        let mut w = CacheWriter::new(&mut buf, 8, 16, 1 << 20, 7).unwrap();
+        let mut w = CacheWriter::new(&mut buf, &bbit_spec(8, 16, 1 << 20, 7)).unwrap();
         let (pc, ls) = random_chunk(8, 16, 5, &mut Rng::new(1));
         w.write_chunk(&pc, &ls).unwrap();
         // no finalize
@@ -428,13 +557,13 @@ mod tests {
     fn corruption_is_detected() {
         let mut rng = Rng::new(9);
         let mut buf = Cursor::new(Vec::new());
-        let mut w = CacheWriter::new(&mut buf, 8, 32, 1 << 20, 3).unwrap();
+        let mut w = CacheWriter::new(&mut buf, &bbit_spec(8, 32, 1 << 20, 3)).unwrap();
         let (pc, ls) = random_chunk(8, 32, 40, &mut rng);
         w.write_chunk(&pc, &ls).unwrap();
         w.finalize().unwrap();
         let mut bytes = buf.into_inner();
         // flip one payload byte past the header
-        let target = HEADER_BYTES as usize + 12 + 7;
+        let target = HEADER_BYTES_V2 as usize + 12 + 7;
         bytes[target] ^= 0x40;
         let mut r = CacheReader::new(Cursor::new(bytes)).unwrap();
         assert!(r.next_chunk().is_err());
@@ -444,7 +573,7 @@ mod tests {
     #[test]
     fn truncated_cache_is_detected() {
         let mut buf = Cursor::new(Vec::new());
-        let mut w = CacheWriter::new(&mut buf, 4, 8, 1 << 16, 1).unwrap();
+        let mut w = CacheWriter::new(&mut buf, &bbit_spec(4, 8, 1 << 16, 1)).unwrap();
         let (pc, ls) = random_chunk(4, 8, 10, &mut Rng::new(2));
         w.write_chunk(&pc, &ls).unwrap();
         w.finalize().unwrap();
@@ -457,7 +586,7 @@ mod tests {
     #[test]
     fn geometry_mismatch_rejected_by_writer() {
         let mut buf = Cursor::new(Vec::new());
-        let mut w = CacheWriter::new(&mut buf, 8, 16, 1 << 20, 7).unwrap();
+        let mut w = CacheWriter::new(&mut buf, &bbit_spec(8, 16, 1 << 20, 7)).unwrap();
         let (pc, ls) = random_chunk(8, 17, 3, &mut Rng::new(3));
         assert!(w.write_chunk(&pc, &ls).is_err());
         let (pc, _) = random_chunk(8, 16, 3, &mut Rng::new(4));

@@ -1,0 +1,642 @@
+//! The scheme-agnostic feature-encoder API.
+//!
+//! The paper's central comparison — b-bit minwise hashing vs. VW hashing
+//! at equal storage — used to be wired through a closed two-variant enum
+//! with scheme parameters re-duplicated in the pipeline workers, the cache
+//! header, the model file and the CLI.  This module replaces all of that
+//! with one seam:
+//!
+//! - [`EncoderSpec`] — a small, copyable, serializable *description* of an
+//!   encoder (scheme tag + parameters + seed).  It is what cache headers
+//!   and model files store, what the CLI parses, and what every layer
+//!   passes around.
+//! - [`FeatureEncoder`] — the trait the pipeline workers, the classify
+//!   path and the experiments drive.  Implementations are drawn
+//!   *deterministically* from a spec ([`draw`] / [`EncoderSpec::encoder`]),
+//!   so persisting the spec is always enough to reconstruct the exact hash
+//!   family (DESIGN.md §5b).
+//! - [`EncodedChunk`] — the worker→sink currency: packed b-bit codes
+//!   (b-bit minwise, OPH) or sparse hashed rows (VW, random projections).
+//!
+//! Adding a scheme means implementing the trait and adding a spec variant;
+//! the pipeline, sinks, cache, model IO, CLI and experiments pick it up
+//! without modification.  One-permutation hashing
+//! ([`OphEncoder`]) is the proof: it landed without touching the
+//! coordinator at all.
+
+use crate::data::dataset::Example;
+use crate::encode::packed::PackedCodes;
+use crate::hashing::minwise::BbitMinHash;
+use crate::hashing::oph::OnePermutationHasher;
+use crate::hashing::rp::RandomProjection;
+use crate::hashing::vw::VwHasher;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Serializable description of a feature encoder: scheme + parameters +
+/// the seed its hash family is drawn from.
+///
+/// This is the single source of truth every layer shares — the cache
+/// header ([`header_fields`](Self::header_fields)), the model file
+/// ([`SavedModel`](crate::solver::SavedModel)), and the CLI all persist
+/// exactly this.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EncoderSpec {
+    /// k-way minwise hashing over domain `[0, d)`, truncated to b bits and
+    /// packed (the paper's method, Sections 2–3).
+    Bbit { b: u32, k: usize, d: u64, seed: u64 },
+    /// VW signed feature hashing into `bins` bins (Section 5).
+    Vw { bins: usize, seed: u64 },
+    /// Sparse random projections to `proj` dimensions with sparsity
+    /// parameter `s` (Section 5.1, Eq. 11).
+    Rp { proj: usize, s: f64, seed: u64 },
+    /// One-permutation hashing: a single hash pass, `bins` partitions,
+    /// b-bit codes (Li–Owen–Zhang 2012).
+    Oph { bins: usize, b: u32, seed: u64 },
+}
+
+impl EncoderSpec {
+    /// Short scheme tag as the CLI spells it (`--encoder <scheme>`).
+    pub fn scheme(&self) -> &'static str {
+        match self {
+            EncoderSpec::Bbit { .. } => "bbit",
+            EncoderSpec::Vw { .. } => "vw",
+            EncoderSpec::Rp { .. } => "rp",
+            EncoderSpec::Oph { .. } => "oph",
+        }
+    }
+
+    /// The seed the encoder's hash family is drawn from.
+    pub fn seed(&self) -> u64 {
+        match *self {
+            EncoderSpec::Bbit { seed, .. }
+            | EncoderSpec::Vw { seed, .. }
+            | EncoderSpec::Rp { seed, .. }
+            | EncoderSpec::Oph { seed, .. } => seed,
+        }
+    }
+
+    /// Dimensionality of the encoded feature space a solver trains
+    /// against: `2^b·k` for packed-code schemes, the bin/projection count
+    /// for sparse schemes.
+    pub fn output_dim(&self) -> usize {
+        match *self {
+            EncoderSpec::Bbit { b, k, .. } => (1usize << b) * k,
+            EncoderSpec::Vw { bins, .. } => bins,
+            EncoderSpec::Rp { proj, .. } => proj,
+            EncoderSpec::Oph { bins, b, .. } => (1usize << b) * bins,
+        }
+    }
+
+    /// `(b, codes-per-row)` for schemes that emit packed b-bit codes
+    /// (b-bit minwise, OPH) — the [`PackedCodes`] geometry the cache and
+    /// the streaming trainer need; `None` for sparse-output schemes.
+    pub fn packed_geometry(&self) -> Option<(u32, usize)> {
+        match *self {
+            EncoderSpec::Bbit { b, k, .. } => Some((b, k)),
+            EncoderSpec::Oph { bins, b, .. } => Some((b, bins)),
+            EncoderSpec::Vw { .. } | EncoderSpec::Rp { .. } => None,
+        }
+    }
+
+    /// Parameter sanity (mirrors the asserts in the underlying hashers so
+    /// bad CLI input surfaces as an error, not a panic).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            EncoderSpec::Bbit { b, k, d, .. } => {
+                if !(1..=16).contains(&b) {
+                    return Err(Error::InvalidArg(format!("b must be 1..=16, got {b}")));
+                }
+                if k == 0 {
+                    return Err(Error::InvalidArg("k must be >= 1".into()));
+                }
+                if d == 0 {
+                    return Err(Error::InvalidArg("d must be >= 1".into()));
+                }
+            }
+            EncoderSpec::Vw { bins, .. } => {
+                if bins == 0 {
+                    return Err(Error::InvalidArg("bins must be >= 1".into()));
+                }
+            }
+            EncoderSpec::Rp { proj, s, .. } => {
+                if proj == 0 {
+                    return Err(Error::InvalidArg("proj must be >= 1".into()));
+                }
+                if s < 1.0 || !s.is_finite() {
+                    return Err(Error::InvalidArg(format!("s must be >= 1, got {s}")));
+                }
+            }
+            EncoderSpec::Oph { bins, b, .. } => {
+                if bins == 0 {
+                    return Err(Error::InvalidArg("bins must be >= 1".into()));
+                }
+                if !(1..=16).contains(&b) {
+                    return Err(Error::InvalidArg(format!("b must be 1..=16, got {b}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw this spec's encoder deterministically (a fresh
+    /// `Rng::new(self.seed())` — the exact draw sequence every prior layer
+    /// used, so packed output is byte-identical to the pre-trait code).
+    pub fn encoder(&self) -> Result<Box<dyn FeatureEncoder>> {
+        draw(self, &mut Rng::new(self.seed()))
+    }
+
+    /// Fixed-width header encoding shared by the v2 cache format
+    /// (`encode/cache.rs` documents the byte layout):
+    /// `(tag, p0: u32, p1: u64, p2: u64, seed)`.
+    ///
+    /// | scheme | tag | p0 | p1   | p2          |
+    /// |--------|-----|----|------|-------------|
+    /// | bbit   | 0   | b  | k    | d           |
+    /// | vw     | 1   | 0  | bins | 0           |
+    /// | rp     | 2   | 0  | proj | s.to_bits() |
+    /// | oph    | 3   | b  | bins | 0           |
+    pub fn header_fields(&self) -> (u32, u32, u64, u64, u64) {
+        match *self {
+            EncoderSpec::Bbit { b, k, d, seed } => (0, b, k as u64, d, seed),
+            EncoderSpec::Vw { bins, seed } => (1, 0, bins as u64, 0, seed),
+            EncoderSpec::Rp { proj, s, seed } => (2, 0, proj as u64, s.to_bits(), seed),
+            EncoderSpec::Oph { bins, b, seed } => (3, b, bins as u64, 0, seed),
+        }
+    }
+
+    /// Inverse of [`header_fields`](Self::header_fields); validates the
+    /// reconstructed spec.
+    pub fn from_header_fields(tag: u32, p0: u32, p1: u64, p2: u64, seed: u64) -> Result<Self> {
+        let spec = match tag {
+            0 => EncoderSpec::Bbit { b: p0, k: p1 as usize, d: p2, seed },
+            1 => EncoderSpec::Vw { bins: p1 as usize, seed },
+            2 => EncoderSpec::Rp { proj: p1 as usize, s: f64::from_bits(p2), seed },
+            3 => EncoderSpec::Oph { bins: p1 as usize, b: p0, seed },
+            other => {
+                return Err(Error::InvalidArg(format!("unknown encoder scheme tag {other}")))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Text encoding of the spec as `encoder <scheme>` + `key value`
+    /// lines — the model-file header (`solver/model_io.rs`).  Kept beside
+    /// [`header_fields`](Self::header_fields) so every serialization of a
+    /// spec lives in this module; the inverse is
+    /// [`read_text_fields`](Self::read_text_fields).
+    pub fn write_text_fields<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        writeln!(w, "encoder {}", self.scheme())?;
+        match *self {
+            EncoderSpec::Bbit { b, k, d, seed } => {
+                writeln!(w, "b {b}")?;
+                writeln!(w, "k {k}")?;
+                writeln!(w, "d {d}")?;
+                writeln!(w, "seed {seed}")
+            }
+            EncoderSpec::Vw { bins, seed } => {
+                writeln!(w, "bins {bins}")?;
+                writeln!(w, "seed {seed}")
+            }
+            EncoderSpec::Rp { proj, s, seed } => {
+                writeln!(w, "proj {proj}")?;
+                // Display of f64 is the shortest round-tripping decimal
+                writeln!(w, "s {s}")?;
+                writeln!(w, "seed {seed}")
+            }
+            EncoderSpec::Oph { bins, b, seed } => {
+                writeln!(w, "bins {bins}")?;
+                writeln!(w, "b {b}")?;
+                writeln!(w, "seed {seed}")
+            }
+        }
+    }
+
+    /// Inverse of [`write_text_fields`](Self::write_text_fields).
+    /// `next_kv(key)` must return the value of the next `key value` line
+    /// (erroring on a key mismatch); the caller owns line iteration so
+    /// this works over any header framing.  Validates the result.
+    pub fn read_text_fields(
+        next_kv: &mut dyn FnMut(&str) -> Result<String>,
+    ) -> Result<Self> {
+        fn num<T: std::str::FromStr>(v: &str, key: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| Error::InvalidArg(format!("bad {key} value {v:?}")))
+        }
+        let spec = match next_kv("encoder")?.as_str() {
+            "bbit" => EncoderSpec::Bbit {
+                b: num(&next_kv("b")?, "b")?,
+                k: num(&next_kv("k")?, "k")?,
+                d: num(&next_kv("d")?, "d")?,
+                seed: num(&next_kv("seed")?, "seed")?,
+            },
+            "vw" => EncoderSpec::Vw {
+                bins: num(&next_kv("bins")?, "bins")?,
+                seed: num(&next_kv("seed")?, "seed")?,
+            },
+            "rp" => EncoderSpec::Rp {
+                proj: num(&next_kv("proj")?, "proj")?,
+                s: num(&next_kv("s")?, "s")?,
+                seed: num(&next_kv("seed")?, "seed")?,
+            },
+            "oph" => EncoderSpec::Oph {
+                bins: num(&next_kv("bins")?, "bins")?,
+                b: num(&next_kv("b")?, "b")?,
+                seed: num(&next_kv("seed")?, "seed")?,
+            },
+            other => {
+                return Err(Error::InvalidArg(format!("unknown encoder scheme {other:?}")))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One encoded chunk — the worker→sink currency of the pipeline.
+pub enum EncodedChunk {
+    /// Packed b-bit codes + labels for a run of consecutive input rows
+    /// (b-bit minwise, OPH).
+    Packed { codes: PackedCodes, labels: Vec<i8> },
+    /// Sparse hashed rows as `(label, sorted (index, value) pairs)` (VW,
+    /// random projections).
+    Sparse { rows: Vec<(i8, Vec<(u32, f32)>)> },
+}
+
+impl EncodedChunk {
+    pub fn len(&self) -> usize {
+        match self {
+            EncodedChunk::Packed { labels, .. } => labels.len(),
+            EncodedChunk::Sparse { rows } => rows.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Reusable per-thread buffers for single-document encoding (the classify
+/// hot path): created via [`FeatureEncoder::scratch`], threaded through
+/// [`FeatureEncoder::margin`].
+#[derive(Default)]
+pub struct EncodeScratch {
+    /// Raw 64-bit hash values (minwise values / per-bin minima).
+    pub z: Vec<u64>,
+    /// b-bit codes.
+    pub codes: Vec<u16>,
+}
+
+/// A feature-encoding scheme the pipeline can run.
+///
+/// Implementations are immutable after [`draw`] and shared by reference
+/// across the hash workers (`Send + Sync`); per-chunk state lives inside
+/// `encode_chunk`, per-document state in [`EncodeScratch`].
+pub trait FeatureEncoder: Send + Sync {
+    /// The serializable description this encoder was drawn from.
+    fn spec(&self) -> EncoderSpec;
+
+    /// Encoded feature-space dimensionality (== `spec().output_dim()`).
+    fn output_dim(&self) -> usize {
+        self.spec().output_dim()
+    }
+
+    /// Encode one chunk of raw examples (the pipeline worker body).
+    fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk>;
+
+    /// Fresh scratch sized for this encoder.
+    fn scratch(&self) -> EncodeScratch {
+        EncodeScratch::default()
+    }
+
+    /// Margin of one raw binary document (set of feature indices) against
+    /// a weight vector of length [`output_dim`](Self::output_dim) — the
+    /// classify request path, computed without materializing the encoded
+    /// vector.
+    fn margin(&self, set: &[u32], w: &[f32], scratch: &mut EncodeScratch) -> f32;
+}
+
+/// Draw the encoder a spec describes, consuming randomness from `rng`.
+/// With `rng = Rng::new(spec.seed())` (what [`EncoderSpec::encoder`] does)
+/// the drawn family is identical to what the pre-trait pipeline, cache and
+/// model loader constructed.
+pub fn draw(spec: &EncoderSpec, rng: &mut Rng) -> Result<Box<dyn FeatureEncoder>> {
+    spec.validate()?;
+    Ok(match *spec {
+        EncoderSpec::Bbit { b, k, d, seed } => {
+            Box::new(BbitEncoder { hasher: BbitMinHash::draw(k, b, d, rng), seed })
+        }
+        EncoderSpec::Vw { bins, seed } => {
+            Box::new(VwEncoder { hasher: VwHasher::draw(bins, rng), seed })
+        }
+        EncoderSpec::Rp { proj, s, seed } => {
+            Box::new(RpEncoder { proj: RandomProjection::new(proj, s, rng), seed })
+        }
+        EncoderSpec::Oph { bins, b, seed } => {
+            Box::new(OphEncoder { hasher: OnePermutationHasher::draw(bins, b, rng), seed })
+        }
+    })
+}
+
+/// Encode one chunk through any `codes_into(set, z_scratch, code_row)`
+/// packed-code hasher — shared by the b-bit minwise and OPH encoders.
+fn packed_chunk(
+    b: u32,
+    k: usize,
+    chunk: &[Example],
+    mut codes_into: impl FnMut(&[u32], &mut [u64], &mut [u16]),
+) -> Result<EncodedChunk> {
+    let mut codes = PackedCodes::new(b, k);
+    let mut labels = Vec::with_capacity(chunk.len());
+    let mut scratch = vec![0u64; k];
+    let mut row = vec![0u16; k];
+    for ex in chunk {
+        codes_into(&ex.indices, &mut scratch, &mut row);
+        codes.push_row(&row)?;
+        labels.push(ex.label);
+    }
+    Ok(EncodedChunk::Packed { codes, labels })
+}
+
+/// Expanded-space weight gather for one packed code row: the classify hot
+/// path every packed scheme shares (column j of code c lives at
+/// `(j << b) + c`).
+fn packed_margin(b: u32, codes: &[u16], w: &[f32]) -> f32 {
+    let bshift = b as usize;
+    let mut acc = 0.0f32;
+    for (j, &c) in codes.iter().enumerate() {
+        acc += w[(j << bshift) + c as usize];
+    }
+    acc
+}
+
+/// b-bit minwise hashing → packed codes (the paper's method).
+pub struct BbitEncoder {
+    hasher: BbitMinHash,
+    seed: u64,
+}
+
+impl FeatureEncoder for BbitEncoder {
+    fn spec(&self) -> EncoderSpec {
+        EncoderSpec::Bbit {
+            b: self.hasher.b,
+            k: self.hasher.k(),
+            d: self.hasher.hasher.d(),
+            seed: self.seed,
+        }
+    }
+
+    fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
+        packed_chunk(self.hasher.b, self.hasher.k(), chunk, |set, z, row| {
+            self.hasher.codes_into(set, z, row)
+        })
+    }
+
+    fn scratch(&self) -> EncodeScratch {
+        EncodeScratch { z: vec![0; self.hasher.k()], codes: vec![0; self.hasher.k()] }
+    }
+
+    fn margin(&self, set: &[u32], w: &[f32], scratch: &mut EncodeScratch) -> f32 {
+        self.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
+        packed_margin(self.hasher.b, &scratch.codes, w)
+    }
+}
+
+/// VW signed feature hashing → sparse rows.
+pub struct VwEncoder {
+    hasher: VwHasher,
+    seed: u64,
+}
+
+impl FeatureEncoder for VwEncoder {
+    fn spec(&self) -> EncoderSpec {
+        EncoderSpec::Vw { bins: self.hasher.bins, seed: self.seed }
+    }
+
+    fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
+        let mut rows = Vec::with_capacity(chunk.len());
+        for ex in chunk {
+            rows.push((ex.label, self.hasher.hash_sparse(&ex.indices)));
+        }
+        Ok(EncodedChunk::Sparse { rows })
+    }
+
+    fn margin(&self, set: &[u32], w: &[f32], _scratch: &mut EncodeScratch) -> f32 {
+        // w·g with g the hashed vector: each t contributes sign(t)·w[bin(t)]
+        set.iter().map(|&t| self.hasher.sign(t) * w[self.hasher.bin(t)]).sum()
+    }
+}
+
+/// Sparse random projections → sparse rows (the zeros of the implicit
+/// projection dropped).
+pub struct RpEncoder {
+    proj: RandomProjection,
+    seed: u64,
+}
+
+impl FeatureEncoder for RpEncoder {
+    fn spec(&self) -> EncoderSpec {
+        EncoderSpec::Rp { proj: self.proj.k, s: self.proj.s, seed: self.seed }
+    }
+
+    fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
+        let mut rows = Vec::with_capacity(chunk.len());
+        for ex in chunk {
+            let v = match &ex.values {
+                None => self.proj.project_set(&ex.indices),
+                Some(vals) => {
+                    let items: Vec<(u32, f32)> =
+                        ex.indices.iter().copied().zip(vals.iter().copied()).collect();
+                    self.proj.project(&items)
+                }
+            };
+            let pairs: Vec<(u32, f32)> = v
+                .iter()
+                .enumerate()
+                .filter(|(_, x)| **x != 0.0)
+                .map(|(j, x)| (j as u32, *x as f32))
+                .collect();
+            rows.push((ex.label, pairs));
+        }
+        Ok(EncodedChunk::Sparse { rows })
+    }
+
+    fn margin(&self, set: &[u32], w: &[f32], _scratch: &mut EncodeScratch) -> f32 {
+        let v = self.proj.project_set(set);
+        v.iter().zip(w).map(|(x, wi)| *x as f32 * wi).sum()
+    }
+}
+
+/// One-permutation hashing → packed codes with k = `bins`.
+pub struct OphEncoder {
+    hasher: OnePermutationHasher,
+    seed: u64,
+}
+
+impl FeatureEncoder for OphEncoder {
+    fn spec(&self) -> EncoderSpec {
+        EncoderSpec::Oph { bins: self.hasher.bins, b: self.hasher.b, seed: self.seed }
+    }
+
+    fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
+        packed_chunk(self.hasher.b, self.hasher.bins, chunk, |set, mins, row| {
+            self.hasher.codes_into(set, mins, row)
+        })
+    }
+
+    fn scratch(&self) -> EncodeScratch {
+        EncodeScratch { z: vec![0; self.hasher.bins], codes: vec![0; self.hasher.bins] }
+    }
+
+    fn margin(&self, set: &[u32], w: &[f32], scratch: &mut EncodeScratch) -> f32 {
+        self.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
+        packed_margin(self.hasher.b, &scratch.codes, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_specs() -> Vec<EncoderSpec> {
+        vec![
+            EncoderSpec::Bbit { b: 8, k: 32, d: 1 << 24, seed: 5 },
+            EncoderSpec::Vw { bins: 128, seed: 7 },
+            EncoderSpec::Rp { proj: 64, s: 3.0, seed: 11 },
+            EncoderSpec::Oph { bins: 96, b: 4, seed: 13 },
+        ]
+    }
+
+    #[test]
+    fn spec_encoder_spec_roundtrip() {
+        for spec in all_specs() {
+            let enc = spec.encoder().unwrap();
+            assert_eq!(enc.spec(), spec, "{}", spec.scheme());
+            assert_eq!(enc.output_dim(), spec.output_dim());
+        }
+    }
+
+    #[test]
+    fn header_fields_roundtrip() {
+        for spec in all_specs() {
+            let (tag, p0, p1, p2, seed) = spec.header_fields();
+            let back = EncoderSpec::from_header_fields(tag, p0, p1, p2, seed).unwrap();
+            assert_eq!(back, spec, "{}", spec.scheme());
+        }
+        assert!(EncoderSpec::from_header_fields(9, 0, 1, 0, 0).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(EncoderSpec::Bbit { b: 0, k: 8, d: 16, seed: 0 }.validate().is_err());
+        assert!(EncoderSpec::Bbit { b: 17, k: 8, d: 16, seed: 0 }.validate().is_err());
+        assert!(EncoderSpec::Bbit { b: 8, k: 0, d: 16, seed: 0 }.validate().is_err());
+        assert!(EncoderSpec::Vw { bins: 0, seed: 0 }.validate().is_err());
+        assert!(EncoderSpec::Rp { proj: 4, s: 0.5, seed: 0 }.validate().is_err());
+        assert!(EncoderSpec::Rp { proj: 4, s: f64::NAN, seed: 0 }.validate().is_err());
+        assert!(EncoderSpec::Oph { bins: 0, b: 4, seed: 0 }.validate().is_err());
+        assert!(EncoderSpec::Oph { bins: 4, b: 0, seed: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn packed_geometry_selects_packed_schemes() {
+        assert_eq!(
+            EncoderSpec::Bbit { b: 8, k: 32, d: 16, seed: 0 }.packed_geometry(),
+            Some((8, 32))
+        );
+        assert_eq!(
+            EncoderSpec::Oph { bins: 20, b: 4, seed: 0 }.packed_geometry(),
+            Some((4, 20))
+        );
+        assert_eq!(EncoderSpec::Vw { bins: 8, seed: 0 }.packed_geometry(), None);
+        assert_eq!(EncoderSpec::Rp { proj: 8, s: 1.0, seed: 0 }.packed_geometry(), None);
+    }
+
+    #[test]
+    fn bbit_encoder_matches_direct_hasher_bit_for_bit() {
+        // the trait path must reproduce the legacy pipeline worker exactly
+        let spec = EncoderSpec::Bbit { b: 8, k: 16, d: 1 << 20, seed: 42 };
+        let enc = spec.encoder().unwrap();
+        let legacy = BbitMinHash::draw(16, 8, 1 << 20, &mut Rng::new(42));
+        let mut rng = Rng::new(1);
+        let exs: Vec<Example> = (0..10)
+            .map(|_| {
+                Example::binary(
+                    1,
+                    rng.sample_distinct(1 << 20, 30).into_iter().map(|x| x as u32).collect(),
+                )
+            })
+            .collect();
+        match enc.encode_chunk(&exs).unwrap() {
+            EncodedChunk::Packed { codes, .. } => {
+                for (i, ex) in exs.iter().enumerate() {
+                    assert_eq!(codes.row(i), legacy.codes(&ex.indices), "row {i}");
+                }
+            }
+            _ => panic!("bbit must emit packed chunks"),
+        }
+    }
+
+    #[test]
+    fn vw_encoder_matches_direct_hasher() {
+        let spec = EncoderSpec::Vw { bins: 64, seed: 9 };
+        let enc = spec.encoder().unwrap();
+        let legacy = VwHasher::draw(64, &mut Rng::new(9));
+        let ex = Example::binary(1, (0..200u32).map(|t| t * 13 % 4096).collect());
+        match enc.encode_chunk(std::slice::from_ref(&ex)).unwrap() {
+            EncodedChunk::Sparse { rows } => {
+                assert_eq!(rows[0].1, legacy.hash_sparse(&ex.indices));
+            }
+            _ => panic!("vw must emit sparse chunks"),
+        }
+    }
+
+    #[test]
+    fn margin_matches_materialized_dot_per_scheme() {
+        let mut wrng = Rng::new(77);
+        let set: Vec<u32> = {
+            let mut rng = Rng::new(3);
+            rng.sample_distinct(1 << 20, 50).into_iter().map(|x| x as u32).collect()
+        };
+        let ex = Example::binary(1, set.clone());
+        for spec in all_specs() {
+            let enc = spec.encoder().unwrap();
+            let w: Vec<f32> =
+                (0..enc.output_dim()).map(|_| wrng.next_u64() as f32 / u64::MAX as f32).collect();
+            let mut scratch = enc.scratch();
+            let m = enc.margin(&ex.indices, &w, &mut scratch);
+            // materialize via encode_chunk and dot by hand
+            let dot = match enc.encode_chunk(std::slice::from_ref(&ex)).unwrap() {
+                EncodedChunk::Packed { codes, .. } => {
+                    let b = codes.b as usize;
+                    (0..codes.k)
+                        .map(|j| w[(j << b) + codes.get(0, j) as usize])
+                        .sum::<f32>()
+                }
+                EncodedChunk::Sparse { rows } => {
+                    rows[0].1.iter().map(|&(j, v)| v * w[j as usize]).sum::<f32>()
+                }
+            };
+            let tol = 1e-3 * (1.0 + dot.abs());
+            assert!((m - dot).abs() < tol, "{}: margin {m} dot {dot}", spec.scheme());
+        }
+    }
+
+    #[test]
+    fn oph_encoder_is_deterministic_across_draws() {
+        let spec = EncoderSpec::Oph { bins: 32, b: 8, seed: 21 };
+        let ex = Example::binary(-1, (0..100u32).map(|t| t * 7).collect());
+        let c1 = match spec.encoder().unwrap().encode_chunk(std::slice::from_ref(&ex)).unwrap() {
+            EncodedChunk::Packed { codes, .. } => codes,
+            _ => panic!("oph must emit packed chunks"),
+        };
+        let c2 = match spec.encoder().unwrap().encode_chunk(std::slice::from_ref(&ex)).unwrap() {
+            EncodedChunk::Packed { codes, .. } => codes,
+            _ => unreachable!(),
+        };
+        assert_eq!(c1, c2);
+        assert_eq!(c1.k, 32);
+        assert_eq!(c1.b, 8);
+    }
+}

@@ -1,5 +1,9 @@
 //! Hashed-data encodings.
 //!
+//! - [`encoder`]: the scheme-agnostic [`FeatureEncoder`] API —
+//!   [`EncoderSpec`] (the serializable scheme description every layer
+//!   persists) plus the trait implementations for b-bit minwise, VW,
+//!   random projections and one-permutation hashing.
 //! - [`packed`]: the paper's `n·b·k`-bit storage — b-bit codes bit-packed
 //!   into words, the whole point of b-bit minwise hashing (Section 2/3).
 //! - [`expansion`]: run-time expansion of a code row into the `2^b × k`
@@ -7,11 +11,14 @@
 //!   CSR form and the implicit offsets+codes form the solvers and the PJRT
 //!   train artifacts consume.
 //! - [`cache`]: the on-disk hashed-chunk cache (checksummed record stream)
-//!   behind the "hash once, train many times" out-of-core workflow.
+//!   behind the "hash once, train many times" out-of-core workflow; its v2
+//!   header stores the [`EncoderSpec`] the chunks were encoded with.
 
 pub mod cache;
+pub mod encoder;
 pub mod expansion;
 pub mod packed;
 
 pub use cache::{CacheMeta, CacheReader, CacheWriter};
+pub use encoder::{draw, EncodeScratch, EncodedChunk, EncoderSpec, FeatureEncoder};
 pub use packed::PackedCodes;

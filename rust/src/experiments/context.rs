@@ -14,10 +14,11 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use crate::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use crate::data::dataset::SparseDataset;
 use crate::data::expand::{expand_dataset, ExpandConfig};
 use crate::data::gen::{CorpusConfig, CorpusGenerator};
+use crate::encode::encoder::EncoderSpec;
 use crate::encode::expansion::BbitDataset;
 use crate::report::Table;
 use crate::util::Rng;
@@ -181,7 +182,7 @@ impl Ctx {
             let pipe = self.pipeline();
             let (train, test) = self.rcv1()?.clone();
             eprintln!("[ctx] hashing corpus once at b=16, k={kmax}");
-            let job = HashJob::Bbit { b: 16, k: kmax, d: dim, seed };
+            let job = EncoderSpec::Bbit { b: 16, k: kmax, d: dim, seed };
             let (out_tr, _) = pipe.run(dataset_chunks(&train, 256), &job)?;
             let (out_te, _) = pipe.run(dataset_chunks(&test, 256), &job)?;
             let tr = out_tr.into_bbit()?;
@@ -217,7 +218,7 @@ impl Ctx {
         let seed = self.scale.seed ^ 0x77;
         let pipe = self.pipeline();
         let (train, test) = self.rcv1()?.clone();
-        let job = HashJob::Vw { bins, seed };
+        let job = EncoderSpec::Vw { bins, seed };
         let (out_tr, _) = pipe.run(dataset_chunks(&train, 256), &job)?;
         let (out_te, _) = pipe.run(dataset_chunks(&test, 256), &job)?;
         Ok((out_tr.into_vw()?, out_te.into_vw()?))

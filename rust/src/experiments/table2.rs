@@ -15,8 +15,9 @@
 
 use std::time::Instant;
 
-use crate::coordinator::pipeline::{HashJob, Pipeline, PipelineConfig};
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use crate::encode::encoder::EncoderSpec;
 use crate::hashing::universal::UniversalFamily;
 use crate::report::{fnum, Table};
 use crate::runtime::{PjrtRuntime, RoutedMinhash};
@@ -101,7 +102,7 @@ fn time_pipeline(path: &std::path::Path, k: usize, dim: u64, workers: usize) -> 
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
     let source = ChunkedReader::new(LibsvmReader::open(path)?.binary(), 256);
     let t0 = Instant::now();
-    let (out, _) = pipe.run(source, &HashJob::Bbit { b: 16, k, d: dim, seed: 7 })?;
+    let (out, _) = pipe.run(source, &EncoderSpec::Bbit { b: 16, k, d: dim, seed: 7 })?;
     let total = t0.elapsed().as_secs_f64();
     assert!(!out.is_empty());
     Ok(total)

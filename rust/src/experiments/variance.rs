@@ -7,16 +7,41 @@
 //! - b-bit:    Var(R̂_b) = P_b(1−P_b)/(k(1−C_{2,b})²)         (Eq. 7)
 //! - RP:       Var(â)   = (Σu₁²Σu₂² + a² + (s−3)Σu₁²u₂²)/k   (Eq. 13)
 //! - VW:       Var(â)   = (s−1)Σu₁²u₂² + (… − 2Σu₁²u₂²)/k    (Eq. 16)
+//!
+//! The final table runs b-bit minwise and one-permutation hashing through
+//! [`FeatureEncoder`](crate::encode::encoder::FeatureEncoder) trait
+//! objects — the same dispatch the pipeline workers use — so any new
+//! scheme drops into this harness by implementing the trait.
 
+use crate::data::dataset::Example;
+use crate::encode::encoder::{EncodedChunk, EncoderSpec};
 use crate::hashing::estimators;
 use crate::hashing::minwise::{bbit_truncate, resemblance, MinwiseHasher};
 use crate::hashing::rp::{estimate_inner_product, RandomProjection};
 use crate::hashing::vw::VwHasher;
 use crate::report::{fnum, Table};
 use crate::util::{stats, Rng};
-use crate::Result;
+use crate::{Error, Result};
 
 use super::Ctx;
+
+/// Encode one pair of sets through a spec's trait object and return the
+/// two packed code rows (the scheme-agnostic path of the harness).
+fn trait_codes_pair(
+    spec: &EncoderSpec,
+    s1: &[u32],
+    s2: &[u32],
+) -> Result<(Vec<u16>, Vec<u16>)> {
+    let enc = spec.encoder()?;
+    let chunk = [Example::binary(1, s1.to_vec()), Example::binary(-1, s2.to_vec())];
+    match enc.encode_chunk(&chunk)? {
+        EncodedChunk::Packed { codes, .. } => Ok((codes.row(0), codes.row(1))),
+        EncodedChunk::Sparse { .. } => Err(Error::InvalidArg(format!(
+            "variance harness needs a packed-code scheme, got {}",
+            spec.scheme()
+        ))),
+    }
+}
 
 /// A synthetic pair of binary sets with controllable resemblance.
 fn make_pair(d: u64, shared: usize, only: usize, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
@@ -153,5 +178,46 @@ pub fn run(ctx: &mut Ctx) -> Result<Vec<Table>> {
         }
     }
     ctx.emit(&t3, "variance_storage_ratio.csv")?;
-    Ok(vec![t1, t2, t3])
+
+    // ---- OPH vs b-bit through the FeatureEncoder trait ----
+    // One-permutation hashing pays ONE hash pass for all `bins` samples;
+    // at equal storage (bins = k, same b) its densified estimator tracks
+    // the b-bit variance (Eq. 7 as the reference) at 1/k-th of the
+    // hashing cost.  Both arms are driven through `EncoderSpec::encoder()`
+    // trait objects — the identical dispatch the pipeline workers run.
+    let b = 8u32;
+    let c = 0.5f64.powi(b as i32);
+    let mut t4 = Table::new(
+        &format!(
+            "resemblance-estimator variance via FeatureEncoder trait objects \
+             (R={r:.3}, b={b}, {trials} trials; theory = Eq. 7)"
+        ),
+        &["encoder", "k (bins)", "empirical var", "Eq. 7 var", "ratio"],
+    );
+    for &k in &[64usize, 256] {
+        let mut est_bbit = Vec::with_capacity(trials);
+        let mut est_oph = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let bb_spec = EncoderSpec::Bbit { b, k, d, seed: rng.next_u64() };
+            let (c1, c2) = trait_codes_pair(&bb_spec, &s1, &s2)?;
+            let pb = c1.iter().zip(&c2).filter(|(x, y)| x == y).count() as f64 / k as f64;
+            est_bbit.push((pb - c) / (1.0 - c));
+            let oph_spec = EncoderSpec::Oph { bins: k, b, seed: rng.next_u64() };
+            let (c1, c2) = trait_codes_pair(&oph_spec, &s1, &s2)?;
+            let pb = c1.iter().zip(&c2).filter(|(x, y)| x == y).count() as f64 / k as f64;
+            est_oph.push((pb - c) / (1.0 - c));
+        }
+        let theory = estimators::var_bbit(r, 0.0, 0.0, b, k);
+        for (name, est) in [("bbit (trait)", &est_bbit), ("oph (trait)", &est_oph)] {
+            t4.row(&[
+                name.into(),
+                k.to_string(),
+                fnum(stats::variance(est)),
+                fnum(theory),
+                fnum(stats::variance(est) / theory),
+            ]);
+        }
+    }
+    ctx.emit(&t4, "variance_trait_oph.csv")?;
+    Ok(vec![t1, t2, t3, t4])
 }

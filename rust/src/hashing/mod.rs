@@ -7,6 +7,8 @@
 //!   comparator.
 //! - [`minwise`]: k-way minwise hashing and b-bit truncation (Section 2).
 //! - [`vw`]: the VW hashing algorithm (signed Count-Min, Eq. 14).
+//! - [`oph`]: one-permutation hashing — one hash pass, `bins` partitions,
+//!   rotation densification (Li–Owen–Zhang 2012).
 //! - [`rp`]: random projections with the sparse `s`-family (Eq. 11).
 //! - [`estimators`]: resemblance/inner-product estimators and their exact
 //!   variance formulas (Eqs. 2, 3–7, 13, 16) used by the variance bench.
@@ -16,11 +18,13 @@
 pub mod estimators;
 pub mod lsh;
 pub mod minwise;
+pub mod oph;
 pub mod permutation;
 pub mod rp;
 pub mod universal;
 pub mod vw;
 
 pub use minwise::{BbitMinHash, MinwiseHasher};
+pub use oph::OnePermutationHasher;
 pub use universal::{UniversalHash, PRIME};
 pub use vw::VwHasher;

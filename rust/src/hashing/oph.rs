@@ -1,0 +1,228 @@
+//! One-permutation hashing (Li, Owen & Zhang 2012; densification per
+//! Shrivastava & Li 2014).
+//!
+//! Classic k-way minwise hashing scans every nonzero of a data point k
+//! times (once per hash function).  One-permutation hashing (OPH) pays for
+//! a **single** universal-hash pass: the hashed space `[0, OPH_SPACE)` is
+//! split into `bins` equal-width partitions, and each bin keeps the
+//! minimum hashed value that landed in it.  The within-bin minima behave
+//! like independent minwise samples, so `bins` plays the role of the
+//! paper's k at 1/k-th of the hashing cost — the scheme that motivated the
+//! open [`FeatureEncoder`](crate::encode::encoder::FeatureEncoder) API.
+//!
+//! Sparse data leave some bins **empty**; an empty bin carries no sample
+//! and would bias the estimator.  We densify by rotation: an empty bin
+//! borrows the code of the nearest non-empty bin to its right
+//! (circularly), which restores an unbiased collision probability for the
+//! borrowed positions (Shrivastava & Li, ICML'14).  A fully-empty set
+//! (no features at all) gets the sentinel code in every bin, mirroring
+//! [`empty_sentinel`](crate::hashing::minwise::empty_sentinel).
+//!
+//! Codes are b-bit truncations of the within-bin minima (lowest b bits of
+//! the hashed value), so downstream storage/expansion is identical to
+//! b-bit minwise hashing with k = `bins`: the packed-code cache, the
+//! 2^b×`bins` expansion and the solvers all apply unchanged.
+
+use crate::hashing::minwise::bbit_truncate;
+use crate::hashing::universal::UniversalHash;
+use crate::util::Rng;
+
+/// The hashed space one-permutation hashing partitions: a power of two so
+/// the universal hash reduces by mask, comfortably below the Mersenne
+/// domain bound.
+pub const OPH_SPACE: u64 = 1 << 30;
+
+/// Per-bin sentinel for "no value landed here" during the scan.
+const EMPTY: u64 = u64::MAX;
+
+/// One-permutation hasher: a single universal hash, `bins` partitions,
+/// b-bit codes.
+#[derive(Clone, Debug)]
+pub struct OnePermutationHasher {
+    pub hash: UniversalHash,
+    pub bins: usize,
+    pub b: u32,
+    /// Width of each partition (`ceil(OPH_SPACE / bins)`; the last bin may
+    /// be narrower when `bins` does not divide the space).
+    width: u64,
+}
+
+impl OnePermutationHasher {
+    pub fn draw(bins: usize, b: u32, rng: &mut Rng) -> Self {
+        assert!(bins >= 1, "bins must be >= 1");
+        assert!((1..=16).contains(&b), "b must be in 1..=16");
+        OnePermutationHasher {
+            hash: UniversalHash::draw(rng),
+            bins,
+            b,
+            width: OPH_SPACE.div_ceil(bins as u64),
+        }
+    }
+
+    /// Which partition a hashed value falls in.
+    #[inline]
+    fn bin_of(&self, v: u64) -> usize {
+        (v / self.width) as usize
+    }
+
+    /// Hash a set into `bins` b-bit codes.  `mins` is reusable scratch of
+    /// length `bins` (the within-bin minima); `codes` receives the
+    /// densified b-bit codes (length `bins`).
+    pub fn codes_into(&self, set: &[u32], mins: &mut [u64], codes: &mut [u16]) {
+        debug_assert_eq!(mins.len(), self.bins);
+        debug_assert_eq!(codes.len(), self.bins);
+        mins.fill(EMPTY);
+        let mut non_empty = 0usize;
+        for &t in set {
+            let v = self.hash.hash(t, OPH_SPACE);
+            let j = self.bin_of(v);
+            if mins[j] == EMPTY {
+                non_empty += 1;
+            }
+            if v < mins[j] {
+                mins[j] = v;
+            }
+        }
+        if non_empty == 0 {
+            // empty set: sentinel code everywhere (OPH_SPACE truncates to 0
+            // for every b <= 16, matching the minwise sentinel convention)
+            codes.fill(bbit_truncate(OPH_SPACE, self.b));
+            return;
+        }
+        // first pass: codes for occupied bins
+        for (j, &m) in mins.iter().enumerate() {
+            if m != EMPTY {
+                codes[j] = bbit_truncate(m, self.b);
+            }
+        }
+        if non_empty == self.bins {
+            return;
+        }
+        // densify by rotation: each empty bin borrows the code of the
+        // nearest occupied bin to its right (circular).  Seed the sweep
+        // with the leftmost occupied bin's code — that is what the bins
+        // right of the *last* occupied bin wrap around to — then walk
+        // leftwards so every other empty bin picks up its true right
+        // neighbour in O(bins) total.
+        let first_occupied = (0..self.bins)
+            .find(|&j| mins[j] != EMPTY)
+            .expect("non_empty > 0 guarantees an occupied bin");
+        let mut borrowed = codes[first_occupied];
+        for j in (0..self.bins).rev() {
+            if mins[j] == EMPTY {
+                codes[j] = borrowed;
+            } else {
+                borrowed = codes[j];
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper around [`codes_into`](Self::codes_into).
+    pub fn codes(&self, set: &[u32]) -> Vec<u16> {
+        let mut mins = vec![0u64; self.bins];
+        let mut codes = vec![0u16; self.bins];
+        self.codes_into(set, &mut mins, &mut codes);
+        codes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::minwise::resemblance;
+
+    #[test]
+    fn deterministic_and_order_invariant() {
+        let mut rng = Rng::new(101);
+        let h = OnePermutationHasher::draw(64, 8, &mut rng);
+        let mut set: Vec<u32> =
+            rng.sample_distinct(1 << 24, 300).into_iter().map(|x| x as u32).collect();
+        let a = h.codes(&set);
+        set.reverse();
+        let b = h.codes(&set);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|&c| c < 256));
+    }
+
+    #[test]
+    fn empty_set_gets_sentinel_codes() {
+        let mut rng = Rng::new(103);
+        let h = OnePermutationHasher::draw(16, 8, &mut rng);
+        let codes = h.codes(&[]);
+        assert!(codes.iter().all(|&c| c == bbit_truncate(OPH_SPACE, 8)));
+    }
+
+    #[test]
+    fn densification_borrows_from_the_right_circularly() {
+        let mut rng = Rng::new(107);
+        // tiny set into many bins: most bins empty, every code must still
+        // equal the code of the nearest occupied bin to its right
+        let h = OnePermutationHasher::draw(32, 4, &mut rng);
+        let set: Vec<u32> =
+            rng.sample_distinct(1 << 24, 3).into_iter().map(|x| x as u32).collect();
+        let mut mins = vec![0u64; 32];
+        let mut codes = vec![0u16; 32];
+        h.codes_into(&set, &mut mins, &mut codes);
+        let occupied: Vec<usize> =
+            (0..32).filter(|&j| mins[j] != u64::MAX).collect();
+        assert!(!occupied.is_empty() && occupied.len() <= 3);
+        for j in 0..32 {
+            // nearest occupied bin at or after j, wrapping
+            let src = (0..32)
+                .map(|off| (j + off) % 32)
+                .find(|jj| mins[*jj] != u64::MAX)
+                .unwrap();
+            assert_eq!(codes[j], bbit_truncate(mins[src], 4), "bin {j} src {src}");
+        }
+    }
+
+    #[test]
+    fn collision_fraction_tracks_resemblance() {
+        // with bins ≪ nnz (few empty bins) the densified collision
+        // probability approximates the b-bit collision probability
+        // C + (1−C)·R with C = 2^−b; Monte-Carlo over independent draws.
+        let mut rng = Rng::new(109);
+        let d = 1u64 << 24;
+        let shared: Vec<u32> =
+            rng.sample_distinct(d, 400).into_iter().map(|x| x as u32).collect();
+        let mut s1 = shared.clone();
+        let mut s2 = shared;
+        s1.extend(rng.sample_distinct(d, 200).into_iter().map(|x| x as u32 + 1));
+        s2.extend(rng.sample_distinct(d, 200).into_iter().map(|x| x as u32 + 2));
+        s1.sort_unstable();
+        s1.dedup();
+        s2.sort_unstable();
+        s2.dedup();
+        let r = resemblance(&s1, &s2);
+        let (bins, b, trials) = (64usize, 8u32, 60usize);
+        let c = 0.5f64.powi(b as i32);
+        let expect = c + (1.0 - c) * r;
+        let mut match_frac = 0.0;
+        for _ in 0..trials {
+            let h = OnePermutationHasher::draw(bins, b, &mut rng);
+            let (c1, c2) = (h.codes(&s1), h.codes(&s2));
+            match_frac += c1.iter().zip(&c2).filter(|(a, b)| a == b).count() as f64
+                / bins as f64;
+        }
+        match_frac /= trials as f64;
+        // generous 5σ-style gate: σ² ≈ p(1−p)/(bins·trials)
+        let sigma = (expect * (1.0 - expect) / (bins * trials) as f64).sqrt();
+        assert!(
+            (match_frac - expect).abs() < 6.0 * sigma.max(0.01),
+            "match {match_frac} expect {expect}"
+        );
+    }
+
+    #[test]
+    fn ragged_bins_stay_in_range() {
+        // bins that do not divide OPH_SPACE: bin_of must never overflow
+        let mut rng = Rng::new(113);
+        let h = OnePermutationHasher::draw(7, 3, &mut rng);
+        let set: Vec<u32> =
+            rng.sample_distinct(1 << 20, 500).into_iter().map(|x| x as u32).collect();
+        let codes = h.codes(&set);
+        assert_eq!(codes.len(), 7);
+        assert!(codes.iter().all(|&c| c < 8));
+    }
+}

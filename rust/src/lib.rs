@@ -22,20 +22,33 @@
 //! | module | paper dependency |
 //! |---|---|
 //! | [`data`] | LibSVM streaming IO, rcv1-like generator, feature expansion |
-//! | [`hashing`] | minwise / b-bit / VW / RP + estimator variance theory |
-//! | [`encode`] | `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), on-disk hashed cache |
-//! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form |
-//! | [`coordinator`] | streaming pipeline (reader → workers → collector → sink) + scheduler |
+//! | [`hashing`] | minwise / b-bit / VW / RP / OPH substrates + estimator variance theory |
+//! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache |
+//! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec` |
+//! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink) + scheduler |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
 //!
+//! ## The encoder seam
+//!
+//! Every hashing scheme is described by a serializable
+//! [`EncoderSpec`](encode::encoder::EncoderSpec) (`Bbit`/`Vw`/`Rp`/`Oph`)
+//! and executed through the
+//! [`FeatureEncoder`](encode::encoder::FeatureEncoder) trait.  The
+//! pipeline workers, the cache header, the saved-model format and the CLI
+//! all speak spec — adding a scheme means one spec variant (with its
+//! serializations beside it in `encode/encoder.rs`) plus one trait impl;
+//! no coordinator, solver or CLI surgery.  One-permutation hashing
+//! ([`hashing::oph`]) is the existence proof.
+//!
 //! ## Out-of-core workflow (the paper's 200GB story)
 //!
-//! The pipeline's collector re-emits hashed chunks incrementally, in input
-//! order, into a pluggable [`coordinator::sink::PipelineSink`]:
+//! The pipeline's collector re-emits encoded chunks incrementally, in
+//! input order, into a pluggable [`coordinator::sink::PipelineSink`]:
 //!
-//! 1. `preprocess --cache-out` streams packed b-bit chunks to the
-//!    checksummed on-disk cache ([`encode::cache`]) — hash the corpus once;
+//! 1. `preprocess --encoder bbit|oph --cache-out` streams packed-code
+//!    chunks to the checksummed on-disk cache ([`encode::cache`]) — hash
+//!    the corpus once, spec recorded in the header;
 //! 2. `train --cache` replays that cache through batch solvers or the
 //!    streaming SGD trainer ([`solver::SgdStream`]) for as many
 //!    (solver, C, epoch) sweeps as needed;

@@ -2,10 +2,16 @@
 //!
 //! Subcommands:
 //!   gen-data     generate the rcv1-like corpus (optionally expanded) as LibSVM
-//!   preprocess   stream a LibSVM file through the hashing pipeline
-//!   train        train + evaluate on a hashed dataset
+//!   preprocess   stream a LibSVM file through the encoding pipeline
+//!   train        train + evaluate on an encoded dataset
 //!   experiments  regenerate a paper table/figure (or `all`)
 //!   runtime-info check the PJRT artifacts load and run
+//!
+//! Every subcommand that hashes data takes `--encoder bbit|vw|rp|oph`
+//! (legacy alias `--method`) plus that scheme's parameter flags; the flags
+//! are parsed into an [`EncoderSpec`] and everything downstream — the
+//! pipeline workers, the cache header, the saved model — is scheme-
+//! agnostic from there.
 //!
 //! The argument parser is hand-rolled (the offline crate set has no clap);
 //! flags are `--key value` or `--key=value`.
@@ -14,7 +20,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::process::ExitCode;
 
-use bbit_mh::coordinator::pipeline::{HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineOutput};
 use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
 use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
 use bbit_mh::data::expand::{expand_example, ExpandConfig};
@@ -22,34 +28,44 @@ use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
 use bbit_mh::encode::cache::CacheReader;
 use bbit_mh::encode::expansion::BbitDataset;
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::experiments::{self, Ctx, Scale};
-use bbit_mh::solver::{LinearModel, SgdConfig, SgdLoss};
+use bbit_mh::solver::{FeatureMatrix, LinearModel, SgdConfig, SgdLoss};
 use bbit_mh::{Error, Result};
 
 const USAGE: &str = "\
 bbit-mh — b-bit minwise hashing for large-scale linear learning
   (reproduction of Li, Shrivastava & König 2011; see README.md)
 
+ENCODERS (--encoder, legacy alias --method):
+  bbit   b-bit minwise hashing     [--b 8] [--k 200] [--dim 1073741824]
+  vw     VW feature hashing        [--bins 1024]
+  rp     sparse random projections [--proj 256] [--s 1.0]
+  oph    one-permutation hashing   [--bins 1024] [--b 8]
+  (bbit and oph emit packed codes — cacheable and streamable; vw and rp
+   emit sparse rows)
+
 USAGE:
   bbit-mh gen-data --out FILE [--n 4000] [--vocab 4000] [--expanded] [--seed N]
-  bbit-mh preprocess --input FILE (--out FILE | --cache-out FILE) --method bbit|vw
-             [--b 8] [--k 200] [--bins 1024] [--dim 1073741824]
-             [--workers N] [--seed N]
-             (--cache-out streams b-bit chunks to the on-disk hashed cache:
-              hash once, train many times, constant memory)
+  bbit-mh preprocess --input FILE (--out FILE | --cache-out FILE)
+             [--encoder bbit|vw|rp|oph] [scheme flags] [--workers N] [--seed N]
+             (--cache-out streams packed-code chunks to the on-disk hashed
+              cache: hash once, train many times, constant memory)
   bbit-mh train --input FILE --solver svm|lr [--c 1.0] [--cv FOLDS]
-             [--method bbit|vw|none] [--b 8] [--k 200] [--bins 1024]
+             [--encoder bbit|vw|rp|oph|none] [scheme flags]
              [--train-frac 0.5] [--seed N] [--save-model FILE]
   bbit-mh train --cache FILE [--solver sgd|svm|lr] [--c 1.0] [--epochs 5]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda L]
              [--eval] [--save-model FILE]
-             (multi-epoch replay of a hashed cache; sgd streams in O(dim)
-              memory; --eval adds a train-accuracy pass over the cache)
-  bbit-mh train --input FILE --stream [--b 8] [--k 200] [--dim D] [--seed N]
+             (multi-epoch replay of a hashed cache; the cache header
+              records the encoder spec; sgd streams in O(dim) memory;
+              --eval adds a train-accuracy pass over the cache)
+  bbit-mh train --input FILE --stream [--encoder bbit|oph] [scheme flags]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
-             [--save-model FILE]
+             [--seed N] [--save-model FILE]
              (one-pass hash-and-train: nothing materialized, prints progressive loss)
   bbit-mh classify --model FILE --input FILE [--out FILE]
+             (the model file embeds its encoder spec — any scheme classifies)
   bbit-mh experiments ID [--scale tiny|small|paper] [--results DIR]
              (IDs: table1 fig1 fig3 fig5 fig6 fig7 fig8 table2 variance fig9 all)
   bbit-mh runtime-info [--artifacts DIR]
@@ -179,41 +195,81 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--encoder` scheme name (`--method` stays as the legacy alias).
+fn scheme_flag(args: &Args, default: &str) -> Result<String> {
+    if let Some(e) = args.flags.get("encoder") {
+        return Ok(e.clone());
+    }
+    args.get("method", default.to_string())
+}
+
+/// Parse one scheme's parameter flags into an [`EncoderSpec`].
+fn encoder_spec(args: &Args, scheme: &str, seed: u64) -> Result<EncoderSpec> {
+    let spec = match scheme {
+        "bbit" => EncoderSpec::Bbit {
+            b: args.get("b", 8u32)?,
+            k: args.get("k", 200usize)?,
+            d: args.get("dim", 1u64 << 30)?,
+            seed,
+        },
+        "vw" => EncoderSpec::Vw { bins: args.get("bins", 1024usize)?, seed },
+        "rp" => EncoderSpec::Rp {
+            proj: args.get("proj", 256usize)?,
+            s: args.get("s", 1.0f64)?,
+            seed,
+        },
+        "oph" => EncoderSpec::Oph {
+            bins: args.get("bins", 1024usize)?,
+            b: args.get("b", 8u32)?,
+            seed,
+        },
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "unknown encoder {other:?} (want bbit|vw|rp|oph)"
+            )))
+        }
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
 fn cmd_preprocess(args: &Args) -> Result<()> {
     let input = args.required("input")?;
-    let method = args.get("method", "bbit".to_string())?;
+    let scheme = scheme_flag(args, "bbit")?;
     let workers: usize = args.get("workers", bbit_mh::config::available_workers())?;
     let seed: u64 = args.get("seed", 1)?;
+    let spec = encoder_spec(args, &scheme, seed)?;
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
     let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
-    match method.as_str() {
-        "bbit" => {
-            let b: u32 = args.get("b", 8u32)?;
-            let k: usize = args.get("k", 200usize)?;
-            let d: u64 = args.get("dim", 1u64 << 30)?;
-            let job = HashJob::Bbit { b, k, d, seed };
-            if let Some(cache_out) = args.flags.get("cache-out") {
-                // out-of-core path: chunks stream to disk as they are
-                // hashed; memory stays bounded by the pipeline queues
-                let mut sink = CacheSink::create(cache_out, b, k, d, seed)?;
-                let report = pipe.run_sink(source, &job, &mut sink)?;
-                eprintln!(
-                    "hashed {} docs in {:.2}s wall ({:.2}s read + {:.2}s stalled, \
-                     {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks) -> {}",
-                    report.docs,
-                    report.wall_seconds,
-                    report.read_seconds,
-                    report.stall_seconds,
-                    report.hash_cpu_seconds,
-                    report.sink_seconds,
-                    report.reorder_peak,
-                    cache_out,
-                );
-                return Ok(());
-            }
-            let out = args.required("out")?;
-            let (outp, report) = pipe.run(source, &job)?;
-            let bb = outp.into_bbit()?;
+    if let Some(cache_out) = args.flags.get("cache-out") {
+        if spec.packed_geometry().is_none() {
+            return Err(Error::InvalidArg(format!(
+                "--cache-out stores packed codes; --encoder {scheme} emits sparse rows \
+                 (use bbit or oph)"
+            )));
+        }
+        // out-of-core path: chunks stream to disk as they are encoded;
+        // memory stays bounded by the pipeline queues
+        let mut sink = CacheSink::create(cache_out, &spec)?;
+        let report = pipe.run_sink(source, &spec, &mut sink)?;
+        eprintln!(
+            "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read + {:.2}s stalled, \
+             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks) -> {}",
+            report.docs,
+            report.wall_seconds,
+            report.read_seconds,
+            report.stall_seconds,
+            report.hash_cpu_seconds,
+            report.sink_seconds,
+            report.reorder_peak,
+            cache_out,
+        );
+        return Ok(());
+    }
+    let out = args.required("out")?;
+    let (outp, report) = pipe.run(source, &spec)?;
+    match outp {
+        PipelineOutput::Packed(bb) => {
             let f = std::fs::File::create(out)?;
             bb.codes.save(std::io::BufWriter::new(f))?;
             // labels ride alongside
@@ -226,7 +282,8 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
                     .join("\n"),
             )?;
             eprintln!(
-                "hashed {} docs in {:.2}s wall ({:.2}s read, {:.2} hash-cpu-s, {} stalls) -> {} ({} ideal bytes)",
+                "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read, {:.2} hash-cpu-s, \
+                 {} stalls) -> {} ({} ideal bytes)",
                 report.docs,
                 report.wall_seconds,
                 report.read_seconds,
@@ -236,25 +293,15 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
                 bb.codes.ideal_bytes(),
             );
         }
-        "vw" => {
-            if args.has("cache-out") {
-                return Err(Error::InvalidArg(
-                    "--cache-out stores packed b-bit codes; use --method bbit".into(),
-                ));
-            }
-            let out = args.required("out")?;
-            let job = HashJob::Vw { bins: args.get("bins", 1024usize)?, seed };
-            let (outp, report) = pipe.run(source, &job)?;
-            let ds = outp.into_vw()?;
+        PipelineOutput::Sparse(ds) => {
             let mut w = LibsvmWriter::create(out)?;
             w.write_dataset(&ds)?;
             w.finish()?;
             eprintln!(
-                "VW-hashed {} docs in {:.2}s wall -> {out}",
+                "{scheme}-encoded {} docs in {:.2}s wall -> {out}",
                 report.docs, report.wall_seconds
             );
         }
-        other => return Err(Error::InvalidArg(format!("unknown method {other:?}"))),
     }
     Ok(())
 }
@@ -285,15 +332,13 @@ fn cache_accuracy(path: &str, model: &LinearModel) -> Result<f64> {
 }
 
 /// `train --cache FILE`: replay an on-disk hashed cache — the "hash once,
-/// train many times" half of the out-of-core workflow.
+/// train many times" half of the out-of-core workflow.  The cache header
+/// records the encoder spec, so the trained model carries it too.
 fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
     let solver = args.get("solver", "sgd".to_string())?;
     let c: f64 = args.get("c", 1.0)?;
     let meta = CacheReader::open(cache)?.meta();
-    eprintln!(
-        "cache {cache}: {} docs, b={} k={} d={} (hash seed {})",
-        meta.n, meta.b, meta.k, meta.d, meta.seed
-    );
+    eprintln!("cache {cache}: {} docs, encoder {:?}", meta.n, meta.spec);
     let model = match solver.as_str() {
         "sgd" => {
             let cfg = SgdConfig {
@@ -341,13 +386,7 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
         other => return Err(Error::InvalidArg(format!("unknown solver {other:?}"))),
     };
     if let Some(model_path) = args.flags.get("save-model") {
-        let saved = bbit_mh::solver::SavedModel {
-            b: meta.b,
-            k: meta.k,
-            d: meta.d,
-            seed: meta.seed,
-            model,
-        };
+        let saved = bbit_mh::solver::SavedModel::new(meta.spec, model)?;
         saved.save(model_path)?;
         eprintln!("saved model to {model_path}");
     }
@@ -355,14 +394,14 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
 }
 
 /// `train --input FILE --stream`: one-pass hash-and-train.  Nothing is
-/// materialized — parsed chunks flow through the hash workers straight
-/// into the streaming SGD update.
+/// materialized — parsed chunks flow through the encode workers straight
+/// into the streaming SGD update.  Any packed-code encoder works
+/// (`--encoder bbit|oph`).
 fn cmd_train_stream(args: &Args) -> Result<()> {
     let input = args.required("input")?;
-    let b: u32 = args.get("b", 8u32)?;
-    let k: usize = args.get("k", 200usize)?;
-    let d: u64 = args.get("dim", 1u64 << 30)?;
     let seed: u64 = args.get("seed", 1)?;
+    let scheme = scheme_flag(args, "bbit")?;
+    let spec = encoder_spec(args, &scheme, seed)?;
     let cfg = SgdConfig {
         loss: sgd_loss_flag(args)?,
         lr0: args.get("lr0", 0.5)?,
@@ -375,9 +414,8 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
     let workers: usize = args.get("workers", bbit_mh::config::available_workers())?;
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
     let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
-    let job = HashJob::Bbit { b, k, d, seed };
-    let mut sink = TrainSink::new(cfg, b, k);
-    let report = pipe.run_sink(source, &job, &mut sink)?;
+    let mut sink = TrainSink::for_spec(cfg, &spec)?;
+    let report = pipe.run_sink(source, &spec, &mut sink)?;
     let (model, stats) = sink.into_result();
     println!(
         "solver=sgd method=stream: one-pass trained on {} docs, progressive loss {:.4}, \
@@ -393,10 +431,33 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
         report.reorder_peak,
     );
     if let Some(model_path) = args.flags.get("save-model") {
-        let saved = bbit_mh::solver::SavedModel { b, k, d, seed, model };
+        let saved = bbit_mh::solver::SavedModel::new(spec, model)?;
         saved.save(model_path)?;
         eprintln!("saved model to {model_path}");
     }
+    Ok(())
+}
+
+/// Fit one explicit model at C on the training half and persist it with
+/// its encoder spec — shared by every `train --save-model` scheme path.
+fn fit_and_save<F: FeatureMatrix>(
+    kind: SolverKind,
+    c: f64,
+    tr: &F,
+    spec: EncoderSpec,
+    model_path: &str,
+) -> Result<()> {
+    let model = match kind {
+        SolverKind::SvmDcd => {
+            bbit_mh::solver::train_svm(tr, &bbit_mh::solver::SvmConfig::with_c(c)).0
+        }
+        SolverKind::LrNewton => {
+            bbit_mh::solver::train_lr(tr, &bbit_mh::solver::LrConfig::with_c(c)).0
+        }
+    };
+    let saved = bbit_mh::solver::SavedModel::new(spec, model)?;
+    saved.save(model_path)?;
+    eprintln!("saved model to {model_path}");
     Ok(())
 }
 
@@ -412,7 +473,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let c: f64 = args.get("c", 1.0)?;
     let seed: u64 = args.get("seed", 3)?;
     let train_frac: f64 = args.get("train-frac", 0.5)?;
-    let method = args.get("method", "bbit".to_string())?;
+    let scheme = scheme_flag(args, "bbit")?;
 
     let dim: u64 = args.get("dim", 1u64 << 30)?;
     let raw = bbit_mh::data::libsvm::load(input, dim)?;
@@ -431,52 +492,35 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let job = vec![TrainJob { tag: String::new(), solver: kind, c }];
     let cv_folds: usize = args.get("cv", 0)?;
-    let outcome = match method.as_str() {
-        "bbit" => {
-            let pipe = Pipeline::new(PipelineConfig::default());
-            let hash = HashJob::Bbit {
-                b: args.get("b", 8u32)?,
-                k: args.get("k", 200usize)?,
-                d: dim,
-                seed: seed ^ 0x4A5E,
-            };
-            let (tr, _) = pipe.run(
-                bbit_mh::coordinator::pipeline::dataset_chunks(&train_raw, 256),
-                &hash,
-            )?;
-            let (te, _) = pipe.run(
-                bbit_mh::coordinator::pipeline::dataset_chunks(&test_raw, 256),
-                &hash,
-            )?;
-            let (tr, te) = (tr.into_bbit()?, te.into_bbit()?);
+    if scheme == "none" {
+        let outcome = Scheduler::new(1).run_grid(&train_raw, &test_raw, &job)?;
+        return print_outcome(&solver, &scheme, c, &outcome[0]);
+    }
+    // the legacy per-scheme seed transforms are preserved so pre-redesign
+    // runs reproduce byte-for-byte (bbit: ^0x4A5E, vw: ^0x77)
+    let spec = encoder_spec(
+        args,
+        &scheme,
+        match scheme.as_str() {
+            "bbit" | "oph" => seed ^ 0x4A5E,
+            _ => seed ^ 0x77,
+        },
+    )?;
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let (tr, _) = pipe.run(
+        bbit_mh::coordinator::pipeline::dataset_chunks(&train_raw, 256),
+        &spec,
+    )?;
+    let (te, _) = pipe.run(
+        bbit_mh::coordinator::pipeline::dataset_chunks(&test_raw, 256),
+        &spec,
+    )?;
+    let outcome = match (tr, te) {
+        (PipelineOutput::Packed(tr), PipelineOutput::Packed(te)) => {
             if let Some(model_path) = args.flags.get("save-model") {
                 // fit on the train half at the requested C, persist the
-                // model + hashing recipe for `classify`
-                let model = match kind {
-                    SolverKind::SvmDcd => {
-                        bbit_mh::solver::train_svm(
-                            &tr,
-                            &bbit_mh::solver::SvmConfig::with_c(c),
-                        )
-                        .0
-                    }
-                    SolverKind::LrNewton => {
-                        bbit_mh::solver::train_lr(
-                            &tr,
-                            &bbit_mh::solver::LrConfig::with_c(c),
-                        )
-                        .0
-                    }
-                };
-                let saved = bbit_mh::solver::SavedModel {
-                    b: args.get("b", 8u32)?,
-                    k: args.get("k", 200usize)?,
-                    d: dim,
-                    seed: seed ^ 0x4A5E,
-                    model,
-                };
-                saved.save(model_path)?;
-                eprintln!("saved model to {model_path}");
+                // model + encoder spec for `classify`
+                fit_and_save(kind, c, &tr, spec, model_path)?;
             }
             if cv_folds >= 2 {
                 // C selection by k-fold CV on the hashed training half —
@@ -502,30 +546,22 @@ fn cmd_train(args: &Args) -> Result<()> {
                     vec![TrainJob { tag: String::new(), solver: kind, c: report.best_c }];
                 return print_outcome(
                     &solver,
-                    &method,
+                    &scheme,
                     report.best_c,
                     &Scheduler::new(1).run_grid(&tr, &te, &job)?[0],
                 );
             }
             Scheduler::new(1).run_grid(&tr, &te, &job)?
         }
-        "vw" => {
-            let pipe = Pipeline::new(PipelineConfig::default());
-            let hash = HashJob::Vw { bins: args.get("bins", 1024usize)?, seed: seed ^ 0x77 };
-            let (tr, _) = pipe.run(
-                bbit_mh::coordinator::pipeline::dataset_chunks(&train_raw, 256),
-                &hash,
-            )?;
-            let (te, _) = pipe.run(
-                bbit_mh::coordinator::pipeline::dataset_chunks(&test_raw, 256),
-                &hash,
-            )?;
-            Scheduler::new(1).run_grid(&tr.into_vw()?, &te.into_vw()?, &job)?
+        (PipelineOutput::Sparse(tr), PipelineOutput::Sparse(te)) => {
+            if let Some(model_path) = args.flags.get("save-model") {
+                fit_and_save(kind, c, &tr, spec, model_path)?;
+            }
+            Scheduler::new(1).run_grid(&tr, &te, &job)?
         }
-        "none" => Scheduler::new(1).run_grid(&train_raw, &test_raw, &job)?,
-        other => return Err(Error::InvalidArg(format!("unknown method {other:?}"))),
+        _ => unreachable!("one spec always produces one output kind"),
     };
-    print_outcome(&solver, &method, c, &outcome[0])
+    print_outcome(&solver, &scheme, c, &outcome[0])
 }
 
 fn print_outcome(
@@ -546,7 +582,8 @@ fn print_outcome(
 }
 
 /// Score raw LibSVM documents with a saved model — the L3 "request path":
-/// parse → minwise hash → b-bit gather margin, no python, no retraining.
+/// parse → encode (whatever scheme the model's spec records) → margin, no
+/// python, no retraining.  The encoder is drawn once at model load.
 fn cmd_classify(args: &Args) -> Result<()> {
     let model_path = args.required("model")?;
     let input = args.required("input")?;

@@ -1,63 +1,74 @@
-//! Trained-model persistence: weights + the hashing recipe needed to
+//! Trained-model persistence: weights + the encoder spec needed to
 //! classify raw documents later.
 //!
-//! Because every hash family in this crate derives deterministically from
-//! a `u64` seed (DESIGN.md §5b), a model file only stores `(b, k, d,
-//! seed)` plus the weight vector — the loader re-draws the identical
-//! family and the `classify` CLI can score raw LibSVM documents without
-//! any other state.  Text header + little-endian f32 weights.
+//! Because every encoder in this crate derives deterministically from its
+//! [`EncoderSpec`] (DESIGN.md §5b), a model file only stores the spec plus
+//! the weight vector — the loader re-draws the identical family (once,
+//! cached on the loaded model) and the `classify` CLI can score raw LibSVM
+//! documents with any scheme without any other state.  Text header +
+//! little-endian f32 weights.
+//!
+//! Format v2 (current): `BBMH-MODEL v2`, an `encoder <scheme>` line, the
+//! scheme's parameters as `key value` lines, `dim`, then weights.  v1
+//! files (b-bit only: `b/k/d/seed/dim`) are still readable.
 
+use std::fmt;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use crate::hashing::minwise::BbitMinHash;
+use crate::encode::encoder::{EncodeScratch, EncoderSpec, FeatureEncoder};
 use crate::solver::linear::LinearModel;
-use crate::util::Rng;
 use crate::{Error, Result};
 
-/// Everything needed to classify a raw document.
-#[derive(Clone, Debug)]
+/// Everything needed to classify a raw document: the encoder spec, the
+/// weights, and the encoder itself — drawn **once** at construction/load
+/// time and reused across every classify call (re-drawing the hash family
+/// per call was the old hot-path bug).
 pub struct SavedModel {
-    pub b: u32,
-    pub k: usize,
-    pub d: u64,
-    pub seed: u64,
+    pub spec: EncoderSpec,
     pub model: LinearModel,
+    encoder: Box<dyn FeatureEncoder>,
 }
 
 impl SavedModel {
-    /// Re-draw the (deterministic) hash family this model was trained with.
-    pub fn hasher(&self) -> BbitMinHash {
-        BbitMinHash::draw(self.k, self.b, self.d, &mut Rng::new(self.seed))
+    /// Bind weights to an encoder spec (validates the dimensionality and
+    /// draws the encoder once).
+    pub fn new(spec: EncoderSpec, model: LinearModel) -> Result<Self> {
+        spec.validate()?;
+        if model.w.len() != spec.output_dim() {
+            return Err(Error::InvalidArg(format!(
+                "model has {} weights but {} encoder expands to {}",
+                model.w.len(),
+                spec.scheme(),
+                spec.output_dim()
+            )));
+        }
+        let encoder = spec.encoder()?;
+        Ok(SavedModel { spec, model, encoder })
+    }
+
+    /// The cached encoder this model classifies with.
+    pub fn encoder(&self) -> &dyn FeatureEncoder {
+        self.encoder.as_ref()
     }
 
     /// Margin for one raw document (set of feature indices).
-    pub fn margin(&self, set: &[u32], scratch: &mut ClassifyScratch) -> f32 {
-        scratch.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
-        let bshift = self.b as usize;
-        let mut acc = 0.0f32;
-        for (j, &c) in scratch.codes.iter().enumerate() {
-            acc += self.model.w[(j << bshift) + c as usize];
-        }
-        acc
+    pub fn margin(&self, set: &[u32], scratch: &mut EncodeScratch) -> f32 {
+        self.encoder.margin(set, &self.model.w, scratch)
     }
 
-    pub fn scratch(&self) -> ClassifyScratch {
-        ClassifyScratch {
-            hasher: self.hasher(),
-            z: vec![0u64; self.k],
-            codes: vec![0u16; self.k],
-        }
+    /// Reusable per-thread classification scratch.
+    pub fn scratch(&self) -> EncodeScratch {
+        self.encoder.scratch()
     }
 
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let f = std::fs::File::create(path)?;
         let mut w = BufWriter::new(f);
-        writeln!(w, "BBMH-MODEL v1")?;
-        writeln!(w, "b {}", self.b)?;
-        writeln!(w, "k {}", self.k)?;
-        writeln!(w, "d {}", self.d)?;
-        writeln!(w, "seed {}", self.seed)?;
+        writeln!(w, "BBMH-MODEL v2")?;
+        // the spec's text form is owned by EncoderSpec, next to its binary
+        // cache-header form — one place per serialization
+        self.spec.write_text_fields(&mut w)?;
         writeln!(w, "dim {}", self.model.w.len())?;
         writeln!(w, "weights")?;
         for x in &self.model.w {
@@ -84,10 +95,12 @@ impl SavedModel {
             }
         }
         let mut lines = header.lines();
-        if lines.next() != Some("BBMH-MODEL v1") {
-            return Err(Error::InvalidArg("bad model magic".into()));
-        }
-        let mut get = |key: &str| -> Result<u64> {
+        let version = match lines.next() {
+            Some("BBMH-MODEL v1") => 1u32,
+            Some("BBMH-MODEL v2") => 2u32,
+            _ => return Err(Error::InvalidArg("bad model magic".into())),
+        };
+        let mut next_kv = |key: &str| -> Result<String> {
             let line = lines
                 .next()
                 .ok_or_else(|| Error::InvalidArg(format!("missing {key}")))?;
@@ -97,17 +110,29 @@ impl SavedModel {
             if k != key {
                 return Err(Error::InvalidArg(format!("expected {key}, got {k}")));
             }
+            Ok(v.to_string())
+        };
+        fn num<T: std::str::FromStr>(v: &str, key: &str) -> Result<T> {
             v.parse()
                 .map_err(|_| Error::InvalidArg(format!("bad {key} value {v:?}")))
+        }
+        let spec = if version == 1 {
+            // legacy fixed-field header: always b-bit minwise
+            EncoderSpec::Bbit {
+                b: num(&next_kv("b")?, "b")?,
+                k: num(&next_kv("k")?, "k")?,
+                d: num(&next_kv("d")?, "d")?,
+                seed: num(&next_kv("seed")?, "seed")?,
+            }
+        } else {
+            EncoderSpec::read_text_fields(&mut next_kv)?
         };
-        let b = get("b")? as u32;
-        let k = get("k")? as usize;
-        let d = get("d")?;
-        let seed = get("seed")?;
-        let dim = get("dim")? as usize;
-        if dim != (1usize << b) * k {
+        let dim: usize = num(&next_kv("dim")?, "dim")?;
+        if dim != spec.output_dim() {
             return Err(Error::InvalidArg(format!(
-                "dim {dim} inconsistent with 2^{b}·{k}"
+                "dim {dim} inconsistent with {} encoder ({})",
+                spec.scheme(),
+                spec.output_dim()
             )));
         }
         let mut bytes = vec![0u8; dim * 4];
@@ -116,21 +141,32 @@ impl SavedModel {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        Ok(SavedModel { b, k, d, seed, model: LinearModel { w } })
+        SavedModel::new(spec, LinearModel { w })
     }
 }
 
-/// Reusable per-thread classification scratch (hash family + buffers).
-pub struct ClassifyScratch {
-    hasher: BbitMinHash,
-    z: Vec<u64>,
-    codes: Vec<u16>,
+impl Clone for SavedModel {
+    fn clone(&self) -> Self {
+        // the encoder draw is deterministic in the spec, and `self` was
+        // validated at construction — re-drawing cannot fail
+        SavedModel::new(self.spec, self.model.clone())
+            .expect("cloning a validated model cannot fail")
+    }
+}
+
+impl fmt::Debug for SavedModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SavedModel")
+            .field("spec", &self.spec)
+            .field("dim", &self.model.w.len())
+            .finish()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+    use crate::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
     use crate::data::gen::{CorpusConfig, CorpusGenerator};
     use crate::solver::dcd_svm::{train_svm, SvmConfig};
     use crate::solver::linear::accuracy;
@@ -139,22 +175,22 @@ mod tests {
     fn save_load_roundtrip_and_classify_consistency() {
         let corpus =
             CorpusGenerator::new(CorpusConfig::rcv1_like(400, 77)).generate();
-        let (b, k, d, seed) = (8u32, 64usize, corpus.dim, 0x5EED1u64);
-        let job = HashJob::Bbit { b, k, d, seed };
+        let spec =
+            EncoderSpec::Bbit { b: 8, k: 64, d: corpus.dim, seed: 0x5EED1 };
         let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 64, queue_depth: 2 });
-        let (hashed, _) = pipe.run(dataset_chunks(&corpus, 64), &job).unwrap();
-        let hashed = hashed.into_bbit().unwrap();
+        let (hashed, _) = pipe.run(dataset_chunks(&corpus, 64), &spec).unwrap();
+        let hashed = hashed.into_packed().unwrap();
         let (model, _) = train_svm(&hashed, &SvmConfig::with_c(1.0));
         let acc_direct = accuracy(&model, &hashed);
         assert!(acc_direct > 0.9);
 
-        let saved = SavedModel { b, k, d, seed, model };
+        let saved = SavedModel::new(spec, model).unwrap();
         let dir = std::env::temp_dir().join(format!("bbmh_model_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("m.bbmh");
         saved.save(&path).unwrap();
         let loaded = SavedModel::load(&path).unwrap();
-        assert_eq!(loaded.b, b);
+        assert_eq!(loaded.spec, spec);
         assert_eq!(loaded.model.w, saved.model.w);
 
         // classifying raw documents must match the trained-path accuracy
@@ -171,6 +207,63 @@ mod tests {
     }
 
     #[test]
+    fn every_scheme_roundtrips_through_the_model_file() {
+        let dir = std::env::temp_dir().join(format!("bbmh_specmodels_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let specs = [
+            EncoderSpec::Bbit { b: 4, k: 10, d: 1 << 20, seed: 1 },
+            EncoderSpec::Vw { bins: 40, seed: 2 },
+            EncoderSpec::Rp { proj: 12, s: 3.0, seed: 3 },
+            EncoderSpec::Oph { bins: 9, b: 5, seed: 4 },
+        ];
+        for (i, spec) in specs.iter().enumerate() {
+            let w: Vec<f32> = (0..spec.output_dim()).map(|j| j as f32 * 0.25 - 1.0).collect();
+            let saved = SavedModel::new(*spec, LinearModel { w }).unwrap();
+            let path = dir.join(format!("m{i}.bbmh"));
+            saved.save(&path).unwrap();
+            let loaded = SavedModel::load(&path).unwrap();
+            assert_eq!(loaded.spec, *spec, "{}", spec.scheme());
+            assert_eq!(loaded.model.w, saved.model.w);
+            // margins agree between the saved and loaded encoders
+            let set: Vec<u32> = (0..30).map(|t| t * 17 % 1000).collect();
+            let set = {
+                let mut s = set;
+                s.sort_unstable();
+                s.dedup();
+                s
+            };
+            let (mut s1, mut s2) = (saved.scratch(), loaded.scratch());
+            assert_eq!(saved.margin(&set, &mut s1), loaded.margin(&set, &mut s2));
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v1_model_files_still_load_as_bbit() {
+        let dir = std::env::temp_dir().join(format!("bbmh_v1model_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.bbmh");
+        let (b, k) = (4u32, 2usize);
+        let dim = (1usize << b) * k;
+        let mut bytes = format!("BBMH-MODEL v1\nb {b}\nk {k}\nd 1024\nseed 9\ndim {dim}\nweights\n")
+            .into_bytes();
+        for j in 0..dim {
+            bytes.extend_from_slice(&(j as f32).to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let loaded = SavedModel::load(&path).unwrap();
+        assert_eq!(loaded.spec, EncoderSpec::Bbit { b, k, d: 1024, seed: 9 });
+        assert_eq!(loaded.model.w.len(), dim);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn mismatched_dim_is_rejected() {
+        let spec = EncoderSpec::Vw { bins: 8, seed: 0 };
+        assert!(SavedModel::new(spec, LinearModel { w: vec![0.0; 9] }).is_err());
+    }
+
+    #[test]
     fn load_rejects_corruption() {
         let dir = std::env::temp_dir().join(format!("bbmh_badmodel_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
@@ -181,6 +274,13 @@ mod tests {
         std::fs::write(
             &path,
             b"BBMH-MODEL v1\nb 4\nk 2\nd 1024\nseed 1\ndim 32\nweights\nxx",
+        )
+        .unwrap();
+        assert!(SavedModel::load(&path).is_err());
+        // unknown scheme
+        std::fs::write(
+            &path,
+            b"BBMH-MODEL v2\nencoder simhash\nbins 4\nseed 1\ndim 4\nweights\n",
         )
         .unwrap();
         assert!(SavedModel::load(&path).is_err());

@@ -349,10 +349,18 @@ where
 
 /// Multi-epoch streaming training from an on-disk hashed cache: replays
 /// the cache `cfg.epochs` times through one [`SgdStream`] — the fwumious
-/// "train over the cache" scenario, in constant memory.
+/// "train over the cache" scenario, in constant memory.  Works for any
+/// packed-code encoder scheme the cache header records (b-bit minwise,
+/// OPH, ...).
 pub fn train_from_cache<P: AsRef<Path>>(path: P, cfg: &SgdConfig) -> Result<(LinearModel, TrainStats)> {
     let meta = CacheReader::open(&path)?.meta();
-    let mut stream = SgdStream::new(cfg.clone(), meta.b, meta.k);
+    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
+        Error::InvalidArg(format!(
+            "cache records a sparse-output encoder ({}); streaming SGD needs packed codes",
+            meta.spec.scheme()
+        ))
+    })?;
+    let mut stream = SgdStream::new(cfg.clone(), b, k);
     for _ in 0..cfg.epochs.max(1) {
         let mut reader = CacheReader::open(&path)?;
         while let Some((codes, labels)) = reader.next_chunk()? {

@@ -1,11 +1,12 @@
 //! Integration tests: the full generate -> expand -> pipeline -> train ->
 //! evaluate flow, plus cross-module behaviours no unit test covers.
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
 use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::hashing::minwise::resemblance;
 use bbit_mh::util::Rng;
 
@@ -32,7 +33,7 @@ fn end_to_end_bbit_beats_chance_and_vw_at_equal_storage() {
     let sched = Scheduler::new(2);
 
     // b-bit: b=8, k=64 => 512 bits/doc
-    let job = HashJob::Bbit { b: 8, k: 64, d: 1 << 28, seed: 5 };
+    let job = EncoderSpec::Bbit { b: 8, k: 64, d: 1 << 28, seed: 5 };
     let (tr, _) = pipe.run(dataset_chunks(&train_raw, 128), &job).unwrap();
     let (te, _) = pipe.run(dataset_chunks(&test_raw, 128), &job).unwrap();
     let (tr, te) = (tr.into_bbit().unwrap(), te.into_bbit().unwrap());
@@ -42,7 +43,7 @@ fn end_to_end_bbit_beats_chance_and_vw_at_equal_storage() {
         .test_accuracy;
 
     // VW at the same storage: 16 bins x 32 bits = 512 bits/doc
-    let job = HashJob::Vw { bins: 16, seed: 7 };
+    let job = EncoderSpec::Vw { bins: 16, seed: 7 };
     let (tr, _) = pipe.run(dataset_chunks(&train_raw, 128), &job).unwrap();
     let (te, _) = pipe.run(dataset_chunks(&test_raw, 128), &job).unwrap();
     let (tr, te) = (tr.into_vw().unwrap(), te.into_vw().unwrap());
@@ -62,7 +63,7 @@ fn end_to_end_bbit_beats_chance_and_vw_at_equal_storage() {
 fn hashing_preserves_resemblance_ordering() {
     // documents more similar in raw space stay more similar in code space
     let ds = expanded_corpus(60, 0xABC);
-    let job = HashJob::Bbit { b: 16, k: 128, d: 1 << 28, seed: 9 };
+    let job = EncoderSpec::Bbit { b: 16, k: 128, d: 1 << 28, seed: 9 };
     let pipe = Pipeline::new(PipelineConfig::default());
     let (out, _) = pipe.run(dataset_chunks(&ds, 32), &job).unwrap();
     let bb = out.into_bbit().unwrap();
@@ -108,7 +109,7 @@ fn libsvm_file_pipeline_equals_in_memory_pipeline() {
         w.write_dataset(&ds).unwrap();
         w.finish().unwrap();
     }
-    let job = HashJob::Bbit { b: 8, k: 32, d: 1 << 28, seed: 21 };
+    let job = EncoderSpec::Bbit { b: 8, k: 32, d: 1 << 28, seed: 21 };
     let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 40, queue_depth: 2 });
     let (mem, _) = pipe.run(dataset_chunks(&ds, 40), &job).unwrap();
     let source = ChunkedReader::new(LibsvmReader::open(&path).unwrap().binary(), 40);
@@ -128,7 +129,7 @@ fn scheduler_c_sweep_on_hashed_data_shows_accuracy_plateau() {
     let ds = expanded_corpus(800, 0x51EE);
     let (train_raw, test_raw) = ds.split(0.5, &mut Rng::new(4));
     let pipe = Pipeline::new(PipelineConfig::default());
-    let job = HashJob::Bbit { b: 8, k: 128, d: 1 << 28, seed: 31 };
+    let job = EncoderSpec::Bbit { b: 8, k: 128, d: 1 << 28, seed: 31 };
     let (tr, _) = pipe.run(dataset_chunks(&train_raw, 128), &job).unwrap();
     let (te, _) = pipe.run(dataset_chunks(&test_raw, 128), &job).unwrap();
     let (tr, te) = (tr.into_bbit().unwrap(), te.into_bbit().unwrap());
@@ -157,7 +158,7 @@ fn error_paths_surface_cleanly() {
     std::fs::write(&path, bad).unwrap();
     let pipe = Pipeline::new(PipelineConfig::default());
     let source = ChunkedReader::new(LibsvmReader::open(&path).unwrap().binary(), 8);
-    let out = pipe.run(source, &HashJob::Bbit { b: 4, k: 8, d: 1 << 20, seed: 1 });
+    let out = pipe.run(source, &EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 20, seed: 1 });
     assert!(out.is_err());
     std::fs::remove_dir_all(dir).ok();
 }

@@ -5,12 +5,13 @@
 //! hundreds of random cases per property, with the failing seed printed so
 //! any counterexample is reproducible with `SEED=<n> cargo test`.
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::coordinator::sharding::ShardPlan;
 use bbit_mh::data::dataset::{Example, SparseDataset};
 use bbit_mh::data::libsvm::{LibsvmReader, LibsvmWriter};
 use bbit_mh::encode::expansion::BbitDataset;
 use bbit_mh::encode::packed::PackedCodes;
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::hashing::minwise::{resemblance, BbitMinHash, MinwiseHasher};
 use bbit_mh::hashing::permutation::{FeistelPermutation, Permutation};
 use bbit_mh::solver::linear::FeatureMatrix;
@@ -223,7 +224,7 @@ fn prop_pipeline_preserves_every_example_in_order() {
         let depth = 1 + rng.below_usize(4);
         let k = 1 + rng.below_usize(16);
         let b = 1 + rng.below(8) as u32;
-        let job = HashJob::Bbit { b, k, d, seed: 99 };
+        let job = EncoderSpec::Bbit { b, k, d, seed: 99 };
         let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: chunk, queue_depth: depth });
         let (out, report) = pipe.run(dataset_chunks(&ds, chunk), &job).unwrap();
         let bb = out.into_bbit().unwrap();

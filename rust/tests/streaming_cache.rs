@@ -11,11 +11,12 @@
 //! - the collector's reorder window tracks in-flight work, not corpus
 //!   size (high-water-mark stat).
 
-use bbit_mh::coordinator::pipeline::{dataset_chunks, HashJob, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::SparseDataset;
 use bbit_mh::encode::cache::CacheReader;
+use bbit_mh::encode::EncoderSpec;
 use bbit_mh::solver::{train_from_cache, train_sgd, SgdConfig, SgdLoss};
 
 fn corpus(n: usize, seed: u64) -> SparseDataset {
@@ -45,7 +46,7 @@ fn max_weight_diff(a: &[f32], b: &[f32]) -> f32 {
 #[test]
 fn stream_train_equals_materialize_then_train() {
     let ds = corpus(700, 0x57E4);
-    let job = HashJob::Bbit { b: 8, k: 48, d: 1 << 24, seed: 17 };
+    let job = EncoderSpec::Bbit { b: 8, k: 48, d: 1 << 24, seed: 17 };
     let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 37, queue_depth: 2 });
     let cfg = SgdConfig {
         loss: SgdLoss::Logistic,
@@ -76,12 +77,12 @@ fn stream_train_equals_materialize_then_train() {
 #[test]
 fn cache_write_read_train_roundtrip() {
     let ds = corpus(500, 0xCAC4E);
-    let job = HashJob::Bbit { b: 6, k: 40, d: 1 << 22, seed: 23 };
+    let job = EncoderSpec::Bbit { b: 6, k: 40, d: 1 << 22, seed: 23 };
     let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 41, queue_depth: 2 });
     let path = tmp_path("roundtrip");
 
     // write once through the cache sink
-    let mut sink = CacheSink::create(&path, 6, 40, 1 << 22, 23).unwrap();
+    let mut sink = CacheSink::create(&path, &job).unwrap();
     let report = pipe.run_sink(dataset_chunks(&ds, 41), &job, &mut sink).unwrap();
     assert_eq!(report.docs, 500);
     assert_eq!(sink.rows_written(), 500);
@@ -90,10 +91,11 @@ fn cache_write_read_train_roundtrip() {
     let (out, _) = pipe.run(dataset_chunks(&ds, 41), &job).unwrap();
     let reference = out.into_bbit().unwrap();
 
-    // header carries the hashing recipe; payload is byte-identical
+    // header carries the encoder spec; payload is byte-identical
     let reader = CacheReader::open(&path).unwrap();
     let meta = reader.meta();
-    assert_eq!((meta.b, meta.k, meta.d, meta.seed, meta.n), (6, 40, 1 << 22, 23, 500));
+    assert_eq!(meta.spec, job);
+    assert_eq!(meta.n, 500);
     let replayed = reader.read_all().unwrap();
     assert_eq!(replayed.len(), reference.len());
     assert_eq!(replayed.labels, reference.labels);
@@ -120,10 +122,10 @@ fn cache_write_read_train_roundtrip() {
 #[test]
 fn cache_detects_corruption_end_to_end() {
     let ds = corpus(120, 0xBAD);
-    let job = HashJob::Bbit { b: 8, k: 16, d: 1 << 20, seed: 3 };
+    let job = EncoderSpec::Bbit { b: 8, k: 16, d: 1 << 20, seed: 3 };
     let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 25, queue_depth: 2 });
     let path = tmp_path("corrupt");
-    let mut sink = CacheSink::create(&path, 8, 16, 1 << 20, 3).unwrap();
+    let mut sink = CacheSink::create(&path, &job).unwrap();
     pipe.run_sink(dataset_chunks(&ds, 25), &job, &mut sink).unwrap();
 
     let mut bytes = std::fs::read(&path).unwrap();
@@ -153,7 +155,7 @@ fn reorder_window_tracks_inflight_work_not_corpus_size() {
     // in flight with 4 workers + queue_depth 2 — a collector that buffered
     // until end-of-run (the old behavior) would peak at ~100
     let ds = corpus(1000, 0x9EAD);
-    let job = HashJob::Bbit { b: 4, k: 16, d: 1 << 20, seed: 7 };
+    let job = EncoderSpec::Bbit { b: 4, k: 16, d: 1 << 20, seed: 7 };
     let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 10, queue_depth: 2 });
     let (_, report) = pipe.run(dataset_chunks(&ds, 10), &job).unwrap();
     assert_eq!(report.chunks, 100);
