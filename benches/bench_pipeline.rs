@@ -1,18 +1,32 @@
 //! End-to-end pipeline throughput + ablations over the coordinator's
 //! tuning knobs (worker count, chunk size, queue depth) — the DESIGN.md
-//! §Perf L3 target is that hashing saturates the parse rate.
+//! §Perf L3 target is that hashing saturates the parse rate — plus the
+//! serving path: a resident model server driven over loopback by the
+//! crate's load generator (`serve::loadgen`), with the report dumped to
+//! `BENCH_serve.json`.
 //!
 //! Run: `cargo bench --bench bench_pipeline`
+//! One scenario group: `cargo bench --bench bench_pipeline -- serve`
+//! (any prefix of the scenario names: `pipeline`, `serve`)
+
+use std::time::Duration;
 
 use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
 use bbit_mh::data::expand::{expand_dataset, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::encode::EncoderSpec;
-use bbit_mh::solver::{SgdConfig, SgdLoss};
+use bbit_mh::serve::{loadgen, LoadgenConfig, ModelServer, ServeConfig};
+use bbit_mh::solver::{LinearModel, SavedModel, SgdConfig, SgdLoss};
 use bbit_mh::util::bench::Bench;
 
 fn main() {
+    // optional scenario filter (the args cargo passes after `--`)
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let should = |name: &str| match &filter {
+        None => true,
+        Some(f) => name.starts_with(f.as_str()),
+    };
     let base = CorpusGenerator::new(CorpusConfig {
         n_docs: 800,
         vocab: 2500,
@@ -28,6 +42,13 @@ fn main() {
     println!("corpus: {} docs, mean nnz {:.0}\n", ds.len(), ds.stats().nnz_mean);
     let job = EncoderSpec::Bbit { b: 8, k: 200, d: 1 << 30, seed: 11 };
     let mut b = Bench::quick();
+
+    if !should("pipeline") {
+        if should("serve") {
+            run_serve_scenario(&ds);
+        }
+        return;
+    }
 
     // worker scaling
     for workers in [1usize, 2, 4, bbit_mh::config::available_workers()] {
@@ -127,4 +148,63 @@ fn main() {
             pipe.run(dataset_chunks(&ds, 128), spec).unwrap().1.docs
         });
     }
+
+    if should("serve") {
+        run_serve_scenario(&ds);
+    }
+}
+
+/// The serving path: a resident model behind the micro-batched server,
+/// driven over loopback by `serve::loadgen` at two target rates.  The
+/// higher-rate report is dumped to `BENCH_serve.json` so the serving path
+/// gets the same longitudinal tracking as the hashing scenarios.
+fn run_serve_scenario(ds: &bbit_mh::data::SparseDataset) {
+    println!();
+    let spec = EncoderSpec::Oph { bins: 200, b: 8, seed: 11 };
+    let w: Vec<f32> = (0..spec.output_dim()).map(|j| (j as f32 * 0.173).sin()).collect();
+    let model = SavedModel::new(spec, LinearModel { w }).unwrap();
+    let model_path =
+        std::env::temp_dir().join(format!("bbit_bench_{}.bbmh", std::process::id()));
+    model.save(&model_path).unwrap();
+    let server = ModelServer::start(
+        &model_path,
+        ServeConfig {
+            scorer_workers: 2,
+            batch_max: 64,
+            batch_wait: Duration::from_micros(100),
+            queue_cap: 4096,
+            deadline: Duration::from_millis(100),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // score the same expanded documents the hashing scenarios preprocess
+    let docs: Vec<String> = (0..ds.len().min(256))
+        .map(|i| {
+            let mut line = String::from("+1");
+            for &t in ds.row(i).0 {
+                line.push_str(&format!(" {t}:1"));
+            }
+            line
+        })
+        .collect();
+    for qps in [1000.0, 4000.0] {
+        let report = loadgen::run(
+            server.local_addr(),
+            &LoadgenConfig {
+                qps,
+                duration: Duration::from_millis(800),
+                connections: 4,
+                docs: docs.clone(),
+            },
+        )
+        .unwrap();
+        println!("serve/loadgen qps_target={qps}: {}", report.summary());
+        if qps == 4000.0 {
+            std::fs::write("BENCH_serve.json", report.to_json() + "\n").ok();
+        }
+    }
+    println!("serve/shutdown-report:");
+    print!("{}", server.shutdown());
+    std::fs::remove_file(&model_path).ok();
 }

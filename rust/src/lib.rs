@@ -26,6 +26,7 @@
 //! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache |
 //! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec` |
 //! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink) + scheduler |
+//! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control and a load generator (the paper's "used in industry / search" request path) |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
 //!
@@ -53,7 +54,11 @@
 //!    streaming SGD trainer ([`solver::SgdStream`]) for as many
 //!    (solver, C, epoch) sweeps as needed;
 //! 3. `train --stream` skips the cache entirely: one pass, hash-and-train,
-//!    nothing materialized.
+//!    nothing materialized;
+//! 4. `serve --model m --port p` keeps the trained model resident behind a
+//!    micro-batched HTTP scoring endpoint ([`serve`]) — and because the
+//!    registry hot-reloads the model file, the cache→train loop retrains
+//!    into production without a restart.
 
 pub mod config;
 pub mod coordinator;
@@ -65,6 +70,7 @@ pub mod hashing;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod util;
 

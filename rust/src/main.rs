@@ -4,6 +4,9 @@
 //!   gen-data     generate the rcv1-like corpus (optionally expanded) as LibSVM
 //!   preprocess   stream a LibSVM file through the encoding pipeline
 //!   train        train + evaluate on an encoded dataset
+//!   classify     score raw documents (or a hashed cache) with a saved model
+//!   serve        keep a saved model resident behind a micro-batched HTTP
+//!                scoring endpoint with hot reload (the online request path)
 //!   experiments  regenerate a paper table/figure (or `all`)
 //!   runtime-info check the PJRT artifacts load and run
 //!
@@ -56,16 +59,28 @@ USAGE:
              [--train-frac 0.5] [--seed N] [--save-model FILE]
   bbit-mh train --cache FILE [--solver sgd|svm|lr] [--c 1.0] [--epochs 5]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda L]
-             [--eval] [--save-model FILE]
+             [--holdout FRAC] [--holdout-seed N] [--eval] [--save-model FILE]
              (multi-epoch replay of a hashed cache; the cache header
               records the encoder spec; sgd streams in O(dim) memory;
+              --holdout (sgd only) carves a deterministic FRAC held-out
+              split during replay and reports held-out accuracy/loss;
               --eval adds a train-accuracy pass over the cache)
   bbit-mh train --input FILE --stream [--encoder bbit|oph] [scheme flags]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
              [--seed N] [--save-model FILE]
              (one-pass hash-and-train: nothing materialized, prints progressive loss)
-  bbit-mh classify --model FILE --input FILE [--out FILE]
-             (the model file embeds its encoder spec — any scheme classifies)
+  bbit-mh classify --model FILE (--input FILE [--out FILE] [--chunk-size 256]
+             | --cache FILE)
+             (the model file embeds its encoder spec — any scheme classifies;
+              --input streams raw LibSVM in chunks, constant memory;
+              --cache reports aggregate accuracy/loss, specs must match)
+  bbit-mh serve --model FILE [--host 127.0.0.1] [--port 0] [--workers N]
+             [--batch-max 64] [--batch-wait-us 200] [--queue 1024]
+             [--deadline-ms 50] [--reload-poll-ms 200] [--idle-timeout-s 10]
+             (micro-batched HTTP scoring: POST /score LibSVM lines,
+              GET /metrics, GET /healthz; bounded queue sheds with 503;
+              the model file is watched and hot-reloaded; port 0 picks an
+              ephemeral port; Enter or EOF on stdin stops the server)
   bbit-mh experiments ID [--scale tiny|small|paper] [--results DIR]
              (IDs: table1 fig1 fig3 fig5 fig6 fig7 fig8 table2 variance fig9 all)
   bbit-mh runtime-info [--artifacts DIR]
@@ -142,6 +157,7 @@ fn run(argv: &[String]) -> Result<()> {
         "preprocess" => cmd_preprocess(&args),
         "train" => cmd_train(&args),
         "classify" => cmd_classify(&args),
+        "serve" => cmd_serve(&args),
         "experiments" => cmd_experiments(&args),
         "runtime-info" => cmd_runtime_info(&args),
         "help" | "--help" | "-h" => {
@@ -336,6 +352,14 @@ fn cache_accuracy(path: &str, model: &LinearModel) -> Result<f64> {
 /// records the encoder spec, so the trained model carries it too.
 fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
     let solver = args.get("solver", "sgd".to_string())?;
+    // the held-out split lives in the streaming replay path; silently
+    // training the batch solvers on all rows would report train-set
+    // numbers the user believes are validated
+    if args.has("holdout") && solver != "sgd" {
+        return Err(Error::InvalidArg(format!(
+            "--holdout is only implemented for --solver sgd (cache replay), got --solver {solver}"
+        )));
+    }
     let c: f64 = args.get("c", 1.0)?;
     let meta = CacheReader::open(cache)?.meta();
     eprintln!("cache {cache}: {} docs, encoder {:?}", meta.n, meta.spec);
@@ -351,7 +375,24 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
                 epochs: args.get("epochs", 5usize)?,
                 batch: args.get("batch", 256usize)?,
             };
-            let (model, stats) = bbit_mh::solver::train_from_cache(cache, &cfg)?;
+            // --holdout FRAC: exclude a deterministic split from every
+            // epoch and report generalization on it (one extra cache pass)
+            let (model, stats, held) = match args.flags.get("holdout") {
+                Some(v) => {
+                    let frac: f64 = v.parse().map_err(|_| {
+                        Error::InvalidArg(format!("bad --holdout value {v:?}"))
+                    })?;
+                    let salt: u64 = args.get("holdout-seed", 0x4001D)?;
+                    let (m, s, h) = bbit_mh::solver::train_from_cache_holdout(
+                        cache, &cfg, frac, salt,
+                    )?;
+                    (m, s, Some(h))
+                }
+                None => {
+                    let (m, s) = bbit_mh::solver::train_from_cache(cache, &cfg)?;
+                    (m, s, None)
+                }
+            };
             // the accuracy pass re-reads the whole cache — opt-in so the
             // model-search loop pays epochs reads, not epochs + 1
             let acc = if args.has("eval") {
@@ -359,9 +400,19 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
             } else {
                 String::new()
             };
+            let held = match held {
+                Some(h) => format!(
+                    ", held-out acc {:.3}% / loss {:.4} ({} of {} rows held out)",
+                    100.0 * h.accuracy,
+                    h.mean_loss,
+                    h.holdout_rows,
+                    h.holdout_rows + h.train_rows,
+                ),
+                None => String::new(),
+            };
             println!(
-                "solver=sgd method=cache epochs={}: progressive loss {:.4}{}, {:.3}s",
-                stats.iterations, stats.objective, acc, stats.train_seconds,
+                "solver=sgd method=cache epochs={}: progressive loss {:.4}{}{}, {:.3}s",
+                stats.iterations, stats.objective, acc, held, stats.train_seconds,
             );
             model
         }
@@ -464,6 +515,17 @@ fn fit_and_save<F: FeatureMatrix>(
 fn cmd_train(args: &Args) -> Result<()> {
     if let Some(cache) = args.flags.get("cache") {
         return cmd_train_cache(args, cache.as_str());
+    }
+    // the held-out split is carved during cache replay; the one-pass
+    // stream and the in-memory paths have their own eval story
+    // (progressive loss / --train-frac) — ignoring the flag would report
+    // numbers the user believes are validated
+    if args.has("holdout") {
+        return Err(Error::InvalidArg(
+            "--holdout applies to train --cache (use --train-frac for the in-memory \
+             split, progressive loss for --stream)"
+                .into(),
+        ));
     }
     if args.has("stream") {
         return cmd_train_stream(args);
@@ -581,13 +643,42 @@ fn print_outcome(
     Ok(())
 }
 
-/// Score raw LibSVM documents with a saved model — the L3 "request path":
-/// parse → encode (whatever scheme the model's spec records) → margin, no
-/// python, no retraining.  The encoder is drawn once at model load.
+/// Score raw LibSVM documents (or a hashed cache) with a saved model —
+/// the batch form of the request path: parse → encode (whatever scheme
+/// the model's spec records) → margin, no python, no retraining.  The
+/// encoder is drawn once at model load; raw input streams through the
+/// chunked LibSVM reader in constant memory, like `preprocess`.  For the
+/// resident, online form of this path see `serve`.
 fn cmd_classify(args: &Args) -> Result<()> {
     let model_path = args.required("model")?;
-    let input = args.required("input")?;
+    // flag validation before any IO, so misuse fails fast and typed
+    if args.has("cache") && args.has("out") {
+        return Err(Error::InvalidArg(
+            "--out writes per-document predictions and applies to --input; \
+             --cache reports aggregate accuracy/loss only"
+                .into(),
+        ));
+    }
+    let chunk_size: usize = args.get("chunk-size", 256)?;
+    if chunk_size == 0 {
+        return Err(Error::InvalidArg("--chunk-size must be >= 1".into()));
+    }
     let saved = bbit_mh::solver::SavedModel::load(model_path)?;
+    if let Some(cache) = args.flags.get("cache") {
+        // pre-hashed input: stream the cache through the final weights.
+        // A cache whose header spec differs from the model's is a typed
+        // error (codes from one hash family mean nothing under another's
+        // weights — and a dim mismatch would index out of bounds).
+        let eval = bbit_mh::solver::eval_from_cache(cache, &saved, sgd_loss_flag(args)?)?;
+        println!(
+            "classified {} cached rows: accuracy {:.3}%, mean loss {:.4}",
+            eval.rows,
+            100.0 * eval.accuracy,
+            eval.mean_loss,
+        );
+        return Ok(());
+    }
+    let input = args.required("input")?;
     let mut scratch = saved.scratch();
     let mut out: Box<dyn std::io::Write> = match args.flags.get("out") {
         Some(p) => Box::new(std::io::BufWriter::new(std::fs::File::create(p)?)),
@@ -595,14 +686,15 @@ fn cmd_classify(args: &Args) -> Result<()> {
     };
     let (mut n, mut correct) = (0usize, 0usize);
     let t0 = std::time::Instant::now();
-    for ex in LibsvmReader::open(input)?.binary() {
-        let ex = ex?;
-        let margin = saved.margin(&ex.indices, &mut scratch);
-        let pred: i8 = if margin >= 0.0 { 1 } else { -1 };
-        writeln!(out, "{pred} {margin:.6}")?;
-        n += 1;
-        if pred == ex.label {
-            correct += 1;
+    for chunk in ChunkedReader::new(LibsvmReader::open(input)?.binary(), chunk_size) {
+        for ex in &chunk? {
+            let margin = saved.margin(&ex.indices, &mut scratch);
+            let pred: i8 = if margin >= 0.0 { 1 } else { -1 };
+            writeln!(out, "{pred} {margin:.6}")?;
+            n += 1;
+            if pred == ex.label {
+                correct += 1;
+            }
         }
     }
     out.flush()?;
@@ -612,6 +704,37 @@ fn cmd_classify(args: &Args) -> Result<()> {
         n as f64 / secs.max(1e-9),
         100.0 * correct as f64 / n.max(1) as f64
     );
+    Ok(())
+}
+
+/// `serve --model FILE`: the online request path — load the model once,
+/// keep it resident behind the micro-batched HTTP scoring endpoint
+/// ([`bbit_mh::serve`]), hot-reload it when the file changes, and print
+/// the metrics report on shutdown (Enter / EOF on stdin).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::time::Duration;
+    let model = args.required("model")?;
+    let cfg = bbit_mh::serve::ServeConfig {
+        host: args.get("host", "127.0.0.1".to_string())?,
+        port: args.get("port", 0u16)?,
+        scorer_workers: args.get("workers", bbit_mh::config::available_workers())?,
+        batch_max: args.get("batch-max", 64usize)?,
+        batch_wait: Duration::from_micros(args.get("batch-wait-us", 200u64)?),
+        queue_cap: args.get("queue", 1024usize)?,
+        deadline: Duration::from_millis(args.get("deadline-ms", 50u64)?),
+        reload_poll: Duration::from_millis(args.get("reload-poll-ms", 200u64)?),
+        idle_timeout: Duration::from_secs(args.get("idle-timeout-s", 10u64)?),
+    };
+    let server = bbit_mh::serve::ModelServer::start(model, cfg)?;
+    eprintln!(
+        "serving {model} at http://{} (POST /score, GET /metrics, GET /healthz); \
+         watching the model file for hot reload; press Enter (or close stdin) to stop",
+        server.local_addr(),
+    );
+    let mut line = String::new();
+    let _ = std::io::stdin().read_line(&mut line);
+    eprintln!("--- shutdown report ---");
+    eprint!("{}", server.shutdown());
     Ok(())
 }
 
@@ -686,6 +809,38 @@ mod tests {
     fn experiments_rejects_unknown_scale_and_id() {
         assert!(run(&argv(&["experiments", "table1", "--scale", "galactic"])).is_err());
         assert!(run(&argv(&["experiments", "figZZ", "--scale", "tiny"])).is_err());
+    }
+
+    #[test]
+    fn classify_flag_conflicts_are_typed_errors() {
+        // rejected before any file IO — bogus paths never get opened
+        let err = run(&argv(&["classify", "--model", "m", "--cache", "c", "--out", "o"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--out"), "{err}");
+        let err = run(&argv(&[
+            "classify", "--model", "m", "--input", "f", "--chunk-size", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("chunk-size"), "{err}");
+    }
+
+    #[test]
+    fn holdout_requires_the_sgd_cache_path() {
+        let err = run(&argv(&[
+            "train", "--cache", "c", "--solver", "svm", "--holdout", "0.2",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("holdout"), "{err}");
+        // silently training on all rows would masquerade as validation:
+        // the stream and in-memory paths reject the flag too
+        let err = run(&argv(&[
+            "train", "--input", "f", "--stream", "--holdout", "0.2",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("holdout"), "{err}");
+        let err =
+            run(&argv(&["train", "--input", "f", "--holdout", "0.2"])).unwrap_err();
+        assert!(err.to_string().contains("holdout"), "{err}");
     }
 }
 

@@ -115,6 +115,7 @@ impl Histogram {
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
     timers: Mutex<BTreeMap<String, std::sync::Arc<Timer>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
 impl Registry {
@@ -136,6 +137,15 @@ impl Registry {
             .clone()
     }
 
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
     /// Render a two-column summary of everything observed.
     pub fn summary(&self) -> String {
         let mut out = String::new();
@@ -148,6 +158,14 @@ impl Registry {
                 t.seconds(),
                 t.count(),
                 t.mean_seconds() * 1e3,
+            ));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name:<40} {} obs (p50 ≤{} p99 ≤{})\n",
+                h.count(),
+                h.quantile(0.5),
+                h.quantile(0.99),
             ));
         }
         out
@@ -183,6 +201,19 @@ mod tests {
         let med = h.quantile(0.5);
         assert!((256..=1024).contains(&med), "{med}");
         assert!(h.quantile(1.0) >= 512);
+    }
+
+    #[test]
+    fn registry_histograms_share_and_summarize() {
+        let reg = Registry::default();
+        let h = reg.histogram("serve.batch");
+        for v in [1u64, 2, 4, 100] {
+            h.observe(v);
+        }
+        // the registry hands back the same histogram for the same name
+        assert_eq!(reg.histogram("serve.batch").count(), 4);
+        let s = reg.summary();
+        assert!(s.contains("serve.batch") && s.contains("4 obs"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! The micro-batching request queue: admission control at the front,
+//! batch formation at the back.
+//!
+//! Connection handlers [`try_enqueue`](Batcher::try_enqueue) one
+//! [`ScoreJob`] per document; scorer workers call
+//! [`next_batch`](Batcher::next_batch), which blocks for the first job and
+//! then keeps collecting until `batch_max` jobs are in hand or
+//! `batch_wait` has elapsed — the classic latency/throughput dial
+//! (batch_wait=0 degenerates to per-request scoring, large values to full
+//! batches).  Margins flow back through each job's single-slot response
+//! channel, so a worker never blocks on a slow or departed client.
+//!
+//! Admission control is structural, mirroring the pipeline's
+//! admission-credit loop (`coordinator/pipeline.rs`): the queue is
+//! hard-bounded at `cap`, and a full queue *rejects* (`try_enqueue`
+//! returns the job back, the handler answers `503 Retry-After`) instead of
+//! blocking — under overload the server sheds load in O(1) rather than
+//! accumulating an unbounded backlog whose every entry would miss its
+//! deadline anyway.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::SyncSender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What the scorer sends back for one document.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScoreOutcome {
+    /// The margin, plus the epoch of the model that produced it (bumped on
+    /// every hot reload — lets clients observe swaps).
+    Margin { margin: f32, epoch: u64 },
+    /// The job's deadline passed while it sat in the queue; it was never
+    /// scored.
+    Expired,
+}
+
+/// One admitted scoring request.
+pub struct ScoreJob {
+    /// Sorted, deduplicated feature indices of the raw document.
+    pub indices: Vec<u32>,
+    /// When the job entered the queue (queue-wait accounting).
+    pub enqueued: Instant,
+    /// Absolute deadline; a worker drops the job unscored past this.
+    pub deadline: Instant,
+    /// Single-slot rendezvous back to the connection handler.  Capacity 1
+    /// and exactly one send per job, so the worker never blocks here even
+    /// if the handler has timed out and gone away (the send just fails).
+    pub resp: SyncSender<ScoreOutcome>,
+}
+
+struct QueueState {
+    q: VecDeque<ScoreJob>,
+    closed: bool,
+}
+
+/// Bounded micro-batching queue (see module docs).
+pub struct Batcher {
+    cap: usize,
+    state: Mutex<QueueState>,
+    notify: Condvar,
+}
+
+impl Batcher {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "admission queue capacity must be positive");
+        Batcher {
+            cap,
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+        }
+    }
+
+    /// Admit one job, or hand it back if the queue is full or the server
+    /// is shutting down — the caller turns `Err` into `503 Retry-After`.
+    /// Never blocks.
+    pub fn try_enqueue(&self, job: ScoreJob) -> std::result::Result<(), ScoreJob> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.q.len() >= self.cap {
+            return Err(job);
+        }
+        st.q.push_back(job);
+        drop(st);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Collect the next micro-batch into `out` (cleared first): block for
+    /// the first job, then keep taking jobs until `max` are in hand or
+    /// `wait` has elapsed since the first one.  Returns `false` when the
+    /// batcher is closed and drained — the worker's signal to exit.
+    pub fn next_batch(&self, max: usize, wait: Duration, out: &mut Vec<ScoreJob>) -> bool {
+        out.clear();
+        debug_assert!(max > 0);
+        let mut st = self.state.lock().unwrap();
+        // phase 1: block until a first job (or close)
+        loop {
+            if let Some(job) = st.q.pop_front() {
+                out.push(job);
+                break;
+            }
+            if st.closed {
+                return false;
+            }
+            st = self.notify.wait(st).unwrap();
+        }
+        // phase 2: fill up to `max` within the batching window
+        let window_ends = Instant::now() + wait;
+        while out.len() < max {
+            if let Some(job) = st.q.pop_front() {
+                out.push(job);
+                continue;
+            }
+            if st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= window_ends {
+                break;
+            }
+            let (guard, timeout) = self.notify.wait_timeout(st, window_ends - now).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                // take whatever raced in with the timeout, then ship
+                while out.len() < max {
+                    match st.q.pop_front() {
+                        Some(job) => out.push(job),
+                        None => break,
+                    }
+                }
+                break;
+            }
+        }
+        true
+    }
+
+    /// Jobs currently waiting (observability; racy by nature).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    /// Stop admitting; wake every worker so they drain and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+
+    fn job(idx: u32) -> (ScoreJob, std::sync::mpsc::Receiver<ScoreOutcome>) {
+        let (tx, rx) = sync_channel(1);
+        let now = Instant::now();
+        (
+            ScoreJob {
+                indices: vec![idx],
+                enqueued: now,
+                deadline: now + Duration::from_secs(5),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn full_queue_sheds_instead_of_blocking() {
+        let b = Batcher::new(2);
+        let (j1, _r1) = job(1);
+        let (j2, _r2) = job(2);
+        let (j3, _r3) = job(3);
+        assert!(b.try_enqueue(j1).is_ok());
+        assert!(b.try_enqueue(j2).is_ok());
+        // third must come straight back — the hard admission bound
+        let back = b.try_enqueue(j3).unwrap_err();
+        assert_eq!(back.indices, vec![3]);
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn batch_respects_max_and_preserves_fifo_order() {
+        let b = Batcher::new(16);
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (j, r) = job(i);
+            b.try_enqueue(j).unwrap();
+            rxs.push(r);
+        }
+        let mut out = Vec::new();
+        assert!(b.next_batch(3, Duration::ZERO, &mut out));
+        assert_eq!(out.iter().map(|j| j.indices[0]).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(b.next_batch(3, Duration::ZERO, &mut out));
+        assert_eq!(out.iter().map(|j| j.indices[0]).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers_and_drains() {
+        let b = Arc::new(Batcher::new(4));
+        let (j, _r) = job(9);
+        b.try_enqueue(j).unwrap();
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut out = Vec::new();
+                let mut batches = 0;
+                while b.next_batch(8, Duration::from_micros(50), &mut out) {
+                    batches += out.len();
+                }
+                batches
+            })
+        };
+        // give the worker a moment to take the queued job and block again
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert_eq!(worker.join().unwrap(), 1);
+        // post-close admissions shed
+        let (j, _r) = job(10);
+        assert!(b.try_enqueue(j).is_err());
+    }
+
+    #[test]
+    fn batching_window_collects_late_arrivals() {
+        let b = Arc::new(Batcher::new(16));
+        let producer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut rxs = Vec::new();
+                for i in 0..4 {
+                    let (j, r) = job(i);
+                    b.try_enqueue(j).unwrap();
+                    rxs.push(r);
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                rxs
+            })
+        };
+        let mut out = Vec::new();
+        assert!(b.next_batch(4, Duration::from_millis(500), &mut out));
+        let _rxs = producer.join().unwrap();
+        // first job unblocks the worker; the window should sweep up the
+        // stragglers into one batch (all 4 — the window far exceeds the
+        // 2ms production gaps)
+        assert_eq!(out.len(), 4);
+    }
+}

@@ -1,0 +1,264 @@
+//! Minimal HTTP/1.1 framing for the model server and its load generator.
+//!
+//! The crate's dependency policy (std + `thiserror` + `xla` only — no
+//! hyper, no tokio) means the serving layer carries its own wire format.
+//! This module is deliberately tiny: request/response heads are CRLF
+//! lines, bodies are `Content-Length`-framed (no chunked transfer
+//! encoding, no trailers), connections default to keep-alive as HTTP/1.1
+//! prescribes.  That subset is exactly what the server
+//! ([`serve::server`](crate::serve::server)), the load generator
+//! ([`serve::loadgen`](crate::serve::loadgen)) and the e2e tests speak to
+//! each other; it is not a general-purpose HTTP implementation.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::{Error, Result};
+
+/// Upper bound on an accepted body (request or response).  Scoring bodies
+/// are a few KB of LibSVM lines; anything near this limit is abuse or a
+/// framing bug, and rejecting it keeps a malformed client from ballooning
+/// server memory.
+pub const MAX_BODY_BYTES: u64 = 16 * 1024 * 1024;
+/// Upper bound on the head (request/status line + headers).
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+/// One parsed request head + body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `true` for `HTTP/1.0` (implies close unless keep-alive requested).
+    pub http10: bool,
+    /// Lower-cased header names, trimmed values, in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header(&self.headers, name)
+    }
+
+    /// Whether the client asked (or defaulted) to keep the connection open.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => !self.http10, // HTTP/1.1 default: keep-alive
+        }
+    }
+}
+
+/// One parsed response head + body (the load-generator side).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header(&self.headers, name)
+    }
+
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    let name = name.to_ascii_lowercase();
+    headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+}
+
+/// Read one CRLF (or bare-LF) line, enforcing the head budget.
+fn read_line<R: BufRead>(r: &mut R, budget: &mut usize) -> Result<Option<String>> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None); // clean EOF
+    }
+    *budget = budget.checked_sub(n).ok_or_else(|| {
+        Error::InvalidArg("http head exceeds size limit".into())
+    })?;
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+/// Headers + optional Content-Length body, shared by both directions.
+fn read_headers_and_body<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+) -> Result<(Vec<(String, String)>, Vec<u8>)> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, budget)?
+            .ok_or_else(|| Error::InvalidArg("http: eof inside headers".into()))?;
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| Error::InvalidArg(format!("http: bad header line {line:?}")))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let len: u64 = match header(&headers, "content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::InvalidArg(format!("http: bad content-length {v:?}")))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(Error::InvalidArg(format!(
+            "http: body of {len} bytes exceeds the {MAX_BODY_BYTES} limit"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok((headers, body))
+}
+
+/// Read one request.  `Ok(None)` on clean EOF before any bytes (the client
+/// closed a keep-alive connection between requests).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
+    let mut budget = MAX_HEAD_BYTES;
+    let Some(line) = read_line(r, &mut budget)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_ascii_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
+        _ => return Err(Error::InvalidArg(format!("http: bad request line {line:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::InvalidArg(format!("http: unsupported version {version:?}")));
+    }
+    let http10 = version == "HTTP/1.0";
+    let (headers, body) = read_headers_and_body(r, &mut budget)?;
+    Ok(Some(Request { method, path, http10, headers, body }))
+}
+
+/// Read one response (load-generator side).
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response> {
+    let mut budget = MAX_HEAD_BYTES;
+    let line = read_line(r, &mut budget)?
+        .ok_or_else(|| Error::InvalidArg("http: eof before status line".into()))?;
+    // "HTTP/1.1 200 OK"
+    let mut parts = line.split_ascii_whitespace();
+    let (version, status) = match (parts.next(), parts.next()) {
+        (Some(v), Some(s)) => (v, s),
+        _ => return Err(Error::InvalidArg(format!("http: bad status line {line:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::InvalidArg(format!("http: unsupported version {version:?}")));
+    }
+    let status: u16 = status
+        .parse()
+        .map_err(|_| Error::InvalidArg(format!("http: bad status code in {line:?}")))?;
+    let (headers, body) = read_headers_and_body(r, &mut budget)?;
+    Ok(Response { status, headers, body })
+}
+
+/// Write one response with automatic `Content-Length` framing.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
+    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+    write!(w, "Content-Type: text/plain; charset=utf-8\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "\r\n")?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one `POST` request with a text body (load-generator side).
+pub fn write_post<W: Write>(w: &mut W, path: &str, body: &[u8]) -> Result<()> {
+    write!(w, "POST {path} HTTP/1.1\r\n")?;
+    write!(w, "Host: bbit-mh\r\n")?;
+    write!(w, "Content-Type: text/plain; charset=utf-8\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: keep-alive\r\n\r\n")?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one `GET` request (load-generator / probe side).
+pub fn write_get<W: Write>(w: &mut W, path: &str) -> Result<()> {
+    write!(w, "GET {path} HTTP/1.1\r\nHost: bbit-mh\r\nConnection: keep-alive\r\n\r\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn request_roundtrip_with_body() {
+        let mut wire = Vec::new();
+        write_post(&mut wire, "/score", b"+1 3:1 9:1\n").unwrap();
+        let req = read_request(&mut BufReader::new(&wire[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/score");
+        assert!(!req.http10);
+        assert!(req.keep_alive());
+        assert_eq!(req.body, b"+1 3:1 9:1\n");
+        assert_eq!(req.header("content-length").unwrap(), "11");
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 503, "Service Unavailable", &[("Retry-After", "1".into())], b"shed\n")
+            .unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.header("retry-after").unwrap(), "1");
+        assert_eq!(resp.body, b"shed\n");
+    }
+
+    #[test]
+    fn keep_alive_defaults_follow_the_version() {
+        let wire = b"GET / HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut BufReader::new(&wire[..])).unwrap().unwrap();
+        assert!(req.keep_alive());
+        let wire = b"GET / HTTP/1.0\r\n\r\n";
+        let req = read_request(&mut BufReader::new(&wire[..])).unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let wire = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = read_request(&mut BufReader::new(&wire[..])).unwrap().unwrap();
+        assert!(!req.keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_garbage_is_an_error() {
+        assert!(read_request(&mut BufReader::new(&b""[..])).unwrap().is_none());
+        assert!(read_request(&mut BufReader::new(&b"not http at all\r\n\r\n"[..])).is_err());
+        assert!(read_request(&mut BufReader::new(&b"GET / SPDY/9\r\n\r\n"[..])).is_err());
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_before_allocation() {
+        let wire = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(read_request(&mut BufReader::new(wire.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn truncated_body_is_an_error() {
+        let wire = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort";
+        assert!(read_request(&mut BufReader::new(&wire[..])).is_err());
+    }
+}

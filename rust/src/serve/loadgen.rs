@@ -1,0 +1,288 @@
+//! Loopback load generator for the model server.
+//!
+//! Drives `POST /score` at a target aggregate QPS from a small pool of
+//! keep-alive connections and reports what the serving path actually
+//! delivered: achieved QPS, outcome counts (ok / shed / expired / error)
+//! and exact latency percentiles (every sample kept and sorted — no
+//! histogram bucketing, this is the measurement side).  Pacing is
+//! open-loop per connection (`next_fire += interval`, sleep until then):
+//! a slow response delays subsequent sends on that connection but the
+//! schedule catches up, so sustained server slowness shows up as missed
+//! QPS *and* fat tails rather than being silently absorbed — the usual
+//! closed-loop coordinated-omission trap.
+//!
+//! Wired into `benches/bench_pipeline.rs` as the `serve` scenario (which
+//! also dumps `BENCH_serve.json`) and used by the e2e tests; `qps` is the
+//! aggregate target across all connections.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::serve::http;
+use crate::{Error, Result};
+
+/// Load profile.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Target aggregate requests/second across all connections.
+    pub qps: f64,
+    /// How long to drive load.
+    pub duration: Duration,
+    /// Concurrent keep-alive connections (client threads).
+    pub connections: usize,
+    /// Document pool, one LibSVM line per entry, cycled round-robin.
+    pub docs: Vec<String>,
+}
+
+/// What the run delivered.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub errors: u64,
+    pub wall_seconds: f64,
+    pub achieved_qps: f64,
+    /// Latency percentiles over successful responses, microseconds.
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LoadgenReport {
+    /// One-line human summary (the bench scenario prints this).
+    pub fn summary(&self) -> String {
+        format!(
+            "sent {} in {:.2}s ({:.0} qps achieved): ok {} shed {} expired {} errors {}; \
+             latency p50 {}µs p95 {}µs p99 {}µs max {}µs",
+            self.sent,
+            self.wall_seconds,
+            self.achieved_qps,
+            self.ok,
+            self.shed,
+            self.expired,
+            self.errors,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.max_us,
+        )
+    }
+
+    /// Hand-rolled JSON object (the crate has no serde; BENCH_*.json
+    /// tracking for the serving path).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"sent\":{},\"ok\":{},\"shed\":{},\"expired\":{},\"errors\":{},\
+             \"wall_seconds\":{:.4},\"achieved_qps\":{:.1},\
+             \"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{}}}",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.expired,
+            self.errors,
+            self.wall_seconds,
+            self.achieved_qps,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.max_us,
+        )
+    }
+}
+
+struct ThreadTally {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    expired: u64,
+    errors: u64,
+    latencies_us: Vec<u64>,
+}
+
+/// Exact percentile over a sorted sample (nearest-rank on n−1).
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Drive the server at `addr`; blocks for `cfg.duration` (plus drain).
+pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.connections == 0 || cfg.docs.is_empty() || cfg.qps <= 0.0 || cfg.qps.is_nan() {
+        return Err(Error::InvalidArg(
+            "loadgen: needs connections > 0, qps > 0 and a non-empty doc pool".into(),
+        ));
+    }
+    let interval = Duration::from_secs_f64(cfg.connections as f64 / cfg.qps);
+    let wall0 = Instant::now();
+    let tallies: Vec<ThreadTally> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(cfg.connections);
+        for t in 0..cfg.connections {
+            handles.push(scope.spawn(move || drive_one(addr, cfg, t, interval)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen thread panicked"))
+            .collect()
+    });
+    let wall_seconds = wall0.elapsed().as_secs_f64();
+
+    let mut report = LoadgenReport { wall_seconds, ..Default::default() };
+    let mut lat: Vec<u64> = Vec::new();
+    for t in tallies {
+        report.sent += t.sent;
+        report.ok += t.ok;
+        report.shed += t.shed;
+        report.expired += t.expired;
+        report.errors += t.errors;
+        lat.extend(t.latencies_us);
+    }
+    lat.sort_unstable();
+    report.achieved_qps = report.sent as f64 / wall_seconds.max(1e-9);
+    report.p50_us = percentile(&lat, 0.50);
+    report.p95_us = percentile(&lat, 0.95);
+    report.p99_us = percentile(&lat, 0.99);
+    report.max_us = lat.last().copied().unwrap_or(0);
+    Ok(report)
+}
+
+/// One connection's paced request loop.
+fn drive_one(
+    addr: SocketAddr,
+    cfg: &LoadgenConfig,
+    thread_idx: usize,
+    interval: Duration,
+) -> ThreadTally {
+    let mut tally = ThreadTally {
+        sent: 0,
+        ok: 0,
+        shed: 0,
+        expired: 0,
+        errors: 0,
+        latencies_us: Vec::new(),
+    };
+    let connect = || -> Option<(TcpStream, BufReader<TcpStream>)> {
+        let stream = TcpStream::connect(addr).ok()?;
+        stream.set_nodelay(true).ok()?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .ok()?;
+        let reader = BufReader::new(stream.try_clone().ok()?);
+        Some((stream, reader))
+    };
+    let Some((mut stream, mut reader)) = connect() else {
+        tally.errors += 1;
+        return tally;
+    };
+    let start = Instant::now();
+    // stagger thread start phases so the aggregate is smooth, not bursty
+    let mut next_fire = start + interval.mul_f64(thread_idx as f64 / cfg.connections as f64);
+    let mut doc_idx = thread_idx; // decorrelate doc choice across threads
+    while start.elapsed() < cfg.duration {
+        let now = Instant::now();
+        if next_fire > now {
+            std::thread::sleep(next_fire - now);
+        }
+        next_fire += interval;
+        let doc = &cfg.docs[doc_idx % cfg.docs.len()];
+        doc_idx += 1;
+        let mut body = Vec::with_capacity(doc.len() + 1);
+        body.extend_from_slice(doc.as_bytes());
+        body.push(b'\n');
+        tally.sent += 1;
+        let t0 = Instant::now();
+        let resp = http::write_post(&mut stream, "/score", &body)
+            .and_then(|()| http::read_response(&mut reader));
+        match resp {
+            Ok(r) => match r.status {
+                200 => {
+                    tally.ok += 1;
+                    tally.latencies_us.push(t0.elapsed().as_micros() as u64);
+                }
+                503 => tally.shed += 1,
+                504 => tally.expired += 1,
+                _ => tally.errors += 1,
+            },
+            Err(_) => {
+                tally.errors += 1;
+                // the server (or a timeout) dropped us — reconnect and
+                // carry on with the schedule
+                match connect() {
+                    Some((s, r)) => {
+                        stream = s;
+                        reader = r;
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+    tally
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 0.5), 51); // rank round(0.5*99)=50 → v[50]
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn config_validation() {
+        let bad = LoadgenConfig {
+            qps: 0.0,
+            duration: Duration::from_millis(1),
+            connections: 1,
+            docs: vec!["+1 1:1".into()],
+        };
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        assert!(run(addr, &bad).is_err());
+        let bad = LoadgenConfig {
+            qps: 10.0,
+            duration: Duration::from_millis(1),
+            connections: 0,
+            docs: vec!["+1 1:1".into()],
+        };
+        assert!(run(addr, &bad).is_err());
+        let bad = LoadgenConfig {
+            qps: 10.0,
+            duration: Duration::from_millis(1),
+            connections: 1,
+            docs: vec![],
+        };
+        assert!(run(addr, &bad).is_err());
+    }
+
+    #[test]
+    fn json_report_is_well_formed_enough() {
+        let r = LoadgenReport {
+            sent: 10,
+            ok: 9,
+            shed: 1,
+            wall_seconds: 1.5,
+            achieved_qps: 6.7,
+            p50_us: 120,
+            p95_us: 300,
+            p99_us: 400,
+            max_us: 500,
+            ..Default::default()
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"sent\":10") && j.contains("\"p99_us\":400"));
+        assert!(r.summary().contains("p99 400µs"));
+    }
+}

@@ -1,0 +1,42 @@
+//! The online scoring subsystem — the request path the paper's closing
+//! argument points at ("b-bit minwise hashing has been widely used in
+//! industry ... in the context of search"): keep one trained model
+//! resident and serve margins over raw documents at traffic, instead of
+//! the one-shot `classify` CLI's load-score-exit loop.
+//!
+//! Four cooperating pieces, each its own module:
+//!
+//! - [`server`] — a dependency-free TCP/HTTP-1.1 front end
+//!   ([`ModelServer`]): `POST /score` LibSVM lines, `GET /metrics`,
+//!   `GET /healthz`; thread-per-connection with keep-alive.
+//! - [`batcher`] — the micro-batching admission queue ([`Batcher`]):
+//!   bounded (overload sheds with `503 Retry-After`, it never queues
+//!   unboundedly), with scorer workers draining up to `batch_max`
+//!   documents per `batch_wait` window and fanning margins back through
+//!   per-job channels.
+//! - [`registry`] — epoch-versioned hot reload ([`ModelRegistry`]): an
+//!   `Arc<SavedModel>` swap driven by watching the model file, so the
+//!   cache→train loop's retrained models go live without dropping a
+//!   connection.
+//! - [`loadgen`] — the measurement side: a paced loopback load generator
+//!   reporting achieved QPS and exact latency percentiles (the `serve`
+//!   scenario of `benches/bench_pipeline.rs`).
+//!
+//! Scoring reuses the [`FeatureEncoder`](crate::encode::encoder) seam end
+//! to end: the server is scheme-agnostic because
+//! [`SavedModel::margin`](crate::solver::SavedModel::margin) is, and each
+//! scorer worker keeps one `EncodeScratch` per model epoch — the same
+//! buffer-reuse discipline as the offline classify path.
+//!
+//! CLI: `bbit-mh serve --model m --port p` (see `main.rs`).
+
+pub mod batcher;
+pub mod http;
+pub mod loadgen;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{Batcher, ScoreJob, ScoreOutcome};
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use registry::{EpochModel, ModelRegistry};
+pub use server::{ModelServer, ServeConfig, ServeMetrics};

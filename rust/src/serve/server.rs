@@ -1,0 +1,536 @@
+//! The micro-batched model server.
+//!
+//! Thread topology (all std, no async runtime — consistent with the
+//! pipeline in `coordinator/pipeline.rs`):
+//!
+//! ```text
+//!   accept ──spawn──▶ conn handler×N ──try_enqueue──▶ Batcher ──▶ scorer×W
+//!                         ▲                  (bounded:     (micro-batch:
+//!                         │                   503 on full)  batch_max /
+//!                         └──────── margins via per-job ◀── batch_wait)
+//!                                   single-slot channels
+//!   watcher: polls the model file, swaps Arc<SavedModel>, bumps epoch
+//! ```
+//!
+//! Routes:
+//! - `POST /score` — body: LibSVM lines (label optional, ignored), one
+//!   document per line; response: `<pred> <margin>` per document, margins
+//!   printed with `f32`'s round-tripping `Display`, plus an
+//!   `X-Model-Epoch` header.  `503 Retry-After: 1` when admission sheds,
+//!   `504` when the per-request deadline expires, `400` on parse errors.
+//! - `GET /metrics` — counter/histogram exposition ([`ServeMetrics`]).
+//! - `GET /healthz` — liveness + current model epoch/spec.
+//!
+//! Admission control, batching and hot reload live in their own modules
+//! ([`batcher`](crate::serve::batcher), [`registry`](crate::serve::registry));
+//! this one owns the sockets, the HTTP routing and the thread lifecycle.
+//! Connection handling is thread-per-connection: acceptable because the
+//! load generator and real deployments both use keep-alive connection
+//! pools (connections ≈ clients, not requests), and the *request* path is
+//! guarded by the bounded queue regardless of connection count.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::{Counter, Histogram};
+use crate::serve::batcher::{Batcher, ScoreJob, ScoreOutcome};
+use crate::serve::http;
+use crate::serve::registry::ModelRegistry;
+use crate::{Error, Result};
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind host (loopback by default; expose deliberately).
+    pub host: String,
+    /// Bind port; 0 asks the OS for an ephemeral port (tests, CI).
+    pub port: u16,
+    /// Scorer worker threads draining the batch queue.
+    pub scorer_workers: usize,
+    /// Largest micro-batch a scorer takes in one drain.
+    pub batch_max: usize,
+    /// How long a scorer waits for stragglers after the first job of a
+    /// batch — the latency/throughput dial (0 = per-request scoring).
+    pub batch_wait: Duration,
+    /// Admission bound: queued-but-unscored documents beyond this are shed
+    /// with `503 Retry-After`.
+    pub queue_cap: usize,
+    /// Per-request deadline; documents still queued past it are dropped
+    /// unscored and the request answers `504`.
+    pub deadline: Duration,
+    /// Model-file poll interval for hot reload.
+    pub reload_poll: Duration,
+    /// Idle keep-alive connections are closed after this long.
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            scorer_workers: 2,
+            batch_max: 64,
+            batch_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+            deadline: Duration::from_millis(50),
+            reload_poll: Duration::from_millis(200),
+            idle_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Serving-path observability, built on [`crate::metrics`] primitives and
+/// rendered at `/metrics` and in the shutdown report.
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Documents received on the score path (pre-admission).
+    pub docs_received: Counter,
+    /// Documents scored by a worker.
+    pub docs_scored: Counter,
+    /// Documents rejected by admission control (each one a 503).
+    pub docs_shed: Counter,
+    /// Documents dropped unscored because their deadline passed in queue.
+    pub docs_expired: Counter,
+    /// HTTP requests handled (all routes).
+    pub http_requests: Counter,
+    /// Malformed HTTP requests / unparseable score bodies.
+    pub http_errors: Counter,
+    /// Successful model hot reloads.
+    pub reloads: Counter,
+    /// Failed reload attempts (file changed but would not load).
+    pub reload_errors: Counter,
+    /// Scored micro-batch sizes.
+    pub batch_size: Histogram,
+    /// Per-document queue wait, microseconds.
+    pub queue_wait_us: Histogram,
+    /// Per-score-request wall latency inside the handler, microseconds.
+    pub latency_us: Histogram,
+}
+
+impl ServeMetrics {
+    /// Text exposition (also the shutdown report).
+    pub fn render(&self, epoch: u64, queue_depth: usize) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("serve_model_epoch {epoch}\n"));
+        s.push_str(&format!("serve_queue_depth {queue_depth}\n"));
+        for (name, c) in [
+            ("serve_docs_received_total", &self.docs_received),
+            ("serve_docs_scored_total", &self.docs_scored),
+            ("serve_docs_shed_total", &self.docs_shed),
+            ("serve_docs_expired_total", &self.docs_expired),
+            ("serve_http_requests_total", &self.http_requests),
+            ("serve_http_errors_total", &self.http_errors),
+            ("serve_model_reloads_total", &self.reloads),
+            ("serve_model_reload_errors_total", &self.reload_errors),
+        ] {
+            s.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, h) in [
+            ("serve_batch_size", &self.batch_size),
+            ("serve_queue_wait_us", &self.queue_wait_us),
+            ("serve_request_latency_us", &self.latency_us),
+        ] {
+            s.push_str(&format!(
+                "{name}_count {}\n{name}_p50 {}\n{name}_p99 {}\n",
+                h.count(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+            ));
+        }
+        s
+    }
+}
+
+/// Everything the accept/handler/scorer/watcher threads share.
+struct ServerCtx {
+    cfg: ServeConfig,
+    batcher: Batcher,
+    registry: ModelRegistry,
+    metrics: ServeMetrics,
+    shutdown: AtomicBool,
+}
+
+/// A running server; dropping it without [`shutdown`](Self::shutdown)
+/// leaves the threads serving until process exit.
+pub struct ModelServer {
+    ctx: Arc<ServerCtx>,
+    addr: SocketAddr,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ModelServer {
+    /// Load the model at `path`, bind, and start the accept / scorer /
+    /// reload-watcher threads.
+    pub fn start<P: AsRef<Path>>(model_path: P, cfg: ServeConfig) -> Result<Self> {
+        if cfg.scorer_workers == 0 || cfg.batch_max == 0 || cfg.queue_cap == 0 {
+            return Err(Error::InvalidArg(
+                "serve: workers, batch-max and queue must all be positive".into(),
+            ));
+        }
+        let registry = ModelRegistry::open(model_path)?;
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
+        let addr = listener.local_addr()?;
+        let ctx = Arc::new(ServerCtx {
+            batcher: Batcher::new(cfg.queue_cap),
+            registry,
+            metrics: ServeMetrics::default(),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        });
+        let mut threads = Vec::new();
+
+        for _ in 0..ctx.cfg.scorer_workers {
+            let ctx = ctx.clone();
+            threads.push(std::thread::spawn(move || scorer_loop(&ctx)));
+        }
+        {
+            let ctx = ctx.clone();
+            threads.push(std::thread::spawn(move || watcher_loop(&ctx)));
+        }
+        {
+            let ctx = ctx.clone();
+            threads.push(std::thread::spawn(move || accept_loop(&ctx, listener)));
+        }
+        Ok(ModelServer { ctx, addr, threads })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.ctx.metrics
+    }
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.ctx.registry
+    }
+
+    /// Graceful stop: close admission (in-queue jobs still get scored),
+    /// join the scorer/watcher/accept threads, and return the final
+    /// metrics exposition as the shutdown report.
+    pub fn shutdown(mut self) -> String {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        self.ctx.batcher.close();
+        // wake the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.ctx
+            .metrics
+            .render(self.ctx.registry.epoch(), self.ctx.batcher.depth())
+    }
+}
+
+fn accept_loop(ctx: &Arc<ServerCtx>, listener: TcpListener) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let ctx2 = ctx.clone();
+                // handlers are detached: they exit on connection close,
+                // idle timeout, or the shutdown flag at the next request.
+                // Builder::spawn (unlike thread::spawn) reports thread
+                // exhaustion as an Err instead of panicking the accept
+                // loop — drop the connection and keep serving
+                let spawned = std::thread::Builder::new()
+                    .name("bbmh-conn".into())
+                    .spawn(move || handle_conn(&ctx2, stream));
+                if spawned.is_err() {
+                    ctx.metrics.http_errors.inc();
+                }
+            }
+            Err(_) => {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                // persistent accept failures (e.g. fd exhaustion) must
+                // not busy-spin a core; back off briefly and retry
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn watcher_loop(ctx: &Arc<ServerCtx>) {
+    while !ctx.shutdown.load(Ordering::Relaxed) {
+        std::thread::sleep(ctx.cfg.reload_poll);
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match ctx.registry.poll_reload() {
+            Ok(true) => ctx.metrics.reloads.inc(),
+            Ok(false) => {}
+            // mid-write or corrupt file: keep the old model, retry next poll
+            Err(_) => ctx.metrics.reload_errors.inc(),
+        }
+    }
+}
+
+fn scorer_loop(ctx: &Arc<ServerCtx>) {
+    let mut batch: Vec<ScoreJob> = Vec::with_capacity(ctx.cfg.batch_max);
+    // per-worker scratch, re-drawn only when a hot reload changes the model
+    let mut scratch = None;
+    while ctx.batcher.next_batch(ctx.cfg.batch_max, ctx.cfg.batch_wait, &mut batch) {
+        ctx.metrics.batch_size.observe(batch.len() as u64);
+        let em = ctx.registry.current();
+        let stale = match &scratch {
+            Some((epoch, _)) => *epoch != em.epoch,
+            None => true,
+        };
+        if stale {
+            scratch = Some((em.epoch, em.model.scratch()));
+        }
+        let (_, sc) = scratch.as_mut().expect("scratch initialized above");
+        for job in batch.drain(..) {
+            ctx.metrics
+                .queue_wait_us
+                .observe(job.enqueued.elapsed().as_micros() as u64);
+            if Instant::now() > job.deadline {
+                ctx.metrics.docs_expired.inc();
+                let _ = job.resp.send(ScoreOutcome::Expired);
+                continue;
+            }
+            let margin = em.model.margin(&job.indices, sc);
+            ctx.metrics.docs_scored.inc();
+            // a handler that timed out and left is fine — send just fails
+            let _ = job.resp.send(ScoreOutcome::Margin { margin, epoch: em.epoch });
+        }
+    }
+}
+
+fn handle_conn(ctx: &Arc<ServerCtx>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(ctx.cfg.idle_timeout));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // client closed between requests
+            // an idle keep-alive connection hitting the read timeout is
+            // normal pool behavior, not a malformed request: close
+            // silently — no error counter, and no 400 that a client
+            // racing the timeout could misread as its response
+            Err(Error::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
+            Err(_) => {
+                // actual garbage on the wire — best-effort close notice
+                ctx.metrics.http_errors.inc();
+                let _ = http::write_response(
+                    &mut stream,
+                    400,
+                    "Bad Request",
+                    &[],
+                    b"bad request\n",
+                );
+                break;
+            }
+        };
+        ctx.metrics.http_requests.inc();
+        let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::Relaxed);
+        let io_ok = match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/score") => handle_score(ctx, &req.body, &mut stream),
+            ("GET", "/metrics") => {
+                let body = ctx
+                    .metrics
+                    .render(ctx.registry.epoch(), ctx.batcher.depth());
+                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+            }
+            ("GET", "/healthz") => {
+                let em = ctx.registry.current();
+                let body = format!(
+                    "ok epoch={} scheme={} dim={}\n",
+                    em.epoch,
+                    em.model.spec.scheme(),
+                    em.model.model.w.len()
+                );
+                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+            }
+            _ => http::write_response(&mut stream, 404, "Not Found", &[], b"not found\n")
+                .is_ok(),
+        };
+        if !io_ok || !keep {
+            break;
+        }
+    }
+}
+
+/// Parse one request-body line into sorted/deduped feature indices.
+/// `Ok(None)` for blank/comment lines; the label token (any first token
+/// without a `:`) is accepted and ignored so both raw `idx:val` streams
+/// and full LibSVM lines score as-is.
+fn parse_doc_line(line: &str) -> std::result::Result<Option<Vec<u32>>, String> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut indices = Vec::new();
+    for (pos, tok) in line.split_ascii_whitespace().enumerate() {
+        match tok.split_once(':') {
+            Some((idx, _)) => {
+                indices.push(idx.parse::<u32>().map_err(|_| {
+                    format!("bad feature index {idx:?} in {tok:?}")
+                })?);
+            }
+            None if pos == 0 => {} // label token — scoring ignores it
+            None => return Err(format!("bad feature token {tok:?}")),
+        }
+    }
+    if indices.is_empty() {
+        return Err("empty document (no features)".to_string());
+    }
+    indices.sort_unstable();
+    indices.dedup();
+    Ok(Some(indices))
+}
+
+/// The score route: admit every body line, drain the margins, answer.
+/// Returns whether the response was written (socket still healthy).
+fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream) -> bool {
+    let t0 = Instant::now();
+    let Ok(text) = std::str::from_utf8(body) else {
+        ctx.metrics.http_errors.inc();
+        return http::write_response(stream, 400, "Bad Request", &[], b"body is not utf-8\n")
+            .is_ok();
+    };
+    let deadline = Instant::now() + ctx.cfg.deadline;
+    let mut pending = Vec::new();
+    let mut shed = false;
+    let mut bad: Option<String> = None;
+    for line in text.lines() {
+        match parse_doc_line(line) {
+            Ok(None) => continue,
+            Ok(Some(indices)) => {
+                ctx.metrics.docs_received.inc();
+                let (tx, rx) = sync_channel(1);
+                let job = ScoreJob { indices, enqueued: Instant::now(), deadline, resp: tx };
+                match ctx.batcher.try_enqueue(job) {
+                    Ok(()) => pending.push(rx),
+                    Err(_) => {
+                        ctx.metrics.docs_shed.inc();
+                        shed = true;
+                        break;
+                    }
+                }
+            }
+            Err(msg) => {
+                bad = Some(msg);
+                break;
+            }
+        }
+    }
+    // drain everything already admitted, even when the request as a whole
+    // fails — the jobs are in flight and the workers will answer them
+    let grace = ctx.cfg.batch_wait * 2 + Duration::from_millis(100);
+    let mut lines = String::new();
+    let mut max_epoch = 0u64;
+    let mut expired = false;
+    for rx in pending {
+        let budget = deadline.saturating_duration_since(Instant::now()) + grace;
+        match rx.recv_timeout(budget) {
+            Ok(ScoreOutcome::Margin { margin, epoch }) => {
+                max_epoch = max_epoch.max(epoch);
+                let pred: i8 = if margin >= 0.0 { 1 } else { -1 };
+                // Display of f32 round-trips exactly — clients can compare
+                // margins bit-for-bit against a local SavedModel::margin
+                lines.push_str(&format!("{pred} {margin}\n"));
+            }
+            // Expired from the worker, or the worker never got to it
+            // within our budget (it will count the doc itself either way)
+            Ok(ScoreOutcome::Expired) | Err(_) => expired = true,
+        }
+    }
+    ctx.metrics.latency_us.observe(t0.elapsed().as_micros() as u64);
+    if let Some(msg) = bad {
+        ctx.metrics.http_errors.inc();
+        let body = format!("bad document: {msg}\n");
+        return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes()).is_ok();
+    }
+    if shed {
+        return http::write_response(
+            stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", "1".to_string())],
+            b"shed: admission queue full\n",
+        )
+        .is_ok();
+    }
+    if expired {
+        return http::write_response(stream, 504, "Gateway Timeout", &[], b"deadline expired\n")
+            .is_ok();
+    }
+    http::write_response(
+        stream,
+        200,
+        "OK",
+        &[("X-Model-Epoch", max_epoch.to_string())],
+        lines.as_bytes(),
+    )
+    .is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doc_line_parsing() {
+        assert_eq!(parse_doc_line("").unwrap(), None);
+        assert_eq!(parse_doc_line("# comment").unwrap(), None);
+        assert_eq!(parse_doc_line("+1 5:1 3:1 5:1").unwrap(), Some(vec![3, 5]));
+        // labelless documents score too
+        assert_eq!(parse_doc_line("7:1 2:0.5").unwrap(), Some(vec![2, 7]));
+        // a bare non-label token is malformed, as is a bad index
+        assert!(parse_doc_line("+1 5:1 bogus").is_err());
+        assert!(parse_doc_line("+1 notanum:1").is_err());
+        assert!(parse_doc_line("+1").is_err(), "empty documents are rejected");
+    }
+
+    #[test]
+    fn metrics_render_contains_every_series() {
+        let m = ServeMetrics::default();
+        m.docs_received.add(3);
+        m.batch_size.observe(4);
+        let text = m.render(2, 1);
+        for needle in [
+            "serve_model_epoch 2",
+            "serve_queue_depth 1",
+            "serve_docs_received_total 3",
+            "serve_docs_shed_total 0",
+            "serve_batch_size_count 1",
+            "serve_request_latency_us_p99",
+            "serve_model_reloads_total 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn start_rejects_degenerate_configs() {
+        let cfg = ServeConfig { scorer_workers: 0, ..Default::default() };
+        assert!(ModelServer::start("/nonexistent.bbmh", cfg).is_err());
+        // a missing model file is a typed error, not a panic
+        assert!(ModelServer::start("/nonexistent.bbmh", ServeConfig::default()).is_err());
+    }
+}

@@ -25,4 +25,7 @@ pub use dcd_svm::{train_svm, SvmConfig, SvmLoss};
 pub use linear::{accuracy, FeatureMatrix, LinearModel, TrainStats};
 pub use lr_newton::{train_lr, LrConfig};
 pub use model_io::SavedModel;
-pub use sgd::{train_from_cache, train_sgd, train_sgd_stream, SgdConfig, SgdLoss, SgdStream};
+pub use sgd::{
+    eval_from_cache, train_from_cache, train_from_cache_holdout, train_sgd, train_sgd_stream,
+    CacheEval, HoldoutReport, SgdConfig, SgdLoss, SgdStream,
+};

@@ -19,6 +19,7 @@ use crate::encode::cache::CacheReader;
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
 use crate::solver::linear::{FeatureMatrix, LinearModel, TrainStats};
+use crate::solver::model_io::SavedModel;
 use crate::{Error, Result};
 
 /// Loss selector matching the PJRT artifact pair.
@@ -371,6 +372,159 @@ pub fn train_from_cache<P: AsRef<Path>>(path: P, cfg: &SgdConfig) -> Result<(Lin
     Ok(stream.finalize())
 }
 
+/// Deterministic per-row holdout membership: a splitmix64 draw on the
+/// global row index against the `frac` threshold.  Depending only on
+/// (row index, salt) makes the split identical across epochs, reruns and
+/// readers — the training pass and the evaluation pass agree on which
+/// rows are held out without storing a mask anywhere.
+fn holdout_row(row: u64, salt: u64, frac: f64) -> bool {
+    let mut z = row.wrapping_add(salt).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 11) as f64 / (1u64 << 53) as f64) < frac
+}
+
+/// Held-out-split evaluation attached to a cache training run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HoldoutReport {
+    pub train_rows: u64,
+    pub holdout_rows: u64,
+    /// Accuracy of the final model on the held-out rows.
+    pub accuracy: f64,
+    /// Mean (unregularized) loss of the final model on the held-out rows.
+    pub mean_loss: f64,
+}
+
+/// [`train_from_cache`] with a deterministic held-out split: a `frac`
+/// fraction of rows (chosen by a salted per-row hash of the global row
+/// index — see `holdout_row`) is excluded from every training epoch, then scored once
+/// with the final weights — generalization measured against data the
+/// model never touched, at the cost of one extra cache pass.
+pub fn train_from_cache_holdout<P: AsRef<Path>>(
+    path: P,
+    cfg: &SgdConfig,
+    frac: f64,
+    salt: u64,
+) -> Result<(LinearModel, TrainStats, HoldoutReport)> {
+    if frac <= 0.0 || frac >= 1.0 || frac.is_nan() {
+        return Err(Error::InvalidArg(format!(
+            "holdout fraction must be in (0, 1), got {frac}"
+        )));
+    }
+    let meta = CacheReader::open(&path)?.meta();
+    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
+        Error::InvalidArg(format!(
+            "cache records a sparse-output encoder ({}); streaming SGD needs packed codes",
+            meta.spec.scheme()
+        ))
+    })?;
+    let mut stream = SgdStream::new(cfg.clone(), b, k);
+    let mut row_buf = vec![0u16; k];
+    for _ in 0..cfg.epochs.max(1) {
+        let mut reader = CacheReader::open(&path)?;
+        let mut row0 = 0u64;
+        while let Some((codes, labels)) = reader.next_chunk()? {
+            // filter held-out rows from the training chunk
+            let mut tr_codes = PackedCodes::new(b, k);
+            let mut tr_labels = Vec::new();
+            for i in 0..codes.n {
+                if !holdout_row(row0 + i as u64, salt, frac) {
+                    codes.row_into(i, &mut row_buf);
+                    tr_codes.push_row(&row_buf)?;
+                    tr_labels.push(labels[i]);
+                }
+            }
+            row0 += codes.n as u64;
+            if tr_codes.n > 0 {
+                stream.push_chunk(tr_codes, tr_labels)?;
+            }
+        }
+        stream.end_epoch();
+    }
+    let (model, stats) = stream.finalize();
+
+    // one evaluation pass over the held-out rows with the final weights
+    let mut reader = CacheReader::open(&path)?;
+    let mut row0 = 0u64;
+    let (mut held, mut correct) = (0u64, 0u64);
+    let mut loss_sum = 0.0f64;
+    while let Some((codes, labels)) = reader.next_chunk()? {
+        let n = codes.n;
+        let ds = BbitDataset::new(codes, labels);
+        for i in 0..n {
+            if holdout_row(row0 + i as u64, salt, frac) {
+                held += 1;
+                let m = ds.dot(i, &model.w);
+                let y = ds.labels[i];
+                loss_sum += cfg.loss.loss(m as f64, y as f64);
+                if (m >= 0.0) == (y > 0) {
+                    correct += 1;
+                }
+            }
+        }
+        row0 += n as u64;
+    }
+    let report = HoldoutReport {
+        train_rows: meta.n - held,
+        holdout_rows: held,
+        accuracy: correct as f64 / held.max(1) as f64,
+        mean_loss: loss_sum / held.max(1) as f64,
+    };
+    Ok((model, stats, report))
+}
+
+/// Evaluation of one model over one hashed cache.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheEval {
+    pub rows: u64,
+    pub accuracy: f64,
+    /// Mean (unregularized) loss over all rows.
+    pub mean_loss: f64,
+}
+
+/// Score every row of a hashed cache with a saved model — the batch twin
+/// of the serve path (`classify --model m --cache c`).  The cache header
+/// and the model file both record their [`EncoderSpec`]; a mismatch
+/// (different scheme, parameters *or* hash-family seed — codes from one
+/// family are meaningless under another's weights) is a typed error, never
+/// an out-of-bounds panic.
+pub fn eval_from_cache<P: AsRef<Path>>(
+    path: P,
+    saved: &SavedModel,
+    loss: SgdLoss,
+) -> Result<CacheEval> {
+    let mut reader = CacheReader::open(&path)?;
+    let meta = reader.meta();
+    if meta.spec != saved.spec {
+        return Err(Error::InvalidArg(format!(
+            "cache encoder spec {:?} does not match the model's {:?}",
+            meta.spec, saved.spec
+        )));
+    }
+    let w = &saved.model.w;
+    let (mut rows, mut correct) = (0u64, 0u64);
+    let mut loss_sum = 0.0f64;
+    while let Some((codes, labels)) = reader.next_chunk()? {
+        let n = codes.n;
+        let ds = BbitDataset::new(codes, labels);
+        for i in 0..n {
+            rows += 1;
+            let m = ds.dot(i, w);
+            let y = ds.labels[i];
+            loss_sum += loss.loss(m as f64, y as f64);
+            if (m >= 0.0) == (y > 0) {
+                correct += 1;
+            }
+        }
+    }
+    Ok(CacheEval {
+        rows,
+        accuracy: correct as f64 / rows.max(1) as f64,
+        mean_loss: loss_sum / rows.max(1) as f64,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,6 +585,29 @@ mod tests {
     fn lambda_from_c_mapping() {
         assert!((lambda_from_c(1.0, 1000) - 1e-3).abs() < 1e-12);
         assert!((lambda_from_c(10.0, 100) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn holdout_membership_is_deterministic_and_near_frac() {
+        let frac = 0.2;
+        let n = 20_000u64;
+        let held: Vec<u64> = (0..n).filter(|&i| holdout_row(i, 0x5A17, frac)).collect();
+        // deterministic: same inputs, same split
+        let held2: Vec<u64> = (0..n).filter(|&i| holdout_row(i, 0x5A17, frac)).collect();
+        assert_eq!(held, held2);
+        // different salt, different split
+        assert_ne!(held, (0..n).filter(|&i| holdout_row(i, 0x0DD, frac)).collect::<Vec<_>>());
+        // the realized fraction concentrates around frac
+        let realized = held.len() as f64 / n as f64;
+        assert!((realized - frac).abs() < 0.02, "realized {realized}");
+    }
+
+    #[test]
+    fn holdout_frac_bounds_are_typed_errors() {
+        for frac in [0.0, 1.0, -0.5, 1.5, f64::NAN] {
+            let err = train_from_cache_holdout("/nonexistent", &SgdConfig::default(), frac, 1);
+            assert!(err.is_err(), "frac {frac} must be rejected before any IO");
+        }
     }
 
     fn random_bbit(b: u32, k: usize, n: usize, seed: u64) -> BbitDataset {

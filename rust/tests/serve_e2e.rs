@@ -1,0 +1,314 @@
+//! Online-scoring e2e tests (ISSUE 3 acceptance criteria): a loopback
+//! server on an ephemeral port must
+//! - answer concurrent `/score` requests with margins that match
+//!   `SavedModel::margin` *exactly* (Display round-trip, bit-for-bit);
+//! - hot-swap the model when the file is rewritten, observable as an
+//!   epoch bump, without dropping the established connection;
+//! - shed (503 + Retry-After) when the bounded admission queue overflows,
+//!   instead of hanging or queueing unboundedly;
+//! - sustain a 2+-worker load-generator run that reports p50/p99 latency
+//!   and achieved QPS.
+//!
+//! Every server binds port 0 so parallel test binaries / CI jobs cannot
+//! collide.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use bbit_mh::encode::EncoderSpec;
+use bbit_mh::serve::http;
+use bbit_mh::serve::{loadgen, LoadgenConfig, ModelServer, ServeConfig};
+use bbit_mh::solver::{LinearModel, SavedModel};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bbmh_serve_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A deterministic model: weights are a fixed function of the index, so
+/// the test can reconstruct the exact serving-side margins locally.
+fn model_with(spec: EncoderSpec, scale: f32) -> SavedModel {
+    let w: Vec<f32> =
+        (0..spec.output_dim()).map(|j| (j as f32 * 0.7331).sin() * scale).collect();
+    SavedModel::new(spec, LinearModel { w }).unwrap()
+}
+
+/// Deterministic document `i`: sorted unique indices plus its LibSVM line.
+fn doc(i: usize) -> (String, Vec<u32>) {
+    let mut idx: Vec<u32> = (0..24u32).map(|t| (i as u32 * 31 + t * 97) % 5000).collect();
+    idx.sort_unstable();
+    idx.dedup();
+    let mut line = String::from("+1");
+    for x in &idx {
+        line.push_str(&format!(" {x}:1"));
+    }
+    (line, idx)
+}
+
+/// Tiny keep-alive HTTP client over the crate's own framing.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to test server");
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> http::Response {
+        http::write_post(&mut self.stream, path, body.as_bytes()).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> http::Response {
+        http::write_get(&mut self.stream, path).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+}
+
+#[test]
+fn concurrent_scores_match_local_margins_exactly() {
+    let dir = temp_dir("exact");
+    let spec = EncoderSpec::Oph { bins: 64, b: 4, seed: 0xE2E };
+    let path = dir.join("m.bbmh");
+    model_with(spec, 1.0).save(&path).unwrap();
+    let server = ModelServer::start(
+        &path,
+        ServeConfig {
+            scorer_workers: 2,
+            batch_max: 8,
+            batch_wait: Duration::from_micros(200),
+            queue_cap: 512,
+            deadline: Duration::from_secs(5),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let reference = SavedModel::load(&path).unwrap();
+
+    // 4 concurrent keep-alive connections, 25 documents each
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let reference = &reference;
+            s.spawn(move || {
+                let mut client = Client::connect(addr);
+                let mut scratch = reference.scratch();
+                for i in 0..25usize {
+                    let (line, idx) = doc(i * 4 + t);
+                    let resp = client.post("/score", &format!("{line}\n"));
+                    assert_eq!(resp.status, 200, "doc {i}/{t}: {}", resp.body_text());
+                    let body = resp.body_text();
+                    let mut toks = body.split_ascii_whitespace();
+                    let pred: i8 = toks.next().unwrap().parse().unwrap();
+                    let margin: f32 = toks.next().unwrap().parse().unwrap();
+                    let expect = reference.margin(&idx, &mut scratch);
+                    assert_eq!(margin, expect, "margin mismatch for doc {i}/{t}");
+                    assert_eq!(pred, if expect >= 0.0 { 1 } else { -1 });
+                }
+            });
+        }
+    });
+
+    // a multi-document body answers one line per document, in order
+    let mut client = Client::connect(addr);
+    let docs: Vec<(String, Vec<u32>)> = (100..105).map(doc).collect();
+    let body: String = docs.iter().map(|(l, _)| format!("{l}\n")).collect();
+    let resp = client.post("/score", &body);
+    assert_eq!(resp.status, 200);
+    let text = resp.body_text();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), docs.len());
+    let mut scratch = reference.scratch();
+    for (line, (_, idx)) in lines.iter().zip(&docs) {
+        let margin: f32 = line.split_ascii_whitespace().nth(1).unwrap().parse().unwrap();
+        assert_eq!(margin, reference.margin(idx, &mut scratch));
+    }
+
+    let report = server.shutdown();
+    assert!(
+        report.contains("serve_docs_scored_total 105"),
+        "4×25 + 5 documents must all be scored:\n{report}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn hot_swap_bumps_epoch_without_dropping_connections() {
+    let dir = temp_dir("hotswap");
+    let spec = EncoderSpec::Oph { bins: 32, b: 4, seed: 0x5A9 };
+    let path = dir.join("m.bbmh");
+    model_with(spec, 1.0).save(&path).unwrap();
+    let server = ModelServer::start(
+        &path,
+        ServeConfig {
+            scorer_workers: 2,
+            deadline: Duration::from_secs(5),
+            reload_poll: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut client = Client::connect(addr);
+    assert!(client.get("/healthz").body_text().contains("epoch=1"));
+    let (line, idx) = doc(7);
+    let v1 = model_with(spec, 1.0);
+    let mut scratch = v1.scratch();
+    let resp = client.post("/score", &format!("{line}\n"));
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-model-epoch"), Some("1"));
+    let m1: f32 =
+        resp.body_text().split_ascii_whitespace().nth(1).unwrap().parse().unwrap();
+    assert_eq!(m1, v1.margin(&idx, &mut scratch));
+
+    // rewrite the model file (same byte length — only weights change);
+    // the 1.1s sleep guards against coarse-mtime filesystems where an
+    // (mtime, len) fingerprint could miss a same-second same-size rewrite
+    std::thread::sleep(Duration::from_millis(1100));
+    let v2 = model_with(spec, -2.0);
+    v2.save(&path).unwrap();
+
+    // the watcher must observe the swap: epoch bumps to 2
+    let t0 = Instant::now();
+    loop {
+        if client.get("/healthz").body_text().contains("epoch=2") {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "hot reload never landed");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // the same (never re-dialed) connection now scores with the new model
+    let resp = client.post("/score", &format!("{line}\n"));
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-model-epoch"), Some("2"));
+    let m2: f32 =
+        resp.body_text().split_ascii_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut scratch2 = v2.scratch();
+    assert_eq!(m2, v2.margin(&idx, &mut scratch2));
+    assert_ne!(m1, m2, "new weights must change the margin");
+
+    let report = server.shutdown();
+    assert!(report.contains("serve_model_epoch 2"), "{report}");
+    assert!(!report.contains("serve_model_reloads_total 0"), "{report}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn overload_sheds_with_503_instead_of_hanging() {
+    let dir = temp_dir("shed");
+    // expensive per-document scoring (k-way minwise over many indices) so
+    // the enqueue side outruns a single scorer by orders of magnitude
+    let spec = EncoderSpec::Bbit { b: 8, k: 256, d: 1 << 30, seed: 0x10AD };
+    let path = dir.join("m.bbmh");
+    model_with(spec, 1.0).save(&path).unwrap();
+    let server = ModelServer::start(
+        &path,
+        ServeConfig {
+            scorer_workers: 1,
+            batch_max: 4,
+            batch_wait: Duration::ZERO,
+            queue_cap: 8,
+            deadline: Duration::from_secs(10),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // one request with 800 documents of ~120 indices each: admission is
+    // bounded at 8, so the burst must shed
+    let mut body = String::new();
+    for i in 0..800usize {
+        let mut line = String::from("+1");
+        for t in 0..120u32 {
+            line.push_str(&format!(" {}:1", (i as u32 * 13 + t * 211) % 100_000));
+        }
+        body.push_str(&line);
+        body.push('\n');
+    }
+    let mut client = Client::connect(addr);
+    let t0 = Instant::now();
+    let resp = client.post("/score", &body);
+    let elapsed = t0.elapsed();
+    assert_eq!(resp.status, 503, "overload must shed: {}", resp.body_text());
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "shed must be prompt, not a queue-drain hang ({elapsed:?})"
+    );
+
+    // the server is still healthy afterwards
+    assert!(client.get("/healthz").body_text().starts_with("ok"));
+    let metrics = client.get("/metrics").body_text();
+    let shed_line = metrics
+        .lines()
+        .find(|l| l.starts_with("serve_docs_shed_total"))
+        .expect("shed counter exposed");
+    let shed: u64 = shed_line.split_ascii_whitespace().nth(1).unwrap().parse().unwrap();
+    assert!(shed >= 1, "at least one document must have been shed:\n{metrics}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn loadgen_reports_latency_percentiles_and_qps() {
+    let dir = temp_dir("loadgen");
+    let spec = EncoderSpec::Oph { bins: 64, b: 4, seed: 0x10AD6E4 };
+    let path = dir.join("m.bbmh");
+    model_with(spec, 1.0).save(&path).unwrap();
+    let server = ModelServer::start(
+        &path,
+        ServeConfig {
+            scorer_workers: 2, // the acceptance criterion's 2+-worker run
+            batch_max: 32,
+            batch_wait: Duration::from_micros(100),
+            queue_cap: 1024,
+            deadline: Duration::from_secs(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let docs: Vec<String> = (0..32).map(|i| doc(i).0).collect();
+    let report = loadgen::run(
+        server.local_addr(),
+        &LoadgenConfig {
+            qps: 400.0,
+            duration: Duration::from_millis(800),
+            connections: 4,
+            docs,
+        },
+    )
+    .unwrap();
+
+    assert!(report.sent > 50, "{report:?}");
+    assert!(report.ok > 0, "{report:?}");
+    // every request is accounted for exactly once (>= because an initial
+    // connect failure counts as an error without a send)
+    assert!(
+        report.ok + report.shed + report.expired + report.errors >= report.sent,
+        "{report:?}"
+    );
+    assert!(report.p50_us > 0 && report.p50_us <= report.p99_us, "{report:?}");
+    assert!(report.p99_us <= report.max_us, "{report:?}");
+    assert!(report.achieved_qps > 50.0, "{report:?}");
+    assert!(report.wall_seconds > 0.5, "{report:?}");
+    let summary = report.summary();
+    assert!(summary.contains("p50") && summary.contains("p99"), "{summary}");
+
+    let final_report = server.shutdown();
+    assert!(final_report.contains("serve_docs_scored_total"), "{final_report}");
+    assert!(final_report.contains("serve_batch_size_p50"), "{final_report}");
+    std::fs::remove_dir_all(dir).ok();
+}

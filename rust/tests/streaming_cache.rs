@@ -17,7 +17,11 @@ use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::data::SparseDataset;
 use bbit_mh::encode::cache::CacheReader;
 use bbit_mh::encode::EncoderSpec;
-use bbit_mh::solver::{train_from_cache, train_sgd, SgdConfig, SgdLoss};
+use bbit_mh::solver::{
+    eval_from_cache, train_from_cache, train_from_cache_holdout, train_sgd, LinearModel,
+    SavedModel, SgdConfig, SgdLoss,
+};
+use bbit_mh::Error;
 
 fn corpus(n: usize, seed: u64) -> SparseDataset {
     CorpusGenerator::new(CorpusConfig {
@@ -146,6 +150,149 @@ fn cache_detects_corruption_end_to_end() {
         }
     }
     assert!(failed, "flipped byte went undetected");
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+/// Hash `n` docs into a fresh cache with `chunk` rows per record; returns
+/// the cache path (caller removes the parent dir).
+fn build_cache(
+    tag: &str,
+    n: usize,
+    seed: u64,
+    job: &EncoderSpec,
+    chunk: usize,
+) -> std::path::PathBuf {
+    let ds = corpus(n, seed);
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: chunk, queue_depth: 2 });
+    let path = tmp_path(tag);
+    let mut sink = CacheSink::create(&path, job).unwrap();
+    pipe.run_sink(dataset_chunks(&ds, chunk), job, &mut sink).unwrap();
+    path
+}
+
+#[test]
+fn truncated_final_record_is_a_typed_error_not_a_panic() {
+    let job = EncoderSpec::Bbit { b: 4, k: 12, d: 1 << 20, seed: 5 };
+    let path = build_cache("truncated", 300, 0x7A11, &job, 50);
+    let bytes = std::fs::read(&path).unwrap();
+    // lose the tail of the final record (checksum + some payload)
+    std::fs::write(&path, &bytes[..bytes.len() - 13]).unwrap();
+
+    let mut reader = CacheReader::open(&path).unwrap();
+    assert_eq!(reader.meta().n, 300, "header is intact");
+    let mut rows = 0usize;
+    let err = loop {
+        match reader.next_chunk() {
+            Ok(Some((codes, _))) => rows += codes.n,
+            Ok(None) => panic!("truncation must not read clean to the end"),
+            Err(e) => break e,
+        }
+    };
+    assert!(rows < 300, "the damaged record must not be returned");
+    assert!(
+        matches!(err, Error::Io(_) | Error::InvalidArg(_)),
+        "typed error expected, got {err:?}"
+    );
+    // the poisoned reader keeps failing instead of looping
+    assert!(reader.next_chunk().is_err());
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn checksum_mismatch_mid_file_fails_at_the_damaged_record() {
+    let (b, k) = (4u32, 12usize);
+    let job = EncoderSpec::Bbit { b, k, d: 1 << 20, seed: 5 };
+    let chunk = 50usize;
+    let path = build_cache("midfile", 300, 0xC0DE, &job, chunk);
+    // record layout (cache.rs): v2 header is 48 bytes; each record is
+    // u32 rows + u64 payload_len + payload(rows + 8·rows·stride) + u64 sum
+    let stride = (k * b as usize).div_ceil(64);
+    let record = 4 + 8 + (chunk + 8 * chunk * stride) + 8;
+    let mut bytes = std::fs::read(&path).unwrap();
+    let target = 48 + 3 * record + 12 + 5; // record 3's payload, byte 5
+    bytes[target] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut reader = CacheReader::open(&path).unwrap();
+    let mut rows = 0usize;
+    let err = loop {
+        match reader.next_chunk() {
+            Ok(Some((codes, _))) => rows += codes.n,
+            Ok(None) => panic!("flipped byte went undetected"),
+            Err(e) => break e,
+        }
+    };
+    assert_eq!(rows, 3 * chunk, "records before the damage replay clean");
+    match err {
+        Error::InvalidArg(msg) => {
+            assert!(msg.contains("checksum"), "expected a checksum error, got {msg:?}")
+        }
+        other => panic!("typed InvalidArg expected, got {other:?}"),
+    }
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn cache_model_spec_mismatch_is_a_typed_error_not_a_panic() {
+    let job = EncoderSpec::Bbit { b: 4, k: 12, d: 1 << 20, seed: 5 };
+    let path = build_cache("specmismatch", 120, 0x5BEC, &job, 40);
+
+    let model_for = |spec: EncoderSpec| {
+        SavedModel::new(spec, LinearModel { w: vec![0.25; spec.output_dim()] }).unwrap()
+    };
+    // smaller k: the weight vector is shorter than the cache's expanded
+    // dim — unchecked, this would index out of bounds, not error
+    let narrower = model_for(EncoderSpec::Bbit { b: 4, k: 10, d: 1 << 20, seed: 5 });
+    match eval_from_cache(&path, &narrower, SgdLoss::Logistic) {
+        Err(Error::InvalidArg(msg)) => assert!(msg.contains("spec"), "{msg}"),
+        other => panic!("expected InvalidArg, got {other:?}"),
+    }
+    // same geometry but a different hash-family seed: codes from one
+    // family are meaningless under another's weights — also rejected
+    let reseeded = model_for(EncoderSpec::Bbit { b: 4, k: 12, d: 1 << 20, seed: 6 });
+    assert!(eval_from_cache(&path, &reseeded, SgdLoss::Logistic).is_err());
+    // a different scheme entirely (same output dim) is rejected too
+    let oph = model_for(EncoderSpec::Oph { bins: 12, b: 4, seed: 5 });
+    assert_eq!(oph.spec.output_dim(), job.output_dim());
+    assert!(eval_from_cache(&path, &oph, SgdLoss::Logistic).is_err());
+    // the matching spec evaluates every row
+    let matching = model_for(job);
+    let eval = eval_from_cache(&path, &matching, SgdLoss::Logistic).unwrap();
+    assert_eq!(eval.rows, 120);
+    assert!(eval.mean_loss.is_finite());
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn holdout_split_is_deterministic_and_reports_generalization() {
+    let job = EncoderSpec::Bbit { b: 6, k: 32, d: 1 << 22, seed: 9 };
+    let path = build_cache("holdout", 600, 0x401D, &job, 64);
+    let cfg = SgdConfig {
+        loss: SgdLoss::Logistic,
+        lr0: 0.5,
+        lambda: 1e-3,
+        epochs: 6,
+        batch: 64,
+    };
+    let (m1, stats, h) = train_from_cache_holdout(&path, &cfg, 0.25, 7).unwrap();
+    assert_eq!(stats.iterations, 6);
+    assert_eq!(h.train_rows + h.holdout_rows, 600);
+    // the realized split concentrates around the requested fraction
+    assert!((60..=240).contains(&h.holdout_rows), "{h:?}");
+    assert!(h.accuracy > 0.6 && h.accuracy <= 1.0, "{h:?}");
+    assert!(h.mean_loss.is_finite() && h.mean_loss > 0.0, "{h:?}");
+
+    // identical rerun: identical split, identical weights
+    let (m2, _, h2) = train_from_cache_holdout(&path, &cfg, 0.25, 7).unwrap();
+    assert_eq!(m1.w, m2.w);
+    assert_eq!(h.holdout_rows, h2.holdout_rows);
+    // a different salt trains on a different subset → different weights
+    let (m3, _, _) = train_from_cache_holdout(&path, &cfg, 0.25, 8).unwrap();
+    assert_ne!(m1.w, m3.w);
+    // holding out rows means training on fewer than all of them: the
+    // weights differ from the no-holdout run over the same cache
+    let (all, _) = train_from_cache(&path, &cfg).unwrap();
+    assert_ne!(m1.w, all.w);
     std::fs::remove_dir_all(path.parent().unwrap()).ok();
 }
 
