@@ -7,7 +7,13 @@
 //!
 //! Run: `cargo bench --bench bench_pipeline`
 //! One scenario group: `cargo bench --bench bench_pipeline -- serve`
-//! (any prefix of the scenario names: `pipeline`, `serve`)
+//! (any prefix of the scenario names: `pipeline`, `replay`, `serve`)
+//!
+//! The `replay` scenario times cache replay — sequential vs. the
+//! N-thread reader pool over the same v3 cache — reporting rows/s and
+//! MB/s, and dumps the comparison to `BENCH_replay.json` (the paper's
+//! "many cheap training runs over one cache" loop is exactly this read
+//! path).
 
 use std::time::Duration;
 
@@ -44,6 +50,9 @@ fn main() {
     let mut b = Bench::quick();
 
     if !should("pipeline") {
+        if should("replay") {
+            run_replay_scenario();
+        }
         if should("serve") {
             run_serve_scenario(&ds);
         }
@@ -149,9 +158,92 @@ fn main() {
         });
     }
 
+    if should("replay") {
+        run_replay_scenario();
+    }
     if should("serve") {
         run_serve_scenario(&ds);
     }
+}
+
+/// Cache replay throughput: hash a corpus into a v3 cache once, then time
+/// full replays — the sequential scan vs. the N-thread reader pool (both
+/// through `coordinator::replay_cache`, so the emitted chunk stream is
+/// identical).  Best-of-R wall clock; rows/s and MB/s (file bytes) go to
+/// stdout and `BENCH_replay.json`.
+fn run_replay_scenario() {
+    println!();
+    let corpus = CorpusGenerator::new(CorpusConfig {
+        n_docs: 16_384,
+        vocab: 2500,
+        zipf_alpha: 1.05,
+        mean_tokens: 28.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed: 0x9E71,
+    })
+    .generate();
+    let spec = EncoderSpec::Bbit { b: 8, k: 64, d: 1 << 30, seed: 11 };
+    let path =
+        std::env::temp_dir().join(format!("bbit_bench_replay_{}.cache", std::process::id()));
+    let pipe = Pipeline::new(PipelineConfig {
+        workers: bbit_mh::config::available_workers(),
+        chunk_size: 256,
+        queue_depth: 4,
+    });
+    let mut sink = CacheSink::create(&path, &spec).unwrap();
+    pipe.run_sink(dataset_chunks(&corpus, 256), &spec, &mut sink).unwrap();
+    let file_bytes = std::fs::metadata(&path).unwrap().len();
+
+    // best-of-R replays at a given pool width (decode + verify every
+    // record; the emit body is deliberately trivial so the measurement is
+    // the replay layer, not a consumer)
+    let time_replay = |threads: usize| -> (f64, usize) {
+        let mut best = f64::INFINITY;
+        let mut rows = 0usize;
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            let report = bbit_mh::coordinator::replay_cache(&path, threads, |_, _, codes, _| {
+                bbit_mh::util::bench::black_box(codes.n);
+                Ok(())
+            })
+            .unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            rows = report.docs;
+        }
+        (best, rows)
+    };
+    let threads = bbit_mh::config::available_workers().max(2);
+    let (seq_s, rows) = time_replay(1);
+    let (par_s, rows_par) = time_replay(threads);
+    assert_eq!(rows, rows_par, "pool replay must cover the same rows");
+    let mb = file_bytes as f64 / 1e6;
+    let speedup = seq_s / par_s;
+    println!(
+        "replay/sequential      {rows} rows in {:.2} ms  ({:.0} rows/s, {:.1} MB/s)",
+        seq_s * 1e3,
+        rows as f64 / seq_s,
+        mb / seq_s,
+    );
+    println!(
+        "replay/threads={threads}       {rows} rows in {:.2} ms  ({:.0} rows/s, {:.1} MB/s)",
+        par_s * 1e3,
+        rows as f64 / par_s,
+        mb / par_s,
+    );
+    println!("replay/speedup         {speedup:.2}x over sequential");
+    let json = format!(
+        "{{\"scenario\":\"replay\",\"rows\":{rows},\"file_bytes\":{file_bytes},\
+         \"threads\":{threads},\"seq_seconds\":{seq_s:.6},\"par_seconds\":{par_s:.6},\
+         \"seq_rows_per_s\":{:.1},\"par_rows_per_s\":{:.1},\
+         \"seq_mb_per_s\":{:.3},\"par_mb_per_s\":{:.3},\"speedup\":{speedup:.3}}}",
+        rows as f64 / seq_s,
+        rows as f64 / par_s,
+        mb / seq_s,
+        mb / par_s,
+    );
+    std::fs::write("BENCH_replay.json", json + "\n").ok();
+    std::fs::remove_file(&path).ok();
 }
 
 /// The serving path: a resident model behind the micro-batched server,

@@ -2,7 +2,9 @@
 //! sharded encode workers → collector → sink, with bounded-queue
 //! backpressure), the pluggable sinks behind the out-of-core workflow
 //! (collect in memory / write the on-disk hashed cache / train as chunks
-//! arrive), and the training-job scheduler that fans a (method, b, k, C)
+//! arrive), the parallel cache-replay reader pool ([`replay`]: decode the
+//! hashed cache across cores, re-emitting chunks strictly in record
+//! order), and the training-job scheduler that fans a (method, b, k, C)
 //! grid across threads — the "re-use the hashed data for many C values"
 //! workflow the paper's preprocessing-cost argument is built on
 //! (Sections 1 and 6).
@@ -12,11 +14,13 @@
 //! caller's [`EncoderSpec`](crate::encode::encoder::EncoderSpec) draws.
 
 pub mod pipeline;
+pub mod replay;
 pub mod scheduler;
 pub mod sharding;
 pub mod sink;
 
 pub use pipeline::{Pipeline, PipelineConfig, PipelineOutput, PipelineReport};
+pub use replay::{load_index_or_warn, materialize_cache, replay_cache, replay_cache_with};
 pub use scheduler::{Scheduler, TrainJob, TrainOutcome};
 pub use sharding::ShardPlan;
 pub use sink::{CacheSink, CollectSink, PipelineSink, TrainSink};

@@ -156,6 +156,20 @@ pub struct PipelineReport {
     pub reorder_peak: usize,
     /// Chunks processed per worker (load-balance visibility).
     pub per_worker_chunks: Vec<usize>,
+    /// Reader-pool threads used by a cache replay (0 for the forward
+    /// hash pipeline; 1 means the sequential replay path).  Filled by
+    /// [`replay`](crate::coordinator::replay).
+    pub replay_threads: usize,
+    /// Cache file bytes behind a replay run (header + records + footer) —
+    /// the MB/s numerator of the `replay` bench scenario.
+    pub replay_bytes: u64,
+}
+
+impl PipelineReport {
+    /// Replayed rows per wall-clock second (0 when nothing ran).
+    pub fn rows_per_sec(&self) -> f64 {
+        self.docs as f64 / self.wall_seconds.max(1e-9)
+    }
 }
 
 /// The streaming orchestrator.

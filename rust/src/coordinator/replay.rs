@@ -1,0 +1,466 @@
+//! Parallel cache replay: a reader pool over the v3 chunk index.
+//!
+//! The forward pipeline ([`Pipeline`](crate::coordinator::pipeline))
+//! parallelizes *hashing*; once a corpus lives in the on-disk cache the
+//! dominant workload flips to *re-reading* it — the paper's "many cheap
+//! training runs over one cache" loop (C-sweeps, model search), which the
+//! follow-up "b-Bit Minwise Hashing in Practice" (arXiv:1205.2958) shows
+//! is bottlenecked by replay speed, not hashing.  This module makes replay
+//! scale with cores while keeping the chunk stream *identical* to the
+//! sequential reader:
+//!
+//! - workers each own a seekable [`IndexedCacheReader`] and claim records
+//!   off a shared cursor (pull model — natural load balancing);
+//! - records decode (read + FNV verify + unpack) into recycled
+//!   `(PackedCodes, Vec<i8>)` buffers drawn from a bounded pool, so the
+//!   hot path allocates nothing per record *and* the pool doubles as the
+//!   admission-credit loop from the forward pipeline: at most
+//!   `2·threads + 2` decoded chunks exist at once, no matter how far ahead
+//!   the fast workers run;
+//! - the collector re-emits chunks through the same reorder-window design
+//!   the forward pipeline uses — strictly in record order — so
+//!   order-sensitive consumers (holdout splitting, progressive loss,
+//!   streaming SGD) observe bit-for-bit the sequence a sequential scan
+//!   would have produced.
+//!
+//! Workers grab a buffer *before* claiming a record id, which is what
+//! makes the bounded pool deadlock-free: the lowest unemitted record is
+//! always held by a worker that already owns a buffer, so the collector
+//! can always make progress.
+//!
+//! Caches without a usable index (pre-v3 files, truncated footers) fall
+//! back to the sequential scan with a warning instead of failing — the
+//! paranoia twin of [`ChunkIndex::load`] returning `Ok(None)`.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::pipeline::PipelineReport;
+use crate::coordinator::sharding::ShardPlan;
+use crate::encode::cache::{CacheReader, ChunkIndex, IndexedCacheReader};
+use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
+use crate::{Error, Result};
+
+/// One recycled decode buffer.
+type ChunkBuf = (PackedCodes, Vec<i8>);
+
+/// Replay every record of a hashed cache through `emit(record_id, row0,
+/// codes, labels)` — called strictly in record order on the calling
+/// thread, exactly once per record (`row0` is the record's global first
+/// row).  `threads <= 1` runs the sequential scan; `threads > 1` decodes
+/// across a reader pool when the cache carries a chunk index, falling back
+/// to the sequential scan (with a warning) when it does not.  Either way
+/// the emitted chunk sequence is identical.
+pub fn replay_cache<P, F>(path: P, threads: usize, emit: F) -> Result<PipelineReport>
+where
+    P: AsRef<Path>,
+    F: FnMut(usize, u64, &PackedCodes, &[i8]) -> Result<()>,
+{
+    let path = path.as_ref();
+    let index = if threads > 1 { load_index_or_warn(path)? } else { None };
+    replay_cache_with(path, index.as_ref(), threads, emit)
+}
+
+/// Load a cache's chunk index for pooled replay, downgrading "no usable
+/// index" to `None` with the standard one-line warning.  Callers that
+/// replay the same cache repeatedly (multi-epoch training) load once and
+/// pass the result to [`replay_cache_with`] each pass, instead of
+/// re-reading and re-verifying the footer — and re-warning — per epoch.
+pub fn load_index_or_warn(path: &Path) -> Result<Option<ChunkIndex>> {
+    match ChunkIndex::load(path)? {
+        Some(index) => Ok(Some(index)),
+        None => {
+            eprintln!(
+                "warning: cache {} has no chunk index (pre-v3 file or damaged footer); \
+                 replaying on one thread",
+                path.display()
+            );
+            Ok(None)
+        }
+    }
+}
+
+/// [`replay_cache`] with a caller-held index: `Some` + `threads > 1` runs
+/// the reader pool; anything else is the sequential scan.
+pub fn replay_cache_with<F>(
+    path: &Path,
+    index: Option<&ChunkIndex>,
+    threads: usize,
+    emit: F,
+) -> Result<PipelineReport>
+where
+    F: FnMut(usize, u64, &PackedCodes, &[i8]) -> Result<()>,
+{
+    let mut report = match index {
+        Some(index) if threads > 1 => replay_pool(path, index, threads, emit)?,
+        _ => replay_sequential(path, emit)?,
+    };
+    report.replay_bytes = std::fs::metadata(path)?.len();
+    Ok(report)
+}
+
+/// The single-threaded scan: one reader, one pair of scratch buffers.
+fn replay_sequential<F>(path: &Path, mut emit: F) -> Result<PipelineReport>
+where
+    F: FnMut(usize, u64, &PackedCodes, &[i8]) -> Result<()>,
+{
+    let wall0 = Instant::now();
+    let mut reader = CacheReader::open(path)?;
+    let meta = reader.meta();
+    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
+        Error::InvalidArg(format!("cache scheme {} is not packed", meta.spec.scheme()))
+    })?;
+    let mut codes = PackedCodes::new(b, k);
+    let mut labels: Vec<i8> = Vec::new();
+    let mut report = PipelineReport {
+        replay_threads: 1,
+        per_worker_chunks: vec![0],
+        ..Default::default()
+    };
+    let mut row0 = 0u64;
+    let mut record = 0usize;
+    loop {
+        let t0 = Instant::now();
+        if !reader.next_chunk_into(&mut codes, &mut labels)? {
+            break;
+        }
+        report.hash_cpu_seconds += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        emit(record, row0, &codes, &labels)?;
+        report.sink_seconds += t0.elapsed().as_secs_f64();
+        row0 += codes.n as u64;
+        record += 1;
+    }
+    report.docs = row0 as usize;
+    report.chunks = record;
+    report.per_worker_chunks[0] = record;
+    report.reorder_peak = if record > 0 { 1 } else { 0 };
+    report.wall_seconds = wall0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// The reader pool: `threads` decode workers, recycled buffers, in-order
+/// emission on the calling thread.
+fn replay_pool<F>(
+    path: &Path,
+    index: &ChunkIndex,
+    threads: usize,
+    mut emit: F,
+) -> Result<PipelineReport>
+where
+    F: FnMut(usize, u64, &PackedCodes, &[i8]) -> Result<()>,
+{
+    let wall0 = Instant::now();
+    let n_rec = index.entries.len();
+    let starts = index.row_starts();
+    let threads = threads.min(n_rec.max(1));
+    let mut report = PipelineReport {
+        replay_threads: threads,
+        per_worker_chunks: vec![0; threads],
+        ..Default::default()
+    };
+    if n_rec == 0 {
+        report.wall_seconds = wall0.elapsed().as_secs_f64();
+        return Ok(report);
+    }
+    // geometry for the buffer pool
+    let meta = IndexedCacheReader::open(path)?.meta();
+    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
+        Error::InvalidArg(format!("cache scheme {} is not packed", meta.spec.scheme()))
+    })?;
+    // per-thread readers opened up front so IO errors surface before any
+    // thread spawns
+    let mut readers = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        readers.push(IndexedCacheReader::open(path)?);
+    }
+    // the buffer pool IS the credit loop: `window` buffers exist in total,
+    // so at most `window` decoded records are in flight or parked in the
+    // reorder map at once
+    let window = 2 * threads + 2;
+    let (free_tx, free_rx) = sync_channel::<ChunkBuf>(window);
+    for _ in 0..window {
+        free_tx
+            .try_send((PackedCodes::new(b, k), Vec::new()))
+            .expect("buffer prefill cannot overflow");
+    }
+    let free_rx = Mutex::new(free_rx);
+    let next_record = AtomicUsize::new(0);
+    // worker → collector: (record id, decoded buffer, decode seconds, wid)
+    type Decoded = (usize, ChunkBuf, f64, usize);
+    let (full_tx, full_rx) = sync_channel::<Result<Decoded>>(window);
+
+    std::thread::scope(|scope| -> Result<()> {
+        for (wid, mut reader) in readers.into_iter().enumerate() {
+            let full_tx = full_tx.clone();
+            let free_rx = &free_rx;
+            let next_record = &next_record;
+            let entries = &index.entries;
+            let starts = &starts;
+            scope.spawn(move || {
+                loop {
+                    // buffer first, record second — guarantees the lowest
+                    // unemitted record is held by a buffer-owning worker
+                    let buf = free_rx.lock().unwrap().recv();
+                    let Ok((mut codes, mut labels)) = buf else {
+                        break; // collector done or bailed
+                    };
+                    let rec = next_record.fetch_add(1, Ordering::Relaxed);
+                    if rec >= entries.len() {
+                        break; // all records claimed; buffer retires
+                    }
+                    let t0 = Instant::now();
+                    // a panicking decode must still produce a message: a
+                    // silently lost record would wedge the collector, which
+                    // waits for every id in order
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        reader.read_into(&entries[rec], starts[rec], &mut codes, &mut labels)
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(Error::Pipeline(format!("replay worker {wid} panicked")))
+                    })
+                    .map(|()| (rec, (codes, labels), t0.elapsed().as_secs_f64(), wid));
+                    if full_tx.send(out).is_err() {
+                        break; // collector bailed on an earlier error
+                    }
+                }
+            });
+        }
+        drop(full_tx);
+
+        // ---- collector (this thread): bounded reorder window ----
+        let mut reorder: std::collections::BTreeMap<usize, ChunkBuf> =
+            std::collections::BTreeMap::new();
+        let mut next_emit = 0usize;
+        for msg in full_rx {
+            let (rec, buf, decode_secs, wid) = msg?;
+            report.hash_cpu_seconds += decode_secs;
+            report.per_worker_chunks[wid] += 1;
+            reorder.insert(rec, buf);
+            report.reorder_peak = report.reorder_peak.max(reorder.len());
+            while let Some((codes, labels)) = reorder.remove(&next_emit) {
+                let t0 = Instant::now();
+                emit(next_emit, starts[next_emit], &codes, &labels)?;
+                report.sink_seconds += t0.elapsed().as_secs_f64();
+                report.docs += codes.n;
+                next_emit += 1;
+                // recycle the buffer (never blocks: in-channel buffers ≤
+                // capacity by conservation; workers-gone is fine)
+                let _ = free_tx.try_send((codes, labels));
+            }
+            if next_emit == n_rec {
+                break; // all emitted; stop before waiting on idle workers
+            }
+        }
+        // unblock any workers still parked on the buffer pool
+        drop(free_tx);
+        if next_emit != n_rec {
+            return Err(Error::Pipeline(format!(
+                "cache replay lost records: emitted {next_emit} of {n_rec}"
+            )));
+        }
+        Ok(())
+    })?;
+    report.chunks = n_rec;
+    report.wall_seconds = wall0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Materialize a whole cache as a [`BbitDataset`], fanning record decode
+/// out across `threads` when the file carries a chunk index — the batch
+/// solvers' parallel loading path.  Output is bit-identical to
+/// [`CacheReader::read_all`] regardless of thread count (records land at
+/// their exact row offsets).  Falls back to the sequential scan (with a
+/// warning) when no usable index exists.
+pub fn materialize_cache<P: AsRef<Path>>(path: P, threads: usize) -> Result<BbitDataset> {
+    let path = path.as_ref();
+    if threads > 1 {
+        if let Some(index) = load_index_or_warn(path)? {
+            return materialize_indexed(path, &index, threads);
+        }
+    }
+    CacheReader::open(path)?.read_all()
+}
+
+fn materialize_indexed(path: &Path, index: &ChunkIndex, threads: usize) -> Result<BbitDataset> {
+    let meta = IndexedCacheReader::open(path)?.meta();
+    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
+        Error::InvalidArg(format!("cache scheme {} is not packed", meta.spec.scheme()))
+    })?;
+    let stride = PackedCodes::new(b, k).stride();
+    let n = meta.n as usize;
+    let n_rec = index.entries.len();
+    let starts = index.row_starts();
+    let mut words = vec![0u64; stride * n];
+    let mut labels = vec![0i8; n];
+    // contiguous record ranges per worker → disjoint output regions
+    let plan = ShardPlan::new(n_rec, n_rec.div_ceil(threads.max(1)).max(1));
+    let mut shards = Vec::with_capacity(plan.n_chunks());
+    let mut rest_w = words.as_mut_slice();
+    let mut rest_l = labels.as_mut_slice();
+    for a in plan.iter() {
+        let rows: usize = index.entries[a.row0..a.row0 + a.rows]
+            .iter()
+            .map(|e| e.rows as usize)
+            .sum();
+        let (w_shard, w_rest) = std::mem::take(&mut rest_w).split_at_mut(rows * stride);
+        let (l_shard, l_rest) = std::mem::take(&mut rest_l).split_at_mut(rows);
+        rest_w = w_rest;
+        rest_l = l_rest;
+        shards.push((a, w_shard, l_shard));
+    }
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(shards.len());
+        for (a, w_shard, l_shard) in shards {
+            let starts = &starts;
+            let entries = &index.entries;
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut reader = IndexedCacheReader::open(path)?;
+                let mut codes = PackedCodes::new(b, k);
+                let mut ls: Vec<i8> = Vec::new();
+                let (mut woff, mut loff) = (0usize, 0usize);
+                for rec in a.row0..a.row0 + a.rows {
+                    reader.read_into(&entries[rec], starts[rec], &mut codes, &mut ls)?;
+                    let w = codes.words();
+                    w_shard[woff..woff + w.len()].copy_from_slice(w);
+                    woff += w.len();
+                    l_shard[loff..loff + ls.len()].copy_from_slice(&ls);
+                    loff += ls.len();
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join()
+                .map_err(|_| Error::Pipeline("cache materialize worker panicked".into()))??;
+        }
+        Ok(())
+    })?;
+    let codes = PackedCodes::from_words(b, k, n, words)?;
+    Ok(BbitDataset::new(codes, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encode::cache::CacheWriter;
+    use crate::encode::encoder::EncoderSpec;
+    use crate::util::Rng;
+
+    /// Write a little cache to a temp file; returns (path, chunks).
+    fn build_cache(tag: &str, sizes: &[usize]) -> (std::path::PathBuf, Vec<(PackedCodes, Vec<i8>)>) {
+        let dir = std::env::temp_dir().join(format!("bbit_replay_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("replay.cache");
+        let spec = EncoderSpec::Bbit { b: 6, k: 17, d: 1 << 20, seed: 5 };
+        let mut w = CacheWriter::create(&path, &spec).unwrap();
+        let mut rng = Rng::new(0x9E9);
+        let mut chunks = Vec::new();
+        for &rows in sizes {
+            let mut pc = PackedCodes::new(6, 17);
+            let mut ls = Vec::new();
+            for _ in 0..rows {
+                let row: Vec<u16> = (0..17).map(|_| rng.below(1 << 6) as u16).collect();
+                pc.push_row(&row).unwrap();
+                ls.push(if rng.bool() { 1 } else { -1 });
+            }
+            w.write_chunk(&pc, &ls).unwrap();
+            chunks.push((pc, ls));
+        }
+        w.finalize().unwrap();
+        (path, chunks)
+    }
+
+    fn collect_replay(
+        path: &std::path::Path,
+        threads: usize,
+    ) -> (Vec<(usize, u64, PackedCodes, Vec<i8>)>, PipelineReport) {
+        let mut seen = Vec::new();
+        let report = replay_cache(path, threads, |rec, row0, codes, labels| {
+            seen.push((rec, row0, codes.clone(), labels.to_vec()));
+            Ok(())
+        })
+        .unwrap();
+        (seen, report)
+    }
+
+    #[test]
+    fn pool_emits_in_order_and_matches_sequential() {
+        let sizes = [13usize, 64, 1, 40, 27, 64, 9, 30, 30, 5];
+        let (path, chunks) = build_cache("order", &sizes);
+        let (seq, seq_report) = collect_replay(&path, 1);
+        assert_eq!(seq_report.replay_threads, 1);
+        assert_eq!(seq.len(), sizes.len());
+        for threads in [2usize, 4, 7] {
+            let (par, report) = collect_replay(&path, threads);
+            assert_eq!(par, seq, "threads={threads}");
+            assert_eq!(report.chunks, sizes.len());
+            assert_eq!(report.docs, sizes.iter().sum::<usize>());
+            assert_eq!(report.per_worker_chunks.iter().sum::<usize>(), sizes.len());
+            assert!(report.replay_bytes > 0);
+        }
+        // emitted ids/rows are the exact record map
+        for (i, (rec, row0, codes, labels)) in seq.iter().enumerate() {
+            assert_eq!(*rec, i);
+            assert_eq!(*row0, sizes[..i].iter().sum::<usize>() as u64);
+            assert_eq!(codes, &chunks[i].0);
+            assert_eq!(labels, &chunks[i].1);
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn more_threads_than_records_is_fine() {
+        let (path, chunks) = build_cache("tiny", &[5, 3]);
+        let (par, report) = collect_replay(&path, 16);
+        assert_eq!(par.len(), 2);
+        assert_eq!(par[1].2, chunks[1].0);
+        assert!(report.replay_threads <= 2, "pool must clamp to record count");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn missing_footer_falls_back_to_sequential() {
+        let (path, _) = build_cache("fallback", &[20, 20, 20]);
+        // tear the trailer off: index unusable, records intact
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let (seq, _) = collect_replay(&path, 1);
+        let (par, report) = collect_replay(&path, 4);
+        assert_eq!(par, seq, "fallback must replay the identical stream");
+        assert_eq!(report.replay_threads, 1, "fallback runs sequentially");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn emit_errors_stop_the_pool() {
+        let (path, _) = build_cache("emit_err", &[10, 10, 10, 10, 10, 10]);
+        let mut emitted = 0usize;
+        let err = replay_cache(&path, 4, |_, _, _, _| {
+            emitted += 1;
+            Err(Error::Pipeline("sink full".into()))
+        });
+        assert!(err.is_err());
+        assert_eq!(emitted, 1, "emit must stop at the first error");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn corrupt_record_errors_propagate_from_workers() {
+        let (path, _) = build_cache("corrupt", &[32, 32, 32, 32]);
+        let index = ChunkIndex::load(&path).unwrap().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let target = index.entries[2].offset as usize + 12 + 3; // payload of record 2
+        bytes[target] ^= 0x20;
+        // keep the footer valid so the pool path actually runs: the entry
+        // checksum now disagrees with the payload, which is the point
+        std::fs::write(&path, &bytes).unwrap();
+        let err = replay_cache(&path, 4, |_, _, _, _| Ok(()));
+        assert!(err.is_err(), "flipped payload byte must fail the pool");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

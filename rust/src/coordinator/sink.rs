@@ -117,6 +117,17 @@ impl CacheSink<BufWriter<File>> {
     pub fn create<P: AsRef<Path>>(path: P, spec: &EncoderSpec) -> Result<Self> {
         Ok(CacheSink { writer: CacheWriter::create(path, spec)? })
     }
+
+    /// [`create`](Self::create) with explicit write options
+    /// (`preprocess --cache-compress` sets
+    /// [`CacheWriteOptions::compress`](crate::encode::cache::CacheWriteOptions)).
+    pub fn create_opts<P: AsRef<Path>>(
+        path: P,
+        spec: &EncoderSpec,
+        opts: crate::encode::cache::CacheWriteOptions,
+    ) -> Result<Self> {
+        Ok(CacheSink { writer: CacheWriter::create_opts(path, spec, opts)? })
+    }
 }
 
 impl<W: Write + Seek> CacheSink<W> {
@@ -127,6 +138,12 @@ impl<W: Write + Seek> CacheSink<W> {
     /// Rows written so far.
     pub fn rows_written(&self) -> u64 {
         self.writer.rows_written()
+    }
+
+    /// Header metadata accumulated so far (row count + raw/stored payload
+    /// byte totals — the CLI's compression report).
+    pub fn meta(&self) -> crate::encode::cache::CacheMeta {
+        self.writer.meta()
     }
 }
 

@@ -9,42 +9,59 @@
 //! b-bit codes — whichever [`FeatureEncoder`](crate::encode::encoder)
 //! scheme produced them (b-bit minwise, OPH, ...): a sequential,
 //! checksummed record stream a 200GB-scale corpus can be written to and
-//! replayed from in constant memory.
+//! replayed from in constant memory.  Since v3 the file is also
+//! *seekable*: a chunk-index footer makes any record addressable without a
+//! pre-scan, so a reader pool ([`crate::coordinator::replay`]) can fan
+//! replay out across cores.
 //!
 //! ## Layout (all integers little-endian)
 //!
-//! v2 (current — written by every [`CacheWriter`]):
+//! v3 (current — written by every [`CacheWriter`]):
 //!
 //! ```text
 //!   magic  b"BBHC"
-//!   u32    format version (= 2)
+//!   u32    format version (= 3)
 //!   u32    scheme tag     ┐
 //!   u32    p0             │ the EncoderSpec, via
 //!   u64    p1             │ EncoderSpec::header_fields — any reader can
 //!   u64    p2             │ verify a model trained from this cache used
 //!   u64    seed           ┘ the same encoder family
+//!   u32    flags          bit 0: record payloads are RLE-compressed
+//!                         (encode::codec); other bits reserved (readers
+//!                         reject files with unknown bits set)
+//!   u64    raw bytes      total uncompressed payload bytes  (patched on
+//!   u64    stored bytes   total on-disk payload bytes        finalize)
 //!   u64    n              total rows (patched on finalize; u64::MAX while
 //!                         the writer is still open — readers reject it)
-//!   repeated chunk records (identical to v1):
+//!   repeated chunk records:
 //!     u32    rows in this chunk
-//!     u64    payload bytes (= rows labels + rows·stride packed words)
-//!     [i8]   labels (one byte per row)
-//!     [u64]  packed code words (row-major, PackedCodes layout)
-//!     u64    FNV-1a checksum over the rows field + payload bytes
+//!     u64    stored payload bytes
+//!     [u8]   payload: rows labels then rows·stride packed words — raw, or
+//!            codec-compressed when flag bit 0 is set
+//!     u64    FNV-1a checksum over the rows field + stored payload bytes
+//!   chunk-index footer (written by finalize; 20 bytes per record):
+//!     u64    byte offset of the record (its rows field)
+//!     u32    rows in the record
+//!     u64    the record's checksum (== the one stored inline)
+//!   trailer (32 bytes, fixed at end-of-file):
+//!     u64    byte offset of the first index entry
+//!     u64    record count
+//!     u64    FNV-1a checksum over the index entry bytes
+//!     [u8;8] b"BBHCIDX1"
 //! ```
 //!
-//! v1 (legacy — still readable; always b-bit minwise):
+//! The footer is strictly additive: a sequential [`CacheReader`] stops
+//! after `n` rows and never sees it, and a truncated/corrupt footer makes
+//! [`ChunkIndex::load`] report "no index" (callers fall back to the
+//! sequential scan with a warning) rather than failing the file.
 //!
-//! ```text
-//!   magic  b"BBHC"
-//!   u32    format version (= 1)
-//!   u32    b / u64 k / u64 d / u64 seed   (⇒ EncoderSpec::Bbit)
-//!   u64    n
-//!   repeated chunk records as above
-//! ```
+//! v2 (legacy — still readable): the v3 header without the
+//! `flags`/`raw`/`stored` fields, no footer, payloads never compressed.
+//! v1 (legacy — still readable; always b-bit minwise): fixed
+//! `b/k/d/seed/n` header, records as in v2.
 //!
 //! Only packed-code schemes are cacheable (the record payload *is* the
-//! [`PackedCodes`] word stream); the v2 header's tag space covers the
+//! [`PackedCodes`] word stream); the header's tag space covers the
 //! sparse schemes too so the format never needs another bump to learn
 //! them.  Records are chunk-granular on purpose: the writer is fed by the
 //! pipeline's in-order collector ([`CacheSink`](crate::coordinator::sink)),
@@ -56,6 +73,7 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
+use crate::encode::codec;
 use crate::encode::encoder::EncoderSpec;
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
@@ -63,17 +81,29 @@ use crate::{Error, Result};
 
 /// File magic for the hashed-chunk cache.
 pub const CACHE_MAGIC: &[u8; 4] = b"BBHC";
-/// Current format version (v2: scheme-tagged spec header).
-pub const CACHE_VERSION: u32 = 2;
+/// Current format version (v3: chunk-index footer + optional compression).
+pub const CACHE_VERSION: u32 = 3;
 /// Oldest version the reader still accepts.
 pub const CACHE_VERSION_MIN: u32 = 1;
 /// v2 header bytes before the first record
 /// (magic + version + tag + p0 + p1 + p2 + seed + n).
-const HEADER_BYTES_V2: u64 = 4 + 4 + 4 + 4 + 8 + 8 + 8 + 8;
-/// Byte offset of the v2 `n` field (patched by `finalize`).
-const N_OFFSET_V2: u64 = HEADER_BYTES_V2 - 8;
+pub const HEADER_BYTES_V2: u64 = 4 + 4 + 4 + 4 + 8 + 8 + 8 + 8;
+/// v3 header bytes before the first record (v2's fields + flags + the two
+/// payload byte totals).
+pub const HEADER_BYTES_V3: u64 = 4 + 4 + 4 + 4 + 8 + 8 + 8 + 4 + 8 + 8 + 8;
+/// Byte offset of the v3 `raw bytes` field — `raw`/`stored`/`n` are
+/// contiguous so `finalize` patches all three with one write.
+const STATS_OFFSET_V3: u64 = HEADER_BYTES_V3 - 24;
 /// Placeholder `n` while a writer is open; readers reject it.
 const N_UNFINALIZED: u64 = u64::MAX;
+/// v3 flag bit 0: record payloads are compressed with [`codec`].
+pub const CACHE_FLAG_COMPRESSED: u32 = 1;
+/// Bytes per chunk-index footer entry (offset + rows + checksum).
+pub const INDEX_ENTRY_BYTES: u64 = 8 + 4 + 8;
+/// Bytes of the fixed trailer at end-of-file.
+pub const TRAILER_BYTES: u64 = 8 + 8 + 8 + 8;
+/// Trailer magic: "BBHC index v1".
+const TRAILER_MAGIC: &[u8; 8] = b"BBHCIDX1";
 
 /// The encoder recipe + row count stored in the cache header.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -82,6 +112,14 @@ pub struct CacheMeta {
     pub spec: EncoderSpec,
     /// Total rows across all records.
     pub n: u64,
+    /// Record payloads are stored RLE-compressed (v3 flag bit 0).
+    pub compressed: bool,
+    /// Total uncompressed payload bytes across all records (0 for pre-v3
+    /// headers, which did not record byte totals).
+    pub raw_bytes: u64,
+    /// Total on-disk payload bytes (== `raw_bytes` for uncompressed v3
+    /// files; 0 for pre-v3 headers).
+    pub stored_bytes: u64,
 }
 
 impl CacheMeta {
@@ -123,8 +161,18 @@ fn packed_geometry(spec: &EncoderSpec) -> Result<(u32, usize, usize)> {
     Ok((b, k, (k * b as usize).div_ceil(64)))
 }
 
+/// Writer knobs beyond the encoder spec.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheWriteOptions {
+    /// RLE-compress record payloads ([`codec`]; `preprocess
+    /// --cache-compress`).  Transparent on read — the v3 header flag tells
+    /// the reader to decompress.
+    pub compress: bool,
+}
+
 /// Buffered, append-only cache writer.  Records go out as chunks arrive;
-/// [`finalize`](Self::finalize) patches the row count into the header.
+/// [`finalize`](Self::finalize) writes the chunk-index footer and patches
+/// the row/byte counts into the header.
 pub struct CacheWriter<W: Write + Seek> {
     out: W,
     meta: CacheMeta,
@@ -132,44 +180,86 @@ pub struct CacheWriter<W: Write + Seek> {
     k: usize,
     stride: usize,
     finalized: bool,
+    /// Byte offset the next record will land at (header + records so far).
+    offset: u64,
+    /// One entry per record written — becomes the v3 footer.
+    index: Vec<ChunkIndexEntry>,
     /// Reusable record-payload staging buffer (labels + words serialized
     /// once, then checksummed and written as single bulk calls).
     scratch: Vec<u8>,
+    /// Compressed-payload staging (used only with `compress`).
+    comp: Vec<u8>,
 }
 
 impl CacheWriter<BufWriter<File>> {
     /// Create (truncating) a cache file for the given encoder spec.
     pub fn create<P: AsRef<Path>>(path: P, spec: &EncoderSpec) -> Result<Self> {
-        CacheWriter::new(BufWriter::with_capacity(1 << 20, File::create(path)?), spec)
+        CacheWriter::create_opts(path, spec, CacheWriteOptions::default())
+    }
+
+    /// [`create`](Self::create) with explicit [`CacheWriteOptions`].
+    pub fn create_opts<P: AsRef<Path>>(
+        path: P,
+        spec: &EncoderSpec,
+        opts: CacheWriteOptions,
+    ) -> Result<Self> {
+        CacheWriter::with_options(
+            BufWriter::with_capacity(1 << 20, File::create(path)?),
+            spec,
+            opts,
+        )
     }
 }
 
 impl<W: Write + Seek> CacheWriter<W> {
-    pub fn new(mut out: W, spec: &EncoderSpec) -> Result<Self> {
+    pub fn new(out: W, spec: &EncoderSpec) -> Result<Self> {
+        CacheWriter::with_options(out, spec, CacheWriteOptions::default())
+    }
+
+    pub fn with_options(mut out: W, spec: &EncoderSpec, opts: CacheWriteOptions) -> Result<Self> {
         spec.validate()?;
         let (b, k, stride) = packed_geometry(spec)?;
         let (tag, p0, p1, p2, seed) = spec.header_fields();
+        let flags = if opts.compress { CACHE_FLAG_COMPRESSED } else { 0 };
         out.write_all(CACHE_MAGIC)?;
         out.write_all(&CACHE_VERSION.to_le_bytes())?;
         out.write_all(&tag.to_le_bytes())?;
         out.write_all(&p0.to_le_bytes())?;
-        for v in [p1, p2, seed, N_UNFINALIZED] {
+        for v in [p1, p2, seed] {
+            out.write_all(&v.to_le_bytes())?;
+        }
+        out.write_all(&flags.to_le_bytes())?;
+        for v in [0u64, 0u64, N_UNFINALIZED] {
             out.write_all(&v.to_le_bytes())?;
         }
         Ok(CacheWriter {
             out,
-            meta: CacheMeta { spec: *spec, n: 0 },
+            meta: CacheMeta {
+                spec: *spec,
+                n: 0,
+                compressed: opts.compress,
+                raw_bytes: 0,
+                stored_bytes: 0,
+            },
             b,
             k,
             stride,
             finalized: false,
+            offset: HEADER_BYTES_V3,
+            index: Vec::new(),
             scratch: Vec::new(),
+            comp: Vec::new(),
         })
     }
 
     /// Rows written so far.
     pub fn rows_written(&self) -> u64 {
         self.meta.n
+    }
+
+    /// Header metadata as written so far (byte totals grow per chunk).
+    pub fn meta(&self) -> CacheMeta {
+        self.meta
     }
 
     /// Append one hashed chunk as a checksummed record.
@@ -203,26 +293,56 @@ impl<W: Write + Seek> CacheWriter<W> {
         for &word in codes.words() {
             self.scratch.extend_from_slice(&word.to_le_bytes());
         }
-        let payload_len = self.scratch.len() as u64;
+        let raw_len = self.scratch.len() as u64;
+        let stored: &[u8] = if self.meta.compressed {
+            codec::compress(&self.scratch, &mut self.comp);
+            &self.comp
+        } else {
+            &self.scratch
+        };
+        let stored_len = stored.len() as u64;
         let mut sum = Fnv1a::new();
         sum.update(&rows.to_le_bytes());
-        sum.update(&self.scratch);
+        sum.update(stored);
+        let checksum = sum.finish();
         self.out.write_all(&rows.to_le_bytes())?;
-        self.out.write_all(&payload_len.to_le_bytes())?;
-        self.out.write_all(&self.scratch)?;
-        self.out.write_all(&sum.finish().to_le_bytes())?;
+        self.out.write_all(&stored_len.to_le_bytes())?;
+        self.out.write_all(stored)?;
+        self.out.write_all(&checksum.to_le_bytes())?;
+        self.index.push(ChunkIndexEntry { offset: self.offset, rows, checksum });
+        self.offset += 4 + 8 + stored_len + 8;
         self.meta.n += codes.n as u64;
+        self.meta.raw_bytes += raw_len;
+        self.meta.stored_bytes += stored_len;
         Ok(())
     }
 
-    /// Patch the header row count and flush.  Idempotent; a cache that was
-    /// never finalized (crash mid-write) is rejected by the reader.
+    /// Write the chunk-index footer, patch the header byte/row counts, and
+    /// flush.  Idempotent; a cache that was never finalized (crash
+    /// mid-write) is rejected by the reader.
     pub fn finalize(&mut self) -> Result<()> {
         if self.finalized {
             return Ok(());
         }
-        self.out.seek(SeekFrom::Start(N_OFFSET_V2))?;
-        self.out.write_all(&self.meta.n.to_le_bytes())?;
+        // footer: one fixed-width entry per record, checksummed as a block
+        let mut entries = Vec::with_capacity(self.index.len() * INDEX_ENTRY_BYTES as usize);
+        for e in &self.index {
+            entries.extend_from_slice(&e.offset.to_le_bytes());
+            entries.extend_from_slice(&e.rows.to_le_bytes());
+            entries.extend_from_slice(&e.checksum.to_le_bytes());
+        }
+        let mut sum = Fnv1a::new();
+        sum.update(&entries);
+        self.out.write_all(&entries)?;
+        self.out.write_all(&self.offset.to_le_bytes())?;
+        self.out.write_all(&(self.index.len() as u64).to_le_bytes())?;
+        self.out.write_all(&sum.finish().to_le_bytes())?;
+        self.out.write_all(TRAILER_MAGIC)?;
+        // patch raw/stored/n (contiguous) in one seek+write
+        self.out.seek(SeekFrom::Start(STATS_OFFSET_V3))?;
+        for v in [self.meta.raw_bytes, self.meta.stored_bytes, self.meta.n] {
+            self.out.write_all(&v.to_le_bytes())?;
+        }
         self.out.seek(SeekFrom::End(0))?;
         self.out.flush()?;
         self.finalized = true;
@@ -230,15 +350,184 @@ impl<W: Write + Seek> CacheWriter<W> {
     }
 }
 
-/// Sequential cache reader: header up front (v1 or v2), then one chunk
-/// per [`next_chunk`](Self::next_chunk) call with checksum verification —
-/// constant memory regardless of corpus size.
-pub struct CacheReader<R: Read> {
-    inner: R,
-    meta: CacheMeta,
+/// Parse a v1/v2/v3 header from the current stream position, returning
+/// the metadata and the on-disk version.
+fn read_header<R: Read>(inner: &mut R) -> Result<(CacheMeta, u32)> {
+    let mut magic = [0u8; 4];
+    inner.read_exact(&mut magic)?;
+    if &magic != CACHE_MAGIC {
+        return Err(Error::InvalidArg("bad cache magic (not a BBHC file)".into()));
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    let mut next_u32 = |r: &mut R| -> Result<u32> {
+        r.read_exact(&mut u32buf)?;
+        Ok(u32::from_le_bytes(u32buf))
+    };
+    let mut next_u64 = |r: &mut R| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let version = next_u32(inner)?;
+    let (spec, n, flags, raw_bytes, stored_bytes) = match version {
+        // v1: fixed b-bit header {b, k, d, seed}
+        1 => {
+            let b = next_u32(inner)?;
+            let k = next_u64(inner)? as usize;
+            let d = next_u64(inner)?;
+            let seed = next_u64(inner)?;
+            let n = next_u64(inner)?;
+            (EncoderSpec::Bbit { b, k, d, seed }, n, 0, 0, 0)
+        }
+        // v2: scheme-tagged EncoderSpec
+        // v3: v2 + flags + payload byte totals (and an index footer the
+        //     sequential reader never visits)
+        2 | 3 => {
+            let tag = next_u32(inner)?;
+            let p0 = next_u32(inner)?;
+            let p1 = next_u64(inner)?;
+            let p2 = next_u64(inner)?;
+            let seed = next_u64(inner)?;
+            let (flags, raw, stored) = if version == 3 {
+                (next_u32(inner)?, next_u64(inner)?, next_u64(inner)?)
+            } else {
+                (0, 0, 0)
+            };
+            let n = next_u64(inner)?;
+            (EncoderSpec::from_header_fields(tag, p0, p1, p2, seed)?, n, flags, raw, stored)
+        }
+        v => {
+            return Err(Error::InvalidArg(format!(
+                "unsupported cache version {v} (expected {CACHE_VERSION_MIN}..={CACHE_VERSION})"
+            )))
+        }
+    };
+    if flags & !CACHE_FLAG_COMPRESSED != 0 {
+        return Err(Error::InvalidArg(format!(
+            "cache uses unknown feature flags {flags:#x} (newer writer?)"
+        )));
+    }
+    spec.validate()
+        .map_err(|e| Error::InvalidArg(format!("corrupt cache header: {e}")))?;
+    if n == N_UNFINALIZED {
+        return Err(Error::InvalidArg(
+            "cache was never finalized (writer crashed mid-write?)".into(),
+        ));
+    }
+    let meta = CacheMeta {
+        spec,
+        n,
+        compressed: flags & CACHE_FLAG_COMPRESSED != 0,
+        raw_bytes,
+        stored_bytes,
+    };
+    Ok((meta, version))
+}
+
+/// Record decode engine shared by the sequential and the indexed readers:
+/// owns the reusable payload/decompression scratch so replaying a cache
+/// allocates nothing per record.
+struct RecordDecoder {
     b: u32,
     k: usize,
     stride: usize,
+    compressed: bool,
+    /// On-disk payload scratch (compressed or raw).
+    payload: Vec<u8>,
+    /// Decompressed payload scratch (compressed caches only).
+    raw: Vec<u8>,
+}
+
+impl RecordDecoder {
+    fn for_meta(meta: &CacheMeta) -> Result<Self> {
+        let (b, k, stride) = packed_geometry(&meta.spec)?;
+        Ok(RecordDecoder {
+            b,
+            k,
+            stride,
+            compressed: meta.compressed,
+            payload: Vec::new(),
+            raw: Vec::new(),
+        })
+    }
+
+    /// Read + verify one record from `r` into the caller's scratch
+    /// buffers.  `row0` is the record's first global row (for error
+    /// context), `rows_cap` the most rows this record may legally carry.
+    /// Returns (rows decoded, the record's stored checksum).
+    fn read_from<R: Read>(
+        &mut self,
+        r: &mut R,
+        row0: u64,
+        rows_cap: u64,
+        codes: &mut PackedCodes,
+        labels: &mut Vec<i8>,
+    ) -> Result<(usize, u64)> {
+        if codes.b != self.b || codes.k != self.k {
+            return Err(Error::InvalidArg(format!(
+                "scratch geometry (b={}, k={}) does not match cache (b={}, k={})",
+                codes.b, codes.k, self.b, self.k
+            )));
+        }
+        let mut u32buf = [0u8; 4];
+        let mut u64buf = [0u8; 8];
+        r.read_exact(&mut u32buf)?;
+        let rows = u32::from_le_bytes(u32buf) as usize;
+        r.read_exact(&mut u64buf)?;
+        let stored_len = u64::from_le_bytes(u64buf);
+        if rows as u64 > rows_cap {
+            return Err(Error::InvalidArg(format!(
+                "cache records overrun header count ({row0} + {rows} > {})",
+                row0 + rows_cap
+            )));
+        }
+        let raw_expect = rows as u64 + 8 * rows as u64 * self.stride as u64;
+        let len_ok = if self.compressed {
+            stored_len <= codec::max_compressed_len(raw_expect)
+        } else {
+            stored_len == raw_expect
+        };
+        if rows == 0 || !len_ok {
+            return Err(Error::InvalidArg(format!(
+                "corrupt cache record at row {row0}: {rows} rows, stored payload {stored_len} \
+                 (raw size {raw_expect})"
+            )));
+        }
+        self.payload.clear();
+        self.payload.resize(stored_len as usize, 0);
+        r.read_exact(&mut self.payload)?;
+        let mut sum = Fnv1a::new();
+        sum.update(&u32buf);
+        sum.update(&self.payload);
+        r.read_exact(&mut u64buf)?;
+        let stored_sum = u64::from_le_bytes(u64buf);
+        if stored_sum != sum.finish() {
+            return Err(Error::InvalidArg(format!(
+                "cache checksum mismatch at row {row0} (stored {stored_sum:#018x}, computed {:#018x})",
+                sum.finish()
+            )));
+        }
+        let raw: &[u8] = if self.compressed {
+            codec::decompress(&self.payload, &mut self.raw, raw_expect as usize)?;
+            &self.raw
+        } else {
+            &self.payload
+        };
+        labels.clear();
+        labels.extend(raw[..rows].iter().map(|&v| v as i8));
+        codes.fill_from_le_bytes(rows, &raw[rows..])?;
+        Ok((rows, stored_sum))
+    }
+}
+
+/// Sequential cache reader: header up front (v1, v2 or v3), then one chunk
+/// per [`next_chunk_into`](Self::next_chunk_into) call with checksum
+/// verification — constant memory regardless of corpus size, zero
+/// allocation per record on the scratch-reuse path.
+pub struct CacheReader<R: Read> {
+    inner: R,
+    meta: CacheMeta,
+    decoder: RecordDecoder,
     rows_read: u64,
     poisoned: bool,
 }
@@ -251,65 +540,9 @@ impl CacheReader<BufReader<File>> {
 
 impl<R: Read> CacheReader<R> {
     pub fn new(mut inner: R) -> Result<Self> {
-        let mut magic = [0u8; 4];
-        inner.read_exact(&mut magic)?;
-        if &magic != CACHE_MAGIC {
-            return Err(Error::InvalidArg("bad cache magic (not a BBHC file)".into()));
-        }
-        let mut u32buf = [0u8; 4];
-        let mut u64buf = [0u8; 8];
-        let mut next_u32 = |r: &mut R| -> Result<u32> {
-            r.read_exact(&mut u32buf)?;
-            Ok(u32::from_le_bytes(u32buf))
-        };
-        let mut next_u64 = |r: &mut R| -> Result<u64> {
-            r.read_exact(&mut u64buf)?;
-            Ok(u64::from_le_bytes(u64buf))
-        };
-        let version = next_u32(&mut inner)?;
-        let (spec, n) = match version {
-            // v1: fixed b-bit header {b, k, d, seed}
-            1 => {
-                let b = next_u32(&mut inner)?;
-                let k = next_u64(&mut inner)? as usize;
-                let d = next_u64(&mut inner)?;
-                let seed = next_u64(&mut inner)?;
-                let n = next_u64(&mut inner)?;
-                (EncoderSpec::Bbit { b, k, d, seed }, n)
-            }
-            // v2: scheme-tagged EncoderSpec
-            2 => {
-                let tag = next_u32(&mut inner)?;
-                let p0 = next_u32(&mut inner)?;
-                let p1 = next_u64(&mut inner)?;
-                let p2 = next_u64(&mut inner)?;
-                let seed = next_u64(&mut inner)?;
-                let n = next_u64(&mut inner)?;
-                (EncoderSpec::from_header_fields(tag, p0, p1, p2, seed)?, n)
-            }
-            v => {
-                return Err(Error::InvalidArg(format!(
-                    "unsupported cache version {v} (expected {CACHE_VERSION_MIN}..={CACHE_VERSION})"
-                )))
-            }
-        };
-        spec.validate()
-            .map_err(|e| Error::InvalidArg(format!("corrupt cache header: {e}")))?;
-        if n == N_UNFINALIZED {
-            return Err(Error::InvalidArg(
-                "cache was never finalized (writer crashed mid-write?)".into(),
-            ));
-        }
-        let (b, k, stride) = packed_geometry(&spec)?;
-        Ok(CacheReader {
-            inner,
-            meta: CacheMeta { spec, n },
-            b,
-            k,
-            stride,
-            rows_read: 0,
-            poisoned: false,
-        })
+        let (meta, _version) = read_header(&mut inner)?;
+        let decoder = RecordDecoder::for_meta(&meta)?;
+        Ok(CacheReader { inner, meta, decoder, rows_read: 0, poisoned: false })
     }
 
     /// The encoder recipe + row count from the header.
@@ -317,17 +550,32 @@ impl<R: Read> CacheReader<R> {
         self.meta
     }
 
-    /// Read and verify the next chunk record; `None` once all `meta.n`
-    /// rows have been replayed.
-    pub fn next_chunk(&mut self) -> Result<Option<(PackedCodes, Vec<i8>)>> {
+    /// Read and verify the next chunk record into the caller's reusable
+    /// scratch buffers (`codes` keeps the cache's (b, k) geometry across
+    /// calls; both buffers are overwritten).  Returns `false` once all
+    /// `meta.n` rows have been replayed — the zero-alloc replay hot path.
+    pub fn next_chunk_into(
+        &mut self,
+        codes: &mut PackedCodes,
+        labels: &mut Vec<i8>,
+    ) -> Result<bool> {
         if self.poisoned {
             return Err(Error::InvalidArg("cache reader poisoned by earlier error".into()));
         }
         if self.rows_read >= self.meta.n {
-            return Ok(None);
+            return Ok(false);
         }
-        match self.read_record() {
-            Ok(chunk) => Ok(Some(chunk)),
+        match self.decoder.read_from(
+            &mut self.inner,
+            self.rows_read,
+            self.meta.n - self.rows_read,
+            codes,
+            labels,
+        ) {
+            Ok((rows, _)) => {
+                self.rows_read += rows as u64;
+                Ok(true)
+            }
             Err(e) => {
                 self.poisoned = true;
                 Err(e)
@@ -335,63 +583,33 @@ impl<R: Read> CacheReader<R> {
         }
     }
 
-    fn read_record(&mut self) -> Result<(PackedCodes, Vec<i8>)> {
-        let mut u32buf = [0u8; 4];
-        let mut u64buf = [0u8; 8];
-        self.inner.read_exact(&mut u32buf)?;
-        let rows = u32::from_le_bytes(u32buf) as usize;
-        self.inner.read_exact(&mut u64buf)?;
-        let payload_len = u64::from_le_bytes(u64buf);
-        let expect = rows as u64 + 8 * rows as u64 * self.stride as u64;
-        if rows == 0 || payload_len != expect {
-            return Err(Error::InvalidArg(format!(
-                "corrupt cache record at row {}: {} rows, payload {} (expected {})",
-                self.rows_read, rows, payload_len, expect
-            )));
+    /// Allocating form of [`next_chunk_into`](Self::next_chunk_into):
+    /// `None` once all `meta.n` rows have been replayed.
+    pub fn next_chunk(&mut self) -> Result<Option<(PackedCodes, Vec<i8>)>> {
+        let mut codes = PackedCodes::new(self.decoder.b, self.decoder.k);
+        let mut labels = Vec::new();
+        if self.next_chunk_into(&mut codes, &mut labels)? {
+            Ok(Some((codes, labels)))
+        } else {
+            Ok(None)
         }
-        if self.rows_read + rows as u64 > self.meta.n {
-            return Err(Error::InvalidArg(format!(
-                "cache records overrun header count ({} + {} > {})",
-                self.rows_read, rows, self.meta.n
-            )));
-        }
-        let mut sum = Fnv1a::new();
-        sum.update(&u32buf);
-        let mut label_bytes = vec![0u8; rows];
-        self.inner.read_exact(&mut label_bytes)?;
-        sum.update(&label_bytes);
-        let mut word_bytes = vec![0u8; 8 * rows * self.stride];
-        self.inner.read_exact(&mut word_bytes)?;
-        sum.update(&word_bytes);
-        self.inner.read_exact(&mut u64buf)?;
-        let stored = u64::from_le_bytes(u64buf);
-        if stored != sum.finish() {
-            return Err(Error::InvalidArg(format!(
-                "cache checksum mismatch at row {} (stored {stored:#018x}, computed {:#018x})",
-                self.rows_read,
-                sum.finish()
-            )));
-        }
-        let labels: Vec<i8> = label_bytes.into_iter().map(|v| v as i8).collect();
-        let words: Vec<u64> = word_bytes
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        let codes = PackedCodes::from_words(self.b, self.k, rows, words)?;
-        self.rows_read += rows as u64;
-        Ok((codes, labels))
     }
 
     /// Materialize the whole cache (small inputs / batch solvers; the
-    /// streaming trainer never calls this).
+    /// streaming trainer never calls this).  Buffers are pre-sized from
+    /// the header's row count and filled through the scratch-reuse path.
     pub fn read_all(mut self) -> Result<BbitDataset> {
-        let mut all = PackedCodes::new(self.b, self.k);
+        let n = self.meta.n as usize;
+        let mut all = PackedCodes::new(self.decoder.b, self.decoder.k);
+        all.reserve_rows(n);
+        let mut all_labels: Vec<i8> = Vec::with_capacity(n);
+        let mut codes = PackedCodes::new(self.decoder.b, self.decoder.k);
         let mut labels = Vec::new();
-        while let Some((codes, ls)) = self.next_chunk()? {
+        while self.next_chunk_into(&mut codes, &mut labels)? {
             all.extend(&codes)?;
-            labels.extend(ls);
+            all_labels.extend_from_slice(&labels);
         }
-        Ok(BbitDataset::new(all, labels))
+        Ok(BbitDataset::new(all, all_labels))
     }
 }
 
@@ -400,6 +618,180 @@ impl<R: Read> Iterator for CacheReader<R> {
 
     fn next(&mut self) -> Option<Self::Item> {
         self.next_chunk().transpose()
+    }
+}
+
+/// One chunk-index footer entry: where a record lives and what it holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkIndexEntry {
+    /// Absolute byte offset of the record (its `rows` field).
+    pub offset: u64,
+    /// Rows in the record.
+    pub rows: u32,
+    /// The record's FNV-1a checksum (== the one stored inline after the
+    /// payload) — an indexed reader can verify without trusting the seek.
+    pub checksum: u64,
+}
+
+/// The parsed v3 chunk-index footer: the record map that makes a cache
+/// partitionable without a pre-scan.
+#[derive(Clone, Debug)]
+pub struct ChunkIndex {
+    /// One entry per record, in file (= replay) order.
+    pub entries: Vec<ChunkIndexEntry>,
+    /// Byte offset one past the last record (= where the footer starts) —
+    /// the exact length of the header + record stream.
+    pub records_end: u64,
+}
+
+impl ChunkIndex {
+    /// Total rows across all indexed records.
+    pub fn rows_total(&self) -> u64 {
+        self.entries.iter().map(|e| e.rows as u64).sum()
+    }
+
+    /// Global first-row index of each record (exclusive prefix sums) —
+    /// what deterministic per-row consumers (holdout splits) key on.
+    pub fn row_starts(&self) -> Vec<u64> {
+        let mut starts = Vec::with_capacity(self.entries.len());
+        let mut row = 0u64;
+        for e in &self.entries {
+            starts.push(row);
+            row += e.rows as u64;
+        }
+        starts
+    }
+
+    /// Load the footer of a cache file.  `Ok(None)` means the file is
+    /// valid but has no usable index — pre-v3 version, or a truncated /
+    /// corrupt footer (callers fall back to the sequential scan); hard IO
+    /// and header errors stay `Err`.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Option<ChunkIndex>> {
+        ChunkIndex::from_reader(&mut File::open(path)?)
+    }
+
+    /// [`load`](Self::load) over any seekable stream (tests use an
+    /// in-memory cursor).
+    pub fn from_reader<R: Read + Seek>(r: &mut R) -> Result<Option<ChunkIndex>> {
+        r.seek(SeekFrom::Start(0))?;
+        let (meta, version) = read_header(r)?;
+        if version < 3 {
+            return Ok(None);
+        }
+        let len = r.seek(SeekFrom::End(0))?;
+        if len < HEADER_BYTES_V3 + TRAILER_BYTES {
+            return Ok(None);
+        }
+        r.seek(SeekFrom::Start(len - TRAILER_BYTES))?;
+        let mut trailer = [0u8; TRAILER_BYTES as usize];
+        r.read_exact(&mut trailer)?;
+        if &trailer[24..32] != TRAILER_MAGIC {
+            return Ok(None);
+        }
+        let index_off = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
+        let count = u64::from_le_bytes(trailer[8..16].try_into().unwrap());
+        let stored_sum = u64::from_le_bytes(trailer[16..24].try_into().unwrap());
+        // bound both fields before any arithmetic: a corrupt trailer with
+        // a huge offset/count must downgrade to "no index", never overflow
+        let max_index_off = len - TRAILER_BYTES;
+        if index_off < HEADER_BYTES_V3
+            || index_off > max_index_off
+            || count > len / INDEX_ENTRY_BYTES
+            || count * INDEX_ENTRY_BYTES != max_index_off - index_off
+        {
+            return Ok(None);
+        }
+        r.seek(SeekFrom::Start(index_off))?;
+        let mut bytes = vec![0u8; (count * INDEX_ENTRY_BYTES) as usize];
+        r.read_exact(&mut bytes)?;
+        let mut sum = Fnv1a::new();
+        sum.update(&bytes);
+        if sum.finish() != stored_sum {
+            return Ok(None);
+        }
+        let mut entries = Vec::with_capacity(count as usize);
+        let mut rows_total = 0u64;
+        for (i, chunk) in bytes.chunks_exact(INDEX_ENTRY_BYTES as usize).enumerate() {
+            let entry = ChunkIndexEntry {
+                offset: u64::from_le_bytes(chunk[0..8].try_into().unwrap()),
+                rows: u32::from_le_bytes(chunk[8..12].try_into().unwrap()),
+                checksum: u64::from_le_bytes(chunk[12..20].try_into().unwrap()),
+            };
+            // entries must march left to right through the record region:
+            // the first starts right after the header, each later one past
+            // its predecessor's minimal extent (12-byte framing + ≥ 1
+            // payload byte + 8-byte checksum), and all before the footer
+            let min_start = match entries.last() {
+                None => HEADER_BYTES_V3,
+                Some(prev) => prev.offset + 4 + 8 + 1 + 8,
+            };
+            let first_bad = i == 0 && entry.offset != HEADER_BYTES_V3;
+            if first_bad || entry.offset < min_start || entry.offset >= index_off || entry.rows == 0
+            {
+                return Ok(None);
+            }
+            rows_total += entry.rows as u64;
+            entries.push(entry);
+        }
+        // final sanity: the index must account for exactly the header's rows
+        if rows_total != meta.n {
+            return Ok(None);
+        }
+        Ok(Some(ChunkIndex { entries, records_end: index_off }))
+    }
+}
+
+/// Random-access record reader over an indexed cache: seek to any
+/// [`ChunkIndexEntry`] and decode it into reusable scratch — one of these
+/// per reader-pool thread.
+pub struct IndexedCacheReader<R: Read + Seek> {
+    inner: R,
+    meta: CacheMeta,
+    decoder: RecordDecoder,
+}
+
+impl IndexedCacheReader<File> {
+    /// Open a per-thread handle (unbuffered: access is one seek + three
+    /// reads per record, dominated by the payload read).
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        IndexedCacheReader::new(File::open(path)?)
+    }
+}
+
+impl<R: Read + Seek> IndexedCacheReader<R> {
+    pub fn new(mut inner: R) -> Result<Self> {
+        inner.seek(SeekFrom::Start(0))?;
+        let (meta, _version) = read_header(&mut inner)?;
+        let decoder = RecordDecoder::for_meta(&meta)?;
+        Ok(IndexedCacheReader { inner, meta, decoder })
+    }
+
+    pub fn meta(&self) -> CacheMeta {
+        self.meta
+    }
+
+    /// Decode the record `entry` describes into the caller's scratch
+    /// buffers, verifying both the inline checksum and the index entry
+    /// (`row0` is the record's global first row, for error context).
+    pub fn read_into(
+        &mut self,
+        entry: &ChunkIndexEntry,
+        row0: u64,
+        codes: &mut PackedCodes,
+        labels: &mut Vec<i8>,
+    ) -> Result<()> {
+        self.inner.seek(SeekFrom::Start(entry.offset))?;
+        let (rows, checksum) =
+            self.decoder
+                .read_from(&mut self.inner, row0, entry.rows as u64, codes, labels)?;
+        if rows as u32 != entry.rows || checksum != entry.checksum {
+            return Err(Error::InvalidArg(format!(
+                "cache record at row {row0} disagrees with its index entry \
+                 ({rows} rows vs {}, checksum {checksum:#018x} vs {:#018x})",
+                entry.rows, entry.checksum
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -424,7 +816,8 @@ mod tests {
         EncoderSpec::Bbit { b, k, d, seed }
     }
 
-    /// Property-style roundtrip over geometries and ragged chunk sizes.
+    /// Property-style roundtrip over geometries and ragged chunk sizes,
+    /// with the v3 index footer verified against the record stream.
     #[test]
     fn roundtrip_random_geometries() {
         let mut rng = Rng::new(0xCAFE);
@@ -444,7 +837,14 @@ mod tests {
             buf.set_position(0);
             let mut r = CacheReader::new(&mut buf).unwrap();
             let meta = r.meta();
-            assert_eq!(meta, CacheMeta { spec, n: sizes.iter().sum::<usize>() as u64 });
+            let n: u64 = sizes.iter().sum::<usize>() as u64;
+            let stride = (k * b as usize).div_ceil(64);
+            let payload: u64 = sizes.iter().map(|&s| (s + 8 * s * stride) as u64).sum();
+            assert_eq!(meta.spec, spec);
+            assert_eq!(meta.n, n);
+            assert!(!meta.compressed);
+            assert_eq!(meta.raw_bytes, payload, "b={b} k={k}");
+            assert_eq!(meta.stored_bytes, payload);
             for (pc, ls) in &chunks {
                 let (got_pc, got_ls) = r.next_chunk().unwrap().unwrap();
                 assert_eq!(&got_pc, pc, "b={b} k={k}");
@@ -452,7 +852,110 @@ mod tests {
             }
             assert!(r.next_chunk().unwrap().is_none());
             assert!(r.next_chunk().unwrap().is_none()); // fused
+
+            // the index footer addresses every record, in order
+            let mut buf2 = Cursor::new(buf.get_ref().clone());
+            let index = ChunkIndex::from_reader(&mut buf2).unwrap().expect("v3 has an index");
+            assert_eq!(index.entries.len(), sizes.len());
+            assert_eq!(index.rows_total(), n);
+            assert_eq!(
+                index.row_starts(),
+                vec![0u64, 1, 18, 274],
+                "prefix sums over {sizes:?}"
+            );
+            // random-access reads reproduce the sequential chunks — in
+            // reverse order, to prove seeks are honest
+            let mut ir = IndexedCacheReader::new(&mut buf2).unwrap();
+            let starts = index.row_starts();
+            let mut codes = PackedCodes::new(b, k);
+            let mut labels = Vec::new();
+            for rec in (0..index.entries.len()).rev() {
+                ir.read_into(&index.entries[rec], starts[rec], &mut codes, &mut labels)
+                    .unwrap();
+                assert_eq!(codes, chunks[rec].0, "record {rec}");
+                assert_eq!(labels, chunks[rec].1);
+            }
         }
+    }
+
+    #[test]
+    fn next_chunk_into_reuses_scratch_and_matches_next_chunk() {
+        let mut rng = Rng::new(0x5C4A);
+        let spec = bbit_spec(5, 19, 1 << 20, 8);
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, &spec).unwrap();
+        let mut chunks = Vec::new();
+        for rows in [7usize, 64, 3, 31] {
+            let (pc, ls) = random_chunk(5, 19, rows, &mut rng);
+            w.write_chunk(&pc, &ls).unwrap();
+            chunks.push((pc, ls));
+        }
+        w.finalize().unwrap();
+        buf.set_position(0);
+        let mut r = CacheReader::new(&mut buf).unwrap();
+        let mut codes = PackedCodes::new(5, 19);
+        let mut labels = Vec::new();
+        for (pc, ls) in &chunks {
+            assert!(r.next_chunk_into(&mut codes, &mut labels).unwrap());
+            assert_eq!(&codes, pc);
+            assert_eq!(&labels, ls);
+        }
+        assert!(!r.next_chunk_into(&mut codes, &mut labels).unwrap());
+        // wrong-geometry scratch is a typed error, not silent corruption
+        buf.set_position(0);
+        let mut r = CacheReader::new(&mut buf).unwrap();
+        let mut bad = PackedCodes::new(5, 20);
+        assert!(r.next_chunk_into(&mut bad, &mut labels).is_err());
+    }
+
+    #[test]
+    fn compressed_cache_roundtrips_and_reports_byte_totals() {
+        let spec = bbit_spec(8, 24, 1 << 20, 4);
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::with_options(
+            &mut buf,
+            &spec,
+            CacheWriteOptions { compress: true },
+        )
+        .unwrap();
+        // constant rows → long byte runs → real compression
+        let mut pc = PackedCodes::new(8, 24);
+        for _ in 0..50 {
+            pc.push_row(&[3u16; 24]).unwrap();
+        }
+        let labels = vec![1i8; 50];
+        w.write_chunk(&pc, &labels).unwrap();
+        // plus an incompressible chunk (still must roundtrip)
+        let (noise, noise_ls) = random_chunk(8, 24, 40, &mut Rng::new(77));
+        w.write_chunk(&noise, &noise_ls).unwrap();
+        w.finalize().unwrap();
+        buf.set_position(0);
+        let mut r = CacheReader::new(&mut buf).unwrap();
+        let meta = r.meta();
+        assert!(meta.compressed);
+        assert_eq!(meta.n, 90);
+        assert!(
+            meta.stored_bytes < meta.raw_bytes,
+            "constant chunk must compress: stored {} raw {}",
+            meta.stored_bytes,
+            meta.raw_bytes
+        );
+        let (got, ls) = r.next_chunk().unwrap().unwrap();
+        assert_eq!(got, pc);
+        assert_eq!(ls, labels);
+        let (got, ls) = r.next_chunk().unwrap().unwrap();
+        assert_eq!(got, noise);
+        assert_eq!(ls, noise_ls);
+        assert!(r.next_chunk().unwrap().is_none());
+        // the index addresses compressed records just the same
+        let mut buf2 = Cursor::new(buf.get_ref().clone());
+        let index = ChunkIndex::from_reader(&mut buf2).unwrap().unwrap();
+        assert_eq!(index.entries.len(), 2);
+        let mut ir = IndexedCacheReader::new(&mut buf2).unwrap();
+        let mut codes = PackedCodes::new(8, 24);
+        let mut labs = Vec::new();
+        ir.read_into(&index.entries[1], 50, &mut codes, &mut labs).unwrap();
+        assert_eq!(codes, noise);
     }
 
     #[test]
@@ -494,7 +997,7 @@ mod tests {
         for v in [k as u64, d, seed, 5u64] {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
-        // one v1 record (same record format as v2)
+        // one v1 record (same record format as v2/v3-uncompressed)
         let stride = (k * b as usize).div_ceil(64);
         let rows = 5u32;
         let mut payload = Vec::new();
@@ -511,22 +1014,77 @@ mod tests {
         bytes.extend_from_slice(&payload);
         bytes.extend_from_slice(&sum.finish().to_le_bytes());
 
-        let mut r = CacheReader::new(Cursor::new(bytes)).unwrap();
+        let mut r = CacheReader::new(Cursor::new(bytes.clone())).unwrap();
         assert_eq!(r.meta().spec, EncoderSpec::Bbit { b, k, d, seed });
         assert_eq!(r.meta().n, 5);
+        assert!(!r.meta().compressed);
+        assert_eq!(r.meta().raw_bytes, 0, "pre-v3 headers carry no byte totals");
         let (got_pc, got_ls) = r.next_chunk().unwrap().unwrap();
         assert_eq!(got_pc, pc);
         assert_eq!(got_ls, ls);
         assert!(r.next_chunk().unwrap().is_none());
+        // no footer → no index, but not an error either
+        assert!(ChunkIndex::from_reader(&mut Cursor::new(bytes)).unwrap().is_none());
+    }
+
+    /// Hand-written v2 bytes (the pre-index header) keep parsing too.
+    #[test]
+    fn v2_cache_is_still_readable() {
+        let spec = EncoderSpec::Oph { bins: 16, b: 4, seed: 3 };
+        let (tag, p0, p1, p2, seed) = spec.header_fields();
+        let mut rng = Rng::new(0x02d);
+        let (pc, ls) = random_chunk(4, 16, 9, &mut rng);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CACHE_MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // version 2
+        bytes.extend_from_slice(&tag.to_le_bytes());
+        bytes.extend_from_slice(&p0.to_le_bytes());
+        for v in [p1, p2, seed, 9u64] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let rows = 9u32;
+        let mut payload = Vec::new();
+        payload.extend(ls.iter().map(|&l| l as u8));
+        for &word in pc.words() {
+            payload.extend_from_slice(&word.to_le_bytes());
+        }
+        let mut sum = Fnv1a::new();
+        sum.update(&rows.to_le_bytes());
+        sum.update(&payload);
+        bytes.extend_from_slice(&rows.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&sum.finish().to_le_bytes());
+
+        let mut r = CacheReader::new(Cursor::new(bytes.clone())).unwrap();
+        assert_eq!(r.meta().spec, spec);
+        assert_eq!(r.meta().n, 9);
+        let (got_pc, got_ls) = r.next_chunk().unwrap().unwrap();
+        assert_eq!(got_pc, pc);
+        assert_eq!(got_ls, ls);
+        assert!(ChunkIndex::from_reader(&mut Cursor::new(bytes)).unwrap().is_none());
     }
 
     #[test]
     fn unknown_version_is_rejected() {
         let mut bytes = Vec::new();
         bytes.extend_from_slice(CACHE_MAGIC);
-        bytes.extend_from_slice(&3u32.to_le_bytes());
-        bytes.extend_from_slice(&[0u8; 40]);
+        bytes.extend_from_slice(&9u32.to_le_bytes()); // future version
+        bytes.extend_from_slice(&[0u8; 64]);
         assert!(CacheReader::new(Cursor::new(bytes)).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let spec = bbit_spec(8, 16, 1 << 20, 7);
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, &spec).unwrap();
+        w.finalize().unwrap();
+        let mut bytes = buf.into_inner();
+        // flags field lives right after the 40-byte spec prefix
+        bytes[40] |= 0x80;
+        let err = CacheReader::new(Cursor::new(bytes)).unwrap_err();
+        assert!(err.to_string().contains("flags"), "{err}");
     }
 
     #[test]
@@ -539,6 +1097,9 @@ mod tests {
         buf.set_position(0);
         let ds = CacheReader::new(&mut buf).unwrap().read_all().unwrap();
         assert_eq!(ds.len(), 0);
+        let index = ChunkIndex::from_reader(&mut buf).unwrap().unwrap();
+        assert!(index.entries.is_empty());
+        assert_eq!(index.records_end, HEADER_BYTES_V3);
     }
 
     #[test]
@@ -562,12 +1123,19 @@ mod tests {
         w.write_chunk(&pc, &ls).unwrap();
         w.finalize().unwrap();
         let mut bytes = buf.into_inner();
-        // flip one payload byte past the header
-        let target = HEADER_BYTES_V2 as usize + 12 + 7;
+        // flip one payload byte past the record's 12-byte framing
+        let target = HEADER_BYTES_V3 as usize + 12 + 7;
         bytes[target] ^= 0x40;
-        let mut r = CacheReader::new(Cursor::new(bytes)).unwrap();
+        let mut r = CacheReader::new(Cursor::new(bytes.clone())).unwrap();
         assert!(r.next_chunk().is_err());
         assert!(r.next_chunk().is_err()); // poisoned stays poisoned
+        // the indexed reader rejects the same damage
+        let mut cur = Cursor::new(bytes);
+        let index = ChunkIndex::from_reader(&mut cur).unwrap().unwrap();
+        let mut ir = IndexedCacheReader::new(&mut cur).unwrap();
+        let mut codes = PackedCodes::new(8, 32);
+        let mut labs = Vec::new();
+        assert!(ir.read_into(&index.entries[0], 0, &mut codes, &mut labs).is_err());
     }
 
     #[test]
@@ -578,9 +1146,68 @@ mod tests {
         w.write_chunk(&pc, &ls).unwrap();
         w.finalize().unwrap();
         let bytes = buf.into_inner();
-        let cut = &bytes[..bytes.len() - 9]; // lose the tail of the record
+        let records_end = ChunkIndex::from_reader(&mut Cursor::new(bytes.clone()))
+            .unwrap()
+            .unwrap()
+            .records_end as usize;
+        // lose the footer and the tail of the final record
+        let cut = &bytes[..records_end - 9];
         let mut r = CacheReader::new(Cursor::new(cut.to_vec())).unwrap();
         assert!(r.next_chunk().is_err());
+    }
+
+    /// A damaged or missing footer downgrades to "no index" — the record
+    /// stream stays fully replayable.
+    #[test]
+    fn truncated_footer_disables_the_index_not_the_cache() {
+        let mut rng = Rng::new(0xF007);
+        let spec = bbit_spec(6, 20, 1 << 20, 2);
+        let mut buf = Cursor::new(Vec::new());
+        let mut w = CacheWriter::new(&mut buf, &spec).unwrap();
+        let mut chunks = Vec::new();
+        for rows in [13usize, 40, 8] {
+            let (pc, ls) = random_chunk(6, 20, rows, &mut rng);
+            w.write_chunk(&pc, &ls).unwrap();
+            chunks.push((pc, ls));
+        }
+        w.finalize().unwrap();
+        let bytes = buf.into_inner();
+        let records_end = ChunkIndex::from_reader(&mut Cursor::new(bytes.clone()))
+            .unwrap()
+            .unwrap()
+            .records_end as usize;
+        for cut in [
+            records_end,                    // footer gone entirely
+            bytes.len() - 3,                // trailer torn
+            bytes.len() - TRAILER_BYTES as usize - 5, // entries torn
+        ] {
+            let mut cur = Cursor::new(bytes[..cut].to_vec());
+            assert!(
+                ChunkIndex::from_reader(&mut cur).unwrap().is_none(),
+                "cut at {cut} must yield no index"
+            );
+            let mut r = CacheReader::new(Cursor::new(bytes[..cut].to_vec())).unwrap();
+            for (pc, ls) in &chunks {
+                let (got_pc, got_ls) = r.next_chunk().unwrap().unwrap();
+                assert_eq!(&got_pc, pc);
+                assert_eq!(&got_ls, ls);
+            }
+            assert!(r.next_chunk().unwrap().is_none());
+        }
+        // a flipped byte inside the entries fails the footer checksum
+        let mut bad = bytes.clone();
+        bad[records_end + 2] ^= 0x10;
+        assert!(ChunkIndex::from_reader(&mut Cursor::new(bad)).unwrap().is_none());
+        // a huge index offset in an otherwise intact trailer must
+        // downgrade too — not overflow the bounds arithmetic
+        let mut bad = bytes.clone();
+        let trailer_at = bytes.len() - TRAILER_BYTES as usize;
+        bad[trailer_at..trailer_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(ChunkIndex::from_reader(&mut Cursor::new(bad)).unwrap().is_none());
+        // ... and so must a huge record count
+        let mut bad = bytes;
+        bad[trailer_at + 8..trailer_at + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(ChunkIndex::from_reader(&mut Cursor::new(bad)).unwrap().is_none());
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Byte-oriented record compression for the hashed cache (varint + RLE).
+//!
+//! Cache v3 can store record payloads compressed (`preprocess
+//! --cache-compress`).  The dependency policy is thiserror + xla only, so
+//! this is a deliberately small std-only codec rather than a gzip binding:
+//! run-length encoding over the payload bytes with LEB128 varint lengths.
+//! Packed b-bit code streams compress when codes are skewed or rows carry
+//! word-padding zeros (small b, unaligned k); labels compress whenever
+//! classes arrive in runs.  On incompressible data the overhead is one tag
+//! varint per literal run — bounded by [`max_compressed_len`], which the
+//! reader uses to reject absurd stored lengths before allocating.
+//!
+//! ## Token stream
+//!
+//! A compressed payload is a sequence of tokens, each a LEB128 varint `v`
+//! followed by its operand:
+//!
+//! ```text
+//!   v = len << 1 | 0   literal run: the next `len` bytes verbatim
+//!   v = len << 1 | 1   repeat run:  the next 1 byte, repeated `len` times
+//! ```
+//!
+//! `len` is always ≥ 1; the stream ends exactly at the payload boundary.
+//! Runs shorter than [`MIN_RUN`] are folded into literals (a run token
+//! costs ≥ 2 bytes, so 2-byte runs never pay for themselves).
+
+use crate::{Error, Result};
+
+/// Shortest repeat run worth a run token (tag varint + value byte ≤ 3
+/// bytes, so runs of 4+ always win; 3-byte runs only break even).
+const MIN_RUN: usize = 4;
+
+/// Append `v` as a LEB128 varint.
+fn put_varint(dst: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            dst.push(byte);
+            return;
+        }
+        dst.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint from `src[*pos..]`, advancing `pos`.
+fn get_varint(src: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let &byte = src
+            .get(*pos)
+            .ok_or_else(|| Error::InvalidArg("compressed record truncated in varint".into()))?;
+        *pos += 1;
+        if shift >= 64 {
+            return Err(Error::InvalidArg("compressed record varint overflows u64".into()));
+        }
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Worst-case compressed size for a `raw` -byte payload: one literal-run
+/// tag varint per chunk of incompressible bytes plus the bytes themselves.
+/// The encoder emits maximal literals, so tags amortize to ≤ 10 bytes per
+/// `u64::MAX`-capped run; a single literal covering the whole payload
+/// costs `varint(raw << 1 | 0)` ≤ 10 bytes.  16 leaves slack for an
+/// empty-payload token.
+pub fn max_compressed_len(raw: u64) -> u64 {
+    raw + 16
+}
+
+/// RLE-compress `src` into `dst` (cleared first).  Deterministic: the same
+/// input always produces the same bytes, so compressed caches stay
+/// byte-comparable across runs.
+pub fn compress(src: &[u8], dst: &mut Vec<u8>) {
+    dst.clear();
+    dst.reserve(src.len() / 8);
+    let mut lit_start = 0usize; // start of the pending literal run
+    let mut i = 0usize;
+    while i < src.len() {
+        // length of the byte-run starting at i
+        let mut run = 1usize;
+        while i + run < src.len() && src[i + run] == src[i] {
+            run += 1;
+        }
+        if run >= MIN_RUN {
+            if lit_start < i {
+                put_varint(dst, ((i - lit_start) as u64) << 1);
+                dst.extend_from_slice(&src[lit_start..i]);
+            }
+            put_varint(dst, ((run as u64) << 1) | 1);
+            dst.push(src[i]);
+            i += run;
+            lit_start = i;
+        } else {
+            i += run; // short run rides along inside the literal
+        }
+    }
+    if lit_start < src.len() {
+        put_varint(dst, ((src.len() - lit_start) as u64) << 1);
+        dst.extend_from_slice(&src[lit_start..]);
+    }
+}
+
+/// Decompress `src` into `dst` (cleared first), which must come out to
+/// exactly `expect_len` bytes — the reader knows every record's raw size
+/// from its row count, so a mismatch is corruption, not a guess.
+pub fn decompress(src: &[u8], dst: &mut Vec<u8>, expect_len: usize) -> Result<()> {
+    dst.clear();
+    dst.reserve(expect_len);
+    let mut pos = 0usize;
+    while pos < src.len() {
+        let v = get_varint(src, &mut pos)?;
+        let len = (v >> 1) as usize;
+        if len == 0 || dst.len() + len > expect_len {
+            return Err(Error::InvalidArg(format!(
+                "compressed record expands past its raw size ({} + {len} > {expect_len})",
+                dst.len()
+            )));
+        }
+        if v & 1 == 1 {
+            let &value = src.get(pos).ok_or_else(|| {
+                Error::InvalidArg("compressed record truncated in repeat run".into())
+            })?;
+            pos += 1;
+            dst.resize(dst.len() + len, value);
+        } else {
+            let lit = src.get(pos..pos + len).ok_or_else(|| {
+                Error::InvalidArg("compressed record truncated in literal run".into())
+            })?;
+            dst.extend_from_slice(lit);
+            pos += len;
+        }
+    }
+    if dst.len() != expect_len {
+        return Err(Error::InvalidArg(format!(
+            "compressed record decodes to {} bytes, expected {expect_len}",
+            dst.len()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip(src: &[u8]) -> Vec<u8> {
+        let mut comp = Vec::new();
+        compress(src, &mut comp);
+        let mut back = Vec::new();
+        decompress(&comp, &mut back, src.len()).unwrap();
+        assert!(
+            comp.len() as u64 <= max_compressed_len(src.len() as u64),
+            "{} > bound {}",
+            comp.len(),
+            max_compressed_len(src.len() as u64)
+        );
+        assert_eq!(back, src);
+        comp
+    }
+
+    #[test]
+    fn roundtrips_edge_cases() {
+        roundtrip(&[]);
+        roundtrip(&[7]);
+        roundtrip(&[1, 2, 3]);
+        roundtrip(&[0; 1000]);
+        roundtrip(&[0xAB; 3]); // below MIN_RUN: stays literal
+        let mixed: Vec<u8> = (0..512u32)
+            .flat_map(|i| if i % 3 == 0 { vec![0u8; 9] } else { vec![(i % 251) as u8] })
+            .collect();
+        roundtrip(&mixed);
+    }
+
+    #[test]
+    fn roundtrips_random_payloads() {
+        let mut rng = Rng::new(0xC0DEC);
+        for n in [1usize, 17, 255, 256, 257, 4096] {
+            // incompressible
+            let noise: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            roundtrip(&noise);
+            // runs-heavy (zero padding interleaved with noise)
+            let runs: Vec<u8> = (0..n)
+                .map(|i| if (i / 16) % 2 == 0 { 0 } else { rng.next_u64() as u8 })
+                .collect();
+            roundtrip(&runs);
+        }
+    }
+
+    #[test]
+    fn compresses_runs_and_bounds_noise() {
+        let zeros = [0u8; 4096];
+        let comp = roundtrip(&zeros);
+        assert!(comp.len() < 16, "all-zero payload must collapse, got {}", comp.len());
+        let mut rng = Rng::new(9);
+        let noise: Vec<u8> = (0..4096).map(|_| rng.next_u64() as u8).collect();
+        let comp = roundtrip(&noise);
+        assert!(comp.len() <= noise.len() + 16);
+    }
+
+    #[test]
+    fn corrupt_streams_are_typed_errors() {
+        let mut comp = Vec::new();
+        compress(&[5u8; 100], &mut comp);
+        let mut out = Vec::new();
+        // wrong expected length
+        assert!(decompress(&comp, &mut out, 99).is_err());
+        assert!(decompress(&comp, &mut out, 101).is_err());
+        // truncated stream
+        assert!(decompress(&comp[..comp.len() - 1], &mut out, 100).is_err());
+        // declared length overruns the raw size
+        let mut bogus = Vec::new();
+        put_varint(&mut bogus, (1000u64 << 1) | 1);
+        bogus.push(0xFF);
+        assert!(decompress(&bogus, &mut out, 100).is_err());
+        // varint that never terminates
+        assert!(decompress(&[0x80, 0x80, 0x80], &mut out, 10).is_err());
+        // zero-length token is invalid, not an infinite loop
+        assert!(decompress(&[0x00], &mut out, 10).is_err());
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        for v in [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX] {
+            buf.clear();
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+}

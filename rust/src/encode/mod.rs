@@ -11,14 +11,22 @@
 //!   CSR form and the implicit offsets+codes form the solvers and the PJRT
 //!   train artifacts consume.
 //! - [`cache`]: the on-disk hashed-chunk cache (checksummed record stream)
-//!   behind the "hash once, train many times" out-of-core workflow; its v2
-//!   header stores the [`EncoderSpec`] the chunks were encoded with.
+//!   behind the "hash once, train many times" out-of-core workflow; its
+//!   header stores the [`EncoderSpec`] the chunks were encoded with, and
+//!   since v3 a chunk-index footer makes the file seekable for parallel
+//!   replay (plus optional RLE record compression via [`codec`]).
+//! - [`codec`]: the std-only varint+RLE payload compressor behind the
+//!   cache's `--cache-compress` flag.
 
 pub mod cache;
+pub mod codec;
 pub mod encoder;
 pub mod expansion;
 pub mod packed;
 
-pub use cache::{CacheMeta, CacheReader, CacheWriter};
+pub use cache::{
+    CacheMeta, CacheReader, CacheWriteOptions, CacheWriter, ChunkIndex, ChunkIndexEntry,
+    IndexedCacheReader,
+};
 pub use encoder::{draw, EncodeScratch, EncodedChunk, EncoderSpec, FeatureEncoder};
 pub use packed::PackedCodes;

@@ -80,6 +80,36 @@ impl PackedCodes {
         self.data.clear();
     }
 
+    /// Grow the underlying allocation to hold at least `rows` more rows
+    /// (readers that know the total row count up front pre-size once
+    /// instead of doubling their way up).
+    pub fn reserve_rows(&mut self, rows: usize) {
+        self.data.reserve(rows * self.words_per_row);
+    }
+
+    /// Replace all rows with `n` rows decoded from little-endian word
+    /// bytes (the cache record payload layout), keeping the (b, k)
+    /// geometry and reusing the allocation — the scratch-buffer twin of
+    /// [`from_words`](Self::from_words) for the replay hot path.
+    pub fn fill_from_le_bytes(&mut self, n: usize, bytes: &[u8]) -> Result<()> {
+        let words = self.words_per_row * n;
+        if bytes.len() != 8 * words {
+            return Err(Error::InvalidArg(format!(
+                "packed payload has {} bytes, expected {} ({} rows × stride {})",
+                bytes.len(),
+                8 * words,
+                n,
+                self.words_per_row
+            )));
+        }
+        self.data.clear();
+        self.data.reserve(words);
+        self.data
+            .extend(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())));
+        self.n = n;
+        Ok(())
+    }
+
     /// The paper's idealized storage: exactly n·b·k bits, in bytes.
     pub fn ideal_bytes(&self) -> u64 {
         (self.n as u64 * self.b as u64 * self.k as u64).div_ceil(8)
@@ -385,6 +415,27 @@ mod tests {
         assert!(cleared.words().is_empty());
         cleared.push_row(&[0; 29]).unwrap(); // still usable after clear
         assert_eq!(cleared.n, 1);
+    }
+
+    #[test]
+    fn fill_from_le_bytes_reuses_the_buffer() {
+        let mut rng = Rng::new(55);
+        let mut pc = PackedCodes::new(6, 21);
+        for _ in 0..9 {
+            let row: Vec<u16> = (0..21).map(|_| rng.below(1 << 6) as u16).collect();
+            pc.push_row(&row).unwrap();
+        }
+        let bytes: Vec<u8> = pc.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+        let mut scratch = PackedCodes::new(6, 21);
+        scratch.reserve_rows(9);
+        scratch.fill_from_le_bytes(9, &bytes).unwrap();
+        assert_eq!(scratch, pc);
+        // refill with fewer rows: geometry kept, contents replaced
+        scratch.fill_from_le_bytes(3, &bytes[..3 * 8 * pc.stride()]).unwrap();
+        assert_eq!(scratch.n, 3);
+        assert_eq!(scratch.row(2), pc.row(2));
+        // byte-count mismatches are typed errors
+        assert!(scratch.fill_from_le_bytes(9, &bytes[..8]).is_err());
     }
 
     #[test]

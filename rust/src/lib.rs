@@ -23,9 +23,9 @@
 //! |---|---|
 //! | [`data`] | LibSVM streaming IO, rcv1-like generator, feature expansion |
 //! | [`hashing`] | minwise / b-bit / VW / RP / OPH substrates + estimator variance theory |
-//! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache |
-//! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec` |
-//! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink) + scheduler |
+//! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache (v3: chunk-index footer for parallel replay + optional RLE record compression) |
+//! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec`; cache eval/holdout/SGD all replay across threads |
+//! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink), parallel cache-replay reader pool, + scheduler |
 //! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control and a load generator (the paper's "used in industry / search" request path) |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
@@ -52,7 +52,12 @@
 //!    the corpus once, spec recorded in the header;
 //! 2. `train --cache` replays that cache through batch solvers or the
 //!    streaming SGD trainer ([`solver::SgdStream`]) for as many
-//!    (solver, C, epoch) sweeps as needed;
+//!    (solver, C, epoch) sweeps as needed — and because the v3 cache is
+//!    indexed, `--replay-threads N` fans replay across a reader pool
+//!    ([`coordinator::replay`]): eval and batch materialization shard
+//!    with a merge reduce, `--holdout` decodes in parallel with
+//!    bit-identical results, and SGD runs per-shard workers synchronized
+//!    by iterate averaging at epoch boundaries;
 //! 3. `train --stream` skips the cache entirely: one pass, hash-and-train,
 //!    nothing materialized;
 //! 4. `serve --model m --port p` keeps the trained model resident behind a

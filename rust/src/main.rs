@@ -52,28 +52,38 @@ USAGE:
   bbit-mh gen-data --out FILE [--n 4000] [--vocab 4000] [--expanded] [--seed N]
   bbit-mh preprocess --input FILE (--out FILE | --cache-out FILE)
              [--encoder bbit|vw|rp|oph] [scheme flags] [--workers N] [--seed N]
+             [--cache-compress]
              (--cache-out streams packed-code chunks to the on-disk hashed
-              cache: hash once, train many times, constant memory)
+              cache: hash once, train many times, constant memory; the v3
+              cache carries a chunk index for parallel replay, and
+              --cache-compress RLE-compresses record payloads)
   bbit-mh train --input FILE --solver svm|lr [--c 1.0] [--cv FOLDS]
              [--encoder bbit|vw|rp|oph|none] [scheme flags]
              [--train-frac 0.5] [--seed N] [--save-model FILE]
   bbit-mh train --cache FILE [--solver sgd|svm|lr] [--c 1.0] [--epochs 5]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda L]
              [--holdout FRAC] [--holdout-seed N] [--eval] [--save-model FILE]
+             [--replay-threads N]
              (multi-epoch replay of a hashed cache; the cache header
               records the encoder spec; sgd streams in O(dim) memory;
               --holdout (sgd only) carves a deterministic FRAC held-out
               split during replay and reports held-out accuracy/loss;
-              --eval adds a train-accuracy pass over the cache)
+              --eval adds a train-accuracy pass over the cache;
+              --replay-threads N>1 fans replay across a reader pool —
+              svm/lr materialize and --holdout decode in parallel with
+              bit-identical results; plain sgd runs per-shard workers
+              synchronized by iterate averaging at epoch boundaries)
   bbit-mh train --input FILE --stream [--encoder bbit|oph] [scheme flags]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
              [--seed N] [--save-model FILE]
              (one-pass hash-and-train: nothing materialized, prints progressive loss)
   bbit-mh classify --model FILE (--input FILE [--out FILE] [--chunk-size 256]
-             | --cache FILE)
+             | --cache FILE [--replay-threads N])
              (the model file embeds its encoder spec — any scheme classifies;
               --input streams raw LibSVM in chunks, constant memory;
-              --cache reports aggregate accuracy/loss, specs must match)
+              --cache reports aggregate accuracy/loss, specs must match;
+              --replay-threads shards cache scoring across a reader pool,
+              results identical for every N)
   bbit-mh serve --model FILE [--host 127.0.0.1] [--port 0] [--workers N]
              [--batch-max 64] [--batch-wait-us 200] [--queue 1024]
              [--deadline-ms 50] [--reload-poll-ms 200] [--idle-timeout-s 10]
@@ -266,11 +276,25 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         }
         // out-of-core path: chunks stream to disk as they are encoded;
         // memory stays bounded by the pipeline queues
-        let mut sink = CacheSink::create(cache_out, &spec)?;
+        let opts = bbit_mh::encode::cache::CacheWriteOptions {
+            compress: args.has("cache-compress"),
+        };
+        let mut sink = CacheSink::create_opts(cache_out, &spec, opts)?;
         let report = pipe.run_sink(source, &spec, &mut sink)?;
+        let bytes = if opts.compress {
+            let m = sink.meta();
+            format!(
+                ", payload {} -> {} bytes ({:.1}% of raw)",
+                m.raw_bytes,
+                m.stored_bytes,
+                100.0 * m.stored_bytes as f64 / m.raw_bytes.max(1) as f64,
+            )
+        } else {
+            String::new()
+        };
         eprintln!(
             "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read + {:.2}s stalled, \
-             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks) -> {}",
+             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks{}) -> {}",
             report.docs,
             report.wall_seconds,
             report.read_seconds,
@@ -278,6 +302,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             report.hash_cpu_seconds,
             report.sink_seconds,
             report.reorder_peak,
+            bytes,
             cache_out,
         );
         return Ok(());
@@ -331,12 +356,31 @@ fn sgd_loss_flag(args: &Args) -> Result<SgdLoss> {
     }
 }
 
-/// Streaming accuracy of `model` over a hashed cache (one sequential pass).
+/// Parse + validate `--replay-threads` (1 = the sequential replay path,
+/// which stays bit-for-bit identical to the pre-pool behavior).
+fn replay_threads_flag(args: &Args) -> Result<usize> {
+    let threads: usize = args.get("replay-threads", 1usize)?;
+    if threads == 0 {
+        return Err(Error::InvalidArg(
+            "--replay-threads must be >= 1 (1 = sequential replay)".into(),
+        ));
+    }
+    Ok(threads)
+}
+
+/// Streaming accuracy of `model` over a hashed cache (one sequential pass
+/// through reusable scratch buffers — nothing allocated per record).
 fn cache_accuracy(path: &str, model: &LinearModel) -> Result<f64> {
     let mut reader = CacheReader::open(path)?;
+    let meta = reader.meta();
+    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
+        Error::InvalidArg(format!("cache scheme {} is not packed", meta.spec.scheme()))
+    })?;
+    // the dataset doubles as the reusable scratch (its fields are the
+    // decode buffers), so the loop allocates nothing per record
+    let mut ds = BbitDataset::new(bbit_mh::encode::PackedCodes::new(b, k), Vec::new());
     let (mut n, mut correct) = (0u64, 0u64);
-    while let Some((codes, labels)) = reader.next_chunk()? {
-        let ds = BbitDataset::new(codes, labels);
+    while reader.next_chunk_into(&mut ds.codes, &mut ds.labels)? {
         for i in 0..ds.len() {
             n += 1;
             if model.predict(&ds, i) == ds.labels[i] {
@@ -361,6 +405,7 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
         )));
     }
     let c: f64 = args.get("c", 1.0)?;
+    let replay_threads = replay_threads_flag(args)?;
     let meta = CacheReader::open(cache)?.meta();
     eprintln!("cache {cache}: {} docs, encoder {:?}", meta.n, meta.spec);
     let model = match solver.as_str() {
@@ -376,20 +421,25 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
                 batch: args.get("batch", 256usize)?,
             };
             // --holdout FRAC: exclude a deterministic split from every
-            // epoch and report generalization on it (one extra cache pass)
+            // epoch and report generalization on it (one extra cache pass).
+            // With --replay-threads N the holdout path decodes through the
+            // in-order reader pool (bit-identical results), while plain
+            // sgd runs per-shard workers + iterate averaging.
             let (model, stats, held) = match args.flags.get("holdout") {
                 Some(v) => {
                     let frac: f64 = v.parse().map_err(|_| {
                         Error::InvalidArg(format!("bad --holdout value {v:?}"))
                     })?;
                     let salt: u64 = args.get("holdout-seed", 0x4001D)?;
-                    let (m, s, h) = bbit_mh::solver::train_from_cache_holdout(
-                        cache, &cfg, frac, salt,
+                    let (m, s, h) = bbit_mh::solver::train_from_cache_holdout_threads(
+                        cache, &cfg, frac, salt, replay_threads,
                     )?;
                     (m, s, Some(h))
                 }
                 None => {
-                    let (m, s) = bbit_mh::solver::train_from_cache(cache, &cfg)?;
+                    let (m, s) = bbit_mh::solver::train_from_cache_threads(
+                        cache, &cfg, replay_threads,
+                    )?;
                     (m, s, None)
                 }
             };
@@ -417,9 +467,10 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
             model
         }
         "svm" | "lr" => {
-            // batch solvers need random access: materialize, then train
-            // at the requested C on the whole cache
-            let ds = CacheReader::open(cache)?.read_all()?;
+            // batch solvers need random access: materialize (fanned across
+            // the reader pool when --replay-threads > 1 — output identical
+            // to the sequential read), then train at the requested C
+            let ds = bbit_mh::coordinator::materialize_cache(cache, replay_threads)?;
             let (model, stats) = match solver.as_str() {
                 "svm" => bbit_mh::solver::train_svm(&ds, &bbit_mh::solver::SvmConfig::with_c(c)),
                 _ => bbit_mh::solver::train_lr(&ds, &bbit_mh::solver::LrConfig::with_c(c)),
@@ -524,6 +575,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         return Err(Error::InvalidArg(
             "--holdout applies to train --cache (use --train-frac for the in-memory \
              split, progressive loss for --stream)"
+                .into(),
+        ));
+    }
+    // the reader pool replays the on-disk cache; the other train paths
+    // have no cache to fan out over — silently ignoring the flag would let
+    // users believe they ran the parallel path
+    if args.has("replay-threads") {
+        return Err(Error::InvalidArg(
+            "--replay-threads applies to train --cache (cache replay); the --input \
+             paths hash with --workers instead"
                 .into(),
         ));
     }
@@ -663,13 +724,28 @@ fn cmd_classify(args: &Args) -> Result<()> {
     if chunk_size == 0 {
         return Err(Error::InvalidArg("--chunk-size must be >= 1".into()));
     }
+    if args.has("replay-threads") && !args.has("cache") {
+        return Err(Error::InvalidArg(
+            "--replay-threads applies to classify --cache (cache replay); raw --input \
+             already streams in chunks"
+                .into(),
+        ));
+    }
+    let replay_threads = replay_threads_flag(args)?;
     let saved = bbit_mh::solver::SavedModel::load(model_path)?;
     if let Some(cache) = args.flags.get("cache") {
-        // pre-hashed input: stream the cache through the final weights.
-        // A cache whose header spec differs from the model's is a typed
-        // error (codes from one hash family mean nothing under another's
-        // weights — and a dim mismatch would index out of bounds).
-        let eval = bbit_mh::solver::eval_from_cache(cache, &saved, sgd_loss_flag(args)?)?;
+        // pre-hashed input: stream the cache through the final weights —
+        // sharded across the reader pool when --replay-threads > 1, with
+        // results identical for every thread count.  A cache whose header
+        // spec differs from the model's is a typed error (codes from one
+        // hash family mean nothing under another's weights — and a dim
+        // mismatch would index out of bounds).
+        let eval = bbit_mh::solver::eval_from_cache_threads(
+            cache,
+            &saved,
+            sgd_loss_flag(args)?,
+            replay_threads,
+        )?;
         println!(
             "classified {} cached rows: accuracy {:.3}%, mean loss {:.4}",
             eval.rows,
@@ -822,6 +898,32 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.to_string().contains("chunk-size"), "{err}");
+    }
+
+    #[test]
+    fn replay_threads_flag_is_validated_before_io() {
+        // zero threads is nonsense
+        let err = run(&argv(&[
+            "train", "--cache", "c", "--replay-threads", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("replay-threads"), "{err}");
+        let err = run(&argv(&[
+            "classify", "--model", "m", "--cache", "c", "--replay-threads", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("replay-threads"), "{err}");
+        // the flag only means something for cache replay — reject elsewhere
+        let err = run(&argv(&[
+            "train", "--input", "f", "--replay-threads", "4",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("replay-threads"), "{err}");
+        let err = run(&argv(&[
+            "classify", "--model", "m", "--input", "f", "--replay-threads", "4",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("replay-threads"), "{err}");
     }
 
     #[test]

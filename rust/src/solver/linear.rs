@@ -3,6 +3,32 @@
 
 use crate::data::dataset::SparseDataset;
 use crate::encode::expansion::BbitDataset;
+use crate::encode::packed::PackedCodes;
+
+/// xᵢ·w over one packed code row in the implicit 2^b×k expansion (column
+/// j of code c lives at `(j << b) + c`).  The [`FeatureMatrix`] impl for
+/// [`BbitDataset`] and the solver replay paths (which score borrowed
+/// scratch buffers without a dataset wrapper) both call this, so their
+/// f32 accumulation order is structurally identical — the bit-for-bit
+/// replay-parity tests depend on that.
+#[inline]
+pub(crate) fn packed_dot(codes: &PackedCodes, i: usize, w: &[f32]) -> f32 {
+    let b = codes.b as usize;
+    let mut acc = 0.0;
+    for j in 0..codes.k {
+        acc += w[(j << b) + codes.get(i, j) as usize];
+    }
+    acc
+}
+
+/// w += alpha·xᵢ over one packed code row (update twin of [`packed_dot`]).
+#[inline]
+pub(crate) fn packed_axpy(codes: &PackedCodes, i: usize, alpha: f32, w: &mut [f32]) {
+    let b = codes.b as usize;
+    for j in 0..codes.k {
+        w[(j << b) + codes.get(i, j) as usize] += alpha;
+    }
+}
 
 /// Row-access abstraction all solvers train against.
 ///
@@ -92,20 +118,12 @@ impl FeatureMatrix for BbitDataset {
 
     #[inline]
     fn dot(&self, i: usize, w: &[f32]) -> f32 {
-        let b = self.codes.b as usize;
-        let mut acc = 0.0;
-        for j in 0..self.codes.k {
-            acc += w[(j << b) + self.codes.get(i, j) as usize];
-        }
-        acc
+        packed_dot(&self.codes, i, w)
     }
 
     #[inline]
     fn axpy(&self, i: usize, alpha: f32, w: &mut [f32]) {
-        let b = self.codes.b as usize;
-        for j in 0..self.codes.k {
-            w[(j << b) + self.codes.get(i, j) as usize] += alpha;
-        }
+        packed_axpy(&self.codes, i, alpha, w)
     }
 
     #[inline]

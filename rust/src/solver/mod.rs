@@ -11,7 +11,12 @@
 //! The SGD solver additionally has a streaming form ([`SgdStream`],
 //! `train_sgd_stream`, `train_from_cache`) that consumes hashed chunks
 //! from the pipeline or the on-disk cache in O(dim + batch) memory — the
-//! out-of-core path for corpora that never fit in RAM.
+//! out-of-core path for corpora that never fit in RAM.  Cache replay
+//! scales with cores: `eval_from_cache_threads` shards the chunk index
+//! with a merge reduce (thread-count-invariant results),
+//! `train_from_cache_holdout_threads` decodes through the in-order reader
+//! pool (bit-for-bit exact), and `train_from_cache_threads` runs per-shard
+//! SGD synchronized by iterate averaging at epoch boundaries.
 
 pub mod cv;
 pub mod dcd_svm;
@@ -26,6 +31,7 @@ pub use linear::{accuracy, FeatureMatrix, LinearModel, TrainStats};
 pub use lr_newton::{train_lr, LrConfig};
 pub use model_io::SavedModel;
 pub use sgd::{
-    eval_from_cache, train_from_cache, train_from_cache_holdout, train_sgd, train_sgd_stream,
+    eval_from_cache, eval_from_cache_threads, train_from_cache, train_from_cache_holdout,
+    train_from_cache_holdout_threads, train_from_cache_threads, train_sgd, train_sgd_stream,
     CacheEval, HoldoutReport, SgdConfig, SgdLoss, SgdStream,
 };

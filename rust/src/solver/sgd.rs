@@ -15,10 +15,12 @@
 use std::path::Path;
 use std::time::Instant;
 
-use crate::encode::cache::CacheReader;
+use crate::coordinator::replay::{load_index_or_warn, replay_cache_with};
+use crate::coordinator::sharding::ShardPlan;
+use crate::encode::cache::{CacheReader, ChunkIndex, IndexedCacheReader};
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
-use crate::solver::linear::{FeatureMatrix, LinearModel, TrainStats};
+use crate::solver::linear::{packed_axpy, packed_dot, FeatureMatrix, LinearModel, TrainStats};
 use crate::solver::model_io::SavedModel;
 use crate::{Error, Result};
 
@@ -203,13 +205,21 @@ impl SgdStream {
         self.loss_sum / self.rows_seen.max(1) as f64
     }
 
-    /// Feed one hashed chunk (by value — the pipeline sink and the cache
-    /// reader both own their chunks); applies a minibatch update every
-    /// time `cfg.batch` rows have accumulated.  A chunk that aligns with
-    /// the minibatch boundary (empty buffer, exactly `batch` rows — the
-    /// CLI default: pipeline chunk_size == SGD batch) is consumed in place
-    /// with no per-row unpack/repack.
+    /// Feed one hashed chunk by value — the pipeline sink and the
+    /// allocating cache iterator own their chunks.  Same semantics as
+    /// [`push_chunk_ref`](Self::push_chunk_ref).
     pub fn push_chunk(&mut self, codes: PackedCodes, labels: Vec<i8>) -> Result<()> {
+        self.push_chunk_ref(&codes, &labels)
+    }
+
+    /// Feed one hashed chunk by reference (the replay hot path: callers
+    /// keep reusable scratch buffers and nothing is allocated per chunk);
+    /// applies a minibatch update every time `cfg.batch` rows have
+    /// accumulated.  A chunk that aligns with the minibatch boundary
+    /// (empty buffer, exactly `batch` rows — the CLI default: pipeline
+    /// chunk_size == SGD batch) is consumed in place with no per-row
+    /// unpack/repack.
+    pub fn push_chunk_ref(&mut self, codes: &PackedCodes, labels: &[i8]) -> Result<()> {
         if codes.b != self.b || codes.k != self.k {
             return Err(Error::InvalidArg(format!(
                 "chunk geometry (b={}, k={}) does not match trainer (b={}, k={})",
@@ -225,7 +235,6 @@ impl SgdStream {
         }
         if self.buf.is_empty() && codes.n == self.cfg.batch {
             // aligned fast path: one whole minibatch, zero copies
-            let chunk = BbitDataset::new(codes, labels);
             Self::minibatch_step(
                 &self.cfg,
                 &mut self.w,
@@ -233,7 +242,8 @@ impl SgdStream {
                 &mut self.rows_seen,
                 &mut self.loss_sum,
                 &mut self.coefs,
-                &chunk,
+                codes,
+                labels,
             );
             return Ok(());
         }
@@ -263,13 +273,14 @@ impl SgdStream {
             &mut self.rows_seen,
             &mut self.loss_sum,
             &mut self.coefs,
-            &self.buf,
+            &self.buf.codes,
+            &self.buf.labels,
         );
         self.buf.codes.clear();
         self.buf.labels.clear();
     }
 
-    /// One `train_sgd` minibatch step over all rows of `data` (an
+    /// One `train_sgd` minibatch step over all rows of a packed chunk (an
     /// associated fn taking fields explicitly so callers can pass either
     /// the internal buffer or a borrowed whole chunk).
     #[allow(clippy::too_many_arguments)]
@@ -280,17 +291,18 @@ impl SgdStream {
         rows_seen: &mut u64,
         loss_sum: &mut f64,
         coefs: &mut Vec<f32>,
-        data: &BbitDataset,
+        codes: &PackedCodes,
+        labels: &[i8],
     ) {
-        let bsz = data.len();
+        let bsz = codes.n;
         if bsz == 0 {
             return;
         }
         let lr = cfg.lr0 / (1.0 + *step as f64 * cfg.lambda * cfg.lr0);
         coefs.clear();
         for i in 0..bsz {
-            let m = data.dot(i, w);
-            let y = data.labels[i] as f32;
+            let m = packed_dot(codes, i, w);
+            let y = labels[i] as f32;
             coefs.push(cfg.loss.grad_coef(m, y));
             *loss_sum += cfg.loss.loss(m as f64, y as f64);
         }
@@ -301,7 +313,7 @@ impl SgdStream {
         let scale = (lr / bsz as f64) as f32;
         for (i, &g) in coefs.iter().enumerate() {
             if g != 0.0 {
-                data.axpy(i, -scale * g, w);
+                packed_axpy(codes, i, -scale * g, w);
             }
         }
         *step += 1;
@@ -311,6 +323,29 @@ impl SgdStream {
     /// Read-only view of the current weights (mid-stream evaluation).
     pub fn weights(&self) -> &[f32] {
         &self.w
+    }
+
+    /// Overwrite the weight vector (same length) — the iterate-averaging
+    /// synchronization point of parallel cache replay: per-shard trainers
+    /// are reset to the averaged iterate at each epoch boundary while
+    /// their step counters (and so the learning-rate schedule) carry on.
+    pub fn set_weights(&mut self, w: &[f32]) -> Result<()> {
+        if w.len() != self.w.len() {
+            return Err(Error::InvalidArg(format!(
+                "weight vector has {} entries, trainer expects {}",
+                w.len(),
+                self.w.len()
+            )));
+        }
+        self.w.copy_from_slice(w);
+        Ok(())
+    }
+
+    /// Total pre-update loss accumulated so far (numerator of
+    /// [`progressive_loss`](Self::progressive_loss)) — lets an aggregator
+    /// combine several shard trainers exactly.
+    pub fn loss_sum(&self) -> f64 {
+        self.loss_sum
     }
 
     /// Consume the trainer.  `TrainStats.objective` is the *progressive
@@ -342,34 +377,167 @@ where
     let mut stream = SgdStream::new(cfg.clone(), b, k);
     for chunk in chunks {
         let (codes, labels) = chunk?;
-        stream.push_chunk(codes, labels)?;
+        stream.push_chunk_ref(&codes, &labels)?;
     }
     stream.end_epoch();
     Ok(stream.finalize())
 }
 
-/// Multi-epoch streaming training from an on-disk hashed cache: replays
-/// the cache `cfg.epochs` times through one [`SgdStream`] — the fwumious
-/// "train over the cache" scenario, in constant memory.  Works for any
-/// packed-code encoder scheme the cache header records (b-bit minwise,
-/// OPH, ...).
-pub fn train_from_cache<P: AsRef<Path>>(path: P, cfg: &SgdConfig) -> Result<(LinearModel, TrainStats)> {
-    let meta = CacheReader::open(&path)?.meta();
-    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
+/// The packed (b, k) geometry a cache must expose for streaming SGD.
+fn sgd_geometry(meta: &crate::encode::cache::CacheMeta) -> Result<(u32, usize)> {
+    meta.spec.packed_geometry().ok_or_else(|| {
         Error::InvalidArg(format!(
             "cache records a sparse-output encoder ({}); streaming SGD needs packed codes",
             meta.spec.scheme()
         ))
-    })?;
+    })
+}
+
+/// Multi-epoch streaming training from an on-disk hashed cache: replays
+/// the cache `cfg.epochs` times through one [`SgdStream`] — the fwumious
+/// "train over the cache" scenario, in constant memory (and zero
+/// allocation per record: one pair of scratch buffers serves the whole
+/// run).  Works for any packed-code encoder scheme the cache header
+/// records (b-bit minwise, OPH, ...).
+pub fn train_from_cache<P: AsRef<Path>>(path: P, cfg: &SgdConfig) -> Result<(LinearModel, TrainStats)> {
+    let meta = CacheReader::open(&path)?.meta();
+    let (b, k) = sgd_geometry(&meta)?;
     let mut stream = SgdStream::new(cfg.clone(), b, k);
+    let mut codes = PackedCodes::new(b, k);
+    let mut labels: Vec<i8> = Vec::new();
     for _ in 0..cfg.epochs.max(1) {
         let mut reader = CacheReader::open(&path)?;
-        while let Some((codes, labels)) = reader.next_chunk()? {
-            stream.push_chunk(codes, labels)?;
+        while reader.next_chunk_into(&mut codes, &mut labels)? {
+            stream.push_chunk_ref(&codes, &labels)?;
         }
         stream.end_epoch();
     }
     Ok(stream.finalize())
+}
+
+/// [`train_from_cache`] across a reader pool: each of `threads` workers
+/// replays its contiguous shard of the chunk index through a local
+/// [`SgdStream`], and the shards synchronize by **iterate averaging** at
+/// every epoch boundary (each worker's weights are reset to the
+/// rows-weighted average; step counters carry on, as in the sequential
+/// schedule).  `threads <= 1` is exactly [`train_from_cache`]; `threads >
+/// 1` trades bit-exactness for wall-clock — on separable data the
+/// averaged iterate lands within tolerance of the sequential run (the
+/// parallel-replay integration test pins this down).  Deterministic for a
+/// fixed (cache, config, thread count): shard boundaries and the merge
+/// order never depend on scheduling.  Falls back to the sequential path
+/// (with a warning) when the cache has no usable chunk index.
+pub fn train_from_cache_threads<P: AsRef<Path>>(
+    path: P,
+    cfg: &SgdConfig,
+    threads: usize,
+) -> Result<(LinearModel, TrainStats)> {
+    if threads <= 1 {
+        return train_from_cache(path, cfg);
+    }
+    let path = path.as_ref();
+    let Some(index) = ChunkIndex::load(path)? else {
+        eprintln!(
+            "warning: cache {} has no chunk index (pre-v3 file or damaged footer); \
+             training on one thread",
+            path.display()
+        );
+        return train_from_cache(path, cfg);
+    };
+    let n_rec = index.entries.len();
+    if n_rec == 0 {
+        return train_from_cache(path, cfg); // empty cache: zero weights
+    }
+    let t0 = Instant::now();
+    let meta = CacheReader::open(path)?.meta();
+    let (b, k) = sgd_geometry(&meta)?;
+    let dim = (1usize << b) * k;
+    let starts = index.row_starts();
+    let plan = ShardPlan::new(n_rec, n_rec.div_ceil(threads).max(1));
+
+    /// Everything one shard worker owns across epochs.
+    struct Shard {
+        reader: IndexedCacheReader<std::fs::File>,
+        stream: SgdStream,
+        /// Record range [lo, hi) of the chunk index.
+        lo: usize,
+        hi: usize,
+        /// Rows in the shard (the averaging weight).
+        rows: u64,
+        codes: PackedCodes,
+        labels: Vec<i8>,
+    }
+    let mut shards = Vec::with_capacity(plan.n_chunks());
+    for a in plan.iter() {
+        let rows: u64 = index.entries[a.row0..a.row0 + a.rows]
+            .iter()
+            .map(|e| e.rows as u64)
+            .sum();
+        shards.push(Shard {
+            reader: IndexedCacheReader::open(path)?,
+            stream: SgdStream::new(cfg.clone(), b, k),
+            lo: a.row0,
+            hi: a.row0 + a.rows,
+            rows,
+            codes: PackedCodes::new(b, k),
+            labels: Vec::new(),
+        });
+    }
+    let total_rows: f64 = shards.iter().map(|s| s.rows as f64).sum();
+    let mut avg = vec![0.0f32; dim];
+    let mut acc = vec![0.0f64; dim];
+    let epochs = cfg.epochs.max(1);
+    for _ in 0..epochs {
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(shards.len());
+            for shard in shards.iter_mut() {
+                let entries = &index.entries;
+                let starts = &starts;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for rec in shard.lo..shard.hi {
+                        shard.reader.read_into(
+                            &entries[rec],
+                            starts[rec],
+                            &mut shard.codes,
+                            &mut shard.labels,
+                        )?;
+                        shard.stream.push_chunk_ref(&shard.codes, &shard.labels)?;
+                    }
+                    shard.stream.end_epoch();
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| Error::Pipeline("replay SGD worker panicked".into()))??;
+            }
+            Ok(())
+        })?;
+        // rows-weighted iterate averaging (f64 accumulation, fixed shard
+        // order → deterministic)
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        for shard in &shards {
+            let weight = shard.rows as f64 / total_rows;
+            for (a, &w) in acc.iter_mut().zip(shard.stream.weights()) {
+                *a += weight * w as f64;
+            }
+        }
+        for (dst, &a) in avg.iter_mut().zip(&acc) {
+            *dst = a as f32;
+        }
+        for shard in shards.iter_mut() {
+            shard.stream.set_weights(&avg)?;
+        }
+    }
+    let rows_seen: u64 = shards.iter().map(|s| s.stream.rows_seen()).sum();
+    let loss_sum: f64 = shards.iter().map(|s| s.stream.loss_sum()).sum();
+    let stats = TrainStats {
+        iterations: epochs,
+        objective: loss_sum / rows_seen.max(1) as f64,
+        converged: true,
+        train_seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok((LinearModel { w: avg }, stats))
 }
 
 /// Deterministic per-row holdout membership: a splitmix64 draw on the
@@ -407,27 +575,44 @@ pub fn train_from_cache_holdout<P: AsRef<Path>>(
     frac: f64,
     salt: u64,
 ) -> Result<(LinearModel, TrainStats, HoldoutReport)> {
+    train_from_cache_holdout_threads(path, cfg, frac, salt, 1)
+}
+
+/// [`train_from_cache_holdout`] with an N-thread replay pool.  Unlike the
+/// iterate-averaged [`train_from_cache_threads`], this path parallelizes
+/// only record *decode* (read + checksum + unpack): chunks re-emerge from
+/// the pool strictly in record order into the single trainer, so the
+/// result is **bit-for-bit identical for every thread count** — the split
+/// membership, the weights, and the held-out numbers.  Use it when the
+/// validation protocol must stay exact and decode is the bottleneck.
+pub fn train_from_cache_holdout_threads<P: AsRef<Path>>(
+    path: P,
+    cfg: &SgdConfig,
+    frac: f64,
+    salt: u64,
+    threads: usize,
+) -> Result<(LinearModel, TrainStats, HoldoutReport)> {
     if frac <= 0.0 || frac >= 1.0 || frac.is_nan() {
         return Err(Error::InvalidArg(format!(
             "holdout fraction must be in (0, 1), got {frac}"
         )));
     }
-    let meta = CacheReader::open(&path)?.meta();
-    let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
-        Error::InvalidArg(format!(
-            "cache records a sparse-output encoder ({}); streaming SGD needs packed codes",
-            meta.spec.scheme()
-        ))
-    })?;
+    let path = path.as_ref();
+    let meta = CacheReader::open(path)?.meta();
+    let (b, k) = sgd_geometry(&meta)?;
+    // the index (or its absence, warned once) is loaded up front and
+    // reused by every training pass and the eval pass
+    let index = if threads > 1 { load_index_or_warn(path)? } else { None };
     let mut stream = SgdStream::new(cfg.clone(), b, k);
     let mut row_buf = vec![0u16; k];
+    // training-chunk scratch, reused across every record of every epoch
+    let mut tr_codes = PackedCodes::new(b, k);
+    let mut tr_labels: Vec<i8> = Vec::new();
     for _ in 0..cfg.epochs.max(1) {
-        let mut reader = CacheReader::open(&path)?;
-        let mut row0 = 0u64;
-        while let Some((codes, labels)) = reader.next_chunk()? {
+        replay_cache_with(path, index.as_ref(), threads, |_rec, row0, codes, labels| {
             // filter held-out rows from the training chunk
-            let mut tr_codes = PackedCodes::new(b, k);
-            let mut tr_labels = Vec::new();
+            tr_codes.clear();
+            tr_labels.clear();
             for i in 0..codes.n {
                 if !holdout_row(row0 + i as u64, salt, frac) {
                     codes.row_into(i, &mut row_buf);
@@ -435,36 +620,32 @@ pub fn train_from_cache_holdout<P: AsRef<Path>>(
                     tr_labels.push(labels[i]);
                 }
             }
-            row0 += codes.n as u64;
             if tr_codes.n > 0 {
-                stream.push_chunk(tr_codes, tr_labels)?;
+                stream.push_chunk_ref(&tr_codes, &tr_labels)?;
             }
-        }
+            Ok(())
+        })?;
         stream.end_epoch();
     }
     let (model, stats) = stream.finalize();
 
     // one evaluation pass over the held-out rows with the final weights
-    let mut reader = CacheReader::open(&path)?;
-    let mut row0 = 0u64;
     let (mut held, mut correct) = (0u64, 0u64);
     let mut loss_sum = 0.0f64;
-    while let Some((codes, labels)) = reader.next_chunk()? {
-        let n = codes.n;
-        let ds = BbitDataset::new(codes, labels);
-        for i in 0..n {
+    replay_cache_with(path, index.as_ref(), threads, |_rec, row0, codes, labels| {
+        for i in 0..codes.n {
             if holdout_row(row0 + i as u64, salt, frac) {
                 held += 1;
-                let m = ds.dot(i, &model.w);
-                let y = ds.labels[i];
+                let m = packed_dot(codes, i, &model.w);
+                let y = labels[i];
                 loss_sum += cfg.loss.loss(m as f64, y as f64);
                 if (m >= 0.0) == (y > 0) {
                     correct += 1;
                 }
             }
         }
-        row0 += n as u64;
-    }
+        Ok(())
+    })?;
     let report = HoldoutReport {
         train_rows: meta.n - held,
         holdout_rows: held,
@@ -483,40 +664,147 @@ pub struct CacheEval {
     pub mean_loss: f64,
 }
 
+/// (rows, correct, loss sum) of one record under `w` — the per-record
+/// partial both eval paths fold in record order, so sequential and pooled
+/// evaluation produce bit-identical sums.
+fn eval_record(codes: &PackedCodes, labels: &[i8], w: &[f32], loss: SgdLoss) -> (u64, u64, f64) {
+    let (mut correct, mut loss_sum) = (0u64, 0.0f64);
+    for i in 0..codes.n {
+        let m = packed_dot(codes, i, w);
+        let y = labels[i];
+        loss_sum += loss.loss(m as f64, y as f64);
+        if (m >= 0.0) == (y > 0) {
+            correct += 1;
+        }
+    }
+    (codes.n as u64, correct, loss_sum)
+}
+
+/// Fold per-record partials (in record order) into the aggregate eval.
+fn fold_eval(partials: impl Iterator<Item = (u64, u64, f64)>) -> CacheEval {
+    let (mut rows, mut correct) = (0u64, 0u64);
+    let mut loss_sum = 0.0f64;
+    for (r, c, l) in partials {
+        rows += r;
+        correct += c;
+        loss_sum += l;
+    }
+    CacheEval {
+        rows,
+        accuracy: correct as f64 / rows.max(1) as f64,
+        mean_loss: loss_sum / rows.max(1) as f64,
+    }
+}
+
 /// Score every row of a hashed cache with a saved model — the batch twin
 /// of the serve path (`classify --model m --cache c`).  The cache header
 /// and the model file both record their [`EncoderSpec`]; a mismatch
 /// (different scheme, parameters *or* hash-family seed — codes from one
 /// family are meaningless under another's weights) is a typed error, never
 /// an out-of-bounds panic.
+///
+/// The f64 loss sum is grouped **per record** (see [`eval_record`]) so
+/// that every thread count of [`eval_from_cache_threads`] folds in the
+/// identical order and produces bitwise-equal results.  This is a
+/// deliberate trade: vs. the pre-replay flat row-by-row accumulation the
+/// grouping can shift `mean_loss` by an ulp (row counts and accuracy are
+/// integer-exact either way — nothing visible at printed precision), in
+/// exchange for sequential/pooled evaluation being exactly interchangeable.
 pub fn eval_from_cache<P: AsRef<Path>>(
     path: P,
     saved: &SavedModel,
     loss: SgdLoss,
 ) -> Result<CacheEval> {
-    let mut reader = CacheReader::open(&path)?;
-    let meta = reader.meta();
+    eval_from_cache_threads(path, saved, loss, 1)
+}
+
+/// [`eval_from_cache`] fanned out across shards of the chunk index with a
+/// merge reduce: each of `threads` workers scores a contiguous record
+/// range into per-record partials, which are folded in record order —
+/// scoring is embarrassingly parallel, and grouping sums per record makes
+/// the result **identical for every thread count** (integer counts
+/// exactly; the f64 loss sum by construction of the fold order).  Falls
+/// back to the sequential scan (with a warning) when the cache has no
+/// usable index.
+pub fn eval_from_cache_threads<P: AsRef<Path>>(
+    path: P,
+    saved: &SavedModel,
+    loss: SgdLoss,
+    threads: usize,
+) -> Result<CacheEval> {
+    let path = path.as_ref();
+    let meta = CacheReader::open(path)?.meta();
     if meta.spec != saved.spec {
         return Err(Error::InvalidArg(format!(
             "cache encoder spec {:?} does not match the model's {:?}",
             meta.spec, saved.spec
         )));
     }
+    let (b, k) = sgd_geometry(&meta)?;
     let w = &saved.model.w;
+    if threads > 1 {
+        match ChunkIndex::load(path)? {
+            Some(index) => {
+                let n_rec = index.entries.len();
+                let starts = index.row_starts();
+                let mut partials = vec![(0u64, 0u64, 0.0f64); n_rec];
+                let plan = ShardPlan::new(n_rec, n_rec.div_ceil(threads).max(1));
+                let mut shards = Vec::with_capacity(plan.n_chunks());
+                let mut rest = partials.as_mut_slice();
+                for a in plan.iter() {
+                    let (shard, tail) = std::mem::take(&mut rest).split_at_mut(a.rows);
+                    rest = tail;
+                    shards.push((a, shard));
+                }
+                std::thread::scope(|scope| -> Result<()> {
+                    let mut handles = Vec::with_capacity(shards.len());
+                    for (a, shard) in shards {
+                        let entries = &index.entries;
+                        let starts = &starts;
+                        handles.push(scope.spawn(move || -> Result<()> {
+                            let mut reader = IndexedCacheReader::open(path)?;
+                            let mut codes = PackedCodes::new(b, k);
+                            let mut labels: Vec<i8> = Vec::new();
+                            for (off, rec) in (a.row0..a.row0 + a.rows).enumerate() {
+                                reader.read_into(
+                                    &entries[rec],
+                                    starts[rec],
+                                    &mut codes,
+                                    &mut labels,
+                                )?;
+                                shard[off] = eval_record(&codes, &labels, w, loss);
+                            }
+                            Ok(())
+                        }));
+                    }
+                    for h in handles {
+                        h.join()
+                            .map_err(|_| Error::Pipeline("cache eval worker panicked".into()))??;
+                    }
+                    Ok(())
+                })?;
+                return Ok(fold_eval(partials.into_iter()));
+            }
+            None => eprintln!(
+                "warning: cache {} has no chunk index (pre-v3 file or damaged footer); \
+                 evaluating on one thread",
+                path.display()
+            ),
+        }
+    }
+    // sequential scan folding each record's partial as it streams by —
+    // same per-record grouping and fold order as the pooled path (so the
+    // results match bitwise), but O(1) memory like every other replay
+    let mut reader = CacheReader::open(path)?;
+    let mut codes = PackedCodes::new(b, k);
+    let mut labels: Vec<i8> = Vec::new();
     let (mut rows, mut correct) = (0u64, 0u64);
     let mut loss_sum = 0.0f64;
-    while let Some((codes, labels)) = reader.next_chunk()? {
-        let n = codes.n;
-        let ds = BbitDataset::new(codes, labels);
-        for i in 0..n {
-            rows += 1;
-            let m = ds.dot(i, w);
-            let y = ds.labels[i];
-            loss_sum += loss.loss(m as f64, y as f64);
-            if (m >= 0.0) == (y > 0) {
-                correct += 1;
-            }
-        }
+    while reader.next_chunk_into(&mut codes, &mut labels)? {
+        let (r, c, l) = eval_record(&codes, &labels, w, loss);
+        rows += r;
+        correct += c;
+        loss_sum += l;
     }
     Ok(CacheEval {
         rows,

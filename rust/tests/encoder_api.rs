@@ -4,7 +4,8 @@
 //!   spec → encoder → spec() and spec → model file → spec;
 //! - redesign equality: the trait-object pipeline reproduces the legacy
 //!   `HashJob::Bbit` / `HashJob::Vw` worker outputs bit-for-bit;
-//! - cache v1→v2 read-compat: a hand-written v1 cache still trains;
+//! - cache v1→v3 read-compat: a hand-written v1 cache still trains
+//!   (the v2 transplant lives in `parallel_replay.rs`);
 //! - OPH end-to-end: `preprocess --encoder oph` → cache → `train --cache`
 //!   → `classify`, with the scheme recorded in cache and model.
 
@@ -150,15 +151,20 @@ fn v1_cache_reads_and_trains_as_bbit() {
     let spec = EncoderSpec::Bbit { b, k, d, seed };
     let dir = tmp_dir("v1compat");
 
-    // build the record stream with today's writer, then transplant it
-    // behind a hand-written v1 header
-    let v2_path = dir.join("v2.cache");
+    // build the record stream with today's (v3) writer, then transplant
+    // it behind a hand-written v1 header — the record framing is shared
+    // by every version; only the header and the v3-only footer differ
+    let v3_path = dir.join("v3.cache");
     let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 50, queue_depth: 2 });
-    let mut sink = CacheSink::create(&v2_path, &spec).unwrap();
+    let mut sink = CacheSink::create(&v3_path, &spec).unwrap();
     pipe.run_sink(dataset_chunks(&ds, 50), &spec, &mut sink).unwrap();
-    let v2_bytes = std::fs::read(&v2_path).unwrap();
-    let v2_header = 4 + 4 + 4 + 4 + 8 + 8 + 8 + 8; // magic+version+tag+p0+p1+p2+seed+n
-    let records = &v2_bytes[v2_header..];
+    let v3_bytes = std::fs::read(&v3_path).unwrap();
+    let records_end = bbit_mh::encode::ChunkIndex::load(&v3_path)
+        .unwrap()
+        .expect("v3 cache carries an index")
+        .records_end as usize;
+    let records =
+        &v3_bytes[bbit_mh::encode::cache::HEADER_BYTES_V3 as usize..records_end];
 
     let mut v1_bytes = Vec::new();
     v1_bytes.extend_from_slice(CACHE_MAGIC);
@@ -171,34 +177,37 @@ fn v1_cache_reads_and_trains_as_bbit() {
     let v1_path = dir.join("v1.cache");
     std::fs::write(&v1_path, &v1_bytes).unwrap();
 
-    // both versions parse to the same meta and replay the same rows
+    // both versions parse to the same spec/rows and replay the same data
+    // (v1 headers carry no payload byte totals, so compare fields, not
+    // the whole meta struct)
     let m1 = CacheReader::open(&v1_path).unwrap().meta();
-    let m2 = CacheReader::open(&v2_path).unwrap().meta();
-    assert_eq!(m1, m2);
+    let m3 = CacheReader::open(&v3_path).unwrap().meta();
+    assert_eq!(m1.spec, m3.spec);
+    assert_eq!(m1.n, m3.n);
     let ds1 = CacheReader::open(&v1_path).unwrap().read_all().unwrap();
-    let ds2 = CacheReader::open(&v2_path).unwrap().read_all().unwrap();
-    assert_eq!(ds1.codes.words(), ds2.codes.words());
-    assert_eq!(ds1.labels, ds2.labels);
+    let ds3 = CacheReader::open(&v3_path).unwrap().read_all().unwrap();
+    assert_eq!(ds1.codes.words(), ds3.codes.words());
+    assert_eq!(ds1.labels, ds3.labels);
 
     // and the v1 file trains through the same streaming path
     let cfg = SgdConfig { epochs: 2, batch: 32, ..Default::default() };
     let (w1, _) = train_from_cache(&v1_path, &cfg).unwrap();
-    let (w2, _) = train_from_cache(&v2_path, &cfg).unwrap();
-    assert_eq!(w1.w, w2.w, "v1 and v2 replays must train identically");
+    let (w3, _) = train_from_cache(&v3_path, &cfg).unwrap();
+    assert_eq!(w1.w, w3.w, "v1 and v3 replays must train identically");
     std::fs::remove_dir_all(dir).ok();
 }
 
-/// New-writer caches are v2 (scheme-tagged); the version constant and the
-/// on-disk bytes agree.
+/// New-writer caches are v3 (scheme-tagged + indexed); the version
+/// constant and the on-disk bytes agree.
 #[test]
-fn writer_emits_v2_headers() {
+fn writer_emits_v3_headers() {
     let spec = EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 16, seed: 3 };
     let mut buf = std::io::Cursor::new(Vec::new());
     let mut w = CacheWriter::new(&mut buf, &spec).unwrap();
     w.finalize().unwrap();
     let bytes = buf.into_inner();
     assert_eq!(&bytes[0..4], CACHE_MAGIC);
-    assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 2);
+    assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 3);
     assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 0); // bbit tag
 }
 

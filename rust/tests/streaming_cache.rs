@@ -175,8 +175,13 @@ fn truncated_final_record_is_a_typed_error_not_a_panic() {
     let job = EncoderSpec::Bbit { b: 4, k: 12, d: 1 << 20, seed: 5 };
     let path = build_cache("truncated", 300, 0x7A11, &job, 50);
     let bytes = std::fs::read(&path).unwrap();
-    // lose the tail of the final record (checksum + some payload)
-    std::fs::write(&path, &bytes[..bytes.len() - 13]).unwrap();
+    // lose the v3 index footer AND the tail of the final record
+    // (checksum + some payload)
+    let records_end = bbit_mh::encode::ChunkIndex::load(&path)
+        .unwrap()
+        .expect("fresh v3 cache carries an index")
+        .records_end as usize;
+    std::fs::write(&path, &bytes[..records_end - 13]).unwrap();
 
     let mut reader = CacheReader::open(&path).unwrap();
     assert_eq!(reader.meta().n, 300, "header is intact");
@@ -204,12 +209,14 @@ fn checksum_mismatch_mid_file_fails_at_the_damaged_record() {
     let job = EncoderSpec::Bbit { b, k, d: 1 << 20, seed: 5 };
     let chunk = 50usize;
     let path = build_cache("midfile", 300, 0xC0DE, &job, chunk);
-    // record layout (cache.rs): v2 header is 48 bytes; each record is
-    // u32 rows + u64 payload_len + payload(rows + 8·rows·stride) + u64 sum
+    // record layout (cache.rs): the v3 header is HEADER_BYTES_V3 bytes;
+    // each record is u32 rows + u64 payload_len + payload(rows +
+    // 8·rows·stride) + u64 sum
     let stride = (k * b as usize).div_ceil(64);
     let record = 4 + 8 + (chunk + 8 * chunk * stride) + 8;
+    let header = bbit_mh::encode::cache::HEADER_BYTES_V3 as usize;
     let mut bytes = std::fs::read(&path).unwrap();
-    let target = 48 + 3 * record + 12 + 5; // record 3's payload, byte 5
+    let target = header + 3 * record + 12 + 5; // record 3's payload, byte 5
     bytes[target] ^= 0x40;
     std::fs::write(&path, &bytes).unwrap();
 
