@@ -7,7 +7,14 @@
 //!
 //! Run: `cargo bench --bench bench_pipeline`
 //! One scenario group: `cargo bench --bench bench_pipeline -- serve`
-//! (any prefix of the scenario names: `pipeline`, `replay`, `serve`)
+//! (any prefix of the scenario names: `pipeline`, `ingest`, `replay`,
+//! `serve`)
+//!
+//! The `ingest` scenario times raw-input parsing — the legacy line reader
+//! vs. the byte-block parser (1 thread and W workers) vs. raw read
+//! throughput — plus end-to-end `preprocess`, whose ratio to raw load
+//! time is the paper's Table-2 "preprocessing costs about as much as
+//! loading" claim; results land in `BENCH_ingest.json`.
 //!
 //! The `replay` scenario times cache replay — sequential vs. the
 //! N-thread reader pool over the same v3 cache — reporting rows/s and
@@ -50,6 +57,9 @@ fn main() {
     let mut b = Bench::quick();
 
     if !should("pipeline") {
+        if should("ingest") {
+            run_ingest_scenario();
+        }
         if should("replay") {
             run_replay_scenario();
         }
@@ -158,12 +168,169 @@ fn main() {
         });
     }
 
+    if should("ingest") {
+        run_ingest_scenario();
+    }
     if should("replay") {
         run_replay_scenario();
     }
     if should("serve") {
         run_serve_scenario(&ds);
     }
+}
+
+/// Ingest throughput: serialize a corpus to a LibSVM file once, then time
+/// (a) raw sequential reads — the paper's Table-2 "data loading" baseline,
+/// (b) the legacy single-thread line parser, (c) the byte-block parser on
+/// one thread, (d) the W-worker block-parallel parse, and (e) end-to-end
+/// `preprocess` (parse + b-bit hash + cache write) whose ratio to (a) is
+/// the paper's preprocessing-vs-loading claim.  Best-of-R wall clock;
+/// rows/s and MB/s go to stdout and `BENCH_ingest.json`.
+fn run_ingest_scenario() {
+    use bbit_mh::data::libsvm::{parse_block, BlockReader, LibsvmReader, LibsvmWriter, ParsedChunk};
+    use bbit_mh::util::bench::black_box;
+
+    println!();
+    let corpus = CorpusGenerator::new(CorpusConfig {
+        n_docs: 20_000,
+        vocab: 2500,
+        zipf_alpha: 1.05,
+        mean_tokens: 28.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed: 0x16E57,
+    })
+    .generate();
+    let path =
+        std::env::temp_dir().join(format!("bbit_bench_ingest_{}.svm", std::process::id()));
+    {
+        let mut w = LibsvmWriter::create(&path).unwrap();
+        w.write_dataset(&corpus).unwrap();
+        w.finish().unwrap();
+    }
+    let file_bytes = std::fs::metadata(&path).unwrap().len();
+    let mb = file_bytes as f64 / 1e6;
+    let reps = 5usize;
+    let best = |f: &mut dyn FnMut() -> usize| -> (f64, usize) {
+        let mut best = f64::INFINITY;
+        let mut rows = 0usize;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            rows = f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        (best, rows)
+    };
+
+    // (a) raw read: the load-time floor every parse is compared against
+    let (load_s, _) = best(&mut || {
+        let mut f = std::fs::File::open(&path).unwrap();
+        let mut buf = vec![0u8; 1 << 20];
+        let mut total = 0usize;
+        loop {
+            let n = std::io::Read::read(&mut f, &mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            black_box(&buf[..n]);
+            total += n;
+        }
+        total
+    });
+
+    // (b) legacy line parser, one thread
+    let (legacy_s, legacy_rows) = best(&mut || {
+        let mut rows = 0usize;
+        for ex in LibsvmReader::open(&path).unwrap().binary() {
+            black_box(ex.unwrap());
+            rows += 1;
+        }
+        rows
+    });
+
+    // (c) byte-block parser, one thread
+    let (byte_s, byte_rows) = best(&mut || {
+        let mut parsed = ParsedChunk::default();
+        let mut rows = 0usize;
+        for block in BlockReader::open(&path).unwrap() {
+            let block = block.unwrap();
+            parsed.clear();
+            parse_block(&block.bytes, block.first_line, true, &mut parsed).unwrap();
+            rows += parsed.len();
+        }
+        rows
+    });
+    assert_eq!(byte_rows, legacy_rows, "parsers must cover the same rows");
+
+    // (d) W-worker block-parallel parse (trivial work body: parse only)
+    let workers = bbit_mh::config::available_workers().max(2);
+    let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
+    let (par_s, par_rows) = best(&mut || {
+        let report = pipe
+            .run_blocks_each(
+                BlockReader::open(&path).unwrap(),
+                true,
+                |parsed, _| Ok(black_box(parsed.len())),
+                |_, _| Ok(()),
+            )
+            .unwrap();
+        report.docs
+    });
+    assert_eq!(par_rows, legacy_rows, "block-parallel parse must cover the same rows");
+
+    // (e) end-to-end preprocess (parse + bbit hash + cache write)
+    let spec = EncoderSpec::Bbit { b: 8, k: 200, d: 1 << 30, seed: 11 };
+    let cache_path =
+        std::env::temp_dir().join(format!("bbit_bench_ingest_{}.cache", std::process::id()));
+    let (pre_s, _) = best(&mut || {
+        let mut sink = CacheSink::create(&cache_path, &spec).unwrap();
+        let report = pipe
+            .run_sink_blocks(BlockReader::open(&path).unwrap(), true, &spec, &mut sink)
+            .unwrap();
+        report.docs
+    });
+    let ratio = pre_s / load_s.max(1e-9);
+
+    let rows = legacy_rows;
+    let line = |name: &str, secs: f64| {
+        println!(
+            "ingest/{name:<22} {rows} rows in {:8.2} ms  ({:9.0} rows/s, {:6.1} MB/s)",
+            secs * 1e3,
+            rows as f64 / secs,
+            mb / secs,
+        );
+    };
+    println!(
+        "ingest/raw-read          {file_bytes} bytes in {:.2} ms  ({:.1} MB/s)",
+        load_s * 1e3,
+        mb / load_s,
+    );
+    line("legacy-parse", legacy_s);
+    line("byte-parse", byte_s);
+    line(&format!("block-parallel w={workers}"), par_s);
+    line("preprocess-e2e", pre_s);
+    println!(
+        "ingest/preprocess-vs-load ratio: {ratio:.2}x (Table-2 target: O(1)× load time)"
+    );
+    let json = format!(
+        "{{\"scenario\":\"ingest\",\"rows\":{rows},\"file_bytes\":{file_bytes},\
+         \"workers\":{workers},\"raw_read_seconds\":{load_s:.6},\
+         \"legacy_parse_seconds\":{legacy_s:.6},\"byte_parse_seconds\":{byte_s:.6},\
+         \"parallel_parse_seconds\":{par_s:.6},\"preprocess_seconds\":{pre_s:.6},\
+         \"legacy_rows_per_s\":{:.1},\"byte_rows_per_s\":{:.1},\
+         \"parallel_rows_per_s\":{:.1},\"raw_read_mb_per_s\":{:.3},\
+         \"byte_parse_mb_per_s\":{:.3},\"parallel_parse_mb_per_s\":{:.3},\
+         \"preprocess_over_load\":{ratio:.3}}}",
+        rows as f64 / legacy_s,
+        rows as f64 / byte_s,
+        rows as f64 / par_s,
+        mb / load_s,
+        mb / byte_s,
+        mb / par_s,
+    );
+    std::fs::write("BENCH_ingest.json", json + "\n").ok();
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cache_path).ok();
 }
 
 /// Cache replay throughput: hash a corpus into a v3 cache once, then time

@@ -1,6 +1,8 @@
 //! Layer-3 coordination: the streaming preprocessing pipeline (reader →
 //! sharded encode workers → collector → sink, with bounded-queue
-//! backpressure), the pluggable sinks behind the out-of-core workflow
+//! backpressure; on raw LibSVM input the reader carves newline-aligned
+//! byte blocks and the workers parse *and* encode, so ingest scales with
+//! `--workers`), the pluggable sinks behind the out-of-core workflow
 //! (collect in memory / write the on-disk hashed cache / train as chunks
 //! arrive), the parallel cache-replay reader pool ([`replay`]: decode the
 //! hashed cache across cores, re-emitting chunks strictly in record

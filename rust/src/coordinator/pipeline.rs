@@ -1,12 +1,20 @@
 //! The streaming preprocessing pipeline.
 //!
-//! Topology (all std threads, bounded channels = backpressure):
+//! Topology (all std threads, bounded channels = backpressure).  Two
+//! source shapes share one fan-out/fan-in core:
 //!
 //! ```text
+//!   chunk source (legacy / in-memory):
 //!   reader ──sync_channel(queue_depth)──▶ worker×W ──sync_channel──▶ collector ──▶ sink
 //!   (LibSVM parse / generator)    (FeatureEncoder::encode_chunk:   (bounded     (collect |
 //!                                  bbit / vw / rp / oph)            reorder      cache |
 //!                                                                   window)      train)
+//!
+//!   block source (byte-block ingest, the default raw-input path):
+//!   reader ──────────────────────▶ worker×W ──────────────────────▶ collector ──▶ sink
+//!   (carve newline-aligned         (parse_block into per-worker
+//!    RawBlocks; recycled            ParsedChunk scratch, then
+//!    buffers, no parsing)           FeatureEncoder::encode_parsed)
 //! ```
 //!
 //! - The reader is the paper's "data loading" stage (Table 2 column 1);
@@ -16,6 +24,16 @@
 //!   never by the pipeline itself.  Swapping the worker body for the PJRT
 //!   [`MinhashEngine`](crate::runtime::MinhashEngine) gives column 3 (the
 //!   accelerated path).
+//! - In the block topology ([`run_blocks_each`](Pipeline::run_blocks_each))
+//!   the reader stops parsing entirely: it carves the input into
+//!   newline-aligned byte slabs ([`BlockReader`]) whose buffers the parse
+//!   workers hand back for reuse, so *parsing scales with `--workers`*
+//!   instead of bottlenecking on one thread — and the per-byte reader work
+//!   drops to a `read` plus a newline count, i.e. the raw-load bound the
+//!   paper compares preprocessing against.  Workers parse into recycled
+//!   per-worker [`ParsedChunk`] scratch and encode in place; the reorder
+//!   window keeps block order, so output is deterministic for every worker
+//!   count.
 //! - Workers pull from one shared queue — natural load balancing (a slow
 //!   chunk doesn't stall siblings), with chunk ids restoring deterministic
 //!   output order in the collector regardless of completion order.
@@ -46,7 +64,8 @@ use std::time::Instant;
 
 use crate::coordinator::sink::{CollectSink, PipelineSink};
 use crate::data::dataset::{Example, SparseDataset};
-use crate::encode::encoder::{EncoderSpec, FeatureEncoder};
+use crate::data::libsvm::{parse_block, BlockReader, ParsedChunk, RawBlock};
+use crate::encode::encoder::{EncodedChunk, EncoderSpec, FeatureEncoder};
 use crate::encode::expansion::BbitDataset;
 use crate::{Error, Result};
 
@@ -163,12 +182,38 @@ pub struct PipelineReport {
     /// Cache file bytes behind a replay run (header + records + footer) —
     /// the MB/s numerator of the `replay` bench scenario.
     pub replay_bytes: u64,
+    /// Raw input bytes carved by the block reader (0 for chunk sources) —
+    /// the MB/s numerator of the `ingest` bench scenario.
+    pub input_bytes: u64,
+    /// Worker CPU-seconds spent parsing raw byte blocks into rows
+    /// (block-parallel ingest only; on the legacy line-reader path parsing
+    /// happens on the reader thread and lands in
+    /// [`read_seconds`](Self::read_seconds)).  Disjoint from
+    /// [`hash_cpu_seconds`](Self::hash_cpu_seconds), which keeps meaning
+    /// encode-only time.
+    pub parse_cpu_seconds: f64,
 }
 
 impl PipelineReport {
     /// Replayed rows per wall-clock second (0 when nothing ran).
     pub fn rows_per_sec(&self) -> f64 {
         self.docs as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    /// Documents parsed per parse-CPU-second (block-parallel ingest; 0
+    /// when no in-worker parsing ran).
+    pub fn parse_rows_per_sec(&self) -> f64 {
+        if self.parse_cpu_seconds <= 0.0 {
+            0.0
+        } else {
+            self.docs as f64 / self.parse_cpu_seconds
+        }
+    }
+
+    /// Raw input megabytes ingested per wall-clock second (0 for non-block
+    /// sources).
+    pub fn ingest_mb_per_sec(&self) -> f64 {
+        self.input_bytes as f64 / 1e6 / self.wall_seconds.max(1e-9)
     }
 }
 
@@ -195,11 +240,43 @@ impl Pipeline {
         &self,
         source: impl Iterator<Item = Result<Vec<Example>>> + Send,
         work: W,
-        mut emit: E,
+        emit: E,
     ) -> Result<PipelineReport>
     where
         O: Send,
         W: Fn(&[Example], usize) -> Result<O> + Send + Sync,
+        E: FnMut(usize, O) -> Result<()>,
+    {
+        self.run_core(
+            source,
+            |chunk: &Vec<Example>| (chunk.len(), 0),
+            || (),
+            |chunk, (), wid| work(&chunk, wid),
+            emit,
+        )
+    }
+
+    /// The fan-out/fan-in engine behind every source shape: generic over
+    /// the item the reader produces (`Vec<Example>` chunks, raw byte
+    /// blocks, ...) and over per-worker mutable state (`make_state` runs
+    /// once per worker; the block path parks its parse scratch there).
+    /// `size_of` is the reader-side accounting hook returning
+    /// `(docs, input_bytes)` for an item before it is dispatched.
+    fn run_core<I, O, ST, SZ, MK, W, E>(
+        &self,
+        source: impl Iterator<Item = Result<I>> + Send,
+        size_of: SZ,
+        mut make_state: MK,
+        work: W,
+        mut emit: E,
+    ) -> Result<PipelineReport>
+    where
+        I: Send,
+        O: Send,
+        ST: Send,
+        SZ: Fn(&I) -> (usize, u64) + Send,
+        MK: FnMut() -> ST,
+        W: Fn(I, &mut ST, usize) -> Result<O> + Send + Sync,
         E: FnMut(usize, O) -> Result<()>,
     {
         let wall0 = Instant::now();
@@ -214,12 +291,19 @@ impl Pipeline {
         // pipeline (queues + workers + reorder buffer) at once.
         let window = 2 * (self.cfg.workers + self.cfg.queue_depth);
 
+        // Per-worker state built up front on this thread, moved into the
+        // worker threads below.
+        let states: Vec<ST> = (0..self.cfg.workers).map(|_| make_state()).collect();
+
         std::thread::scope(|scope| -> Result<PipelineReport> {
-            let (chunk_tx, chunk_rx) = sync_channel::<(usize, Vec<Example>)>(self.cfg.queue_depth);
+            let (chunk_tx, chunk_rx) = sync_channel::<(usize, I)>(self.cfg.queue_depth);
             let chunk_rx = Arc::new(Mutex::new(chunk_rx));
             // Bounded so a slow sink backpressures workers (and through
             // them the reader) instead of letting finished chunks pile up.
-            let (out_tx, out_rx) = sync_channel::<Result<ChunkResult<(O, usize, f64)>>>(
+            // The chunk id rides outside the Result so a failure is
+            // attributable to its chunk: the collector fails on the
+            // *earliest* bad chunk, not the first failure to finish.
+            let (out_tx, out_rx) = sync_channel::<ChunkResult<Result<(O, usize, f64)>>>(
                 self.cfg.workers + self.cfg.queue_depth,
             );
             let (credit_tx, credit_rx) = sync_channel::<()>(window);
@@ -228,15 +312,18 @@ impl Pipeline {
             }
 
             // ---- reader (this scope's own thread) ----
-            let reader = scope.spawn(move || -> Result<(usize, usize, f64, u64, f64)> {
+            let reader = scope.spawn(move || -> Result<(usize, usize, u64, f64, u64, f64)> {
                 let t0 = Instant::now();
                 let mut docs = 0usize;
                 let mut chunks = 0usize;
+                let mut bytes = 0u64;
                 let mut stalls = 0u64;
                 let mut stall_secs = 0.0f64;
                 for (chunk_id, chunk) in source.enumerate() {
                     let chunk = chunk?;
-                    docs += chunk.len();
+                    let (n, b) = size_of(&chunk);
+                    docs += n;
+                    bytes += b;
                     chunks += 1;
                     // admission credit: blocks once `window` chunks are in
                     // flight, bounding collector memory structurally
@@ -270,12 +357,12 @@ impl Pipeline {
                     }
                 }
                 let read_secs = t0.elapsed().as_secs_f64() - stall_secs;
-                Ok((docs, chunks, read_secs, stalls, stall_secs))
+                Ok((docs, chunks, bytes, read_secs, stalls, stall_secs))
             });
 
             // ---- workers ----
             let work = &work;
-            for wid in 0..self.cfg.workers {
+            for (wid, mut state) in states.into_iter().enumerate() {
                 let rx = chunk_rx.clone();
                 let tx = out_tx.clone();
                 scope.spawn(move || {
@@ -290,13 +377,13 @@ impl Pipeline {
                         // with admission credits, a silently lost chunk
                         // would wedge the reader instead of failing the run
                         let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || work(&chunk, wid),
+                            || work(chunk, &mut state, wid),
                         ))
                         .unwrap_or_else(|_| {
                             Err(Error::Pipeline(format!("worker {wid} panicked")))
                         })
-                        .map(|o| (chunk_id, (o, wid, t0.elapsed().as_secs_f64())));
-                        if tx.send(out).is_err() {
+                        .map(|o| (o, wid, t0.elapsed().as_secs_f64()));
+                        if tx.send((chunk_id, out)).is_err() {
                             break;
                         }
                     }
@@ -307,17 +394,35 @@ impl Pipeline {
 
             // ---- collector (current thread): bounded reorder window ----
             // Chunks that completed ahead of order wait here; everything
-            // in order is emitted immediately and dropped.
+            // in order is emitted immediately and dropped.  Failures park
+            // under their chunk id too, and only surface once every
+            // earlier chunk has been emitted — so a multi-error input
+            // reports the earliest bad chunk deterministically, exactly
+            // like the sequential reader, regardless of worker scheduling.
             let mut reorder: std::collections::BTreeMap<usize, O> =
                 std::collections::BTreeMap::new();
+            let mut failed: std::collections::BTreeMap<usize, Error> =
+                std::collections::BTreeMap::new();
             let mut next_chunk = 0usize;
-            for msg in out_rx {
-                let (chunk_id, (out, wid, secs)) = msg?;
-                report.hash_cpu_seconds += secs;
-                report.per_worker_chunks[wid] += 1;
-                reorder.insert(chunk_id, out);
-                report.reorder_peak = report.reorder_peak.max(reorder.len());
-                while let Some(out) = reorder.remove(&next_chunk) {
+            for (chunk_id, res) in out_rx {
+                match res {
+                    Ok((out, wid, secs)) => {
+                        report.hash_cpu_seconds += secs;
+                        report.per_worker_chunks[wid] += 1;
+                        reorder.insert(chunk_id, out);
+                        report.reorder_peak = report.reorder_peak.max(reorder.len());
+                    }
+                    Err(e) => {
+                        failed.insert(chunk_id, e);
+                    }
+                }
+                loop {
+                    if let Some(e) = failed.remove(&next_chunk) {
+                        return Err(e);
+                    }
+                    let Some(out) = reorder.remove(&next_chunk) else {
+                        break;
+                    };
                     let t0 = Instant::now();
                     emit(next_chunk, out)?;
                     report.sink_seconds += t0.elapsed().as_secs_f64();
@@ -327,11 +432,17 @@ impl Pipeline {
                     let _ = credit_tx.try_send(());
                 }
             }
-            let (docs, chunks, read_secs, stalls, stall_secs) = reader
+            let (docs, chunks, bytes, read_secs, stalls, stall_secs) = reader
                 .join()
                 .map_err(|_| Error::Pipeline("reader panicked".into()))??;
+            // unreachable in practice (every dispatched chunk sends exactly
+            // one message), kept so a parked failure can never be swallowed
+            if let Some((_, e)) = failed.into_iter().next() {
+                return Err(e);
+            }
             report.docs = docs;
             report.chunks = chunks;
+            report.input_bytes = bytes;
             report.read_seconds = read_secs;
             report.stall_seconds = stall_secs;
             report.backpressure_stalls = stalls;
@@ -410,6 +521,113 @@ impl Pipeline {
         let mut sink = CollectSink::for_spec(spec)?;
         let report = self.run_sink(source, spec, &mut sink)?;
         Ok((sink.into_output(), report))
+    }
+
+    /// Block-parallel fan-out with parse-in-worker: the reader carves raw
+    /// newline-aligned byte blocks, each worker parses them into its own
+    /// recycled [`ParsedChunk`] scratch and runs `work(&parsed, wid)`, and
+    /// `emit(block_id, output)` fires strictly in block order on the
+    /// calling thread.  Block buffers are handed back to the reader after
+    /// parsing, so steady-state ingest allocates nothing per document (the
+    /// admission-credit loop bounds how many buffers circulate).  The
+    /// report's [`parse_cpu_seconds`](PipelineReport::parse_cpu_seconds) /
+    /// [`input_bytes`](PipelineReport::input_bytes) counters come from
+    /// this path; `hash_cpu_seconds` keeps meaning encode-only time.
+    pub fn run_blocks_each<R, O, W, E>(
+        &self,
+        mut blocks: BlockReader<R>,
+        binary: bool,
+        work: W,
+        mut emit: E,
+    ) -> Result<PipelineReport>
+    where
+        R: std::io::Read + Send,
+        O: Send,
+        W: Fn(&ParsedChunk, usize) -> Result<O> + Send + Sync,
+        E: FnMut(usize, O) -> Result<()>,
+    {
+        let (pool_tx, pool_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+        blocks.set_recycle(pool_rx);
+        let mut docs = 0usize;
+        let mut parse_cpu = 0.0f64;
+        let mut report = self.run_core(
+            blocks,
+            |b: &RawBlock| (0, b.bytes.len() as u64),
+            || (ParsedChunk::default(), pool_tx.clone()),
+            |block: RawBlock, (parsed, recycle), wid| {
+                parsed.clear();
+                let t0 = Instant::now();
+                parse_block(&block.bytes, block.first_line, binary, parsed)?;
+                let parse_secs = t0.elapsed().as_secs_f64();
+                // hand the raw buffer back to the reader (reader gone at
+                // end-of-input is fine)
+                let _ = recycle.send(block.bytes);
+                let out = work(parsed, wid)?;
+                Ok((out, parsed.len(), parse_secs))
+            },
+            |id, (out, n, parse_secs)| {
+                docs += n;
+                parse_cpu += parse_secs;
+                emit(id, out)
+            },
+        )?;
+        report.docs = docs; // blocks carry an unknown doc count at read time
+        report.parse_cpu_seconds = parse_cpu;
+        report.hash_cpu_seconds = (report.hash_cpu_seconds - parse_cpu).max(0.0);
+        Ok(report)
+    }
+
+    /// Run an already-drawn [`FeatureEncoder`] over raw LibSVM blocks —
+    /// the byte-block twin of [`run_encoder`](Self::run_encoder) and the
+    /// default `preprocess`/`train --stream` ingest path.  Workers parse
+    /// *and* encode ([`FeatureEncoder::encode_parsed`]); empty blocks
+    /// (all comments/blanks) are skipped rather than written as zero-row
+    /// sink chunks.
+    pub fn run_encoder_blocks<R, S>(
+        &self,
+        blocks: BlockReader<R>,
+        binary: bool,
+        encoder: &dyn FeatureEncoder,
+        sink: &mut S,
+    ) -> Result<PipelineReport>
+    where
+        R: std::io::Read + Send,
+        S: PipelineSink,
+    {
+        let mut report = self.run_blocks_each(
+            blocks,
+            binary,
+            |parsed, _wid| encoder.encode_parsed(parsed),
+            |_, chunk: EncodedChunk| {
+                if chunk.is_empty() {
+                    Ok(())
+                } else {
+                    sink.consume(chunk)
+                }
+            },
+        )?;
+        let t0 = Instant::now();
+        sink.finish()?;
+        report.sink_seconds += t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Draw the encoder an [`EncoderSpec`] describes and run it over raw
+    /// LibSVM blocks into `sink` (the byte-block twin of
+    /// [`run_sink`](Self::run_sink)).
+    pub fn run_sink_blocks<R, S>(
+        &self,
+        blocks: BlockReader<R>,
+        binary: bool,
+        spec: &EncoderSpec,
+        sink: &mut S,
+    ) -> Result<PipelineReport>
+    where
+        R: std::io::Read + Send,
+        S: PipelineSink,
+    {
+        let encoder = spec.encoder()?;
+        self.run_encoder_blocks(blocks, binary, encoder.as_ref(), sink)
     }
 }
 
@@ -612,6 +830,141 @@ mod tests {
         for i in 0..a.len() {
             assert_eq!(a.codes.row(i), b.codes.row(i));
         }
+    }
+
+    #[test]
+    fn block_pipeline_matches_chunk_pipeline_for_every_worker_count() {
+        // serialize a corpus to LibSVM text, then hash it through (a) the
+        // legacy chunk source and (b) the byte-block parse-in-worker
+        // source: packed output must be bit-identical, for 1 and many
+        // workers and for slabs much smaller than the text
+        let ds = corpus(240);
+        let mut text = Vec::new();
+        {
+            let mut w = crate::data::libsvm::LibsvmWriter::new(&mut text);
+            w.write_dataset(&ds).unwrap();
+            w.finish().unwrap();
+        }
+        let spec = EncoderSpec::Bbit { b: 6, k: 24, d: 1 << 20, seed: 9 };
+        let reference = {
+            let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 32, queue_depth: 2 });
+            pipe.run(dataset_chunks(&ds, 32), &spec).unwrap().0.into_packed().unwrap()
+        };
+        for workers in [1usize, 4] {
+            let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 32, queue_depth: 2 });
+            let blocks = BlockReader::new(&text[..]).with_block_bytes(192);
+            let mut sink = CollectSink::for_spec(&spec).unwrap();
+            let report = pipe.run_sink_blocks(blocks, true, &spec, &mut sink).unwrap();
+            let got = sink.into_output().into_packed().unwrap();
+            assert_eq!(report.docs, 240, "workers={workers}");
+            assert_eq!(report.input_bytes, text.len() as u64);
+            assert!(report.parse_cpu_seconds >= 0.0);
+            assert!(report.chunks > 1, "slab size must produce many blocks");
+            assert_eq!(got.labels, reference.labels, "workers={workers}");
+            for i in 0..got.len() {
+                assert_eq!(got.codes.row(i), reference.codes.row(i), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_pipeline_propagates_parse_errors_with_line_numbers() {
+        let text = b"+1 1:1\n-1 2:1\nbogus line\n+1 3:1\n";
+        let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 8, queue_depth: 2 });
+        let spec = EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 16, seed: 1 };
+        let mut sink = CollectSink::for_spec(&spec).unwrap();
+        let blocks = BlockReader::new(&text[..]).with_block_bytes(8);
+        let err = pipe.run_sink_blocks(blocks, true, &spec, &mut sink).unwrap_err();
+        match err {
+            Error::LibsvmParse { line, .. } => assert_eq!(line, 3),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn earliest_failing_chunk_wins_regardless_of_scheduling() {
+        // two failing chunks where the later one finishes first: the run
+        // must still report the earlier chunk's error, every time
+        let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 1, queue_depth: 2 });
+        for _ in 0..5 {
+            let source =
+                (0..20u32).map(|i| Ok(vec![Example::binary(1, vec![i + 1])]));
+            let err = pipe
+                .run_chunks_each(
+                    source,
+                    |chunk: &[Example], _| -> Result<()> {
+                        match chunk[0].indices[0] {
+                            5 => {
+                                // the early bad chunk is slow...
+                                std::thread::sleep(std::time::Duration::from_millis(20));
+                                Err(Error::Pipeline("bad chunk 4".into()))
+                            }
+                            // ...the late bad chunk fails instantly
+                            16 => Err(Error::Pipeline("bad chunk 15".into())),
+                            _ => Ok(()),
+                        }
+                    },
+                    |_, ()| Ok(()),
+                )
+                .unwrap_err();
+            assert_eq!(err.to_string(), "pipeline error: bad chunk 4");
+        }
+    }
+
+    #[test]
+    fn block_pipeline_reports_the_first_bad_line_of_many() {
+        // several malformed lines spread across many tiny blocks parsed by
+        // racing workers: the surfaced line number must be the first one
+        let mut text = String::new();
+        for i in 0..60 {
+            if i == 17 || i == 40 || i == 55 {
+                text.push_str("broken record\n");
+            } else {
+                text.push_str(&format!("+1 {}:1\n", i + 1));
+            }
+        }
+        let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 4, queue_depth: 2 });
+        for _ in 0..5 {
+            let blocks = BlockReader::new(text.as_bytes()).with_block_bytes(8);
+            let err = pipe
+                .run_blocks_each(blocks, true, |parsed, _| Ok(parsed.len()), |_, _| Ok(()))
+                .unwrap_err();
+            match err {
+                Error::LibsvmParse { line, .. } => assert_eq!(line, 18),
+                other => panic!("wrong error {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn block_pipeline_skips_empty_blocks() {
+        // slabs of pure comments/blanks must not reach the sink as
+        // zero-row chunks (a cache sink would happily write them)
+        struct CountingSink {
+            chunks: usize,
+            rows: usize,
+        }
+        impl crate::coordinator::sink::PipelineSink for CountingSink {
+            fn consume(&mut self, chunk: EncodedChunk) -> Result<()> {
+                self.chunks += 1;
+                self.rows += chunk.len();
+                Ok(())
+            }
+        }
+        let text = b"# a\n# b\n\n\n+1 1:1\n# c\n\n-1 2:1\n# d\n\n";
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 8, queue_depth: 2 });
+        let blocks = BlockReader::new(&text[..]).with_block_bytes(4);
+        let spec = EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 16, seed: 1 };
+        let mut sink = CountingSink { chunks: 0, rows: 0 };
+        let report = pipe.run_sink_blocks(blocks, true, &spec, &mut sink).unwrap();
+        assert_eq!(report.docs, 2);
+        assert_eq!(sink.rows, 2);
+        assert!(
+            sink.chunks <= 2,
+            "empty blocks must be skipped, got {} sink chunks",
+            sink.chunks
+        );
+        assert!(report.chunks > sink.chunks, "tiny slabs produce empty blocks");
     }
 
     #[test]

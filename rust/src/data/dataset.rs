@@ -61,21 +61,29 @@ impl SparseDataset {
     }
 
     pub fn push(&mut self, ex: &Example) {
-        debug_assert!(ex.indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted+unique");
-        self.indices.extend_from_slice(&ex.indices);
-        match (&mut self.values, &ex.values) {
+        self.push_row(ex.label, &ex.indices, ex.values.as_deref());
+    }
+
+    /// Append one row from borrowed parts — the byte-block ingest path
+    /// ([`ParsedChunk`](crate::data::libsvm::ParsedChunk) rows), which
+    /// otherwise had to materialize a throwaway [`Example`] per document.
+    /// Same valued-promotion semantics as [`push`](Self::push).
+    pub fn push_row(&mut self, label: i8, indices: &[u32], values: Option<&[f32]>) {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted+unique");
+        self.indices.extend_from_slice(indices);
+        match (&mut self.values, values) {
             (Some(vs), Some(ev)) => vs.extend_from_slice(ev),
-            (Some(vs), None) => vs.extend(std::iter::repeat(1.0).take(ex.indices.len())),
+            (Some(vs), None) => vs.extend(std::iter::repeat(1.0).take(indices.len())),
             (None, Some(ev)) => {
                 // promote to valued: backfill ones
-                let mut vs = vec![1.0f32; self.indices.len() - ex.indices.len()];
+                let mut vs = vec![1.0f32; self.indices.len() - indices.len()];
                 vs.extend_from_slice(ev);
                 self.values = Some(vs);
             }
             (None, None) => {}
         }
         self.indptr.push(self.indices.len());
-        self.labels.push(ex.label);
+        self.labels.push(label);
     }
 
     /// Append a row directly from sorted-unique `(index, value)` pairs —

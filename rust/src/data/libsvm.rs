@@ -8,10 +8,27 @@
 //! Format per line: `<label> <idx>:<val> <idx>:<val> ...` with 1-based or
 //! 0-based indices (we accept both, preserving the raw index), `+1/-1/0/1`
 //! labels, `#` comments, and blank lines skipped.
+//!
+//! Two parsers share those semantics:
+//!
+//! - [`LibsvmReader`] — the legacy line reader (`BufReader::lines()`): one
+//!   `String` plus two `Vec`s per document, UTF-8 validated.  Kept for one
+//!   release behind the CLI's `--legacy-reader` flag and as the
+//!   conformance reference.
+//! - the **byte-block fast path** — [`BlockReader`] carves the input into
+//!   newline-aligned byte slabs ([`RawBlock`], recycled buffers), and
+//!   [`parse_block`] scans them as raw `&[u8]`: no per-line `String`, no
+//!   UTF-8 validation, hand-rolled integer/float token parsing, rows
+//!   landing in a caller-owned [`ParsedChunk`] (CSR scratch) so steady-
+//!   state parsing allocates nothing per document.  This is what lets the
+//!   pipeline parse *in the workers* and track the paper's "preprocessing
+//!   ≈ loading" bound.  Whitespace handling is ASCII (the format is ASCII);
+//!   the readers agree byte-for-byte on every ASCII input.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::mpsc::Receiver;
 
 use crate::data::dataset::{Example, SparseDataset};
 use crate::{Error, Result};
@@ -168,12 +185,570 @@ impl<R: Read> Iterator for ChunkedReader<R> {
     }
 }
 
-/// Load a whole file into a [`SparseDataset`] (tests / small inputs only;
-/// the pipeline path stays streaming).
+// ---------------------------------------------------------------------------
+// Byte-block fast path
+// ---------------------------------------------------------------------------
+
+/// Default slab size for [`BlockReader`]: big enough that per-block channel
+/// and scheduling overhead vanishes (a few thousand documents per block),
+/// small enough that `workers + queue` blocks in flight stay cache-friendly.
+pub const DEFAULT_BLOCK_BYTES: usize = 256 << 10;
+
+/// One newline-aligned slab of raw LibSVM bytes.
+///
+/// `bytes` holds only complete lines (the final block of a file may lack
+/// its trailing newline); `first_line` is the 1-based file line number of
+/// the first line, so workers parsing blocks out of band still report
+/// exact error locations.
+#[derive(Debug)]
+pub struct RawBlock {
+    pub bytes: Vec<u8>,
+    pub first_line: usize,
+}
+
+/// Carves a byte stream into newline-aligned [`RawBlock`]s — the reader
+/// stage of the block-parallel ingest path.  The reader does no parsing at
+/// all (that moved into the pipeline workers); its per-byte work is one
+/// `read` plus a newline count, so a single reader thread feeds many parse
+/// workers.  With [`set_recycle`](Self::set_recycle) wired, block buffers
+/// returned by the workers are reused, making steady-state reading
+/// allocation-free.
+pub struct BlockReader<R: Read> {
+    inner: R,
+    block_bytes: usize,
+    /// Bytes after the last newline of the previous read (a partial line).
+    carry: Vec<u8>,
+    /// 1-based line number of the first line of the next block.
+    next_line: usize,
+    eof: bool,
+    done: bool,
+    recycle: Option<Receiver<Vec<u8>>>,
+}
+
+impl BlockReader<File> {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Ok(BlockReader::new(File::open(path)?))
+    }
+}
+
+impl<R: Read> BlockReader<R> {
+    pub fn new(inner: R) -> Self {
+        BlockReader {
+            inner,
+            block_bytes: DEFAULT_BLOCK_BYTES,
+            carry: Vec::new(),
+            next_line: 1,
+            eof: false,
+            done: false,
+            recycle: None,
+        }
+    }
+
+    pub fn with_block_bytes(mut self, block_bytes: usize) -> Self {
+        assert!(block_bytes > 0);
+        self.block_bytes = block_bytes;
+        self
+    }
+
+    /// Attach a recycled-buffer source: `next` drains it (non-blocking)
+    /// before allocating a fresh block buffer.  The pipeline's parse
+    /// workers send each block's buffer back here once parsed, so the
+    /// buffers circulate — the admission-credit loop bounds how many exist.
+    pub fn set_recycle(&mut self, rx: Receiver<Vec<u8>>) {
+        self.recycle = Some(rx);
+    }
+
+    /// Top `buf` up to a newline-aligned slab of at least `block_bytes`
+    /// (or to EOF), stashing the trailing partial line in `carry`.
+    fn fill(&mut self, buf: &mut Vec<u8>) -> std::io::Result<()> {
+        // bytes below this offset are known newline-free (the carry prefix
+        // handed in by `next`, plus regions already searched below), so
+        // each byte is scanned at most once even when one line spans many
+        // growth steps
+        let mut scanned = buf.len();
+        loop {
+            while !self.eof && buf.len() < self.block_bytes {
+                let start = buf.len();
+                buf.resize(self.block_bytes, 0);
+                let n = read_retry(&mut self.inner, &mut buf[start..])?;
+                buf.truncate(start + n);
+                if n == 0 {
+                    self.eof = true;
+                }
+            }
+            if self.eof {
+                // final block keeps the unterminated tail line
+                return Ok(());
+            }
+            match buf[scanned..].iter().rposition(|&b| b == b'\n') {
+                Some(rel) => {
+                    let pos = scanned + rel;
+                    self.carry.extend_from_slice(&buf[pos + 1..]);
+                    buf.truncate(pos + 1);
+                    return Ok(());
+                }
+                None => {
+                    // one line longer than the block: grow until its
+                    // newline (or EOF) arrives
+                    scanned = buf.len();
+                    let start = buf.len();
+                    buf.resize(start + self.block_bytes, 0);
+                    let n = read_retry(&mut self.inner, &mut buf[start..])?;
+                    buf.truncate(start + n);
+                    if n == 0 {
+                        self.eof = true;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn read_retry<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    loop {
+        match r.read(buf) {
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            other => return other,
+        }
+    }
+}
+
+impl<R: Read> Iterator for BlockReader<R> {
+    type Item = Result<RawBlock>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let mut buf = self
+            .recycle
+            .as_ref()
+            .and_then(|rx| rx.try_recv().ok())
+            .unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(&self.carry);
+        self.carry.clear();
+        if let Err(e) = self.fill(&mut buf) {
+            self.done = true;
+            return Some(Err(e.into()));
+        }
+        if buf.is_empty() {
+            self.done = true;
+            return None;
+        }
+        let first_line = self.next_line;
+        self.next_line += buf.iter().filter(|&&b| b == b'\n').count();
+        Some(Ok(RawBlock { bytes: buf, first_line }))
+    }
+}
+
+/// Reusable CSR-shaped parse target for the byte-block fast path: one
+/// growable arena per field instead of two `Vec`s per document, cleared
+/// (not freed) between blocks.  After warm-up, parsing through one
+/// `ParsedChunk` performs **zero** per-document heap allocations.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedChunk {
+    labels: Vec<i8>,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    /// Parallel to `indices` when parsed with `binary = false`; empty in
+    /// binary mode (values are never even scanned, like the legacy
+    /// reader's `binary` flag).
+    values: Vec<f32>,
+    /// Per row: does the row carry real values (`Example::values = Some`)?
+    /// False for binary mode and for all-ones rows, mirroring the legacy
+    /// reader's per-row `None` promotion.
+    valued: Vec<bool>,
+    /// Sort/dedup scratch for valued rows with out-of-order indices.
+    pairs: Vec<(u32, f32)>,
+}
+
+impl ParsedChunk {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Drop all rows, keeping every buffer's capacity.
+    pub fn clear(&mut self) {
+        self.labels.clear();
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+        self.valued.clear();
+    }
+
+    pub fn labels(&self) -> &[i8] {
+        &self.labels
+    }
+
+    pub fn label(&self, i: usize) -> i8 {
+        self.labels[i]
+    }
+
+    /// Row accessor: (sorted unique indices, values) — `None` values for
+    /// binary/all-ones rows, exactly like [`Example::values`].
+    pub fn row(&self, i: usize) -> (&[u32], Option<&[f32]>) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        let vals = if self.valued[i] { Some(&self.values[lo..hi]) } else { None };
+        (&self.indices[lo..hi], vals)
+    }
+
+    /// Iterate rows as `(label, indices, values)`.
+    pub fn rows(&self) -> impl Iterator<Item = (i8, &[u32], Option<&[f32]>)> + '_ {
+        (0..self.len()).map(move |i| {
+            let (idx, vals) = self.row(i);
+            (self.labels[i], idx, vals)
+        })
+    }
+
+    /// Materialize owned [`Example`]s (conformance tests and the trait
+    /// default; the hot paths iterate [`rows`](Self::rows) instead).
+    pub fn to_examples(&self) -> Vec<Example> {
+        self.rows()
+            .map(|(label, idx, vals)| Example {
+                label,
+                indices: idx.to_vec(),
+                values: vals.map(|v| v.to_vec()),
+            })
+            .collect()
+    }
+}
+
+/// Parse one newline-aligned block of raw LibSVM bytes, appending rows to
+/// `out` (callers `clear` between blocks).  `first_line` is the 1-based
+/// file line number of the block's first line; `binary` skips value
+/// parsing like [`LibsvmReader::binary`].  Semantics — labels, comments,
+/// blank lines, index normalization, per-row value promotion, error line
+/// numbers — match the legacy line reader example-for-example (the
+/// `ingest_fastpath` conformance suite pins this).
+pub fn parse_block(
+    block: &[u8],
+    first_line: usize,
+    binary: bool,
+    out: &mut ParsedChunk,
+) -> Result<()> {
+    if out.indptr.is_empty() {
+        out.indptr.push(0);
+    }
+    debug_assert!(
+        if binary { out.values.is_empty() } else { out.values.len() == out.indices.len() },
+        "one ParsedChunk cannot mix binary and valued parsing"
+    );
+    for (off, line) in block.split(|&b| b == b'\n').enumerate() {
+        parse_line_into(line, first_line + off, binary, out)?;
+    }
+    Ok(())
+}
+
+/// Byte-level scan of one line into `out` (comments/blanks append nothing).
+fn parse_line_into(
+    line: &[u8],
+    line_no: usize,
+    binary: bool,
+    out: &mut ParsedChunk,
+) -> Result<()> {
+    let line = trim_ascii(line);
+    if line.is_empty() || line[0] == b'#' {
+        return Ok(());
+    }
+    let err = |msg: String| Error::LibsvmParse { line: line_no, msg };
+    let mut toks = AsciiTokens { rest: line };
+    let label_tok = toks.next().expect("non-empty trimmed line has a token");
+    let label: i8 = match label_tok {
+        b"+1" | b"1" => 1,
+        b"-1" | b"0" => -1, // some dumps use 0/1
+        other => match parse_f32_bytes(other) {
+            Some(v) if v > 0.0 => 1,
+            Some(_) => -1,
+            None => {
+                return Err(err(format!("bad label {:?}", String::from_utf8_lossy(other))))
+            }
+        },
+    };
+    let start = out.indices.len();
+    let mut all_ones = true;
+    let mut sorted = true;
+    for tok in toks {
+        if tok[0] == b'#' {
+            break;
+        }
+        let Some(colon) = tok.iter().position(|&b| b == b':') else {
+            truncate_row(out, start);
+            return Err(err(format!(
+                "bad feature token {:?}",
+                String::from_utf8_lossy(tok)
+            )));
+        };
+        let Some(idx) = parse_u32_bytes(&tok[..colon]) else {
+            truncate_row(out, start);
+            return Err(err(format!(
+                "bad index {:?}",
+                String::from_utf8_lossy(&tok[..colon])
+            )));
+        };
+        if out.indices.len() > start && out.indices[out.indices.len() - 1] >= idx {
+            sorted = false;
+        }
+        out.indices.push(idx);
+        if !binary {
+            let Some(v) = parse_f32_bytes(&tok[colon + 1..]) else {
+                truncate_row(out, start);
+                return Err(err(format!(
+                    "bad value {:?}",
+                    String::from_utf8_lossy(&tok[colon + 1..])
+                )));
+            };
+            if v != 1.0 {
+                all_ones = false;
+            }
+            out.values.push(v);
+        }
+    }
+    // normalize: sorted unique indices (values follow their index) — the
+    // same branches, sort and dedup calls as the legacy reader, so rows
+    // with duplicate valued indices keep the identical survivor
+    if !sorted {
+        if binary || all_ones {
+            out.indices[start..].sort_unstable();
+            // in-place dedup of the sorted row tail (two-pointer)
+            let mut w = start + 1;
+            let mut r = start + 1;
+            while r < out.indices.len() {
+                if out.indices[r] != out.indices[w - 1] {
+                    out.indices[w] = out.indices[r];
+                    w += 1;
+                }
+                r += 1;
+            }
+            out.indices.truncate(w);
+            if !binary {
+                out.values.truncate(out.indices.len()); // all 1.0
+            }
+        } else {
+            out.pairs.clear();
+            out.pairs.extend(
+                out.indices[start..]
+                    .iter()
+                    .copied()
+                    .zip(out.values[start..].iter().copied()),
+            );
+            out.pairs.sort_unstable_by_key(|p| p.0);
+            out.pairs.dedup_by_key(|p| p.0);
+            out.indices.truncate(start);
+            out.values.truncate(start);
+            out.indices.extend(out.pairs.iter().map(|p| p.0));
+            out.values.extend(out.pairs.iter().map(|p| p.1));
+        }
+    }
+    out.labels.push(label);
+    out.valued.push(!binary && !all_ones);
+    out.indptr.push(out.indices.len());
+    Ok(())
+}
+
+/// Roll a half-parsed row back out of the arenas (error paths).
+fn truncate_row(out: &mut ParsedChunk, start: usize) {
+    out.indices.truncate(start);
+    out.values.truncate(start); // no-op in binary mode (values stays empty)
+}
+
+/// Does `str::trim` strip this ASCII byte?  Every `is_ascii_whitespace`
+/// byte plus vertical tab (0x0B), which is Unicode whitespace (so the
+/// legacy reader's `trim` eats it at line edges) but not "ascii
+/// whitespace" in the std sense.  Tokenization below deliberately sticks
+/// to `is_ascii_whitespace`, mirroring `split_ascii_whitespace` — VT
+/// separates nothing in either reader.
+#[inline]
+fn is_trimmed_byte(b: u8) -> bool {
+    b.is_ascii_whitespace() || b == 0x0B
+}
+
+fn trim_ascii(mut s: &[u8]) -> &[u8] {
+    while let [first, rest @ ..] = s {
+        if is_trimmed_byte(*first) {
+            s = rest;
+        } else {
+            break;
+        }
+    }
+    while let [rest @ .., last] = s {
+        if is_trimmed_byte(*last) {
+            s = rest;
+        } else {
+            break;
+        }
+    }
+    s
+}
+
+/// `split_ascii_whitespace` over bytes, zero-copy.
+struct AsciiTokens<'a> {
+    rest: &'a [u8],
+}
+
+impl<'a> Iterator for AsciiTokens<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<&'a [u8]> {
+        let mut i = 0;
+        while i < self.rest.len() && self.rest[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i == self.rest.len() {
+            self.rest = &[];
+            return None;
+        }
+        let s = i;
+        while i < self.rest.len() && !self.rest[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let tok = &self.rest[s..i];
+        self.rest = &self.rest[i..];
+        Some(tok)
+    }
+}
+
+/// Hand-rolled `u32` parse: optional `+`, digits, overflow-checked —
+/// accepts exactly what `str::parse::<u32>` accepts.
+fn parse_u32_bytes(tok: &[u8]) -> Option<u32> {
+    let t = tok.strip_prefix(b"+").unwrap_or(tok);
+    if t.is_empty() {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for &c in t {
+        if !c.is_ascii_digit() {
+            return None;
+        }
+        v = v * 10 + (c - b'0') as u64;
+        if v > u32::MAX as u64 {
+            return None;
+        }
+    }
+    Some(v as u32)
+}
+
+const POW10_F32: [f32; 11] = [1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10];
+
+/// Hand-rolled decimal `f32` parse, bit-identical to `str::parse::<f32>`.
+///
+/// Fast path (the Clinger window): mantissa ≤ 2^24 and |exp10| ≤ 10 make
+/// both operands of `m · 10^e` exact in f32, so the single multiply/divide
+/// is correctly rounded — the same answer the std parser's full algorithm
+/// produces.  Everything outside the window (long mantissas, extreme
+/// exponents, `inf`/`nan` spellings) falls back to the std parser on the
+/// token slice, so acceptance is exactly the legacy reader's.
+fn parse_f32_bytes(tok: &[u8]) -> Option<f32> {
+    let fallback = |t: &[u8]| std::str::from_utf8(t).ok()?.parse::<f32>().ok();
+    let mut i = 0usize;
+    let neg = match tok.first()? {
+        b'-' => {
+            i = 1;
+            true
+        }
+        b'+' => {
+            i = 1;
+            false
+        }
+        _ => false,
+    };
+    let mut mant: u64 = 0;
+    let mut digits = 0u32;
+    let mut exp10: i32 = 0;
+    while i < tok.len() && tok[i].is_ascii_digit() {
+        mant = mant * 10 + (tok[i] - b'0') as u64;
+        digits += 1;
+        i += 1;
+        if digits > 17 {
+            return fallback(tok);
+        }
+    }
+    let mut any = digits > 0;
+    if i < tok.len() && tok[i] == b'.' {
+        i += 1;
+        while i < tok.len() && tok[i].is_ascii_digit() {
+            mant = mant * 10 + (tok[i] - b'0') as u64;
+            digits += 1;
+            exp10 -= 1;
+            i += 1;
+            any = true;
+            if digits > 17 {
+                return fallback(tok);
+            }
+        }
+    }
+    if !any {
+        return fallback(tok); // "inf", "nan", "", "." — std decides
+    }
+    if i < tok.len() && (tok[i] == b'e' || tok[i] == b'E') {
+        i += 1;
+        let eneg = match tok.get(i)? {
+            b'-' => {
+                i += 1;
+                true
+            }
+            b'+' => {
+                i += 1;
+                false
+            }
+            _ => false,
+        };
+        let mut e: i32 = 0;
+        let mut ed = 0u32;
+        while i < tok.len() && tok[i].is_ascii_digit() {
+            e = e * 10 + (tok[i] - b'0') as i32;
+            ed += 1;
+            i += 1;
+            if ed > 4 {
+                return fallback(tok);
+            }
+        }
+        if ed == 0 {
+            return fallback(tok); // "1e", "1e+" — std rejects
+        }
+        exp10 += if eneg { -e } else { e };
+    }
+    if i != tok.len() {
+        return fallback(tok); // trailing junk — std rejects
+    }
+    if mant <= (1 << 24) && (-10..=10).contains(&exp10) {
+        let v = mant as f32;
+        let v = if exp10 < 0 {
+            v / POW10_F32[(-exp10) as usize]
+        } else {
+            v * POW10_F32[exp10 as usize]
+        };
+        return Some(if neg { -v } else { v });
+    }
+    fallback(tok)
+}
+
+/// Load a whole file into a [`SparseDataset`] via the byte-block parser
+/// (tests / small inputs only; the pipeline path stays streaming).
 pub fn load<P: AsRef<Path>>(path: P, dim: u64) -> Result<SparseDataset> {
+    load_with_block_bytes(path, dim, DEFAULT_BLOCK_BYTES)
+}
+
+/// [`load`] with an explicit slab size (the CLI's `--block-kb`).
+pub fn load_with_block_bytes<P: AsRef<Path>>(
+    path: P,
+    dim: u64,
+    block_bytes: usize,
+) -> Result<SparseDataset> {
     let mut ds = SparseDataset::new(dim);
-    for ex in LibsvmReader::open(path)? {
-        ds.push(&ex?);
+    let mut parsed = ParsedChunk::default();
+    for block in BlockReader::open(path)?.with_block_bytes(block_bytes) {
+        let block = block?;
+        parsed.clear();
+        parse_block(&block.bytes, block.first_line, false, &mut parsed)?;
+        for (label, idx, vals) in parsed.rows() {
+            ds.push_row(label, idx, vals);
+        }
     }
     ds.validate()?;
     Ok(ds)
@@ -406,5 +981,139 @@ mod tests {
             .unwrap();
         assert!(ex.values.is_none());
         assert_eq!(ex.indices, vec![3, 9]);
+    }
+
+    // ---- byte-block fast path ----
+    //
+    // Full byte-vs-legacy conformance (CRLF, comments, label dialects,
+    // error lines across block boundaries, non-UTF8, index overflow, ...)
+    // lives in `rust/tests/ingest_fastpath.rs`; the unit tests here cover
+    // only what needs private access (token-parser tables, scratch
+    // capacities) plus the BlockReader mechanics.
+
+    /// Parse `data` through BlockReader + parse_block at the given slab
+    /// size, collecting owned examples.
+    fn byte_parse(data: &[u8], block_bytes: usize, binary: bool) -> Result<Vec<Example>> {
+        let mut out = Vec::new();
+        let mut parsed = ParsedChunk::default();
+        for block in BlockReader::new(data).with_block_bytes(block_bytes) {
+            let block = block?;
+            parsed.clear();
+            parse_block(&block.bytes, block.first_line, binary, &mut parsed)?;
+            out.extend(parsed.to_examples());
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn f32_bytes_matches_std_parse() {
+        for tok in [
+            "1", "0", "-0", "0.5", "2", "1.25", "305.2", "1e-3", "2.5E2", "-7.75",
+            "+3.25", "1e10", "9999999.5", "0.0078125", "123456789012345678901",
+            "1e-40", "3.4028235e38", "inf", "-inf", "nan", "1e", "", ".", "1..2",
+            "4:2", "0x10",
+        ] {
+            let want = tok.parse::<f32>().ok();
+            let got = parse_f32_bytes(tok.as_bytes());
+            match (want, got) {
+                (Some(w), Some(g)) => {
+                    assert_eq!(w.to_bits(), g.to_bits(), "token {tok:?}: {w} vs {g}")
+                }
+                (None, None) => {}
+                other => panic!("token {tok:?}: mismatch {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn u32_bytes_matches_std_parse() {
+        for tok in ["0", "1", "007", "+5", "4294967295", "4294967296", "", "+", "-1", "1a"] {
+            assert_eq!(
+                parse_u32_bytes(tok.as_bytes()),
+                tok.parse::<u32>().ok(),
+                "token {tok:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parsed_chunk_scratch_is_reused_across_blocks() {
+        let mut data = String::new();
+        for i in 0..200 {
+            data.push_str(&format!("+1 {}:1 {}:1 {}:1\n", i + 1, i + 500, i + 900));
+        }
+        let mut parsed = ParsedChunk::default();
+        // warm up, then record capacities — further blocks must not grow
+        parse_block(data.as_bytes(), 1, true, &mut parsed).unwrap();
+        let caps =
+            (parsed.labels.capacity(), parsed.indptr.capacity(), parsed.indices.capacity());
+        for _ in 0..5 {
+            parsed.clear();
+            parse_block(data.as_bytes(), 1, true, &mut parsed).unwrap();
+            assert_eq!(parsed.len(), 200);
+            assert_eq!(
+                (parsed.labels.capacity(), parsed.indptr.capacity(), parsed.indices.capacity()),
+                caps,
+                "steady-state parsing must not reallocate"
+            );
+        }
+    }
+
+    #[test]
+    fn block_reader_recycles_buffers() {
+        let mut data = String::new();
+        for i in 0..500 {
+            data.push_str(&format!("+1 {}:1\n", i + 1));
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut reader = BlockReader::new(data.as_bytes()).with_block_bytes(64);
+        reader.set_recycle(rx);
+        let mut blocks = 0usize;
+        let mut docs = 0usize;
+        let mut parsed = ParsedChunk::default();
+        for block in reader {
+            let block = block.unwrap();
+            parsed.clear();
+            parse_block(&block.bytes, block.first_line, true, &mut parsed).unwrap();
+            docs += parsed.len();
+            blocks += 1;
+            tx.send(block.bytes).unwrap(); // hand the buffer back
+        }
+        assert_eq!(docs, 500);
+        assert!(blocks > 1, "tiny slabs must yield many blocks");
+    }
+
+    #[test]
+    fn block_reader_grows_past_a_giant_line() {
+        // one line far longer than the slab: the reader must grow the
+        // block rather than split mid-line
+        let mut data = String::from("+1");
+        for i in 0..2000 {
+            data.push_str(&format!(" {}:1", i + 1));
+        }
+        data.push_str("\n-1 5:1\n");
+        let fast = byte_parse(data.as_bytes(), 16, true).unwrap();
+        assert_eq!(fast.len(), 2);
+        assert_eq!(fast[0].indices.len(), 2000);
+        assert_eq!(fast[1].indices, vec![5]);
+    }
+
+    #[test]
+    fn load_uses_byte_parser_and_matches_legacy_push() {
+        let dir = std::env::temp_dir()
+            .join(format!("bbit_libsvm_load_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.svm");
+        std::fs::write(&path, "+1 1:1 5:1\n0 2:0.25 9:4\n# c\n-1 3:1\n").unwrap();
+        let ds = load(&path, 16).unwrap();
+        let mut legacy = SparseDataset::new(16);
+        for ex in LibsvmReader::open(&path).unwrap() {
+            legacy.push(&ex.unwrap());
+        }
+        assert_eq!(ds.labels, legacy.labels);
+        assert_eq!(ds.indptr, legacy.indptr);
+        assert_eq!(ds.indices, legacy.indices);
+        assert_eq!(ds.values, legacy.values);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,7 +1,8 @@
-//! Datasets: sparse binary storage, LibSVM streaming IO, the rcv1-like
-//! synthetic corpus generator, and the paper's feature-expansion pipeline
-//! (original + pairwise + 1/30 of 3-way combinations — exactly how the
-//! authors blew rcv1 up to 200 GB).
+//! Datasets: sparse binary storage, LibSVM streaming IO (legacy line
+//! reader + the zero-copy byte-block fast path), the rcv1-like synthetic
+//! corpus generator, and the paper's feature-expansion pipeline (original
+//! + pairwise + 1/30 of 3-way combinations — exactly how the authors blew
+//! rcv1 up to 200 GB).
 
 pub mod dataset;
 pub mod expand;
@@ -9,3 +10,4 @@ pub mod gen;
 pub mod libsvm;
 
 pub use dataset::{DatasetStats, Example, SparseDataset};
+pub use libsvm::{parse_block, BlockReader, ParsedChunk, RawBlock};

@@ -25,6 +25,7 @@
 //! coordinator at all.
 
 use crate::data::dataset::Example;
+use crate::data::libsvm::ParsedChunk;
 use crate::encode::packed::PackedCodes;
 use crate::hashing::minwise::BbitMinHash;
 use crate::hashing::oph::OnePermutationHasher;
@@ -305,6 +306,16 @@ pub trait FeatureEncoder: Send + Sync {
     /// Encode one chunk of raw examples (the pipeline worker body).
     fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk>;
 
+    /// Encode one chunk of rows parsed by the byte-block ingest path —
+    /// same output, row for row, as [`encode_chunk`](Self::encode_chunk)
+    /// on the equivalent `Example`s.  The default materializes `Example`s
+    /// (correct for any implementation); every built-in encoder overrides
+    /// it with a row-view loop that allocates no per-document scratch, so
+    /// parse → encode runs allocation-free end to end.
+    fn encode_parsed(&self, chunk: &ParsedChunk) -> Result<EncodedChunk> {
+        self.encode_chunk(&chunk.to_examples())
+    }
+
     /// Fresh scratch sized for this encoder.
     fn scratch(&self) -> EncodeScratch {
         EncodeScratch::default()
@@ -339,24 +350,50 @@ pub fn draw(spec: &EncoderSpec, rng: &mut Rng) -> Result<Box<dyn FeatureEncoder>
     })
 }
 
-/// Encode one chunk through any `codes_into(set, z_scratch, code_row)`
-/// packed-code hasher — shared by the b-bit minwise and OPH encoders.
+/// Encode `n` rows through any `codes_into(set, z_scratch, code_row)`
+/// packed-code hasher — the shared core of the b-bit minwise and OPH
+/// encoders for both the `Example` and the parsed-row ingest paths.  All
+/// scratch (minwise values, one code row) is per-chunk; the per-document
+/// loop allocates nothing.
+fn packed_rows<'a>(
+    b: u32,
+    k: usize,
+    n: usize,
+    mut row_of: impl FnMut(usize) -> (&'a [u32], i8),
+    mut codes_into: impl FnMut(&[u32], &mut [u64], &mut [u16]),
+) -> Result<EncodedChunk> {
+    let mut codes = PackedCodes::new(b, k);
+    codes.reserve_rows(n);
+    let mut labels = Vec::with_capacity(n);
+    let mut scratch = vec![0u64; k];
+    let mut row = vec![0u16; k];
+    for i in 0..n {
+        let (set, label) = row_of(i);
+        codes_into(set, &mut scratch, &mut row);
+        codes.push_row(&row)?;
+        labels.push(label);
+    }
+    Ok(EncodedChunk::Packed { codes, labels })
+}
+
+/// [`packed_rows`] over an `Example` slice.
 fn packed_chunk(
     b: u32,
     k: usize,
     chunk: &[Example],
-    mut codes_into: impl FnMut(&[u32], &mut [u64], &mut [u16]),
+    codes_into: impl FnMut(&[u32], &mut [u64], &mut [u16]),
 ) -> Result<EncodedChunk> {
-    let mut codes = PackedCodes::new(b, k);
-    let mut labels = Vec::with_capacity(chunk.len());
-    let mut scratch = vec![0u64; k];
-    let mut row = vec![0u16; k];
-    for ex in chunk {
-        codes_into(&ex.indices, &mut scratch, &mut row);
-        codes.push_row(&row)?;
-        labels.push(ex.label);
-    }
-    Ok(EncodedChunk::Packed { codes, labels })
+    packed_rows(b, k, chunk.len(), |i| (chunk[i].indices.as_slice(), chunk[i].label), codes_into)
+}
+
+/// [`packed_rows`] over a [`ParsedChunk`] (the byte-block ingest path).
+fn packed_parsed(
+    b: u32,
+    k: usize,
+    chunk: &ParsedChunk,
+    codes_into: impl FnMut(&[u32], &mut [u64], &mut [u16]),
+) -> Result<EncodedChunk> {
+    packed_rows(b, k, chunk.len(), |i| (chunk.row(i).0, chunk.label(i)), codes_into)
 }
 
 /// Expanded-space weight gather for one packed code row: the classify hot
@@ -393,6 +430,12 @@ impl FeatureEncoder for BbitEncoder {
         })
     }
 
+    fn encode_parsed(&self, chunk: &ParsedChunk) -> Result<EncodedChunk> {
+        packed_parsed(self.hasher.b, self.hasher.k(), chunk, |set, z, row| {
+            self.hasher.codes_into(set, z, row)
+        })
+    }
+
     fn scratch(&self) -> EncodeScratch {
         EncodeScratch { z: vec![0; self.hasher.k()], codes: vec![0; self.hasher.k()] }
     }
@@ -416,8 +459,20 @@ impl FeatureEncoder for VwEncoder {
 
     fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
         let mut rows = Vec::with_capacity(chunk.len());
+        let mut pairs = Vec::new();
         for ex in chunk {
-            rows.push((ex.label, self.hasher.hash_sparse(&ex.indices)));
+            rows.push((ex.label, self.hasher.hash_sparse_with(&ex.indices, &mut pairs)));
+        }
+        Ok(EncodedChunk::Sparse { rows })
+    }
+
+    fn encode_parsed(&self, chunk: &ParsedChunk) -> Result<EncodedChunk> {
+        // per-chunk pair scratch; the only per-row allocation left is the
+        // output row the sparse chunk format owns
+        let mut rows = Vec::with_capacity(chunk.len());
+        let mut pairs = Vec::new();
+        for (label, set, _) in chunk.rows() {
+            rows.push((label, self.hasher.hash_sparse_with(set, &mut pairs)));
         }
         Ok(EncodedChunk::Sparse { rows })
     }
@@ -442,22 +497,19 @@ impl FeatureEncoder for RpEncoder {
 
     fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
         let mut rows = Vec::with_capacity(chunk.len());
+        let mut scratch = RpRowScratch::default();
         for ex in chunk {
-            let v = match &ex.values {
-                None => self.proj.project_set(&ex.indices),
-                Some(vals) => {
-                    let items: Vec<(u32, f32)> =
-                        ex.indices.iter().copied().zip(vals.iter().copied()).collect();
-                    self.proj.project(&items)
-                }
-            };
-            let pairs: Vec<(u32, f32)> = v
-                .iter()
-                .enumerate()
-                .filter(|(_, x)| **x != 0.0)
-                .map(|(j, x)| (j as u32, *x as f32))
-                .collect();
+            let pairs = self.project_row(&ex.indices, ex.values.as_deref(), &mut scratch);
             rows.push((ex.label, pairs));
+        }
+        Ok(EncodedChunk::Sparse { rows })
+    }
+
+    fn encode_parsed(&self, chunk: &ParsedChunk) -> Result<EncodedChunk> {
+        let mut rows = Vec::with_capacity(chunk.len());
+        let mut scratch = RpRowScratch::default();
+        for (label, set, vals) in chunk.rows() {
+            rows.push((label, self.project_row(set, vals, &mut scratch)));
         }
         Ok(EncodedChunk::Sparse { rows })
     }
@@ -465,6 +517,43 @@ impl FeatureEncoder for RpEncoder {
     fn margin(&self, set: &[u32], w: &[f32], _scratch: &mut EncodeScratch) -> f32 {
         let v = self.proj.project_set(set);
         v.iter().zip(w).map(|(x, wi)| *x as f32 * wi).sum()
+    }
+}
+
+/// Per-chunk buffers for the RP encoder's row loop: the dense projection
+/// and the `(index, value)` pair list for valued rows.
+#[derive(Default)]
+struct RpRowScratch {
+    dense: Vec<f64>,
+    items: Vec<(u32, f32)>,
+}
+
+impl RpEncoder {
+    /// Project one row and collect its nonzeros — scratch reused across
+    /// rows, output `Vec` owned by the sparse chunk.
+    fn project_row(
+        &self,
+        set: &[u32],
+        vals: Option<&[f32]>,
+        scratch: &mut RpRowScratch,
+    ) -> Vec<(u32, f32)> {
+        match vals {
+            None => self.proj.project_set_into(set, &mut scratch.dense),
+            Some(vals) => {
+                scratch.items.clear();
+                scratch
+                    .items
+                    .extend(set.iter().copied().zip(vals.iter().copied()));
+                self.proj.project_into(&scratch.items, &mut scratch.dense);
+            }
+        }
+        scratch
+            .dense
+            .iter()
+            .enumerate()
+            .filter(|(_, x)| **x != 0.0)
+            .map(|(j, x)| (j as u32, *x as f32))
+            .collect()
     }
 }
 
@@ -481,6 +570,12 @@ impl FeatureEncoder for OphEncoder {
 
     fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
         packed_chunk(self.hasher.b, self.hasher.bins, chunk, |set, mins, row| {
+            self.hasher.codes_into(set, mins, row)
+        })
+    }
+
+    fn encode_parsed(&self, chunk: &ParsedChunk) -> Result<EncodedChunk> {
+        packed_parsed(self.hasher.b, self.hasher.bins, chunk, |set, mins, row| {
             self.hasher.codes_into(set, mins, row)
         })
     }
@@ -620,6 +715,35 @@ mod tests {
             };
             let tol = 1e-3 * (1.0 + dot.abs());
             assert!((m - dot).abs() < tol, "{}: margin {m} dot {dot}", spec.scheme());
+        }
+    }
+
+    #[test]
+    fn encode_parsed_matches_encode_chunk_for_every_scheme() {
+        // the byte-block worker path must emit the identical chunk, row
+        // for row, as the Example path — valued, binary and unsorted rows
+        let text = "+1 9:1 1:1 5:1\n-1 2:0.5 7:2\n+1 3:1 4:1 3:1\n0 1:1\n";
+        let mut parsed = ParsedChunk::default();
+        crate::data::libsvm::parse_block(text.as_bytes(), 1, false, &mut parsed).unwrap();
+        let examples = parsed.to_examples();
+        for spec in all_specs() {
+            let enc = spec.encoder().unwrap();
+            let a = enc.encode_chunk(&examples).unwrap();
+            let b = enc.encode_parsed(&parsed).unwrap();
+            match (a, b) {
+                (
+                    EncodedChunk::Packed { codes: ca, labels: la },
+                    EncodedChunk::Packed { codes: cb, labels: lb },
+                ) => {
+                    assert_eq!(ca, cb, "{}", spec.scheme());
+                    assert_eq!(la, lb, "{}", spec.scheme());
+                }
+                (
+                    EncodedChunk::Sparse { rows: ra },
+                    EncodedChunk::Sparse { rows: rb },
+                ) => assert_eq!(ra, rb, "{}", spec.scheme()),
+                _ => panic!("{}: chunk kinds diverged", spec.scheme()),
+            }
         }
     }
 

@@ -8,15 +8,17 @@
 //! it down to a fraction.
 //!
 //! Method: write the expanded corpus to an actual LibSVM file, then time
-//! (1) a full streaming parse, (2) single-worker pipeline hashing,
-//! (3) all-core pipeline hashing, (4) the PJRT minhash artifact (the
-//! paper's GPU column; interpret-mode Pallas on CPU — see DESIGN.md §6 for
-//! the real-TPU estimate).
+//! (1) a full parse through the byte-block reader (the default ingest
+//! path every production command runs), (2) single-worker block-parallel
+//! pipeline hashing, (3) all-core pipeline hashing, (4) the PJRT minhash
+//! artifact (the paper's GPU column; interpret-mode Pallas on CPU — see
+//! DESIGN.md §6 for the real-TPU estimate).
 
 use std::time::Instant;
 
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
-use crate::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use crate::coordinator::sink::CollectSink;
+use crate::data::libsvm::{parse_block, BlockReader, LibsvmWriter, ParsedChunk};
 use crate::encode::encoder::EncoderSpec;
 use crate::hashing::universal::UniversalFamily;
 use crate::report::{fnum, Table};
@@ -44,11 +46,17 @@ pub fn run(ctx: &mut Ctx) -> Result<Vec<Table>> {
     let bytes = std::fs::metadata(&path)?.len();
     let n_docs = train.len();
 
-    // --- (1) data loading: full streaming parse ---
+    // --- (1) data loading: full parse through the byte-block reader ---
     let t0 = Instant::now();
     let mut parsed = 0usize;
-    for ex in LibsvmReader::open(&path)?.binary() {
-        parsed += ex?.nnz();
+    let mut scratch = ParsedChunk::default();
+    for block in BlockReader::open(&path)? {
+        let block = block?;
+        scratch.clear();
+        parse_block(&block.bytes, block.first_line, true, &mut scratch)?;
+        for (_, set, _) in scratch.rows() {
+            parsed += set.len();
+        }
     }
     let load_s = t0.elapsed().as_secs_f64();
     assert!(parsed > 0);
@@ -100,11 +108,12 @@ pub fn run(ctx: &mut Ctx) -> Result<Vec<Table>> {
 
 fn time_pipeline(path: &std::path::Path, k: usize, dim: u64, workers: usize) -> Result<f64> {
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
-    let source = ChunkedReader::new(LibsvmReader::open(path)?.binary(), 256);
+    let spec = EncoderSpec::Bbit { b: 16, k, d: dim, seed: 7 };
+    let mut sink = CollectSink::for_spec(&spec)?;
     let t0 = Instant::now();
-    let (out, _) = pipe.run(source, &EncoderSpec::Bbit { b: 16, k, d: dim, seed: 7 })?;
+    pipe.run_sink_blocks(BlockReader::open(path)?, true, &spec, &mut sink)?;
     let total = t0.elapsed().as_secs_f64();
-    assert!(!out.is_empty());
+    assert!(!sink.into_output().is_empty());
     Ok(total)
 }
 
@@ -120,12 +129,17 @@ fn time_pjrt(path: &std::path::Path, dim: u64, ctx: &Ctx) -> Result<Option<f64>>
     let engine = RoutedMinhash::from_names(&rt, &["minhash_k512_nnz512", "minhash_k512_nnz1024", "minhash_k512"])?;
     let mut rng = Rng::new(ctx.scale.seed ^ 0x6B);
     let family = UniversalFamily::draw(engine.k(), dim.min(engine.d_space()), &mut rng);
-    let source = ChunkedReader::new(LibsvmReader::open(path)?.binary(), 8192);
+    // big slabs ≈ the old 8192-doc chunks, so the engine still sees
+    // batch-sized calls
+    let blocks = BlockReader::open(path)?.with_block_bytes(4 << 20);
+    let mut scratch = ParsedChunk::default();
     let t0 = Instant::now();
     let mut rows = 0usize;
-    for chunk in source {
-        let chunk = chunk?;
-        let sets: Vec<&[u32]> = chunk.iter().map(|e| e.indices.as_slice()).collect();
+    for block in blocks {
+        let block = block?;
+        scratch.clear();
+        parse_block(&block.bytes, block.first_line, true, &mut scratch)?;
+        let sets: Vec<&[u32]> = (0..scratch.len()).map(|i| scratch.row(i).0).collect();
         let z = engine.minhash_all(&sets, &family)?;
         rows += z.len() / engine.k();
     }

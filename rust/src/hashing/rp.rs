@@ -47,25 +47,52 @@ impl RandomProjection {
 
     /// Project a sparse vector given as (index, value) pairs.
     pub fn project(&self, items: &[(u32, f32)]) -> Vec<f64> {
-        let mut v = vec![0.0f64; self.k];
+        let mut v = Vec::new();
+        self.project_into(items, &mut v);
+        v
+    }
+
+    /// [`project`](Self::project) into a caller-owned buffer (cleared and
+    /// resized to `k`), so the encode workers project document after
+    /// document through one dense scratch instead of allocating per row.
+    pub fn project_into(&self, items: &[(u32, f32)], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.k, 0.0);
         for &(i, u) in items {
             if u == 0.0 {
                 continue;
             }
-            for (j, vj) in v.iter_mut().enumerate() {
+            for (j, vj) in out.iter_mut().enumerate() {
                 let r = self.entry(i, j as u32);
                 if r != 0.0 {
                     *vj += u as f64 * r;
                 }
             }
         }
-        v
     }
 
     /// Project a binary set (all values 1).
     pub fn project_set(&self, set: &[u32]) -> Vec<f64> {
-        let items: Vec<(u32, f32)> = set.iter().map(|&t| (t, 1.0)).collect();
-        self.project(&items)
+        let mut v = Vec::new();
+        self.project_set_into(set, &mut v);
+        v
+    }
+
+    /// [`project_set`](Self::project_set) into a caller-owned buffer —
+    /// also skips materializing the `(index, 1.0)` pair list the old path
+    /// built per document (`1.0 · r == r` exactly, so output is
+    /// bit-identical).
+    pub fn project_set_into(&self, set: &[u32], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.k, 0.0);
+        for &i in set {
+            for (j, vj) in out.iter_mut().enumerate() {
+                let r = self.entry(i, j as u32);
+                if r != 0.0 {
+                    *vj += r;
+                }
+            }
+        }
     }
 }
 

@@ -83,13 +83,27 @@ impl VwHasher {
     /// Sparse output as sorted (bin, value) pairs with zero bins dropped —
     /// what the CSR assembly in the pipeline consumes when `bins` is large.
     pub fn hash_sparse(&self, set: &[u32]) -> Vec<(u32, f32)> {
-        let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(set.len());
+        self.hash_sparse_with(set, &mut Vec::new())
+    }
+
+    /// [`hash_sparse`](Self::hash_sparse) through caller-owned scratch:
+    /// `scratch` holds the unsorted per-token pairs and is reused across
+    /// documents (the encode workers keep one per chunk), so the only
+    /// allocation left is the merged output row itself.  Output is
+    /// identical to [`hash_sparse`](Self::hash_sparse).
+    pub fn hash_sparse_with(
+        &self,
+        set: &[u32],
+        scratch: &mut Vec<(u32, f32)>,
+    ) -> Vec<(u32, f32)> {
+        scratch.clear();
+        scratch.reserve(set.len());
         for &t in set {
-            pairs.push((self.bin(t) as u32, self.sign(t)));
+            scratch.push((self.bin(t) as u32, self.sign(t)));
         }
-        pairs.sort_unstable_by_key(|p| p.0);
-        let mut out: Vec<(u32, f32)> = Vec::with_capacity(pairs.len());
-        for (b, v) in pairs {
+        scratch.sort_unstable_by_key(|p| p.0);
+        let mut out: Vec<(u32, f32)> = Vec::with_capacity(scratch.len());
+        for &(b, v) in scratch.iter() {
             match out.last_mut() {
                 Some(last) if last.0 == b => last.1 += v,
                 _ => out.push((b, v)),

@@ -21,11 +21,11 @@
 //!
 //! | module | paper dependency |
 //! |---|---|
-//! | [`data`] | LibSVM streaming IO, rcv1-like generator, feature expansion |
-//! | [`hashing`] | minwise / b-bit / VW / RP / OPH substrates + estimator variance theory |
+//! | [`data`] | LibSVM streaming IO (zero-copy byte-block parser + legacy line reader), rcv1-like generator, feature expansion |
+//! | [`hashing`] | minwise / b-bit / VW / RP / OPH substrates (register-blocked 4-wide minwise kernel) + estimator variance theory |
 //! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache (v3: chunk-index footer for parallel replay + optional RLE record compression) |
 //! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec`; cache eval/holdout/SGD all replay across threads |
-//! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink), parallel cache-replay reader pool, + scheduler |
+//! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink; raw input is carved into byte blocks and *parsed in the workers*, so ingest scales with `--workers`), parallel cache-replay reader pool, + scheduler |
 //! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control and a load generator (the paper's "used in industry / search" request path) |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
@@ -49,7 +49,10 @@
 //!
 //! 1. `preprocess --encoder bbit|oph --cache-out` streams packed-code
 //!    chunks to the checksummed on-disk cache ([`encode::cache`]) — hash
-//!    the corpus once, spec recorded in the header;
+//!    the corpus once, spec recorded in the header.  Raw input runs the
+//!    byte-block fast path by default (zero-copy parse in the workers,
+//!    recycled buffers; `--legacy-reader` keeps the old line reader for
+//!    one release), tracking the paper's "preprocessing ≈ loading" bound;
 //! 2. `train --cache` replays that cache through batch solvers or the
 //!    streaming SGD trainer ([`solver::SgdStream`]) for as many
 //!    (solver, C, epoch) sweeps as needed — and because the v3 cache is

@@ -20,6 +20,7 @@
 //! flags are `--key value` or `--key=value`.
 
 use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::path::Path;
 use std::process::ExitCode;
 
@@ -28,7 +29,9 @@ use bbit_mh::coordinator::scheduler::{Scheduler, SolverKind, TrainJob};
 use bbit_mh::coordinator::sink::{CacheSink, TrainSink};
 use bbit_mh::data::expand::{expand_example, ExpandConfig};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
-use bbit_mh::data::libsvm::{ChunkedReader, LibsvmReader, LibsvmWriter};
+use bbit_mh::data::libsvm::{
+    parse_block, BlockReader, ChunkedReader, LibsvmReader, LibsvmWriter, ParsedChunk,
+};
 use bbit_mh::encode::cache::CacheReader;
 use bbit_mh::encode::expansion::BbitDataset;
 use bbit_mh::encode::EncoderSpec;
@@ -48,11 +51,17 @@ ENCODERS (--encoder, legacy alias --method):
   (bbit and oph emit packed codes — cacheable and streamable; vw and rp
    emit sparse rows)
 
+RAW-INPUT PARSING (preprocess, train --input, classify --input):
+  the byte-block parser is the default — the reader carves newline-aligned
+  blocks ([--block-kb 256] sets the slab size) and the pipeline workers
+  parse and encode in parallel; --legacy-reader falls back to the
+  single-threaded line reader (kept for one release).
+
 USAGE:
   bbit-mh gen-data --out FILE [--n 4000] [--vocab 4000] [--expanded] [--seed N]
   bbit-mh preprocess --input FILE (--out FILE | --cache-out FILE)
              [--encoder bbit|vw|rp|oph] [scheme flags] [--workers N] [--seed N]
-             [--cache-compress]
+             [--cache-compress] [--block-kb 256] [--legacy-reader]
              (--cache-out streams packed-code chunks to the on-disk hashed
               cache: hash once, train many times, constant memory; the v3
               cache carries a chunk index for parallel replay, and
@@ -77,10 +86,12 @@ USAGE:
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
              [--seed N] [--save-model FILE]
              (one-pass hash-and-train: nothing materialized, prints progressive loss)
-  bbit-mh classify --model FILE (--input FILE [--out FILE] [--chunk-size 256]
+  bbit-mh classify --model FILE (--input FILE [--out FILE] [--block-kb 256]
+             [--legacy-reader] [--chunk-size 256]
              | --cache FILE [--replay-threads N])
              (the model file embeds its encoder spec — any scheme classifies;
-              --input streams raw LibSVM in chunks, constant memory;
+              --input streams raw LibSVM through the byte-block parser in
+              constant memory (--chunk-size applies to --legacy-reader);
               --cache reports aggregate accuracy/loss, specs must match;
               --replay-threads shards cache scoring across a reader pool,
               results identical for every N)
@@ -259,6 +270,51 @@ fn encoder_spec(args: &Args, scheme: &str, seed: u64) -> Result<EncoderSpec> {
     Ok(spec)
 }
 
+/// Shared raw-input ingest flags: `--block-kb` slab size (byte-block
+/// path) and the `--legacy-reader` fallback.
+fn block_bytes_flag(args: &Args) -> Result<usize> {
+    let kb: usize = args.get("block-kb", 256usize)?;
+    if kb == 0 {
+        return Err(Error::InvalidArg("--block-kb must be >= 1".into()));
+    }
+    Ok(kb << 10)
+}
+
+/// Ingest-side counters for the `preprocess`/`train --stream` summaries —
+/// empty for the legacy reader path (where parsing is `read_seconds`).
+fn ingest_summary(report: &bbit_mh::coordinator::PipelineReport) -> String {
+    if report.input_bytes == 0 {
+        return String::new();
+    }
+    format!(
+        ", {:.1} MB in at {:.1} MB/s, {:.2}s parse-cpu ({:.0} rows/s)",
+        report.input_bytes as f64 / 1e6,
+        report.ingest_mb_per_sec(),
+        report.parse_cpu_seconds,
+        report.parse_rows_per_sec(),
+    )
+}
+
+/// Run `spec` over a raw LibSVM file into `sink`, choosing the default
+/// byte-block parse-in-worker path or the legacy line reader
+/// (`--legacy-reader`).
+fn run_raw_input<S: bbit_mh::coordinator::PipelineSink>(
+    args: &Args,
+    pipe: &Pipeline,
+    input: &str,
+    spec: &EncoderSpec,
+    sink: &mut S,
+) -> Result<bbit_mh::coordinator::PipelineReport> {
+    if args.has("legacy-reader") {
+        let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
+        pipe.run_sink(source, spec, sink)
+    } else {
+        let block_bytes = block_bytes_flag(args)?; // validate before IO
+        let blocks = BlockReader::open(input)?.with_block_bytes(block_bytes);
+        pipe.run_sink_blocks(blocks, true, spec, sink)
+    }
+}
+
 fn cmd_preprocess(args: &Args) -> Result<()> {
     let input = args.required("input")?;
     let scheme = scheme_flag(args, "bbit")?;
@@ -266,7 +322,6 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
     let seed: u64 = args.get("seed", 1)?;
     let spec = encoder_spec(args, &scheme, seed)?;
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
-    let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
     if let Some(cache_out) = args.flags.get("cache-out") {
         if spec.packed_geometry().is_none() {
             return Err(Error::InvalidArg(format!(
@@ -280,7 +335,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             compress: args.has("cache-compress"),
         };
         let mut sink = CacheSink::create_opts(cache_out, &spec, opts)?;
-        let report = pipe.run_sink(source, &spec, &mut sink)?;
+        let report = run_raw_input(args, &pipe, input, &spec, &mut sink)?;
         let bytes = if opts.compress {
             let m = sink.meta();
             format!(
@@ -294,7 +349,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         };
         eprintln!(
             "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read + {:.2}s stalled, \
-             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks{}) -> {}",
+             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks{}{}) -> {}",
             report.docs,
             report.wall_seconds,
             report.read_seconds,
@@ -302,13 +357,16 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             report.hash_cpu_seconds,
             report.sink_seconds,
             report.reorder_peak,
+            ingest_summary(&report),
             bytes,
             cache_out,
         );
         return Ok(());
     }
     let out = args.required("out")?;
-    let (outp, report) = pipe.run(source, &spec)?;
+    let mut collect = bbit_mh::coordinator::CollectSink::for_spec(&spec)?;
+    let report = run_raw_input(args, &pipe, input, &spec, &mut collect)?;
+    let outp = collect.into_output();
     match outp {
         PipelineOutput::Packed(bb) => {
             let f = std::fs::File::create(out)?;
@@ -324,12 +382,13 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             )?;
             eprintln!(
                 "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read, {:.2} hash-cpu-s, \
-                 {} stalls) -> {} ({} ideal bytes)",
+                 {} stalls{}) -> {} ({} ideal bytes)",
                 report.docs,
                 report.wall_seconds,
                 report.read_seconds,
                 report.hash_cpu_seconds,
                 report.backpressure_stalls,
+                ingest_summary(&report),
                 out,
                 bb.codes.ideal_bytes(),
             );
@@ -339,8 +398,10 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             w.write_dataset(&ds)?;
             w.finish()?;
             eprintln!(
-                "{scheme}-encoded {} docs in {:.2}s wall -> {out}",
-                report.docs, report.wall_seconds
+                "{scheme}-encoded {} docs in {:.2}s wall{} -> {out}",
+                report.docs,
+                report.wall_seconds,
+                ingest_summary(&report),
             );
         }
     }
@@ -515,14 +576,13 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
     };
     let workers: usize = args.get("workers", bbit_mh::config::available_workers())?;
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
-    let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
     let mut sink = TrainSink::for_spec(cfg, &spec)?;
-    let report = pipe.run_sink(source, &spec, &mut sink)?;
+    let report = run_raw_input(args, &pipe, input, &spec, &mut sink)?;
     let (model, stats) = sink.into_result();
     println!(
         "solver=sgd method=stream: one-pass trained on {} docs, progressive loss {:.4}, \
          {:.2}s wall ({:.2}s read + {:.2}s stalled, {:.2} hash-cpu-s, {:.2}s solver, \
-         reorder peak {} chunks)",
+         reorder peak {} chunks{})",
         report.docs,
         stats.objective,
         report.wall_seconds,
@@ -531,6 +591,7 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
         report.hash_cpu_seconds,
         report.sink_seconds,
         report.reorder_peak,
+        ingest_summary(&report),
     );
     if let Some(model_path) = args.flags.get("save-model") {
         let saved = bbit_mh::solver::SavedModel::new(spec, model)?;
@@ -599,7 +660,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let scheme = scheme_flag(args, "bbit")?;
 
     let dim: u64 = args.get("dim", 1u64 << 30)?;
-    let raw = bbit_mh::data::libsvm::load(input, dim)?;
+    // byte-block parser by default (honoring --block-kb); --legacy-reader
+    // keeps the line reader (conformance-tested to load identically)
+    let raw = if args.has("legacy-reader") {
+        let mut ds = bbit_mh::data::SparseDataset::new(dim);
+        for ex in LibsvmReader::open(input)? {
+            ds.push(&ex?);
+        }
+        ds.validate()?;
+        ds
+    } else {
+        let block_bytes = block_bytes_flag(args)?; // validate before IO
+        bbit_mh::data::libsvm::load_with_block_bytes(input, dim, block_bytes)?
+    };
     let (train_raw, test_raw) = raw.split(train_frac, &mut bbit_mh::util::Rng::new(seed));
     eprintln!(
         "loaded {} examples ({} train / {} test)",
@@ -724,6 +797,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
     if chunk_size == 0 {
         return Err(Error::InvalidArg("--chunk-size must be >= 1".into()));
     }
+    let block_bytes = block_bytes_flag(args)?;
     if args.has("replay-threads") && !args.has("cache") {
         return Err(Error::InvalidArg(
             "--replay-threads applies to classify --cache (cache replay); raw --input \
@@ -761,15 +835,34 @@ fn cmd_classify(args: &Args) -> Result<()> {
         None => Box::new(std::io::BufWriter::new(std::io::stdout())),
     };
     let (mut n, mut correct) = (0usize, 0usize);
+    let mut score = |indices: &[u32], label: i8, out: &mut dyn std::io::Write| -> Result<()> {
+        let margin = saved.margin(indices, &mut scratch);
+        let pred: i8 = if margin >= 0.0 { 1 } else { -1 };
+        writeln!(out, "{pred} {margin:.6}")?;
+        n += 1;
+        if pred == label {
+            correct += 1;
+        }
+        Ok(())
+    };
     let t0 = std::time::Instant::now();
-    for chunk in ChunkedReader::new(LibsvmReader::open(input)?.binary(), chunk_size) {
-        for ex in &chunk? {
-            let margin = saved.margin(&ex.indices, &mut scratch);
-            let pred: i8 = if margin >= 0.0 { 1 } else { -1 };
-            writeln!(out, "{pred} {margin:.6}")?;
-            n += 1;
-            if pred == ex.label {
-                correct += 1;
+    if args.has("legacy-reader") {
+        for chunk in ChunkedReader::new(LibsvmReader::open(input)?.binary(), chunk_size) {
+            for ex in &chunk? {
+                score(&ex.indices, ex.label, &mut out)?;
+            }
+        }
+    } else {
+        // byte-block fast path: parse each slab into reused scratch and
+        // margin the rows straight off the CSR views — no per-document
+        // allocation anywhere on the scoring loop
+        let mut parsed = ParsedChunk::default();
+        for block in BlockReader::open(input)?.with_block_bytes(block_bytes) {
+            let block = block?;
+            parsed.clear();
+            parse_block(&block.bytes, block.first_line, true, &mut parsed)?;
+            for (label, indices, _) in parsed.rows() {
+                score(indices, label, &mut out)?;
             }
         }
     }
@@ -924,6 +1017,15 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.to_string().contains("replay-threads"), "{err}");
+    }
+
+    #[test]
+    fn block_kb_zero_is_rejected_before_io() {
+        let err = run(&argv(&[
+            "classify", "--model", "m", "--input", "f", "--block-kb", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("block-kb"), "{err}");
     }
 
     #[test]

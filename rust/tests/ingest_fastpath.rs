@@ -1,0 +1,300 @@
+//! Ingest fast-path conformance: the byte-block parser must produce
+//! bit-identical `Example`s to the legacy line reader over every edge case
+//! the LibSVM dialect allows, and the block-parallel pipeline must hash
+//! them into bit-identical output for every encoder — the acceptance gate
+//! for making the byte path the default raw-input reader.
+
+use bbit_mh::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineOutput};
+use bbit_mh::coordinator::sink::CollectSink;
+use bbit_mh::data::libsvm::{
+    parse_block, BlockReader, ChunkedReader, LibsvmReader, ParsedChunk,
+};
+use bbit_mh::data::Example;
+use bbit_mh::encode::cache::CacheReader;
+use bbit_mh::encode::EncoderSpec;
+use bbit_mh::Error;
+
+/// Parse `data` through the byte-block path at a given slab size.
+fn byte_parse(
+    data: &[u8],
+    block_bytes: usize,
+    binary: bool,
+) -> Result<Vec<Example>, Error> {
+    let mut out = Vec::new();
+    let mut parsed = ParsedChunk::default();
+    for block in BlockReader::new(data).with_block_bytes(block_bytes) {
+        let block = block?;
+        parsed.clear();
+        parse_block(&block.bytes, block.first_line, binary, &mut parsed)?;
+        out.extend(parsed.to_examples());
+    }
+    Ok(out)
+}
+
+/// Parse `data` through the legacy line reader.
+fn legacy_parse(data: &[u8], binary: bool) -> Result<Vec<Example>, Error> {
+    let rd = LibsvmReader::new(data);
+    let rd = if binary { rd.binary() } else { rd };
+    rd.collect()
+}
+
+/// Assert byte-path == legacy-path for `data`, across slab sizes that
+/// place block boundaries inside lines, between lines, and past EOF.
+fn assert_conformant(data: &[u8]) {
+    let legacy = legacy_parse(data, false).unwrap();
+    let legacy_bin = legacy_parse(data, true).unwrap();
+    for block_bytes in [1usize, 3, 7, 16, 61, 256, 1 << 20] {
+        assert_eq!(
+            byte_parse(data, block_bytes, false).unwrap(),
+            legacy,
+            "valued mode, block_bytes={block_bytes}, data={:?}",
+            String::from_utf8_lossy(data)
+        );
+        assert_eq!(
+            byte_parse(data, block_bytes, true).unwrap(),
+            legacy_bin,
+            "binary mode, block_bytes={block_bytes}, data={:?}",
+            String::from_utf8_lossy(data)
+        );
+    }
+}
+
+#[test]
+fn crlf_line_endings() {
+    assert_conformant(b"+1 1:1 5:1\r\n-1 2:1 3:1\r\n");
+    // mixed endings in one file
+    assert_conformant(b"+1 1:1\r\n-1 2:1\n+1 3:1\r\n");
+}
+
+#[test]
+fn comments_blanks_and_trailing_comment_tokens() {
+    assert_conformant(b"# header comment\n\n+1 1:1 2:1 # trailing note\n\n-1 3:1\n# tail\n\n");
+    // '#' glued to a token boundary starts the comment mid-line
+    assert_conformant(b"+1 4:1 #5:1 6:1\n");
+}
+
+#[test]
+fn label_dialects() {
+    // 0/1 dumps, +1/-1 dumps, float labels, negative floats, zero
+    assert_conformant(b"0 1:1\n1 2:1\n+1 3:1\n-1 4:1\n");
+    assert_conformant(b"0.5 1:1\n-2e0 2:1\n0.0 3:1\n2 4:1\n-0 5:1\n");
+}
+
+#[test]
+fn zero_and_one_based_indices() {
+    // 0-based and 1-based corpora both pass through with raw indices
+    assert_conformant(b"+1 0:1 1:1 2:1\n-1 0:1 9:1\n");
+    assert_conformant(b"+1 1:1 2:1 3:1\n-1 10:1\n");
+}
+
+#[test]
+fn valued_rows_unsorted_and_duplicate_indices() {
+    assert_conformant(b"+1 9:0.5 1:2 5:1\n");
+    // duplicates in binary/all-ones rows dedup
+    assert_conformant(b"+1 5:1 5:1 1:1\n");
+    // all-ones valued rows demote to binary (values None)
+    assert_conformant(b"+1 3:1 2:1 2:1\n");
+    // scientific notation and precise decimals
+    assert_conformant(b"-1 1:0.0078125 2:1.25e-3 3:305.2 4:1e10\n");
+}
+
+#[test]
+fn whitespace_extremes() {
+    assert_conformant(b"   +1   1:1    5:1   \n\t-1\t2:1\t\n");
+    // ASCII vertical tab (0x0B): str::trim strips it at line edges (it is
+    // Unicode whitespace) even though is_ascii_whitespace excludes it —
+    // both readers must trim it, skip VT-only lines, and agree that a
+    // mid-token VT is a parse error on the same line
+    assert_conformant(b"\x0B+1 3:1\x0B\n\x0B\x0B\n-1 2:1\x0B \n");
+    let data = b"+1 1:1\n+1 3:0.5\x0B4:1\n";
+    let legacy_err = legacy_parse(data, false).unwrap_err();
+    let byte_err = byte_parse(data, 8, false).unwrap_err();
+    match (legacy_err, byte_err) {
+        (Error::LibsvmParse { line: ll, .. }, Error::LibsvmParse { line: bl, .. }) => {
+            assert_eq!(ll, 2);
+            assert_eq!(bl, 2);
+        }
+        other => panic!("wrong errors {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_final_line_parses() {
+    // no trailing newline on the last record
+    assert_conformant(b"+1 1:1\n-1 7:1 9:1");
+    // file ending in blanks/comments yields no phantom rows
+    assert_conformant(b"+1 1:1\n\n# done");
+}
+
+#[test]
+fn out_of_range_index_is_an_error_with_the_legacy_line_number() {
+    let data = b"+1 1:1\n+1 4294967296:1\n";
+    let legacy_err = legacy_parse(data, true).unwrap_err();
+    let byte_err = byte_parse(data, 8, true).unwrap_err();
+    match (legacy_err, byte_err) {
+        (
+            Error::LibsvmParse { line: ll, .. },
+            Error::LibsvmParse { line: bl, msg },
+        ) => {
+            assert_eq!(ll, 2);
+            assert_eq!(bl, 2, "{msg}");
+            assert!(msg.contains("bad index"), "{msg}");
+        }
+        other => panic!("wrong errors {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_tokens_error_on_the_same_line_as_legacy() {
+    for data in [
+        &b"+1 1:1\nbroken token\n"[..],
+        b"+1 1:1\n-1 2:\n",
+        b"+1 1:1\n-1 :5\n",
+        b"bogus 1:1\n",
+    ] {
+        let legacy_err = legacy_parse(data, false).unwrap_err();
+        let byte_err = byte_parse(data, 4, false).unwrap_err();
+        match (legacy_err, byte_err) {
+            (
+                Error::LibsvmParse { line: ll, .. },
+                Error::LibsvmParse { line: bl, .. },
+            ) => assert_eq!(ll, bl, "data={:?}", String::from_utf8_lossy(data)),
+            other => panic!("wrong errors {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn non_utf8_bytes_in_comments_parse_on_the_byte_path() {
+    // the legacy reader dies on invalid UTF-8 anywhere in the file; the
+    // byte parser never validates UTF-8 and only looks at a comment's
+    // first byte — the data lines still come through
+    let mut data = Vec::new();
+    data.extend_from_slice(b"# \xC0\xFF\xEE raw bytes \x00\n+1 1:1 8:1\n-1 2:1\n");
+    assert!(legacy_parse(&data, true).is_err(), "legacy reader should reject");
+    let fast = byte_parse(&data, 16, true).unwrap();
+    assert_eq!(
+        fast,
+        vec![Example::binary(1, vec![1, 8]), Example::binary(-1, vec![2])]
+    );
+}
+
+#[test]
+fn steady_state_parsing_reuses_one_scratch() {
+    // N docs through one reused ParsedChunk: after the first block the
+    // arenas must never grow again (the no-per-document-allocation gate)
+    let mut data = String::new();
+    for i in 0..500 {
+        data.push_str(&format!("+1 {}:1 {}:1 {}:1 {}:1\n", i + 1, i + 600, i + 1200, i + 1800));
+    }
+    let mut parsed = ParsedChunk::default();
+    parse_block(data.as_bytes(), 1, true, &mut parsed).unwrap();
+    let n = parsed.len();
+    assert_eq!(n, 500);
+    let snapshot = |p: &ParsedChunk| (p.len(), p.row(0).0.to_vec(), p.row(n - 1).0.to_vec());
+    let first = snapshot(&parsed);
+    for _ in 0..8 {
+        parsed.clear();
+        parse_block(data.as_bytes(), 1, true, &mut parsed).unwrap();
+        assert_eq!(snapshot(&parsed), first);
+    }
+}
+
+/// Hash a LibSVM byte buffer through (a) the legacy chunk pipeline and
+/// (b) the block-parallel pipeline, returning both outputs.
+fn hash_both_paths(
+    data: &[u8],
+    spec: &EncoderSpec,
+    workers: usize,
+) -> (PipelineOutput, PipelineOutput) {
+    let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 64, queue_depth: 2 });
+    let legacy_src = ChunkedReader::new(LibsvmReader::new(data).binary(), 64);
+    let mut legacy_sink = CollectSink::for_spec(spec).unwrap();
+    pipe.run_sink(legacy_src, spec, &mut legacy_sink).unwrap();
+    let blocks = BlockReader::new(data).with_block_bytes(301);
+    let mut block_sink = CollectSink::for_spec(spec).unwrap();
+    pipe.run_sink_blocks(blocks, true, spec, &mut block_sink).unwrap();
+    (legacy_sink.into_output(), block_sink.into_output())
+}
+
+#[test]
+fn block_parallel_hashing_is_bit_identical_for_every_encoder() {
+    // a corpus big enough for many blocks and unbalanced rows
+    let mut data = String::new();
+    for i in 0..400u32 {
+        let label = if i % 3 == 0 { "+1" } else { "-1" };
+        data.push_str(label);
+        for j in 0..(5 + i % 37) {
+            data.push_str(&format!(" {}:1", (i * 131 + j * 17) % 100_000));
+        }
+        data.push('\n');
+    }
+    let specs = [
+        EncoderSpec::Bbit { b: 8, k: 50, d: 1 << 20, seed: 5 },
+        EncoderSpec::Oph { bins: 64, b: 4, seed: 7 },
+        EncoderSpec::Vw { bins: 256, seed: 9 },
+        EncoderSpec::Rp { proj: 24, s: 3.0, seed: 11 },
+    ];
+    for spec in &specs {
+        for workers in [1usize, 4] {
+            let (legacy, fast) = hash_both_paths(data.as_bytes(), spec, workers);
+            match (legacy, fast) {
+                (PipelineOutput::Packed(a), PipelineOutput::Packed(b)) => {
+                    assert_eq!(a.labels, b.labels, "{} w={workers}", spec.scheme());
+                    assert_eq!(a.len(), b.len());
+                    for i in 0..a.len() {
+                        assert_eq!(
+                            a.codes.row(i),
+                            b.codes.row(i),
+                            "{} w={workers} row {i}",
+                            spec.scheme()
+                        );
+                    }
+                }
+                (PipelineOutput::Sparse(a), PipelineOutput::Sparse(b)) => {
+                    assert_eq!(a.labels, b.labels, "{} w={workers}", spec.scheme());
+                    assert_eq!(a.indptr, b.indptr);
+                    assert_eq!(a.indices, b.indices);
+                    assert_eq!(a.values, b.values);
+                }
+                _ => panic!("{}: output kinds diverged", spec.scheme()),
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_from_block_path_replays_identically_to_legacy_cache() {
+    // preprocess → cache through both ingest paths; the cache *records*
+    // may be framed differently (row-count per record follows the source
+    // chunking) but decoded rows must match exactly — so `train --cache`
+    // sees the identical corpus whichever parser built the cache
+    let mut data = String::new();
+    for i in 0..300u32 {
+        data.push_str(&format!("+1 {}:1 {}:1\n", i % 97, (i * 7) % 89 + 100));
+    }
+    let spec = EncoderSpec::Bbit { b: 6, k: 17, d: 1 << 18, seed: 3 };
+    let dir = std::env::temp_dir().join(format!("bbit_ingest_cache_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (legacy_path, block_path) = (dir.join("legacy.cache"), dir.join("block.cache"));
+
+    let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 32, queue_depth: 2 });
+    {
+        let mut sink = bbit_mh::coordinator::CacheSink::create(&legacy_path, &spec).unwrap();
+        let src = ChunkedReader::new(LibsvmReader::new(data.as_bytes()).binary(), 32);
+        pipe.run_sink(src, &spec, &mut sink).unwrap();
+    }
+    {
+        let mut sink = bbit_mh::coordinator::CacheSink::create(&block_path, &spec).unwrap();
+        let blocks = BlockReader::new(data.as_bytes()).with_block_bytes(128);
+        pipe.run_sink_blocks(blocks, true, &spec, &mut sink).unwrap();
+    }
+    let a = CacheReader::open(&legacy_path).unwrap().read_all().unwrap();
+    let b = CacheReader::open(&block_path).unwrap().read_all().unwrap();
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        assert_eq!(a.codes.row(i), b.codes.row(i), "row {i}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
