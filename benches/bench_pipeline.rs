@@ -8,7 +8,15 @@
 //! Run: `cargo bench --bench bench_pipeline`
 //! One scenario group: `cargo bench --bench bench_pipeline -- serve`
 //! (any prefix of the scenario names: `pipeline`, `ingest`, `replay`,
-//! `serve`)
+//! `serve`, `matrix`)
+//!
+//! The `matrix` scenario is the standing benchmark matrix: one corpus
+//! through train-no-cache / train-from-cache / predict / serve, reporting
+//! runtime, rows/s and peak RSS per cell — plus the scalar-vs-unrolled
+//! kernel speedup (the train/score inner loops of `bbit_mh::kernels`,
+//! A/B'd in-process via `kernels::force_scalar`).  Results land in
+//! `BENCH_matrix.json`; CI gates them against
+//! `benches/baselines/BENCH_matrix.baseline.json`.
 //!
 //! The `ingest` scenario times raw-input parsing — the legacy line reader
 //! vs. the byte-block parser (1 thread and W workers) vs. raw read
@@ -65,6 +73,9 @@ fn main() {
         }
         if should("serve") {
             run_serve_scenario(&ds);
+        }
+        if should("matrix") {
+            run_matrix_scenario();
         }
         return;
     }
@@ -177,6 +188,175 @@ fn main() {
     if should("serve") {
         run_serve_scenario(&ds);
     }
+    if should("matrix") {
+        run_matrix_scenario();
+    }
+}
+
+/// The standing benchmark matrix (train-no-cache / train-from-cache /
+/// predict / serve), fwumious-BENCHMARK-style: one corpus, every cell
+/// reporting wall time, rows/s and peak RSS, plus the scalar-vs-unrolled
+/// kernel speedup on the replay-train and predict cells.  Peak RSS is the
+/// process high-water mark (`VmHWM`), so later cells report upper bounds.
+/// Everything lands in `BENCH_matrix.json`.
+fn run_matrix_scenario() {
+    use bbit_mh::data::libsvm::{BlockReader, LibsvmWriter};
+    use bbit_mh::kernels;
+    use bbit_mh::solver::{eval_from_cache, train_from_cache};
+    use bbit_mh::util::bench::peak_rss_bytes;
+
+    println!();
+    let corpus = CorpusGenerator::new(CorpusConfig {
+        n_docs: 12_288,
+        vocab: 2500,
+        zipf_alpha: 1.05,
+        mean_tokens: 28.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed: 0xA7121,
+    })
+    .generate();
+    let rows = corpus.len();
+    let (b, k) = (8u32, 200usize);
+    let spec = EncoderSpec::Bbit { b, k, d: 1 << 30, seed: 11 };
+    let pid = std::process::id();
+    let svm_path = std::env::temp_dir().join(format!("bbit_bench_matrix_{pid}.svm"));
+    let cache_path = std::env::temp_dir().join(format!("bbit_bench_matrix_{pid}.cache"));
+    {
+        let mut w = LibsvmWriter::create(&svm_path).unwrap();
+        w.write_dataset(&corpus).unwrap();
+        w.finish().unwrap();
+    }
+    let pipe = Pipeline::new(PipelineConfig {
+        workers: bbit_mh::config::available_workers(),
+        chunk_size: 256,
+        queue_depth: 4,
+    });
+    {
+        let mut sink = CacheSink::create(&cache_path, &spec).unwrap();
+        pipe.run_sink_blocks(BlockReader::open(&svm_path).unwrap(), true, &spec, &mut sink)
+            .unwrap();
+    }
+    let epochs = 2usize;
+    let sgd = SgdConfig { loss: SgdLoss::Logistic, lr0: 0.5, lambda: 1e-4, epochs, batch: 256 };
+    let best = |reps: usize, f: &mut dyn FnMut()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let cell = |name: &str, trained_rows: f64, secs: f64| {
+        println!(
+            "matrix/{name:<18} {:8.2} ms  ({:9.0} rows/s, peak RSS {:.1} MB)",
+            secs * 1e3,
+            trained_rows / secs,
+            peak_rss_bytes() as f64 / 1e6,
+        );
+    };
+
+    // --- train-no-cache: one-pass parse + hash + SGD (stream, no disk) ---
+    let stream_cfg = SgdConfig { epochs: 1, ..sgd.clone() };
+    let no_cache_s = best(3, &mut || {
+        let mut sink = TrainSink::new(stream_cfg.clone(), b, k);
+        pipe.run_sink_blocks(BlockReader::open(&svm_path).unwrap(), true, &spec, &mut sink)
+            .unwrap();
+    });
+    let no_cache_rss = peak_rss_bytes();
+    cell("train-no-cache", rows as f64, no_cache_s);
+
+    // --- train-from-cache: replay SGD, scalar kernels then unrolled ---
+    let trained_rows = (rows * epochs) as f64;
+    kernels::force_scalar(true);
+    let tc_scalar_s = best(3, &mut || {
+        train_from_cache(&cache_path, &sgd).unwrap();
+    });
+    kernels::force_scalar(false);
+    let tc_s = best(3, &mut || {
+        train_from_cache(&cache_path, &sgd).unwrap();
+    });
+    let tc_rss = peak_rss_bytes();
+    let (model, _) = train_from_cache(&cache_path, &sgd).unwrap();
+    let kernel_speedup = tc_scalar_s / tc_s;
+    cell("train-cache-scalar", trained_rows, tc_scalar_s);
+    cell("train-from-cache", trained_rows, tc_s);
+    println!("matrix/kernel-speedup    {kernel_speedup:.2}x (unrolled over scalar, same replay)");
+
+    // --- predict: score every cached row with the trained model ---
+    let saved = SavedModel::new(spec, model).unwrap();
+    kernels::force_scalar(true);
+    let pred_scalar_s = best(3, &mut || {
+        eval_from_cache(&cache_path, &saved, SgdLoss::Logistic).unwrap();
+    });
+    kernels::force_scalar(false);
+    let pred_s = best(3, &mut || {
+        eval_from_cache(&cache_path, &saved, SgdLoss::Logistic).unwrap();
+    });
+    let pred_rss = peak_rss_bytes();
+    let pred_speedup = pred_scalar_s / pred_s;
+    cell("predict-scalar", rows as f64, pred_scalar_s);
+    cell("predict", rows as f64, pred_s);
+
+    // --- serve: the trained model resident behind the scoring endpoint ---
+    let model_path = std::env::temp_dir().join(format!("bbit_bench_matrix_{pid}.bbmh"));
+    saved.save(&model_path).unwrap();
+    let server = ModelServer::start(
+        &model_path,
+        ServeConfig {
+            scorer_workers: 2,
+            batch_max: 64,
+            batch_wait: Duration::from_micros(100),
+            queue_cap: 4096,
+            deadline: Duration::from_millis(100),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let docs: Vec<String> = (0..rows.min(256))
+        .map(|i| {
+            let mut line = String::from("+1");
+            for &t in corpus.row(i).0 {
+                line.push_str(&format!(" {t}:1"));
+            }
+            line
+        })
+        .collect();
+    let report = loadgen::run(
+        server.local_addr(),
+        &LoadgenConfig { qps: 2000.0, duration: Duration::from_millis(800), connections: 4, docs },
+    )
+    .unwrap();
+    let serve_rss = peak_rss_bytes();
+    println!("matrix/serve             {}", report.summary());
+    server.shutdown();
+    std::fs::remove_file(&model_path).ok();
+    std::fs::remove_file(&svm_path).ok();
+    std::fs::remove_file(&cache_path).ok();
+
+    let json = format!(
+        "{{\"scenario\":\"matrix\",\"rows\":{rows},\"b\":{b},\"k\":{k},\"epochs\":{epochs},\
+         \"train_no_cache\":{{\"seconds\":{no_cache_s:.6},\"rows_per_s\":{:.1},\
+         \"peak_rss_bytes\":{no_cache_rss}}},\
+         \"train_from_cache\":{{\"seconds\":{tc_s:.6},\"rows_per_s\":{:.1},\
+         \"scalar_seconds\":{tc_scalar_s:.6},\"scalar_rows_per_s\":{:.1},\
+         \"kernel_speedup\":{kernel_speedup:.3},\"peak_rss_bytes\":{tc_rss}}},\
+         \"predict\":{{\"seconds\":{pred_s:.6},\"rows_per_s\":{:.1},\
+         \"scalar_seconds\":{pred_scalar_s:.6},\"scalar_rows_per_s\":{:.1},\
+         \"kernel_speedup\":{pred_speedup:.3},\"peak_rss_bytes\":{pred_rss}}},\
+         \"serve\":{{\"achieved_qps\":{:.1},\"p50_us\":{},\"p99_us\":{},\
+         \"peak_rss_bytes\":{serve_rss}}}}}",
+        rows as f64 / no_cache_s,
+        trained_rows / tc_s,
+        trained_rows / tc_scalar_s,
+        rows as f64 / pred_s,
+        rows as f64 / pred_scalar_s,
+        report.achieved_qps,
+        report.p50_us,
+        report.p99_us,
+    );
+    std::fs::write("BENCH_matrix.json", json + "\n").ok();
 }
 
 /// Ingest throughput: serialize a corpus to a LibSVM file once, then time

@@ -396,16 +396,13 @@ fn packed_parsed(
     packed_rows(b, k, chunk.len(), |i| (chunk.row(i).0, chunk.label(i)), codes_into)
 }
 
-/// Expanded-space weight gather for one packed code row: the classify hot
-/// path every packed scheme shares (column j of code c lives at
-/// `(j << b) + c`).
+/// Expanded-space weight gather for one packed code row: the classify /
+/// serve-scorer hot path every packed scheme shares (column j of code c
+/// lives at `(j << b) + c`).  Delegates to the unrolled
+/// multi-accumulator kernel — same lane structure as the trainer's dot,
+/// so classify margins and trained-path margins stay bitwise consistent.
 fn packed_margin(b: u32, codes: &[u16], w: &[f32]) -> f32 {
-    let bshift = b as usize;
-    let mut acc = 0.0f32;
-    for (j, &c) in codes.iter().enumerate() {
-        acc += w[(j << bshift) + c as usize];
-    }
-    acc
+    crate::kernels::dot_codes(b, codes, w)
 }
 
 /// b-bit minwise hashing → packed codes (the paper's method).

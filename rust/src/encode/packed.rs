@@ -184,10 +184,56 @@ impl PackedCodes {
         }
     }
 
+    /// Allocating convenience form of [`row_into`](Self::row_into) —
+    /// tests and one-shot inspection only; hot paths use `row_into` or
+    /// [`row_indices_into`](Self::row_indices_into).
     pub fn row(&self, row: usize) -> Vec<u16> {
         let mut out = vec![0; self.k];
         self.row_into(row, &mut out);
         out
+    }
+
+    /// Decode one whole row straight into expanded **gather indices**:
+    /// `out[j] = (j << b) | code_j`, i.e. the weight-vector offsets of the
+    /// implicit 2^b·k one-hot expansion (Section 3).  This is the
+    /// train/score hot path: branchless, word-at-a-time, specialized per
+    /// `b` — no per-element [`get`](Self::get).
+    ///
+    /// For b ∈ {1, 2, 4, 8, 16} codes never straddle a word (64 % b == 0)
+    /// and a const-generic inner loop shifts codes out of each word; other
+    /// b use a branch-free two-word blend.  Both produce the exact same
+    /// indices as [`row_indices_scalar_into`](Self::row_indices_scalar_into)
+    /// (pinned by tests in `tests/simd_kernels.rs` and below).
+    ///
+    /// `out.len()` must equal `k`.
+    pub fn row_indices_into(&self, row: usize, out: &mut [u32]) {
+        debug_assert!(row < self.n);
+        debug_assert_eq!(out.len(), self.k);
+        // (j << b) | code must fit a u32 for every j < k
+        debug_assert!((self.k as u64) << self.b <= 1 << 32);
+        if out.is_empty() {
+            return;
+        }
+        let words = &self.data[row * self.words_per_row..(row + 1) * self.words_per_row];
+        match self.b {
+            1 => decode_pow2::<1>(words, out),
+            2 => decode_pow2::<2>(words, out),
+            4 => decode_pow2::<4>(words, out),
+            8 => decode_pow2::<8>(words, out),
+            16 => decode_pow2::<16>(words, out),
+            b => decode_generic(words, b as usize, out),
+        }
+    }
+
+    /// Reference implementation of [`row_indices_into`](Self::row_indices_into)
+    /// built on per-element [`get`](Self::get) — the scalar kernel the
+    /// parity tests (and the `bbmh_force_scalar` fallback) compare against.
+    pub fn row_indices_scalar_into(&self, row: usize, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.k);
+        let b = self.b as usize;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = ((j << b) + self.get(row, j) as usize) as u32;
+        }
     }
 
     /// Merge rows from `other` (same b, k) after this one's rows — used by
@@ -287,6 +333,45 @@ impl PackedCodes {
             }
         }
         Ok(out)
+    }
+}
+
+/// Row decode for b dividing 64: each u64 holds exactly `64 / B` codes,
+/// shifted out low-to-high.  Monomorphized per B so the shift amount and
+/// per-word trip count are compile-time constants.
+#[inline(always)]
+fn decode_pow2<const B: u32>(words: &[u64], out: &mut [u32]) {
+    let per = (64 / B) as usize;
+    let mask = (1u64 << B) - 1;
+    let k = out.len();
+    for (wi, &w) in words.iter().enumerate() {
+        let base = wi * per;
+        let end = (base + per).min(k);
+        let mut v = w;
+        for (jj, o) in out[base..end].iter_mut().enumerate() {
+            *o = (((base + jj) as u32) << B) | (v & mask) as u32;
+            v >>= B;
+        }
+    }
+}
+
+/// Row decode for b not dividing 64 (codes may straddle two words):
+/// branch-free two-word blend per code.  `(x << 1) << (63 - off)` is
+/// `x << (64 - off)` without the off == 0 shift-by-64 UB; the `.min(last)`
+/// clamp keeps the final code — which can never truly spill past the row's
+/// last word, since rows are padded to a word boundary — from reading out
+/// of bounds (the garbage bits it blends in are masked away).
+#[inline(always)]
+fn decode_generic(words: &[u64], b: usize, out: &mut [u32]) {
+    let mask = (1u64 << b) - 1;
+    let last = words.len() - 1;
+    for (j, o) in out.iter_mut().enumerate() {
+        let bit = j * b;
+        let w = bit >> 6;
+        let off = (bit & 63) as u32;
+        let lo = words[w] >> off;
+        let hi = (words[(w + 1).min(last)] << 1) << (63 - off);
+        *o = ((j as u32) << b) | ((lo | hi) & mask) as u32;
     }
 }
 
@@ -436,6 +521,67 @@ mod tests {
         assert_eq!(scratch.row(2), pc.row(2));
         // byte-count mismatches are typed errors
         assert!(scratch.fill_from_le_bytes(9, &bytes[..8]).is_err());
+    }
+
+    #[test]
+    fn row_indices_match_get_for_every_b() {
+        let mut rng = Rng::new(0xDECDE);
+        // ragged k values: < LANES, % 8 != 0, 1, and word-straddling sizes
+        for b in 1..=16u32 {
+            for k in [1usize, 2, 3, 5, 8, 13, 21, 37, 64, 200] {
+                let mut pc = PackedCodes::new(b, k);
+                for _ in 0..7 {
+                    let row: Vec<u16> =
+                        (0..k).map(|_| rng.below(1 << b) as u16).collect();
+                    pc.push_row(&row).unwrap();
+                }
+                let mut fast = vec![0u32; k];
+                let mut slow = vec![0u32; k];
+                for i in 0..pc.n {
+                    pc.row_indices_into(i, &mut fast);
+                    pc.row_indices_scalar_into(i, &mut slow);
+                    assert_eq!(fast, slow, "b={b} k={k} row {i}");
+                    // and both agree with the definition (j << b) + code
+                    for (j, &t) in fast.iter().enumerate() {
+                        assert_eq!(
+                            t,
+                            ((j << b) + pc.get(i, j) as usize) as u32,
+                            "b={b} k={k} row {i} col {j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_indices_survive_buffer_refill() {
+        // regression guard for the replay pattern: a scratch PackedCodes
+        // refilled in place via fill_from_le_bytes must decode the *new*
+        // contents (no stale per-buffer state is allowed anywhere).
+        let mut rng = Rng::new(0xF111);
+        let mk = |rng: &mut Rng| {
+            let mut pc = PackedCodes::new(6, 21);
+            for _ in 0..4 {
+                let row: Vec<u16> = (0..21).map(|_| rng.below(64) as u16).collect();
+                pc.push_row(&row).unwrap();
+            }
+            pc
+        };
+        let (a, b) = (mk(&mut rng), mk(&mut rng));
+        let bytes_a: Vec<u8> = a.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+        let bytes_b: Vec<u8> = b.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+        let mut scratch = PackedCodes::new(6, 21);
+        let mut got = vec![0u32; 21];
+        let mut want = vec![0u32; 21];
+        for bytes in [&bytes_a, &bytes_b, &bytes_a] {
+            scratch.fill_from_le_bytes(4, bytes).unwrap();
+            for i in 0..4 {
+                scratch.row_indices_into(i, &mut got);
+                scratch.row_indices_scalar_into(i, &mut want);
+                assert_eq!(got, want, "row {i}");
+            }
+        }
     }
 
     #[test]

@@ -35,7 +35,12 @@ fn trait_codes_pair(
     let enc = spec.encoder()?;
     let chunk = [Example::binary(1, s1.to_vec()), Example::binary(-1, s2.to_vec())];
     match enc.encode_chunk(&chunk)? {
-        EncodedChunk::Packed { codes, .. } => Ok((codes.row(0), codes.row(1))),
+        EncodedChunk::Packed { codes, .. } => {
+            let (mut r0, mut r1) = (vec![0u16; codes.k], vec![0u16; codes.k]);
+            codes.row_into(0, &mut r0);
+            codes.row_into(1, &mut r1);
+            Ok((r0, r1))
+        }
         EncodedChunk::Sparse { .. } => Err(Error::InvalidArg(format!(
             "variance harness needs a packed-code scheme, got {}",
             spec.scheme()

@@ -1,0 +1,619 @@
+//! The train/score inner-loop kernels: unrolled multi-accumulator
+//! gather/scatter over decoded b-bit rows, with explicit weight prefetch.
+//!
+//! # Where the cycles go (SPEED notes)
+//!
+//! After PRs 4–5 made replay and ingest fast, train/score time is
+//! dominated by the per-code inner loops: for every row the solver gathers
+//! `k` weights at indices `(j << b) | code_j` (dot) or scatters a constant
+//! into them (axpy).  The pre-PR-6 loops re-extracted each code with
+//! `PackedCodes::get` (per-element shifts + a straddle branch) and
+//! accumulated through one serial f32 dependency chain — the classic
+//! "latency-bound gather" shape.  This module replaces that with:
+//!
+//! 1. **whole-row decode** ([`PackedCodes::row_indices_into`]) into a
+//!    reusable `u32` scratch — branchless, word-at-a-time, specialized per
+//!    `b`;
+//! 2. **8-wide unrolled accumulators** for dot/axpy so the gathers pipeline
+//!    instead of serializing on one add chain;
+//! 3. **explicit weight prefetch** ([`prefetch_weights`]) issued one row
+//!    ahead by the SGD/DCD/eval loops ([`RowGather`] owns the
+//!    double-buffered decode+prefetch idiom), hiding the cache misses of
+//!    the random gather into a 2^b·k-entry weight table.
+//!
+//! # Exact vs tolerance-bounded (the bit-parity story)
+//!
+//! | kernel          | vs scalar reference | why |
+//! |-----------------|---------------------|-----|
+//! | row decode      | bit-identical       | integer-only |
+//! | axpy (indices)  | bit-identical       | scatter of distinct slots, program order preserved |
+//! | axpy (valued)   | bit-identical       | same |
+//! | codec RLE scan  | byte-identical      | integer-only (see `encode::codec`) |
+//! | dot / norm_sq   | tolerance-bounded   | 8 accumulators reassociate the f32 sum |
+//!
+//! Gather indices within one row are strictly increasing (`(j << b) | c`
+//! grows with `j`), so axpy updates distinct weight slots in program order
+//! — reordering-free, hence exact.  Dot products are reassociated by the
+//! multi-accumulator reduction, so consumers that compare margins across
+//! kernel generations use a tolerance (≈ k·ε·Σ|w| — pinned with headroom in
+//! `tests/simd_kernels.rs`).  The multi-accumulator sum is typically
+//! *closer* to the f64 reference than the serial chain, never exactly it.
+//!
+//! # Scalar fallback
+//!
+//! Every kernel has a scalar twin (`*_scalar`) that reproduces the
+//! pre-PR-6 accumulation bit-for-bit.  Two switches select it:
+//! compile-time `--cfg bbmh_force_scalar` (CI's second test pass — also
+//! the behavior non-x86_64 targets can pin), and the runtime
+//! [`force_scalar`] toggle the benchmark matrix uses to measure the
+//! scalar-vs-unrolled speedup in one process (`bench_pipeline -- matrix`,
+//! reported as `train_from_cache.kernel_speedup` in `BENCH_matrix.json`).
+//! Tests never touch the global toggle (they run in parallel threads);
+//! they call the `_scalar`/`_unrolled` variants directly.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::encode::packed::PackedCodes;
+
+/// Accumulator width for the unrolled kernels.  Eight independent f32
+/// chains cover the gather latency without spilling registers on x86_64.
+pub const LANES: usize = 8;
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// True when the scalar reference kernels are selected, either by the
+/// `bbmh_force_scalar` cfg or the runtime [`force_scalar`] toggle.
+#[inline(always)]
+pub fn scalar_forced() -> bool {
+    cfg!(bbmh_force_scalar) || FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Select the scalar reference kernels at runtime (process-global).
+/// Benchmark-only: the matrix scenario flips this to A/B the kernels in
+/// one process.  Tests must not call it — they run in parallel threads
+/// and would race each other through this global.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// prefetch
+
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn prefetch_ptr(p: *const f32) {
+    // SAFETY: _mm_prefetch is a pure performance hint with no memory,
+    // alignment, or validity requirements — any address is allowed.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+fn prefetch_ptr(p: *const f32) {
+    // std-only dep policy: no inline asm / arch intrinsics off x86_64.
+    // black_box keeps the address computation observable (a true no-op
+    // would let the compiler delete the decode feeding it).
+    std::hint::black_box(p);
+}
+
+/// Prefetch the weight cache lines a decoded row will gather.  Pointers
+/// are formed with `wrapping_add` so even a bogus index is hint-safe.
+#[inline]
+pub fn prefetch_weights(w: &[f32], idx: &[u32]) {
+    if scalar_forced() {
+        return;
+    }
+    let base = w.as_ptr();
+    for &t in idx {
+        prefetch_ptr(base.wrapping_add(t as usize));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// index-gather kernels (binary features: b-bit rows, binary CSR rows)
+
+/// Fixed pairwise reduction tree over the lane accumulators — part of the
+/// kernel contract (`tests/simd_kernels.rs` pins dot results against an
+/// independent reimplementation of exactly this shape).
+#[inline(always)]
+fn reduce(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// `Σ w[idx_j]` — serial reference chain (pre-PR-6 accumulation order).
+pub fn dot_idx_scalar(idx: &[u32], w: &[f32]) -> f32 {
+    idx.iter().map(|&t| w[t as usize]).sum()
+}
+
+/// `Σ w[idx_j]` with [`LANES`] independent accumulators: lane `l` sums
+/// elements `j ≡ l (mod LANES)`, remainder folded into lanes `0..r`,
+/// then the fixed [`reduce`] tree.
+pub fn dot_idx_unrolled(idx: &[u32], w: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut chunks = idx.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for l in 0..LANES {
+            acc[l] += w[c[l] as usize];
+        }
+    }
+    for (l, &t) in chunks.remainder().iter().enumerate() {
+        acc[l] += w[t as usize];
+    }
+    reduce(acc)
+}
+
+/// Dispatching form of the index dot product.
+#[inline]
+pub fn dot_idx(idx: &[u32], w: &[f32]) -> f32 {
+    if scalar_forced() {
+        dot_idx_scalar(idx, w)
+    } else {
+        dot_idx_unrolled(idx, w)
+    }
+}
+
+/// `w[idx_j] += alpha` — reference loop.
+pub fn axpy_idx_scalar(idx: &[u32], alpha: f32, w: &mut [f32]) {
+    for &t in idx {
+        w[t as usize] += alpha;
+    }
+}
+
+/// `w[idx_j] += alpha`, unrolled.  The unroll only widens the loop body —
+/// updates still happen in program order on (for our producers) distinct
+/// slots, so this is bit-identical to the scalar twin (pinned in tests).
+pub fn axpy_idx_unrolled(idx: &[u32], alpha: f32, w: &mut [f32]) {
+    let mut chunks = idx.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for l in 0..LANES {
+            w[c[l] as usize] += alpha;
+        }
+    }
+    for &t in chunks.remainder() {
+        w[t as usize] += alpha;
+    }
+}
+
+/// Dispatching form of the index axpy.
+#[inline]
+pub fn axpy_idx(idx: &[u32], alpha: f32, w: &mut [f32]) {
+    if scalar_forced() {
+        axpy_idx_scalar(idx, alpha, w)
+    } else {
+        axpy_idx_unrolled(idx, alpha, w)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// valued kernels (VW/RP real-valued CSR rows)
+
+/// `Σ w[idx_j]·v_j` — serial reference chain.
+pub fn dot_vals_scalar(idx: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    idx.iter().zip(vals).map(|(&t, &v)| w[t as usize] * v).sum()
+}
+
+/// `Σ w[idx_j]·v_j`, [`LANES`]-wide.
+pub fn dot_vals_unrolled(idx: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(idx.len(), vals.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ic = idx.chunks_exact(LANES);
+    let mut vc = vals.chunks_exact(LANES);
+    for (ci, cv) in ic.by_ref().zip(vc.by_ref()) {
+        for l in 0..LANES {
+            acc[l] += w[ci[l] as usize] * cv[l];
+        }
+    }
+    for (l, (&t, &v)) in ic.remainder().iter().zip(vc.remainder()).enumerate() {
+        acc[l] += w[t as usize] * v;
+    }
+    reduce(acc)
+}
+
+/// Dispatching form of the valued dot product.
+#[inline]
+pub fn dot_vals(idx: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    if scalar_forced() {
+        dot_vals_scalar(idx, vals, w)
+    } else {
+        dot_vals_unrolled(idx, vals, w)
+    }
+}
+
+/// `w[idx_j] += alpha·v_j` — reference loop.
+pub fn axpy_vals_scalar(idx: &[u32], vals: &[f32], alpha: f32, w: &mut [f32]) {
+    for (&t, &v) in idx.iter().zip(vals) {
+        w[t as usize] += alpha * v;
+    }
+}
+
+/// `w[idx_j] += alpha·v_j`, unrolled (program order preserved → exact,
+/// same argument as [`axpy_idx_unrolled`]).
+pub fn axpy_vals_unrolled(idx: &[u32], vals: &[f32], alpha: f32, w: &mut [f32]) {
+    debug_assert_eq!(idx.len(), vals.len());
+    let mut ic = idx.chunks_exact(LANES);
+    let mut vc = vals.chunks_exact(LANES);
+    for (ci, cv) in ic.by_ref().zip(vc.by_ref()) {
+        for l in 0..LANES {
+            w[ci[l] as usize] += alpha * cv[l];
+        }
+    }
+    for (&t, &v) in ic.remainder().iter().zip(vc.remainder()) {
+        w[t as usize] += alpha * v;
+    }
+}
+
+/// Dispatching form of the valued axpy.
+#[inline]
+pub fn axpy_vals(idx: &[u32], vals: &[f32], alpha: f32, w: &mut [f32]) {
+    if scalar_forced() {
+        axpy_vals_scalar(idx, vals, alpha, w)
+    } else {
+        axpy_vals_unrolled(idx, vals, alpha, w)
+    }
+}
+
+/// `Σ v_j²` — serial reference chain.
+pub fn sum_sq_scalar(vals: &[f32]) -> f32 {
+    vals.iter().map(|v| v * v).sum()
+}
+
+/// `Σ v_j²`, [`LANES`]-wide.
+pub fn sum_sq_unrolled(vals: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut chunks = vals.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for l in 0..LANES {
+            acc[l] += c[l] * c[l];
+        }
+    }
+    for (l, &v) in chunks.remainder().iter().enumerate() {
+        acc[l] += v * v;
+    }
+    reduce(acc)
+}
+
+/// Dispatching form of the squared-norm sum.
+#[inline]
+pub fn sum_sq(vals: &[f32]) -> f32 {
+    if scalar_forced() {
+        sum_sq_scalar(vals)
+    } else {
+        sum_sq_unrolled(vals)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// code-slice dot (classify / serve margin path: codes already unpacked)
+
+/// `Σ w[(j << b) | code_j]` over an unpacked code row — the classify and
+/// serve-scorer margin kernel ([`crate::encode::encoder`]'s
+/// `packed_margin`).  Lane structure matches [`dot_idx_unrolled`] exactly
+/// (lane `l` takes `j ≡ l (mod LANES)`), so for the same row this is
+/// bitwise-equal to decoding indices first and calling `dot_idx`.
+pub fn dot_codes(b: u32, codes: &[u16], w: &[f32]) -> f32 {
+    if scalar_forced() {
+        return dot_codes_scalar(b, codes, w);
+    }
+    let mut acc = [0.0f32; LANES];
+    let mut chunks = codes.chunks_exact(LANES);
+    let mut base = 0usize;
+    for c in chunks.by_ref() {
+        for l in 0..LANES {
+            acc[l] += w[((base + l) << b) + c[l] as usize];
+        }
+        base += LANES;
+    }
+    for (l, &code) in chunks.remainder().iter().enumerate() {
+        acc[l] += w[((base + l) << b) + code as usize];
+    }
+    reduce(acc)
+}
+
+/// Serial reference chain for [`dot_codes`].
+pub fn dot_codes_scalar(b: u32, codes: &[u16], w: &[f32]) -> f32 {
+    codes
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| w[(j << b) + c as usize])
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// packed-row entry points (FeatureMatrix / generic consumers)
+
+thread_local! {
+    /// Per-thread row-index scratch for the stateless packed entry points
+    /// below.  Deliberately *not* a decoded-row cache: scratch
+    /// `PackedCodes` buffers get refilled in place during replay, so any
+    /// cross-call keying on (pointer, row) could serve stale rows.  Loops
+    /// that want decode reuse + one-row-ahead prefetch own a [`RowGather`].
+    static ROW_IDX: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn with_row_indices<R>(codes: &PackedCodes, i: usize, f: impl FnOnce(&[u32]) -> R) -> R {
+    ROW_IDX.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        buf.resize(codes.k, 0);
+        if scalar_forced() {
+            codes.row_indices_scalar_into(i, &mut buf);
+        } else {
+            codes.row_indices_into(i, &mut buf);
+        }
+        f(&buf)
+    })
+}
+
+/// Margin accumulation for one packed row: decode (thread-local scratch)
+/// then [`dot_idx`].
+pub fn packed_dot(codes: &PackedCodes, i: usize, w: &[f32]) -> f32 {
+    with_row_indices(codes, i, |idx| dot_idx(idx, w))
+}
+
+/// Gradient scatter for one packed row: decode then [`axpy_idx`].
+pub fn packed_axpy(codes: &PackedCodes, i: usize, alpha: f32, w: &mut [f32]) {
+    with_row_indices(codes, i, |idx| axpy_idx(idx, alpha, w))
+}
+
+/// Decode row `i` and prefetch the weight lines it will gather —
+/// `FeatureMatrix::prefetch_row` for packed data.  No-op when scalar
+/// kernels are forced (the reference path must not change cache behavior).
+pub fn packed_prefetch(codes: &PackedCodes, i: usize, w: &[f32]) {
+    if scalar_forced() {
+        return;
+    }
+    with_row_indices(codes, i, |idx| prefetch_weights(w, idx));
+}
+
+// ---------------------------------------------------------------------------
+// RowGather: the decode-once / prefetch-one-row-ahead loop idiom
+
+/// Double-buffered row decoder for the SGD/DCD/eval inner loops.
+///
+/// The loop idiom (`n` rows against weights `w`):
+///
+/// ```ignore
+/// let mut g = RowGather::new(codes.k);
+/// g.begin(codes, 0);
+/// for i in 0..n {
+///     if i + 1 < n { g.stage(codes, i + 1, &w); }   // decode + prefetch ahead
+///     let m = kernels::dot_idx(g.indices(), &w);     // compute on current row
+///     // ... axpy on g.indices() ...
+///     if i + 1 < n { g.advance(codes, i + 1); }      // staged row becomes current
+/// }
+/// ```
+///
+/// `stage` decodes the next row into the back buffer and prefetches the
+/// weight lines it will touch, so the gather for row i+1 is in flight
+/// while row i computes.  The struct is stateless across loops — `begin`
+/// re-decodes unconditionally, and `advance` re-decodes if the requested
+/// row is not the staged one — so refilled scratch buffers can never leak
+/// a stale row (the failure mode that rules out cross-call caching).
+pub struct RowGather {
+    cur: Vec<u32>,
+    next: Vec<u32>,
+    staged_row: Option<usize>,
+}
+
+impl RowGather {
+    pub fn new(k: usize) -> Self {
+        RowGather { cur: vec![0; k], next: vec![0; k], staged_row: None }
+    }
+
+    fn decode(codes: &PackedCodes, row: usize, out: &mut Vec<u32>) {
+        out.resize(codes.k, 0);
+        if scalar_forced() {
+            codes.row_indices_scalar_into(row, out);
+        } else {
+            codes.row_indices_into(row, out);
+        }
+    }
+
+    /// Decode `row` as the current row (start of a loop).
+    pub fn begin(&mut self, codes: &PackedCodes, row: usize) {
+        Self::decode(codes, row, &mut self.cur);
+        self.staged_row = None;
+    }
+
+    /// Decode `row` into the back buffer and prefetch the weight lines it
+    /// gathers.  Skipped entirely under forced-scalar mode (the reference
+    /// path decodes per-row in [`advance`], matching pre-PR-6 behavior).
+    pub fn stage(&mut self, codes: &PackedCodes, row: usize, w: &[f32]) {
+        if scalar_forced() {
+            return;
+        }
+        Self::decode(codes, row, &mut self.next);
+        prefetch_weights(w, &self.next);
+        self.staged_row = Some(row);
+    }
+
+    /// Gather indices of the current row.
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        &self.cur
+    }
+
+    /// Make `row` current: swap in the staged buffer when it holds exactly
+    /// this row, else decode fresh.  Must be called with the same `codes`
+    /// the row was staged from.
+    pub fn advance(&mut self, codes: &PackedCodes, row: usize) {
+        if self.staged_row == Some(row) {
+            std::mem::swap(&mut self.cur, &mut self.next);
+        } else {
+            Self::decode(codes, row, &mut self.cur);
+        }
+        self.staged_row = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn packed(b: u32, k: usize, n: usize, seed: u64) -> PackedCodes {
+        let mut rng = Rng::new(seed);
+        let mut pc = PackedCodes::new(b, k);
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| rng.below(1 << b) as u16).collect();
+            pc.push_row(&row).unwrap();
+        }
+        pc
+    }
+
+    fn weights(dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..dim).map(|_| rng.f32() - 0.5).collect()
+    }
+
+    #[test]
+    fn axpy_unrolled_is_bit_identical_to_scalar() {
+        for k in [1usize, 3, 7, 8, 9, 16, 37, 200] {
+            let pc = packed(8, k, 5, 0xA11 + k as u64);
+            let dim = k << 8;
+            let mut idx = vec![0u32; k];
+            for i in 0..pc.n {
+                pc.row_indices_into(i, &mut idx);
+                let mut w1 = weights(dim, 7);
+                let mut w2 = w1.clone();
+                axpy_idx_scalar(&idx, 0.37, &mut w1);
+                axpy_idx_unrolled(&idx, 0.37, &mut w2);
+                assert_eq!(w1, w2, "k={k} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_matches_f64_reference_within_tolerance() {
+        for k in [1usize, 3, 8, 13, 200] {
+            let pc = packed(4, k, 5, 0xD07 + k as u64);
+            let dim = k << 4;
+            let w = weights(dim, 13);
+            let mut idx = vec![0u32; k];
+            for i in 0..pc.n {
+                pc.row_indices_into(i, &mut idx);
+                let exact: f64 = idx.iter().map(|&t| w[t as usize] as f64).sum();
+                let sum_abs: f64 =
+                    idx.iter().map(|&t| (w[t as usize] as f64).abs()).sum();
+                let tol = 4.0 * k as f64 * f32::EPSILON as f64 * sum_abs + 1e-12;
+                for got in [dot_idx_scalar(&idx, &w), dot_idx_unrolled(&idx, &w)] {
+                    assert!(
+                        (got as f64 - exact).abs() <= tol,
+                        "k={k} row {i}: {got} vs {exact} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_codes_matches_decoded_dot_idx_bitwise() {
+        for b in [1u32, 5, 8, 16] {
+            let k = 21;
+            let pc = packed(b, k, 4, 0xC0DE + b as u64);
+            let w = weights(k << b, 23);
+            let mut idx = vec![0u32; k];
+            let mut codes = vec![0u16; k];
+            for i in 0..pc.n {
+                pc.row_indices_into(i, &mut idx);
+                pc.row_into(i, &mut codes);
+                assert_eq!(
+                    dot_codes(b, &codes, &w).to_bits(),
+                    dot_idx_unrolled(&idx, &w).to_bits(),
+                    "b={b} row {i}"
+                );
+                assert_eq!(
+                    dot_codes_scalar(b, &codes, &w).to_bits(),
+                    dot_idx_scalar(&idx, &w).to_bits(),
+                    "b={b} row {i} (scalar)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn valued_kernels_parity() {
+        let mut rng = Rng::new(0x7A1);
+        for len in [1usize, 2, 7, 8, 15, 64, 100] {
+            let idx: Vec<u32> = {
+                let mut v: Vec<u32> = (0..len as u32).map(|j| j * 3 + 1).collect();
+                v.reverse(); // order must not matter for correctness
+                v
+            };
+            let vals: Vec<f32> =
+                (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let dim = (3 * len + 2).max(4);
+            let w = weights(dim, 0x9E3 + len as u64);
+            // axpy exact
+            let mut w1 = w.clone();
+            let mut w2 = w.clone();
+            axpy_vals_scalar(&idx, &vals, -0.83, &mut w1);
+            axpy_vals_unrolled(&idx, &vals, -0.83, &mut w2);
+            assert_eq!(w1, w2, "len={len}");
+            // dot / sum_sq within f64-reference tolerance
+            let exact: f64 = idx
+                .iter()
+                .zip(&vals)
+                .map(|(&t, &v)| w[t as usize] as f64 * v as f64)
+                .sum();
+            let scale: f64 = idx
+                .iter()
+                .zip(&vals)
+                .map(|(&t, &v)| (w[t as usize] as f64 * v as f64).abs())
+                .sum();
+            let tol = 4.0 * len as f64 * f32::EPSILON as f64 * scale + 1e-12;
+            for got in [dot_vals_scalar(&idx, &vals, &w), dot_vals_unrolled(&idx, &vals, &w)] {
+                assert!((got as f64 - exact).abs() <= tol, "len={len}: {got} vs {exact}");
+            }
+            let nsq: f64 = vals.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let ntol = 4.0 * len as f64 * f32::EPSILON as f64 * nsq + 1e-12;
+            for got in [sum_sq_scalar(&vals), sum_sq_unrolled(&vals)] {
+                assert!((got as f64 - nsq).abs() <= ntol, "len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_gather_idiom_tracks_rows_and_survives_refill() {
+        let pc = packed(7, 13, 6, 0x6A7);
+        let w = weights(13 << 7, 3);
+        let mut g = RowGather::new(pc.k);
+        let mut want = vec![0u32; pc.k];
+        g.begin(&pc, 0);
+        for i in 0..pc.n {
+            if i + 1 < pc.n {
+                g.stage(&pc, i + 1, &w);
+            }
+            pc.row_indices_scalar_into(i, &mut want);
+            assert_eq!(g.indices(), &want[..], "row {i}");
+            if i + 1 < pc.n {
+                g.advance(&pc, i + 1);
+            }
+        }
+        // advance to an unstaged row must decode fresh, not reuse a buffer
+        g.begin(&pc, 0);
+        g.stage(&pc, 1, &w);
+        g.advance(&pc, 4);
+        pc.row_indices_scalar_into(4, &mut want);
+        assert_eq!(g.indices(), &want[..]);
+    }
+
+    #[test]
+    fn packed_entry_points_match_direct_kernels() {
+        let pc = packed(6, 29, 4, 0xEE);
+        let w = weights(29 << 6, 77);
+        let mut idx = vec![0u32; pc.k];
+        for i in 0..pc.n {
+            pc.row_indices_into(i, &mut idx);
+            assert_eq!(packed_dot(&pc, i, &w).to_bits(), dot_idx(&idx, &w).to_bits());
+            let mut w1 = w.clone();
+            let mut w2 = w.clone();
+            packed_axpy(&pc, i, 0.5, &mut w1);
+            axpy_idx(&idx, 0.5, &mut w2);
+            assert_eq!(w1, w2);
+            packed_prefetch(&pc, i, &w); // hint-only: must not panic
+        }
+    }
+}

@@ -24,6 +24,7 @@
 //! | [`data`] | LibSVM streaming IO (zero-copy byte-block parser + legacy line reader), rcv1-like generator, feature expansion |
 //! | [`hashing`] | minwise / b-bit / VW / RP / OPH substrates (register-blocked 4-wide minwise kernel) + estimator variance theory |
 //! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache (v3: chunk-index footer for parallel replay + optional RLE record compression) |
+//! | [`kernels`] | the train/score inner loops: whole-row b-bit decode, 8-wide unrolled dot/axpy, weight prefetch, scalar reference twins |
 //! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec`; cache eval/holdout/SGD all replay across threads |
 //! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink; raw input is carved into byte blocks and *parsed in the workers*, so ingest scales with `--workers`), parallel cache-replay reader pool, + scheduler |
 //! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control and a load generator (the paper's "used in industry / search" request path) |
@@ -67,6 +68,22 @@
 //!    micro-batched HTTP scoring endpoint ([`serve`]) — and because the
 //!    registry hot-reloads the model file, the cache→train loop retrains
 //!    into production without a restart.
+//!
+//! ## Performance (where cycles go, and how it's tracked)
+//!
+//! With ingest and replay parallelized (PRs 4–5), train/score time lives
+//! in the per-row gather/scatter against the weight vector.  The
+//! [`kernels`] module documents that hot path — whole-row decode, 8-wide
+//! unrolled accumulators, one-row-ahead weight prefetch — including which
+//! kernels are bit-exact vs tolerance-bounded against their scalar
+//! reference twins.  The standing benchmark matrix
+//! (`cargo bench --bench bench_pipeline -- matrix`) measures
+//! train-no-cache / train-from-cache / predict / serve (runtime, rows/s,
+//! peak RSS, and the scalar-vs-unrolled `kernel_speedup`) into
+//! `BENCH_matrix.json`; CI gates every bench artifact against the
+//! committed baselines in `benches/baselines/` via
+//! `scripts/bench_gate.sh` and appends history with
+//! `scripts/bench_trend.sh`.
 
 pub mod config;
 pub mod coordinator;
@@ -75,6 +92,7 @@ pub mod encode;
 pub mod error;
 pub mod experiments;
 pub mod hashing;
+pub mod kernels;
 pub mod metrics;
 pub mod report;
 pub mod runtime;

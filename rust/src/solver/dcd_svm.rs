@@ -93,6 +93,11 @@ pub fn train_svm<F: FeatureMatrix>(data: &F, cfg: &SvmConfig) -> (LinearModel, T
         let mut s = 0usize;
         while s < active {
             let i = order[s];
+            if s + 1 < active {
+                // one-row-ahead weight prefetch; a later shrink may swap
+                // order[s+1] away, which just makes this a wasted hint
+                data.prefetch_row(order[s + 1], &w);
+            }
             let yi = data.label(i) as f64;
             let g = yi * data.dot(i, &w) as f64 - 1.0 + d_diag * alpha[i];
             // projected gradient (+ the shrink test at the bounds)

@@ -3,32 +3,17 @@
 
 use crate::data::dataset::SparseDataset;
 use crate::encode::expansion::BbitDataset;
-use crate::encode::packed::PackedCodes;
+use crate::kernels;
 
-/// xᵢ·w over one packed code row in the implicit 2^b×k expansion (column
-/// j of code c lives at `(j << b) + c`).  The [`FeatureMatrix`] impl for
-/// [`BbitDataset`] and the solver replay paths (which score borrowed
-/// scratch buffers without a dataset wrapper) both call this, so their
-/// f32 accumulation order is structurally identical — the bit-for-bit
-/// replay-parity tests depend on that.
-#[inline]
-pub(crate) fn packed_dot(codes: &PackedCodes, i: usize, w: &[f32]) -> f32 {
-    let b = codes.b as usize;
-    let mut acc = 0.0;
-    for j in 0..codes.k {
-        acc += w[(j << b) + codes.get(i, j) as usize];
-    }
-    acc
-}
-
-/// w += alpha·xᵢ over one packed code row (update twin of [`packed_dot`]).
-#[inline]
-pub(crate) fn packed_axpy(codes: &PackedCodes, i: usize, alpha: f32, w: &mut [f32]) {
-    let b = codes.b as usize;
-    for j in 0..codes.k {
-        w[(j << b) + codes.get(i, j) as usize] += alpha;
-    }
-}
+/// xᵢ·w / w += alpha·xᵢ over one packed code row in the implicit 2^b×k
+/// expansion (column j of code c lives at `(j << b) + c`).  Both the
+/// [`FeatureMatrix`] impl for [`BbitDataset`] and the solver replay paths
+/// (which score borrowed scratch buffers without a dataset wrapper) route
+/// through [`crate::kernels`], so their f32 accumulation order is
+/// structurally identical — the bit-for-bit replay-parity tests depend on
+/// that.  Since PR 6 the shared kernel is the unrolled multi-accumulator
+/// form (scalar reference twin selectable, see the kernels module docs).
+pub(crate) use crate::kernels::{packed_axpy, packed_dot};
 
 /// Row-access abstraction all solvers train against.
 ///
@@ -46,6 +31,12 @@ pub trait FeatureMatrix: Sync {
     fn axpy(&self, i: usize, alpha: f32, w: &mut [f32]);
     /// ‖xᵢ‖²
     fn norm_sq(&self, i: usize) -> f32;
+    /// Hint that row `i` is about to be dotted against / scattered into
+    /// `w`: implementations prefetch the weight cache lines that row
+    /// gathers.  Purely a performance hint — correctness-neutral, and a
+    /// no-op by default (and under forced-scalar kernel mode).
+    #[inline]
+    fn prefetch_row(&self, _i: usize, _w: &[f32]) {}
 }
 
 impl FeatureMatrix for SparseDataset {
@@ -62,16 +53,17 @@ impl FeatureMatrix for SparseDataset {
         self.labels[i] as f32
     }
 
+    // dot / axpy / norm_sq all route through crate::kernels, so the
+    // VW/RP valued rows follow one accumulation convention (the unrolled
+    // lane kernels, or their scalar twins under forced-scalar mode) —
+    // pre-PR-6 these mixed iterator `sum` and explicit loops.
+
     #[inline]
     fn dot(&self, i: usize, w: &[f32]) -> f32 {
         let (idx, vals) = self.row(i);
         match vals {
-            None => idx.iter().map(|&t| w[t as usize]).sum(),
-            Some(vs) => idx
-                .iter()
-                .zip(vs)
-                .map(|(&t, &v)| w[t as usize] * v)
-                .sum(),
+            None => kernels::dot_idx(idx, w),
+            Some(vs) => kernels::dot_vals(idx, vs, w),
         }
     }
 
@@ -79,16 +71,8 @@ impl FeatureMatrix for SparseDataset {
     fn axpy(&self, i: usize, alpha: f32, w: &mut [f32]) {
         let (idx, vals) = self.row(i);
         match vals {
-            None => {
-                for &t in idx {
-                    w[t as usize] += alpha;
-                }
-            }
-            Some(vs) => {
-                for (&t, &v) in idx.iter().zip(vs) {
-                    w[t as usize] += alpha * v;
-                }
-            }
+            None => kernels::axpy_idx(idx, alpha, w),
+            Some(vs) => kernels::axpy_vals(idx, vs, alpha, w),
         }
     }
 
@@ -97,8 +81,14 @@ impl FeatureMatrix for SparseDataset {
         let (idx, vals) = self.row(i);
         match vals {
             None => idx.len() as f32,
-            Some(vs) => vs.iter().map(|v| v * v).sum(),
+            Some(vs) => kernels::sum_sq(vs),
         }
+    }
+
+    #[inline]
+    fn prefetch_row(&self, i: usize, w: &[f32]) {
+        // CSR rows already hold gather indices — prefetch them directly
+        kernels::prefetch_weights(w, self.row(i).0);
     }
 }
 
@@ -131,6 +121,11 @@ impl FeatureMatrix for BbitDataset {
         // exactly k ones per expanded row (Section 3)
         self.codes.k as f32
     }
+
+    #[inline]
+    fn prefetch_row(&self, i: usize, w: &[f32]) {
+        kernels::packed_prefetch(&self.codes, i, w);
+    }
 }
 
 /// A trained linear model.
@@ -159,13 +154,20 @@ impl LinearModel {
 
 /// Classification accuracy of `model` on `data`.
 pub fn accuracy<F: FeatureMatrix>(model: &LinearModel, data: &F) -> f64 {
-    if data.n() == 0 {
+    let n = data.n();
+    if n == 0 {
         return 0.0;
     }
-    let correct = (0..data.n())
-        .filter(|&i| model.predict(data, i) as f32 == data.label(i))
-        .count();
-    correct as f64 / data.n() as f64
+    let mut correct = 0usize;
+    for i in 0..n {
+        if i + 1 < n {
+            data.prefetch_row(i + 1, &model.w);
+        }
+        if model.predict(data, i) as f32 == data.label(i) {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
 }
 
 /// Common training telemetry every solver reports.

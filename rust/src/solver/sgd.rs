@@ -20,7 +20,8 @@ use crate::coordinator::sharding::ShardPlan;
 use crate::encode::cache::{CacheReader, ChunkIndex, IndexedCacheReader};
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
-use crate::solver::linear::{packed_axpy, packed_dot, FeatureMatrix, LinearModel, TrainStats};
+use crate::kernels::{self, RowGather};
+use crate::solver::linear::{packed_dot, FeatureMatrix, LinearModel, TrainStats};
 use crate::solver::model_io::SavedModel;
 use crate::{Error, Result};
 
@@ -102,6 +103,9 @@ pub fn train_sgd<F: FeatureMatrix>(data: &F, cfg: &SgdConfig) -> (LinearModel, T
             // computed against the pre-update w, matching the artifact)
             coefs.clear();
             for i in i0..i0 + bsz {
+                if i + 1 < i0 + bsz {
+                    data.prefetch_row(i + 1, &w);
+                }
                 let m = data.dot(i, &w);
                 coefs.push(cfg.loss.grad_coef(m, data.label(i)));
             }
@@ -112,6 +116,9 @@ pub fn train_sgd<F: FeatureMatrix>(data: &F, cfg: &SgdConfig) -> (LinearModel, T
             }
             let scale = (lr / bsz as f64) as f32;
             for (off, i) in (i0..i0 + bsz).enumerate() {
+                if i + 1 < i0 + bsz {
+                    data.prefetch_row(i + 1, &w);
+                }
                 let g = coefs[off];
                 if g != 0.0 {
                     data.axpy(i, -scale * g, &mut w);
@@ -161,6 +168,9 @@ pub struct SgdStream {
     /// Partial minibatch (always < cfg.batch rows between calls).
     buf: BbitDataset,
     row_scratch: Vec<u16>,
+    /// Double-buffered row decode + one-row-ahead weight prefetch for the
+    /// minibatch inner loops (see [`crate::kernels::RowGather`]).
+    gather: RowGather,
     coefs: Vec<f32>,
     rows_seen: u64,
     epochs_done: usize,
@@ -180,6 +190,7 @@ impl SgdStream {
             step: 0,
             buf: BbitDataset::new(PackedCodes::new(b, k), Vec::new()),
             row_scratch: vec![0u16; k],
+            gather: RowGather::new(k),
             coefs: Vec::new(),
             rows_seen: 0,
             epochs_done: 0,
@@ -242,6 +253,7 @@ impl SgdStream {
                 &mut self.rows_seen,
                 &mut self.loss_sum,
                 &mut self.coefs,
+                &mut self.gather,
                 codes,
                 labels,
             );
@@ -273,6 +285,7 @@ impl SgdStream {
             &mut self.rows_seen,
             &mut self.loss_sum,
             &mut self.coefs,
+            &mut self.gather,
             &self.buf.codes,
             &self.buf.labels,
         );
@@ -282,7 +295,9 @@ impl SgdStream {
 
     /// One `train_sgd` minibatch step over all rows of a packed chunk (an
     /// associated fn taking fields explicitly so callers can pass either
-    /// the internal buffer or a borrowed whole chunk).
+    /// the internal buffer or a borrowed whole chunk).  Rows are decoded
+    /// once per loop through `gather`, which also prefetches the next
+    /// row's weight lines while the current row computes.
     #[allow(clippy::too_many_arguments)]
     fn minibatch_step(
         cfg: &SgdConfig,
@@ -291,6 +306,7 @@ impl SgdStream {
         rows_seen: &mut u64,
         loss_sum: &mut f64,
         coefs: &mut Vec<f32>,
+        gather: &mut RowGather,
         codes: &PackedCodes,
         labels: &[i8],
     ) {
@@ -300,20 +316,34 @@ impl SgdStream {
         }
         let lr = cfg.lr0 / (1.0 + *step as f64 * cfg.lambda * cfg.lr0);
         coefs.clear();
+        gather.begin(codes, 0);
         for i in 0..bsz {
-            let m = packed_dot(codes, i, w);
+            if i + 1 < bsz {
+                gather.stage(codes, i + 1, w);
+            }
+            let m = kernels::dot_idx(gather.indices(), w);
             let y = labels[i] as f32;
             coefs.push(cfg.loss.grad_coef(m, y));
             *loss_sum += cfg.loss.loss(m as f64, y as f64);
+            if i + 1 < bsz {
+                gather.advance(codes, i + 1);
+            }
         }
         let decay = (1.0 - lr * cfg.lambda) as f32;
         if decay != 1.0 {
             w.iter_mut().for_each(|x| *x *= decay);
         }
         let scale = (lr / bsz as f64) as f32;
+        gather.begin(codes, 0);
         for (i, &g) in coefs.iter().enumerate() {
+            if i + 1 < bsz {
+                gather.stage(codes, i + 1, w);
+            }
             if g != 0.0 {
-                packed_axpy(codes, i, -scale * g, w);
+                kernels::axpy_idx(gather.indices(), -scale * g, w);
+            }
+            if i + 1 < bsz {
+                gather.advance(codes, i + 1);
             }
         }
         *step += 1;
@@ -636,6 +666,9 @@ pub fn train_from_cache_holdout_threads<P: AsRef<Path>>(
         for i in 0..codes.n {
             if holdout_row(row0 + i as u64, salt, frac) {
                 held += 1;
+                // sparse membership makes row i+1 rarely the next scored
+                // row, so this path keeps the stateless per-row kernel
+                // (thread-local decode scratch, no lookahead prefetch)
                 let m = packed_dot(codes, i, &model.w);
                 let y = labels[i];
                 loss_sum += cfg.loss.loss(m as f64, y as f64);
@@ -666,15 +699,34 @@ pub struct CacheEval {
 
 /// (rows, correct, loss sum) of one record under `w` — the per-record
 /// partial both eval paths fold in record order, so sequential and pooled
-/// evaluation produce bit-identical sums.
-fn eval_record(codes: &PackedCodes, labels: &[i8], w: &[f32], loss: SgdLoss) -> (u64, u64, f64) {
+/// evaluation produce bit-identical sums.  `gather` decodes each row once
+/// and prefetches one row ahead; results don't depend on it (every margin
+/// is the same [`kernels::dot_idx`] over the same decoded indices), so
+/// thread-count invariance is untouched.
+fn eval_record(
+    codes: &PackedCodes,
+    labels: &[i8],
+    w: &[f32],
+    loss: SgdLoss,
+    gather: &mut RowGather,
+) -> (u64, u64, f64) {
     let (mut correct, mut loss_sum) = (0u64, 0.0f64);
+    if codes.n == 0 {
+        return (0, 0, 0.0);
+    }
+    gather.begin(codes, 0);
     for i in 0..codes.n {
-        let m = packed_dot(codes, i, w);
+        if i + 1 < codes.n {
+            gather.stage(codes, i + 1, w);
+        }
+        let m = kernels::dot_idx(gather.indices(), w);
         let y = labels[i];
         loss_sum += loss.loss(m as f64, y as f64);
         if (m >= 0.0) == (y > 0) {
             correct += 1;
+        }
+        if i + 1 < codes.n {
+            gather.advance(codes, i + 1);
         }
     }
     (codes.n as u64, correct, loss_sum)
@@ -765,6 +817,7 @@ pub fn eval_from_cache_threads<P: AsRef<Path>>(
                             let mut reader = IndexedCacheReader::open(path)?;
                             let mut codes = PackedCodes::new(b, k);
                             let mut labels: Vec<i8> = Vec::new();
+                            let mut gather = RowGather::new(k);
                             for (off, rec) in (a.row0..a.row0 + a.rows).enumerate() {
                                 reader.read_into(
                                     &entries[rec],
@@ -772,7 +825,8 @@ pub fn eval_from_cache_threads<P: AsRef<Path>>(
                                     &mut codes,
                                     &mut labels,
                                 )?;
-                                shard[off] = eval_record(&codes, &labels, w, loss);
+                                shard[off] =
+                                    eval_record(&codes, &labels, w, loss, &mut gather);
                             }
                             Ok(())
                         }));
@@ -798,10 +852,11 @@ pub fn eval_from_cache_threads<P: AsRef<Path>>(
     let mut reader = CacheReader::open(path)?;
     let mut codes = PackedCodes::new(b, k);
     let mut labels: Vec<i8> = Vec::new();
+    let mut gather = RowGather::new(k);
     let (mut rows, mut correct) = (0u64, 0u64);
     let mut loss_sum = 0.0f64;
     while reader.next_chunk_into(&mut codes, &mut labels)? {
-        let (r, c, l) = eval_record(&codes, &labels, w, loss);
+        let (r, c, l) = eval_record(&codes, &labels, w, loss, &mut gather);
         rows += r;
         correct += c;
         loss_sum += l;

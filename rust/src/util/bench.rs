@@ -151,6 +151,28 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Peak resident set size of this process in bytes (VmHWM from
+/// `/proc/self/status`), or 0 where that interface doesn't exist.  A
+/// monotonic high-water mark: scenario snapshots taken later in a bench
+/// process can only grow, so per-scenario values are upper bounds.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +187,15 @@ mod tests {
         let m = b.bench("noop-ish", || 1 + 1).clone();
         assert!(m.mean_ns() > 0.0);
         assert_eq!(m.ns_per_iter.len(), 3);
+    }
+
+    #[test]
+    fn peak_rss_is_sane() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            // a running test binary has certainly touched > 1 MiB
+            assert!(rss > 1 << 20, "VmHWM parsed as {rss}");
+        }
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Acceptance tests for the unrolled train/score kernels (ISSUE 6).
+//!
+//! The contract (`kernels` module docs, "Exact vs tolerance-bounded"):
+//!
+//! - row decode and axpy are **bit-identical** to their scalar references
+//!   for every `b` ∈ 1..=16 and awkward `k` (word-straddling codes,
+//!   non-multiple-of-LANES lengths, padding tails);
+//! - dot products are **tolerance-bounded** against an f64 reference
+//!   (the 8-accumulator reduction reassociates the f32 sum);
+//! - `dot_codes` (the classify/serve margin kernel) is **bitwise equal**
+//!   to decode-then-`dot_idx` — one margin definition across train and
+//!   serve;
+//! - the codec's word-wise run scanner produces **byte-identical**
+//!   compressed streams to a byte-wise reference encoder;
+//! - end-to-end: replay training and evaluation stay **bit-for-bit
+//!   deterministic across reader-pool thread counts** with the unrolled
+//!   kernels in the loop.
+//!
+//! None of these tests touch `kernels::force_scalar` — that global is for
+//! single-threaded bench A/Bs, and the test harness runs tests in parallel
+//! threads.  Scalar/unrolled variants are called directly instead; CI
+//! additionally runs this whole suite under `--cfg bbmh_force_scalar`.
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::sink::CacheSink;
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::SparseDataset;
+use bbit_mh::encode::codec;
+use bbit_mh::encode::packed::PackedCodes;
+use bbit_mh::encode::EncoderSpec;
+use bbit_mh::kernels;
+use bbit_mh::solver::{
+    eval_from_cache_threads, train_from_cache_holdout_threads, SavedModel, SgdConfig, SgdLoss,
+};
+use bbit_mh::util::Rng;
+
+/// Awkward row lengths: 1, sub-lane, lane-exact, lane+1, primes, the
+/// paper's k=200, and a word-boundary-heavy 64.
+const AWKWARD_K: [usize; 10] = [1, 2, 3, 5, 8, 13, 21, 37, 64, 200];
+
+fn packed(b: u32, k: usize, n: usize, seed: u64) -> PackedCodes {
+    let mut rng = Rng::new(seed);
+    let mut pc = PackedCodes::new(b, k);
+    for _ in 0..n {
+        let row: Vec<u16> = (0..k).map(|_| rng.below(1u64 << b) as u16).collect();
+        pc.push_row(&row).unwrap();
+    }
+    pc
+}
+
+fn weights(dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..dim).map(|_| rng.f32() - 0.5).collect()
+}
+
+// ---------------------------------------------------------------------------
+// decode parity: every b × awkward k, fast vs scalar vs per-element get
+
+#[test]
+fn row_decode_is_bit_identical_for_every_b_and_awkward_k() {
+    for b in 1u32..=16 {
+        for &k in &AWKWARD_K {
+            let pc = packed(b, k, 4, 0xDEC0 + (b as u64) * 131 + k as u64);
+            let mut fast = vec![0u32; k];
+            let mut scalar = vec![0u32; k];
+            for i in 0..pc.n {
+                pc.row_indices_into(i, &mut fast);
+                pc.row_indices_scalar_into(i, &mut scalar);
+                assert_eq!(fast, scalar, "b={b} k={k} row {i}");
+                for (j, &t) in fast.iter().enumerate() {
+                    assert_eq!(
+                        t,
+                        ((j as u32) << b) | pc.get(i, j) as u32,
+                        "b={b} k={k} row {i} col {j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// axpy exact / dot tolerance-bounded
+
+#[test]
+fn axpy_is_bit_identical_across_kernels() {
+    for b in [1u32, 3, 8, 16] {
+        for &k in &AWKWARD_K {
+            let pc = packed(b, k, 3, 0xABE ^ ((b as u64) << 8) ^ k as u64);
+            let dim = k << b;
+            let mut idx = vec![0u32; k];
+            for i in 0..pc.n {
+                pc.row_indices_into(i, &mut idx);
+                let mut ws = weights(dim, 5);
+                let mut wu = ws.clone();
+                kernels::axpy_idx_scalar(&idx, -0.731, &mut ws);
+                kernels::axpy_idx_unrolled(&idx, -0.731, &mut wu);
+                assert_eq!(ws, wu, "b={b} k={k} row {i}");
+            }
+        }
+    }
+}
+
+/// Documented dot tolerance: the unrolled reduction reassociates the f32
+/// sum, so both variants are held to the same f64-reference band
+/// (4·k·ε_f32·Σ|terms|) rather than to each other bitwise.
+#[test]
+fn dot_is_within_documented_tolerance_of_f64_reference() {
+    for b in [2u32, 8, 16] {
+        for &k in &AWKWARD_K {
+            let pc = packed(b, k, 3, 0xD0 ^ ((b as u64) << 16) ^ k as u64);
+            let w = weights(k << b, 29);
+            let mut idx = vec![0u32; k];
+            for i in 0..pc.n {
+                pc.row_indices_into(i, &mut idx);
+                let exact: f64 = idx.iter().map(|&t| w[t as usize] as f64).sum();
+                let scale: f64 = idx.iter().map(|&t| (w[t as usize] as f64).abs()).sum();
+                let tol = 4.0 * k as f64 * f32::EPSILON as f64 * scale + 1e-12;
+                for got in
+                    [kernels::dot_idx_scalar(&idx, &w), kernels::dot_idx_unrolled(&idx, &w)]
+                {
+                    assert!(
+                        (got as f64 - exact).abs() <= tol,
+                        "b={b} k={k} row {i}: {got} vs {exact} (tol {tol:e})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_codes_is_bitwise_the_decoded_dot() {
+    for b in [1u32, 4, 7, 8, 16] {
+        for &k in &[5usize, 8, 200] {
+            let pc = packed(b, k, 3, 0x5E ^ (b as u64) << 20 ^ k as u64);
+            let w = weights(k << b, 41);
+            let mut idx = vec![0u32; k];
+            let mut codes = vec![0u16; k];
+            for i in 0..pc.n {
+                pc.row_indices_into(i, &mut idx);
+                pc.row_into(i, &mut codes);
+                assert_eq!(
+                    kernels::dot_codes(b, &codes, &w).to_bits(),
+                    kernels::dot_idx_unrolled(&idx, &w).to_bits(),
+                    "b={b} k={k} row {i}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// valued (VW/RP CSR) kernels
+
+#[test]
+fn valued_kernels_axpy_exact_and_dot_bounded() {
+    let mut rng = Rng::new(0xCB);
+    for len in [1usize, 4, 8, 9, 31, 100] {
+        let idx: Vec<u32> = (0..len as u32).map(|j| j * 5 + 2).collect();
+        let vals: Vec<f32> = (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let dim = 5 * len + 3;
+        let w = weights(dim, 0xB0 + len as u64);
+        let mut ws = w.clone();
+        let mut wu = w.clone();
+        kernels::axpy_vals_scalar(&idx, &vals, 1.19, &mut ws);
+        kernels::axpy_vals_unrolled(&idx, &vals, 1.19, &mut wu);
+        assert_eq!(ws, wu, "len={len}");
+
+        let exact: f64 =
+            idx.iter().zip(&vals).map(|(&t, &v)| w[t as usize] as f64 * v as f64).sum();
+        let scale: f64 = idx
+            .iter()
+            .zip(&vals)
+            .map(|(&t, &v)| (w[t as usize] as f64 * v as f64).abs())
+            .sum();
+        let tol = 4.0 * len as f64 * f32::EPSILON as f64 * scale + 1e-12;
+        for got in
+            [kernels::dot_vals_scalar(&idx, &vals, &w), kernels::dot_vals_unrolled(&idx, &vals, &w)]
+        {
+            assert!((got as f64 - exact).abs() <= tol, "len={len}: {got} vs {exact}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// codec: word-wise run scan vs a byte-wise reference encoder
+
+/// Byte-wise reimplementation of `codec::compress` (MIN_RUN = 4, maximal
+/// literals, LEB128 `len<<1|is_run` tokens) — the pre-word-scan shape.
+fn compress_reference(src: &[u8]) -> Vec<u8> {
+    fn put_varint(dst: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                dst.push(byte);
+                return;
+            }
+            dst.push(byte | 0x80);
+        }
+    }
+    let mut dst = Vec::new();
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i < src.len() {
+        let mut run = 1usize;
+        while i + run < src.len() && src[i + run] == src[i] {
+            run += 1;
+        }
+        if run >= 4 {
+            if lit_start < i {
+                put_varint(&mut dst, ((i - lit_start) as u64) << 1);
+                dst.extend_from_slice(&src[lit_start..i]);
+            }
+            put_varint(&mut dst, ((run as u64) << 1) | 1);
+            dst.push(src[i]);
+            i += run;
+            lit_start = i;
+        } else {
+            i += run;
+        }
+    }
+    if lit_start < src.len() {
+        put_varint(&mut dst, ((src.len() - lit_start) as u64) << 1);
+        dst.extend_from_slice(&src[lit_start..]);
+    }
+    dst
+}
+
+#[test]
+fn codec_word_scan_is_byte_identical_to_reference_encoder() {
+    let mut rng = Rng::new(0x90DE);
+    let mut payloads: Vec<Vec<u8>> = vec![
+        vec![],
+        vec![9],
+        vec![0; 3],
+        vec![0; 4],
+        vec![0; 4096],
+        (0..=255u8).collect(),
+    ];
+    for n in [7usize, 8, 9, 63, 64, 65, 1023, 4096] {
+        // run-heavy (few distinct bytes → runs straddle word boundaries)
+        payloads.push((0..n).map(|_| rng.below(3) as u8).collect());
+        // incompressible
+        payloads.push((0..n).map(|_| rng.next_u64() as u8).collect());
+        // alternating padding/noise, the packed-cache shape
+        payloads.push(
+            (0..n).map(|i| if (i / 16) % 2 == 0 { 0 } else { rng.next_u64() as u8 }).collect(),
+        );
+    }
+    let mut comp = Vec::new();
+    for (pi, p) in payloads.iter().enumerate() {
+        codec::compress(p, &mut comp);
+        assert_eq!(comp, compress_reference(p), "payload {pi} (len {})", p.len());
+        let mut back = Vec::new();
+        codec::decompress(&comp, &mut back, p.len()).unwrap();
+        assert_eq!(&back, p, "payload {pi}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end determinism: the unrolled kernels keep replay bit-for-bit
+// reproducible across reader-pool thread counts
+
+#[test]
+fn replay_training_and_eval_stay_bitwise_deterministic_across_threads() {
+    let ds: SparseDataset = CorpusGenerator::new(CorpusConfig {
+        n_docs: 500,
+        vocab: 1500,
+        zipf_alpha: 1.05,
+        mean_tokens: 24.0,
+        class_signal: 0.55,
+        pos_fraction: 0.5,
+        seed: 0x51D3,
+    })
+    .generate();
+    let spec = EncoderSpec::Bbit { b: 8, k: 48, d: 1 << 22, seed: 17 };
+    let dir = std::env::temp_dir().join(format!("bbit_simdk_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("c.cache");
+    {
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 53, queue_depth: 2 });
+        let mut sink = CacheSink::create(&path, &spec).unwrap();
+        pipe.run_sink(dataset_chunks(&ds, 53), &spec, &mut sink).unwrap();
+    }
+    let cfg = SgdConfig { loss: SgdLoss::Logistic, lr0: 0.5, lambda: 1e-3, epochs: 3, batch: 64 };
+
+    let (m1, s1, h1) = train_from_cache_holdout_threads(&path, &cfg, 0.2, 11, 1).unwrap();
+    for threads in [2usize, 4] {
+        let (mt, st, ht) = train_from_cache_holdout_threads(&path, &cfg, 0.2, 11, threads).unwrap();
+        assert_eq!(mt.w, m1.w, "threads={threads}: weights must be bit-for-bit");
+        assert_eq!(st.objective.to_bits(), s1.objective.to_bits(), "threads={threads}");
+        assert_eq!(ht.mean_loss.to_bits(), h1.mean_loss.to_bits(), "threads={threads}");
+        assert_eq!(ht.accuracy, h1.accuracy, "threads={threads}");
+    }
+
+    let saved = SavedModel::new(spec, m1).unwrap();
+    let e1 = eval_from_cache_threads(&path, &saved, SgdLoss::Logistic, 1).unwrap();
+    for threads in [2usize, 3, 8] {
+        let et = eval_from_cache_threads(&path, &saved, SgdLoss::Logistic, threads).unwrap();
+        assert_eq!(et.rows, e1.rows, "threads={threads}");
+        assert_eq!(et.accuracy, e1.accuracy, "threads={threads}");
+        assert_eq!(et.mean_loss.to_bits(), e1.mean_loss.to_bits(), "threads={threads}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

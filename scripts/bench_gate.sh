@@ -1,0 +1,106 @@
+#!/usr/bin/env bash
+# Benchmark regression gate: compare a fresh BENCH_*.json against its
+# committed baseline in benches/baselines/.
+#
+#   bench_gate.sh <current.json> <baseline.json>
+#
+# The baseline declares which dotted keys to watch and in which direction:
+#
+#   {
+#     "provisional": true,            # record-only: print, never fail
+#     "tolerance": 0.35,              # fractional band (shared runners are noisy)
+#     "higher_is_better": {"train_from_cache.rows_per_s": 100000.0, ...},
+#     "lower_is_better":  {"serve.p99_us": 5000, ...},
+#     "required": ["train_from_cache.kernel_speedup"]   # keys that must exist
+#   }
+#
+# A non-provisional baseline fails the gate when a watched value regresses
+# past tolerance: got < ref*(1-tol) for higher-is-better keys, or
+# got > ref*(1+tol) for lower-is-better.  Improvements never fail; to
+# ratchet the baseline forward, paste the printed snippet into the
+# baseline file (and drop "provisional" once the refs come from real CI
+# runs rather than placeholders).
+set -euo pipefail
+
+if [ $# -ne 2 ]; then
+    echo "usage: $0 <current.json> <baseline.json>" >&2
+    exit 2
+fi
+cur="$1"
+base="$2"
+if [ ! -s "$cur" ]; then
+    echo "bench_gate: current result $cur missing or empty" >&2
+    exit 1
+fi
+if [ ! -s "$base" ]; then
+    echo "bench_gate: baseline $base missing or empty" >&2
+    exit 1
+fi
+
+python3 - "$cur" "$base" <<'PY'
+import json
+import sys
+
+cur_path, base_path = sys.argv[1], sys.argv[2]
+cur = json.load(open(cur_path))
+base = json.load(open(base_path))
+
+def lookup(obj, dotted):
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+provisional = bool(base.get("provisional", False))
+tol = float(base.get("tolerance", 0.35))
+failures = []
+rows = []
+
+for direction, table in (("higher", base.get("higher_is_better", {})),
+                         ("lower", base.get("lower_is_better", {}))):
+    for key, ref in table.items():
+        got = lookup(cur, key)
+        if got is None:
+            failures.append(f"{key}: missing from {cur_path}")
+            continue
+        got, ref = float(got), float(ref)
+        if direction == "higher":
+            floor = ref * (1.0 - tol)
+            ok = got >= floor
+            bound = f">= {floor:.4g}"
+        else:
+            ceil = ref * (1.0 + tol)
+            ok = got <= ceil
+            bound = f"<= {ceil:.4g}"
+        rows.append((key, got, ref, bound, ok))
+        if not ok:
+            failures.append(f"{key}: got {got:.4g}, baseline {ref:.4g} (want {bound})")
+
+for key in base.get("required", []):
+    if lookup(cur, key) is None:
+        failures.append(f"{key}: required key missing from {cur_path}")
+
+width = max((len(r[0]) for r in rows), default=10)
+print(f"bench_gate: {cur_path} vs {base_path} "
+      f"(tolerance {tol:.0%}{', PROVISIONAL' if provisional else ''})")
+for key, got, ref, bound, ok in rows:
+    mark = "ok  " if ok else "FAIL"
+    print(f"  {mark} {key:<{width}}  got {got:<12.6g} ref {ref:<12.6g} want {bound}")
+
+if failures and not provisional:
+    print(f"bench_gate: {len(failures)} regression(s) past tolerance:", file=sys.stderr)
+    for f in failures:
+        print(f"  {f}", file=sys.stderr)
+    sys.exit(1)
+
+if provisional:
+    # Ready-to-commit refs measured on this runner: paste into the baseline
+    # (keeping the key sets) and delete "provisional" to arm the gate.
+    snippet = {}
+    for table in ("higher_is_better", "lower_is_better"):
+        keys = base.get(table, {})
+        snippet[table] = {k: lookup(cur, k) for k in keys if lookup(cur, k) is not None}
+    print("bench_gate: provisional baseline — gate is record-only.  Measured refs:")
+    print(json.dumps(snippet, indent=2))
+PY

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Append one line per BENCH_*.json to the longitudinal trend log
+# (benches/trend/trend.jsonl): {"sha","date","file","result"} — the raw
+# scenario JSON nested under "result" so later tooling can slice any key
+# without this script knowing the schema.
+#
+#   bench_trend.sh <trend.jsonl> <BENCH_a.json> [BENCH_b.json ...]
+#
+# CI calls this after the bench smokes; locally it works the same.  The
+# log is append-only and line-oriented, so concurrent branches merge as a
+# union and a corrupted line never poisons the rest of the file.
+set -euo pipefail
+
+if [ $# -lt 2 ]; then
+    echo "usage: $0 <trend.jsonl> <BENCH_*.json ...>" >&2
+    exit 2
+fi
+out="$1"
+shift
+mkdir -p "$(dirname "$out")"
+sha="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
+date="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+
+for f in "$@"; do
+    if [ ! -s "$f" ]; then
+        echo "bench_trend: skipping missing/empty $f" >&2
+        continue
+    fi
+    python3 - "$f" "$sha" "$date" >>"$out" <<'PY'
+import json
+import sys
+
+path, sha, date = sys.argv[1], sys.argv[2], sys.argv[3]
+result = json.load(open(path))
+print(json.dumps({"sha": sha, "date": date, "file": path, "result": result},
+                 separators=(",", ":")))
+PY
+    echo "bench_trend: appended $f to $out"
+done
