@@ -325,7 +325,13 @@ fn run_matrix_scenario() {
         .collect();
     let report = loadgen::run(
         server.local_addr(),
-        &LoadgenConfig { qps: 2000.0, duration: Duration::from_millis(800), connections: 4, docs },
+        &LoadgenConfig {
+            path: "/score".into(),
+            qps: 2000.0,
+            duration: Duration::from_millis(800),
+            connections: 4,
+            docs,
+        },
     )
     .unwrap();
     let serve_rss = peak_rss_bytes();
@@ -594,29 +600,31 @@ fn run_replay_scenario() {
 }
 
 /// The serving path: a resident model behind the micro-batched server,
-/// driven over loopback by `serve::loadgen` at two target rates.  The
-/// higher-rate report is dumped to `BENCH_serve.json` so the serving path
-/// gets the same longitudinal tracking as the hashing scenarios.
+/// driven over loopback by `serve::loadgen` at two target rates, then the
+/// fleet tier — two shard backends behind the consistent-hash router,
+/// driven on `POST /similar`.  The higher-rate single-server report plus
+/// the fleet report are dumped to `BENCH_serve.json` (`"fleet"` key) so
+/// both layers get longitudinal tracking.
 fn run_serve_scenario(ds: &bbit_mh::data::SparseDataset) {
+    use bbit_mh::hashing::lsh::LshConfig;
+    use bbit_mh::serve::{shard_assignment, Router, RouterConfig};
+    use bbit_mh::similarity::{snapshot, LshIndex};
     println!();
+    let pid = std::process::id();
     let spec = EncoderSpec::Oph { bins: 200, b: 8, seed: 11 };
     let w: Vec<f32> = (0..spec.output_dim()).map(|j| (j as f32 * 0.173).sin()).collect();
     let model = SavedModel::new(spec, LinearModel { w }).unwrap();
-    let model_path =
-        std::env::temp_dir().join(format!("bbit_bench_{}.bbmh", std::process::id()));
+    let model_path = std::env::temp_dir().join(format!("bbit_bench_{pid}.bbmh"));
     model.save(&model_path).unwrap();
-    let server = ModelServer::start(
-        &model_path,
-        ServeConfig {
-            scorer_workers: 2,
-            batch_max: 64,
-            batch_wait: Duration::from_micros(100),
-            queue_cap: 4096,
-            deadline: Duration::from_millis(100),
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let serve_cfg = ServeConfig {
+        scorer_workers: 2,
+        batch_max: 64,
+        batch_wait: Duration::from_micros(100),
+        queue_cap: 4096,
+        deadline: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let server = ModelServer::start(&model_path, serve_cfg.clone()).unwrap();
     // score the same expanded documents the hashing scenarios preprocess
     let docs: Vec<String> = (0..ds.len().min(256))
         .map(|i| {
@@ -627,10 +635,12 @@ fn run_serve_scenario(ds: &bbit_mh::data::SparseDataset) {
             line
         })
         .collect();
+    let mut single_json = String::new();
     for qps in [1000.0, 4000.0] {
         let report = loadgen::run(
             server.local_addr(),
             &LoadgenConfig {
+                path: "/score".into(),
                 qps,
                 duration: Duration::from_millis(800),
                 connections: 4,
@@ -640,10 +650,93 @@ fn run_serve_scenario(ds: &bbit_mh::data::SparseDataset) {
         .unwrap();
         println!("serve/loadgen qps_target={qps}: {}", report.summary());
         if qps == 4000.0 {
-            std::fs::write("BENCH_serve.json", report.to_json() + "\n").ok();
+            single_json = report.to_json();
         }
     }
     println!("serve/shutdown-report:");
     print!("{}", server.shutdown());
+
+    // --- fleet: 2 shard backends behind the consistent-hash router ------
+    // the same signatures a classifier trains on, sharded 4 ways
+    let sim_spec = EncoderSpec::Bbit { b: 8, k: 64, d: ds.dim, seed: 17 };
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let (hashed, _) = pipe.run(dataset_chunks(ds, 256), &sim_spec).unwrap();
+    let codes = hashed.into_bbit().unwrap().codes;
+    let full =
+        LshIndex::from_codes(&codes, sim_spec, LshConfig { bands: 16, rows_per_band: 4 }, 4)
+            .unwrap();
+    // reserve backend ports up front: the shard placement is a function of
+    // the address list, and each backend must hold exactly its shards
+    let reserve = || {
+        std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+    };
+    let (backends, assignment) = loop {
+        let backends: Vec<String> =
+            (0..2).map(|_| format!("127.0.0.1:{}", reserve())).collect();
+        let assignment = shard_assignment(&backends, 4);
+        if assignment.contains(&0) && assignment.contains(&1) {
+            break (backends, assignment);
+        }
+    };
+    let mut fleet_servers = Vec::new();
+    let mut snap_paths = Vec::new();
+    for (i, backend) in backends.iter().enumerate() {
+        let snaps: Vec<std::path::PathBuf> = assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == i)
+            .map(|(s, _)| {
+                let p = std::env::temp_dir().join(format!("bbit_bench_{pid}.idx.shard{s}"));
+                snapshot::save_shard(&full, s, &p).unwrap();
+                p
+            })
+            .collect();
+        let idx = std::sync::Arc::new(snapshot::load_many(&snaps).unwrap());
+        snap_paths.extend(snaps);
+        let port: u16 = backend.rsplit(':').next().unwrap().parse().unwrap();
+        let cfg = ServeConfig { port, ..serve_cfg.clone() };
+        fleet_servers.push(
+            ModelServer::start_with_index(&model_path, cfg, Some(idx)).unwrap(),
+        );
+    }
+    let router = Router::start(RouterConfig {
+        backends,
+        shards: 4,
+        health_poll: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap();
+    // half routed doc lookups, half scatter-gather raw queries
+    let sim_docs: Vec<String> = (0..ds.len().min(256))
+        .map(|i| if i % 2 == 0 { format!("doc:{i}") } else { docs[i].clone() })
+        .collect();
+    let fleet_report = loadgen::run(
+        router.local_addr(),
+        &LoadgenConfig {
+            path: "/similar".into(),
+            qps: 2000.0,
+            duration: Duration::from_millis(800),
+            connections: 4,
+            docs: sim_docs,
+        },
+    )
+    .unwrap();
+    println!("serve/fleet qps_target=2000: {}", fleet_report.summary());
+    println!("serve/fleet router-report:");
+    print!("{}", router.shutdown());
+    for s in fleet_servers {
+        s.shutdown();
+    }
+
+    // single-server report + nested fleet report, one line
+    let json = format!(
+        "{},\"fleet\":{}}}\n",
+        &single_json[..single_json.len() - 1],
+        fleet_report.to_json()
+    );
+    std::fs::write("BENCH_serve.json", json).ok();
+    for p in snap_paths {
+        std::fs::remove_file(p).ok();
+    }
     std::fs::remove_file(&model_path).ok();
 }

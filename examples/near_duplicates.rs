@@ -1,6 +1,8 @@
 //! Re-using the hashed dataset beyond learning (paper Section 6): the same
 //! packed b-bit signatures that feed the solvers drive near-duplicate
-//! detection through banded LSH — no second pass over the raw data.
+//! detection through the online similarity subsystem — no second pass over
+//! the raw data, and the index that answers `POST /similar` in `bbit-mh
+//! serve` is the one built here.
 //!
 //! Run: `cargo run --release --example near_duplicates`
 
@@ -8,7 +10,8 @@ use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
 use bbit_mh::data::dataset::{Example, SparseDataset};
 use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
 use bbit_mh::encode::EncoderSpec;
-use bbit_mh::hashing::lsh::{LshConfig, LshIndex};
+use bbit_mh::hashing::lsh::LshConfig;
+use bbit_mh::similarity::LshIndex;
 use bbit_mh::util::Rng;
 
 fn main() -> bbit_mh::Result<()> {
@@ -37,16 +40,16 @@ fn main() -> bbit_mh::Result<()> {
                 let pos = rng.below_usize(copy.len());
                 copy[pos] = rng.below(base.dim) as u32;
             }
-            planted.push((ds.len() as u32 - 1, ds.len() as u32));
+            planted.push((ds.len() as u64 - 1, ds.len() as u64));
             ds.push(&Example::binary(base.labels[i], copy));
         }
     }
     println!("corpus: {} docs, {} planted near-duplicate pairs", ds.len(), planted.len());
 
     // one hashing pass (the same codes a classifier would train on)
-    let job = EncoderSpec::Bbit { b: 8, k: 64, d: ds.dim, seed: 7 };
+    let spec = EncoderSpec::Bbit { b: 8, k: 64, d: ds.dim, seed: 7 };
     let pipe = Pipeline::new(PipelineConfig::default());
-    let (hashed, report) = pipe.run(dataset_chunks(&ds, 256), &job)?;
+    let (hashed, report) = pipe.run(dataset_chunks(&ds, 256), &spec)?;
     let hashed = hashed.into_bbit()?;
     println!(
         "hashed in {:.3}s → {} KB of signatures",
@@ -54,14 +57,14 @@ fn main() -> bbit_mh::Result<()> {
         hashed.codes.ideal_bytes() / 1024
     );
 
-    // LSH: 16 bands × 4 rows → threshold ≈ 0.5 resemblance
+    // the serving-grade index: 16 bands × 4 rows → threshold ≈ 0.5
     let cfg = LshConfig { bands: 16, rows_per_band: 4 };
     println!(
         "LSH bands=16 rows=4: S-curve threshold R ≈ {:.2}, P(cand | R=0.9) = {:.3}",
         cfg.threshold(),
         cfg.candidate_probability(0.9)
     );
-    let index = LshIndex::build(&hashed.codes, cfg)?;
+    let index = LshIndex::from_codes(&hashed.codes, spec, cfg, 1)?;
     let pairs = index.near_duplicate_pairs(0.55);
     let found = planted
         .iter()
@@ -76,5 +79,19 @@ fn main() -> bbit_mh::Result<()> {
         pairs.len() - found,
     );
     assert!(found * 10 >= planted.len() * 9, "recall below 90%");
+
+    // the same index answers point queries — this is what `POST /similar`
+    // runs per request behind the batcher
+    let (probe, partner) = planted[0];
+    let (hits, stats) = index.query_doc(probe, 5)?;
+    println!(
+        "query doc {probe}: {} candidates → {} reranked, top hit {} (agreement {:.3})",
+        stats.candidates, stats.reranked, hits[0].id, hits[0].estimate
+    );
+    assert_eq!(hits[0].id, probe, "a doc is its own nearest neighbor");
+    assert!(
+        hits.iter().any(|h| h.id == partner),
+        "planted partner missing from top-5"
+    );
     Ok(())
 }

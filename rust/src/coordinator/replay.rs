@@ -20,7 +20,9 @@
 //! - the collector re-emits chunks through the same reorder-window design
 //!   the forward pipeline uses — strictly in record order — so
 //!   order-sensitive consumers (holdout splitting, progressive loss,
-//!   streaming SGD) observe bit-for-bit the sequence a sequential scan
+//!   streaming SGD, and the [`similarity`](crate::similarity) index
+//!   builder, whose shard snapshots must be byte-identical for every
+//!   thread count) observe bit-for-bit the sequence a sequential scan
 //!   would have produced.
 //!
 //! Workers grab a buffer *before* claiming a record id, which is what

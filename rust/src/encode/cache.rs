@@ -55,6 +55,14 @@
 //! [`ChunkIndex::load`] report "no index" (callers fall back to the
 //! sequential scan with a warning) rather than failing the file.
 //!
+//! The cache can also carry a derived *index-snapshot sidecar*: `bbit-mh
+//! similar-index` replays a cache once and writes a `BBMHSIM1` file (see
+//! [`crate::similarity::snapshot`]) holding the banded-LSH tables +
+//! signatures for the online `/similar` path, so serve replicas load the
+//! prebuilt index instead of re-replaying the cache at startup.  The
+//! sidecar embeds the same `header_fields` spec block as the cache header,
+//! keeping the family check intact across the derivation.
+//!
 //! v2 (legacy — still readable): the v3 header without the
 //! `flags`/`raw`/`stored` fields, no footer, payloads never compressed.
 //! v1 (legacy — still readable; always b-bit minwise): fixed

@@ -326,6 +326,17 @@ pub trait FeatureEncoder: Send + Sync {
     /// classify request path, computed without materializing the encoded
     /// vector.
     fn margin(&self, set: &[u32], w: &[f32], scratch: &mut EncodeScratch) -> f32;
+
+    /// Hash one raw binary document into its packed code signature,
+    /// leaving the codes in `scratch.codes` (scratch from
+    /// [`scratch`](Self::scratch)).  Returns `false` for sparse-output
+    /// schemes (VW, random projections), which have no per-hash code row —
+    /// the near-neighbor path ([`crate::similarity`]) uses this to hash
+    /// `/similar` queries with the exact family the index was built from.
+    fn signature_into(&self, set: &[u32], scratch: &mut EncodeScratch) -> bool {
+        let _ = (set, scratch);
+        false
+    }
 }
 
 /// Draw the encoder a spec describes, consuming randomness from `rng`.
@@ -440,6 +451,11 @@ impl FeatureEncoder for BbitEncoder {
     fn margin(&self, set: &[u32], w: &[f32], scratch: &mut EncodeScratch) -> f32 {
         self.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
         packed_margin(self.hasher.b, &scratch.codes, w)
+    }
+
+    fn signature_into(&self, set: &[u32], scratch: &mut EncodeScratch) -> bool {
+        self.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
+        true
     }
 }
 
@@ -584,6 +600,11 @@ impl FeatureEncoder for OphEncoder {
     fn margin(&self, set: &[u32], w: &[f32], scratch: &mut EncodeScratch) -> f32 {
         self.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
         packed_margin(self.hasher.b, &scratch.codes, w)
+    }
+
+    fn signature_into(&self, set: &[u32], scratch: &mut EncodeScratch) -> bool {
+        self.hasher.codes_into(set, &mut scratch.z, &mut scratch.codes);
+        true
     }
 }
 
@@ -740,6 +761,31 @@ mod tests {
                     EncodedChunk::Sparse { rows: rb },
                 ) => assert_eq!(ra, rb, "{}", spec.scheme()),
                 _ => panic!("{}: chunk kinds diverged", spec.scheme()),
+            }
+        }
+    }
+
+    #[test]
+    fn signature_into_matches_encode_chunk_row() {
+        // the /similar query path must hash with the identical family the
+        // cached/indexed rows came from: signature_into == encode_chunk row
+        let set: Vec<u32> = {
+            let mut rng = Rng::new(19);
+            rng.sample_distinct(1 << 20, 40).into_iter().map(|x| x as u32).collect()
+        };
+        let ex = Example::binary(1, set.clone());
+        for spec in all_specs() {
+            let enc = spec.encoder().unwrap();
+            let mut scratch = enc.scratch();
+            let packed = enc.signature_into(&set, &mut scratch);
+            match enc.encode_chunk(std::slice::from_ref(&ex)).unwrap() {
+                EncodedChunk::Packed { codes, .. } => {
+                    assert!(packed, "{}: packed scheme must emit a signature", spec.scheme());
+                    assert_eq!(scratch.codes, codes.row(0), "{}", spec.scheme());
+                }
+                EncodedChunk::Sparse { .. } => {
+                    assert!(!packed, "{}: sparse scheme has no signature", spec.scheme());
+                }
             }
         }
     }

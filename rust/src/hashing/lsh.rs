@@ -11,15 +11,27 @@
 //! probability is `1 − (1 − R^r)^b` — the familiar S-curve whose threshold
 //! sits near `(1/b)^(1/r)`.
 //!
-//! Works on full minwise values or on b-bit codes (b ≥ 4 recommended for
-//! banding: 1-bit rows collide randomly half the time, so use more rows).
+//! Works on full minwise values or on b-bit codes.  **b ≥ 4 is
+//! recommended for banding**: two *unrelated* documents agree on a single
+//! b-bit row with probability ≈ 2⁻ᵇ, so a band of `r` rows produces a
+//! chance collision with probability ≈ 2⁻ᵇʳ.  At b = 1 that is ½ʳ — a
+//! 4-row band fires on ~6% of random pairs and the candidate sets fill
+//! with noise — while at b = 4 the same band is at ~0.02% and at b = 8
+//! effectively never (`low_b_banding_floods_candidates` pins this).  Use
+//! more rows per band to compensate when b must stay small.
+//!
+//! This module is the *offline, in-memory* form (borrowed codes, built
+//! per-call).  The online form — owned shards, out-of-core build from a
+//! hashed cache, on-disk snapshots, `POST /similar` — lives in
+//! [`crate::similarity`] and shares the exact key mixing below
+//! ([`band_key_codes`]) so both paths bucket identically.
 
 use std::collections::HashMap;
 
 use crate::encode::packed::PackedCodes;
 
 /// Banding configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LshConfig {
     pub bands: usize,
     pub rows_per_band: usize,
@@ -120,13 +132,37 @@ impl<'a> LshIndex<'a> {
     }
 }
 
+/// Per-band FNV-flavored key seed (band index folded into the offset
+/// basis so the same codes land in different buckets per band).
+#[inline]
+fn band_seed(band: usize) -> u64 {
+    0xCBF2_9CE4_8422_2325u64 ^ (band as u64) << 32
+}
+
+/// One mixing step: fold the next code of the band into the key.
+#[inline]
+fn band_mix(h: u64, c: u16) -> u64 {
+    (h ^ (c as u64).wrapping_add(0x9E37_79B9_7F4A_7C15)).wrapping_mul(0x100_0000_01B3)
+}
+
 /// Mix the `rows_per_band` codes of one band into a 64-bit table key.
 fn band_key(codes: &PackedCodes, row: usize, band: usize, rows_per_band: usize) -> u64 {
-    let mut h = 0xCBF2_9CE4_8422_2325u64 ^ (band as u64) << 32;
+    let mut h = band_seed(band);
     for r in 0..rows_per_band {
-        let c = codes.get(row, band * rows_per_band + r) as u64;
-        h ^= c.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        h = h.wrapping_mul(0x100_0000_01B3);
+        h = band_mix(h, codes.get(row, band * rows_per_band + r));
+    }
+    h
+}
+
+/// [`band_key`] over a plain code slice — the query-side form: a signature
+/// hashed on the fly (one `codes_into` row, never pushed into a
+/// `PackedCodes`) buckets bit-identically to an indexed row.  This is the
+/// seam [`crate::similarity`] builds on; keep the mixing in lockstep with
+/// [`band_key`].
+pub fn band_key_codes(sig: &[u16], band: usize, rows_per_band: usize) -> u64 {
+    let mut h = band_seed(band);
+    for &c in &sig[band * rows_per_band..(band + 1) * rows_per_band] {
+        h = band_mix(h, c);
     }
     h
 }
@@ -135,6 +171,15 @@ fn band_key(codes: &PackedCodes, row: usize, band: usize, rows_per_band: usize) 
 pub fn code_agreement(codes: &PackedCodes, i: usize, j: usize) -> f64 {
     let hits = (0..codes.k).filter(|&q| codes.get(i, q) == codes.get(j, q)).count();
     hits as f64 / codes.k as f64
+}
+
+/// [`code_agreement`] over plain code slices (query signature vs. an
+/// unpacked row) — same count, same division, so estimates from the
+/// online path compare bit-for-bit against the offline one.
+pub fn code_agreement_codes(a: &[u16], b: &[u16]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let hits = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    hits as f64 / a.len() as f64
 }
 
 #[cfg(test)]
@@ -175,6 +220,118 @@ mod tests {
         assert!(cfg.candidate_probability(0.2) < 0.05);
         let th = cfg.threshold();
         assert!((cfg.candidate_probability(th) - 0.63).abs() < 0.05); // 1-1/e
+    }
+
+    #[test]
+    fn s_curve_pins_exact_values() {
+        // closed-form pins: P = 1 − (1 − R^r)^b, evaluated by hand for a
+        // few (bands, rows, R) points so a refactor of the formula (or an
+        // i32/f64 cast slip) cannot drift unnoticed
+        let cfg = LshConfig { bands: 20, rows_per_band: 5 };
+        assert_eq!(cfg.signature_width(), 100);
+        let pin = |r: f64| 1.0 - (1.0 - r.powi(5)).powi(20);
+        for r in [0.0, 0.1, 0.5, 0.8, 0.9, 1.0] {
+            assert_eq!(cfg.candidate_probability(r), pin(r), "R={r}");
+        }
+        assert_eq!(cfg.candidate_probability(0.0), 0.0);
+        assert_eq!(cfg.candidate_probability(1.0), 1.0);
+        // threshold pin: (1/20)^(1/5)
+        assert!((cfg.threshold() - 0.05f64.powf(0.2)).abs() < 1e-15);
+        // monotone in R
+        let mut last = -1.0;
+        for i in 0..=50 {
+            let p = cfg.candidate_probability(i as f64 / 50.0);
+            assert!(p >= last, "S-curve must be monotone");
+            last = p;
+        }
+    }
+
+    #[test]
+    fn wide_signatures_use_only_the_banded_prefix() {
+        // k larger than signature_width is fine: the index consumes only
+        // the first bands·rows codes, so padding codes cannot change
+        // bucketing (the mismatch direction that *is* rejected is k too
+        // small — `rejects_too_narrow_signature`)
+        let pc = dup_codes(5, 8, 64, 0xD3B);
+        let cfg = LshConfig { bands: 8, rows_per_band: 4 }; // width 32 < k=64
+        let idx = LshIndex::build(&pc, cfg).unwrap();
+        // rebuild over the truncated-prefix codes: identical candidates
+        let mut prefix = PackedCodes::new(8, 32);
+        for row in 0..pc.n {
+            prefix.push_row(&pc.row(row)[..32]).unwrap();
+        }
+        let idx_prefix = LshIndex::build(&prefix, cfg).unwrap();
+        for row in 0..pc.n {
+            assert_eq!(
+                idx.candidates_for_row(row),
+                idx_prefix.candidates_for_row(row),
+                "row {row}"
+            );
+        }
+    }
+
+    #[test]
+    fn band_key_codes_matches_packed_band_key() {
+        let pc = dup_codes(4, 8, 64, 0xD4B);
+        let r = 4;
+        for row in 0..pc.n {
+            let sig = pc.row(row);
+            for band in 0..16 {
+                assert_eq!(
+                    band_key_codes(&sig, band, r),
+                    band_key(&pc, row, band, r),
+                    "row {row} band {band}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn code_agreement_codes_matches_packed_form() {
+        let pc = dup_codes(4, 6, 48, 0xD5B);
+        for i in 0..pc.n {
+            for j in 0..pc.n {
+                let (a, b) = (pc.row(i), pc.row(j));
+                // bit-for-bit: both are hits/k through the same f64 ops
+                assert_eq!(code_agreement_codes(&a, &b), code_agreement(&pc, i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn low_b_banding_floods_candidates() {
+        // the documented b ≥ 4 caveat, measured: on *unrelated* documents a
+        // 4-row band chance-collides at ≈ 2^-br — ~6% per band at b=1 vs
+        // ~0.02% at b=4 — so low-b candidate sets fill with noise while
+        // b=4 stays clean under the identical banding config
+        let n = 200usize;
+        let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+        let mut spurious = [0usize; 2];
+        for (slot, b) in [(0usize, 1u32), (1usize, 4u32)] {
+            let mut rng = Rng::new(0xD6B);
+            let d = 1u64 << 24;
+            let bb = BbitMinHash::draw(64, b, d, &mut rng);
+            let mut pc = PackedCodes::new(b, 64);
+            for _ in 0..n {
+                let doc: Vec<u32> =
+                    rng.sample_distinct(d, 300).into_iter().map(|x| x as u32).collect();
+                pc.push_row(&bb.codes(&doc)).unwrap();
+            }
+            let idx = LshIndex::build(&pc, cfg).unwrap();
+            // candidates beyond self are all spurious (docs are unrelated)
+            spurious[slot] = (0..n).map(|r| idx.candidates_for_row(r).len() - 1).sum();
+        }
+        assert!(
+            spurious[0] > 50 * (spurious[1] + 1),
+            "b=1 banding should drown in chance collisions vs b=4 \
+             (got {} vs {})",
+            spurious[0],
+            spurious[1]
+        );
+        // b=1 fires on most pairs (P ≈ 1−(1−2⁻⁴)¹⁶ ≈ 0.64); b=4 stays at
+        // the expected-handful level (≈ 16·16⁻⁴ per pair)
+        assert!(spurious[0] > n * n / 4, "b=1 spurious {} too low", spurious[0]);
+        assert!(spurious[1] < n, "b=4 spurious {} too high", spurious[1]);
     }
 
     #[test]

@@ -27,7 +27,8 @@
 //! | [`kernels`] | the train/score inner loops: whole-row b-bit decode, 8-wide unrolled dot/axpy, weight prefetch, scalar reference twins |
 //! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec`; cache eval/holdout/SGD all replay across threads |
 //! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink; raw input is carved into byte blocks and *parsed in the workers*, so ingest scales with `--workers`), parallel cache-replay reader pool, + scheduler |
-//! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control and a load generator (the paper's "used in industry / search" request path) |
+//! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control, a load generator, and the consistent-hash `route` fleet tier scatter-gathering `/similar` over shard servers (the paper's "used in industry / search" request path) |
+//! | [`similarity`] | online near-neighbor search: sharded, snapshottable LSH index over b-bit signatures, built out-of-core from the hashed cache (the paper's Section 6 "re-use the hashed data" workflow, made a serving subsystem) |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
 //!
@@ -67,7 +68,15 @@
 //! 4. `serve --model m --port p` keeps the trained model resident behind a
 //!    micro-batched HTTP scoring endpoint ([`serve`]) — and because the
 //!    registry hot-reloads the model file, the cache→train loop retrains
-//!    into production without a restart.
+//!    into production without a restart;
+//! 5. the same cache feeds the *similarity* side of the paper's re-use
+//!    story: `similar-index --cache c --out idx --shards N` builds a
+//!    banded LSH index ([`similarity`]) through the replay reader pool
+//!    and snapshots it, `serve --similar-index idx` answers
+//!    `POST /similar` (top-K near neighbors with b-bit resemblance
+//!    estimates) through the same batcher/deadline machinery, and
+//!    `route --backends h:p,...` consistent-hashes doc lookups across a
+//!    fleet of shard servers with health-checked scatter-gather.
 //!
 //! ## Performance (where cycles go, and how it's tracked)
 //!
@@ -97,6 +106,7 @@ pub mod metrics;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod similarity;
 pub mod solver;
 pub mod util;
 

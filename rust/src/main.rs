@@ -6,7 +6,11 @@
 //!   train        train + evaluate on an encoded dataset
 //!   classify     score raw documents (or a hashed cache) with a saved model
 //!   serve        keep a saved model resident behind a micro-batched HTTP
-//!                scoring endpoint with hot reload (the online request path)
+//!                scoring endpoint with hot reload (the online request path);
+//!                --similar-index also serves POST /similar near-neighbor
+//!                queries from an LSH snapshot
+//!   similar-index build a sharded LSH index snapshot from a hashed cache
+//!   route        consistent-hash fleet router over shard serve backends
 //!   experiments  regenerate a paper table/figure (or `all`)
 //!   runtime-info check the PJRT artifacts load and run
 //!
@@ -98,10 +102,31 @@ USAGE:
   bbit-mh serve --model FILE [--host 127.0.0.1] [--port 0] [--workers N]
              [--batch-max 64] [--batch-wait-us 200] [--queue 1024]
              [--deadline-ms 50] [--reload-poll-ms 200] [--idle-timeout-s 10]
+             [--similar-index FILE[,FILE...]]
              (micro-batched HTTP scoring: POST /score LibSVM lines,
               GET /metrics, GET /healthz; bounded queue sheds with 503;
               the model file is watched and hot-reloaded; port 0 picks an
-              ephemeral port; Enter or EOF on stdin stops the server)
+              ephemeral port; Enter or EOF on stdin stops the server;
+              --similar-index loads one or more BBMHSIM1 shard snapshots
+              and adds POST /similar: body `doc:<id>` or a LibSVM line,
+              optional X-Top-K header, answers top-K neighbor ids with
+              b-bit resemblance estimates)
+  bbit-mh similar-index --cache FILE --out FILE [--shards 1] [--bands 16]
+             [--rows 4] [--replay-threads N]
+             (build the online LSH index out-of-core from a v3 hashed
+              cache via the replay reader pool — deterministic for every
+              --replay-threads; records shard by id % shards; one snapshot
+              per shard is written to OUT.shard<i> when --shards > 1,
+              plain OUT otherwise)
+  bbit-mh route --backends HOST:PORT,HOST:PORT[,...] --shards N
+             [--host 127.0.0.1] [--port 0] [--health-poll-ms 200]
+             [--timeout-ms 2000] [--fail-threshold 2] [--max-backoff-ms 2000]
+             [--idle-timeout-s 10]
+             (the fleet tier: consistent-hash shard placement over the
+              backends, /healthz-driven per-backend health with backoff,
+              POST /similar doc lookups routed to the owner shard and raw
+              queries scatter-gathered with partial-result flagging,
+              POST /score round-robined; Enter or EOF on stdin stops it)
   bbit-mh experiments ID [--scale tiny|small|paper] [--results DIR]
              (IDs: table1 fig1 fig3 fig5 fig6 fig7 fig8 table2 variance fig9 all)
   bbit-mh runtime-info [--artifacts DIR]
@@ -179,6 +204,8 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "classify" => cmd_classify(&args),
         "serve" => cmd_serve(&args),
+        "similar-index" => cmd_similar_index(&args),
+        "route" => cmd_route(&args),
         "experiments" => cmd_experiments(&args),
         "runtime-info" => cmd_runtime_info(&args),
         "help" | "--help" | "-h" => {
@@ -894,9 +921,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         reload_poll: Duration::from_millis(args.get("reload-poll-ms", 200u64)?),
         idle_timeout: Duration::from_secs(args.get("idle-timeout-s", 10u64)?),
     };
-    let server = bbit_mh::serve::ModelServer::start(model, cfg)?;
+    let similar = match args.flags.get("similar-index") {
+        None => None,
+        Some(list) => {
+            let paths: Vec<&str> =
+                list.split(',').map(str::trim).filter(|p| !p.is_empty()).collect();
+            if paths.is_empty() {
+                return Err(Error::InvalidArg(
+                    "--similar-index needs at least one snapshot path".into(),
+                ));
+            }
+            let idx = bbit_mh::similarity::snapshot::load_many(&paths)?;
+            eprintln!(
+                "similarity index: {} rows across shards {:?} of {} ({} signature bytes)",
+                idx.rows(),
+                idx.shard_ids(),
+                idx.num_shards(),
+                idx.storage_bytes(),
+            );
+            Some(std::sync::Arc::new(idx))
+        }
+    };
+    let routes = if similar.is_some() {
+        "POST /score, POST /similar, GET /metrics, GET /healthz"
+    } else {
+        "POST /score, GET /metrics, GET /healthz"
+    };
+    let server = bbit_mh::serve::ModelServer::start_with_index(model, cfg, similar)?;
     eprintln!(
-        "serving {model} at http://{} (POST /score, GET /metrics, GET /healthz); \
+        "serving {model} at http://{} ({routes}); \
          watching the model file for hot reload; press Enter (or close stdin) to stop",
         server.local_addr(),
     );
@@ -904,6 +957,101 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let _ = std::io::stdin().read_line(&mut line);
     eprintln!("--- shutdown report ---");
     eprint!("{}", server.shutdown());
+    Ok(())
+}
+
+/// `similar-index --cache c --out idx`: build the online LSH index from a
+/// hashed cache through the replay reader pool and snapshot it (one file,
+/// or one per shard when `--shards > 1` — the fleet layout).
+fn cmd_similar_index(args: &Args) -> Result<()> {
+    use bbit_mh::hashing::lsh::LshConfig;
+    use bbit_mh::similarity::{snapshot, LshIndex};
+    let cache = args.required("cache")?;
+    let out = args.required("out")?;
+    let shards: usize = args.get("shards", 1usize)?;
+    if shards == 0 {
+        return Err(Error::InvalidArg("--shards must be >= 1".into()));
+    }
+    let cfg = LshConfig {
+        bands: args.get("bands", 16usize)?,
+        rows_per_band: args.get("rows", 4usize)?,
+    };
+    if cfg.bands == 0 || cfg.rows_per_band == 0 {
+        return Err(Error::InvalidArg("--bands and --rows must be >= 1".into()));
+    }
+    let threads = replay_threads_flag(args)?;
+    let t0 = std::time::Instant::now();
+    let idx = LshIndex::build_from_cache(cache, cfg, shards, threads)?;
+    eprintln!(
+        "indexed {} rows into {} shards (bands {} x rows {}, threshold {:.3}) in {:.2}s",
+        idx.rows(),
+        shards,
+        cfg.bands,
+        cfg.rows_per_band,
+        cfg.threshold(),
+        t0.elapsed().as_secs_f64(),
+    );
+    for s in idx.band_stats() {
+        eprintln!(
+            "  band {:>3}: {} buckets, max {} mean {:.2}",
+            s.band, s.buckets, s.max_bucket, s.mean_bucket
+        );
+    }
+    if shards == 1 {
+        snapshot::save(&idx, out)?;
+        eprintln!("wrote {out}");
+    } else {
+        for s in idx.shard_ids() {
+            let path = format!("{out}.shard{s}");
+            snapshot::save_shard(&idx, s, &path)?;
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+/// `route --backends h:p,h:p --shards N`: the consistent-hash fleet tier
+/// ([`bbit_mh::serve::router`]); blocks on stdin like `serve`.
+fn cmd_route(args: &Args) -> Result<()> {
+    use std::time::Duration;
+    let backends: Vec<String> = args
+        .required("backends")?
+        .split(',')
+        .map(str::trim)
+        .filter(|b| !b.is_empty())
+        .map(str::to_string)
+        .collect();
+    if backends.is_empty() {
+        return Err(Error::InvalidArg("--backends must list at least one host:port".into()));
+    }
+    let shards: usize = args.get("shards", backends.len())?;
+    if shards == 0 {
+        return Err(Error::InvalidArg("--shards must be >= 1".into()));
+    }
+    let cfg = bbit_mh::serve::RouterConfig {
+        host: args.get("host", "127.0.0.1".to_string())?,
+        port: args.get("port", 0u16)?,
+        backends,
+        shards,
+        health_poll: Duration::from_millis(args.get("health-poll-ms", 200u64)?),
+        health_timeout: Duration::from_millis(args.get("timeout-ms", 2000u64)?),
+        fail_threshold: args.get("fail-threshold", 2u32)?,
+        max_backoff: Duration::from_millis(args.get("max-backoff-ms", 2000u64)?),
+        idle_timeout: Duration::from_secs(args.get("idle-timeout-s", 10u64)?),
+    };
+    let router = bbit_mh::serve::Router::start(cfg)?;
+    eprintln!(
+        "routing at http://{} (POST /similar, POST /score, GET /metrics, GET /healthz)",
+        router.local_addr(),
+    );
+    for (s, b) in router.assignment().iter().enumerate() {
+        eprintln!("  shard {s} -> backend {b}");
+    }
+    eprintln!("press Enter (or close stdin) to stop");
+    let mut line = String::new();
+    let _ = std::io::stdin().read_line(&mut line);
+    eprintln!("--- shutdown report ---");
+    eprint!("{}", router.shutdown());
     Ok(())
 }
 
@@ -1026,6 +1174,52 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.to_string().contains("block-kb"), "{err}");
+    }
+
+    #[test]
+    fn similar_index_flags_are_validated_before_io() {
+        // bogus paths never get opened: geometry flags are checked first
+        let err = run(&argv(&[
+            "similar-index", "--cache", "c", "--out", "o", "--shards", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("--shards"), "{err}");
+        let err = run(&argv(&[
+            "similar-index", "--cache", "c", "--out", "o", "--bands", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("--bands"), "{err}");
+        let err = run(&argv(&[
+            "similar-index", "--cache", "c", "--out", "o", "--replay-threads", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("replay-threads"), "{err}");
+        let err = run(&argv(&["similar-index", "--out", "o"])).unwrap_err();
+        assert!(err.to_string().contains("--cache"), "{err}");
+        let err = run(&argv(&["similar-index", "--cache", "c"])).unwrap_err();
+        assert!(err.to_string().contains("--out"), "{err}");
+    }
+
+    #[test]
+    fn route_flags_are_validated_before_binding() {
+        let err = run(&argv(&["route"])).unwrap_err();
+        assert!(err.to_string().contains("--backends"), "{err}");
+        let err = run(&argv(&["route", "--backends", " , "])).unwrap_err();
+        assert!(err.to_string().contains("--backends"), "{err}");
+        let err = run(&argv(&[
+            "route", "--backends", "127.0.0.1:7001", "--shards", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("--shards"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_an_empty_similar_index_list() {
+        let err = run(&argv(&[
+            "serve", "--model", "m", "--similar-index", " , ",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("similar-index"), "{err}");
     }
 
     #[test]

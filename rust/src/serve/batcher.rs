@@ -24,19 +24,41 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// What the scorer sends back for one document.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ScoreOutcome {
     /// The margin, plus the epoch of the model that produced it (bumped on
     /// every hot reload — lets clients observe swaps).
     Margin { margin: f32, epoch: u64 },
+    /// Top-K near neighbors for a `/similar` job, with the work the query
+    /// did (bucket hits pre-dedup, rows re-ranked) for the histograms.
+    Neighbors { hits: Vec<crate::similarity::Neighbor>, candidates: u64, reranked: u64 },
+    /// A `/similar` doc-id lookup for a record this index does not hold
+    /// (absent shard or never-indexed id) — the handler answers 404.
+    NotFound,
     /// The job's deadline passed while it sat in the queue; it was never
     /// scored.
     Expired,
 }
 
-/// One admitted scoring request.
+/// What the workers should do with one admitted job.  `/score` and
+/// `/similar` share the queue, so admission control, micro-batching and
+/// deadline shedding behave identically across both endpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobTask {
+    /// Score `indices` against the resident model.
+    Score,
+    /// Hash `indices` and run a top-K near-neighbor query.
+    SimilarRaw { top_k: usize },
+    /// Top-K near-neighbor query for an already-indexed record.
+    SimilarDoc { id: u64, top_k: usize },
+}
+
+/// One admitted request.
 pub struct ScoreJob {
-    /// Sorted, deduplicated feature indices of the raw document.
+    /// What to do with the job.
+    pub task: JobTask,
+    /// Sorted, deduplicated feature indices of the raw document (empty for
+    /// [`JobTask::SimilarDoc`] lookups).
     pub indices: Vec<u32>,
     /// When the job entered the queue (queue-wait accounting).
     pub enqueued: Instant,
@@ -156,6 +178,7 @@ mod tests {
         let now = Instant::now();
         (
             ScoreJob {
+                task: JobTask::Score,
                 indices: vec![idx],
                 enqueued: now,
                 deadline: now + Duration::from_secs(5),

@@ -184,10 +184,24 @@ pub fn write_response<W: Write>(
 
 /// Write one `POST` request with a text body (load-generator side).
 pub fn write_post<W: Write>(w: &mut W, path: &str, body: &[u8]) -> Result<()> {
+    write_post_with(w, path, &[], body)
+}
+
+/// [`write_post`] plus extra headers (the router forwards `X-Top-K` and
+/// the loadgen `/similar` mode sets it).
+pub fn write_post_with<W: Write>(
+    w: &mut W,
+    path: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
     write!(w, "POST {path} HTTP/1.1\r\n")?;
     write!(w, "Host: bbit-mh\r\n")?;
     write!(w, "Content-Type: text/plain; charset=utf-8\r\n")?;
     write!(w, "Content-Length: {}\r\n", body.len())?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
     write!(w, "Connection: keep-alive\r\n\r\n")?;
     w.write_all(body)?;
     w.flush()?;

@@ -1,10 +1,12 @@
-//! Loopback load generator for the model server.
+//! Loopback load generator for the model server and the router fleet.
 //!
-//! Drives `POST /score` at a target aggregate QPS from a small pool of
-//! keep-alive connections and reports what the serving path actually
-//! delivered: achieved QPS, outcome counts (ok / shed / expired / error)
-//! and exact latency percentiles (every sample kept and sorted — no
-//! histogram bucketing, this is the measurement side).  Pacing is
+//! Drives a POST path (`/score` against one server, or `/similar` through
+//! `bbit-mh route` for fleet-level numbers) at a target aggregate QPS from
+//! a small pool of keep-alive connections and reports what the serving
+//! path actually delivered: achieved QPS plus its drift against the
+//! requested rate, outcome counts (ok / shed / expired / error), the
+//! shed-rate, and exact latency percentiles (every sample kept and sorted
+//! — no histogram bucketing, this is the measurement side).  Pacing is
 //! open-loop per connection (`next_fire += interval`, sleep until then):
 //! a slow response delays subsequent sends on that connection but the
 //! schedule catches up, so sustained server slowness shows up as missed
@@ -25,13 +27,17 @@ use crate::{Error, Result};
 /// Load profile.
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
+    /// POST path to drive: `/score` for margins, `/similar` for
+    /// near-neighbor queries (entries in `docs` may then be `doc:<id>`
+    /// lines as well as LibSVM lines).
+    pub path: String,
     /// Target aggregate requests/second across all connections.
     pub qps: f64,
     /// How long to drive load.
     pub duration: Duration,
     /// Concurrent keep-alive connections (client threads).
     pub connections: usize,
-    /// Document pool, one LibSVM line per entry, cycled round-robin.
+    /// Document pool, one line per entry, cycled round-robin.
     pub docs: Vec<String>,
 }
 
@@ -45,6 +51,15 @@ pub struct LoadgenReport {
     pub errors: u64,
     pub wall_seconds: f64,
     pub achieved_qps: f64,
+    /// The rate the run asked for (`cfg.qps`) — kept in the report so the
+    /// drift below is interpretable on its own.
+    pub requested_qps: f64,
+    /// `(achieved − requested) / requested`: ≈0 when the server kept up,
+    /// negative when pacing fell behind (the open-loop schedule slipped).
+    pub qps_drift: f64,
+    /// `shed / sent`: the fraction of requests admission control rejected
+    /// — a fleet bench at high shed-rate has meaningless percentiles.
+    pub shed_rate: f64,
     /// Latency percentiles over successful responses, microseconds.
     pub p50_us: u64,
     pub p95_us: u64,
@@ -56,13 +71,16 @@ impl LoadgenReport {
     /// One-line human summary (the bench scenario prints this).
     pub fn summary(&self) -> String {
         format!(
-            "sent {} in {:.2}s ({:.0} qps achieved): ok {} shed {} expired {} errors {}; \
+            "sent {} in {:.2}s ({:.0} qps achieved, {:+.1}% vs requested): ok {} shed {} \
+             ({:.1}% shed) expired {} errors {}; \
              latency p50 {}µs p95 {}µs p99 {}µs max {}µs",
             self.sent,
             self.wall_seconds,
             self.achieved_qps,
+            self.qps_drift * 100.0,
             self.ok,
             self.shed,
+            self.shed_rate * 100.0,
             self.expired,
             self.errors,
             self.p50_us,
@@ -77,7 +95,8 @@ impl LoadgenReport {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"sent\":{},\"ok\":{},\"shed\":{},\"expired\":{},\"errors\":{},\
-             \"wall_seconds\":{:.4},\"achieved_qps\":{:.1},\
+             \"wall_seconds\":{:.4},\"achieved_qps\":{:.1},\"requested_qps\":{:.1},\
+             \"qps_drift\":{:.4},\"shed_rate\":{:.4},\
              \"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{}}}",
             self.sent,
             self.ok,
@@ -86,6 +105,9 @@ impl LoadgenReport {
             self.errors,
             self.wall_seconds,
             self.achieved_qps,
+            self.requested_qps,
+            self.qps_drift,
+            self.shed_rate,
             self.p50_us,
             self.p95_us,
             self.p99_us,
@@ -145,6 +167,9 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     }
     lat.sort_unstable();
     report.achieved_qps = report.sent as f64 / wall_seconds.max(1e-9);
+    report.requested_qps = cfg.qps;
+    report.qps_drift = (report.achieved_qps - cfg.qps) / cfg.qps;
+    report.shed_rate = report.shed as f64 / (report.sent.max(1)) as f64;
     report.p50_us = percentile(&lat, 0.50);
     report.p95_us = percentile(&lat, 0.95);
     report.p99_us = percentile(&lat, 0.99);
@@ -197,7 +222,7 @@ fn drive_one(
         body.push(b'\n');
         tally.sent += 1;
         let t0 = Instant::now();
-        let resp = http::write_post(&mut stream, "/score", &body)
+        let resp = http::write_post(&mut stream, &cfg.path, &body)
             .and_then(|()| http::read_response(&mut reader));
         match resp {
             Ok(r) => match r.status {
@@ -243,6 +268,7 @@ mod tests {
     #[test]
     fn config_validation() {
         let bad = LoadgenConfig {
+            path: "/score".into(),
             qps: 0.0,
             duration: Duration::from_millis(1),
             connections: 1,
@@ -251,6 +277,7 @@ mod tests {
         let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
         assert!(run(addr, &bad).is_err());
         let bad = LoadgenConfig {
+            path: "/score".into(),
             qps: 10.0,
             duration: Duration::from_millis(1),
             connections: 0,
@@ -258,6 +285,7 @@ mod tests {
         };
         assert!(run(addr, &bad).is_err());
         let bad = LoadgenConfig {
+            path: "/similar".into(),
             qps: 10.0,
             duration: Duration::from_millis(1),
             connections: 1,
@@ -274,6 +302,9 @@ mod tests {
             shed: 1,
             wall_seconds: 1.5,
             achieved_qps: 6.7,
+            requested_qps: 10.0,
+            qps_drift: -0.33,
+            shed_rate: 0.1,
             p50_us: 120,
             p95_us: 300,
             p99_us: 400,
@@ -283,6 +314,11 @@ mod tests {
         let j = r.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"sent\":10") && j.contains("\"p99_us\":400"));
+        assert!(j.contains("\"requested_qps\":10.0"));
+        assert!(j.contains("\"qps_drift\":-0.3300"));
+        assert!(j.contains("\"shed_rate\":0.1000"));
         assert!(r.summary().contains("p99 400µs"));
+        assert!(r.summary().contains("-33.0% vs requested"));
+        assert!(r.summary().contains("(10.0% shed)"));
     }
 }

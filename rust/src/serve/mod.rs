@@ -4,23 +4,34 @@
 //! resident and serve margins over raw documents at traffic, instead of
 //! the one-shot `classify` CLI's load-score-exit loop.
 //!
-//! Four cooperating pieces, each its own module:
+//! Five cooperating pieces, each its own module:
 //!
 //! - [`server`] — a dependency-free TCP/HTTP-1.1 front end
-//!   ([`ModelServer`]): `POST /score` LibSVM lines, `GET /metrics`,
-//!   `GET /healthz`; thread-per-connection with keep-alive.
+//!   ([`ModelServer`]): `POST /score` LibSVM lines, `POST /similar`
+//!   near-neighbor queries (when started with a
+//!   [`similarity::LshIndex`](crate::similarity::LshIndex)),
+//!   `GET /metrics`, `GET /healthz`; thread-per-connection with
+//!   keep-alive.
 //! - [`batcher`] — the micro-batching admission queue ([`Batcher`]):
 //!   bounded (overload sheds with `503 Retry-After`, it never queues
 //!   unboundedly), with scorer workers draining up to `batch_max`
-//!   documents per `batch_wait` window and fanning margins back through
-//!   per-job channels.
+//!   jobs per `batch_wait` window and fanning results back through
+//!   per-job channels.  `/score` and `/similar` share the queue, so
+//!   admission and deadline semantics are uniform across endpoints.
 //! - [`registry`] — epoch-versioned hot reload ([`ModelRegistry`]): an
 //!   `Arc<SavedModel>` swap driven by watching the model file, so the
 //!   cache→train loop's retrained models go live without dropping a
 //!   connection.
-//! - [`loadgen`] — the measurement side: a paced loopback load generator
-//!   reporting achieved QPS and exact latency percentiles (the `serve`
-//!   scenario of `benches/bench_pipeline.rs`).
+//! - [`router`] — the fleet tier ([`Router`]): consistent-hash shard
+//!   placement over backend servers ([`shard_assignment`]),
+//!   `/healthz`-driven per-backend health with retry/backoff, per-shard
+//!   degradation and scatter-gather `/similar` merges with partial-result
+//!   flagging.
+//! - [`loadgen`] — the measurement side: a paced load generator for any
+//!   POST path (`/score` against one server, `/similar` through the
+//!   router for fleet-level QPS/p99), reporting achieved QPS, drift
+//!   against the requested rate, shed-rate and exact latency percentiles
+//!   (the `serve` scenario of `benches/bench_pipeline.rs`).
 //!
 //! Scoring reuses the [`FeatureEncoder`](crate::encode::encoder) seam end
 //! to end: the server is scheme-agnostic because
@@ -28,15 +39,19 @@
 //! scorer worker keeps one `EncodeScratch` per model epoch — the same
 //! buffer-reuse discipline as the offline classify path.
 //!
-//! CLI: `bbit-mh serve --model m --port p` (see `main.rs`).
+//! CLI: `bbit-mh serve --model m --port p [--similar-index idx]` for one
+//! server, `bbit-mh route --backends h:p,h:p --shards N` for the fleet
+//! (see `main.rs`).
 
 pub mod batcher;
 pub mod http;
 pub mod loadgen;
 pub mod registry;
+pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, ScoreJob, ScoreOutcome};
+pub use batcher::{Batcher, JobTask, ScoreJob, ScoreOutcome};
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use registry::{EpochModel, ModelRegistry};
+pub use router::{shard_assignment, Router, RouterConfig, RouterMetrics};
 pub use server::{ModelServer, ServeConfig, ServeMetrics};

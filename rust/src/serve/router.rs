@@ -1,0 +1,724 @@
+//! The fleet tier: a std-only router that consistent-hashes similarity
+//! shards across backend model servers (`bbit-mh route`).
+//!
+//! ```text
+//!   client ──▶ router ──/similar doc:<id>──▶ owner backend (shard = id % N)
+//!                 │──/similar <libsvm>────▶ scatter to every assigned
+//!                 │                          backend, merge + re-rank
+//!                 │──/score ──────────────▶ any healthy backend (RR)
+//!                 └── health thread: GET /healthz per backend,
+//!                     consecutive-failure threshold, exp. backoff
+//! ```
+//!
+//! Shard placement is [`shard_assignment`]: an FNV-1a hash ring with 64
+//! virtual points per backend — deterministic for a given backend list
+//! (every router instance, test, and bench derives the identical map), and
+//! stable in the consistent-hashing sense (removing one backend only moves
+//! the shards it owned).  Each backend is expected to serve the index
+//! shards the assignment gives it (`similar-index --shards N` writes one
+//! snapshot file per shard).
+//!
+//! Degradation is per-shard: a doc lookup whose owner backend is down
+//! answers `503 Retry-After` for that shard only; a raw-query
+//! scatter-gather over a partly-down fleet still answers `200` from the
+//! healthy shards, flagged with `X-Partial-Results: true` +
+//! `X-Shards-Missing` so callers can tell a full ranking from a partial
+//! one.  Backend connections are per-request and closed by the router
+//! (client side) first, which keeps `TIME_WAIT` off the backends and lets
+//! a restarted backend rebind its port immediately — the recovery path the
+//! e2e test exercises.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::Counter;
+use crate::serve::http;
+use crate::similarity::index::rank_neighbors;
+use crate::similarity::Neighbor;
+use crate::{Error, Result};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+/// Virtual points per backend on the hash ring — enough to spread shards
+/// evenly across small fleets without making ring construction costly.
+const VNODES: usize = 64;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Consistent-hash shard placement: which backend (index into `backends`)
+/// owns each shard `0..shards`.  Pure — the router, the CLI, the tests
+/// and the bench all call this to agree on placement.
+pub fn shard_assignment(backends: &[String], shards: usize) -> Vec<usize> {
+    assert!(!backends.is_empty(), "shard_assignment needs at least one backend");
+    // the ring: 64 virtual points per backend, sorted by hash
+    let mut ring: Vec<(u64, usize)> = Vec::with_capacity(backends.len() * VNODES);
+    for (i, b) in backends.iter().enumerate() {
+        for v in 0..VNODES {
+            ring.push((fnv1a(format!("{b}#{v}").as_bytes()), i));
+        }
+    }
+    ring.sort_unstable();
+    (0..shards)
+        .map(|s| {
+            let key = fnv1a(format!("shard-{s}").as_bytes());
+            // first point clockwise from the shard's key, wrapping
+            match ring.binary_search_by(|&(h, _)| h.cmp(&key)) {
+                Ok(i) => ring[i].1,
+                Err(i) => ring[i % ring.len()].1,
+            }
+        })
+        .collect()
+}
+
+/// Router tuning knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Bind host.
+    pub host: String,
+    /// Bind port; 0 for ephemeral (tests).
+    pub port: u16,
+    /// Backend `host:port` list (each a running `bbit-mh serve`).
+    pub backends: Vec<String>,
+    /// Total shard count of the fleet's index build.
+    pub shards: usize,
+    /// Health poll interval for healthy backends.
+    pub health_poll: Duration,
+    /// Per-probe / per-forward connect+read timeout.
+    pub health_timeout: Duration,
+    /// Consecutive probe failures before a backend is marked down.
+    pub fail_threshold: u32,
+    /// Backoff ceiling for probing a down backend.
+    pub max_backoff: Duration,
+    /// Idle keep-alive client connections close after this long.
+    pub idle_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            backends: Vec::new(),
+            shards: 0,
+            health_poll: Duration::from_millis(200),
+            health_timeout: Duration::from_secs(2),
+            fail_threshold: 2,
+            max_backoff: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Router-side observability, rendered at `GET /metrics`.
+#[derive(Default)]
+pub struct RouterMetrics {
+    pub requests: Counter,
+    /// Requests answered 4xx/5xx for router-side reasons (bad query, all
+    /// backends down, owner shard down).
+    pub errors: Counter,
+    /// Per-shard 503s (owner backend down at lookup time).
+    pub shard_unavailable: Counter,
+    /// Scatter-gather responses that were partial.
+    pub partial_results: Counter,
+    /// Backend forwards that failed at the socket level.
+    pub forward_failures: Counter,
+    /// Up→down and down→up health transitions.
+    pub health_transitions: Counter,
+}
+
+impl RouterMetrics {
+    pub fn render(&self, up: usize, total: usize) -> String {
+        let mut s = format!("route_backends_up {up}\nroute_backends_total {total}\n");
+        for (name, c) in [
+            ("route_requests_total", &self.requests),
+            ("route_errors_total", &self.errors),
+            ("route_shard_unavailable_total", &self.shard_unavailable),
+            ("route_partial_results_total", &self.partial_results),
+            ("route_forward_failures_total", &self.forward_failures),
+            ("route_health_transitions_total", &self.health_transitions),
+        ] {
+            s.push_str(&format!("{name} {}\n", c.get()));
+        }
+        s
+    }
+}
+
+/// Mutable per-backend health state (driven by the poller and by forward
+/// failures).
+struct BackendHealth {
+    healthy: bool,
+    consecutive_fails: u32,
+    next_probe: Instant,
+    backoff: Duration,
+}
+
+struct RouterCtx {
+    cfg: RouterConfig,
+    /// `assignment[shard] == backend index` — fixed for the router's life.
+    assignment: Vec<usize>,
+    health: Mutex<Vec<BackendHealth>>,
+    metrics: RouterMetrics,
+    rr: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl RouterCtx {
+    fn is_healthy(&self, backend: usize) -> bool {
+        self.health.lock().unwrap()[backend].healthy
+    }
+
+    fn healthy_count(&self) -> usize {
+        self.health.lock().unwrap().iter().filter(|b| b.healthy).count()
+    }
+
+    /// A forward just failed at the socket level: treat it as a failed
+    /// probe so traffic stops hitting the backend before the next poll.
+    fn note_forward_failure(&self, backend: usize) {
+        self.metrics.forward_failures.inc();
+        let mut health = self.health.lock().unwrap();
+        let h = &mut health[backend];
+        h.consecutive_fails += 1;
+        if h.healthy && h.consecutive_fails >= self.cfg.fail_threshold {
+            h.healthy = false;
+            h.backoff = self.cfg.health_poll;
+            h.next_probe = Instant::now() + h.backoff;
+            self.metrics.health_transitions.inc();
+        }
+    }
+}
+
+/// A running router; [`shutdown`](Self::shutdown) for a graceful stop.
+pub struct Router {
+    ctx: Arc<RouterCtx>,
+    addr: SocketAddr,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Router {
+    pub fn start(cfg: RouterConfig) -> Result<Self> {
+        if cfg.backends.is_empty() {
+            return Err(Error::InvalidArg("route: --backends must list at least one".into()));
+        }
+        if cfg.shards == 0 {
+            return Err(Error::InvalidArg("route: --shards must be >= 1".into()));
+        }
+        if cfg.fail_threshold == 0 {
+            return Err(Error::InvalidArg("route: fail threshold must be >= 1".into()));
+        }
+        let assignment = shard_assignment(&cfg.backends, cfg.shards);
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
+        let addr = listener.local_addr()?;
+        let now = Instant::now();
+        let health = (0..cfg.backends.len())
+            .map(|_| BackendHealth {
+                // optimistic start: the first failed probe/forward flips it
+                healthy: true,
+                consecutive_fails: 0,
+                next_probe: now,
+                backoff: cfg.health_poll,
+            })
+            .collect();
+        let ctx = Arc::new(RouterCtx {
+            assignment,
+            health: Mutex::new(health),
+            metrics: RouterMetrics::default(),
+            rr: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        });
+        let mut threads = Vec::new();
+        {
+            let ctx = ctx.clone();
+            threads.push(std::thread::spawn(move || health_loop(&ctx)));
+        }
+        {
+            let ctx = ctx.clone();
+            threads.push(std::thread::spawn(move || accept_loop(&ctx, listener)));
+        }
+        Ok(Router { ctx, addr, threads })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.ctx.metrics
+    }
+
+    /// The fixed shard→backend map this router serves with.
+    pub fn assignment(&self) -> &[usize] {
+        &self.ctx.assignment
+    }
+
+    /// Graceful stop; returns the final metrics exposition.
+    pub fn shutdown(mut self) -> String {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.ctx.metrics.render(self.ctx.healthy_count(), self.ctx.cfg.backends.len())
+    }
+}
+
+/// One GET probe against a backend's `/healthz`; body must start `ok`.
+fn probe_backend(backend: &str, timeout: Duration) -> bool {
+    let Ok(mut addrs) = backend.to_socket_addrs() else {
+        return false;
+    };
+    let Some(addr) = addrs.next() else {
+        return false;
+    };
+    let Ok(mut stream) = TcpStream::connect_timeout(&addr, timeout) else {
+        return false;
+    };
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_nodelay(true);
+    if http::write_get(&mut stream, "/healthz").is_err() {
+        return false;
+    }
+    let Ok(clone) = stream.try_clone() else {
+        return false;
+    };
+    match http::read_response(&mut BufReader::new(clone)) {
+        Ok(resp) => resp.status == 200 && resp.body.starts_with(b"ok"),
+        Err(_) => false,
+    }
+}
+
+fn health_loop(ctx: &Arc<RouterCtx>) {
+    while !ctx.shutdown.load(Ordering::Relaxed) {
+        // collect due probes under the lock, probe outside it
+        let due: Vec<(usize, String)> = {
+            let health = ctx.health.lock().unwrap();
+            let now = Instant::now();
+            health
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| now >= h.next_probe)
+                .map(|(i, _)| (i, ctx.cfg.backends[i].clone()))
+                .collect()
+        };
+        for (i, backend) in due {
+            let up = probe_backend(&backend, ctx.cfg.health_timeout);
+            let mut health = ctx.health.lock().unwrap();
+            let h = &mut health[i];
+            let now = Instant::now();
+            if up {
+                if !h.healthy {
+                    ctx.metrics.health_transitions.inc();
+                }
+                h.healthy = true;
+                h.consecutive_fails = 0;
+                h.backoff = ctx.cfg.health_poll;
+                h.next_probe = now + ctx.cfg.health_poll;
+            } else {
+                h.consecutive_fails += 1;
+                if h.healthy && h.consecutive_fails >= ctx.cfg.fail_threshold {
+                    h.healthy = false;
+                    ctx.metrics.health_transitions.inc();
+                }
+                // exponential backoff while down, capped
+                h.backoff = (h.backoff * 2).min(ctx.cfg.max_backoff);
+                h.next_probe = now + if h.healthy { ctx.cfg.health_poll } else { h.backoff };
+            }
+        }
+        std::thread::sleep(ctx.cfg.health_poll.min(Duration::from_millis(50)));
+    }
+}
+
+fn accept_loop(ctx: &Arc<RouterCtx>, listener: TcpListener) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let ctx2 = ctx.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("bbmh-route".into())
+                    .spawn(move || handle_conn(&ctx2, stream));
+                if spawned.is_err() {
+                    ctx.metrics.errors.inc();
+                }
+            }
+            Err(_) => {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn handle_conn(ctx: &Arc<RouterCtx>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(ctx.cfg.idle_timeout));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(Error::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
+            Err(_) => {
+                ctx.metrics.errors.inc();
+                let _ =
+                    http::write_response(&mut stream, 400, "Bad Request", &[], b"bad request\n");
+                break;
+            }
+        };
+        ctx.metrics.requests.inc();
+        let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::Relaxed);
+        let io_ok = match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/similar") => handle_similar(ctx, &req, &mut stream),
+            ("POST", "/score") => handle_score(ctx, &req, &mut stream),
+            ("GET", "/metrics") => {
+                let body =
+                    ctx.metrics.render(ctx.healthy_count(), ctx.cfg.backends.len());
+                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+            }
+            ("GET", "/healthz") => {
+                let health = ctx.health.lock().unwrap();
+                let up = health.iter().filter(|h| h.healthy).count();
+                let mut body =
+                    format!("ok backends={up}/{} shards={}\n", health.len(), ctx.cfg.shards);
+                for (i, h) in health.iter().enumerate() {
+                    let shards: Vec<String> = ctx
+                        .assignment
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &b)| b == i)
+                        .map(|(s, _)| s.to_string())
+                        .collect();
+                    body.push_str(&format!(
+                        "backend {} {} shards={}\n",
+                        ctx.cfg.backends[i],
+                        if h.healthy { "up" } else { "down" },
+                        shards.join(",")
+                    ));
+                }
+                drop(health);
+                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+            }
+            _ => http::write_response(&mut stream, 404, "Not Found", &[], b"not found\n")
+                .is_ok(),
+        };
+        if !io_ok || !keep {
+            break;
+        }
+    }
+}
+
+/// Forward one POST to a backend over a fresh connection; the router
+/// closes its side first, so backend sockets never linger in `TIME_WAIT`.
+fn forward_post(
+    ctx: &Arc<RouterCtx>,
+    backend: usize,
+    path: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+) -> Option<http::Response> {
+    let name = &ctx.cfg.backends[backend];
+    let result = (|| -> Result<http::Response> {
+        let addr = name
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| Error::InvalidArg(format!("backend {name} does not resolve")))?;
+        let mut stream = TcpStream::connect_timeout(&addr, ctx.cfg.health_timeout)?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(ctx.cfg.health_timeout));
+        http::write_post_with(&mut stream, path, headers, body)?;
+        let clone = stream.try_clone()?;
+        http::read_response(&mut BufReader::new(clone))
+    })();
+    match result {
+        Ok(resp) => Some(resp),
+        Err(_) => {
+            ctx.note_forward_failure(backend);
+            None
+        }
+    }
+}
+
+/// `/score` just needs *a* healthy backend: round-robin over the fleet.
+fn handle_score(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStream) -> bool {
+    let n = ctx.cfg.backends.len();
+    let start = ctx.rr.fetch_add(1, Ordering::Relaxed);
+    for probe in 0..n {
+        let backend = (start + probe) % n;
+        if !ctx.is_healthy(backend) {
+            continue;
+        }
+        if let Some(resp) = forward_post(ctx, backend, "/score", &[], &req.body) {
+            let headers = relay_headers(&resp);
+            let reason = reason_for(resp.status);
+            return http::write_response(stream, resp.status, reason, &headers, &resp.body)
+                .is_ok();
+        }
+    }
+    ctx.metrics.errors.inc();
+    http::write_response(
+        stream,
+        503,
+        "Service Unavailable",
+        &[("Retry-After", "1".to_string())],
+        b"no healthy backend\n",
+    )
+    .is_ok()
+}
+
+/// Headers safe to relay from a backend response (`write_response` frames
+/// the body itself, so length/type/connection must not be duplicated).
+fn relay_headers(resp: &http::Response) -> Vec<(&str, String)> {
+    resp.headers
+        .iter()
+        .filter(|(k, _)| !matches!(k.as_str(), "content-length" | "content-type" | "connection"))
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect()
+}
+
+fn reason_for(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Response",
+    }
+}
+
+/// `/similar`: doc lookups route to the owner shard's backend; raw queries
+/// scatter to every assigned backend and merge.
+fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStream) -> bool {
+    let text = String::from_utf8_lossy(&req.body);
+    let line = text.lines().map(str::trim).find(|l| !l.is_empty() && !l.starts_with('#'));
+    let top_k_hdr: Vec<(&str, String)> = match req.header("x-top-k") {
+        Some(v) => vec![("X-Top-K", v.to_string())],
+        None => Vec::new(),
+    };
+    let top_k = req
+        .header("x-top-k")
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|k| k.clamp(1, 1000))
+        .unwrap_or(10);
+    let Some(line) = line else {
+        ctx.metrics.errors.inc();
+        return http::write_response(stream, 400, "Bad Request", &[], b"empty query body\n")
+            .is_ok();
+    };
+
+    // ---- doc:<id>: single-shard routed lookup --------------------------
+    if let Some(id) = line.strip_prefix("doc:") {
+        let Ok(id) = id.trim().parse::<u64>() else {
+            ctx.metrics.errors.inc();
+            let body = format!("bad doc id {:?}\n", id.trim());
+            return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes())
+                .is_ok();
+        };
+        let shard = (id % ctx.cfg.shards as u64) as usize;
+        let backend = ctx.assignment[shard];
+        if ctx.is_healthy(backend) {
+            if let Some(resp) =
+                forward_post(ctx, backend, "/similar", &top_k_hdr, req.body.as_slice())
+            {
+                let headers = relay_headers(&resp);
+                let reason = reason_for(resp.status);
+                return http::write_response(
+                    stream,
+                    resp.status,
+                    reason,
+                    &headers,
+                    &resp.body,
+                )
+                .is_ok();
+            }
+        }
+        // owner backend down (or the forward just failed): that shard —
+        // and only that shard — is unavailable
+        ctx.metrics.shard_unavailable.inc();
+        ctx.metrics.errors.inc();
+        let body = format!("shard {shard} unavailable\n");
+        return http::write_response(
+            stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", "1".to_string())],
+            body.as_bytes(),
+        )
+        .is_ok();
+    }
+
+    // ---- raw query: scatter to every assigned backend, merge -----------
+    // distinct backends that own at least one shard
+    let mut targets: Vec<usize> = ctx.assignment.clone();
+    targets.sort_unstable();
+    targets.dedup();
+    let mut merged: Vec<Neighbor> = Vec::new();
+    let mut candidates = 0u64;
+    let mut reranked = 0u64;
+    let mut missing: Vec<usize> = Vec::new();
+    let results: Vec<(usize, Option<http::Response>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = targets
+            .iter()
+            .map(|&backend| {
+                let hdr = &top_k_hdr;
+                let body = req.body.as_slice();
+                scope.spawn(move || {
+                    if !ctx.is_healthy(backend) {
+                        return (backend, None);
+                    }
+                    (backend, forward_post(ctx, backend, "/similar", hdr, body))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (backend, resp) in results {
+        let ok = match resp {
+            Some(resp) if resp.status == 200 => {
+                for l in resp.body_text().lines() {
+                    let mut parts = l.split_ascii_whitespace();
+                    if let (Some(id), Some(est)) = (parts.next(), parts.next()) {
+                        if let (Ok(id), Ok(estimate)) = (id.parse(), est.parse()) {
+                            merged.push(Neighbor { id, estimate });
+                        }
+                    }
+                }
+                candidates += resp
+                    .header("x-candidates")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(0);
+                reranked += resp
+                    .header("x-reranked")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(0);
+                true
+            }
+            // a 4xx/5xx or socket failure from one backend degrades that
+            // backend's shards only
+            _ => false,
+        };
+        if !ok {
+            missing.extend(
+                ctx.assignment
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b == backend)
+                    .map(|(s, _)| s),
+            );
+        }
+    }
+    if missing.len() == ctx.cfg.shards {
+        ctx.metrics.errors.inc();
+        return http::write_response(
+            stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", "1".to_string())],
+            b"no healthy shard\n",
+        )
+        .is_ok();
+    }
+    // same ranking rule as the in-process query, so a fleet merge over
+    // disjoint shards reproduces the single-index top-K exactly
+    rank_neighbors(&mut merged, top_k);
+    let mut lines = String::new();
+    for h in &merged {
+        lines.push_str(&format!("{} {}\n", h.id, h.estimate));
+    }
+    let mut headers = vec![
+        ("X-Candidates", candidates.to_string()),
+        ("X-Reranked", reranked.to_string()),
+    ];
+    if !missing.is_empty() {
+        ctx.metrics.partial_results.inc();
+        missing.sort_unstable();
+        let list: Vec<String> = missing.iter().map(|s| s.to_string()).collect();
+        headers.push(("X-Partial-Results", "true".to_string()));
+        headers.push(("X-Shards-Missing", list.join(",")));
+    }
+    http::write_response(stream, 200, "OK", &headers, lines.as_bytes()).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7000")).collect()
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_total() {
+        let backends = fleet(3);
+        let a = shard_assignment(&backends, 16);
+        let b = shard_assignment(&backends, 16);
+        assert_eq!(a, b, "same fleet must always map the same");
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&i| i < 3));
+        // with 64 vnodes per backend, a 3-way fleet should use everyone
+        let mut used = a.clone();
+        used.sort_unstable();
+        used.dedup();
+        assert_eq!(used.len(), 3, "every backend should own some shard: {a:?}");
+    }
+
+    #[test]
+    fn removing_a_backend_only_moves_its_own_shards() {
+        let full = fleet(4);
+        let a = shard_assignment(&full, 32);
+        // drop backend 2; survivors must keep every shard they had
+        let reduced: Vec<String> =
+            full.iter().enumerate().filter(|(i, _)| *i != 2).map(|(_, b)| b.clone()).collect();
+        let b = shard_assignment(&reduced, 32);
+        for s in 0..32 {
+            if a[s] != 2 {
+                // map old index → reduced index (2 removed shifts later ones)
+                let expect = if a[s] < 2 { a[s] } else { a[s] - 1 };
+                assert_eq!(
+                    b[s], expect,
+                    "shard {s} moved off a surviving backend — not consistent"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn start_rejects_degenerate_configs() {
+        let cfg = RouterConfig { backends: Vec::new(), shards: 2, ..Default::default() };
+        assert!(Router::start(cfg).is_err());
+        let cfg =
+            RouterConfig { backends: fleet(2), shards: 0, ..Default::default() };
+        assert!(Router::start(cfg).is_err());
+        let cfg = RouterConfig {
+            backends: fleet(2),
+            shards: 2,
+            fail_threshold: 0,
+            ..Default::default()
+        };
+        assert!(Router::start(cfg).is_err());
+    }
+}

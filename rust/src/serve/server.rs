@@ -18,8 +18,18 @@
 //!   printed with `f32`'s round-tripping `Display`, plus an
 //!   `X-Model-Epoch` header.  `503 Retry-After: 1` when admission sheds,
 //!   `504` when the per-request deadline expires, `400` on parse errors.
+//! - `POST /similar` — only when started with a similarity index
+//!   ([`ModelServer::start_with_index`] / `serve --similar-index`).  Body:
+//!   one query — either `doc:<id>` for an already-indexed record or a
+//!   LibSVM line hashed at query time; optional `X-Top-K` header (default
+//!   10).  Response: `<id> <estimate>` per neighbor plus `X-Candidates` /
+//!   `X-Reranked` work headers.  The job flows through the *same* batcher,
+//!   so admission shedding (503) and deadline expiry (504) behave exactly
+//!   like `/score`; `404` for unknown doc ids or when no index is loaded.
 //! - `GET /metrics` — counter/histogram exposition ([`ServeMetrics`]).
-//! - `GET /healthz` — liveness + current model epoch/spec.
+//! - `GET /healthz` — liveness + current model epoch/spec (+ resident
+//!   similarity shards when an index is attached — the router's health
+//!   poller reads this).
 //!
 //! Admission control, batching and hot reload live in their own modules
 //! ([`batcher`](crate::serve::batcher), [`registry`](crate::serve::registry));
@@ -39,9 +49,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::metrics::{Counter, Histogram};
-use crate::serve::batcher::{Batcher, ScoreJob, ScoreOutcome};
+use crate::serve::batcher::{Batcher, JobTask, ScoreJob, ScoreOutcome};
 use crate::serve::http;
 use crate::serve::registry::ModelRegistry;
+use crate::similarity::LshIndex;
 use crate::{Error, Result};
 
 /// Server tuning knobs.
@@ -106,12 +117,24 @@ pub struct ServeMetrics {
     pub reloads: Counter,
     /// Failed reload attempts (file changed but would not load).
     pub reload_errors: Counter,
+    /// `/similar` queries received (pre-admission).
+    pub similar_received: Counter,
+    /// `/similar` queries answered by a worker.
+    pub similar_served: Counter,
     /// Scored micro-batch sizes.
     pub batch_size: Histogram,
     /// Per-document queue wait, microseconds.
     pub queue_wait_us: Histogram,
     /// Per-score-request wall latency inside the handler, microseconds.
     pub latency_us: Histogram,
+    /// Bucket hits per `/similar` query, pre-dedup (candidate volume).
+    pub similar_candidates: Histogram,
+    /// Distinct rows re-ranked per `/similar` query (verify depth).
+    pub similar_rerank_depth: Histogram,
+    /// Largest bucket per band, observed once at index attach — the
+    /// bucket-skew signal (a huge max against a small mean means one hot
+    /// key dominates that band).
+    pub similar_bucket_max: Histogram,
 }
 
 impl ServeMetrics {
@@ -129,6 +152,8 @@ impl ServeMetrics {
             ("serve_http_errors_total", &self.http_errors),
             ("serve_model_reloads_total", &self.reloads),
             ("serve_model_reload_errors_total", &self.reload_errors),
+            ("serve_similar_received_total", &self.similar_received),
+            ("serve_similar_served_total", &self.similar_served),
         ] {
             s.push_str(&format!("{name} {}\n", c.get()));
         }
@@ -136,6 +161,9 @@ impl ServeMetrics {
             ("serve_batch_size", &self.batch_size),
             ("serve_queue_wait_us", &self.queue_wait_us),
             ("serve_request_latency_us", &self.latency_us),
+            ("serve_similar_candidates", &self.similar_candidates),
+            ("serve_similar_rerank_depth", &self.similar_rerank_depth),
+            ("serve_similar_bucket_max", &self.similar_bucket_max),
         ] {
             s.push_str(&format!(
                 "{name}_count {}\n{name}_p50 {}\n{name}_p99 {}\n",
@@ -154,6 +182,9 @@ struct ServerCtx {
     batcher: Batcher,
     registry: ModelRegistry,
     metrics: ServeMetrics,
+    /// The similarity index behind `POST /similar`, when one was attached
+    /// at startup.  Immutable once loaded (rebuild + restart to refresh).
+    similar: Option<Arc<LshIndex>>,
     shutdown: AtomicBool,
 }
 
@@ -169,6 +200,16 @@ impl ModelServer {
     /// Load the model at `path`, bind, and start the accept / scorer /
     /// reload-watcher threads.
     pub fn start<P: AsRef<Path>>(model_path: P, cfg: ServeConfig) -> Result<Self> {
+        Self::start_with_index(model_path, cfg, None)
+    }
+
+    /// [`start`](Self::start), plus a similarity index enabling
+    /// `POST /similar` on this server.
+    pub fn start_with_index<P: AsRef<Path>>(
+        model_path: P,
+        cfg: ServeConfig,
+        similar: Option<Arc<LshIndex>>,
+    ) -> Result<Self> {
         if cfg.scorer_workers == 0 || cfg.batch_max == 0 || cfg.queue_cap == 0 {
             return Err(Error::InvalidArg(
                 "serve: workers, batch-max and queue must all be positive".into(),
@@ -177,10 +218,18 @@ impl ModelServer {
         let registry = ModelRegistry::open(model_path)?;
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
         let addr = listener.local_addr()?;
+        let metrics = ServeMetrics::default();
+        if let Some(idx) = &similar {
+            // one-shot skew snapshot: per-band max bucket sizes
+            for band in idx.band_stats() {
+                metrics.similar_bucket_max.observe(band.max_bucket as u64);
+            }
+        }
         let ctx = Arc::new(ServerCtx {
             batcher: Batcher::new(cfg.queue_cap),
             registry,
-            metrics: ServeMetrics::default(),
+            metrics,
+            similar,
             shutdown: AtomicBool::new(false),
             cfg,
         });
@@ -282,6 +331,8 @@ fn scorer_loop(ctx: &Arc<ServerCtx>) {
     let mut batch: Vec<ScoreJob> = Vec::with_capacity(ctx.cfg.batch_max);
     // per-worker scratch, re-drawn only when a hot reload changes the model
     let mut scratch = None;
+    // per-worker signature scratch for /similar (the index never reloads)
+    let mut sim_scratch = None;
     while ctx.batcher.next_batch(ctx.cfg.batch_max, ctx.cfg.batch_wait, &mut batch) {
         ctx.metrics.batch_size.observe(batch.len() as u64);
         let em = ctx.registry.current();
@@ -302,10 +353,50 @@ fn scorer_loop(ctx: &Arc<ServerCtx>) {
                 let _ = job.resp.send(ScoreOutcome::Expired);
                 continue;
             }
-            let margin = em.model.margin(&job.indices, sc);
-            ctx.metrics.docs_scored.inc();
-            // a handler that timed out and left is fine — send just fails
-            let _ = job.resp.send(ScoreOutcome::Margin { margin, epoch: em.epoch });
+            match job.task {
+                JobTask::Score => {
+                    let margin = em.model.margin(&job.indices, sc);
+                    ctx.metrics.docs_scored.inc();
+                    // a handler that timed out and left is fine — send
+                    // just fails
+                    let _ =
+                        job.resp.send(ScoreOutcome::Margin { margin, epoch: em.epoch });
+                }
+                JobTask::SimilarRaw { top_k } | JobTask::SimilarDoc { top_k, .. } => {
+                    // /similar is only routable with an index attached
+                    let idx = ctx.similar.as_ref().expect("similar job without index");
+                    let answered = match job.task {
+                        JobTask::SimilarRaw { .. } => {
+                            let ss = sim_scratch.get_or_insert_with(|| idx.scratch());
+                            match idx.hash_query(&job.indices, &mut *ss) {
+                                Ok(()) => idx.query(&ss.codes, top_k),
+                                Err(e) => Err(e),
+                            }
+                        }
+                        JobTask::SimilarDoc { id, .. } => idx.query_doc(id, top_k),
+                        JobTask::Score => unreachable!(),
+                    };
+                    let outcome = match answered {
+                        Ok((hits, stats)) => {
+                            ctx.metrics.similar_served.inc();
+                            ctx.metrics
+                                .similar_candidates
+                                .observe(stats.candidates as u64);
+                            ctx.metrics
+                                .similar_rerank_depth
+                                .observe(stats.reranked as u64);
+                            ScoreOutcome::Neighbors {
+                                hits,
+                                candidates: stats.candidates as u64,
+                                reranked: stats.reranked as u64,
+                            }
+                        }
+                        // absent shard / unknown id / bad width → 404
+                        Err(_) => ScoreOutcome::NotFound,
+                    };
+                    let _ = job.resp.send(outcome);
+                }
+            }
         }
     }
 }
@@ -350,6 +441,7 @@ fn handle_conn(ctx: &Arc<ServerCtx>, mut stream: TcpStream) {
         let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::Relaxed);
         let io_ok = match (req.method.as_str(), req.path.as_str()) {
             ("POST", "/score") => handle_score(ctx, &req.body, &mut stream),
+            ("POST", "/similar") => handle_similar(ctx, &req, &mut stream),
             ("GET", "/metrics") => {
                 let body = ctx
                     .metrics
@@ -358,12 +450,24 @@ fn handle_conn(ctx: &Arc<ServerCtx>, mut stream: TcpStream) {
             }
             ("GET", "/healthz") => {
                 let em = ctx.registry.current();
-                let body = format!(
-                    "ok epoch={} scheme={} dim={}\n",
+                let mut body = format!(
+                    "ok epoch={} scheme={} dim={}",
                     em.epoch,
                     em.model.spec.scheme(),
                     em.model.model.w.len()
                 );
+                if let Some(idx) = &ctx.similar {
+                    // "similar_shards=0,2/4": resident shard ids / total —
+                    // the router's health poller parses this
+                    let ids: Vec<String> =
+                        idx.shard_ids().iter().map(|s| s.to_string()).collect();
+                    body.push_str(&format!(
+                        " similar_shards={}/{}",
+                        ids.join(","),
+                        idx.num_shards()
+                    ));
+                }
+                body.push('\n');
                 http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
             }
             _ => http::write_response(&mut stream, 404, "Not Found", &[], b"not found\n")
@@ -423,7 +527,13 @@ fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream) -> bo
             Ok(Some(indices)) => {
                 ctx.metrics.docs_received.inc();
                 let (tx, rx) = sync_channel(1);
-                let job = ScoreJob { indices, enqueued: Instant::now(), deadline, resp: tx };
+                let job = ScoreJob {
+                    task: JobTask::Score,
+                    indices,
+                    enqueued: Instant::now(),
+                    deadline,
+                    resp: tx,
+                };
                 match ctx.batcher.try_enqueue(job) {
                     Ok(()) => pending.push(rx),
                     Err(_) => {
@@ -490,6 +600,121 @@ fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream) -> bo
     .is_ok()
 }
 
+/// The `/similar` route: one query per request (first non-blank body
+/// line), admitted through the same batcher as `/score` so overload and
+/// deadline semantics are identical across endpoints.
+fn handle_similar(ctx: &Arc<ServerCtx>, req: &http::Request, stream: &mut TcpStream) -> bool {
+    let t0 = Instant::now();
+    if ctx.similar.is_none() {
+        return http::write_response(
+            stream,
+            404,
+            "Not Found",
+            &[],
+            b"no similarity index loaded (serve --similar-index)\n",
+        )
+        .is_ok();
+    }
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        ctx.metrics.http_errors.inc();
+        return http::write_response(stream, 400, "Bad Request", &[], b"body is not utf-8\n")
+            .is_ok();
+    };
+    let top_k = match req.header("x-top-k") {
+        None => 10,
+        Some(v) => match v.trim().parse::<usize>() {
+            Ok(k) => k.clamp(1, 1000),
+            Err(_) => {
+                ctx.metrics.http_errors.inc();
+                let body = format!("bad X-Top-K header {v:?}\n");
+                return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes())
+                    .is_ok();
+            }
+        },
+    };
+    // first meaningful line is the query; either doc:<id> or a LibSVM line
+    let line = text.lines().map(str::trim).find(|l| !l.is_empty() && !l.starts_with('#'));
+    let parsed = match line {
+        None => Err("empty query body".to_string()),
+        Some(l) => match l.strip_prefix("doc:") {
+            Some(id) => id
+                .trim()
+                .parse::<u64>()
+                .map(|id| (JobTask::SimilarDoc { id, top_k }, Vec::new()))
+                .map_err(|_| format!("bad doc id {id:?}")),
+            None => match parse_doc_line(l) {
+                Ok(Some(indices)) => Ok((JobTask::SimilarRaw { top_k }, indices)),
+                Ok(None) => Err("empty query body".to_string()),
+                Err(msg) => Err(msg),
+            },
+        },
+    };
+    let (task, indices) = match parsed {
+        Ok(x) => x,
+        Err(msg) => {
+            ctx.metrics.http_errors.inc();
+            let body = format!("bad query: {msg}\n");
+            return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes())
+                .is_ok();
+        }
+    };
+    ctx.metrics.similar_received.inc();
+    let deadline = Instant::now() + ctx.cfg.deadline;
+    let (tx, rx) = sync_channel(1);
+    let job = ScoreJob { task, indices, enqueued: Instant::now(), deadline, resp: tx };
+    if ctx.batcher.try_enqueue(job).is_err() {
+        ctx.metrics.docs_shed.inc();
+        return http::write_response(
+            stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", "1".to_string())],
+            b"shed: admission queue full\n",
+        )
+        .is_ok();
+    }
+    let grace = ctx.cfg.batch_wait * 2 + Duration::from_millis(100);
+    let budget = deadline.saturating_duration_since(Instant::now()) + grace;
+    let outcome = rx.recv_timeout(budget);
+    ctx.metrics.latency_us.observe(t0.elapsed().as_micros() as u64);
+    match outcome {
+        Ok(ScoreOutcome::Neighbors { hits, candidates, reranked }) => {
+            let mut lines = String::new();
+            for h in &hits {
+                // f64 Display round-trips: clients can compare estimates
+                // bit-for-bit against the offline near_duplicates path
+                lines.push_str(&format!("{} {}\n", h.id, h.estimate));
+            }
+            http::write_response(
+                stream,
+                200,
+                "OK",
+                &[
+                    ("X-Candidates", candidates.to_string()),
+                    ("X-Reranked", reranked.to_string()),
+                ],
+                lines.as_bytes(),
+            )
+            .is_ok()
+        }
+        Ok(ScoreOutcome::NotFound) => http::write_response(
+            stream,
+            404,
+            "Not Found",
+            &[],
+            b"doc not in this index's resident shards\n",
+        )
+        .is_ok(),
+        // Expired from the worker, or the worker never got to it within
+        // the budget (the worker counts the expiry itself either way)
+        Ok(ScoreOutcome::Expired) | Err(_) => {
+            http::write_response(stream, 504, "Gateway Timeout", &[], b"deadline expired\n")
+                .is_ok()
+        }
+        Ok(ScoreOutcome::Margin { .. }) => unreachable!("similar job answered with a margin"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -521,6 +746,11 @@ mod tests {
             "serve_batch_size_count 1",
             "serve_request_latency_us_p99",
             "serve_model_reloads_total 0",
+            "serve_similar_received_total 0",
+            "serve_similar_served_total 0",
+            "serve_similar_candidates_count 0",
+            "serve_similar_rerank_depth_p99",
+            "serve_similar_bucket_max_count 0",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

@@ -1,0 +1,613 @@
+//! The owned, sharded LSH index (see the module docs in
+//! [`crate::similarity`]).
+//!
+//! Build paths: [`LshIndex::build_from_cache`] (out-of-core, through the
+//! replay reader pool) and [`LshIndex::from_codes`] (in-memory — the
+//! near-duplicates example and the offline/online parity tests).  Query
+//! paths: [`LshIndex::query`] over a hashed signature and
+//! [`LshIndex::query_doc`] over an indexed record id.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::encode::encoder::{EncodeScratch, FeatureEncoder};
+use crate::encode::packed::PackedCodes;
+use crate::encode::EncoderSpec;
+use crate::hashing::lsh::{band_key_codes, LshConfig};
+use crate::{Error, Result};
+
+/// One ranked near-neighbor: the record's global id (its row number in
+/// the cache the index was built from) and its P̂_b code-agreement
+/// estimate in `[0, 1]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub id: u64,
+    pub estimate: f64,
+}
+
+/// Work accounting for one query (drives the serve-path histograms).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Bucket hits across all bands and shards, before deduplication.
+    pub candidates: usize,
+    /// Distinct rows re-ranked (post-dedup) — the verify-step depth.
+    pub reranked: usize,
+}
+
+/// Per-band bucket occupancy, aggregated across the local shards — the
+/// skew signal (`max_bucket` ≫ `mean_bucket` means one key is hot and
+/// that band contributes little selectivity).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandStats {
+    pub band: usize,
+    /// Distinct keys in this band's tables.
+    pub buckets: usize,
+    /// Largest single bucket.
+    pub max_bucket: usize,
+    /// Rows per bucket on average.
+    pub mean_bucket: f64,
+}
+
+/// One resident shard: the rows whose `id % num_shards == shard_id`.
+pub(crate) struct IndexShard {
+    pub(crate) shard_id: usize,
+    /// Packed signatures, one row per indexed record row.
+    pub(crate) codes: PackedCodes,
+    /// Global record id per local row, ascending (build emits in order).
+    pub(crate) row_ids: Vec<u64>,
+    /// One table per band: band key → local row ids (derived data —
+    /// rebuilt from `codes` on snapshot load, never serialized).
+    tables: Vec<HashMap<u64, Vec<u32>>>,
+}
+
+impl IndexShard {
+    fn new(shard_id: usize, b: u32, k: usize, bands: usize) -> Self {
+        IndexShard {
+            shard_id,
+            codes: PackedCodes::new(b, k),
+            row_ids: Vec::new(),
+            tables: vec![HashMap::new(); bands],
+        }
+    }
+
+    /// Append one signature and bucket it into every band table.
+    fn push(&mut self, id: u64, sig: &[u16], cfg: &LshConfig) -> Result<()> {
+        let local = self.codes.n as u32;
+        self.codes.push_row(sig)?;
+        self.row_ids.push(id);
+        for (band, table) in self.tables.iter_mut().enumerate() {
+            let key = band_key_codes(sig, band, cfg.rows_per_band);
+            table.entry(key).or_default().push(local);
+        }
+        Ok(())
+    }
+
+    /// Reassemble a shard from snapshot parts: band tables are derived
+    /// data, rebuilt here in local-row order — the same insertion order
+    /// the build path uses, so loaded and built shards query identically.
+    pub(crate) fn from_loaded(
+        shard_id: usize,
+        codes: PackedCodes,
+        row_ids: Vec<u64>,
+        cfg: &LshConfig,
+    ) -> Self {
+        let mut shard = IndexShard { shard_id, codes, row_ids, tables: Vec::new() };
+        shard.rebuild_tables(cfg);
+        shard
+    }
+
+    /// Rebuild the band tables from the signatures (snapshot load).
+    fn rebuild_tables(&mut self, cfg: &LshConfig) {
+        self.tables = vec![HashMap::new(); cfg.bands];
+        let mut sig = vec![0u16; self.codes.k];
+        for row in 0..self.codes.n {
+            self.codes.row_into(row, &mut sig);
+            for (band, table) in self.tables.iter_mut().enumerate() {
+                let key = band_key_codes(&sig, band, cfg.rows_per_band);
+                table.entry(key).or_default().push(row as u32);
+            }
+        }
+    }
+}
+
+/// The owned, sharded LSH index (module docs: [`crate::similarity`]).
+pub struct LshIndex {
+    spec: EncoderSpec,
+    cfg: LshConfig,
+    /// Total sharding factor chosen at build time (`id % num_shards`
+    /// places a record); this process may hold any subset of the shards.
+    num_shards: usize,
+    /// Resident shards, ascending by `shard_id`.
+    shards: Vec<IndexShard>,
+    /// Query-side hasher, drawn from `spec` — the exact family that
+    /// produced the indexed signatures.
+    encoder: Box<dyn FeatureEncoder>,
+}
+
+impl LshIndex {
+    fn validate_geometry(spec: &EncoderSpec, cfg: &LshConfig) -> Result<(u32, usize)> {
+        let (b, k) = spec.packed_geometry().ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "similarity index needs packed codes; encoder {} emits sparse rows",
+                spec.scheme()
+            ))
+        })?;
+        if cfg.bands == 0 || cfg.rows_per_band == 0 {
+            return Err(Error::InvalidArg("bands and rows-per-band must be >= 1".into()));
+        }
+        if k < cfg.signature_width() {
+            return Err(Error::InvalidArg(format!(
+                "signature needs {} codes, have k={k}",
+                cfg.signature_width()
+            )));
+        }
+        Ok((b, k))
+    }
+
+    /// The documented banding caveat (hashing/lsh.rs): at b < 4 a band
+    /// chance-collides at ≈ 2^-br and candidate sets flood.  Warn at
+    /// build time only — snapshot loads stay quiet.
+    fn warn_low_b(b: u32) {
+        if b < 4 {
+            eprintln!(
+                "warning: building LSH index over b={b} codes; b >= 4 recommended for \
+                 banding (chance band collisions ≈ 2^-(b*rows))"
+            );
+        }
+    }
+
+    pub(crate) fn from_parts(
+        spec: EncoderSpec,
+        cfg: LshConfig,
+        num_shards: usize,
+        mut shards: Vec<IndexShard>,
+    ) -> Result<Self> {
+        Self::validate_geometry(&spec, &cfg)?;
+        if num_shards == 0 {
+            return Err(Error::InvalidArg("num_shards must be >= 1".into()));
+        }
+        shards.sort_by_key(|s| s.shard_id);
+        for pair in shards.windows(2) {
+            if pair[0].shard_id == pair[1].shard_id {
+                return Err(Error::InvalidArg(format!(
+                    "duplicate shard {} in index",
+                    pair[0].shard_id
+                )));
+            }
+        }
+        for s in &shards {
+            if s.shard_id >= num_shards {
+                return Err(Error::InvalidArg(format!(
+                    "shard id {} out of range (num_shards {num_shards})",
+                    s.shard_id
+                )));
+            }
+        }
+        let encoder = spec.encoder()?;
+        Ok(LshIndex { spec, cfg, num_shards, shards, encoder })
+    }
+
+    /// Build from an in-memory code matrix (row id == row number) — the
+    /// offline form the near-duplicates example uses.  `shards = 1` keeps
+    /// every pair co-resident and reproduces the
+    /// [`crate::hashing::lsh::LshIndex`] results exactly.
+    pub fn from_codes(
+        codes: &PackedCodes,
+        spec: EncoderSpec,
+        cfg: LshConfig,
+        shards: usize,
+    ) -> Result<Self> {
+        let (b, k) = Self::validate_geometry(&spec, &cfg)?;
+        if (codes.b, codes.k) != (b, k) {
+            return Err(Error::InvalidArg(format!(
+                "codes geometry (b={}, k={}) does not match encoder {} (b={b}, k={k})",
+                codes.b,
+                codes.k,
+                spec.scheme()
+            )));
+        }
+        if shards == 0 {
+            return Err(Error::InvalidArg("--shards must be >= 1".into()));
+        }
+        Self::warn_low_b(b);
+        let mut parts: Vec<IndexShard> =
+            (0..shards).map(|s| IndexShard::new(s, b, k, cfg.bands)).collect();
+        let mut sig = vec![0u16; k];
+        for row in 0..codes.n {
+            codes.row_into(row, &mut sig);
+            let id = row as u64;
+            parts[(id % shards as u64) as usize].push(id, &sig, &cfg)?;
+        }
+        Self::from_parts(spec, cfg, shards, parts)
+    }
+
+    /// Build out-of-core from a v3 hashed cache through the
+    /// [`replay_cache`](crate::coordinator::replay::replay_cache) reader
+    /// pool.  The pool emits records strictly in order for every thread
+    /// count, so the built shards — row ids, signature order, bucket
+    /// contents — are identical for every `replay_threads`.
+    pub fn build_from_cache<P: AsRef<Path>>(
+        cache: P,
+        cfg: LshConfig,
+        shards: usize,
+        replay_threads: usize,
+    ) -> Result<Self> {
+        let cache = cache.as_ref();
+        if shards == 0 {
+            return Err(Error::InvalidArg("--shards must be >= 1".into()));
+        }
+        let meta = crate::encode::cache::CacheReader::open(cache)?.meta();
+        let spec = meta.spec;
+        let (b, k) = Self::validate_geometry(&spec, &cfg)?;
+        Self::warn_low_b(b);
+        let mut parts: Vec<IndexShard> =
+            (0..shards).map(|s| IndexShard::new(s, b, k, cfg.bands)).collect();
+        let mut sig = vec![0u16; k];
+        crate::coordinator::replay::replay_cache(
+            cache,
+            replay_threads,
+            |_record, row0, codes, _labels| {
+                for row in 0..codes.n {
+                    codes.row_into(row, &mut sig);
+                    let id = row0 + row as u64;
+                    parts[(id % shards as u64) as usize].push(id, &sig, &cfg)?;
+                }
+                Ok(())
+            },
+        )?;
+        Self::from_parts(spec, cfg, shards, parts)
+    }
+
+    pub fn spec(&self) -> EncoderSpec {
+        self.spec
+    }
+
+    pub fn config(&self) -> LshConfig {
+        self.cfg
+    }
+
+    /// Total sharding factor chosen at build time.
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// The shards resident in this index, ascending.
+    pub fn shard_ids(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.shard_id).collect()
+    }
+
+    pub fn has_shard(&self, shard: usize) -> bool {
+        self.shards.iter().any(|s| s.shard_id == shard)
+    }
+
+    /// Which shard a record id lives in (the build-time placement rule).
+    pub fn owner_shard(&self, id: u64) -> usize {
+        (id % self.num_shards as u64) as usize
+    }
+
+    /// Rows resident across the local shards.
+    pub fn rows(&self) -> usize {
+        self.shards.iter().map(|s| s.codes.n).sum()
+    }
+
+    /// Signature width in codes (`k` of the underlying scheme).
+    pub fn signature_len(&self) -> usize {
+        self.spec.packed_geometry().map(|(_, k)| k).unwrap_or(0)
+    }
+
+    /// Resident signature bytes (the b-bit storage story: this is what a
+    /// serve replica actually holds per row).
+    pub fn storage_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.codes.storage_bytes()).sum()
+    }
+
+    /// Fresh scratch for [`hash_query`](Self::hash_query).
+    pub fn scratch(&self) -> EncodeScratch {
+        self.encoder.scratch()
+    }
+
+    /// Hash one raw document (sorted feature indices) into the signature
+    /// family this index was built from; the codes land in
+    /// `scratch.codes`.
+    pub fn hash_query(&self, set: &[u32], scratch: &mut EncodeScratch) -> Result<()> {
+        if !self.encoder.signature_into(set, scratch) {
+            // unreachable for any spec that passed validate_geometry
+            return Err(Error::InvalidArg(format!(
+                "encoder {} emits no packed signature",
+                self.spec.scheme()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Top-K near neighbors of a hashed signature across the local
+    /// shards: banded candidate lookup, then a P̂_b re-rank through the
+    /// whole-row decode kernel.  Ties break toward the smaller id, so a
+    /// scatter-gather merge over disjoint shard subsets reproduces the
+    /// single-process ranking exactly.
+    pub fn query(&self, sig: &[u16], top_k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        let k = self.signature_len();
+        if sig.len() != k {
+            return Err(Error::InvalidArg(format!(
+                "query signature has {} codes, index expects {k}",
+                sig.len()
+            )));
+        }
+        let b = self.spec.packed_geometry().map(|(b, _)| b).unwrap_or(0);
+        // expand the query once: (j << b) | code — the same row-index form
+        // row_indices_into decodes candidates into
+        let query_idx: Vec<u32> =
+            sig.iter().enumerate().map(|(j, &c)| ((j as u32) << b) | c as u32).collect();
+        let mut stats = QueryStats::default();
+        let mut hits: Vec<Neighbor> = Vec::new();
+        let mut cand: Vec<u32> = Vec::new();
+        let mut row_idx = vec![0u32; k];
+        for shard in &self.shards {
+            cand.clear();
+            for (band, table) in shard.tables.iter().enumerate() {
+                let key = band_key_codes(sig, band, self.cfg.rows_per_band);
+                if let Some(ids) = table.get(&key) {
+                    cand.extend_from_slice(ids);
+                }
+            }
+            stats.candidates += cand.len();
+            cand.sort_unstable();
+            cand.dedup();
+            stats.reranked += cand.len();
+            for &local in &cand {
+                // verify step: whole-row decode + agreement count — hits/k
+                // is bit-for-bit the offline code_agreement estimate
+                shard.codes.row_indices_into(local as usize, &mut row_idx);
+                let agree = query_idx.iter().zip(&row_idx).filter(|(a, b)| a == b).count();
+                hits.push(Neighbor {
+                    id: shard.row_ids[local as usize],
+                    estimate: agree as f64 / k as f64,
+                });
+            }
+        }
+        rank_neighbors(&mut hits, top_k);
+        Ok((hits, stats))
+    }
+
+    /// [`query`](Self::query) by indexed record id.  Errors if the owning
+    /// shard is not resident (fleet callers route to the owner) or the id
+    /// was never indexed.
+    pub fn query_doc(&self, id: u64, top_k: usize) -> Result<(Vec<Neighbor>, QueryStats)> {
+        let owner = self.owner_shard(id);
+        let shard = self
+            .shards
+            .iter()
+            .find(|s| s.shard_id == owner)
+            .ok_or_else(|| Error::InvalidArg(format!("shard {owner} not resident here")))?;
+        let local = shard
+            .row_ids
+            .binary_search(&id)
+            .map_err(|_| Error::InvalidArg(format!("doc {id} is not in the index")))?;
+        let mut sig = vec![0u16; shard.codes.k];
+        shard.codes.row_into(local, &mut sig);
+        self.query(&sig, top_k)
+    }
+
+    /// All near-duplicate pairs `(i < j, estimate)` with code agreement ≥
+    /// `min_code_agreement`, over the *resident* shards (pairs never span
+    /// shards — with `shards = 1` this is exactly the offline
+    /// [`crate::hashing::lsh::LshIndex::near_duplicate_pairs`]).
+    pub fn near_duplicate_pairs(&self, min_code_agreement: f64) -> Vec<(u64, u64, f64)> {
+        let k = self.signature_len();
+        let mut out = Vec::new();
+        let mut a_idx = vec![0u32; k];
+        let mut b_idx = vec![0u32; k];
+        for shard in &self.shards {
+            let mut seen = std::collections::HashSet::new();
+            for table in &shard.tables {
+                for ids in table.values() {
+                    if ids.len() < 2 {
+                        continue;
+                    }
+                    for (a_pos, &i) in ids.iter().enumerate() {
+                        for &j in &ids[a_pos + 1..] {
+                            let key = ((i as u64) << 32) | j as u64;
+                            if !seen.insert(key) {
+                                continue;
+                            }
+                            shard.codes.row_indices_into(i as usize, &mut a_idx);
+                            shard.codes.row_indices_into(j as usize, &mut b_idx);
+                            let agree =
+                                a_idx.iter().zip(&b_idx).filter(|(a, b)| a == b).count();
+                            let est = agree as f64 / k as f64;
+                            if est >= min_code_agreement {
+                                out.push((shard.row_ids[i as usize], shard.row_ids[j as usize], est));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_unstable_by_key(|p| (p.0, p.1));
+        out
+    }
+
+    /// Per-band bucket occupancy aggregated across resident shards.
+    pub fn band_stats(&self) -> Vec<BandStats> {
+        (0..self.cfg.bands)
+            .map(|band| {
+                let mut buckets = 0usize;
+                let mut max_bucket = 0usize;
+                let mut entries = 0usize;
+                for shard in &self.shards {
+                    for ids in shard.tables[band].values() {
+                        buckets += 1;
+                        entries += ids.len();
+                        max_bucket = max_bucket.max(ids.len());
+                    }
+                }
+                BandStats {
+                    band,
+                    buckets,
+                    max_bucket,
+                    mean_bucket: entries as f64 / buckets.max(1) as f64,
+                }
+            })
+            .collect()
+    }
+
+    pub(crate) fn shards(&self) -> &[IndexShard] {
+        &self.shards
+    }
+}
+
+/// Rank in place: estimate descending, id ascending on ties, truncate to
+/// `top_k`.  Shared by the in-process query and the router's
+/// scatter-gather merge so both rankings agree bit-for-bit.
+pub fn rank_neighbors(hits: &mut Vec<Neighbor>, top_k: usize) {
+    hits.sort_unstable_by(|a, b| {
+        b.estimate
+            .partial_cmp(&a.estimate)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    hits.truncate(top_k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::lsh;
+    use crate::hashing::minwise::BbitMinHash;
+    use crate::util::Rng;
+
+    fn spec() -> EncoderSpec {
+        EncoderSpec::Bbit { b: 8, k: 64, d: 1 << 24, seed: 0x51A }
+    }
+
+    fn corpus_codes(n_pairs: usize) -> PackedCodes {
+        // planted near-duplicate pairs (2i, 2i+1), same idiom as the
+        // offline lsh.rs tests
+        let EncoderSpec::Bbit { b, k, d, seed } = spec() else { unreachable!() };
+        let bb = BbitMinHash::draw(k, b, d, &mut Rng::new(seed));
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut pc = PackedCodes::new(b, k);
+        for _ in 0..n_pairs {
+            let base: Vec<u32> =
+                rng.sample_distinct(d, 300).into_iter().map(|x| x as u32).collect();
+            let mut near = base.clone();
+            for _ in 0..15 {
+                let pos = rng.below_usize(near.len());
+                near[pos] = rng.below(d) as u32;
+            }
+            near.sort_unstable();
+            near.dedup();
+            pc.push_row(&bb.codes(&base)).unwrap();
+            pc.push_row(&bb.codes(&near)).unwrap();
+        }
+        pc
+    }
+
+    #[test]
+    fn single_shard_matches_offline_index_bit_for_bit() {
+        let pc = corpus_codes(20);
+        let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+        let offline = lsh::LshIndex::build(&pc, cfg).unwrap();
+        let online = LshIndex::from_codes(&pc, spec(), cfg, 1).unwrap();
+
+        // pair sweep: identical pairs, bitwise-identical estimates
+        let off_pairs = offline.near_duplicate_pairs(0.5);
+        let on_pairs = online.near_duplicate_pairs(0.5);
+        assert_eq!(off_pairs.len(), on_pairs.len());
+        for (&(i, j, a), &(gi, gj, ga)) in off_pairs.iter().zip(&on_pairs) {
+            assert_eq!((i as u64, j as u64), (gi, gj));
+            assert!(a.to_bits() == ga.to_bits(), "estimate drifted: {a} vs {ga}");
+        }
+
+        // per-row query: candidates and estimates line up with the
+        // offline candidate + code_agreement walk
+        for row in 0..pc.n {
+            let (hits, stats) = online.query_doc(row as u64, pc.n).unwrap();
+            let offline_cands = offline.candidates_for_row(row);
+            assert_eq!(stats.reranked, offline_cands.len(), "row {row}");
+            for h in &hits {
+                let a = lsh::code_agreement(&pc, row, h.id as usize);
+                assert!(a.to_bits() == h.estimate.to_bits(), "row {row} id {}", h.id);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_union_covers_all_rows_and_merges_like_one_index() {
+        let pc = corpus_codes(20);
+        let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+        let whole = LshIndex::from_codes(&pc, spec(), cfg, 1).unwrap();
+        let sharded = LshIndex::from_codes(&pc, spec(), cfg, 4).unwrap();
+        assert_eq!(sharded.shard_ids(), vec![0, 1, 2, 3]);
+        assert_eq!(sharded.rows(), pc.n);
+        let mut sig = vec![0u16; pc.k];
+        for row in 0..pc.n {
+            pc.row_into(row, &mut sig);
+            let (a, _) = whole.query(&sig, 5).unwrap();
+            let (b, _) = sharded.query(&sig, 5).unwrap();
+            assert_eq!(a, b, "row {row}: sharded query must rank identically");
+        }
+    }
+
+    #[test]
+    fn hash_query_matches_indexed_signature() {
+        // a raw doc hashed at query time lands on its own indexed row with
+        // estimate exactly 1.0
+        let EncoderSpec::Bbit { d, .. } = spec() else { unreachable!() };
+        let mut rng = Rng::new(7);
+        let docs: Vec<Vec<u32>> = (0..10)
+            .map(|_| rng.sample_distinct(d, 200).into_iter().map(|x| x as u32).collect())
+            .collect();
+        let enc = spec().encoder().unwrap();
+        let chunk: Vec<crate::data::dataset::Example> =
+            docs.iter().map(|s| crate::data::dataset::Example::binary(1, s.clone())).collect();
+        let codes = match enc.encode_chunk(&chunk).unwrap() {
+            crate::encode::EncodedChunk::Packed { codes, .. } => codes,
+            _ => unreachable!(),
+        };
+        let idx = LshIndex::from_codes(&codes, spec(), LshConfig { bands: 16, rows_per_band: 4 }, 2)
+            .unwrap();
+        let mut scratch = idx.scratch();
+        for (i, doc) in docs.iter().enumerate() {
+            idx.hash_query(doc, &mut scratch).unwrap();
+            let sig = scratch.codes.clone();
+            let (hits, _) = idx.query(&sig, 1).unwrap();
+            assert_eq!(hits[0].id, i as u64, "self must rank first");
+            assert_eq!(hits[0].estimate, 1.0);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry_and_bad_queries() {
+        let pc = corpus_codes(2);
+        // too-narrow signature
+        let cfg = LshConfig { bands: 32, rows_per_band: 4 };
+        assert!(LshIndex::from_codes(&pc, spec(), cfg, 1).is_err());
+        // zero shards
+        let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+        assert!(LshIndex::from_codes(&pc, spec(), cfg, 0).is_err());
+        // sparse scheme
+        let vw = EncoderSpec::Vw { bins: 64, seed: 1 };
+        assert!(LshIndex::from_codes(&pc, vw, cfg, 1).is_err());
+        let idx = LshIndex::from_codes(&pc, spec(), cfg, 2).unwrap();
+        // wrong signature width
+        assert!(idx.query(&[0u16; 3], 5).is_err());
+        // unknown doc id
+        assert!(idx.query_doc(1 << 40, 5).is_err());
+    }
+
+    #[test]
+    fn band_stats_account_every_row_per_band() {
+        let pc = corpus_codes(10);
+        let cfg = LshConfig { bands: 16, rows_per_band: 4 };
+        let idx = LshIndex::from_codes(&pc, spec(), cfg, 3).unwrap();
+        let stats = idx.band_stats();
+        assert_eq!(stats.len(), 16);
+        for s in &stats {
+            // every row lands in exactly one bucket per band (per shard)
+            let entries = (s.mean_bucket * s.buckets as f64).round() as usize;
+            assert_eq!(entries, pc.n, "band {}", s.band);
+            assert!(s.max_bucket >= 1 && s.max_bucket <= pc.n);
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! The online near-neighbor subsystem: an owned, sharded, snapshottable
+//! LSH index over b-bit signatures, served behind `POST /similar`.
+//!
+//! Section 6 of the paper argues the hashed data "can be used and re-used
+//! for many tasks such as supervised learning, clustering, duplicate
+//! detections, near-neighbor search"; the follow-up "b-Bit Minwise Hashing
+//! in Practice" (arXiv:1205.2958) makes that re-use the headline workflow.
+//! [`crate::hashing::lsh`] is the offline half (borrowed codes, built
+//! per call); this module is the production half, layered on the cache and
+//! serve stacks the earlier PRs built:
+//!
+//! - [`index`] — [`LshIndex`]: banded buckets over minwise/OPH signatures,
+//!   built **out-of-core** from a v3 hashed cache through the
+//!   [`replay_cache`](crate::coordinator::replay::replay_cache) reader
+//!   pool (deterministic for every `--replay-threads` count, because the
+//!   pool emits records strictly in order).  Signatures stay in
+//!   [`PackedCodes`](crate::encode::packed::PackedCodes), so resident
+//!   memory matches the paper's b-bit storage story; candidate re-rank
+//!   goes through the PR 6 whole-row decode kernel
+//!   (`PackedCodes::row_indices_into`) and produces P̂_b estimates
+//!   bit-for-bit equal to the offline
+//!   [`code_agreement`](crate::hashing::lsh::code_agreement) path.
+//!   Rows are sharded by record id (`id % shards`) at build time so a
+//!   fleet of servers can each hold a disjoint slice.
+//! - [`snapshot`] — the compact on-disk format (`BBMHSIM1`): encoder spec
+//!   + banding config + per-shard row ids and packed signatures, FNV-1a
+//!   checksummed.  Build once, load fast on restart; band tables are
+//!   rebuilt deterministically at load (they are derived data), so the
+//!   file stays at signature size.
+//!
+//! Serving: `bbit-mh serve --similar-index idx` routes `POST /similar`
+//! (LibSVM line or `doc:<id>`) through the existing batcher admission /
+//! deadline / 503-shed machinery; `bbit-mh route` scatter-gathers a fleet
+//! of shard servers behind consistent hashing (see
+//! [`crate::serve::router`]).  `bbit-mh similar-index` builds snapshots
+//! from a cache.
+
+pub mod index;
+pub mod snapshot;
+
+pub use index::{BandStats, LshIndex, Neighbor, QueryStats};

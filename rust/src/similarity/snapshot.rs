@@ -1,0 +1,385 @@
+//! The `BBMHSIM1` on-disk snapshot: build an [`LshIndex`] once, load it
+//! fast on every serve restart.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! 8B  magic  b"BBMHSIM1"
+//! --- FNV-1a checksummed region ---
+//! 4+4+8+8+8  EncoderSpec::header_fields  (tag, p0, p1, p2, seed)
+//! 8   bands            8   rows_per_band
+//! 8   num_shards       8   shard_count (shards stored in THIS file)
+//! per shard, ascending by shard id:
+//!   8   shard_id       8   rows
+//!   rows × 8           row ids, ascending
+//!   PackedCodes::save  payload ("BBMH" + b, k, n + packed words)
+//! --- end checksummed region ---
+//! 8B  FNV-1a 64 of the region above
+//! ```
+//!
+//! Only the signatures and row ids are stored — the per-band bucket
+//! tables are derived data, rebuilt at load in the same local-row order
+//! the build path uses, so a loaded index answers queries identically to
+//! the one that was saved while the file stays at signature size.  A
+//! multi-shard build can be written as one file ([`save`]) or split one
+//! shard per file ([`save_shard`]) for a serve fleet; [`load_many`]
+//! merges any consistent set of shard files back into one index.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::encode::packed::PackedCodes;
+use crate::encode::EncoderSpec;
+use crate::hashing::lsh::LshConfig;
+use crate::similarity::index::{IndexShard, LshIndex};
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"BBMHSIM1";
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// `Write` adapter that folds every byte into a running FNV-1a 64.
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: u64,
+}
+
+impl<W: Write> Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        for &byte in &buf[..n] {
+            self.hash = (self.hash ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// `Read` adapter mirroring [`HashingWriter`] on the load side.
+struct HashingReader<R: Read> {
+    inner: R,
+    hash: u64,
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        for &byte in &buf[..n] {
+            self.hash = (self.hash ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+        Ok(n)
+    }
+}
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn write_shards<W: Write>(w: &mut W, index: &LshIndex, shards: &[&IndexShard]) -> Result<()> {
+    let (tag, p0, p1, p2, seed) = index.spec().header_fields();
+    w.write_all(&tag.to_le_bytes())?;
+    w.write_all(&p0.to_le_bytes())?;
+    for v in [p1, p2, seed] {
+        write_u64(w, v)?;
+    }
+    let cfg = index.config();
+    for v in [
+        cfg.bands as u64,
+        cfg.rows_per_band as u64,
+        index.num_shards() as u64,
+        shards.len() as u64,
+    ] {
+        write_u64(w, v)?;
+    }
+    for shard in shards {
+        write_u64(w, shard.shard_id as u64)?;
+        write_u64(w, shard.row_ids.len() as u64)?;
+        for &id in &shard.row_ids {
+            write_u64(w, id)?;
+        }
+        shard.codes.save(&mut *w)?;
+    }
+    Ok(())
+}
+
+fn save_to<P: AsRef<Path>>(index: &LshIndex, shards: &[&IndexShard], path: P) -> Result<()> {
+    let file = File::create(path)?;
+    let mut w = HashingWriter { inner: BufWriter::new(file), hash: FNV_OFFSET };
+    w.inner.write_all(MAGIC)?; // magic sits outside the checksummed region
+    write_shards(&mut w, index, shards)?;
+    let hash = w.hash;
+    write_u64(&mut w.inner, hash)?;
+    w.inner.flush()?;
+    Ok(())
+}
+
+/// Write every resident shard of `index` into one snapshot file.
+pub fn save<P: AsRef<Path>>(index: &LshIndex, path: P) -> Result<()> {
+    let shards: Vec<&IndexShard> = index.shards().iter().collect();
+    save_to(index, &shards, path)
+}
+
+/// Write one resident shard into its own snapshot file — the fleet
+/// layout, one file per shard server.
+pub fn save_shard<P: AsRef<Path>>(index: &LshIndex, shard: usize, path: P) -> Result<()> {
+    let found = index
+        .shards()
+        .iter()
+        .find(|s| s.shard_id == shard)
+        .ok_or_else(|| Error::InvalidArg(format!("shard {shard} not resident in index")))?;
+    save_to(index, &[found], path)
+}
+
+/// Parsed file contents, pre-assembly: consistency across files is
+/// checked by [`load_many`], intra-file invariants here.
+struct SnapshotFile {
+    spec: EncoderSpec,
+    cfg: LshConfig,
+    num_shards: usize,
+    shards: Vec<IndexShard>,
+}
+
+fn read_file(path: &Path) -> Result<SnapshotFile> {
+    let display = path.display().to_string();
+    let bad = |msg: String| Error::InvalidArg(format!("{display}: {msg}"));
+    let file = File::open(path)?;
+    let mut r = HashingReader { inner: BufReader::new(file), hash: FNV_OFFSET };
+    let mut magic = [0u8; 8];
+    r.inner.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a BBMHSIM1 similarity snapshot".into()));
+    }
+    let tag = read_u32(&mut r)?;
+    let p0 = read_u32(&mut r)?;
+    let p1 = read_u64(&mut r)?;
+    let p2 = read_u64(&mut r)?;
+    let seed = read_u64(&mut r)?;
+    let spec = EncoderSpec::from_header_fields(tag, p0, p1, p2, seed)?;
+    let (b, k) = spec
+        .packed_geometry()
+        .ok_or_else(|| bad(format!("snapshot spec {} is not packed", spec.scheme())))?;
+    let cfg = LshConfig {
+        bands: read_u64(&mut r)? as usize,
+        rows_per_band: read_u64(&mut r)? as usize,
+    };
+    let num_shards = read_u64(&mut r)? as usize;
+    let shard_count = read_u64(&mut r)? as usize;
+    if num_shards == 0 || shard_count == 0 || shard_count > num_shards {
+        return Err(bad(format!(
+            "bad shard header: {shard_count} stored of {num_shards} total"
+        )));
+    }
+    let mut shards = Vec::with_capacity(shard_count);
+    for _ in 0..shard_count {
+        let shard_id = read_u64(&mut r)? as usize;
+        if shard_id >= num_shards {
+            return Err(bad(format!("shard id {shard_id} out of range ({num_shards})")));
+        }
+        let rows = read_u64(&mut r)? as usize;
+        let mut row_ids = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            row_ids.push(read_u64(&mut r)?);
+        }
+        for pair in row_ids.windows(2) {
+            if pair[0] >= pair[1] {
+                return Err(bad(format!("shard {shard_id} row ids not ascending")));
+            }
+        }
+        if let Some(&id) = row_ids.iter().find(|&&id| id % num_shards as u64 != shard_id as u64)
+        {
+            return Err(bad(format!("row {id} does not belong to shard {shard_id}")));
+        }
+        let codes = PackedCodes::load(&mut r)?;
+        if (codes.b, codes.k) != (b, k) || codes.n != rows {
+            return Err(bad(format!(
+                "shard {shard_id} geometry (b={}, k={}, n={}) does not match header \
+                 (b={b}, k={k}, rows={rows})",
+                codes.b, codes.k, codes.n
+            )));
+        }
+        shards.push(IndexShard::from_loaded(shard_id, codes, row_ids, &cfg));
+    }
+    let computed = r.hash;
+    let stored = read_u64(&mut r.inner)?;
+    if computed != stored {
+        return Err(bad(format!(
+            "checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
+        )));
+    }
+    Ok(SnapshotFile { spec, cfg, num_shards, shards })
+}
+
+/// Load one snapshot file back into a queryable [`LshIndex`].
+pub fn load<P: AsRef<Path>>(path: P) -> Result<LshIndex> {
+    let f = read_file(path.as_ref())?;
+    LshIndex::from_parts(f.spec, f.cfg, f.num_shards, f.shards)
+}
+
+/// Load and merge several shard files into one index.  Every file must
+/// agree on the encoder spec, banding config, and total shard count, and
+/// no shard may appear twice.
+pub fn load_many<P: AsRef<Path>>(paths: &[P]) -> Result<LshIndex> {
+    let Some((first, rest)) = paths.split_first() else {
+        return Err(Error::InvalidArg("no snapshot files given".into()));
+    };
+    let mut merged = read_file(first.as_ref())?;
+    for path in rest {
+        let f = read_file(path.as_ref())?;
+        if f.spec != merged.spec {
+            return Err(Error::InvalidArg(format!(
+                "{}: encoder spec differs from {}",
+                path.as_ref().display(),
+                first.as_ref().display()
+            )));
+        }
+        if f.cfg != merged.cfg || f.num_shards != merged.num_shards {
+            return Err(Error::InvalidArg(format!(
+                "{}: banding/shard layout differs from {}",
+                path.as_ref().display(),
+                first.as_ref().display()
+            )));
+        }
+        merged.shards.extend(f.shards);
+    }
+    // from_parts rejects duplicate shard ids across the merged set
+    LshIndex::from_parts(merged.spec, merged.cfg, merged.num_shards, merged.shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::minwise::BbitMinHash;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bbmh_sim_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spec() -> EncoderSpec {
+        EncoderSpec::Bbit { b: 8, k: 64, d: 1 << 24, seed: 0xBEE }
+    }
+
+    fn cfg() -> LshConfig {
+        LshConfig { bands: 16, rows_per_band: 4 }
+    }
+
+    fn corpus(n: usize) -> PackedCodes {
+        let EncoderSpec::Bbit { b, k, d, seed } = spec() else { unreachable!() };
+        let bb = BbitMinHash::draw(k, b, d, &mut Rng::new(seed));
+        let mut rng = Rng::new(0xD1CE);
+        let mut pc = PackedCodes::new(b, k);
+        for _ in 0..n {
+            let set: Vec<u32> =
+                rng.sample_distinct(d, 250).into_iter().map(|x| x as u32).collect();
+            pc.push_row(&bb.codes(&set)).unwrap();
+        }
+        pc
+    }
+
+    fn assert_same_answers(a: &LshIndex, b: &LshIndex, rows: usize) {
+        assert_eq!(a.shard_ids(), b.shard_ids());
+        assert_eq!(a.rows(), b.rows());
+        for row in 0..rows {
+            let id = row as u64;
+            if !a.has_shard(a.owner_shard(id)) {
+                continue;
+            }
+            let (ha, sa) = a.query_doc(id, rows).unwrap();
+            let (hb, sb) = b.query_doc(id, rows).unwrap();
+            assert_eq!(ha, hb, "row {row}: neighbors drifted across save/load");
+            assert_eq!(sa, sb, "row {row}: query stats drifted across save/load");
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_for_bit() {
+        let dir = temp_dir("round_trip");
+        let pc = corpus(60);
+        let built = LshIndex::from_codes(&pc, spec(), cfg(), 3).unwrap();
+        let path = dir.join("all.sim");
+        save(&built, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.spec(), spec());
+        assert_eq!(loaded.config(), cfg());
+        assert_eq!(loaded.num_shards(), 3);
+        assert_same_answers(&built, &loaded, pc.n);
+        // derived band tables must rebuild identically too
+        let (a, b) = (built.band_stats(), loaded.band_stats());
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_files_merge_back_into_the_full_index() {
+        let dir = temp_dir("merge");
+        let pc = corpus(40);
+        let built = LshIndex::from_codes(&pc, spec(), cfg(), 2).unwrap();
+        let p0 = dir.join("s0.sim");
+        let p1 = dir.join("s1.sim");
+        save_shard(&built, 0, &p0).unwrap();
+        save_shard(&built, 1, &p1).unwrap();
+
+        // one shard alone serves its own rows and knows what is missing
+        let half = load(&p0).unwrap();
+        assert_eq!(half.shard_ids(), vec![0]);
+        assert!(half.has_shard(0) && !half.has_shard(1));
+        assert!(half.query_doc(1, 5).is_err(), "row 1 lives in the absent shard");
+
+        // merged shard files answer exactly like the original build
+        let merged = load_many(&[&p1, &p0]).unwrap();
+        assert_same_answers(&built, &merged, pc.n);
+
+        // the same shard twice must be rejected
+        assert!(load_many(&[&p0, &p0]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_detected() {
+        let dir = temp_dir("corrupt");
+        let pc = corpus(20);
+        let built = LshIndex::from_codes(&pc, spec(), cfg(), 1).unwrap();
+        let path = dir.join("good.sim");
+        save(&built, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        // flip one payload byte: checksum (or a structural check) trips
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        let bad = dir.join("flipped.sim");
+        std::fs::write(&bad, &flipped).unwrap();
+        assert!(load(&bad).is_err(), "bit flip must not load cleanly");
+
+        // truncation: short read surfaces as an error
+        let cut = dir.join("cut.sim");
+        std::fs::write(&cut, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(load(&cut).is_err());
+
+        // foreign magic
+        let alien = dir.join("alien.sim");
+        std::fs::write(&alien, b"NOTASNAP00000000").unwrap();
+        assert!(load(&alien).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,350 @@
+//! Fleet-tier acceptance tests (ISSUE 7): `bbit-mh route` in front of
+//! N ≥ 2 backends holding disjoint index shards.
+//!
+//! - shard placement is the deterministic consistent-hash assignment, and
+//!   a raw-query scatter-gather over disjoint shards reproduces the
+//!   single-index top-K bit-for-bit;
+//! - killing one backend degrades *only its shards*: doc lookups for the
+//!   dead shard answer `503`, healthy-shard lookups keep answering `200`,
+//!   raw queries answer `200` flagged `X-Partial-Results`;
+//! - restarting the backend on the same port recovers the fleet (health
+//!   probes flip it back up, the partial flag disappears).
+//!
+//! The router and backends all talk loopback; backend ports are reserved
+//! up front (bind :0, note the port, drop the listener) because the
+//! consistent-hash assignment is a function of the backend address list.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::sink::CacheSink;
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::SparseDataset;
+use bbit_mh::encode::cache::CacheWriteOptions;
+use bbit_mh::encode::EncoderSpec;
+use bbit_mh::hashing::lsh::LshConfig;
+use bbit_mh::serve::http;
+use bbit_mh::serve::{shard_assignment, ModelServer, Router, RouterConfig, ServeConfig};
+use bbit_mh::similarity::{snapshot, LshIndex};
+use bbit_mh::solver::{LinearModel, SavedModel};
+
+const SHARDS: usize = 4;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bbmh_route_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn corpus(n: usize, seed: u64) -> SparseDataset {
+    CorpusGenerator::new(CorpusConfig {
+        n_docs: n,
+        vocab: 2000,
+        zipf_alpha: 1.05,
+        mean_tokens: 28.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed,
+    })
+    .generate()
+}
+
+/// Reserve a loopback port: bind :0, note the port, release it.
+fn reserve_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+/// Two reserved backend addresses whose consistent-hash assignment uses
+/// both backends (re-rolled otherwise — a 2-backend fleet where one owns
+/// every shard would make the degradation test vacuous).
+fn two_backends() -> (Vec<String>, Vec<usize>) {
+    for _ in 0..32 {
+        let backends: Vec<String> =
+            (0..2).map(|_| format!("127.0.0.1:{}", reserve_port())).collect();
+        let assignment = shard_assignment(&backends, SHARDS);
+        if assignment.contains(&0) && assignment.contains(&1) {
+            return (backends, assignment);
+        }
+    }
+    panic!("could not reserve a port pair covering both backends");
+}
+
+fn backend_port(backend: &str) -> u16 {
+    backend.rsplit(':').next().unwrap().parse().unwrap()
+}
+
+/// Start a backend on its reserved port with the given shard snapshots.
+fn start_backend(
+    model: &std::path::Path,
+    port: u16,
+    snaps: &[PathBuf],
+) -> (ModelServer, Arc<LshIndex>) {
+    let idx = Arc::new(snapshot::load_many(snaps).unwrap());
+    let cfg = ServeConfig {
+        port,
+        scorer_workers: 2,
+        deadline: Duration::from_secs(5),
+        ..Default::default()
+    };
+    // the reserved port was released above; re-binding can race with the
+    // OS (or a previous incarnation's teardown), so retry briefly
+    let t0 = Instant::now();
+    loop {
+        match ModelServer::start_with_index(model, cfg.clone(), Some(idx.clone())) {
+            Ok(s) => return (s, idx),
+            Err(e) => {
+                assert!(t0.elapsed() < Duration::from_secs(5), "backend never bound: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to router");
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn post_top_k(&mut self, path: &str, body: &str, top_k: usize) -> http::Response {
+        let hdr = [("X-Top-K", top_k.to_string())];
+        http::write_post_with(&mut self.stream, path, &hdr, body.as_bytes()).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> http::Response {
+        http::write_get(&mut self.stream, path).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+}
+
+fn parse_hits(body: &str) -> Vec<(u64, f64)> {
+    body.lines()
+        .map(|l| {
+            let mut toks = l.split_ascii_whitespace();
+            (toks.next().unwrap().parse().unwrap(), toks.next().unwrap().parse().unwrap())
+        })
+        .collect()
+}
+
+fn assert_hits_match(got: &http::Response, expect: &[bbit_mh::similarity::Neighbor], ctx: &str) {
+    assert_eq!(got.status, 200, "{ctx}: {}", got.body_text());
+    let got = parse_hits(&got.body_text());
+    assert_eq!(got.len(), expect.len(), "{ctx}");
+    for (g, e) in got.iter().zip(expect) {
+        assert_eq!((g.0, g.1.to_bits()), (e.id, e.estimate.to_bits()), "{ctx}");
+    }
+}
+
+/// Poll the router's `/healthz` until `pred` holds (fresh connection per
+/// probe — the router may have been mid-transition on the last one).
+fn wait_healthz(addr: SocketAddr, pred: impl Fn(&str) -> bool, what: &str) {
+    let t0 = Instant::now();
+    loop {
+        let body = Client::connect(addr).get("/healthz").body_text();
+        if pred(&body) {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(15), "{what} never happened:\n{body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn fleet_degrades_per_shard_and_recovers_after_restart() {
+    let ds = corpus(600, 0xF1EE7);
+    let spec = EncoderSpec::Bbit { b: 8, k: 32, d: ds.dim, seed: 13 };
+    let dir = tmp_dir("fleet");
+
+    // hash once, build the sharded index, snapshot per shard
+    let cache = {
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 53, queue_depth: 2 });
+        let path = dir.join("fleet.cache");
+        let mut sink =
+            CacheSink::create_opts(&path, &spec, CacheWriteOptions::default()).unwrap();
+        pipe.run_sink(dataset_chunks(&ds, 53), &spec, &mut sink).unwrap();
+        path
+    };
+    let cfg = LshConfig { bands: 8, rows_per_band: 4 };
+    let full = LshIndex::build_from_cache(&cache, cfg, SHARDS, 2).unwrap();
+    let mut snaps = Vec::new();
+    for s in 0..SHARDS {
+        let p = dir.join(format!("fleet.idx.shard{s}"));
+        snapshot::save_shard(&full, s, &p).unwrap();
+        snaps.push(p);
+    }
+
+    let model_path = dir.join("m.bbmh");
+    let w: Vec<f32> = (0..spec.output_dim()).map(|j| (j as f32 * 0.3).sin()).collect();
+    SavedModel::new(spec, LinearModel { w }).unwrap().save(&model_path).unwrap();
+
+    // place shards by the router's own assignment and start the backends
+    let (backends, assignment) = two_backends();
+    let shards_of = |backend: usize| -> Vec<PathBuf> {
+        assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == backend)
+            .map(|(s, _)| snaps[s].clone())
+            .collect()
+    };
+    let (server_a, index_a) = start_backend(&model_path, backend_port(&backends[0]), &shards_of(0));
+    let (server_b, index_b) = start_backend(&model_path, backend_port(&backends[1]), &shards_of(1));
+
+    let router = Router::start(RouterConfig {
+        backends: backends.clone(),
+        shards: SHARDS,
+        health_poll: Duration::from_millis(50),
+        health_timeout: Duration::from_millis(500),
+        fail_threshold: 2,
+        max_backoff: Duration::from_millis(200),
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(router.assignment(), assignment.as_slice(), "router must use the same map");
+    let addr = router.local_addr();
+    wait_healthz(addr, |b| b.contains("backends=2/2"), "both backends up");
+
+    // ---- healthy fleet: scatter-gather == the single full index --------
+    let line = {
+        let (idx, _) = ds.row(11);
+        let mut l = String::from("+1");
+        for x in idx {
+            l.push_str(&format!(" {x}:1"));
+        }
+        l.push('\n');
+        l
+    };
+    let mut scratch = full.scratch();
+    let (idx11, _) = ds.row(11);
+    full.hash_query(&idx11.to_vec(), &mut scratch).unwrap();
+    let (expect_full, _) = full.query(&scratch.codes, 9).unwrap();
+    let mut client = Client::connect(addr);
+    let resp = client.post_top_k("/similar", &line, 9);
+    assert!(resp.header("x-partial-results").is_none(), "healthy fleet is never partial");
+    assert_hits_match(&resp, &expect_full, "healthy scatter-gather");
+
+    // doc lookups route to the owner backend and answer from its shards
+    for id in [0u64, 1, 2, 3] {
+        let owner_index = if assignment[(id % SHARDS as u64) as usize] == 0 {
+            &index_a
+        } else {
+            &index_b
+        };
+        let (expect, _) = owner_index.query_doc(id, 6).unwrap();
+        let resp = client.post_top_k("/similar", &format!("doc:{id}\n"), 6);
+        assert_hits_match(&resp, &expect, &format!("doc {id} via owner backend"));
+    }
+
+    // ---- kill backend B: only its shards degrade -----------------------
+    let report_b = server_b.shutdown();
+    assert!(report_b.contains("serve_similar_received_total"), "{report_b}");
+    wait_healthz(addr, |b| b.contains("backends=1/2"), "B marked down");
+
+    let b_shards: Vec<usize> =
+        assignment.iter().enumerate().filter(|(_, &b)| b == 1).map(|(s, _)| s).collect();
+    // a doc owned by a dead shard: 503, that shard only
+    let dead_doc = b_shards[0] as u64; // id s has id % SHARDS == s for s < SHARDS
+    let mut client = Client::connect(addr);
+    let resp = client.post_top_k("/similar", &format!("doc:{dead_doc}\n"), 6);
+    assert_eq!(resp.status, 503, "{}", resp.body_text());
+    assert!(
+        resp.body_text().contains(&format!("shard {} unavailable", b_shards[0])),
+        "{}",
+        resp.body_text()
+    );
+    // docs owned by A's shards still answer
+    let a_shard = assignment.iter().position(|&b| b == 0).unwrap();
+    let (expect, _) = index_a.query_doc(a_shard as u64, 6).unwrap();
+    let resp = client.post_top_k("/similar", &format!("doc:{a_shard}\n"), 6);
+    assert_hits_match(&resp, &expect, "healthy shard while B is down");
+
+    // raw queries still answer, flagged partial, equal to A's local view
+    full.hash_query(&idx11.to_vec(), &mut scratch).unwrap();
+    let (expect_a, _) = index_a.query(&scratch.codes, 9).unwrap();
+    let resp = client.post_top_k("/similar", &line, 9);
+    assert_eq!(resp.header("x-partial-results"), Some("true"), "{:?}", resp.headers);
+    let missing = resp.header("x-shards-missing").unwrap().to_string();
+    let listed: Vec<usize> = missing.split(',').map(|s| s.parse().unwrap()).collect();
+    assert_eq!(listed, b_shards, "exactly B's shards must be flagged missing");
+    assert_hits_match(&resp, &expect_a, "partial scatter-gather");
+
+    // ---- restart B on the same port: the fleet heals -------------------
+    let (server_b2, _) = start_backend(&model_path, backend_port(&backends[1]), &shards_of(1));
+    wait_healthz(addr, |b| b.contains("backends=2/2"), "B probed back up");
+
+    let mut client = Client::connect(addr);
+    let resp = client.post_top_k("/similar", &format!("doc:{dead_doc}\n"), 6);
+    let (expect, _) = index_b.query_doc(dead_doc, 6).unwrap();
+    assert_hits_match(&resp, &expect, "recovered shard");
+    let resp = client.post_top_k("/similar", &line, 9);
+    assert!(resp.header("x-partial-results").is_none(), "recovered fleet is whole again");
+    assert_hits_match(&resp, &expect_full, "recovered scatter-gather");
+
+    // the router's own exposition reflects the journey
+    let metrics = Client::connect(addr).get("/metrics").body_text();
+    assert!(metrics.contains("route_backends_total 2"), "{metrics}");
+    for series in
+        ["route_requests_total", "route_shard_unavailable_total", "route_partial_results_total"]
+    {
+        assert!(metrics.contains(series), "{series} missing:\n{metrics}");
+    }
+
+    let report = router.shutdown();
+    assert!(report.contains("route_health_transitions_total"), "{report}");
+    server_a.shutdown();
+    server_b2.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn router_forwards_score_to_a_healthy_backend() {
+    let dir = tmp_dir("score");
+    let spec = EncoderSpec::Oph { bins: 32, b: 4, seed: 0x5C0 };
+    let model_path = dir.join("m.bbmh");
+    let w: Vec<f32> = (0..spec.output_dim()).map(|j| (j as f32 * 0.7).sin()).collect();
+    SavedModel::new(spec, LinearModel { w }).unwrap().save(&model_path).unwrap();
+
+    let port = reserve_port();
+    let cfg = ServeConfig { port, scorer_workers: 1, ..Default::default() };
+    let server = ModelServer::start(&model_path, cfg).unwrap();
+    let router = Router::start(RouterConfig {
+        backends: vec![format!("127.0.0.1:{port}")],
+        shards: 1,
+        health_poll: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap();
+    wait_healthz(router.local_addr(), |b| b.contains("backends=1/1"), "backend up");
+
+    // the same line scored directly and through the router answers the
+    // same margin (the router relays the backend body verbatim)
+    let mut direct = Client::connect(server.local_addr());
+    let mut via = Client::connect(router.local_addr());
+    let body = "+1 3:1 17:1 99:1\n";
+    let d = direct.post_top_k("/score", body, 1);
+    let v = via.post_top_k("/score", body, 1);
+    assert_eq!(d.status, 200);
+    assert_eq!(v.status, 200);
+    assert_eq!(d.body_text(), v.body_text());
+    assert_eq!(v.header("x-model-epoch"), Some("1"), "backend headers relay");
+
+    // /similar without any index: the backend's 404 relays through
+    let resp = via.post_top_k("/similar", "doc:0\n", 1);
+    assert_eq!(resp.status, 404, "{}", resp.body_text());
+
+    router.shutdown();
+    server.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}

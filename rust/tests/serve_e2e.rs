@@ -284,6 +284,7 @@ fn loadgen_reports_latency_percentiles_and_qps() {
     let report = loadgen::run(
         server.local_addr(),
         &LoadgenConfig {
+            path: "/score".into(),
             qps: 400.0,
             duration: Duration::from_millis(800),
             connections: 4,

@@ -1,0 +1,333 @@
+//! Online similarity acceptance tests (ISSUE 7): the out-of-core LSH
+//! index and `POST /similar`.
+//!
+//! - index builds from a v3 hashed cache through the replay reader pool
+//!   and the snapshot bytes are identical for every `--replay-threads`;
+//! - a loopback server started with the index answers `/similar` doc and
+//!   raw-line queries with top-K estimates that match the offline
+//!   [`LshIndex`] query path *bit-for-bit*;
+//! - `/similar` rides the same bounded batcher as `/score`: concurrent
+//!   overload sheds (503) or expires (504) instead of hanging, and the
+//!   server stays healthy.
+//!
+//! Every server binds port 0 so parallel test binaries cannot collide.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::sink::CacheSink;
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::SparseDataset;
+use bbit_mh::encode::cache::CacheWriteOptions;
+use bbit_mh::encode::EncoderSpec;
+use bbit_mh::hashing::lsh::LshConfig;
+use bbit_mh::serve::http;
+use bbit_mh::serve::{loadgen, LoadgenConfig, ModelServer, ServeConfig};
+use bbit_mh::similarity::{snapshot, LshIndex};
+use bbit_mh::solver::{LinearModel, SavedModel};
+
+fn corpus(n: usize, seed: u64) -> SparseDataset {
+    CorpusGenerator::new(CorpusConfig {
+        n_docs: n,
+        vocab: 2000,
+        zipf_alpha: 1.05,
+        mean_tokens: 28.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed,
+    })
+    .generate()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bbmh_sim_e2e_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Hash `ds` into a fresh v3 cache with `chunk` rows per record.
+fn build_cache(dir: &std::path::Path, ds: &SparseDataset, spec: &EncoderSpec) -> PathBuf {
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 53, queue_depth: 2 });
+    let path = dir.join("sim.cache");
+    let mut sink = CacheSink::create_opts(&path, spec, CacheWriteOptions::default()).unwrap();
+    pipe.run_sink(dataset_chunks(ds, 53), spec, &mut sink).unwrap();
+    path
+}
+
+/// Any valid model — `/similar` does not touch it, but `serve` needs one.
+fn model_for(spec: EncoderSpec) -> SavedModel {
+    let w: Vec<f32> = (0..spec.output_dim()).map(|j| (j as f32 * 0.17).cos()).collect();
+    SavedModel::new(spec, LinearModel { w }).unwrap()
+}
+
+/// The LibSVM line for row `i` of `ds` (indices only, unit values).
+fn libsvm_line(ds: &SparseDataset, i: usize) -> (String, Vec<u32>) {
+    let (idx, _) = ds.row(i);
+    let mut line = String::from("+1");
+    for x in idx {
+        line.push_str(&format!(" {x}:1"));
+    }
+    (line, idx.to_vec())
+}
+
+/// Tiny keep-alive HTTP client over the crate's own framing.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to test server");
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> http::Response {
+        http::write_post(&mut self.stream, path, body.as_bytes()).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+
+    fn post_top_k(&mut self, path: &str, body: &str, top_k: usize) -> http::Response {
+        let hdr = [("X-Top-K", top_k.to_string())];
+        http::write_post_with(&mut self.stream, path, &hdr, body.as_bytes()).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> http::Response {
+        http::write_get(&mut self.stream, path).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+}
+
+/// Parse a `/similar` 200 body back into `(id, estimate)` rows.  The
+/// server prints estimates with `{}` (shortest round-trip form), so the
+/// parse is bit-exact.
+fn parse_hits(body: &str) -> Vec<(u64, f64)> {
+    body.lines()
+        .map(|l| {
+            let mut toks = l.split_ascii_whitespace();
+            (toks.next().unwrap().parse().unwrap(), toks.next().unwrap().parse().unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn snapshot_bytes_are_identical_for_every_replay_thread_count() {
+    let ds = corpus(500, 0xD1CE);
+    let spec = EncoderSpec::Bbit { b: 6, k: 20, d: ds.dim, seed: 5 };
+    let dir = tmp_dir("det");
+    let cache = build_cache(&dir, &ds, &spec);
+    let cfg = LshConfig { bands: 5, rows_per_band: 4 };
+
+    // single shard: one snapshot file per thread count, bytes must agree
+    let mut reference: Option<Vec<u8>> = None;
+    for threads in [1usize, 2, 4] {
+        let idx = LshIndex::build_from_cache(&cache, cfg, 1, threads).unwrap();
+        assert_eq!(idx.rows(), 500, "threads={threads}");
+        let path = dir.join(format!("one.t{threads}.idx"));
+        snapshot::save(&idx, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        match &reference {
+            None => reference = Some(bytes),
+            Some(r) => assert_eq!(&bytes, r, "threads={threads}: snapshot bytes diverged"),
+        }
+    }
+
+    // sharded: per-shard snapshots must also be thread-count-invariant
+    let mut shard_ref: Option<Vec<Vec<u8>>> = None;
+    for threads in [1usize, 3] {
+        let idx = LshIndex::build_from_cache(&cache, cfg, 3, threads).unwrap();
+        assert_eq!(idx.shard_ids(), vec![0, 1, 2]);
+        let mut per_shard = Vec::new();
+        for s in idx.shard_ids() {
+            let path = dir.join(format!("s{s}.t{threads}.idx"));
+            snapshot::save_shard(&idx, s, &path).unwrap();
+            per_shard.push(std::fs::read(&path).unwrap());
+        }
+        match &shard_ref {
+            None => shard_ref = Some(per_shard),
+            Some(r) => assert_eq!(&per_shard, r, "threads={threads}: shard bytes diverged"),
+        }
+    }
+
+    // and a loaded snapshot answers queries like the index it came from
+    let built = LshIndex::build_from_cache(&cache, cfg, 1, 2).unwrap();
+    let loaded = snapshot::load(dir.join("one.t1.idx")).unwrap();
+    for id in [0u64, 7, 499] {
+        let (a, sa) = built.query_doc(id, 8).unwrap();
+        let (b, sb) = loaded.query_doc(id, 8).unwrap();
+        assert_eq!(a, b, "doc {id}");
+        assert_eq!(sa, sb, "doc {id}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn post_similar_matches_the_offline_index_bit_for_bit() {
+    let ds = corpus(400, 0x51A7);
+    let spec = EncoderSpec::Bbit { b: 8, k: 32, d: ds.dim, seed: 11 };
+    let dir = tmp_dir("exact");
+    let cache = build_cache(&dir, &ds, &spec);
+    let cfg = LshConfig { bands: 8, rows_per_band: 4 };
+
+    // offline reference and the serving copy go through the same
+    // build→snapshot→load path the CLI uses
+    let offline = LshIndex::build_from_cache(&cache, cfg, 1, 2).unwrap();
+    let snap = dir.join("sim.idx");
+    snapshot::save(&offline, &snap).unwrap();
+    let serving = Arc::new(snapshot::load(&snap).unwrap());
+
+    let model_path = dir.join("m.bbmh");
+    model_for(spec).save(&model_path).unwrap();
+    let server = ModelServer::start_with_index(
+        &model_path,
+        ServeConfig {
+            scorer_workers: 2,
+            deadline: Duration::from_secs(5),
+            ..Default::default()
+        },
+        Some(serving),
+    )
+    .unwrap();
+    let mut client = Client::connect(server.local_addr());
+
+    // healthz advertises the resident shards
+    let health = client.get("/healthz").body_text();
+    assert!(health.contains("similar_shards=0/1"), "{health}");
+
+    // doc queries: ids resolved inside the index
+    for id in [3u64, 42, 399] {
+        let resp = client.post_top_k("/similar", &format!("doc:{id}\n"), 7);
+        assert_eq!(resp.status, 200, "doc {id}: {}", resp.body_text());
+        let (expect, stats) = offline.query_doc(id, 7).unwrap();
+        let got = parse_hits(&resp.body_text());
+        assert_eq!(got.len(), expect.len(), "doc {id}");
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.0, e.id, "doc {id}");
+            assert_eq!(g.1.to_bits(), e.estimate.to_bits(), "doc {id}: estimate drifted");
+        }
+        assert_eq!(
+            resp.header("x-candidates"),
+            Some(stats.candidates.to_string().as_str()),
+            "doc {id}"
+        );
+        assert_eq!(
+            resp.header("x-reranked"),
+            Some(stats.reranked.to_string().as_str()),
+            "doc {id}"
+        );
+    }
+
+    // raw LibSVM queries: hashed online, must equal hash_query + query
+    let mut scratch = offline.scratch();
+    for i in [0usize, 17, 250] {
+        let (line, idx) = libsvm_line(&ds, i);
+        let resp = client.post_top_k("/similar", &format!("{line}\n"), 5);
+        assert_eq!(resp.status, 200, "row {i}: {}", resp.body_text());
+        offline.hash_query(&idx, &mut scratch).unwrap();
+        let (expect, _) = offline.query(&scratch.codes, 5).unwrap();
+        let got = parse_hits(&resp.body_text());
+        assert_eq!(got.len(), expect.len(), "row {i}");
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!((g.0, g.1.to_bits()), (e.id, e.estimate.to_bits()), "row {i}");
+        }
+        // a row in the index matches itself with agreement exactly 1.0
+        assert!(got.contains(&(i as u64, 1.0)), "row {i}: {got:?}");
+        assert_eq!(got[0].1, 1.0, "row {i}: top hit must be a perfect match");
+    }
+
+    // error surfaces: unknown doc, empty body, bad top-k
+    assert_eq!(client.post("/similar", "doc:40000\n").status, 404);
+    assert_eq!(client.post("/similar", "\n\n").status, 400);
+    assert_eq!(client.post_top_k("/similar", "doc:1\n", 0).status, 200, "top-k clamps");
+    let resp = {
+        let hdr = [("X-Top-K", "banana".to_string())];
+        http::write_post_with(&mut client.stream, "/similar", &hdr, b"doc:1\n").unwrap();
+        http::read_response(&mut client.reader).unwrap()
+    };
+    assert_eq!(resp.status, 400, "{}", resp.body_text());
+
+    // /score still works on the same connection — one batcher, two jobs
+    let (line, _) = libsvm_line(&ds, 9);
+    assert_eq!(client.post("/score", &format!("{line}\n")).status, 200);
+
+    let report = server.shutdown();
+    assert!(report.contains("serve_similar_served_total"), "{report}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn similar_overload_sheds_or_expires_through_the_shared_batcher() {
+    let ds = corpus(3000, 0x0AD5);
+    let spec = EncoderSpec::Bbit { b: 8, k: 64, d: ds.dim, seed: 3 };
+    let dir = tmp_dir("shed");
+    let cache = build_cache(&dir, &ds, &spec);
+    // degenerate banding (threshold ≈ 0): every query reranks a large
+    // slice of the corpus, so a single scorer is easy to overrun
+    let cfg = LshConfig { bands: 2, rows_per_band: 1 };
+    let idx = Arc::new(LshIndex::build_from_cache(&cache, cfg, 1, 2).unwrap());
+
+    let model_path = dir.join("m.bbmh");
+    model_for(spec).save(&model_path).unwrap();
+    let server = ModelServer::start_with_index(
+        &model_path,
+        ServeConfig {
+            scorer_workers: 1,
+            batch_max: 2,
+            batch_wait: Duration::ZERO,
+            queue_cap: 4,
+            deadline: Duration::from_millis(5),
+            ..Default::default()
+        },
+        Some(idx),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let docs: Vec<String> = (0..64).map(|i| format!("doc:{}", i * 40)).collect();
+    let report = loadgen::run(
+        addr,
+        &LoadgenConfig {
+            path: "/similar".into(),
+            qps: 4000.0,
+            duration: Duration::from_millis(700),
+            connections: 8,
+            docs,
+        },
+    )
+    .unwrap();
+
+    assert!(report.sent > 50, "{report:?}");
+    assert!(report.ok > 0, "some queries must land: {report:?}");
+    assert!(
+        report.shed + report.expired > 0,
+        "overload must shed (503) or expire (504), not absorb: {report:?}"
+    );
+    assert!(
+        report.ok + report.shed + report.expired + report.errors >= report.sent,
+        "{report:?}"
+    );
+    assert!((report.shed_rate - report.shed as f64 / report.sent as f64).abs() < 1e-12);
+
+    // the server survives the burst
+    let mut client = Client::connect(addr);
+    assert!(client.get("/healthz").body_text().starts_with("ok"));
+    let metrics = client.get("/metrics").body_text();
+    let received: u64 = metrics
+        .lines()
+        .find(|l| l.starts_with("serve_similar_received_total"))
+        .and_then(|l| l.split_ascii_whitespace().nth(1))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(received >= report.ok, "{metrics}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
