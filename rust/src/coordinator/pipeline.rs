@@ -67,6 +67,7 @@ use crate::data::dataset::{Example, SparseDataset};
 use crate::data::libsvm::{parse_block, BlockReader, ParsedChunk, RawBlock};
 use crate::encode::encoder::{EncodedChunk, EncoderSpec, FeatureEncoder};
 use crate::encode::expansion::BbitDataset;
+use crate::metrics::trace::{self, TraceCtx};
 use crate::{Error, Result};
 
 /// What the hash workers compute — legacy name for [`EncoderSpec`].
@@ -215,6 +216,45 @@ impl PipelineReport {
     pub fn ingest_mb_per_sec(&self) -> f64 {
         self.input_bytes as f64 / 1e6 / self.wall_seconds.max(1e-9)
     }
+
+    /// Machine-readable dump of every counter plus the derived rates —
+    /// the `--report-json FILE` flag on `preprocess` and `train --stream`,
+    /// so bench/trend tooling consumes this instead of scraping the human
+    /// summary.  Hand-rolled JSON, same as the BENCH_*.json writers (the
+    /// crate has no serde).
+    pub fn to_json(&self) -> String {
+        let per_worker = self
+            .per_worker_chunks
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"docs\":{},\"chunks\":{},\"read_seconds\":{:.6},\"stall_seconds\":{:.6},\
+             \"hash_cpu_seconds\":{:.6},\"parse_cpu_seconds\":{:.6},\"sink_seconds\":{:.6},\
+             \"wall_seconds\":{:.6},\"backpressure_stalls\":{},\"reorder_peak\":{},\
+             \"per_worker_chunks\":[{}],\"replay_threads\":{},\"replay_bytes\":{},\
+             \"input_bytes\":{},\"rows_per_sec\":{:.1},\"parse_rows_per_sec\":{:.1},\
+             \"ingest_mb_per_sec\":{:.3}}}",
+            self.docs,
+            self.chunks,
+            self.read_seconds,
+            self.stall_seconds,
+            self.hash_cpu_seconds,
+            self.parse_cpu_seconds,
+            self.sink_seconds,
+            self.wall_seconds,
+            self.backpressure_stalls,
+            self.reorder_peak,
+            per_worker,
+            self.replay_threads,
+            self.replay_bytes,
+            self.input_bytes,
+            self.rows_per_sec(),
+            self.parse_rows_per_sec(),
+            self.ingest_mb_per_sec(),
+        )
+    }
 }
 
 /// The streaming orchestrator.
@@ -247,13 +287,24 @@ impl Pipeline {
         W: Fn(&[Example], usize) -> Result<O> + Send + Sync,
         E: FnMut(usize, O) -> Result<()>,
     {
-        self.run_core(
+        let mut root = trace::Span::enter("pipeline.run");
+        let rctx = root.ctx();
+        let report = self.run_core(
             source,
+            rctx,
             |chunk: &Vec<Example>| (chunk.len(), 0),
             || (),
-            |chunk, (), wid| work(&chunk, wid),
+            |chunk, (), wid| {
+                let mut span = trace::Span::child("pipeline.encode", rctx);
+                span.record("worker", wid as f64);
+                span.record("rows", chunk.len() as f64);
+                work(&chunk, wid)
+            },
             emit,
-        )
+        )?;
+        root.record("docs", report.docs as f64);
+        root.record("chunks", report.chunks as f64);
+        Ok(report)
     }
 
     /// The fan-out/fan-in engine behind every source shape: generic over
@@ -262,9 +313,13 @@ impl Pipeline {
     /// once per worker; the block path parks its parse scratch there).
     /// `size_of` is the reader-side accounting hook returning
     /// `(docs, input_bytes)` for an item before it is dispatched.
+    /// `rctx` is the caller's root trace context: read and sink stage
+    /// spans parent under it (worker-stage spans are the caller's job —
+    /// the block path splits them into parse + encode).
     fn run_core<I, O, ST, SZ, MK, W, E>(
         &self,
         source: impl Iterator<Item = Result<I>> + Send,
+        rctx: TraceCtx,
         size_of: SZ,
         mut make_state: MK,
         work: W,
@@ -319,8 +374,26 @@ impl Pipeline {
                 let mut bytes = 0u64;
                 let mut stalls = 0u64;
                 let mut stall_secs = 0.0f64;
-                for (chunk_id, chunk) in source.enumerate() {
+                let trace_on = trace::enabled();
+                let mut source = source.enumerate();
+                loop {
+                    // per-chunk read span: times the pull itself (parse /
+                    // generate / disk) — queue waits below are excluded,
+                    // mirroring the read_seconds/stall_seconds split
+                    let t_read = if trace_on { Some(Instant::now()) } else { None };
+                    let Some((chunk_id, chunk)) = source.next() else {
+                        break;
+                    };
                     let chunk = chunk?;
+                    if let Some(start) = t_read {
+                        trace::emit_span(
+                            "pipeline.read",
+                            rctx,
+                            start,
+                            Instant::now(),
+                            &[("chunk", chunk_id as f64)],
+                        );
+                    }
                     let (n, b) = size_of(&chunk);
                     docs += n;
                     bytes += b;
@@ -425,7 +498,15 @@ impl Pipeline {
                     };
                     let t0 = Instant::now();
                     emit(next_chunk, out)?;
-                    report.sink_seconds += t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    report.sink_seconds += (t1 - t0).as_secs_f64();
+                    trace::emit_span(
+                        "pipeline.sink",
+                        rctx,
+                        t0,
+                        t1,
+                        &[("chunk", next_chunk as f64)],
+                    );
                     next_chunk += 1;
                     // return the admission credit (never blocks: in-channel
                     // credits ≤ capacity by conservation; reader-gone is fine)
@@ -548,21 +629,36 @@ impl Pipeline {
     {
         let (pool_tx, pool_rx) = std::sync::mpsc::channel::<Vec<u8>>();
         blocks.set_recycle(pool_rx);
+        let mut root = trace::Span::enter("pipeline.run");
+        let rctx = root.ctx();
         let mut docs = 0usize;
         let mut parse_cpu = 0.0f64;
         let mut report = self.run_core(
             blocks,
+            rctx,
             |b: &RawBlock| (0, b.bytes.len() as u64),
             || (ParsedChunk::default(), pool_tx.clone()),
             |block: RawBlock, (parsed, recycle), wid| {
                 parsed.clear();
                 let t0 = Instant::now();
                 parse_block(&block.bytes, block.first_line, binary, parsed)?;
-                let parse_secs = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                let parse_secs = (t1 - t0).as_secs_f64();
+                trace::emit_span(
+                    "pipeline.parse",
+                    rctx,
+                    t0,
+                    t1,
+                    &[("worker", wid as f64), ("rows", parsed.len() as f64)],
+                );
                 // hand the raw buffer back to the reader (reader gone at
                 // end-of-input is fine)
                 let _ = recycle.send(block.bytes);
+                let mut span = trace::Span::child("pipeline.encode", rctx);
+                span.record("worker", wid as f64);
+                span.record("rows", parsed.len() as f64);
                 let out = work(parsed, wid)?;
+                drop(span);
                 Ok((out, parsed.len(), parse_secs))
             },
             |id, (out, n, parse_secs)| {
@@ -574,6 +670,8 @@ impl Pipeline {
         report.docs = docs; // blocks carry an unknown doc count at read time
         report.parse_cpu_seconds = parse_cpu;
         report.hash_cpu_seconds = (report.hash_cpu_seconds - parse_cpu).max(0.0);
+        root.record("docs", report.docs as f64);
+        root.record("chunks", report.chunks as f64);
         Ok(report)
     }
 
@@ -965,6 +1063,37 @@ mod tests {
             sink.chunks
         );
         assert!(report.chunks > sink.chunks, "tiny slabs produce empty blocks");
+    }
+
+    #[test]
+    fn report_json_carries_every_counter() {
+        let ds = corpus(120);
+        let spec = EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 16, seed: 2 };
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 16, queue_depth: 2 });
+        let (_, report) = pipe.run(dataset_chunks(&ds, 16), &spec).unwrap();
+        let j = report.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"docs\":120"), "{j}");
+        assert!(j.contains("\"chunks\":8"), "{j}");
+        assert!(j.contains("\"per_worker_chunks\":["), "{j}");
+        for key in [
+            "read_seconds",
+            "stall_seconds",
+            "hash_cpu_seconds",
+            "parse_cpu_seconds",
+            "sink_seconds",
+            "wall_seconds",
+            "backpressure_stalls",
+            "reorder_peak",
+            "replay_threads",
+            "replay_bytes",
+            "input_bytes",
+            "rows_per_sec",
+            "parse_rows_per_sec",
+            "ingest_mb_per_sec",
+        ] {
+            assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
+        }
     }
 
     #[test]

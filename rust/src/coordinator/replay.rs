@@ -45,6 +45,7 @@ use crate::coordinator::sharding::ShardPlan;
 use crate::encode::cache::{CacheReader, ChunkIndex, IndexedCacheReader};
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
+use crate::metrics::trace;
 use crate::{Error, Result};
 
 /// One recycled decode buffer.
@@ -111,6 +112,8 @@ where
     F: FnMut(usize, u64, &PackedCodes, &[i8]) -> Result<()>,
 {
     let wall0 = Instant::now();
+    let mut root = trace::Span::enter("replay.run");
+    let rctx = root.ctx();
     let mut reader = CacheReader::open(path)?;
     let meta = reader.meta();
     let (b, k) = meta.spec.packed_geometry().ok_or_else(|| {
@@ -130,13 +133,18 @@ where
         if !reader.next_chunk_into(&mut codes, &mut labels)? {
             break;
         }
-        report.hash_cpu_seconds += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        report.hash_cpu_seconds += (t1 - t0).as_secs_f64();
+        trace::emit_span("replay.read", rctx, t0, t1, &[("record", record as f64)]);
         let t0 = Instant::now();
         emit(record, row0, &codes, &labels)?;
-        report.sink_seconds += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        report.sink_seconds += (t1 - t0).as_secs_f64();
+        trace::emit_span("replay.emit", rctx, t0, t1, &[("record", record as f64)]);
         row0 += codes.n as u64;
         record += 1;
     }
+    root.record("records", record as f64);
     report.docs = row0 as usize;
     report.chunks = record;
     report.per_worker_chunks[0] = record;
@@ -157,9 +165,13 @@ where
     F: FnMut(usize, u64, &PackedCodes, &[i8]) -> Result<()>,
 {
     let wall0 = Instant::now();
+    let mut root = trace::Span::enter("replay.run");
+    let rctx = root.ctx();
     let n_rec = index.entries.len();
     let starts = index.row_starts();
     let threads = threads.min(n_rec.max(1));
+    root.record("records", n_rec as f64);
+    root.record("threads", threads as f64);
     let mut report = PipelineReport {
         replay_threads: threads,
         per_worker_chunks: vec![0; threads],
@@ -225,7 +237,17 @@ where
                     .unwrap_or_else(|_| {
                         Err(Error::Pipeline(format!("replay worker {wid} panicked")))
                     })
-                    .map(|()| (rec, (codes, labels), t0.elapsed().as_secs_f64(), wid));
+                    .map(|()| {
+                        let t1 = Instant::now();
+                        trace::emit_span(
+                            "replay.read",
+                            rctx,
+                            t0,
+                            t1,
+                            &[("record", rec as f64), ("worker", wid as f64)],
+                        );
+                        (rec, (codes, labels), (t1 - t0).as_secs_f64(), wid)
+                    });
                     if full_tx.send(out).is_err() {
                         break; // collector bailed on an earlier error
                     }
@@ -247,7 +269,9 @@ where
             while let Some((codes, labels)) = reorder.remove(&next_emit) {
                 let t0 = Instant::now();
                 emit(next_emit, starts[next_emit], &codes, &labels)?;
-                report.sink_seconds += t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                report.sink_seconds += (t1 - t0).as_secs_f64();
+                trace::emit_span("replay.emit", rctx, t0, t1, &[("record", next_emit as f64)]);
                 report.docs += codes.n;
                 next_emit += 1;
                 // recycle the buffer (never blocks: in-channel buffers ≤

@@ -166,7 +166,10 @@ impl<W: Write + Seek> PipelineSink for CacheSink<W> {
 /// update; nothing is materialized.  `finish` applies the tail minibatch,
 /// so after the pipeline returns, [`into_result`](Self::into_result) holds
 /// exactly the weights materialize-then-`train_sgd` (1 epoch) would have
-/// produced on the same chunk stream.
+/// produced on the same chunk stream.  `finish` closes the epoch through
+/// [`SgdStream::end_epoch`], which emits a `train.epoch` trace point
+/// (epoch/rows/loss) when `--trace-out` is active — so even the one-pass
+/// path leaves a training-curve event in the JSONL log.
 pub struct TrainSink {
     stream: SgdStream,
 }

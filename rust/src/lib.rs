@@ -29,6 +29,7 @@
 //! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink; raw input is carved into byte blocks and *parsed in the workers*, so ingest scales with `--workers`), parallel cache-replay reader pool, + scheduler |
 //! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control, a load generator, and the consistent-hash `route` fleet tier scatter-gathering `/similar` over shard servers (the paper's "used in industry / search" request path) |
 //! | [`similarity`] | online near-neighbor search: sharded, snapshottable LSH index over b-bit signatures, built out-of-core from the hashed cache (the paper's Section 6 "re-use the hashed data" workflow, made a serving subsystem) |
+//! | [`metrics`] | the unified telemetry layer: counters/gauges/histograms, one Prometheus text renderer + format validator ([`metrics::prom`]), and structured JSONL tracing spans with fleet-wide trace-id propagation ([`metrics::trace`]) |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
 //!
@@ -93,6 +94,38 @@
 //! committed baselines in `benches/baselines/` via
 //! `scripts/bench_gate.sh` and appends history with
 //! `scripts/bench_trend.sh`.
+//!
+//! ## Observability
+//!
+//! The [`metrics`] module is the one telemetry layer every tier speaks:
+//!
+//! - **Prometheus exposition.**  Both `GET /metrics` bodies (server and
+//!   router) render through [`metrics::prom::Exposition`] with canonical
+//!   naming — counters end `_total`, durations are `_seconds` in base
+//!   units, histograms emit cumulative `_bucket{le=...}`/`_sum`/`_count`.
+//!   [`metrics::prom::validate`] is a promtool-style format checker; CI
+//!   scrapes both live endpoints and validates them
+//!   (`scripts/check_metrics.sh`).  [`metrics::Gauge`] tracks
+//!   point-in-time state: queue depth, loaded shards, model epoch.
+//! - **Tracing spans.**  `--trace-out FILE` (on `preprocess`, `train`,
+//!   `serve`, `route`) streams JSONL span events ([`metrics::trace`]).
+//!   The span taxonomy: `pipeline.run` > `pipeline.read` /
+//!   `pipeline.parse` / `pipeline.encode` / `pipeline.sink`;
+//!   `replay.run` > `replay.read` / `replay.emit`; a `train.epoch` point
+//!   per epoch; on the serve path `serve.score` / `serve.similar` roots
+//!   over `serve.admission_wait` (queue wait), `serve.batch_assembly`,
+//!   and `serve.kernel` (service time); on the router `route.score` /
+//!   `route.similar` roots over per-backend `route.forward` /
+//!   `route.scatter_leg` legs.
+//! - **Trace-id propagation.**  Every request gets a trace id at the
+//!   edge (client-supplied `X-Trace-Id` or minted), echoed on every
+//!   response and forwarded on every backend leg — so one grep by trace
+//!   id over the fleet's trace files reconstructs a request's full path,
+//!   with queue wait separated from service time.  `--slow-ms N` logs
+//!   slow requests (with their trace id) to stderr on both tiers.
+//! - **Machine-readable reports.**  `--report-json FILE` (on
+//!   `preprocess` and `train --stream`) dumps the
+//!   [`PipelineReport`](coordinator::PipelineReport) as JSON.
 
 pub mod config;
 pub mod coordinator;

@@ -61,11 +61,22 @@ RAW-INPUT PARSING (preprocess, train --input, classify --input):
   parse and encode in parallel; --legacy-reader falls back to the
   single-threaded line reader (kept for one release).
 
+TELEMETRY:
+  --trace-out FILE (preprocess, train, serve, route) streams structured
+  JSONL spans — pipeline stages, epochs, request roots, admission waits,
+  batch assembly, kernels, router legs — to FILE; trace ids propagate
+  across the serve fleet via the X-Trace-Id header, so one grep over the
+  fleet's trace files reconstructs a request's full path.
+  --slow-ms N (serve, route) logs any request slower than N ms to stderr
+  with its trace id.  --report-json FILE (preprocess, train --stream)
+  dumps the machine-readable pipeline report.
+
 USAGE:
   bbit-mh gen-data --out FILE [--n 4000] [--vocab 4000] [--expanded] [--seed N]
   bbit-mh preprocess --input FILE (--out FILE | --cache-out FILE)
              [--encoder bbit|vw|rp|oph] [scheme flags] [--workers N] [--seed N]
              [--cache-compress] [--block-kb 256] [--legacy-reader]
+             [--trace-out FILE] [--report-json FILE]
              (--cache-out streams packed-code chunks to the on-disk hashed
               cache: hash once, train many times, constant memory; the v3
               cache carries a chunk index for parallel replay, and
@@ -88,7 +99,7 @@ USAGE:
               synchronized by iterate averaging at epoch boundaries)
   bbit-mh train --input FILE --stream [--encoder bbit|oph] [scheme flags]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
-             [--seed N] [--save-model FILE]
+             [--seed N] [--save-model FILE] [--trace-out FILE] [--report-json FILE]
              (one-pass hash-and-train: nothing materialized, prints progressive loss)
   bbit-mh classify --model FILE (--input FILE [--out FILE] [--block-kb 256]
              [--legacy-reader] [--chunk-size 256]
@@ -102,7 +113,7 @@ USAGE:
   bbit-mh serve --model FILE [--host 127.0.0.1] [--port 0] [--workers N]
              [--batch-max 64] [--batch-wait-us 200] [--queue 1024]
              [--deadline-ms 50] [--reload-poll-ms 200] [--idle-timeout-s 10]
-             [--similar-index FILE[,FILE...]]
+             [--similar-index FILE[,FILE...]] [--slow-ms N] [--trace-out FILE]
              (micro-batched HTTP scoring: POST /score LibSVM lines,
               GET /metrics, GET /healthz; bounded queue sheds with 503;
               the model file is watched and hot-reloaded; port 0 picks an
@@ -121,7 +132,7 @@ USAGE:
   bbit-mh route --backends HOST:PORT,HOST:PORT[,...] --shards N
              [--host 127.0.0.1] [--port 0] [--health-poll-ms 200]
              [--timeout-ms 2000] [--fail-threshold 2] [--max-backoff-ms 2000]
-             [--idle-timeout-s 10]
+             [--idle-timeout-s 10] [--slow-ms N] [--trace-out FILE]
              (the fleet tier: consistent-hash shard placement over the
               backends, /healthz-driven per-backend health with backoff,
               POST /similar doc lookups routed to the owner shard and raw
@@ -198,7 +209,20 @@ fn run(argv: &[String]) -> Result<()> {
         return Ok(());
     };
     let args = Args::parse(&argv[1..])?;
-    match cmd {
+    // --trace-out arms the process-wide JSONL span sink before the command
+    // runs, so even the earliest pipeline spans land in the file; only the
+    // commands that emit spans accept it (a trace file that stays silently
+    // empty would read as "nothing happened")
+    if let Some(path) = args.flags.get("trace-out") {
+        const TRACED: &[&str] = &["preprocess", "train", "serve", "route"];
+        if !TRACED.contains(&cmd) {
+            return Err(Error::InvalidArg(format!(
+                "--trace-out applies to preprocess|train|serve|route, got {cmd:?}"
+            )));
+        }
+        bbit_mh::metrics::trace::init_file(path)?;
+    }
+    let result = match cmd {
         "gen-data" => cmd_gen_data(&args),
         "preprocess" => cmd_preprocess(&args),
         "train" => cmd_train(&args),
@@ -213,7 +237,13 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         other => Err(Error::InvalidArg(format!("unknown command {other:?}; try help"))),
+    };
+    // drain every thread-local span buffer before exit — a trace file cut
+    // off mid-request would fail downstream JSONL parsers
+    if args.has("trace-out") {
+        bbit_mh::metrics::trace::flush();
     }
+    result
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -322,6 +352,22 @@ fn ingest_summary(report: &bbit_mh::coordinator::PipelineReport) -> String {
     )
 }
 
+/// `--report-json FILE`: persist the machine-readable [`PipelineReport`]
+/// alongside the human summary — the hook the benchmark harness and any
+/// dashboard scrape instead of parsing stderr.
+fn write_report_json(
+    args: &Args,
+    report: &bbit_mh::coordinator::PipelineReport,
+) -> Result<()> {
+    if let Some(path) = args.flags.get("report-json") {
+        let mut body = report.to_json();
+        body.push('\n');
+        std::fs::write(path, body)?;
+        eprintln!("wrote pipeline report to {path}");
+    }
+    Ok(())
+}
+
 /// Run `spec` over a raw LibSVM file into `sink`, choosing the default
 /// byte-block parse-in-worker path or the legacy line reader
 /// (`--legacy-reader`).
@@ -363,6 +409,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         };
         let mut sink = CacheSink::create_opts(cache_out, &spec, opts)?;
         let report = run_raw_input(args, &pipe, input, &spec, &mut sink)?;
+        write_report_json(args, &report)?;
         let bytes = if opts.compress {
             let m = sink.meta();
             format!(
@@ -393,6 +440,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
     let out = args.required("out")?;
     let mut collect = bbit_mh::coordinator::CollectSink::for_spec(&spec)?;
     let report = run_raw_input(args, &pipe, input, &spec, &mut collect)?;
+    write_report_json(args, &report)?;
     let outp = collect.into_output();
     match outp {
         PipelineOutput::Packed(bb) => {
@@ -605,6 +653,7 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
     let mut sink = TrainSink::for_spec(cfg, &spec)?;
     let report = run_raw_input(args, &pipe, input, &spec, &mut sink)?;
+    write_report_json(args, &report)?;
     let (model, stats) = sink.into_result();
     println!(
         "solver=sgd method=stream: one-pass trained on {} docs, progressive loss {:.4}, \
@@ -652,6 +701,17 @@ fn fit_and_save<F: FeatureMatrix>(
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // the pipeline report exists only where the ingest pipeline runs —
+    // silently ignoring the flag would leave a stale or missing file that
+    // the harness would read as this run's numbers
+    if args.has("report-json") && !args.has("stream") {
+        return Err(Error::InvalidArg(
+            "--report-json applies to preprocess and train --stream (the ingest \
+             pipeline paths); cache replay and the in-memory split have no \
+             pipeline report"
+                .into(),
+        ));
+    }
     if let Some(cache) = args.flags.get("cache") {
         return cmd_train_cache(args, cache.as_str());
     }
@@ -903,6 +963,17 @@ fn cmd_classify(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--slow-ms N` (serve, route): absent means no slow-request log; 0 is
+/// valid and logs every request (the firehose debugging mode).
+fn slow_ms_flag(args: &Args) -> Result<Option<u64>> {
+    match args.flags.get("slow-ms") {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.parse().map_err(|_| {
+            Error::InvalidArg(format!("bad --slow-ms value {v:?}"))
+        })?)),
+    }
+}
+
 /// `serve --model FILE`: the online request path — load the model once,
 /// keep it resident behind the micro-batched HTTP scoring endpoint
 /// ([`bbit_mh::serve`]), hot-reload it when the file changes, and print
@@ -920,6 +991,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadline: Duration::from_millis(args.get("deadline-ms", 50u64)?),
         reload_poll: Duration::from_millis(args.get("reload-poll-ms", 200u64)?),
         idle_timeout: Duration::from_secs(args.get("idle-timeout-s", 10u64)?),
+        slow_ms: slow_ms_flag(args)?,
     };
     let similar = match args.flags.get("similar-index") {
         None => None,
@@ -1038,6 +1110,7 @@ fn cmd_route(args: &Args) -> Result<()> {
         fail_threshold: args.get("fail-threshold", 2u32)?,
         max_backoff: Duration::from_millis(args.get("max-backoff-ms", 2000u64)?),
         idle_timeout: Duration::from_secs(args.get("idle-timeout-s", 10u64)?),
+        slow_ms: slow_ms_flag(args)?,
     };
     let router = bbit_mh::serve::Router::start(cfg)?;
     eprintln!(
@@ -1220,6 +1293,52 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.to_string().contains("similar-index"), "{err}");
+    }
+
+    #[test]
+    fn trace_out_is_rejected_for_untraced_commands() {
+        // only rejection paths run here — init_file is once per process,
+        // so a test that actually armed the sink would poison every later
+        // test in this binary
+        let err = run(&argv(&[
+            "classify", "--model", "m", "--input", "f", "--trace-out", "t",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("trace-out"), "{err}");
+        let err = run(&argv(&["gen-data", "--out", "o", "--trace-out", "t"])).unwrap_err();
+        assert!(err.to_string().contains("trace-out"), "{err}");
+        let err = run(&argv(&["help", "--trace-out", "t"])).unwrap_err();
+        assert!(err.to_string().contains("trace-out"), "{err}");
+    }
+
+    #[test]
+    fn report_json_requires_a_pipeline_path() {
+        // cache replay and the in-memory split have no pipeline report —
+        // rejected before any file IO
+        let err = run(&argv(&[
+            "train", "--cache", "c", "--report-json", "r",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("report-json"), "{err}");
+        let err = run(&argv(&[
+            "train", "--input", "f", "--report-json", "r",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("report-json"), "{err}");
+    }
+
+    #[test]
+    fn slow_ms_rejects_garbage_before_binding() {
+        let err = run(&argv(&[
+            "serve", "--model", "m", "--slow-ms", "fast",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("slow-ms"), "{err}");
+        let err = run(&argv(&[
+            "route", "--backends", "127.0.0.1:7001", "--slow-ms", "fast",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("slow-ms"), "{err}");
     }
 
     #[test]

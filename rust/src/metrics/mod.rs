@@ -2,6 +2,18 @@
 //! printable registry.  The pipeline and experiment harnesses report
 //! through this module so every table in EXPERIMENTS.md comes from one
 //! code path.
+//!
+//! Two submodules extend the primitives into a telemetry layer:
+//!
+//! - [`prom`] renders any set of counters/gauges/histograms in the
+//!   Prometheus text exposition format — the single renderer behind both
+//!   `/metrics` endpoints (model server and fleet router);
+//! - [`trace`] is the structured-span side: request/stage spans with
+//!   parent links and trace IDs, drained to a JSONL event log when
+//!   `--trace-out` is set, near-zero cost when it is not.
+
+pub mod prom;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,6 +33,37 @@ impl Counter {
 
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value (atomic; shared across threads).  Unlike a
+/// [`Counter`] a gauge can move both ways — queue depth, loaded shards,
+/// current model epoch.
+#[derive(Default, Debug)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: u64) {
+        // saturating: a racy decrement below zero clamps rather than wraps
+        let _ = self
+            .v
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_sub(n))
+            });
     }
 
     pub fn get(&self) -> u64 {
@@ -74,11 +117,16 @@ impl Timer {
 pub struct Histogram {
     /// bucket i counts values in [2^i-1, 2^i) scaled by `unit`
     buckets: Vec<AtomicU64>,
+    /// running sum of observed values (Prometheus `_sum` needs it)
+    sum: AtomicU64,
 }
 
 impl Default for Histogram {
     fn default() -> Self {
-        Histogram { buckets: (0..32).map(|_| AtomicU64::new(0)).collect() }
+        Histogram {
+            buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+        }
     }
 }
 
@@ -86,10 +134,24 @@ impl Histogram {
     pub fn observe(&self, v: u64) {
         let idx = (64 - v.leading_zeros()).min(31) as usize;
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of every observed value (same unit the values were observed in).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-bucket counts; bucket `i` covers values with
+    /// `64 - leading_zeros == i`, i.e. upper bound `2^i - 1` (the last
+    /// bucket is open-ended).  [`prom::Exposition::histogram`] renders
+    /// these as cumulative `_bucket{le=...}` samples.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
     /// Upper-bound estimate of the p-quantile (0..=1).
@@ -114,6 +176,7 @@ impl Histogram {
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     timers: Mutex<BTreeMap<String, std::sync::Arc<Timer>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
@@ -121,6 +184,15 @@ pub struct Registry {
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -151,6 +223,9 @@ impl Registry {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name:<40} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name:<40} {} (gauge)\n", g.get()));
         }
         for (name, t) in self.timers.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -189,6 +264,37 @@ mod tests {
         assert!(t.seconds() >= 0.0);
         let s = reg.summary();
         assert!(s.contains("docs") && s.contains("hash"));
+    }
+
+    #[test]
+    fn gauges_move_both_ways() {
+        let reg = Registry::default();
+        let g = reg.gauge("queue_depth");
+        g.set(7);
+        g.add(3);
+        g.sub(4);
+        assert_eq!(reg.gauge("queue_depth").get(), 6);
+        g.sub(100); // saturates at zero instead of wrapping
+        assert_eq!(g.get(), 0);
+        let s = reg.summary();
+        assert!(s.contains("queue_depth") && s.contains("(gauge)"), "{s}");
+    }
+
+    #[test]
+    fn histogram_sum_and_buckets() {
+        let h = Histogram::default();
+        for v in [0u64, 1, 2, 3, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1006);
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets.len(), 32);
+        assert_eq!(buckets.iter().sum::<u64>(), 5);
+        assert_eq!(buckets[0], 1); // v=0
+        assert_eq!(buckets[1], 1); // v=1
+        assert_eq!(buckets[2], 2); // v in {2,3}
+        assert_eq!(buckets[10], 1); // v=1000 (512..1023)
     }
 
     #[test]

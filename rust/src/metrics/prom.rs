@@ -1,0 +1,338 @@
+//! Prometheus text exposition: one renderer for every `/metrics` body.
+//!
+//! The model server and the fleet router used to hand-roll their scrape
+//! bodies in two different ad-hoc formats (bare `name value` lines, with
+//! histograms flattened to `_p50`/`_p99` gauges).  This module replaces
+//! both with the standard text format, so a real scraper — or the
+//! promtool-style [`validate`] below, which CI runs against the live
+//! endpoints via `scripts/check_metrics.sh` — can consume them:
+//!
+//! - `# HELP` / `# TYPE` precede each family;
+//! - counters end in `_total`, time series are base-unit `_seconds`
+//!   (the internal histograms count microseconds; [`Exposition::histogram`]
+//!   takes a `scale` of `1e-6` to convert);
+//! - histograms render *cumulative* `_bucket{le="..."}` samples plus
+//!   `_sum`/`_count`, with the mandatory `le="+Inf"` bucket equal to
+//!   `_count`.
+//!
+//! Bucket boundaries come from [`Histogram`]'s log₂ layout: bucket `i`
+//! holds values with `64 − leading_zeros == i`, i.e. upper bound
+//! `2^i − 1`, so the rendered `le` labels are `(2^i − 1)·scale` with the
+//! last bucket open-ended.
+
+use crate::metrics::Histogram;
+use std::fmt::Write as _;
+
+/// Builder for one exposition body.  Call the typed appenders in any
+/// order, then [`finish`](Self::finish).
+#[derive(Default)]
+pub struct Exposition {
+    out: String,
+}
+
+impl Exposition {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// Monotone counter; Prometheus convention requires the `_total`
+    /// suffix (enforced in debug builds, checked again by [`validate`]).
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) -> &mut Self {
+        debug_assert!(name.ends_with("_total"), "counter {name} must end in _total");
+        self.header(name, help, "counter");
+        let _ = writeln!(self.out, "{name} {value}");
+        self
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, value: u64) -> &mut Self {
+        debug_assert!(!name.ends_with("_total"), "gauge {name} must not look like a counter");
+        self.header(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {value}");
+        self
+    }
+
+    /// Render a [`Histogram`] as cumulative buckets.  `scale` converts
+    /// the observed integer unit to the exposed base unit (`1e-6` for
+    /// histograms observed in microseconds and exposed as `_seconds`;
+    /// `1.0` for unitless sizes/counts).
+    pub fn histogram(&mut self, name: &str, help: &str, h: &Histogram, scale: f64) -> &mut Self {
+        self.header(name, help, "histogram");
+        let counts = h.bucket_counts();
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if i + 1 == counts.len() {
+                let _ = writeln!(self.out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            } else {
+                let le = ((1u64 << i) - 1) as f64 * scale;
+                let _ = writeln!(self.out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+            }
+        }
+        let _ = writeln!(self.out, "{name}_sum {}", h.sum() as f64 * scale);
+        let _ = writeln!(self.out, "{name}_count {cum}");
+        self
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Promtool-style format check, shared by unit tests, the e2e suite and
+/// (re-implemented in shell+python) `scripts/check_metrics.sh`:
+///
+/// - every line is `# HELP`/`# TYPE` or `name[{le="..."}] value`;
+/// - a family's `TYPE` appears exactly once, before any of its samples;
+/// - counter samples end in `_total`;
+/// - histogram `le` labels strictly increase, end at `+Inf`, cumulative
+///   counts never decrease, and `+Inf == _count`;
+/// - every sample value parses as a float.
+pub fn validate(text: &str) -> std::result::Result<(), String> {
+    use std::collections::HashMap;
+    // family → declared type
+    let mut types: HashMap<String, String> = HashMap::new();
+    // histogram family → (last le, last cumulative, inf seen, count seen)
+    struct HistState {
+        last_le: f64,
+        last_cum: u64,
+        inf: Option<u64>,
+        count: Option<u64>,
+        sum: bool,
+    }
+    let mut hists: HashMap<String, HistState> = HashMap::new();
+
+    for (lno, line) in text.lines().enumerate() {
+        let n = lno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let keyword = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            match keyword {
+                "HELP" => {
+                    if name.is_empty() {
+                        return Err(format!("line {n}: HELP without a metric name"));
+                    }
+                }
+                "TYPE" => {
+                    let kind = parts.next().unwrap_or("");
+                    if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                        return Err(format!("line {n}: unknown TYPE '{kind}' for {name}"));
+                    }
+                    if types.insert(name.to_string(), kind.to_string()).is_some() {
+                        return Err(format!("line {n}: duplicate TYPE for {name}"));
+                    }
+                    if kind == "histogram" {
+                        hists.insert(
+                            name.to_string(),
+                            HistState {
+                                last_le: f64::NEG_INFINITY,
+                                last_cum: 0,
+                                inf: None,
+                                count: None,
+                                sum: false,
+                            },
+                        );
+                    }
+                }
+                _ => return Err(format!("line {n}: unknown comment keyword '{keyword}'")),
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(format!("line {n}: comment must start with '# '"));
+        }
+        // sample: name[{labels}] value
+        let (name_labels, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {n}: sample has no value"))?;
+        let value: f64 = value
+            .parse()
+            .map_err(|_| format!("line {n}: value '{value}' is not a float"))?;
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((name, rest)) => {
+                let labels = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {n}: unterminated label set"))?;
+                (name, Some(labels))
+            }
+            None => (name_labels, None),
+        };
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || name.starts_with(|c: char| c.is_ascii_digit())
+        {
+            return Err(format!("line {n}: invalid metric name '{name}'"));
+        }
+        // resolve the family: histogram children strip their suffix
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|sfx| {
+                let stem = name.strip_suffix(sfx)?;
+                hists.contains_key(stem).then_some(stem)
+            })
+            .unwrap_or(name);
+        let Some(kind) = types.get(family) else {
+            return Err(format!("line {n}: sample '{name}' before any TYPE declaration"));
+        };
+        match kind.as_str() {
+            "counter" => {
+                if !name.ends_with("_total") {
+                    return Err(format!("line {n}: counter sample '{name}' must end in _total"));
+                }
+                if value < 0.0 {
+                    return Err(format!("line {n}: counter '{name}' is negative"));
+                }
+            }
+            "histogram" => {
+                let st = hists.get_mut(family).expect("tracked above");
+                if name.ends_with("_bucket") {
+                    let labels = labels
+                        .ok_or_else(|| format!("line {n}: _bucket sample without le label"))?;
+                    let le = labels
+                        .strip_prefix("le=\"")
+                        .and_then(|s| s.strip_suffix('"'))
+                        .ok_or_else(|| format!("line {n}: malformed le label '{labels}'"))?;
+                    let le_v = if le == "+Inf" {
+                        f64::INFINITY
+                    } else {
+                        le.parse::<f64>()
+                            .map_err(|_| format!("line {n}: le '{le}' is not a float"))?
+                    };
+                    if le_v <= st.last_le {
+                        return Err(format!("line {n}: le labels must strictly increase"));
+                    }
+                    let cum = value as u64;
+                    if cum < st.last_cum {
+                        return Err(format!("line {n}: cumulative bucket counts decreased"));
+                    }
+                    st.last_le = le_v;
+                    st.last_cum = cum;
+                    if le_v.is_infinite() {
+                        st.inf = Some(cum);
+                    }
+                } else if name.ends_with("_count") {
+                    st.count = Some(value as u64);
+                } else if name.ends_with("_sum") {
+                    st.sum = true;
+                } else {
+                    return Err(format!(
+                        "line {n}: bare sample '{name}' for histogram family '{family}'"
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    for (family, st) in &hists {
+        let inf = st
+            .inf
+            .ok_or_else(|| format!("histogram {family}: missing le=\"+Inf\" bucket"))?;
+        let count = st
+            .count
+            .ok_or_else(|| format!("histogram {family}: missing _count"))?;
+        if inf != count {
+            return Err(format!(
+                "histogram {family}: +Inf bucket {inf} != _count {count}"
+            ));
+        }
+        if !st.sum {
+            return Err(format!("histogram {family}: missing _sum"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_validates() {
+        let h = Histogram::default();
+        for v in [0u64, 1, 3, 900] {
+            h.observe(v);
+        }
+        let mut exp = Exposition::new();
+        exp.counter("serve_docs_scored_total", "Docs scored.", 42)
+            .gauge("serve_queue_depth", "Jobs queued right now.", 3)
+            .histogram("serve_queue_wait_seconds", "Admission wait.", &h, 1e-6)
+            .histogram("serve_batch_size", "Docs per batch.", &h, 1.0);
+        let body = exp.finish();
+        validate(&body).unwrap_or_else(|e| panic!("{e}\n{body}"));
+        assert!(body.contains("# TYPE serve_docs_scored_total counter"));
+        assert!(body.contains("serve_docs_scored_total 42"));
+        assert!(body.contains("# TYPE serve_queue_depth gauge"));
+        assert!(body.contains("# TYPE serve_queue_wait_seconds histogram"));
+        // µs → seconds scaling on the le labels; unitless keeps integers
+        assert!(body.contains("serve_queue_wait_seconds_bucket{le=\"0.000001\"}"), "{body}");
+        assert!(body.contains("serve_batch_size_bucket{le=\"1\"}"), "{body}");
+        assert!(body.contains("serve_batch_size_bucket{le=\"+Inf\"} 4"), "{body}");
+        assert!(body.contains("serve_batch_size_sum 904"), "{body}");
+        assert!(body.contains("serve_batch_size_count 4"), "{body}");
+    }
+
+    #[test]
+    fn buckets_are_cumulative_and_match_count() {
+        let h = Histogram::default();
+        for v in 0..100u64 {
+            h.observe(v);
+        }
+        let mut exp = Exposition::new();
+        exp.histogram("x_seconds", "h", &h, 1e-6);
+        let body = exp.finish();
+        validate(&body).unwrap();
+        // last finite bucket already holds everything observed
+        let inf_line = body
+            .lines()
+            .find(|l| l.contains("le=\"+Inf\""))
+            .expect("+Inf bucket");
+        assert!(inf_line.ends_with(" 100"), "{inf_line}");
+        assert!(body.contains("x_seconds_count 100"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_bodies() {
+        // sample before TYPE
+        assert!(validate("foo_total 1\n").is_err());
+        // counter without _total
+        let bad = "# HELP foo c\n# TYPE foo counter\nfoo 1\n";
+        assert!(validate(bad).unwrap_err().contains("_total"));
+        // non-monotonic le
+        let bad = "# HELP h x\n# TYPE h histogram\n\
+                   h_bucket{le=\"2\"} 1\nh_bucket{le=\"1\"} 2\n\
+                   h_bucket{le=\"+Inf\"} 2\nh_sum 3\nh_count 2\n";
+        assert!(validate(bad).unwrap_err().contains("strictly increase"));
+        // cumulative counts must not decrease
+        let bad = "# HELP h x\n# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\n\
+                   h_bucket{le=\"+Inf\"} 5\nh_sum 3\nh_count 5\n";
+        assert!(validate(bad).unwrap_err().contains("decreased"));
+        // missing +Inf
+        let bad = "# HELP h x\n# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 1\nh_sum 1\nh_count 1\n";
+        assert!(validate(bad).unwrap_err().contains("+Inf"));
+        // +Inf != count
+        let bad = "# HELP h x\n# TYPE h histogram\n\
+                   h_bucket{le=\"+Inf\"} 4\nh_sum 1\nh_count 5\n";
+        assert!(validate(bad).unwrap_err().contains("_count"));
+        // duplicate TYPE
+        let bad = "# TYPE g gauge\n# TYPE g gauge\ng 1\n";
+        assert!(validate(bad).unwrap_err().contains("duplicate"));
+        // junk value
+        let bad = "# TYPE g gauge\ng abc\n";
+        assert!(validate(bad).unwrap_err().contains("not a float"));
+        // a clean body still passes
+        let ok = "# HELP up 1 when healthy.\n# TYPE up gauge\nup 1\n";
+        validate(ok).unwrap();
+    }
+}

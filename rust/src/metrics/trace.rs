@@ -1,0 +1,436 @@
+//! Structured tracing spans drained to a JSONL event log.
+//!
+//! The serving fleet (router → backend → batcher → kernel) and the
+//! offline pipeline (reader → parse → encode → sink) both need the same
+//! thing the paper's Table 2 needed: *attribution* — which stage a
+//! second of wall clock went to.  Counters summarize; spans explain one
+//! slow request.  This module is the span side of the telemetry layer:
+//!
+//! - **Near-zero cost when disabled.**  Tracing is off unless
+//!   `--trace-out FILE` initialized it ([`init_file`]).  Every entry
+//!   point starts with one relaxed atomic load; a disabled
+//!   [`Span`] takes no timestamp, allocates nothing and writes nothing
+//!   (`Vec::new()` does not allocate), so instrumented hot paths stay
+//!   within the ≤1% bench budget.
+//! - **Per-thread buffers.**  Enabled spans serialize into a
+//!   thread-local `String` and drain to the shared `BufWriter` under one
+//!   short lock — when the thread's span stack empties (end of a
+//!   request / pipeline run), when the buffer passes 32 KiB, or when the
+//!   thread exits.  The hot path never takes the sink lock per event.
+//! - **Parent links + trace IDs.**  A [`TraceCtx`] is `Copy` and travels
+//!   across threads and (as the `X-Trace-Id` header, see
+//!   [`serve`](crate::serve)) across processes, so one JSONL file
+//!   reconstructs a request's full fleet path.  ID helpers
+//!   ([`gen_id`]/[`parse_id`]/[`format_id`]) work whether or not tracing
+//!   is enabled — header propagation is unconditional, only the event
+//!   log is gated.
+//!
+//! ## JSONL schema
+//!
+//! One event per line.  Spans:
+//!
+//! ```text
+//! {"kind":"span","name":"serve.kernel","trace":"<16 hex>","span":7,
+//!  "parent":3,"t_us":1234,"dur_us":56,"fields":{"docs":4}}
+//! ```
+//!
+//! `span` IDs are process-unique (monotone counter); `parent` is `0` for
+//! a root span; `t_us` is microseconds since [`init_file`] (monotonic
+//! clock, one epoch per process).  Points (instant events, e.g.
+//! `train.epoch`) carry `kind":"point"`, no `span`/`dur_us`, and a
+//! `parent` only when emitted under an open span.  Names and field keys
+//! are `&'static str` from call sites and must stay JSON-safe
+//! (`[a-z0-9._]`); values are finite `f64` (non-finite renders `null`).
+//!
+//! The span taxonomy (which names exist and how they nest) is documented
+//! in the crate root ("Observability" in `lib.rs`).
+
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::{Error, Result};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: OnceLock<Mutex<BufWriter<File>>> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+/// Process-unique span ids; 0 is reserved for "no span".
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static ID_SEED: AtomicU64 = AtomicU64::new(0);
+
+/// Drain a thread buffer to the sink once it passes this size even if
+/// the span stack is still open (long pipeline runs).
+const FLUSH_BYTES: usize = 32 * 1024;
+
+/// Route all subsequently emitted events to `path` (JSONL, truncated).
+/// One sink per process: the CLI calls this once, before any work, when
+/// `--trace-out` is set.  A second call is an error.
+pub fn init_file<P: AsRef<Path>>(path: P) -> Result<()> {
+    let file = File::create(path)?;
+    let _ = EPOCH.set(Instant::now());
+    if SINK.set(Mutex::new(BufWriter::new(file))).is_err() {
+        return Err(Error::InvalidArg(
+            "trace sink already initialized (--trace-out is once per process)".into(),
+        ));
+    }
+    ENABLED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Is event emission on?  (Header propagation does not check this.)
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drain the calling thread's buffer and flush the sink to disk.  The
+/// CLI calls this before exiting; worker threads drain themselves on
+/// exit (thread-local destructor) or when their span stack empties.
+pub fn flush() {
+    let _ = TLS.try_with(|t| drain(&mut t.borrow_mut().buf));
+    if let Some(sink) = SINK.get() {
+        if let Ok(mut w) = sink.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
+fn epoch() -> &'static Instant {
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// A span's coordinates: enough to parent children across threads and
+/// to echo the trace id on the wire.  `Copy`, 16 bytes, `Default` is
+/// the null context (trace 0 = untraced).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Request/run-scoped id, 64-bit, rendered as 16 hex chars.
+    pub trace: u64,
+    /// The span itself (0 when tracing is disabled).
+    pub span: u64,
+}
+
+/// A timed scope.  Emits one `"span"` event on drop when tracing is
+/// enabled; a disabled span is inert (no timestamp, no allocation).
+pub struct Span {
+    name: &'static str,
+    ctx: TraceCtx,
+    parent: u64,
+    start: Option<Instant>,
+    fields: Vec<(&'static str, f64)>,
+}
+
+impl Span {
+    /// Open a span under the calling thread's innermost open span (a
+    /// fresh root with a generated trace id if there is none).
+    pub fn enter(name: &'static str) -> Span {
+        if !enabled() {
+            return Span::inert(name, 0);
+        }
+        let (trace, parent) = TLS
+            .try_with(|t| t.borrow().stack.last().copied())
+            .ok()
+            .flatten()
+            .unwrap_or((0, 0));
+        let trace = if trace == 0 { gen_id() } else { trace };
+        Span::live(name, trace, parent)
+    }
+
+    /// Open a root span (parent 0) for an externally supplied trace id —
+    /// the serve path, where the id arrives in (or is generated for) the
+    /// `X-Trace-Id` header.  The id is carried even when tracing is
+    /// disabled so [`ctx`](Self::ctx) keeps working for header echo.
+    pub fn root(name: &'static str, trace: u64) -> Span {
+        if !enabled() {
+            return Span::inert(name, trace);
+        }
+        Span::live(name, trace, 0)
+    }
+
+    /// Open a child of an explicit context — the cross-thread form
+    /// (scatter-gather legs, scorer workers, pipeline stages).
+    pub fn child(name: &'static str, ctx: TraceCtx) -> Span {
+        if !enabled() {
+            return Span::inert(name, ctx.trace);
+        }
+        Span::live(name, ctx.trace, ctx.span)
+    }
+
+    fn inert(name: &'static str, trace: u64) -> Span {
+        Span { name, ctx: TraceCtx { trace, span: 0 }, parent: 0, start: None, fields: Vec::new() }
+    }
+
+    fn live(name: &'static str, trace: u64, parent: u64) -> Span {
+        let span = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+        let _ = TLS.try_with(|t| t.borrow_mut().stack.push((trace, span)));
+        Span {
+            name,
+            ctx: TraceCtx { trace, span },
+            parent,
+            start: Some(Instant::now()),
+            fields: Vec::new(),
+        }
+    }
+
+    /// Coordinates for parenting children (valid even cross-thread).
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    /// Attach a numeric field to the span's event (no-op when inert).
+    pub fn record(&mut self, key: &'static str, value: f64) {
+        if self.start.is_some() {
+            self.fields.push((key, value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let t_us = start.saturating_duration_since(*epoch()).as_micros() as u64;
+        let dur_us = start.elapsed().as_micros() as u64;
+        let line = event_json(
+            "span",
+            self.name,
+            self.ctx.trace,
+            Some(self.ctx.span),
+            Some(self.parent),
+            t_us,
+            Some(dur_us),
+            &self.fields,
+        );
+        let _ = TLS.try_with(|t| {
+            let mut t = t.borrow_mut();
+            if t.stack.last() == Some(&(self.ctx.trace, self.ctx.span)) {
+                t.stack.pop();
+            }
+            t.buf.push_str(&line);
+            if t.stack.is_empty() || t.buf.len() >= FLUSH_BYTES {
+                drain(&mut t.buf);
+            }
+        });
+    }
+}
+
+/// Emit a span retroactively from two captured instants — for scopes
+/// whose start was measured before the emitting code runs (admission
+/// wait measured from enqueue time, pipeline stage timings the report
+/// already collects).  Allocates a fresh span id under `ctx`.
+pub fn emit_span(
+    name: &'static str,
+    ctx: TraceCtx,
+    start: Instant,
+    end: Instant,
+    fields: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    let span = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+    let t_us = start.saturating_duration_since(*epoch()).as_micros() as u64;
+    let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+    push_line(event_json("span", name, ctx.trace, Some(span), Some(ctx.span), t_us, Some(dur_us), fields));
+}
+
+/// Emit an instant event (no duration) — per-epoch training loss, etc.
+/// Parented under the calling thread's innermost open span, if any.
+pub fn point(name: &'static str, fields: &[(&'static str, f64)]) {
+    if !enabled() {
+        return;
+    }
+    let top = TLS.try_with(|t| t.borrow().stack.last().copied()).ok().flatten();
+    let (trace, parent) = top.map_or((0, None), |(tr, sp)| (tr, Some(sp)));
+    let t_us = epoch().elapsed().as_micros() as u64;
+    push_line(event_json("point", name, trace, None, parent, t_us, None, fields));
+}
+
+/// Generate a nonzero 64-bit id (splitmix64 over wall clock ⊕ counter ⊕
+/// pid — unique enough for correlating logs, not a security token).
+pub fn gen_id() -> u64 {
+    let seed = ID_SEED.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut z = nanos ^ seed ^ ((std::process::id() as u64) << 32);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)).max(1)
+}
+
+/// Parse a wire trace id (1–16 hex chars, nonzero).
+pub fn parse_id(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() || s.len() > 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().filter(|&v| v != 0)
+}
+
+/// Render a trace id for the wire (16 hex chars, zero-padded).
+pub fn format_id(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+// ---- per-thread buffering ----
+
+struct ThreadBuf {
+    buf: String,
+    /// Innermost-last stack of (trace, span) open on this thread.
+    stack: Vec<(u64, u64)>,
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        drain(&mut self.buf);
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> =
+        RefCell::new(ThreadBuf { buf: String::new(), stack: Vec::new() });
+}
+
+fn drain(buf: &mut String) {
+    if buf.is_empty() {
+        return;
+    }
+    if let Some(sink) = SINK.get() {
+        if let Ok(mut w) = sink.lock() {
+            let _ = w.write_all(buf.as_bytes());
+        }
+    }
+    buf.clear();
+}
+
+fn push_line(line: String) {
+    let _ = TLS.try_with(|t| {
+        let mut t = t.borrow_mut();
+        t.buf.push_str(&line);
+        if t.stack.is_empty() || t.buf.len() >= FLUSH_BYTES {
+            drain(&mut t.buf);
+        }
+    });
+}
+
+/// One JSONL event.  Names/keys are static strings the call sites keep
+/// JSON-safe; this renderer does no escaping by design.
+#[allow(clippy::too_many_arguments)]
+fn event_json(
+    kind: &str,
+    name: &str,
+    trace: u64,
+    span: Option<u64>,
+    parent: Option<u64>,
+    t_us: u64,
+    dur_us: Option<u64>,
+    fields: &[(&'static str, f64)],
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(128);
+    let _ = write!(
+        s,
+        "{{\"kind\":\"{kind}\",\"name\":\"{name}\",\"trace\":\"{}\"",
+        format_id(trace)
+    );
+    if let Some(id) = span {
+        let _ = write!(s, ",\"span\":{id}");
+    }
+    if let Some(p) = parent {
+        let _ = write!(s, ",\"parent\":{p}");
+    }
+    let _ = write!(s, ",\"t_us\":{t_us}");
+    if let Some(d) = dur_us {
+        let _ = write!(s, ",\"dur_us\":{d}");
+    }
+    if !fields.is_empty() {
+        s.push_str(",\"fields\":{");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            if v.is_finite() {
+                let _ = write!(s, "\"{k}\":{v}");
+            } else {
+                let _ = write!(s, "\"{k}\":null");
+            }
+        }
+        s.push('}');
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NB: no test here calls init_file — the sink is once-per-process and
+    // unit tests share a process.  File-backed emission is covered by
+    // tests/telemetry_e2e.rs (its own binary) and the CI trace smoke.
+
+    #[test]
+    fn ids_roundtrip_and_reject_junk() {
+        let id = gen_id();
+        assert_ne!(id, 0);
+        assert_ne!(id, gen_id());
+        let wire = format_id(id);
+        assert_eq!(wire.len(), 16);
+        assert_eq!(parse_id(&wire), Some(id));
+        assert_eq!(parse_id("00000000000000ff"), Some(255));
+        assert_eq!(parse_id("0"), None, "zero is the null trace");
+        assert_eq!(parse_id(""), None);
+        assert_eq!(parse_id("xyz"), None);
+        assert_eq!(parse_id("11112222333344445"), None, "17 chars overflows");
+        assert_eq!(parse_id(" ab "), Some(0xab), "surrounding whitespace ok");
+    }
+
+    #[test]
+    fn disabled_spans_are_inert_but_carry_the_trace_id() {
+        assert!(!enabled());
+        let mut root = Span::root("test.root", 0xDEAD);
+        root.record("x", 1.0);
+        let ctx = root.ctx();
+        assert_eq!(ctx.trace, 0xDEAD);
+        assert_eq!(ctx.span, 0, "disabled spans allocate no span id");
+        let child = Span::child("test.child", ctx);
+        assert_eq!(child.ctx().trace, 0xDEAD);
+        drop(child);
+        drop(root); // must not emit or panic
+        emit_span("test.retro", ctx, Instant::now(), Instant::now(), &[("n", 2.0)]);
+        point("test.point", &[("loss", 0.5)]);
+        let entered = Span::enter("test.enter");
+        assert_eq!(entered.ctx().span, 0);
+    }
+
+    #[test]
+    fn event_json_schema() {
+        let line = event_json(
+            "span",
+            "serve.kernel",
+            0xABC,
+            Some(7),
+            Some(3),
+            1234,
+            Some(56),
+            &[("docs", 4.0), ("loss", 0.25), ("bad", f64::NAN)],
+        );
+        assert_eq!(
+            line,
+            "{\"kind\":\"span\",\"name\":\"serve.kernel\",\
+             \"trace\":\"0000000000000abc\",\"span\":7,\"parent\":3,\
+             \"t_us\":1234,\"dur_us\":56,\
+             \"fields\":{\"docs\":4,\"loss\":0.25,\"bad\":null}}\n"
+        );
+        let pt = event_json("point", "train.epoch", 0, None, None, 9, None, &[]);
+        assert_eq!(
+            pt,
+            "{\"kind\":\"point\",\"name\":\"train.epoch\",\
+             \"trace\":\"0000000000000000\",\"t_us\":9}\n"
+        );
+    }
+}

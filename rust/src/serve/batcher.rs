@@ -23,6 +23,8 @@ use std::sync::mpsc::SyncSender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::metrics::trace::{self, TraceCtx};
+
 /// What the scorer sends back for one document.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ScoreOutcome {
@@ -68,6 +70,11 @@ pub struct ScoreJob {
     /// and exactly one send per job, so the worker never blocks here even
     /// if the handler has timed out and gone away (the send just fails).
     pub resp: SyncSender<ScoreOutcome>,
+    /// Trace context of the request's root span (`serve.score` /
+    /// `serve.similar`).  Workers parent their `serve.admission_wait` and
+    /// `serve.kernel` spans on this, so one request stays one trace even
+    /// though it crosses the handler/worker thread boundary.
+    pub trace: TraceCtx,
 }
 
 struct QueueState {
@@ -125,6 +132,9 @@ impl Batcher {
             }
             st = self.notify.wait(st).unwrap();
         }
+        // batch assembly starts the moment the first job is in hand; the
+        // span is a child of that job's request trace
+        let assembly_start = if trace::enabled() { Some(Instant::now()) } else { None };
         // phase 2: fill up to `max` within the batching window
         let window_ends = Instant::now() + wait;
         while out.len() < max {
@@ -151,6 +161,16 @@ impl Batcher {
                 }
                 break;
             }
+        }
+        drop(st);
+        if let Some(start) = assembly_start {
+            trace::emit_span(
+                "serve.batch_assembly",
+                out[0].trace,
+                start,
+                Instant::now(),
+                &[("batch", out.len() as f64)],
+            );
         }
         true
     }
@@ -183,6 +203,7 @@ mod tests {
                 enqueued: now,
                 deadline: now + Duration::from_secs(5),
                 resp: tx,
+                trace: TraceCtx::default(),
             },
             rx,
         )

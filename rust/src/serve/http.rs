@@ -19,6 +19,10 @@ use crate::{Error, Result};
 /// framing bug, and rejecting it keeps a malformed client from ballooning
 /// server memory.
 pub const MAX_BODY_BYTES: u64 = 16 * 1024 * 1024;
+/// Request-correlation header: generated at the fleet edge, forwarded on
+/// every router→backend hop, echoed in every response.  The id format and
+/// span machinery live in [`crate::metrics::trace`].
+pub const TRACE_HEADER: &str = "X-Trace-Id";
 /// Upper bound on the head (request/status line + headers).
 const MAX_HEAD_BYTES: usize = 64 * 1024;
 
@@ -37,6 +41,11 @@ pub struct Request {
 impl Request {
     pub fn header(&self, name: &str) -> Option<&str> {
         header(&self.headers, name)
+    }
+
+    /// The wire value of [`TRACE_HEADER`], if the client sent one.
+    pub fn trace_id(&self) -> Option<&str> {
+        self.header(TRACE_HEADER)
     }
 
     /// Whether the client asked (or defaulted) to keep the connection open.
@@ -60,6 +69,11 @@ pub struct Response {
 impl Response {
     pub fn header(&self, name: &str) -> Option<&str> {
         header(&self.headers, name)
+    }
+
+    /// The echoed [`TRACE_HEADER`] value, if the server sent one back.
+    pub fn trace_id(&self) -> Option<&str> {
+        self.header(TRACE_HEADER)
     }
 
     pub fn body_text(&self) -> String {
@@ -242,6 +256,20 @@ mod tests {
         assert_eq!(resp.status, 503);
         assert_eq!(resp.header("retry-after").unwrap(), "1");
         assert_eq!(resp.body, b"shed\n");
+    }
+
+    #[test]
+    fn trace_header_surfaces_on_both_sides() {
+        let mut wire = Vec::new();
+        write_post_with(&mut wire, "/score", &[(TRACE_HEADER, "00c0ffee".into())], b"x\n")
+            .unwrap();
+        let req = read_request(&mut BufReader::new(&wire[..])).unwrap().unwrap();
+        assert_eq!(req.trace_id(), Some("00c0ffee"));
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "OK", &[(TRACE_HEADER, "00c0ffee".into())], b"ok\n")
+            .unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(resp.trace_id(), Some("00c0ffee"));
     }
 
     #[test]

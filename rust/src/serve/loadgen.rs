@@ -21,6 +21,7 @@ use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
+use crate::metrics::trace;
 use crate::serve::http;
 use crate::{Error, Result};
 
@@ -65,6 +66,10 @@ pub struct LoadgenReport {
     pub p95_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    /// Responses whose echoed `X-Trace-Id` did not match the one the
+    /// request carried — the loadgen doubles as a standing propagation
+    /// check, so this should always read 0.
+    pub trace_echo_failures: u64,
 }
 
 impl LoadgenReport {
@@ -73,7 +78,7 @@ impl LoadgenReport {
         format!(
             "sent {} in {:.2}s ({:.0} qps achieved, {:+.1}% vs requested): ok {} shed {} \
              ({:.1}% shed) expired {} errors {}; \
-             latency p50 {}µs p95 {}µs p99 {}µs max {}µs",
+             latency p50 {}µs p95 {}µs p99 {}µs max {}µs; trace-echo failures {}",
             self.sent,
             self.wall_seconds,
             self.achieved_qps,
@@ -87,6 +92,7 @@ impl LoadgenReport {
             self.p95_us,
             self.p99_us,
             self.max_us,
+            self.trace_echo_failures,
         )
     }
 
@@ -97,7 +103,8 @@ impl LoadgenReport {
             "{{\"sent\":{},\"ok\":{},\"shed\":{},\"expired\":{},\"errors\":{},\
              \"wall_seconds\":{:.4},\"achieved_qps\":{:.1},\"requested_qps\":{:.1},\
              \"qps_drift\":{:.4},\"shed_rate\":{:.4},\
-             \"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{}}}",
+             \"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{},\
+             \"trace_echo_failures\":{}}}",
             self.sent,
             self.ok,
             self.shed,
@@ -112,6 +119,7 @@ impl LoadgenReport {
             self.p95_us,
             self.p99_us,
             self.max_us,
+            self.trace_echo_failures,
         )
     }
 }
@@ -122,6 +130,7 @@ struct ThreadTally {
     shed: u64,
     expired: u64,
     errors: u64,
+    trace_echo_failures: u64,
     latencies_us: Vec<u64>,
 }
 
@@ -163,6 +172,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         report.shed += t.shed;
         report.expired += t.expired;
         report.errors += t.errors;
+        report.trace_echo_failures += t.trace_echo_failures;
         lat.extend(t.latencies_us);
     }
     lat.sort_unstable();
@@ -190,6 +200,7 @@ fn drive_one(
         shed: 0,
         expired: 0,
         errors: 0,
+        trace_echo_failures: 0,
         latencies_us: Vec::new(),
     };
     let connect = || -> Option<(TcpStream, BufReader<TcpStream>)> {
@@ -221,19 +232,29 @@ fn drive_one(
         body.extend_from_slice(doc.as_bytes());
         body.push(b'\n');
         tally.sent += 1;
+        // every request carries a fresh trace id; the serving tier must
+        // echo it back verbatim (propagation is load-bearing for the
+        // fleet's observability, so the loadgen checks it on every hit)
+        let tid = trace::format_id(trace::gen_id());
+        let hdrs = [(http::TRACE_HEADER, tid.clone())];
         let t0 = Instant::now();
-        let resp = http::write_post(&mut stream, &cfg.path, &body)
+        let resp = http::write_post_with(&mut stream, &cfg.path, &hdrs, &body)
             .and_then(|()| http::read_response(&mut reader));
         match resp {
-            Ok(r) => match r.status {
-                200 => {
-                    tally.ok += 1;
-                    tally.latencies_us.push(t0.elapsed().as_micros() as u64);
+            Ok(r) => {
+                if r.trace_id() != Some(tid.as_str()) {
+                    tally.trace_echo_failures += 1;
                 }
-                503 => tally.shed += 1,
-                504 => tally.expired += 1,
-                _ => tally.errors += 1,
-            },
+                match r.status {
+                    200 => {
+                        tally.ok += 1;
+                        tally.latencies_us.push(t0.elapsed().as_micros() as u64);
+                    }
+                    503 => tally.shed += 1,
+                    504 => tally.expired += 1,
+                    _ => tally.errors += 1,
+                }
+            }
             Err(_) => {
                 tally.errors += 1;
                 // the server (or a timeout) dropped us — reconnect and
@@ -317,6 +338,8 @@ mod tests {
         assert!(j.contains("\"requested_qps\":10.0"));
         assert!(j.contains("\"qps_drift\":-0.3300"));
         assert!(j.contains("\"shed_rate\":0.1000"));
+        assert!(j.contains("\"trace_echo_failures\":0"));
+        assert!(r.summary().contains("trace-echo failures 0"));
         assert!(r.summary().contains("p99 400µs"));
         assert!(r.summary().contains("-33.0% vs requested"));
         assert!(r.summary().contains("(10.0% shed)"));

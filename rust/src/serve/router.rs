@@ -35,7 +35,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::metrics::Counter;
+use crate::metrics::prom::Exposition;
+use crate::metrics::trace;
+use crate::metrics::{Counter, Gauge};
 use crate::serve::http;
 use crate::similarity::index::rank_neighbors;
 use crate::similarity::Neighbor;
@@ -101,6 +103,9 @@ pub struct RouterConfig {
     pub max_backoff: Duration,
     /// Idle keep-alive client connections close after this long.
     pub idle_timeout: Duration,
+    /// Log any request slower than this (milliseconds, with its trace id)
+    /// to stderr; `None` disables the slow-request log.
+    pub slow_ms: Option<u64>,
 }
 
 impl Default for RouterConfig {
@@ -115,6 +120,7 @@ impl Default for RouterConfig {
             fail_threshold: 2,
             max_backoff: Duration::from_secs(2),
             idle_timeout: Duration::from_secs(10),
+            slow_ms: None,
         }
     }
 }
@@ -134,22 +140,55 @@ pub struct RouterMetrics {
     pub forward_failures: Counter,
     /// Up→down and down→up health transitions.
     pub health_transitions: Counter,
+    /// Backends currently passing health probes.
+    pub backends_up: Gauge,
+    /// Backends in the configured fleet (fixed for the router's life).
+    pub backends_configured: Gauge,
 }
 
 impl RouterMetrics {
+    /// Prometheus text exposition (also the shutdown report).
     pub fn render(&self, up: usize, total: usize) -> String {
-        let mut s = format!("route_backends_up {up}\nroute_backends_total {total}\n");
-        for (name, c) in [
-            ("route_requests_total", &self.requests),
-            ("route_errors_total", &self.errors),
-            ("route_shard_unavailable_total", &self.shard_unavailable),
-            ("route_partial_results_total", &self.partial_results),
-            ("route_forward_failures_total", &self.forward_failures),
-            ("route_health_transitions_total", &self.health_transitions),
-        ] {
-            s.push_str(&format!("{name} {}\n", c.get()));
-        }
-        s
+        self.backends_up.set(up as u64);
+        self.backends_configured.set(total as u64);
+        let mut exp = Exposition::new();
+        exp.gauge(
+            "route_backends_up",
+            "Backends currently passing health probes.",
+            self.backends_up.get(),
+        )
+        .gauge(
+            "route_backends_configured",
+            "Backends in the configured fleet.",
+            self.backends_configured.get(),
+        )
+        .counter("route_requests_total", "Requests handled (all routes).", self.requests.get())
+        .counter(
+            "route_errors_total",
+            "Requests answered 4xx/5xx for router-side reasons.",
+            self.errors.get(),
+        )
+        .counter(
+            "route_shard_unavailable_total",
+            "Per-shard 503s (owner backend down at lookup time).",
+            self.shard_unavailable.get(),
+        )
+        .counter(
+            "route_partial_results_total",
+            "Scatter-gather responses that were partial.",
+            self.partial_results.get(),
+        )
+        .counter(
+            "route_forward_failures_total",
+            "Backend forwards that failed at the socket level.",
+            self.forward_failures.get(),
+        )
+        .counter(
+            "route_health_transitions_total",
+            "Up-down and down-up health transitions.",
+            self.health_transitions.get(),
+        );
+        exp.finish()
     }
 }
 
@@ -390,14 +429,20 @@ fn handle_conn(ctx: &Arc<RouterCtx>, mut stream: TcpStream) {
             }
         };
         ctx.metrics.requests.inc();
+        // correlation id for the whole fleet hop: taken from the client
+        // when valid, minted at this edge otherwise; forwarded to every
+        // backend leg and echoed on every response
+        let trace_id =
+            req.trace_id().and_then(trace::parse_id).unwrap_or_else(trace::gen_id);
+        let tid = (http::TRACE_HEADER, trace::format_id(trace_id));
         let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::Relaxed);
         let io_ok = match (req.method.as_str(), req.path.as_str()) {
-            ("POST", "/similar") => handle_similar(ctx, &req, &mut stream),
-            ("POST", "/score") => handle_score(ctx, &req, &mut stream),
+            ("POST", "/similar") => handle_similar(ctx, &req, &mut stream, trace_id),
+            ("POST", "/score") => handle_score(ctx, &req, &mut stream, trace_id),
             ("GET", "/metrics") => {
                 let body =
                     ctx.metrics.render(ctx.healthy_count(), ctx.cfg.backends.len());
-                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+                http::write_response(&mut stream, 200, "OK", &[tid], body.as_bytes()).is_ok()
             }
             ("GET", "/healthz") => {
                 let health = ctx.health.lock().unwrap();
@@ -420,9 +465,9 @@ fn handle_conn(ctx: &Arc<RouterCtx>, mut stream: TcpStream) {
                     ));
                 }
                 drop(health);
-                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+                http::write_response(&mut stream, 200, "OK", &[tid], body.as_bytes()).is_ok()
             }
-            _ => http::write_response(&mut stream, 404, "Not Found", &[], b"not found\n")
+            _ => http::write_response(&mut stream, 404, "Not Found", &[tid], b"not found\n")
                 .is_ok(),
         };
         if !io_ok || !keep {
@@ -462,8 +507,32 @@ fn forward_post(
     }
 }
 
+/// `--slow-ms` for the router tier (same stderr format as the server's,
+/// so one grep collects both tiers by trace id).
+fn slow_log(slow_ms: Option<u64>, path: &str, trace_id: u64, status: u16, t0: Instant) {
+    let Some(ms) = slow_ms else { return };
+    let elapsed = t0.elapsed();
+    if elapsed.as_millis() as u64 >= ms {
+        eprintln!(
+            "slow-request path={path} status={status} dur_ms={} trace={}",
+            elapsed.as_millis(),
+            trace::format_id(trace_id)
+        );
+    }
+}
+
 /// `/score` just needs *a* healthy backend: round-robin over the fleet.
-fn handle_score(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStream) -> bool {
+fn handle_score(
+    ctx: &Arc<RouterCtx>,
+    req: &http::Request,
+    stream: &mut TcpStream,
+    trace_id: u64,
+) -> bool {
+    let t0 = Instant::now();
+    let mut root = trace::Span::root("route.score", trace_id);
+    let rctx = root.ctx();
+    let tid = || (http::TRACE_HEADER, trace::format_id(trace_id));
+    let fwd_hdrs = [tid()];
     let n = ctx.cfg.backends.len();
     let start = ctx.rr.fetch_add(1, Ordering::Relaxed);
     for probe in 0..n {
@@ -471,30 +540,47 @@ fn handle_score(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStrea
         if !ctx.is_healthy(backend) {
             continue;
         }
-        if let Some(resp) = forward_post(ctx, backend, "/score", &[], &req.body) {
-            let headers = relay_headers(&resp);
+        let mut leg = trace::Span::child("route.forward", rctx);
+        leg.record("backend", backend as f64);
+        let forwarded = forward_post(ctx, backend, "/score", &fwd_hdrs, &req.body);
+        if let Some(resp) = forwarded {
+            leg.record("status", resp.status as f64);
+            drop(leg);
+            let mut headers = relay_headers(&resp);
+            headers.push(tid());
             let reason = reason_for(resp.status);
+            root.record("status", resp.status as f64);
+            slow_log(ctx.cfg.slow_ms, "/score", trace_id, resp.status, t0);
             return http::write_response(stream, resp.status, reason, &headers, &resp.body)
                 .is_ok();
         }
     }
     ctx.metrics.errors.inc();
+    root.record("status", 503.0);
+    slow_log(ctx.cfg.slow_ms, "/score", trace_id, 503, t0);
     http::write_response(
         stream,
         503,
         "Service Unavailable",
-        &[("Retry-After", "1".to_string())],
+        &[("Retry-After", "1".to_string()), tid()],
         b"no healthy backend\n",
     )
     .is_ok()
 }
 
 /// Headers safe to relay from a backend response (`write_response` frames
-/// the body itself, so length/type/connection must not be duplicated).
+/// the body itself, so length/type/connection must not be duplicated; the
+/// backend's trace echo is dropped because this router appends its own —
+/// same id, one copy).
 fn relay_headers(resp: &http::Response) -> Vec<(&str, String)> {
     resp.headers
         .iter()
-        .filter(|(k, _)| !matches!(k.as_str(), "content-length" | "content-type" | "connection"))
+        .filter(|(k, _)| {
+            !matches!(
+                k.as_str(),
+                "content-length" | "content-type" | "connection" | "x-trace-id"
+            )
+        })
         .map(|(k, v)| (k.as_str(), v.clone()))
         .collect()
 }
@@ -512,13 +598,25 @@ fn reason_for(status: u16) -> &'static str {
 
 /// `/similar`: doc lookups route to the owner shard's backend; raw queries
 /// scatter to every assigned backend and merge.
-fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStream) -> bool {
+fn handle_similar(
+    ctx: &Arc<RouterCtx>,
+    req: &http::Request,
+    stream: &mut TcpStream,
+    trace_id: u64,
+) -> bool {
+    let t0 = Instant::now();
+    let mut root = trace::Span::root("route.similar", trace_id);
+    let rctx = root.ctx();
+    let tid = || (http::TRACE_HEADER, trace::format_id(trace_id));
     let text = String::from_utf8_lossy(&req.body);
     let line = text.lines().map(str::trim).find(|l| !l.is_empty() && !l.starts_with('#'));
-    let top_k_hdr: Vec<(&str, String)> = match req.header("x-top-k") {
+    // headers every backend leg carries: the client's X-Top-K (when set)
+    // plus this request's trace id, so backend spans join the same trace
+    let mut fwd_hdrs: Vec<(&str, String)> = match req.header("x-top-k") {
         Some(v) => vec![("X-Top-K", v.to_string())],
         None => Vec::new(),
     };
+    fwd_hdrs.push(tid());
     let top_k = req
         .header("x-top-k")
         .and_then(|v| v.trim().parse::<usize>().ok())
@@ -526,7 +624,7 @@ fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStr
         .unwrap_or(10);
     let Some(line) = line else {
         ctx.metrics.errors.inc();
-        return http::write_response(stream, 400, "Bad Request", &[], b"empty query body\n")
+        return http::write_response(stream, 400, "Bad Request", &[tid()], b"empty query body\n")
             .is_ok();
     };
 
@@ -535,17 +633,24 @@ fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStr
         let Ok(id) = id.trim().parse::<u64>() else {
             ctx.metrics.errors.inc();
             let body = format!("bad doc id {:?}\n", id.trim());
-            return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes())
+            return http::write_response(stream, 400, "Bad Request", &[tid()], body.as_bytes())
                 .is_ok();
         };
         let shard = (id % ctx.cfg.shards as u64) as usize;
         let backend = ctx.assignment[shard];
         if ctx.is_healthy(backend) {
-            if let Some(resp) =
-                forward_post(ctx, backend, "/similar", &top_k_hdr, req.body.as_slice())
-            {
-                let headers = relay_headers(&resp);
+            let mut leg = trace::Span::child("route.forward", rctx);
+            leg.record("backend", backend as f64);
+            leg.record("shard", shard as f64);
+            let forwarded = forward_post(ctx, backend, "/similar", &fwd_hdrs, &req.body);
+            if let Some(resp) = forwarded {
+                leg.record("status", resp.status as f64);
+                drop(leg);
+                let mut headers = relay_headers(&resp);
+                headers.push(tid());
                 let reason = reason_for(resp.status);
+                root.record("status", resp.status as f64);
+                slow_log(ctx.cfg.slow_ms, "/similar", trace_id, resp.status, t0);
                 return http::write_response(
                     stream,
                     resp.status,
@@ -560,12 +665,14 @@ fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStr
         // and only that shard — is unavailable
         ctx.metrics.shard_unavailable.inc();
         ctx.metrics.errors.inc();
+        root.record("status", 503.0);
+        slow_log(ctx.cfg.slow_ms, "/similar", trace_id, 503, t0);
         let body = format!("shard {shard} unavailable\n");
         return http::write_response(
             stream,
             503,
             "Service Unavailable",
-            &[("Retry-After", "1".to_string())],
+            &[("Retry-After", "1".to_string()), tid()],
             body.as_bytes(),
         )
         .is_ok();
@@ -584,13 +691,22 @@ fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStr
         let handles: Vec<_> = targets
             .iter()
             .map(|&backend| {
-                let hdr = &top_k_hdr;
+                let hdr = &fwd_hdrs;
                 let body = req.body.as_slice();
                 scope.spawn(move || {
+                    // one child span per fan-out leg, parented on the
+                    // request root across the thread boundary
+                    let mut leg = trace::Span::child("route.scatter_leg", rctx);
+                    leg.record("backend", backend as f64);
                     if !ctx.is_healthy(backend) {
+                        leg.record("skipped", 1.0);
                         return (backend, None);
                     }
-                    (backend, forward_post(ctx, backend, "/similar", hdr, body))
+                    let resp = forward_post(ctx, backend, "/similar", hdr, body);
+                    if let Some(r) = &resp {
+                        leg.record("status", r.status as f64);
+                    }
+                    (backend, resp)
                 })
             })
             .collect();
@@ -633,11 +749,13 @@ fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStr
     }
     if missing.len() == ctx.cfg.shards {
         ctx.metrics.errors.inc();
+        root.record("status", 503.0);
+        slow_log(ctx.cfg.slow_ms, "/similar", trace_id, 503, t0);
         return http::write_response(
             stream,
             503,
             "Service Unavailable",
-            &[("Retry-After", "1".to_string())],
+            &[("Retry-After", "1".to_string()), tid()],
             b"no healthy shard\n",
         )
         .is_ok();
@@ -660,6 +778,12 @@ fn handle_similar(ctx: &Arc<RouterCtx>, req: &http::Request, stream: &mut TcpStr
         headers.push(("X-Partial-Results", "true".to_string()));
         headers.push(("X-Shards-Missing", list.join(",")));
     }
+    headers.push(tid());
+    root.record("status", 200.0);
+    root.record("candidates", candidates as f64);
+    root.record("reranked", reranked as f64);
+    root.record("shards_missing", missing.len() as f64);
+    slow_log(ctx.cfg.slow_ms, "/similar", trace_id, 200, t0);
     http::write_response(stream, 200, "OK", &headers, lines.as_bytes()).is_ok()
 }
 
@@ -704,6 +828,18 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn metrics_render_is_valid_prometheus() {
+        let m = RouterMetrics::default();
+        m.requests.add(5);
+        let text = m.render(1, 2);
+        crate::metrics::prom::validate(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert!(text.contains("route_backends_up 1"), "{text}");
+        assert!(text.contains("route_backends_configured 2"), "{text}");
+        assert!(text.contains("route_requests_total 5"), "{text}");
+        assert!(text.contains("route_health_transitions_total 0"), "{text}");
     }
 
     #[test]

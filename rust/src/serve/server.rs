@@ -48,7 +48,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::metrics::{Counter, Histogram};
+use crate::metrics::prom::Exposition;
+use crate::metrics::trace;
+use crate::metrics::{Counter, Gauge, Histogram};
 use crate::serve::batcher::{Batcher, JobTask, ScoreJob, ScoreOutcome};
 use crate::serve::http;
 use crate::serve::registry::ModelRegistry;
@@ -79,6 +81,9 @@ pub struct ServeConfig {
     pub reload_poll: Duration,
     /// Idle keep-alive connections are closed after this long.
     pub idle_timeout: Duration,
+    /// Log any request slower than this (milliseconds, with its trace id)
+    /// to stderr; `None` disables the slow-request log.
+    pub slow_ms: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +98,7 @@ impl Default for ServeConfig {
             deadline: Duration::from_millis(50),
             reload_poll: Duration::from_millis(200),
             idle_timeout: Duration::from_secs(10),
+            slow_ms: None,
         }
     }
 }
@@ -135,44 +141,119 @@ pub struct ServeMetrics {
     /// bucket-skew signal (a huge max against a small mean means one hot
     /// key dominates that band).
     pub similar_bucket_max: Histogram,
+    /// Current model reload generation (mirrors the registry epoch).
+    pub model_epoch: Gauge,
+    /// Jobs sitting in the admission queue at the last scrape.
+    pub queue_depth: Gauge,
+    /// Similarity shards resident in this replica (0 without an index).
+    pub similar_shards: Gauge,
 }
 
 impl ServeMetrics {
-    /// Text exposition (also the shutdown report).
+    /// Prometheus text exposition (also the shutdown report).  The
+    /// liveness gauges are refreshed from the caller's current values so
+    /// every scrape reflects the moment it was taken.
     pub fn render(&self, epoch: u64, queue_depth: usize) -> String {
-        let mut s = String::new();
-        s.push_str(&format!("serve_model_epoch {epoch}\n"));
-        s.push_str(&format!("serve_queue_depth {queue_depth}\n"));
-        for (name, c) in [
-            ("serve_docs_received_total", &self.docs_received),
-            ("serve_docs_scored_total", &self.docs_scored),
-            ("serve_docs_shed_total", &self.docs_shed),
-            ("serve_docs_expired_total", &self.docs_expired),
-            ("serve_http_requests_total", &self.http_requests),
-            ("serve_http_errors_total", &self.http_errors),
-            ("serve_model_reloads_total", &self.reloads),
-            ("serve_model_reload_errors_total", &self.reload_errors),
-            ("serve_similar_received_total", &self.similar_received),
-            ("serve_similar_served_total", &self.similar_served),
-        ] {
-            s.push_str(&format!("{name} {}\n", c.get()));
-        }
-        for (name, h) in [
-            ("serve_batch_size", &self.batch_size),
-            ("serve_queue_wait_us", &self.queue_wait_us),
-            ("serve_request_latency_us", &self.latency_us),
-            ("serve_similar_candidates", &self.similar_candidates),
-            ("serve_similar_rerank_depth", &self.similar_rerank_depth),
-            ("serve_similar_bucket_max", &self.similar_bucket_max),
-        ] {
-            s.push_str(&format!(
-                "{name}_count {}\n{name}_p50 {}\n{name}_p99 {}\n",
-                h.count(),
-                h.quantile(0.5),
-                h.quantile(0.99),
-            ));
-        }
-        s
+        self.model_epoch.set(epoch);
+        self.queue_depth.set(queue_depth as u64);
+        let mut exp = Exposition::new();
+        exp.gauge(
+            "serve_model_epoch",
+            "Reload generation of the resident model.",
+            self.model_epoch.get(),
+        )
+        .gauge(
+            "serve_queue_depth",
+            "Jobs sitting in the admission queue right now.",
+            self.queue_depth.get(),
+        )
+        .gauge(
+            "serve_similar_shards",
+            "Similarity shards resident in this replica.",
+            self.similar_shards.get(),
+        )
+        .counter(
+            "serve_docs_received_total",
+            "Documents received on the score path (pre-admission).",
+            self.docs_received.get(),
+        )
+        .counter(
+            "serve_docs_scored_total",
+            "Documents scored by a worker.",
+            self.docs_scored.get(),
+        )
+        .counter(
+            "serve_docs_shed_total",
+            "Documents rejected by admission control (each one a 503).",
+            self.docs_shed.get(),
+        )
+        .counter(
+            "serve_docs_expired_total",
+            "Documents dropped unscored because their deadline passed in queue.",
+            self.docs_expired.get(),
+        )
+        .counter(
+            "serve_http_requests_total",
+            "HTTP requests handled (all routes).",
+            self.http_requests.get(),
+        )
+        .counter(
+            "serve_http_errors_total",
+            "Malformed HTTP requests and unparseable bodies.",
+            self.http_errors.get(),
+        )
+        .counter(
+            "serve_model_reloads_total",
+            "Successful model hot reloads.",
+            self.reloads.get(),
+        )
+        .counter(
+            "serve_model_reload_errors_total",
+            "Reload attempts that failed to load.",
+            self.reload_errors.get(),
+        )
+        .counter(
+            "serve_similar_received_total",
+            "/similar queries received (pre-admission).",
+            self.similar_received.get(),
+        )
+        .counter(
+            "serve_similar_served_total",
+            "/similar queries answered by a worker.",
+            self.similar_served.get(),
+        )
+        .histogram("serve_batch_size", "Documents per scored micro-batch.", &self.batch_size, 1.0)
+        .histogram(
+            "serve_queue_wait_seconds",
+            "Per-document admission-queue wait.",
+            &self.queue_wait_us,
+            1e-6,
+        )
+        .histogram(
+            "serve_request_latency_seconds",
+            "Request wall latency inside the handler.",
+            &self.latency_us,
+            1e-6,
+        )
+        .histogram(
+            "serve_similar_candidates",
+            "Bucket hits per /similar query, pre-dedup.",
+            &self.similar_candidates,
+            1.0,
+        )
+        .histogram(
+            "serve_similar_rerank_depth",
+            "Distinct rows re-ranked per /similar query.",
+            &self.similar_rerank_depth,
+            1.0,
+        )
+        .histogram(
+            "serve_similar_bucket_max",
+            "Largest bucket per band, observed once at index attach.",
+            &self.similar_bucket_max,
+            1.0,
+        );
+        exp.finish()
     }
 }
 
@@ -219,11 +300,13 @@ impl ModelServer {
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
         let addr = listener.local_addr()?;
         let metrics = ServeMetrics::default();
+        metrics.model_epoch.set(registry.epoch());
         if let Some(idx) = &similar {
             // one-shot skew snapshot: per-band max bucket sizes
             for band in idx.band_stats() {
                 metrics.similar_bucket_max.observe(band.max_bucket as u64);
             }
+            metrics.similar_shards.set(idx.shard_ids().len() as u64);
         }
         let ctx = Arc::new(ServerCtx {
             batcher: Batcher::new(cfg.queue_cap),
@@ -319,7 +402,10 @@ fn watcher_loop(ctx: &Arc<ServerCtx>) {
             break;
         }
         match ctx.registry.poll_reload() {
-            Ok(true) => ctx.metrics.reloads.inc(),
+            Ok(true) => {
+                ctx.metrics.reloads.inc();
+                ctx.metrics.model_epoch.set(ctx.registry.epoch());
+            }
             Ok(false) => {}
             // mid-write or corrupt file: keep the old model, retry next poll
             Err(_) => ctx.metrics.reload_errors.inc(),
@@ -345,16 +431,21 @@ fn scorer_loop(ctx: &Arc<ServerCtx>) {
         }
         let (_, sc) = scratch.as_mut().expect("scratch initialized above");
         for job in batch.drain(..) {
+            let picked_up = Instant::now();
             ctx.metrics
                 .queue_wait_us
-                .observe(job.enqueued.elapsed().as_micros() as u64);
-            if Instant::now() > job.deadline {
+                .observe(picked_up.saturating_duration_since(job.enqueued).as_micros() as u64);
+            // queue-wait vs service-time, separated per request: the wait
+            // span covers enqueue → pickup, the kernel span the scoring
+            trace::emit_span("serve.admission_wait", job.trace, job.enqueued, picked_up, &[]);
+            if picked_up > job.deadline {
                 ctx.metrics.docs_expired.inc();
                 let _ = job.resp.send(ScoreOutcome::Expired);
                 continue;
             }
             match job.task {
                 JobTask::Score => {
+                    let _kernel = trace::Span::child("serve.kernel", job.trace);
                     let margin = em.model.margin(&job.indices, sc);
                     ctx.metrics.docs_scored.inc();
                     // a handler that timed out and left is fine — send
@@ -363,6 +454,7 @@ fn scorer_loop(ctx: &Arc<ServerCtx>) {
                         job.resp.send(ScoreOutcome::Margin { margin, epoch: em.epoch });
                 }
                 JobTask::SimilarRaw { top_k } | JobTask::SimilarDoc { top_k, .. } => {
+                    let mut kernel = trace::Span::child("serve.kernel", job.trace);
                     // /similar is only routable with an index attached
                     let idx = ctx.similar.as_ref().expect("similar job without index");
                     let answered = match job.task {
@@ -385,6 +477,8 @@ fn scorer_loop(ctx: &Arc<ServerCtx>) {
                             ctx.metrics
                                 .similar_rerank_depth
                                 .observe(stats.reranked as u64);
+                            kernel.record("candidates", stats.candidates as f64);
+                            kernel.record("reranked", stats.reranked as f64);
                             ScoreOutcome::Neighbors {
                                 hits,
                                 candidates: stats.candidates as u64,
@@ -438,15 +532,21 @@ fn handle_conn(ctx: &Arc<ServerCtx>, mut stream: TcpStream) {
             }
         };
         ctx.metrics.http_requests.inc();
+        // the request's correlation id: taken from the client's
+        // X-Trace-Id when it sent a valid one, minted here otherwise —
+        // either way it is echoed on every response this server writes
+        let trace_id =
+            req.trace_id().and_then(trace::parse_id).unwrap_or_else(trace::gen_id);
+        let tid = (http::TRACE_HEADER, trace::format_id(trace_id));
         let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::Relaxed);
         let io_ok = match (req.method.as_str(), req.path.as_str()) {
-            ("POST", "/score") => handle_score(ctx, &req.body, &mut stream),
-            ("POST", "/similar") => handle_similar(ctx, &req, &mut stream),
+            ("POST", "/score") => handle_score(ctx, &req.body, &mut stream, trace_id),
+            ("POST", "/similar") => handle_similar(ctx, &req, &mut stream, trace_id),
             ("GET", "/metrics") => {
                 let body = ctx
                     .metrics
                     .render(ctx.registry.epoch(), ctx.batcher.depth());
-                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+                http::write_response(&mut stream, 200, "OK", &[tid], body.as_bytes()).is_ok()
             }
             ("GET", "/healthz") => {
                 let em = ctx.registry.current();
@@ -468,9 +568,9 @@ fn handle_conn(ctx: &Arc<ServerCtx>, mut stream: TcpStream) {
                     ));
                 }
                 body.push('\n');
-                http::write_response(&mut stream, 200, "OK", &[], body.as_bytes()).is_ok()
+                http::write_response(&mut stream, 200, "OK", &[tid], body.as_bytes()).is_ok()
             }
-            _ => http::write_response(&mut stream, 404, "Not Found", &[], b"not found\n")
+            _ => http::write_response(&mut stream, 404, "Not Found", &[tid], b"not found\n")
                 .is_ok(),
         };
         if !io_ok || !keep {
@@ -508,13 +608,31 @@ fn parse_doc_line(line: &str) -> std::result::Result<Option<Vec<u32>>, String> {
     Ok(Some(indices))
 }
 
+/// `--slow-ms`: one stderr line per request slower than the threshold,
+/// keyed by trace id so the JSONL span log (when enabled) carries the
+/// breakdown the summary line cannot.
+fn slow_log(slow_ms: Option<u64>, path: &str, trace_id: u64, status: u16, t0: Instant) {
+    let Some(ms) = slow_ms else { return };
+    let elapsed = t0.elapsed();
+    if elapsed.as_millis() as u64 >= ms {
+        eprintln!(
+            "slow-request path={path} status={status} dur_ms={} trace={}",
+            elapsed.as_millis(),
+            trace::format_id(trace_id)
+        );
+    }
+}
+
 /// The score route: admit every body line, drain the margins, answer.
 /// Returns whether the response was written (socket still healthy).
-fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream) -> bool {
+fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream, trace_id: u64) -> bool {
     let t0 = Instant::now();
+    let mut root = trace::Span::root("serve.score", trace_id);
+    let rctx = root.ctx();
+    let tid = (http::TRACE_HEADER, trace::format_id(trace_id));
     let Ok(text) = std::str::from_utf8(body) else {
         ctx.metrics.http_errors.inc();
-        return http::write_response(stream, 400, "Bad Request", &[], b"body is not utf-8\n")
+        return http::write_response(stream, 400, "Bad Request", &[tid], b"body is not utf-8\n")
             .is_ok();
     };
     let deadline = Instant::now() + ctx.cfg.deadline;
@@ -533,6 +651,7 @@ fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream) -> bo
                     enqueued: Instant::now(),
                     deadline,
                     resp: tx,
+                    trace: rctx,
                 };
                 match ctx.batcher.try_enqueue(job) {
                     Ok(()) => pending.push(rx),
@@ -555,6 +674,7 @@ fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream) -> bo
     let mut lines = String::new();
     let mut max_epoch = 0u64;
     let mut expired = false;
+    let admitted = pending.len();
     for rx in pending {
         let budget = deadline.saturating_duration_since(Instant::now()) + grace;
         match rx.recv_timeout(budget) {
@@ -571,53 +691,55 @@ fn handle_score(ctx: &Arc<ServerCtx>, body: &[u8], stream: &mut TcpStream) -> bo
         }
     }
     ctx.metrics.latency_us.observe(t0.elapsed().as_micros() as u64);
-    if let Some(msg) = bad {
-        ctx.metrics.http_errors.inc();
-        let body = format!("bad document: {msg}\n");
-        return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes()).is_ok();
-    }
-    if shed {
-        return http::write_response(
-            stream,
-            503,
-            "Service Unavailable",
-            &[("Retry-After", "1".to_string())],
-            b"shed: admission queue full\n",
-        )
-        .is_ok();
-    }
-    if expired {
-        return http::write_response(stream, 504, "Gateway Timeout", &[], b"deadline expired\n")
-            .is_ok();
-    }
-    http::write_response(
-        stream,
-        200,
-        "OK",
-        &[("X-Model-Epoch", max_epoch.to_string())],
-        lines.as_bytes(),
-    )
-    .is_ok()
+    let (status, reason, mut headers, body): (u16, &str, Vec<(&str, String)>, Vec<u8>) =
+        if let Some(msg) = bad {
+            ctx.metrics.http_errors.inc();
+            (400, "Bad Request", Vec::new(), format!("bad document: {msg}\n").into_bytes())
+        } else if shed {
+            (
+                503,
+                "Service Unavailable",
+                vec![("Retry-After", "1".to_string())],
+                b"shed: admission queue full\n".to_vec(),
+            )
+        } else if expired {
+            (504, "Gateway Timeout", Vec::new(), b"deadline expired\n".to_vec())
+        } else {
+            (200, "OK", vec![("X-Model-Epoch", max_epoch.to_string())], lines.into_bytes())
+        };
+    headers.push(tid);
+    root.record("docs", admitted as f64);
+    root.record("status", status as f64);
+    slow_log(ctx.cfg.slow_ms, "/score", trace_id, status, t0);
+    http::write_response(stream, status, reason, &headers, &body).is_ok()
 }
 
 /// The `/similar` route: one query per request (first non-blank body
 /// line), admitted through the same batcher as `/score` so overload and
 /// deadline semantics are identical across endpoints.
-fn handle_similar(ctx: &Arc<ServerCtx>, req: &http::Request, stream: &mut TcpStream) -> bool {
+fn handle_similar(
+    ctx: &Arc<ServerCtx>,
+    req: &http::Request,
+    stream: &mut TcpStream,
+    trace_id: u64,
+) -> bool {
     let t0 = Instant::now();
+    let mut root = trace::Span::root("serve.similar", trace_id);
+    let rctx = root.ctx();
+    let tid = || (http::TRACE_HEADER, trace::format_id(trace_id));
     if ctx.similar.is_none() {
         return http::write_response(
             stream,
             404,
             "Not Found",
-            &[],
+            &[tid()],
             b"no similarity index loaded (serve --similar-index)\n",
         )
         .is_ok();
     }
     let Ok(text) = std::str::from_utf8(&req.body) else {
         ctx.metrics.http_errors.inc();
-        return http::write_response(stream, 400, "Bad Request", &[], b"body is not utf-8\n")
+        return http::write_response(stream, 400, "Bad Request", &[tid()], b"body is not utf-8\n")
             .is_ok();
     };
     let top_k = match req.header("x-top-k") {
@@ -627,7 +749,7 @@ fn handle_similar(ctx: &Arc<ServerCtx>, req: &http::Request, stream: &mut TcpStr
             Err(_) => {
                 ctx.metrics.http_errors.inc();
                 let body = format!("bad X-Top-K header {v:?}\n");
-                return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes())
+                return http::write_response(stream, 400, "Bad Request", &[tid()], body.as_bytes())
                     .is_ok();
             }
         },
@@ -654,21 +776,22 @@ fn handle_similar(ctx: &Arc<ServerCtx>, req: &http::Request, stream: &mut TcpStr
         Err(msg) => {
             ctx.metrics.http_errors.inc();
             let body = format!("bad query: {msg}\n");
-            return http::write_response(stream, 400, "Bad Request", &[], body.as_bytes())
+            return http::write_response(stream, 400, "Bad Request", &[tid()], body.as_bytes())
                 .is_ok();
         }
     };
     ctx.metrics.similar_received.inc();
     let deadline = Instant::now() + ctx.cfg.deadline;
     let (tx, rx) = sync_channel(1);
-    let job = ScoreJob { task, indices, enqueued: Instant::now(), deadline, resp: tx };
+    let job =
+        ScoreJob { task, indices, enqueued: Instant::now(), deadline, resp: tx, trace: rctx };
     if ctx.batcher.try_enqueue(job).is_err() {
         ctx.metrics.docs_shed.inc();
         return http::write_response(
             stream,
             503,
             "Service Unavailable",
-            &[("Retry-After", "1".to_string())],
+            &[("Retry-After", "1".to_string()), tid()],
             b"shed: admission queue full\n",
         )
         .is_ok();
@@ -677,42 +800,44 @@ fn handle_similar(ctx: &Arc<ServerCtx>, req: &http::Request, stream: &mut TcpStr
     let budget = deadline.saturating_duration_since(Instant::now()) + grace;
     let outcome = rx.recv_timeout(budget);
     ctx.metrics.latency_us.observe(t0.elapsed().as_micros() as u64);
-    match outcome {
-        Ok(ScoreOutcome::Neighbors { hits, candidates, reranked }) => {
-            let mut lines = String::new();
-            for h in &hits {
-                // f64 Display round-trips: clients can compare estimates
-                // bit-for-bit against the offline near_duplicates path
-                lines.push_str(&format!("{} {}\n", h.id, h.estimate));
+    let (status, reason, mut headers, body): (u16, &str, Vec<(&str, String)>, Vec<u8>) =
+        match outcome {
+            Ok(ScoreOutcome::Neighbors { hits, candidates, reranked }) => {
+                let mut lines = String::new();
+                for h in &hits {
+                    // f64 Display round-trips: clients can compare estimates
+                    // bit-for-bit against the offline near_duplicates path
+                    lines.push_str(&format!("{} {}\n", h.id, h.estimate));
+                }
+                root.record("candidates", candidates as f64);
+                root.record("reranked", reranked as f64);
+                (
+                    200,
+                    "OK",
+                    vec![
+                        ("X-Candidates", candidates.to_string()),
+                        ("X-Reranked", reranked.to_string()),
+                    ],
+                    lines.into_bytes(),
+                )
             }
-            http::write_response(
-                stream,
-                200,
-                "OK",
-                &[
-                    ("X-Candidates", candidates.to_string()),
-                    ("X-Reranked", reranked.to_string()),
-                ],
-                lines.as_bytes(),
-            )
-            .is_ok()
-        }
-        Ok(ScoreOutcome::NotFound) => http::write_response(
-            stream,
-            404,
-            "Not Found",
-            &[],
-            b"doc not in this index's resident shards\n",
-        )
-        .is_ok(),
-        // Expired from the worker, or the worker never got to it within
-        // the budget (the worker counts the expiry itself either way)
-        Ok(ScoreOutcome::Expired) | Err(_) => {
-            http::write_response(stream, 504, "Gateway Timeout", &[], b"deadline expired\n")
-                .is_ok()
-        }
-        Ok(ScoreOutcome::Margin { .. }) => unreachable!("similar job answered with a margin"),
-    }
+            Ok(ScoreOutcome::NotFound) => (
+                404,
+                "Not Found",
+                Vec::new(),
+                b"doc not in this index's resident shards\n".to_vec(),
+            ),
+            // Expired from the worker, or the worker never got to it within
+            // the budget (the worker counts the expiry itself either way)
+            Ok(ScoreOutcome::Expired) | Err(_) => {
+                (504, "Gateway Timeout", Vec::new(), b"deadline expired\n".to_vec())
+            }
+            Ok(ScoreOutcome::Margin { .. }) => unreachable!("similar job answered with a margin"),
+        };
+    headers.push(tid());
+    root.record("status", status as f64);
+    slow_log(ctx.cfg.slow_ms, "/similar", trace_id, status, t0);
+    http::write_response(stream, status, reason, &headers, &body).is_ok()
 }
 
 #[cfg(test)]
@@ -733,23 +858,32 @@ mod tests {
     }
 
     #[test]
-    fn metrics_render_contains_every_series() {
+    fn metrics_render_is_valid_prometheus_and_contains_every_series() {
         let m = ServeMetrics::default();
         m.docs_received.add(3);
         m.batch_size.observe(4);
+        m.queue_wait_us.observe(150);
         let text = m.render(2, 1);
+        crate::metrics::prom::validate(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
         for needle in [
+            "# TYPE serve_model_epoch gauge",
             "serve_model_epoch 2",
             "serve_queue_depth 1",
+            "serve_similar_shards 0",
+            "# TYPE serve_docs_received_total counter",
             "serve_docs_received_total 3",
             "serve_docs_shed_total 0",
+            "# TYPE serve_batch_size histogram",
+            "serve_batch_size_bucket{le=\"+Inf\"} 1",
+            "serve_batch_size_sum 4",
             "serve_batch_size_count 1",
-            "serve_request_latency_us_p99",
+            "serve_queue_wait_seconds_sum 0.00015",
+            "serve_request_latency_seconds_count 0",
             "serve_model_reloads_total 0",
             "serve_similar_received_total 0",
             "serve_similar_served_total 0",
             "serve_similar_candidates_count 0",
-            "serve_similar_rerank_depth_p99",
+            "serve_similar_rerank_depth_count 0",
             "serve_similar_bucket_max_count 0",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");

@@ -272,9 +272,20 @@ impl SgdStream {
 
     /// End the current pass: flush the partial tail minibatch (identical
     /// to `train_sgd`'s final `min(batch, n - i0)` batch of an epoch).
+    /// Emits a `train.epoch` trace point (epoch index, rows seen,
+    /// progressive loss) when tracing is on — the training curve as an
+    /// observable event stream, not just the final TrainStats.
     pub fn end_epoch(&mut self) {
         self.apply_buffered_batch();
         self.epochs_done += 1;
+        crate::metrics::trace::point(
+            "train.epoch",
+            &[
+                ("epoch", self.epochs_done as f64),
+                ("rows", self.rows_seen as f64),
+                ("loss", self.progressive_loss()),
+            ],
+        );
     }
 
     fn apply_buffered_batch(&mut self) {

@@ -294,7 +294,7 @@ fn fleet_degrades_per_shard_and_recovers_after_restart() {
 
     // the router's own exposition reflects the journey
     let metrics = Client::connect(addr).get("/metrics").body_text();
-    assert!(metrics.contains("route_backends_total 2"), "{metrics}");
+    assert!(metrics.contains("route_backends_configured 2"), "{metrics}");
     for series in
         ["route_requests_total", "route_shard_unavailable_total", "route_partial_results_total"]
     {

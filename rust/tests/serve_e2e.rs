@@ -310,6 +310,10 @@ fn loadgen_reports_latency_percentiles_and_qps() {
 
     let final_report = server.shutdown();
     assert!(final_report.contains("serve_docs_scored_total"), "{final_report}");
-    assert!(final_report.contains("serve_batch_size_p50"), "{final_report}");
+    // the shutdown report IS the Prometheus exposition now — it must carry
+    // the batch-size histogram and survive the format validator
+    assert!(final_report.contains("serve_batch_size_bucket"), "{final_report}");
+    bbit_mh::metrics::prom::validate(&final_report)
+        .unwrap_or_else(|e| panic!("shutdown report is not valid Prometheus: {e}"));
     std::fs::remove_dir_all(dir).ok();
 }

@@ -1,0 +1,356 @@
+//! Telemetry acceptance tests (ISSUE 8): one JSONL trace file
+//! reconstructs a `/similar` request's full fleet path, and every
+//! `/metrics` body survives the Prometheus format validator.
+//!
+//! This test binary owns the process-wide trace sink (`init_file` is
+//! once per process, which is why the unit tests in `metrics/trace.rs`
+//! never call it).  Router and backends all run in this process, so
+//! their spans land in the *same* JSONL file — exactly the "one grep
+//! reconstructs the request" story, minus the grep.
+//!
+//! Events are buffered per thread and drain when a thread's span stack
+//! empties (after the response is written), so assertions poll with
+//! [`trace::flush`] instead of assuming synchronous arrival.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bbit_mh::coordinator::pipeline::{dataset_chunks, Pipeline, PipelineConfig};
+use bbit_mh::coordinator::sink::CacheSink;
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::SparseDataset;
+use bbit_mh::encode::cache::CacheWriteOptions;
+use bbit_mh::encode::EncoderSpec;
+use bbit_mh::hashing::lsh::LshConfig;
+use bbit_mh::metrics::{prom, trace};
+use bbit_mh::serve::http;
+use bbit_mh::serve::{shard_assignment, ModelServer, Router, RouterConfig, ServeConfig};
+use bbit_mh::similarity::{snapshot, LshIndex};
+use bbit_mh::solver::{LinearModel, SavedModel};
+
+const SHARDS: usize = 4;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bbmh_telem_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn corpus(n: usize, seed: u64) -> SparseDataset {
+    CorpusGenerator::new(CorpusConfig {
+        n_docs: n,
+        vocab: 2000,
+        zipf_alpha: 1.05,
+        mean_tokens: 28.0,
+        class_signal: 0.5,
+        pos_fraction: 0.5,
+        seed,
+    })
+    .generate()
+}
+
+fn reserve_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+/// Two reserved backend addresses whose consistent-hash assignment uses
+/// both backends — the scatter-gather must fan out for the per-leg spans
+/// to mean anything.
+fn two_backends() -> Vec<String> {
+    for _ in 0..32 {
+        let backends: Vec<String> =
+            (0..2).map(|_| format!("127.0.0.1:{}", reserve_port())).collect();
+        let assignment = shard_assignment(&backends, SHARDS);
+        if assignment.contains(&0) && assignment.contains(&1) {
+            return backends;
+        }
+    }
+    panic!("could not reserve a port pair covering both backends");
+}
+
+fn start_backend(model: &Path, port: u16, snaps: &[PathBuf]) -> ModelServer {
+    let idx = Arc::new(snapshot::load_many(snaps).unwrap());
+    let cfg = ServeConfig {
+        port,
+        scorer_workers: 2,
+        deadline: Duration::from_secs(5),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    loop {
+        match ModelServer::start_with_index(model, cfg.clone(), Some(idx.clone())) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(t0.elapsed() < Duration::from_secs(5), "backend never bound: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn post(&mut self, path: &str, headers: &[(&str, String)], body: &str) -> http::Response {
+        http::write_post_with(&mut self.stream, path, headers, body.as_bytes()).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> http::Response {
+        http::write_get(&mut self.stream, path).unwrap();
+        http::read_response(&mut self.reader).unwrap()
+    }
+}
+
+fn wait_healthz(addr: SocketAddr, pred: impl Fn(&str) -> bool, what: &str) {
+    let t0 = Instant::now();
+    loop {
+        let body = Client::connect(addr).get("/healthz").body_text();
+        if pred(&body) {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(15), "{what} never happened:\n{body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+// ---- hand-rolled JSONL event extraction (the schema is flat) ----
+
+#[derive(Debug, Clone)]
+struct Event {
+    name: String,
+    span: u64,
+    parent: u64,
+    dur_us: Option<u64>,
+}
+
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let s = line.find(&pat)? + pat.len();
+    let e = line[s..].find('"')?;
+    Some(line[s..s + e].to_string())
+}
+
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let s = line.find(&pat)? + pat.len();
+    let rest = &line[s..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Events for one trace id — the grep the module docs promise.
+fn events_for(path: &Path, tid: &str) -> Vec<Event> {
+    let needle = format!("\"trace\":\"{tid}\"");
+    std::fs::read_to_string(path)
+        .unwrap_or_default()
+        .lines()
+        .filter(|l| l.contains(&needle))
+        .map(|l| {
+            assert!(l.ends_with('}'), "truncated event line: {l}");
+            Event {
+                name: field_str(l, "name").expect("every event has a name"),
+                span: field_u64(l, "span").unwrap_or(0),
+                parent: field_u64(l, "parent").unwrap_or(0),
+                dur_us: field_u64(l, "dur_us"),
+            }
+        })
+        .collect()
+}
+
+/// Poll (buffers drain asynchronously) until every `needed` span name
+/// has arrived for `tid`.
+fn wait_for_spans(path: &Path, tid: &str, needed: &[&str]) -> Vec<Event> {
+    let t0 = Instant::now();
+    loop {
+        trace::flush();
+        let evs = events_for(path, tid);
+        if needed.iter().all(|n| evs.iter().any(|e| e.name == *n)) {
+            return evs;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "spans never arrived for {tid}: want {needed:?}, have {:?}",
+            evs.iter().map(|e| e.name.clone()).collect::<Vec<_>>()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn one_trace_reconstructs_a_similar_requests_fleet_path() {
+    let dir = tmp_dir("fleet");
+    let trace_path = dir.join("trace.jsonl");
+    trace::init_file(&trace_path).unwrap();
+    assert!(trace::enabled());
+
+    // ---- build the fleet: cache -> sharded index -> 2 backends -> router
+    let ds = corpus(400, 0x7E1E);
+    let spec = EncoderSpec::Bbit { b: 8, k: 32, d: ds.dim, seed: 17 };
+    let cache = dir.join("telem.cache");
+    {
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, chunk_size: 64, queue_depth: 2 });
+        let mut sink =
+            CacheSink::create_opts(&cache, &spec, CacheWriteOptions::default()).unwrap();
+        pipe.run_sink(dataset_chunks(&ds, 64), &spec, &mut sink).unwrap();
+    }
+    let full =
+        LshIndex::build_from_cache(&cache, LshConfig { bands: 8, rows_per_band: 4 }, SHARDS, 2)
+            .unwrap();
+    let mut snaps = Vec::new();
+    for s in 0..SHARDS {
+        let p = dir.join(format!("telem.idx.shard{s}"));
+        snapshot::save_shard(&full, s, &p).unwrap();
+        snaps.push(p);
+    }
+    let model_path = dir.join("m.bbmh");
+    let w: Vec<f32> = (0..spec.output_dim()).map(|j| (j as f32 * 0.3).sin()).collect();
+    SavedModel::new(spec, LinearModel { w }).unwrap().save(&model_path).unwrap();
+
+    let backends = two_backends();
+    let assignment = shard_assignment(&backends, SHARDS);
+    let shards_of = |backend: usize| -> Vec<PathBuf> {
+        assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == backend)
+            .map(|(s, _)| snaps[s].clone())
+            .collect()
+    };
+    let port_of = |b: &str| -> u16 { b.rsplit(':').next().unwrap().parse().unwrap() };
+    let server_a = start_backend(&model_path, port_of(&backends[0]), &shards_of(0));
+    let server_b = start_backend(&model_path, port_of(&backends[1]), &shards_of(1));
+    let router = Router::start(RouterConfig {
+        backends: backends.clone(),
+        shards: SHARDS,
+        health_poll: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = router.local_addr();
+    wait_healthz(addr, |b| b.contains("backends=2/2"), "both backends up");
+
+    // ---- a raw /similar query with an explicit trace id ---------------
+    let line = {
+        let (idx, _) = ds.row(7);
+        let mut l = String::from("+1");
+        for x in idx {
+            l.push_str(&format!(" {x}:1"));
+        }
+        l.push('\n');
+        l
+    };
+    let tid = "f1ee7c0ffee12345";
+    let mut client = Client::connect(addr);
+    let hdrs = [("X-Top-K", "8".to_string()), (http::TRACE_HEADER, tid.to_string())];
+    let resp = client.post("/similar", &hdrs, &line);
+    assert_eq!(resp.status, 200, "{}", resp.body_text());
+    assert_eq!(resp.trace_id(), Some(tid), "router echoes the client's trace id");
+    // the backend's own echo is filtered at the router — one copy only
+    assert_eq!(
+        resp.headers.iter().filter(|(k, _)| k.as_str() == "x-trace-id").count(),
+        1,
+        "{:?}",
+        resp.headers
+    );
+
+    // the full path, reconstructed from one file by trace id alone:
+    // router root -> scatter legs -> backend roots -> admission wait,
+    // batch assembly, kernel
+    let evs = wait_for_spans(
+        &trace_path,
+        tid,
+        &[
+            "route.similar",
+            "route.scatter_leg",
+            "serve.similar",
+            "serve.admission_wait",
+            "serve.batch_assembly",
+            "serve.kernel",
+        ],
+    );
+    let roots: Vec<&Event> = evs.iter().filter(|e| e.name == "route.similar").collect();
+    assert_eq!(roots.len(), 1, "exactly one router root: {evs:?}");
+    assert_eq!(roots[0].parent, 0, "the router span is the trace root");
+    let legs: Vec<&Event> = evs.iter().filter(|e| e.name == "route.scatter_leg").collect();
+    assert_eq!(legs.len(), 2, "one leg per backend: {evs:?}");
+    for leg in &legs {
+        assert_eq!(leg.parent, roots[0].span, "legs parent on the router root");
+    }
+    let backend_roots: Vec<&Event> =
+        evs.iter().filter(|e| e.name == "serve.similar").collect();
+    assert_eq!(backend_roots.len(), 2, "each backend opens its own root: {evs:?}");
+    let backend_spans: Vec<u64> = backend_roots.iter().map(|e| e.span).collect();
+    for root in &backend_roots {
+        assert_eq!(root.parent, 0, "backend roots carry the trace, not a parent span");
+    }
+    // queue wait and service time are separate spans under the same root
+    for stage in ["serve.admission_wait", "serve.batch_assembly", "serve.kernel"] {
+        let stages: Vec<&Event> = evs.iter().filter(|e| e.name == stage).collect();
+        assert!(!stages.is_empty(), "{stage} missing: {evs:?}");
+        for s in &stages {
+            assert!(
+                backend_spans.contains(&s.parent),
+                "{stage} must parent on a backend root: {evs:?}"
+            );
+            assert!(s.dur_us.is_some(), "{stage} is a timed span: {evs:?}");
+        }
+    }
+
+    // ---- /score propagates through the proxy leg too ------------------
+    let tid2 = "00000000000beef5";
+    let resp = client.post(
+        "/score",
+        &[(http::TRACE_HEADER, tid2.to_string())],
+        "+1 3:1 17:1 99:1\n",
+    );
+    assert_eq!(resp.status, 200, "{}", resp.body_text());
+    assert_eq!(resp.trace_id(), Some(tid2), "score echo survives the router hop");
+    let evs = wait_for_spans(&trace_path, tid2, &["route.score", "route.forward", "serve.score"]);
+    let root = evs.iter().find(|e| e.name == "route.score").unwrap();
+    let fwd = evs.iter().find(|e| e.name == "route.forward").unwrap();
+    assert_eq!(fwd.parent, root.span, "the proxy leg parents on the router root");
+    assert_eq!(
+        evs.iter().find(|e| e.name == "serve.score").unwrap().parent,
+        0,
+        "the backend opens its own root under the same trace"
+    );
+
+    // ---- a client that sends no id still gets one minted at the edge --
+    let mut direct = Client::connect(server_a.local_addr());
+    let resp = direct.post("/score", &[], "+1 5:1\n");
+    assert_eq!(resp.status, 200, "{}", resp.body_text());
+    let minted = resp.trace_id().expect("edge mints an id when the client sends none");
+    assert!(trace::parse_id(minted).is_some(), "minted id is wire-valid: {minted:?}");
+
+    // ---- every /metrics body passes the format validator ---------------
+    for (what, addr) in
+        [("router", addr), ("backend A", server_a.local_addr()), ("backend B", server_b.local_addr())]
+    {
+        let resp = Client::connect(addr).get("/metrics");
+        assert_eq!(resp.status, 200);
+        assert!(resp.trace_id().is_some(), "{what}: even /metrics echoes a trace id");
+        prom::validate(&resp.body_text())
+            .unwrap_or_else(|e| panic!("{what} /metrics is not valid Prometheus: {e}"));
+    }
+    let m = Client::connect(addr).get("/metrics").body_text();
+    assert!(m.contains("route_backends_up 2"), "{m}");
+
+    router.shutdown();
+    server_a.shutdown();
+    server_b.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,81 @@
+#!/usr/bin/env bash
+# Scrape-and-validate gate (ISSUE 8): boot a real `bbit-mh serve` backend
+# and a `bbit-mh route` tier in front of it, fetch both live /metrics
+# bodies over HTTP, and run each through a promtool-style format
+# validator (a python re-implementation of the checks in
+# rust/src/metrics/prom.rs::validate — TYPE-before-samples, counters end
+# in _total, histogram buckets cumulative and capped by +Inf == _count).
+#
+# Usage: check_metrics.sh [path-to-bbit-mh-binary]
+# The binary defaults to rust/target/release/bbit-mh (built by the tier-1
+# job before this script runs).
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BIN="${1:-$ROOT/rust/target/release/bbit-mh}"
+[ -x "$BIN" ] || { echo "binary not found: $BIN (run cargo build --release first)" >&2; exit 1; }
+
+TMP="$(mktemp -d)"
+PIDS=()
+cleanup() {
+  for pid in "${PIDS[@]:-}"; do kill "$pid" 2>/dev/null || true; done
+  wait 2>/dev/null || true
+  rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+# ---- tiny corpus -> streamed model ----------------------------------
+"$BIN" gen-data --out "$TMP/data.svm" --n 200 --vocab 500 --seed 8
+"$BIN" train --input "$TMP/data.svm" --stream --encoder bbit --b 8 --k 32 \
+  --save-model "$TMP/m.bbmh"
+
+# ---- boot the backend; `serve` blocks on stdin (EOF stops it), so a
+# long sleep holds it open from the background ------------------------
+( sleep 300 | "$BIN" serve --model "$TMP/m.bbmh" --port 0 --workers 1 ) \
+  >"$TMP/serve.out" 2>"$TMP/serve.log" &
+PIDS+=($!)
+
+wait_addr() { # wait_addr LOGFILE -> host:port
+  local log="$1" addr=""
+  for _ in $(seq 1 100); do
+    addr="$(grep -oE 'http://[0-9.]+:[0-9]+' "$log" 2>/dev/null | head -1 || true)"
+    [ -n "$addr" ] && { echo "${addr#http://}"; return 0; }
+    sleep 0.1
+  done
+  echo "server never printed its address:" >&2
+  cat "$log" >&2
+  return 1
+}
+BACKEND="$(wait_addr "$TMP/serve.log")"
+
+# ---- boot the router in front of it ---------------------------------
+( sleep 300 | "$BIN" route --backends "$BACKEND" --shards 1 --port 0 ) \
+  >"$TMP/route.out" 2>"$TMP/route.log" &
+PIDS+=($!)
+ROUTER="$(wait_addr "$TMP/route.log")"
+
+fetch() { # fetch host:port/path -> body on stdout, headers to $TMP/hdrs
+  curl -sS --max-time 10 -D "$TMP/hdrs" "http://$1"
+}
+
+validate() { # validate NAME < body
+  python3 "$ROOT/scripts/validate_prom.py" "$1"
+}
+
+# ---- both expositions must validate, and every response carries the
+# echoed trace id -----------------------------------------------------
+for tier in "backend:$BACKEND" "router:$ROUTER"; do
+  name="${tier%%:*}"; addr="${tier#*:}"
+  body="$TMP/metrics.$name.txt"
+  fetch "$addr/metrics" >"$body"
+  grep -qi '^x-trace-id:' "$TMP/hdrs" \
+    || { echo "$name /metrics response carries no X-Trace-Id echo" >&2; exit 1; }
+  validate "$name" <"$body"
+done
+
+grep -q '^serve_model_epoch ' "$TMP/metrics.backend.txt" \
+  || { echo "backend exposition is missing the serve_model_epoch gauge" >&2; exit 1; }
+grep -q '^route_backends_up 1$' "$TMP/metrics.router.txt" \
+  || { echo "router exposition should report 1 backend up" >&2; cat "$TMP/metrics.router.txt" >&2; exit 1; }
+
+echo "check_metrics: both /metrics bodies validate (backend $BACKEND, router $ROUTER)"

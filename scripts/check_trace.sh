@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Trace smoke (ISSUE 8): run a real one-pass `train --stream` with
+# `--trace-out` and `--report-json`, then assert the JSONL span log
+# carries every pipeline stage plus the per-epoch training point, and
+# that the report dump is machine-readable.
+#
+# Usage: check_trace.sh [path-to-bbit-mh-binary]
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BIN="${1:-$ROOT/rust/target/release/bbit-mh}"
+[ -x "$BIN" ] || { echo "binary not found: $BIN (run cargo build --release first)" >&2; exit 1; }
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+"$BIN" gen-data --out "$TMP/data.svm" --n 300 --vocab 500 --seed 8
+"$BIN" train --input "$TMP/data.svm" --stream --encoder bbit --b 8 --k 32 \
+  --trace-out "$TMP/trace.jsonl" --report-json "$TMP/report.json"
+
+[ -s "$TMP/trace.jsonl" ] || { echo "trace file is empty" >&2; exit 1; }
+
+# every line is a complete JSON object (no torn writes from the
+# per-thread buffers)
+if grep -vE '^\{.*\}$' "$TMP/trace.jsonl" >/dev/null; then
+  echo "trace file has malformed lines:" >&2
+  grep -vE '^\{.*\}$' "$TMP/trace.jsonl" >&2
+  exit 1
+fi
+
+# the ingest pipeline's stage spans and the solver's epoch point
+for name in pipeline.run pipeline.read pipeline.parse pipeline.encode \
+            pipeline.sink train.epoch; do
+  grep -q "\"name\":\"$name\"" "$TMP/trace.jsonl" \
+    || { echo "span '$name' missing from the trace:" >&2; cat "$TMP/trace.jsonl" >&2; exit 1; }
+done
+
+# stage spans parent under one pipeline.run trace
+python3 - "$TMP/trace.jsonl" <<'PY'
+import json, sys
+events = [json.loads(l) for l in open(sys.argv[1])]
+roots = [e for e in events if e["name"] == "pipeline.run"]
+assert len(roots) == 1, f"want one pipeline.run root, got {len(roots)}"
+root = roots[0]
+assert root["parent"] == 0, root
+for e in events:
+    if e["name"].startswith("pipeline.") and e["name"] != "pipeline.run":
+        assert e["trace"] == root["trace"], (e, root)
+epochs = [e for e in events if e["name"] == "train.epoch"]
+assert epochs and all(e["kind"] == "point" for e in epochs), epochs
+print(f"trace OK: {len(events)} events, {len(epochs)} epoch point(s)")
+PY
+
+# the report dump is parseable and carries the ingest counters
+python3 - "$TMP/report.json" <<'PY'
+import json, sys
+r = json.load(open(sys.argv[1]))
+for key in ("docs", "wall_seconds", "read_seconds", "hash_cpu_seconds"):
+    assert key in r, f"report.json missing {key}: {r}"
+assert r["docs"] == 300, r["docs"]
+print(f"report OK: {r['docs']} docs in {r['wall_seconds']:.3f}s")
+PY
+
+echo "check_trace: pipeline spans, epoch points, and report dump all OK"

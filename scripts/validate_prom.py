@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Promtool-style Prometheus text-format validator (ISSUE 8).
+
+Mirrors the checks in rust/src/metrics/prom.rs::validate so the CI
+scrape gate (scripts/check_metrics.sh) can judge a live /metrics body
+without a promtool binary on the runner:
+
+- every sample's metric family has a # TYPE line, emitted before samples;
+- one # TYPE per family;
+- counter family names end in _total;
+- histogram `le` bounds strictly increase and end at +Inf;
+- histogram bucket counts are cumulative (non-decreasing);
+- the +Inf bucket equals _count, and _sum is present.
+
+Usage: validate_prom.py NAME < exposition.txt
+Exits nonzero with a diagnostic on the first violation.
+"""
+import re
+import sys
+
+NAME = sys.argv[1] if len(sys.argv) > 1 else "exposition"
+SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{le="([^"]*)"\})? ([0-9.eE+\-]+|NaN|\+Inf)$'
+)
+
+
+def die(msg: str) -> None:
+    sys.exit(f"{NAME}: invalid Prometheus exposition: {msg}")
+
+
+def family_of(metric: str) -> str:
+    for suffix in ("_bucket", "_sum", "_count"):
+        if metric.endswith(suffix):
+            return metric[: -len(suffix)]
+    return metric
+
+
+types: dict[str, str] = {}
+hist: dict[str, dict] = {}  # family -> {"les": [..], "counts": [..], "sum": bool, "count": val}
+
+for lineno, line in enumerate(sys.stdin.read().splitlines(), 1):
+    if not line.strip():
+        continue
+    if line.startswith("# HELP "):
+        continue
+    if line.startswith("# TYPE "):
+        parts = line.split()
+        if len(parts) != 4:
+            die(f"line {lineno}: malformed TYPE line: {line!r}")
+        fam, kind = parts[2], parts[3]
+        if kind not in ("counter", "gauge", "histogram"):
+            die(f"line {lineno}: unknown type {kind!r} for {fam}")
+        if fam in types:
+            die(f"line {lineno}: duplicate TYPE for {fam}")
+        types[fam] = kind
+        if kind == "counter" and not fam.endswith("_total"):
+            die(f"line {lineno}: counter {fam} must end in _total")
+        if kind == "histogram":
+            hist[fam] = {"les": [], "counts": [], "sum": False, "count": None}
+        continue
+    if line.startswith("#"):
+        continue
+    m = SAMPLE_RE.match(line)
+    if not m:
+        die(f"line {lineno}: unparseable sample: {line!r}")
+    metric, le, value = m.group(1), m.group(3), m.group(4)
+    fam = family_of(metric)
+    kind = types.get(fam) or types.get(metric)
+    if kind is None:
+        die(f"line {lineno}: sample {metric} has no preceding TYPE line")
+    if kind != "histogram":
+        fam = metric  # _sum/_total suffixes belong to the metric itself
+        if le is not None:
+            die(f"line {lineno}: le label on non-histogram {metric}")
+        continue
+    h = hist[fam]
+    if metric.endswith("_bucket"):
+        if le is None:
+            die(f"line {lineno}: histogram bucket without le: {line!r}")
+        bound = float("inf") if le == "+Inf" else float(le)
+        if h["les"] and not bound > h["les"][-1]:
+            die(f"line {lineno}: {fam} le bounds must strictly increase")
+        count = float(value)
+        if h["counts"] and count < h["counts"][-1]:
+            die(f"line {lineno}: {fam} buckets must be cumulative")
+        h["les"].append(bound)
+        h["counts"].append(count)
+    elif metric.endswith("_sum"):
+        h["sum"] = True
+    elif metric.endswith("_count"):
+        h["count"] = float(value)
+    else:
+        die(f"line {lineno}: stray sample {metric} under histogram {fam}")
+
+for fam, h in hist.items():
+    if not h["les"] or h["les"][-1] != float("inf"):
+        die(f"histogram {fam} must end with a +Inf bucket")
+    if not h["sum"]:
+        die(f"histogram {fam} is missing _sum")
+    if h["count"] is None:
+        die(f"histogram {fam} is missing _count")
+    if h["counts"][-1] != h["count"]:
+        die(f"histogram {fam}: +Inf bucket {h['counts'][-1]} != _count {h['count']}")
+
+if not types:
+    die("no metric families found")
+print(f"{NAME}: {len(types)} families OK "
+      f"({sum(1 for k in types.values() if k == 'histogram')} histograms)")
