@@ -193,6 +193,18 @@ pub struct PipelineReport {
     /// [`hash_cpu_seconds`](Self::hash_cpu_seconds), which keeps meaning
     /// encode-only time.
     pub parse_cpu_seconds: f64,
+    /// Wall-clock seconds spent inside device (`--device xla`) chunk
+    /// encodes, summed across workers (a slice of
+    /// [`hash_cpu_seconds`](Self::hash_cpu_seconds): the workers block on
+    /// the device driver for this long).  0 when no device encoder ran.
+    pub encode_device_seconds: f64,
+    /// Chunks encoded on the device path.
+    pub device_chunks: u64,
+    /// Chunks a device encoder fell back to CPU for (device unavailable
+    /// or a mid-run launch failure).  `device_chunks + device_fallbacks`
+    /// equals total chunks when a [`DeviceEncoder`](crate::encode::DeviceEncoder)
+    /// drove the run.
+    pub device_fallbacks: u64,
 }
 
 impl PipelineReport {
@@ -234,7 +246,8 @@ impl PipelineReport {
              \"hash_cpu_seconds\":{:.6},\"parse_cpu_seconds\":{:.6},\"sink_seconds\":{:.6},\
              \"wall_seconds\":{:.6},\"backpressure_stalls\":{},\"reorder_peak\":{},\
              \"per_worker_chunks\":[{}],\"replay_threads\":{},\"replay_bytes\":{},\
-             \"input_bytes\":{},\"rows_per_sec\":{:.1},\"parse_rows_per_sec\":{:.1},\
+             \"input_bytes\":{},\"encode_device_seconds\":{:.6},\"device_chunks\":{},\
+             \"device_fallbacks\":{},\"rows_per_sec\":{:.1},\"parse_rows_per_sec\":{:.1},\
              \"ingest_mb_per_sec\":{:.3}}}",
             self.docs,
             self.chunks,
@@ -250,10 +263,24 @@ impl PipelineReport {
             self.replay_threads,
             self.replay_bytes,
             self.input_bytes,
+            self.encode_device_seconds,
+            self.device_chunks,
+            self.device_fallbacks,
             self.rows_per_sec(),
             self.parse_rows_per_sec(),
             self.ingest_mb_per_sec(),
         )
+    }
+}
+
+/// Copy a device-capable encoder's counters into the report after a run —
+/// a no-op for plain CPU encoders, whose
+/// [`device_stats`](FeatureEncoder::device_stats) is `None`.
+fn fold_device_stats(report: &mut PipelineReport, encoder: &dyn FeatureEncoder) {
+    if let Some(ds) = encoder.device_stats() {
+        report.encode_device_seconds = ds.device_seconds;
+        report.device_chunks = ds.device_chunks;
+        report.device_fallbacks = ds.device_fallbacks;
     }
 }
 
@@ -298,7 +325,12 @@ impl Pipeline {
                 let mut span = trace::Span::child("pipeline.encode", rctx);
                 span.record("worker", wid as f64);
                 span.record("rows", chunk.len() as f64);
-                work(&chunk, wid)
+                let out = work(&chunk, wid);
+                span.record(
+                    "device",
+                    if crate::encode::encoder::take_encode_used_device() { 1.0 } else { 0.0 },
+                );
+                out
             },
             emit,
         )?;
@@ -576,6 +608,7 @@ impl Pipeline {
         let t0 = Instant::now();
         sink.finish()?;
         report.sink_seconds += t0.elapsed().as_secs_f64();
+        fold_device_stats(&mut report, encoder);
         Ok(report)
     }
 
@@ -658,6 +691,10 @@ impl Pipeline {
                 span.record("worker", wid as f64);
                 span.record("rows", parsed.len() as f64);
                 let out = work(parsed, wid)?;
+                span.record(
+                    "device",
+                    if crate::encode::encoder::take_encode_used_device() { 1.0 } else { 0.0 },
+                );
                 drop(span);
                 Ok((out, parsed.len(), parse_secs))
             },
@@ -707,6 +744,7 @@ impl Pipeline {
         let t0 = Instant::now();
         sink.finish()?;
         report.sink_seconds += t0.elapsed().as_secs_f64();
+        fold_device_stats(&mut report, encoder);
         Ok(report)
     }
 
@@ -1088,6 +1126,9 @@ mod tests {
             "replay_threads",
             "replay_bytes",
             "input_bytes",
+            "encode_device_seconds",
+            "device_chunks",
+            "device_fallbacks",
             "rows_per_sec",
             "parse_rows_per_sec",
             "ingest_mb_per_sec",

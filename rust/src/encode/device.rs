@@ -1,0 +1,652 @@
+//! Device-batched chunk encoding: a [`FeatureEncoder`] that offloads the
+//! bbit/vw hash kernels to the AOT-compiled PJRT artifacts
+//! (`preprocess --device xla`), with the CPU kernels as the always-on
+//! fallback.
+//!
+//! The paper's headline follow-up is that accelerator preprocessing
+//! collapses the hashing cost ("by using a GPU, the preprocessing cost
+//! can be reduced to a small fraction of the data loading time"; see also
+//! arXiv:1205.2958).  This module is that wiring: the pipeline workers
+//! keep parsing byte blocks exactly as before, but `encode_parsed` pads
+//! each chunk's CSR rows to the artifact's compiled `[batch, nnz]`
+//! geometry and launches the device kernel instead of the scalar loop.
+//!
+//! ## Threading model
+//!
+//! The PJRT client is not `Sync` (and is treated as not `Send`), so it
+//! never crosses threads.  [`DeviceEncoder::new`] spawns one dedicated
+//! driver thread that owns the [`PjrtRuntime`] + engine for the
+//! encoder's lifetime; pipeline workers talk to it over a bounded job
+//! channel carrying pre-padded `idx`/`mask` slabs (plain `Vec<i32>`, so
+//! nothing device-owned crosses threads).  Each worker keeps up to two
+//! batches in flight and pads the next slab while the driver executes
+//! the previous one — host→device literal construction overlaps compute
+//! (the double buffer), and the driver hands slabs back for reuse, so
+//! steady state allocates nothing per batch.
+//!
+//! ## Fallback and parity
+//!
+//! Construction never fails for device reasons: when the artifacts dir
+//! is absent, no artifact matches the spec's geometry, the scheme has no
+//! device kernel, or compilation fails, the encoder logs the reason once
+//! and runs every chunk on the CPU.  Rows a batch cannot carry (more
+//! than `nnz` nonzeros, or indices above `i32::MAX`) are computed with
+//! the CPU twin straight into their output slot — safe to mix because
+//! the device kernels are bit-exact against the CPU hashers (asserted in
+//! `tests/device_encoder.rs`): minwise values reduce mod the same
+//! `d_space` the CPU family uses, and the VW kernel's ±1 bin sums are
+//! exact in f32, so packed codes and sparse rows — and therefore caches
+//! written through `--device xla` — are byte-identical to the CPU path.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::data::dataset::Example;
+use crate::data::libsvm::ParsedChunk;
+use crate::encode::encoder::{
+    set_encode_used_device, DeviceStatsSnapshot, EncodeScratch, EncodedChunk, EncoderSpec,
+    FeatureEncoder,
+};
+use crate::encode::packed::PackedCodes;
+use crate::hashing::minwise::BbitMinHash;
+use crate::hashing::vw::VwHasher;
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::{MinhashEngine, PjrtRuntime, VwEngine};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Monotonic handle ids: the per-thread staging state keys its cached
+/// job-channel sender on this, so sequential `DeviceEncoder`s in one
+/// process never cross-contaminate.
+static HANDLE_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// One padded launch: `[batch, nnz]` idx/mask slabs in, hash output plus
+/// the same slabs (for reuse) out.
+struct DeviceJob {
+    idx: Vec<i32>,
+    mask: Vec<i32>,
+    reply: mpsc::Sender<Result<DeviceBatchOut>>,
+}
+
+enum DeviceOut {
+    /// Row-major `[batch, k]` minwise values.
+    Minhash(Vec<i32>),
+    /// Row-major `[batch, bins]` dense signed-sum vectors.
+    Vw(Vec<f32>),
+}
+
+struct DeviceBatchOut {
+    out: DeviceOut,
+    idx: Vec<i32>,
+    mask: Vec<i32>,
+}
+
+/// The engine the driver thread owns.  `_rt` keeps the PJRT client (and
+/// its compiled-executable cache) alive for as long as the engines are.
+struct DriverEngine {
+    _rt: PjrtRuntime,
+    kind: EngineKind,
+}
+
+enum EngineKind {
+    Minhash { eng: MinhashEngine, c1: Vec<u32>, c2: Vec<u32> },
+    Vw { eng: VwEngine, params: [u32; 4] },
+}
+
+/// The matching artifact with the largest padded nnz (padding waste only
+/// hurts throughput, while a too-small nnz forces per-row CPU fallbacks —
+/// prefer capacity).
+fn best_artifact(rt: &PjrtRuntime, matches: impl Fn(&ArtifactSpec) -> bool) -> Option<String> {
+    rt.manifest
+        .artifacts
+        .iter()
+        .filter(|(_, s)| matches(s))
+        .max_by_key(|(_, s)| s.consts.get("nnz").copied().unwrap_or(0))
+        .map(|(name, _)| name.clone())
+}
+
+impl DriverEngine {
+    /// Runs on the driver thread; every failure is a reason string the
+    /// constructor logs before falling back to CPU.
+    fn build(dir: &Path, spec: &EncoderSpec) -> std::result::Result<Self, String> {
+        let rt = PjrtRuntime::cpu(dir).map_err(|e| format!("PJRT runtime unavailable: {e}"))?;
+        let kind = match *spec {
+            EncoderSpec::Bbit { b, k, d, seed } => {
+                let name = best_artifact(&rt, |s| {
+                    s.consts.get("k") == Some(&(k as i64))
+                        && s.consts.get("d_space") == Some(&(d as i64))
+                        && s.consts.contains_key("nnz")
+                        && s.consts.contains_key("batch")
+                })
+                .ok_or_else(|| {
+                    format!("no minhash artifact matches k={k} d_space={d} in {}", dir.display())
+                })?;
+                let eng = MinhashEngine::new(&rt, &name)
+                    .map_err(|e| format!("compiling {name}: {e}"))?;
+                // the identical draw sequence EncoderSpec::encoder() uses,
+                // so the device launch carries the exact same family
+                let hasher = BbitMinHash::draw(k, b, d, &mut Rng::new(seed));
+                let (c1, c2) = hasher.hasher.family.param_arrays();
+                EngineKind::Minhash { eng, c1, c2 }
+            }
+            EncoderSpec::Vw { bins, seed } => {
+                let name = best_artifact(&rt, |s| {
+                    s.consts.get("bins") == Some(&(bins as i64))
+                        && s.consts.contains_key("nnz")
+                        && s.consts.contains_key("batch")
+                })
+                .ok_or_else(|| {
+                    format!("no vw artifact matches bins={bins} in {}", dir.display())
+                })?;
+                let eng =
+                    VwEngine::new(&rt, &name).map_err(|e| format!("compiling {name}: {e}"))?;
+                let params = VwHasher::draw(bins, &mut Rng::new(seed)).param_array();
+                EngineKind::Vw { eng, params }
+            }
+            ref other => return Err(format!("scheme {} has no device kernel", other.scheme())),
+        };
+        Ok(DriverEngine { _rt: rt, kind })
+    }
+
+    fn geometry(&self) -> (usize, usize) {
+        match &self.kind {
+            EngineKind::Minhash { eng, .. } => (eng.batch, eng.nnz),
+            EngineKind::Vw { eng, .. } => (eng.batch, eng.nnz),
+        }
+    }
+
+    fn serve(&self, job: DeviceJob) {
+        let DeviceJob { idx, mask, reply } = job;
+        let result = match &self.kind {
+            EngineKind::Minhash { eng, c1, c2 } => {
+                eng.minhash_padded(&idx, &mask, c1, c2).map(DeviceOut::Minhash)
+            }
+            EngineKind::Vw { eng, params } => {
+                eng.hash_padded(&idx, &mask, *params).map(DeviceOut::Vw)
+            }
+        };
+        // a dropped receiver means the worker already gave up on this
+        // chunk (CPU fallback) — nothing to do
+        let _ = reply.send(result.map(|out| DeviceBatchOut { out, idx, mask }));
+    }
+}
+
+fn run_driver(
+    dir: PathBuf,
+    spec: EncoderSpec,
+    ready: mpsc::Sender<std::result::Result<(usize, usize), String>>,
+    jobs: Receiver<DeviceJob>,
+    stop: Arc<AtomicBool>,
+) {
+    let engine = match DriverEngine::build(&dir, &spec) {
+        Ok(e) => e,
+        Err(reason) => {
+            let _ = ready.send(Err(reason));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(engine.geometry()));
+    // recv_timeout + stop flag instead of plain recv: worker threads'
+    // staging state holds cloned senders in thread-local storage, so the
+    // channel may outlive the handle — the flag bounds shutdown anyway
+    loop {
+        match jobs.recv_timeout(Duration::from_millis(25)) {
+            Ok(job) => engine.serve(job),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// The live driver-thread connection.
+struct DeviceHandle {
+    tx: Mutex<Option<SyncSender<DeviceJob>>>,
+    driver: Mutex<Option<JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+    /// Compiled documents-per-launch.
+    batch: usize,
+    /// Compiled padded nonzeros per document.
+    nnz: usize,
+    id: u64,
+}
+
+impl Drop for DeviceHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.driver.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Recyclable `[batch, nnz]` slab pairs handed back by the driver.
+type FreeSlabs = Vec<(Vec<i32>, Vec<i32>)>;
+/// Submitted batches awaiting results: (chunk row ids, reply receiver).
+type Inflight = VecDeque<(Vec<usize>, Receiver<Result<DeviceBatchOut>>)>;
+
+/// Per-worker-thread staging state: the cached sender, recycled slabs,
+/// and CPU-twin scratch.  Thread-local so the pipeline workers share the
+/// encoder by `&self` without locks on the hot path.
+struct Staging {
+    handle_id: u64,
+    tx: Option<SyncSender<DeviceJob>>,
+    free: FreeSlabs,
+    /// Flat `[n, k]` b-bit codes for the chunk being assembled.
+    codes: Vec<u16>,
+    /// CPU-twin scratch (minwise values / one code row / vw pairs).
+    z: Vec<u64>,
+    row: Vec<u16>,
+    pairs: Vec<(u32, f32)>,
+}
+
+thread_local! {
+    static STAGING: std::cell::RefCell<Staging> = const {
+        std::cell::RefCell::new(Staging {
+            handle_id: 0,
+            tx: None,
+            free: Vec::new(),
+            codes: Vec::new(),
+            z: Vec::new(),
+            row: Vec::new(),
+            pairs: Vec::new(),
+        })
+    };
+}
+
+/// One batch being staged on a worker thread.
+struct Batch {
+    idx: Vec<i32>,
+    mask: Vec<i32>,
+    rows: Vec<usize>,
+}
+
+impl Batch {
+    fn acquire(free: &mut FreeSlabs, cap: usize) -> Batch {
+        while let Some((idx, mut mask)) = free.pop() {
+            if idx.len() == cap {
+                // stale idx values are dead weight — the kernel masks them
+                mask.fill(0);
+                return Batch { idx, mask, rows: Vec::new() };
+            }
+        }
+        Batch { idx: vec![0; cap], mask: vec![0; cap], rows: Vec::new() }
+    }
+
+    fn stage(&mut self, nnz: usize, row_id: usize, set: &[u32]) {
+        let base = self.rows.len() * nnz;
+        for (c, &t) in set.iter().enumerate() {
+            self.idx[base + c] = t as i32;
+            self.mask[base + c] = 1;
+        }
+        self.rows.push(row_id);
+    }
+}
+
+fn submit(tx: &SyncSender<DeviceJob>, batch: Batch, inflight: &mut Inflight) -> Result<()> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    tx.send(DeviceJob { idx: batch.idx, mask: batch.mask, reply: reply_tx })
+        .map_err(|_| Error::Pipeline("device driver exited".into()))?;
+    inflight.push_back((batch.rows, reply_rx));
+    Ok(())
+}
+
+fn recv_batch(inflight: &mut Inflight) -> Result<(Vec<usize>, DeviceBatchOut)> {
+    let (rows, rx) = inflight.pop_front().expect("drain on an empty in-flight queue");
+    let out = rx
+        .recv()
+        .map_err(|_| Error::Pipeline("device driver dropped a batch".into()))??;
+    Ok((rows, out))
+}
+
+/// Unpack one finished minwise batch: truncate to b bits straight into
+/// each row's output slot, then recycle the slabs.
+fn drain_one_bbit(
+    inflight: &mut Inflight,
+    k: usize,
+    bmask: u32,
+    codes: &mut [u16],
+    free: &mut FreeSlabs,
+) -> Result<()> {
+    let (rows, batch) = recv_batch(inflight)?;
+    let DeviceOut::Minhash(z) = batch.out else {
+        return Err(Error::Pipeline("device driver returned the wrong output kind".into()));
+    };
+    for (slot, &row_id) in rows.iter().enumerate() {
+        let src = &z[slot * k..(slot + 1) * k];
+        let dst = &mut codes[row_id * k..(row_id + 1) * k];
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = (v as u32 & bmask) as u16;
+        }
+    }
+    free.push((batch.idx, batch.mask));
+    Ok(())
+}
+
+/// Unpack one finished VW batch: sparsify each dense row (ascending bin,
+/// exact zeros dropped — the same shape `hash_sparse_with` emits), then
+/// recycle the slabs.
+fn drain_one_vw(
+    inflight: &mut Inflight,
+    bins: usize,
+    rows_out: &mut [(i8, Vec<(u32, f32)>)],
+    free: &mut FreeSlabs,
+) -> Result<()> {
+    let (rows, batch) = recv_batch(inflight)?;
+    let DeviceOut::Vw(v) = batch.out else {
+        return Err(Error::Pipeline("device driver returned the wrong output kind".into()));
+    };
+    for (slot, &row_id) in rows.iter().enumerate() {
+        let dense = &v[slot * bins..(slot + 1) * bins];
+        let out = &mut rows_out[row_id].1;
+        for (j, &val) in dense.iter().enumerate() {
+            if val != 0.0 {
+                out.push((j as u32, val));
+            }
+        }
+    }
+    free.push((batch.idx, batch.mask));
+    Ok(())
+}
+
+/// The CPU twin of the device kernel — drawn with the identical sequence
+/// `EncoderSpec::encoder()` uses, so per-row fallback output is
+/// bit-identical to the device rows around it.
+enum CpuTwin {
+    Bbit(BbitMinHash),
+    Vw(VwHasher),
+    Other,
+}
+
+#[derive(Default)]
+struct DeviceStats {
+    chunks: AtomicU64,
+    fallbacks: AtomicU64,
+    nanos: AtomicU64,
+}
+
+/// An `xla`-backed [`FeatureEncoder`]: device-resident minwise/VW hashing
+/// on the chunk encode path, CPU everywhere else (margins, signatures,
+/// `Example` chunks), automatic CPU fallback when PJRT is unavailable.
+/// See the module docs for the threading and parity story.
+pub struct DeviceEncoder {
+    spec: EncoderSpec,
+    /// The full CPU encoder: whole-chunk fallback + the non-chunk trait
+    /// surface (margin / signature / scratch).
+    cpu: Box<dyn FeatureEncoder>,
+    twin: CpuTwin,
+    handle: Option<DeviceHandle>,
+    stats: DeviceStats,
+}
+
+impl DeviceEncoder {
+    /// Build a device-backed encoder for `spec` over `artifacts_dir`.
+    /// Device unavailability is never an error: every fallback reason
+    /// (missing artifacts dir, no matching artifact, unsupported scheme,
+    /// compile failure) is logged to stderr and the encoder runs on the
+    /// CPU; only an invalid `spec` itself fails.
+    pub fn new(spec: &EncoderSpec, artifacts_dir: &Path) -> Result<Self> {
+        let cpu = spec.encoder()?; // validates the spec
+        let twin = match *spec {
+            EncoderSpec::Bbit { b, k, d, seed } => {
+                CpuTwin::Bbit(BbitMinHash::draw(k, b, d, &mut Rng::new(seed)))
+            }
+            EncoderSpec::Vw { bins, seed } => {
+                CpuTwin::Vw(VwHasher::draw(bins, &mut Rng::new(seed)))
+            }
+            _ => CpuTwin::Other,
+        };
+        let handle = if matches!(twin, CpuTwin::Other) {
+            eprintln!(
+                "device encode unavailable (scheme {} has no device kernel); using CPU",
+                spec.scheme()
+            );
+            None
+        } else {
+            match spawn_driver(spec, artifacts_dir) {
+                Ok(h) => Some(h),
+                Err(reason) => {
+                    eprintln!("device encode unavailable ({reason}); using CPU");
+                    None
+                }
+            }
+        };
+        Ok(DeviceEncoder { spec: *spec, cpu, twin, handle, stats: DeviceStats::default() })
+    }
+
+    /// Whether the device path is live (false = everything runs on CPU).
+    pub fn device_active(&self) -> bool {
+        self.handle.is_some()
+    }
+
+    /// The compiled `(batch, nnz)` launch geometry, when active.
+    pub fn batch_geometry(&self) -> Option<(usize, usize)> {
+        self.handle.as_ref().map(|h| (h.batch, h.nnz))
+    }
+
+    fn encode_bbit_device(
+        &self,
+        h: &DeviceHandle,
+        hasher: &BbitMinHash,
+        chunk: &ParsedChunk,
+    ) -> Result<EncodedChunk> {
+        let (b, k) = (hasher.b, hasher.k());
+        let bmask = (1u32 << b) - 1;
+        let n = chunk.len();
+        let cap = h.batch * h.nnz;
+        STAGING.with(|cell| {
+            let mut st = cell.borrow_mut();
+            let st = &mut *st;
+            let tx = rearm(st, h)?;
+            st.codes.clear();
+            st.codes.resize(n * k, 0);
+            st.z.clear();
+            st.z.resize(k, 0);
+            st.row.clear();
+            st.row.resize(k, 0);
+            let mut inflight: Inflight = VecDeque::new();
+            let mut cur: Option<Batch> = None;
+            for i in 0..n {
+                let set = chunk.row(i).0;
+                if set.len() > h.nnz || set.iter().any(|&t| t > i32::MAX as u32) {
+                    // a row the compiled geometry cannot carry: CPU twin,
+                    // straight into its slot (bit-exact, so order-safe)
+                    hasher.codes_into(set, &mut st.z, &mut st.row);
+                    st.codes[i * k..(i + 1) * k].copy_from_slice(&st.row);
+                    continue;
+                }
+                let batch = cur.get_or_insert_with(|| Batch::acquire(&mut st.free, cap));
+                batch.stage(h.nnz, i, set);
+                if batch.rows.len() == h.batch {
+                    submit(&tx, cur.take().unwrap(), &mut inflight)?;
+                    // keep one executing + one staged: pad the next slab
+                    // while the driver runs the previous launch
+                    while inflight.len() >= 2 {
+                        drain_one_bbit(&mut inflight, k, bmask, &mut st.codes, &mut st.free)?;
+                    }
+                }
+            }
+            if let Some(partial) = cur.take() {
+                if partial.rows.is_empty() {
+                    st.free.push((partial.idx, partial.mask));
+                } else {
+                    submit(&tx, partial, &mut inflight)?;
+                }
+            }
+            while !inflight.is_empty() {
+                drain_one_bbit(&mut inflight, k, bmask, &mut st.codes, &mut st.free)?;
+            }
+            let mut packed = PackedCodes::new(b, k);
+            packed.reserve_rows(n);
+            let mut labels = Vec::with_capacity(n);
+            for i in 0..n {
+                packed.push_row(&st.codes[i * k..(i + 1) * k])?;
+                labels.push(chunk.label(i));
+            }
+            Ok(EncodedChunk::Packed { codes: packed, labels })
+        })
+    }
+
+    fn encode_vw_device(
+        &self,
+        h: &DeviceHandle,
+        hasher: &VwHasher,
+        chunk: &ParsedChunk,
+    ) -> Result<EncodedChunk> {
+        let bins = hasher.bins;
+        let n = chunk.len();
+        let cap = h.batch * h.nnz;
+        STAGING.with(|cell| {
+            let mut st = cell.borrow_mut();
+            let st = &mut *st;
+            let tx = rearm(st, h)?;
+            let mut rows_out: Vec<(i8, Vec<(u32, f32)>)> =
+                (0..n).map(|i| (chunk.label(i), Vec::new())).collect();
+            let mut inflight: Inflight = VecDeque::new();
+            let mut cur: Option<Batch> = None;
+            for i in 0..n {
+                let set = chunk.row(i).0;
+                if set.len() > h.nnz || set.iter().any(|&t| t > i32::MAX as u32) {
+                    rows_out[i].1 = hasher.hash_sparse_with(set, &mut st.pairs);
+                    continue;
+                }
+                let batch = cur.get_or_insert_with(|| Batch::acquire(&mut st.free, cap));
+                batch.stage(h.nnz, i, set);
+                if batch.rows.len() == h.batch {
+                    submit(&tx, cur.take().unwrap(), &mut inflight)?;
+                    while inflight.len() >= 2 {
+                        drain_one_vw(&mut inflight, bins, &mut rows_out, &mut st.free)?;
+                    }
+                }
+            }
+            if let Some(partial) = cur.take() {
+                if partial.rows.is_empty() {
+                    st.free.push((partial.idx, partial.mask));
+                } else {
+                    submit(&tx, partial, &mut inflight)?;
+                }
+            }
+            while !inflight.is_empty() {
+                drain_one_vw(&mut inflight, bins, &mut rows_out, &mut st.free)?;
+            }
+            Ok(EncodedChunk::Sparse { rows: rows_out })
+        })
+    }
+}
+
+/// Refresh the calling thread's cached sender when the handle changed
+/// (sequential encoders must not reuse each other's slabs or channel),
+/// then hand out a clone for this chunk.
+fn rearm(st: &mut Staging, h: &DeviceHandle) -> Result<SyncSender<DeviceJob>> {
+    if st.handle_id != h.id {
+        st.tx = h.tx.lock().unwrap().clone();
+        st.handle_id = h.id;
+        st.free.clear();
+    }
+    st.tx
+        .clone()
+        .ok_or_else(|| Error::Pipeline("device driver unavailable".into()))
+}
+
+fn spawn_driver(spec: &EncoderSpec, dir: &Path) -> std::result::Result<DeviceHandle, String> {
+    // enough slack for every worker to keep its two batches in flight
+    let depth = 2 * crate::config::available_workers().max(1);
+    let (job_tx, job_rx) = mpsc::sync_channel::<DeviceJob>(depth);
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = std::thread::Builder::new()
+        .name("bbmh-device-driver".into())
+        .spawn({
+            let (spec, dir, stop) = (*spec, dir.to_path_buf(), stop.clone());
+            move || run_driver(dir, spec, ready_tx, job_rx, stop)
+        })
+        .map_err(|e| format!("cannot spawn driver thread: {e}"))?;
+    match ready_rx.recv() {
+        Ok(Ok((batch, nnz))) => Ok(DeviceHandle {
+            tx: Mutex::new(Some(job_tx)),
+            driver: Mutex::new(Some(driver)),
+            stop,
+            batch,
+            nnz,
+            id: HANDLE_IDS.fetch_add(1, Ordering::Relaxed),
+        }),
+        Ok(Err(reason)) => {
+            let _ = driver.join();
+            Err(reason)
+        }
+        Err(_) => {
+            let _ = driver.join();
+            Err("driver thread died during initialization".into())
+        }
+    }
+}
+
+impl FeatureEncoder for DeviceEncoder {
+    fn spec(&self) -> EncoderSpec {
+        self.spec
+    }
+
+    fn encode_chunk(&self, chunk: &[Example]) -> Result<EncodedChunk> {
+        // the Example path is off the ingest hot loop — CPU is fine
+        self.cpu.encode_chunk(chunk)
+    }
+
+    fn encode_parsed(&self, chunk: &ParsedChunk) -> Result<EncodedChunk> {
+        let Some(h) = &self.handle else {
+            self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+            set_encode_used_device(false);
+            return self.cpu.encode_parsed(chunk);
+        };
+        let t0 = Instant::now();
+        let result = match &self.twin {
+            CpuTwin::Bbit(hasher) => self.encode_bbit_device(h, hasher, chunk),
+            CpuTwin::Vw(hasher) => self.encode_vw_device(h, hasher, chunk),
+            CpuTwin::Other => unreachable!("a handle exists only for bbit/vw"),
+        };
+        match result {
+            Ok(out) => {
+                self.stats.chunks.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                set_encode_used_device(true);
+                Ok(out)
+            }
+            Err(e) => {
+                eprintln!("device encode failed ({e}); CPU fallback for this chunk");
+                self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                set_encode_used_device(false);
+                self.cpu.encode_parsed(chunk)
+            }
+        }
+    }
+
+    fn scratch(&self) -> EncodeScratch {
+        self.cpu.scratch()
+    }
+
+    fn margin(&self, set: &[u32], w: &[f32], scratch: &mut EncodeScratch) -> f32 {
+        self.cpu.margin(set, w, scratch)
+    }
+
+    fn signature_into(&self, set: &[u32], scratch: &mut EncodeScratch) -> bool {
+        self.cpu.signature_into(set, scratch)
+    }
+
+    fn device_stats(&self) -> Option<DeviceStatsSnapshot> {
+        Some(DeviceStatsSnapshot {
+            device_chunks: self.stats.chunks.load(Ordering::Relaxed),
+            device_fallbacks: self.stats.fallbacks.load(Ordering::Relaxed),
+            device_seconds: self.stats.nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        })
+    }
+}

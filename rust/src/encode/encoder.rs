@@ -289,6 +289,41 @@ pub struct EncodeScratch {
     pub codes: Vec<u16>,
 }
 
+/// Point-in-time device-encode counters, surfaced through
+/// [`FeatureEncoder::device_stats`] and folded into the
+/// [`PipelineReport`](crate::coordinator::PipelineReport) after a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceStatsSnapshot {
+    /// Chunks encoded through the device path.
+    pub device_chunks: u64,
+    /// Chunks that fell back to the CPU kernels (mid-run device errors,
+    /// or every chunk when the device was unavailable at construction).
+    pub device_fallbacks: u64,
+    /// Wall seconds spent inside device-path `encode_parsed` calls.
+    pub device_seconds: f64,
+}
+
+thread_local! {
+    /// Whether the current worker thread's most recent `encode_parsed`
+    /// ran on the device — set by device-capable encoders, read-and-
+    /// cleared by the pipeline worker to tag the `pipeline.encode` span's
+    /// `device` field (so `--trace-out` separates device time from CPU
+    /// encode time).
+    static ENCODE_USED_DEVICE: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Record whether the calling thread's last `encode_parsed` used the
+/// device (device-capable encoders call this on every chunk).
+pub fn set_encode_used_device(v: bool) {
+    ENCODE_USED_DEVICE.with(|c| c.set(v));
+}
+
+/// Read-and-clear the calling thread's device flag
+/// ([`set_encode_used_device`]); `false` when no device encoder ran.
+pub fn take_encode_used_device() -> bool {
+    ENCODE_USED_DEVICE.with(|c| c.replace(false))
+}
+
 /// A feature-encoding scheme the pipeline can run.
 ///
 /// Implementations are immutable after [`draw`] and shared by reference
@@ -336,6 +371,14 @@ pub trait FeatureEncoder: Send + Sync {
     fn signature_into(&self, set: &[u32], scratch: &mut EncodeScratch) -> bool {
         let _ = (set, scratch);
         false
+    }
+
+    /// Device-path counters for encoders that offload chunk encoding to
+    /// an accelerator ([`crate::encode::device::DeviceEncoder`]); `None`
+    /// for pure-CPU encoders.  The pipeline folds the snapshot into its
+    /// report after a run.
+    fn device_stats(&self) -> Option<DeviceStatsSnapshot> {
+        None
     }
 }
 

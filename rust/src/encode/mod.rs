@@ -17,9 +17,14 @@
 //!   replay (plus optional RLE record compression via [`codec`]).
 //! - [`codec`]: the std-only varint+RLE payload compressor behind the
 //!   cache's `--cache-compress` flag.
+//! - [`device`]: the `--device xla` encoder — [`DeviceEncoder`] batches
+//!   `ParsedChunk`s into the AOT PJRT minwise/VW kernels from the pipeline
+//!   workers, bit-identical to the CPU path, with automatic CPU fallback
+//!   when no PJRT stack is available.
 
 pub mod cache;
 pub mod codec;
+pub mod device;
 pub mod encoder;
 pub mod expansion;
 pub mod packed;
@@ -28,5 +33,8 @@ pub use cache::{
     CacheMeta, CacheReader, CacheWriteOptions, CacheWriter, ChunkIndex, ChunkIndexEntry,
     IndexedCacheReader,
 };
-pub use encoder::{draw, EncodeScratch, EncodedChunk, EncoderSpec, FeatureEncoder};
+pub use device::DeviceEncoder;
+pub use encoder::{
+    draw, DeviceStatsSnapshot, EncodeScratch, EncodedChunk, EncoderSpec, FeatureEncoder,
+};
 pub use packed::PackedCodes;

@@ -23,14 +23,14 @@
 //! |---|---|
 //! | [`data`] | LibSVM streaming IO (zero-copy byte-block parser + legacy line reader), rcv1-like generator, feature expansion |
 //! | [`hashing`] | minwise / b-bit / VW / RP / OPH substrates (register-blocked 4-wide minwise kernel) + estimator variance theory |
-//! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache (v3: chunk-index footer for parallel replay + optional RLE record compression) |
+//! | [`encode`] | the scheme-agnostic [`FeatureEncoder`](encode::encoder::FeatureEncoder) API ([`EncoderSpec`](encode::encoder::EncoderSpec)), `n·b·k`-bit packed codes, 2^b×k expansion (Section 3), spec-tagged on-disk cache (v3: chunk-index footer for parallel replay + optional RLE record compression), and the `--device xla` [`DeviceEncoder`](encode::DeviceEncoder) batching minwise/VW hashing onto the PJRT runtime |
 //! | [`kernels`] | the train/score inner loops: whole-row b-bit decode, 8-wide unrolled dot/axpy, weight prefetch, scalar reference twins |
 //! | [`solver`] | dual-CD SVM, Newton-CG LR, SGD incl. streaming/out-of-core form; models persist their `EncoderSpec`; cache eval/holdout/SGD all replay across threads |
 //! | [`coordinator`] | streaming pipeline (reader → encoder workers → collector → sink; raw input is carved into byte blocks and *parsed in the workers*, so ingest scales with `--workers`), parallel cache-replay reader pool, + scheduler |
 //! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control, a load generator, and the consistent-hash `route` fleet tier scatter-gathering `/similar` over shard servers (the paper's "used in industry / search" request path) |
 //! | [`similarity`] | online near-neighbor search: sharded, snapshottable LSH index over b-bit signatures, built out-of-core from the hashed cache (the paper's Section 6 "re-use the hashed data" workflow, made a serving subsystem) |
 //! | [`metrics`] | the unified telemetry layer: counters/gauges/histograms, one Prometheus text renderer + format validator ([`metrics::prom`]), and structured JSONL tracing spans with fleet-wide trace-id propagation ([`metrics::trace`]) |
-//! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` |
+//! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` (typed input-geometry validation before every launch); feeds the `--device xla` encode path |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
 //!
 //! ## The encoder seam
@@ -94,6 +94,21 @@
 //! committed baselines in `benches/baselines/` via
 //! `scripts/bench_gate.sh` and appends history with
 //! `scripts/bench_trend.sh`.
+//!
+//! The preprocessing side has a device column: `preprocess --device xla`
+//! swaps the workers' per-row hashing for the
+//! [`DeviceEncoder`](encode::DeviceEncoder), which pads parsed CSR chunks
+//! to the compiled `[batch, nnz]` geometry of the AOT minwise/VW
+//! artifacts and double-buffers host→device staging against execution on
+//! a dedicated driver thread.  Output is bit-identical to the CPU path
+//! (same draws, same mod-reduce, same truncation — asserted row-for-row
+//! and cache-byte-for-byte in `tests/device_encoder.rs`), rows that
+//! exceed the compiled `nnz` fall back to the scalar twin per row, and a
+//! missing/broken PJRT stack degrades to pure CPU with a logged reason —
+//! never an error.  `bench_pipeline -- ingest` records the device column
+//! (`device_preprocess_seconds`, `device_over_load`) next to the CPU
+//! ingest numbers, and `--report-json` carries
+//! `encode_device_seconds` / `device_chunks` / `device_fallbacks`.
 //!
 //! ## Observability
 //!

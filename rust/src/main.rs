@@ -71,11 +71,20 @@ TELEMETRY:
   with its trace id.  --report-json FILE (preprocess, train --stream)
   dumps the machine-readable pipeline report.
 
+DEVICE PREPROCESSING:
+  --device xla (preprocess, train --stream) batches chunk hashing into the
+  AOT-compiled PJRT minwise/VW kernels ([--artifacts artifacts] names the
+  compiled-artifacts dir).  Encoded output — including the on-disk cache —
+  is bit-identical to the CPU path; when the artifacts dir is missing, no
+  artifact matches the spec, or the scheme has no device kernel, the run
+  logs the reason and falls back to CPU hashing.
+
 USAGE:
   bbit-mh gen-data --out FILE [--n 4000] [--vocab 4000] [--expanded] [--seed N]
   bbit-mh preprocess --input FILE (--out FILE | --cache-out FILE)
              [--encoder bbit|vw|rp|oph] [scheme flags] [--workers N] [--seed N]
              [--cache-compress] [--block-kb 256] [--legacy-reader]
+             [--device cpu|xla] [--artifacts DIR]
              [--trace-out FILE] [--report-json FILE]
              (--cache-out streams packed-code chunks to the on-disk hashed
               cache: hash once, train many times, constant memory; the v3
@@ -99,7 +108,8 @@ USAGE:
               synchronized by iterate averaging at epoch boundaries)
   bbit-mh train --input FILE --stream [--encoder bbit|oph] [scheme flags]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
-             [--seed N] [--save-model FILE] [--trace-out FILE] [--report-json FILE]
+             [--seed N] [--save-model FILE] [--device cpu|xla] [--artifacts DIR]
+             [--trace-out FILE] [--report-json FILE]
              (one-pass hash-and-train: nothing materialized, prints progressive loss)
   bbit-mh classify --model FILE (--input FILE [--out FILE] [--block-kb 256]
              [--legacy-reader] [--chunk-size 256]
@@ -337,6 +347,46 @@ fn block_bytes_flag(args: &Args) -> Result<usize> {
     Ok(kb << 10)
 }
 
+/// Parse `--device cpu|xla` (+ `--artifacts DIR`): `Some(dir)` selects the
+/// device-batched encode path over the compiled artifacts in `dir`.
+fn device_flag(args: &Args) -> Result<Option<std::path::PathBuf>> {
+    match args.get("device", "cpu".to_string())?.as_str() {
+        "cpu" => {
+            // silently ignoring --artifacts would let users believe the
+            // device path ran
+            if args.has("artifacts") {
+                return Err(Error::InvalidArg(
+                    "--artifacts only applies with --device xla".into(),
+                ));
+            }
+            Ok(None)
+        }
+        "xla" => {
+            if args.has("legacy-reader") {
+                return Err(Error::InvalidArg(
+                    "--device xla batches parsed chunks on the byte-block path; \
+                     drop --legacy-reader"
+                        .into(),
+                ));
+            }
+            Ok(Some(args.get("artifacts", "artifacts".to_string())?.into()))
+        }
+        other => Err(Error::InvalidArg(format!("unknown --device {other:?} (want cpu|xla)"))),
+    }
+}
+
+/// Device-encode counters for the summaries — empty when no device
+/// encoder drove the run.
+fn device_summary(report: &bbit_mh::coordinator::PipelineReport) -> String {
+    if report.device_chunks == 0 && report.device_fallbacks == 0 {
+        return String::new();
+    }
+    format!(
+        ", device {} chunks in {:.2}s ({} cpu-fallback)",
+        report.device_chunks, report.encode_device_seconds, report.device_fallbacks,
+    )
+}
+
 /// Ingest-side counters for the `preprocess`/`train --stream` summaries —
 /// empty for the legacy reader path (where parsing is `read_seconds`).
 fn ingest_summary(report: &bbit_mh::coordinator::PipelineReport) -> String {
@@ -378,13 +428,19 @@ fn run_raw_input<S: bbit_mh::coordinator::PipelineSink>(
     spec: &EncoderSpec,
     sink: &mut S,
 ) -> Result<bbit_mh::coordinator::PipelineReport> {
+    let device_dir = device_flag(args)?; // validate before IO
     if args.has("legacy-reader") {
         let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
         pipe.run_sink(source, spec, sink)
     } else {
         let block_bytes = block_bytes_flag(args)?; // validate before IO
         let blocks = BlockReader::open(input)?.with_block_bytes(block_bytes);
-        pipe.run_sink_blocks(blocks, true, spec, sink)
+        if let Some(dir) = device_dir {
+            let encoder = bbit_mh::encode::DeviceEncoder::new(spec, &dir)?;
+            pipe.run_encoder_blocks(blocks, true, &encoder, sink)
+        } else {
+            pipe.run_sink_blocks(blocks, true, spec, sink)
+        }
     }
 }
 
@@ -423,7 +479,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         };
         eprintln!(
             "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read + {:.2}s stalled, \
-             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks{}{}) -> {}",
+             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks{}{}{}) -> {}",
             report.docs,
             report.wall_seconds,
             report.read_seconds,
@@ -432,6 +488,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             report.sink_seconds,
             report.reorder_peak,
             ingest_summary(&report),
+            device_summary(&report),
             bytes,
             cache_out,
         );
@@ -457,13 +514,14 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             )?;
             eprintln!(
                 "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read, {:.2} hash-cpu-s, \
-                 {} stalls{}) -> {} ({} ideal bytes)",
+                 {} stalls{}{}) -> {} ({} ideal bytes)",
                 report.docs,
                 report.wall_seconds,
                 report.read_seconds,
                 report.hash_cpu_seconds,
                 report.backpressure_stalls,
                 ingest_summary(&report),
+                device_summary(&report),
                 out,
                 bb.codes.ideal_bytes(),
             );
@@ -473,10 +531,11 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             w.write_dataset(&ds)?;
             w.finish()?;
             eprintln!(
-                "{scheme}-encoded {} docs in {:.2}s wall{} -> {out}",
+                "{scheme}-encoded {} docs in {:.2}s wall{}{} -> {out}",
                 report.docs,
                 report.wall_seconds,
                 ingest_summary(&report),
+                device_summary(&report),
             );
         }
     }
@@ -658,7 +717,7 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
     println!(
         "solver=sgd method=stream: one-pass trained on {} docs, progressive loss {:.4}, \
          {:.2}s wall ({:.2}s read + {:.2}s stalled, {:.2} hash-cpu-s, {:.2}s solver, \
-         reorder peak {} chunks{})",
+         reorder peak {} chunks{}{})",
         report.docs,
         stats.objective,
         report.wall_seconds,
@@ -668,6 +727,7 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
         report.sink_seconds,
         report.reorder_peak,
         ingest_summary(&report),
+        device_summary(&report),
     );
     if let Some(model_path) = args.flags.get("save-model") {
         let saved = bbit_mh::solver::SavedModel::new(spec, model)?;
@@ -709,6 +769,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             "--report-json applies to preprocess and train --stream (the ingest \
              pipeline paths); cache replay and the in-memory split have no \
              pipeline report"
+                .into(),
+        ));
+    }
+    // device-batched hashing lives in the ingest pipeline's encode workers;
+    // cache replay and the in-memory split never touch that stage, so
+    // accepting the flag there would silently run on CPU
+    if (args.has("device") || args.has("artifacts")) && !args.has("stream") {
+        return Err(Error::InvalidArg(
+            "--device/--artifacts apply to preprocess and train --stream (the \
+             ingest pipeline encode paths); cache replay and the in-memory \
+             split encode on the CPU"
                 .into(),
         ));
     }
@@ -1238,6 +1309,34 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.to_string().contains("replay-threads"), "{err}");
+    }
+
+    #[test]
+    fn device_flag_conflicts_are_typed_errors() {
+        // rejected before any file IO — bogus input paths never get opened
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--out", "o", "--device", "tpu",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("--device"), "{err}");
+        // --artifacts without --device xla would silently run on CPU
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--out", "o", "--artifacts", "a",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("--artifacts"), "{err}");
+        // the device path batches worker-parsed chunks — the legacy line
+        // reader never produces them
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--out", "o", "--device", "xla", "--legacy-reader",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("legacy-reader"), "{err}");
+        // ingest-pipeline-only flag: the non-stream train paths reject it
+        let err = run(&argv(&["train", "--input", "f", "--device", "xla"])).unwrap_err();
+        assert!(err.to_string().contains("--device"), "{err}");
+        let err = run(&argv(&["train", "--cache", "c", "--device", "xla"])).unwrap_err();
+        assert!(err.to_string().contains("--device"), "{err}");
     }
 
     #[test]

@@ -11,6 +11,23 @@
 //! high-level engines ([`MinhashEngine`], [`VwEngine`], [`TrainEngine`])
 //! wrap padding, literal construction and output unpacking for the three
 //! artifact families (preprocess / train / predict).
+//!
+//! ## Worker-stage integration (device-batched preprocessing)
+//!
+//! The runtime also sits on the ingest hot path: `preprocess --device xla`
+//! routes every pipeline worker's encode stage through a
+//! [`DeviceEncoder`](crate::encode::device::DeviceEncoder).  The PJRT
+//! client is not `Sync` (and is treated as not `Send`), so it never
+//! crosses threads — the encoder owns one dedicated driver thread that
+//! constructs the [`PjrtRuntime`] and its engine, and the workers feed it
+//! pre-padded `[batch, nnz]` CSR slabs over a bounded channel.
+//! [`MinhashEngine::minhash_padded`] / [`VwEngine::hash_padded`] are the
+//! launch entry points for that path: the caller owns padding and
+//! double-buffering, the engine owns literal construction and unpacking.
+//! Every launch goes through [`HostInput`], which validates dtype/shape
+//! against the manifest *before* any literal is built, so a geometry
+//! mismatch fails as a typed [`Error::Runtime`] naming the artifact and
+//! offending input instead of an opaque XLA abort.
 
 pub mod manifest;
 
@@ -20,8 +37,144 @@ use std::sync::{Arc, Mutex};
 
 use crate::encode::packed::PackedCodes;
 use crate::hashing::universal::UniversalFamily;
-use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::manifest::{ArtifactSpec, DType, Manifest};
 use crate::{Error, Result};
+
+/// A host-side tensor handed to [`LoadedArtifact::execute`]: the raw data
+/// plus the logical dims, so the launch can be validated against the
+/// manifest's [`ArtifactSpec`] before any literal is built.  Rank-0
+/// inputs use the `Scalar*` variants (XLA distinguishes a scalar from a
+/// one-element vector).
+pub enum HostInput<'a> {
+    F32 { data: &'a [f32], dims: &'a [usize] },
+    I32 { data: &'a [i32], dims: &'a [usize] },
+    U32 { data: &'a [u32], dims: &'a [usize] },
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl HostInput<'_> {
+    fn dtype(&self) -> DType {
+        match self {
+            HostInput::F32 { .. } | HostInput::ScalarF32(_) => DType::F32,
+            HostInput::I32 { .. } | HostInput::ScalarI32(_) => DType::I32,
+            HostInput::U32 { .. } => DType::U32,
+        }
+    }
+
+    fn dims(&self) -> &[usize] {
+        match self {
+            HostInput::F32 { dims, .. }
+            | HostInput::I32 { dims, .. }
+            | HostInput::U32 { dims, .. } => dims,
+            HostInput::ScalarF32(_) | HostInput::ScalarI32(_) => &[],
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            HostInput::F32 { data, .. } => data.len(),
+            HostInput::I32 { data, .. } => data.len(),
+            HostInput::U32 { data, .. } => data.len(),
+            HostInput::ScalarF32(_) | HostInput::ScalarI32(_) => 1,
+        }
+    }
+
+    fn is_scalar(&self) -> bool {
+        matches!(self, HostInput::ScalarF32(_) | HostInput::ScalarI32(_))
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        fn shaped(lit: xla::Literal, dims: &[usize]) -> Result<xla::Literal> {
+            if dims.len() <= 1 {
+                return Ok(lit); // vec1 already carries rank-1 shape
+            }
+            let shape: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&shape)?)
+        }
+        match self {
+            HostInput::F32 { data, dims } => shaped(xla::Literal::vec1(data), dims),
+            HostInput::I32 { data, dims } => shaped(xla::Literal::vec1(data), dims),
+            HostInput::U32 { data, dims } => shaped(xla::Literal::vec1(data), dims),
+            HostInput::ScalarF32(v) => Ok(xla::Literal::scalar(*v)),
+            HostInput::ScalarI32(v) => Ok(xla::Literal::scalar(*v)),
+        }
+    }
+}
+
+/// Manifest dtype names (`float32`, `int32`, …) for error messages.
+fn dtype_str(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "float32",
+        DType::I32 => "int32",
+        DType::U32 => "uint32",
+        DType::I64 => "int64",
+        DType::U64 => "uint64",
+    }
+}
+
+/// Manifest shape notation (`256x1024`, `scalar`) for error messages.
+fn dims_str(dims: &[usize]) -> String {
+    if dims.is_empty() {
+        return "scalar".to_string();
+    }
+    dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+}
+
+/// Validate a launch against the manifest spec — input count, per-input
+/// dtype, shape, and data length — so a geometry mismatch surfaces as a
+/// typed error naming the artifact, the offending input index, and
+/// expected-vs-got, instead of an opaque XLA error at launch time.
+pub(crate) fn validate_inputs(spec: &ArtifactSpec, inputs: &[HostInput<'_>]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        return Err(Error::Runtime(format!(
+            "{}: got {} inputs, artifact wants {}",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len()
+        )));
+    }
+    for (i, (got, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if got.dtype() != want.dtype {
+            return Err(Error::Runtime(format!(
+                "{}: input {i} dtype mismatch — artifact wants {} {}, got {} {}",
+                spec.name,
+                dtype_str(want.dtype),
+                dims_str(&want.shape),
+                dtype_str(got.dtype()),
+                dims_str(got.dims()),
+            )));
+        }
+        if want.shape.is_empty() && !got.is_scalar() {
+            return Err(Error::Runtime(format!(
+                "{}: input {i} is rank-0 — pass HostInput::ScalarF32/ScalarI32, \
+                 got {} {}",
+                spec.name,
+                dtype_str(got.dtype()),
+                dims_str(got.dims()),
+            )));
+        }
+        if got.dims() != want.shape.as_slice() {
+            return Err(Error::Runtime(format!(
+                "{}: input {i} shape mismatch — artifact wants {}, got {}",
+                spec.name,
+                dims_str(&want.shape),
+                dims_str(got.dims()),
+            )));
+        }
+        let want_len = want.elements();
+        if got.len() != want_len {
+            return Err(Error::Runtime(format!(
+                "{}: input {i} carries {} elements for shape {} ({} elements)",
+                spec.name,
+                got.len(),
+                dims_str(&want.shape),
+                want_len,
+            )));
+        }
+    }
+    Ok(())
+}
 
 /// A compiled artifact ready to execute.
 pub struct LoadedArtifact {
@@ -30,9 +183,22 @@ pub struct LoadedArtifact {
 }
 
 impl LoadedArtifact {
-    /// Execute with positional literal inputs; returns the flattened tuple
+    /// Validate `inputs` against the manifest spec ([`validate_inputs`]),
+    /// build the literals, and execute; returns the flattened tuple
     /// outputs (aot.py lowers with `return_tuple=True`).
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    pub fn execute(&self, inputs: &[HostInput<'_>]) -> Result<Vec<xla::Literal>> {
+        validate_inputs(&self.spec, inputs)?;
+        let lits = inputs
+            .iter()
+            .map(HostInput::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        self.execute_literals(&lits)
+    }
+
+    /// Execute pre-built positional literals (arity-checked only — the
+    /// typed geometry validation lives in [`execute`], which callers
+    /// should prefer).
+    pub fn execute_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         if inputs.len() != self.spec.inputs.len() {
             return Err(Error::Runtime(format!(
                 "{}: got {} inputs, artifact wants {}",
@@ -84,11 +250,6 @@ impl PjrtRuntime {
     }
 }
 
-fn lit_2d_i32(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), rows * cols);
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-}
-
 /// Batched minwise hashing through the PJRT `minhash_*` artifact — the
 /// paper's GPU-preprocessing path (Table 2, last column).
 pub struct MinhashEngine {
@@ -115,6 +276,27 @@ impl MinhashEngine {
             spec.konst("d_space")? as u64,
         );
         Ok(MinhashEngine { artifact, batch, nnz, k, d_space })
+    }
+
+    /// Execute one pre-padded `[batch, nnz]` launch: `idx`/`mask` are the
+    /// caller-owned padded slabs, `c1`/`c2` the family parameters.
+    /// Returns the full row-major `[batch, k]` minwise output.  This is
+    /// the device-encoder driver's entry point — the caller owns padding
+    /// and double-buffering, so upload overlaps compute.
+    pub fn minhash_padded(
+        &self,
+        idx: &[i32],
+        mask: &[i32],
+        c1: &[u32],
+        c2: &[u32],
+    ) -> Result<Vec<i32>> {
+        let outputs = self.artifact.execute(&[
+            HostInput::I32 { data: idx, dims: &[self.batch, self.nnz] },
+            HostInput::I32 { data: mask, dims: &[self.batch, self.nnz] },
+            HostInput::U32 { data: c1, dims: &[self.k] },
+            HostInput::U32 { data: c2, dims: &[self.k] },
+        ])?;
+        Ok(outputs[0].to_vec()?)
     }
 
     /// Minwise-hash up to `batch` sets with the family's parameters; rows
@@ -156,13 +338,7 @@ impl MinhashEngine {
             }
         }
         let (c1, c2) = family.param_arrays();
-        let outputs = self.artifact.execute(&[
-            lit_2d_i32(&idx, self.batch, self.nnz)?,
-            lit_2d_i32(&mask, self.batch, self.nnz)?,
-            xla::Literal::vec1(&c1),
-            xla::Literal::vec1(&c2),
-        ])?;
-        let z: Vec<i32> = outputs[0].to_vec()?;
+        let z = self.minhash_padded(&idx, &mask, &c1, &c2)?;
         Ok(z[..sets.len() * self.k].iter().map(|&v| v as u32).collect())
     }
 
@@ -293,6 +469,19 @@ impl VwEngine {
         })
     }
 
+    /// Execute one pre-padded `[batch, nnz]` launch with the hasher's
+    /// `(bin c1, bin c2, sign c1, sign c2)` parameters; returns the full
+    /// row-major `[batch, bins]` dense output.  Device-encoder driver
+    /// entry point, like [`MinhashEngine::minhash_padded`].
+    pub fn hash_padded(&self, idx: &[i32], mask: &[i32], params: [u32; 4]) -> Result<Vec<f32>> {
+        let outputs = self.artifact.execute(&[
+            HostInput::I32 { data: idx, dims: &[self.batch, self.nnz] },
+            HostInput::I32 { data: mask, dims: &[self.batch, self.nnz] },
+            HostInput::U32 { data: &params, dims: &[4] },
+        ])?;
+        Ok(outputs[0].to_vec()?)
+    }
+
     /// Returns row-major `[rows, bins]` hashed vectors.
     pub fn hash_batch(&self, sets: &[&[u32]], params: [u32; 4]) -> Result<Vec<f32>> {
         if sets.len() > self.batch {
@@ -314,12 +503,7 @@ impl VwEngine {
                 mask[base + c] = 1;
             }
         }
-        let outputs = self.artifact.execute(&[
-            lit_2d_i32(&idx, self.batch, self.nnz)?,
-            lit_2d_i32(&mask, self.batch, self.nnz)?,
-            xla::Literal::vec1(&params[..]),
-        ])?;
-        let v: Vec<f32> = outputs[0].to_vec()?;
+        let v = self.hash_padded(&idx, &mask, params)?;
         Ok(v[..sets.len() * self.bins].to_vec())
     }
 }
@@ -387,12 +571,12 @@ impl TrainEngine {
             y[r] = labels[src];
         }
         let outputs = self.train.execute(&[
-            xla::Literal::vec1(&self.w[..]),
-            lit_2d_i32(&c, self.chunk, self.k)?,
-            xla::Literal::vec1(&y),
-            xla::Literal::scalar(lr0),
-            xla::Literal::scalar(lambda),
-            xla::Literal::scalar(self.step),
+            HostInput::F32 { data: &self.w, dims: &[self.w.len()] },
+            HostInput::I32 { data: &c, dims: &[self.chunk, self.k] },
+            HostInput::F32 { data: &y, dims: &[self.chunk] },
+            HostInput::ScalarF32(lr0),
+            HostInput::ScalarF32(lambda),
+            HostInput::ScalarI32(self.step),
         ])?;
         self.w = outputs[0].to_vec()?;
         self.step = outputs[1].to_vec::<i32>()?[0];
@@ -411,8 +595,8 @@ impl TrainEngine {
             c[..take * self.k]
                 .copy_from_slice(&codes[i0 * self.k..(i0 + take) * self.k]);
             let outputs = self.predict.execute(&[
-                xla::Literal::vec1(&self.w[..]),
-                lit_2d_i32(&c, self.pred_n, self.k)?,
+                HostInput::F32 { data: &self.w, dims: &[self.w.len()] },
+                HostInput::I32 { data: &c, dims: &[self.pred_n, self.k] },
             ])?;
             let m: Vec<f32> = outputs[0].to_vec()?;
             out.extend_from_slice(&m[..take]);
@@ -428,5 +612,132 @@ impl TrainEngine {
     pub fn reset(&mut self) {
         self.w.fill(0.0);
         self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+    use std::path::PathBuf;
+
+    /// A hand-built spec: [2x3 int32, 4-vec uint32, scalar float32] —
+    /// validation is pure host-side logic, no PJRT client needed.
+    fn toy_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "toy".to_string(),
+            file: PathBuf::from("toy.hlo.txt"),
+            consts: BTreeMap::new(),
+            inputs: vec![
+                TensorSpec { dtype: DType::I32, shape: vec![2, 3] },
+                TensorSpec { dtype: DType::U32, shape: vec![4] },
+                TensorSpec { dtype: DType::F32, shape: Vec::new() },
+            ],
+            outputs: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn validate_accepts_matching_inputs() {
+        let spec = toy_spec();
+        let idx = [0i32; 6];
+        let params = [0u32; 4];
+        validate_inputs(
+            &spec,
+            &[
+                HostInput::I32 { data: &idx, dims: &[2, 3] },
+                HostInput::U32 { data: &params, dims: &[4] },
+                HostInput::ScalarF32(1.5),
+            ],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn validate_names_artifact_on_input_count_mismatch() {
+        let spec = toy_spec();
+        let err = validate_inputs(&spec, &[]).unwrap_err().to_string();
+        assert!(err.contains("toy"), "{err}");
+        assert!(err.contains("wants 3"), "{err}");
+    }
+
+    #[test]
+    fn validate_names_offending_input_on_dtype_mismatch() {
+        let spec = toy_spec();
+        let wrong = [0.0f32; 6];
+        let params = [0u32; 4];
+        let err = validate_inputs(
+            &spec,
+            &[
+                HostInput::F32 { data: &wrong, dims: &[2, 3] },
+                HostInput::U32 { data: &params, dims: &[4] },
+                HostInput::ScalarF32(0.0),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("toy"), "{err}");
+        assert!(err.contains("input 0"), "{err}");
+        assert!(err.contains("int32"), "{err}");
+        assert!(err.contains("float32"), "{err}");
+    }
+
+    #[test]
+    fn validate_reports_expected_vs_got_shape() {
+        let spec = toy_spec();
+        let idx = [0i32; 6];
+        let params = [0u32; 4];
+        let err = validate_inputs(
+            &spec,
+            &[
+                HostInput::I32 { data: &idx, dims: &[3, 2] },
+                HostInput::U32 { data: &params, dims: &[4] },
+                HostInput::ScalarF32(0.0),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("input 0"), "{err}");
+        assert!(err.contains("2x3"), "{err}");
+        assert!(err.contains("3x2"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_vector_where_scalar_expected() {
+        let spec = toy_spec();
+        let idx = [0i32; 6];
+        let params = [0u32; 4];
+        let one = [0.0f32; 1];
+        let err = validate_inputs(
+            &spec,
+            &[
+                HostInput::I32 { data: &idx, dims: &[2, 3] },
+                HostInput::U32 { data: &params, dims: &[4] },
+                HostInput::F32 { data: &one, dims: &[] },
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("input 2"), "{err}");
+        assert!(err.contains("Scalar"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_data_length_vs_dims_mismatch() {
+        let spec = toy_spec();
+        let short = [0i32; 5]; // dims say 2x3 = 6
+        let params = [0u32; 4];
+        let err = validate_inputs(
+            &spec,
+            &[
+                HostInput::I32 { data: &short, dims: &[2, 3] },
+                HostInput::U32 { data: &params, dims: &[4] },
+                HostInput::ScalarF32(0.0),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("input 0"), "{err}");
+        assert!(err.contains("5 elements"), "{err}");
     }
 }

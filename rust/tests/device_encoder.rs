@@ -1,0 +1,311 @@
+//! Device-encoder integration tests: `DeviceEncoder` (`--device xla`)
+//! must be bit-identical to the CPU `FeatureEncoder`s on every path —
+//! packed b-bit codes, sparse VW rows, and the on-disk cache — and must
+//! degrade to CPU hashing gracefully when no PJRT stack is available.
+//!
+//! Parity tests require `artifacts/` (run `make artifacts` first) and
+//! skip with a visible notice otherwise, so `cargo test` stays green in
+//! a fresh checkout.  The fallback tests run everywhere by design.
+
+use std::path::{Path, PathBuf};
+
+use bbit_mh::coordinator::{CacheSink, Pipeline, PipelineConfig};
+use bbit_mh::data::gen::{CorpusConfig, CorpusGenerator};
+use bbit_mh::data::libsvm::{parse_block, BlockReader, LibsvmWriter, ParsedChunk};
+use bbit_mh::encode::{DeviceEncoder, EncodedChunk, EncoderSpec, FeatureEncoder};
+use bbit_mh::util::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Build a device encoder for `spec`, or `None` (with a visible skip
+/// notice) when the PJRT stack / matching artifact is unavailable.
+fn device_encoder(spec: &EncoderSpec) -> Option<DeviceEncoder> {
+    let enc = DeviceEncoder::new(spec, &artifacts_dir()).unwrap();
+    if enc.device_active() {
+        Some(enc)
+    } else {
+        eprintln!(
+            "skipping device-parity test ({} has no live PJRT artifact)",
+            spec.scheme()
+        );
+        None
+    }
+}
+
+macro_rules! require_device {
+    ($spec:expr) => {
+        match device_encoder($spec) {
+            Some(enc) => enc,
+            None => return,
+        }
+    };
+}
+
+const BBIT_SPEC: EncoderSpec = EncoderSpec::Bbit { b: 8, k: 200, d: 1 << 30, seed: 7 };
+const VW_SPEC: EncoderSpec = EncoderSpec::Vw { bins: 1024, seed: 9 };
+
+/// LibSVM text with deliberately awkward geometry: `n` ordinary rows
+/// (so ~n+3 total — not a multiple of any compiled batch), plus an empty
+/// row, a max-index row (`d−1`), and an oversize row larger than any
+/// compiled nnz so the per-row CPU-twin path runs mid-chunk.
+fn awkward_text(n: usize, d: u64, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let mut text = String::new();
+    let mut push_row = |text: &mut String, label: &str, set: &[u64]| {
+        text.push_str(label);
+        for &t in set {
+            text.push_str(&format!(" {t}:1"));
+        }
+        text.push('\n');
+    };
+    for i in 0..n {
+        let len = 1 + rng.below_usize(60);
+        let mut set = rng.sample_distinct(d, len);
+        set.sort_unstable();
+        push_row(&mut text, if i % 2 == 0 { "+1" } else { "-1" }, &set);
+        if i == n / 3 {
+            // empty document: the kernel's all-masked sentinel row
+            text.push_str("-1\n");
+        }
+        if i == n / 2 {
+            // top of the feature space, and an oversize row (> any
+            // compiled nnz) that must take the CPU-twin slot path
+            push_row(&mut text, "+1", &[d - 2, d - 1]);
+            let mut big = rng.sample_distinct(d, 2500);
+            big.sort_unstable();
+            push_row(&mut text, "-1", &big);
+        }
+    }
+    text
+}
+
+fn parsed(text: &str) -> ParsedChunk {
+    let mut chunk = ParsedChunk::default();
+    parse_block(text.as_bytes(), 1, true, &mut chunk).unwrap();
+    chunk
+}
+
+#[test]
+fn bbit_device_codes_match_cpu_across_awkward_geometry() {
+    let enc = require_device!(&BBIT_SPEC);
+    let cpu = BBIT_SPEC.encoder().unwrap();
+    // 300-ish rows: crosses the compiled batch boundary with a remainder
+    let chunk = parsed(&awkward_text(300, 1 << 30, 0xA3));
+    let dev_out = enc.encode_parsed(&chunk).unwrap();
+    let cpu_out = cpu.encode_parsed(&chunk).unwrap();
+    match (dev_out, cpu_out) {
+        (
+            EncodedChunk::Packed { codes: dc, labels: dl },
+            EncodedChunk::Packed { codes: cc, labels: cl },
+        ) => {
+            assert_eq!(dl, cl);
+            assert_eq!(dc.n, cc.n);
+            assert_eq!(dc.n, chunk.len());
+            for i in 0..dc.n {
+                assert_eq!(dc.row(i), cc.row(i), "packed codes disagree at row {i}");
+            }
+        }
+        _ => panic!("bbit must encode to packed chunks on both paths"),
+    }
+    let stats = enc.device_stats().unwrap();
+    assert_eq!(stats.device_chunks, 1);
+    assert_eq!(stats.device_fallbacks, 0);
+}
+
+#[test]
+fn vw_device_rows_match_cpu_across_awkward_geometry() {
+    let enc = require_device!(&VW_SPEC);
+    let cpu = VW_SPEC.encoder().unwrap();
+    let chunk = parsed(&awkward_text(300, 1 << 30, 0xB4));
+    let dev_out = enc.encode_parsed(&chunk).unwrap();
+    let cpu_out = cpu.encode_parsed(&chunk).unwrap();
+    match (dev_out, cpu_out) {
+        (EncodedChunk::Sparse { rows: dr }, EncodedChunk::Sparse { rows: cr }) => {
+            assert_eq!(dr.len(), chunk.len());
+            // exact f32 equality: the ±1 bin sums are exact on both paths
+            assert_eq!(dr, cr);
+        }
+        _ => panic!("vw must encode to sparse chunks on both paths"),
+    }
+}
+
+#[test]
+fn empty_chunk_is_fine_on_the_device_path() {
+    let enc = require_device!(&BBIT_SPEC);
+    let chunk = ParsedChunk::default();
+    match enc.encode_parsed(&chunk).unwrap() {
+        EncodedChunk::Packed { codes, labels } => {
+            assert_eq!(codes.n, 0);
+            assert!(labels.is_empty());
+        }
+        _ => panic!("bbit encodes packed"),
+    }
+}
+
+/// Write an awkward corpus to a LibSVM temp file; returns its path.
+fn corpus_file(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("bbmh_device_enc_{tag}_{}.svm", std::process::id()));
+    std::fs::write(&path, awkward_text(900, 1 << 30, 0xC5)).unwrap();
+    path
+}
+
+#[test]
+fn device_pipeline_cache_is_byte_identical_to_cpu_cache() {
+    let enc = require_device!(&BBIT_SPEC);
+    let input = corpus_file("cache");
+    let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 256, queue_depth: 4 });
+    let tmp = std::env::temp_dir();
+    let cpu_cache = tmp.join(format!("bbmh_device_enc_cpu_{}.cache", std::process::id()));
+    let dev_cache = tmp.join(format!("bbmh_device_enc_dev_{}.cache", std::process::id()));
+
+    let mut sink = CacheSink::create(&cpu_cache, &BBIT_SPEC).unwrap();
+    pipe.run_sink_blocks(BlockReader::open(&input).unwrap(), true, &BBIT_SPEC, &mut sink)
+        .unwrap();
+    let mut sink = CacheSink::create(&dev_cache, &BBIT_SPEC).unwrap();
+    let report = pipe
+        .run_encoder_blocks(BlockReader::open(&input).unwrap(), true, &enc, &mut sink)
+        .unwrap();
+    assert!(report.device_chunks > 0, "device path must have run");
+    assert_eq!(report.device_fallbacks, 0);
+    assert!(report.encode_device_seconds > 0.0);
+
+    let cpu_bytes = std::fs::read(&cpu_cache).unwrap();
+    let dev_bytes = std::fs::read(&dev_cache).unwrap();
+    assert_eq!(cpu_bytes, dev_bytes, "device cache must be byte-identical to CPU cache");
+
+    std::fs::remove_file(&input).ok();
+    std::fs::remove_file(&cpu_cache).ok();
+    std::fs::remove_file(&dev_cache).ok();
+}
+
+/// End-to-end CLI check: `preprocess --device xla --cache-out` writes the
+/// same bytes as the CPU run.  With a live PJRT stack this pins the
+/// device path; without one it pins the other acceptance requirement —
+/// `--device xla` falls back to CPU *without erroring* — so it runs
+/// everywhere.
+#[test]
+fn preprocess_cli_device_flag_matches_cpu_cache_or_falls_back() {
+    let tmp = std::env::temp_dir();
+    let input = tmp.join(format!("bbmh_device_cli_{}.svm", std::process::id()));
+    {
+        let corpus = CorpusGenerator::new(CorpusConfig {
+            n_docs: 400,
+            vocab: 2000,
+            zipf_alpha: 1.05,
+            mean_tokens: 25.0,
+            class_signal: 0.5,
+            pos_fraction: 0.5,
+            seed: 0xD6,
+        })
+        .generate();
+        let mut w = LibsvmWriter::new(std::fs::File::create(&input).unwrap());
+        w.write_dataset(&corpus).unwrap();
+        w.finish().unwrap();
+    }
+    let cpu_cache = tmp.join(format!("bbmh_device_cli_cpu_{}.cache", std::process::id()));
+    let dev_cache = tmp.join(format!("bbmh_device_cli_dev_{}.cache", std::process::id()));
+    let run = |device: &[&str], out: &Path| {
+        let st = std::process::Command::new(env!("CARGO_BIN_EXE_bbit-mh"))
+            .args([
+                "preprocess",
+                "--input",
+                input.to_str().unwrap(),
+                "--cache-out",
+                out.to_str().unwrap(),
+                "--encoder",
+                "bbit",
+                "--k",
+                "200",
+                "--seed",
+                "11",
+                "--workers",
+                "2",
+            ])
+            .args(device)
+            .status()
+            .unwrap();
+        assert!(st.success(), "preprocess {device:?} must not error");
+    };
+    run(&[], &cpu_cache);
+    let art = artifacts_dir();
+    run(&["--device", "xla", "--artifacts", art.to_str().unwrap()], &dev_cache);
+    assert_eq!(
+        std::fs::read(&cpu_cache).unwrap(),
+        std::fs::read(&dev_cache).unwrap(),
+        "--device xla cache must be byte-identical to the CPU cache"
+    );
+    std::fs::remove_file(&input).ok();
+    std::fs::remove_file(&cpu_cache).ok();
+    std::fs::remove_file(&dev_cache).ok();
+}
+
+// ---- fallback paths: these must pass with or without a PJRT stack ----
+
+#[test]
+fn missing_artifacts_dir_falls_back_to_cpu() {
+    let dir = Path::new("/definitely/not/an/artifacts/dir");
+    let enc = DeviceEncoder::new(&BBIT_SPEC, dir).unwrap();
+    assert!(!enc.device_active());
+    assert!(enc.batch_geometry().is_none());
+    let chunk = parsed(&awkward_text(40, 1 << 30, 0xE7));
+    let cpu = BBIT_SPEC.encoder().unwrap();
+    let (dev_out, cpu_out) =
+        (enc.encode_parsed(&chunk).unwrap(), cpu.encode_parsed(&chunk).unwrap());
+    match (dev_out, cpu_out) {
+        (
+            EncodedChunk::Packed { codes: dc, labels: dl },
+            EncodedChunk::Packed { codes: cc, labels: cl },
+        ) => {
+            assert_eq!(dl, cl);
+            for i in 0..dc.n {
+                assert_eq!(dc.row(i), cc.row(i), "fallback differs at row {i}");
+            }
+        }
+        _ => panic!("fallback must still pack codes"),
+    }
+    let stats = enc.device_stats().unwrap();
+    assert_eq!(stats.device_chunks, 0);
+    assert_eq!(stats.device_fallbacks, 1, "the chunk must be counted as a fallback");
+}
+
+#[test]
+fn scheme_without_device_kernel_falls_back_to_cpu() {
+    // rp/oph have no AOT kernel — the encoder must say so and run on CPU,
+    // even when the artifacts dir is real
+    for spec in [
+        EncoderSpec::Rp { proj: 64, s: 1.0, seed: 3 },
+        EncoderSpec::Oph { bins: 256, b: 8, seed: 3 },
+    ] {
+        let enc = DeviceEncoder::new(&spec, &artifacts_dir()).unwrap();
+        assert!(!enc.device_active(), "{} must not claim a device", spec.scheme());
+        let chunk = parsed(&awkward_text(20, 1 << 20, 0xF8));
+        let cpu = spec.encoder().unwrap();
+        let dev_out = enc.encode_parsed(&chunk).unwrap();
+        let cpu_out = cpu.encode_parsed(&chunk).unwrap();
+        match (dev_out, cpu_out) {
+            (EncodedChunk::Sparse { rows: a }, EncodedChunk::Sparse { rows: b }) => {
+                assert_eq!(a, b)
+            }
+            (
+                EncodedChunk::Packed { codes: a, labels: la },
+                EncodedChunk::Packed { codes: b, labels: lb },
+            ) => {
+                assert_eq!(la, lb);
+                for i in 0..a.n {
+                    assert_eq!(a.row(i), b.row(i));
+                }
+            }
+            _ => panic!("fallback output kind must match the CPU encoder"),
+        }
+    }
+}
+
+#[test]
+fn invalid_spec_is_still_an_error() {
+    // device fallback must not swallow spec validation
+    let bad = EncoderSpec::Bbit { b: 99, k: 200, d: 1 << 30, seed: 1 };
+    assert!(DeviceEncoder::new(&bad, &artifacts_dir()).is_err());
+}

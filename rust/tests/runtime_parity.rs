@@ -120,6 +120,22 @@ fn vw_artifact_matches_native_hasher() {
     }
 }
 
+#[test]
+fn execute_validates_input_geometry_before_launch() {
+    // a geometry mismatch must surface as a typed runtime error naming
+    // the artifact and the offending input — not an opaque XLA failure
+    let rt = &require_rt!();
+    let engine = MinhashEngine::new(rt, "minhash_k200").unwrap();
+    let cap = engine.batch * engine.nnz;
+    let idx = vec![0i32; cap - 1]; // one element short of [batch, nnz]
+    let mask = vec![0i32; cap];
+    let mut rng = Rng::new(1);
+    let (c1, c2) = UniversalFamily::draw(engine.k, engine.d_space, &mut rng).param_arrays();
+    let err = engine.minhash_padded(&idx, &mask, &c1, &c2).unwrap_err().to_string();
+    assert!(err.contains("minhash_k200"), "must name the artifact: {err}");
+    assert!(err.contains("input 0"), "must name the offending input: {err}");
+}
+
 /// Build a small correlated code dataset shared by the train parity tests.
 fn code_data(
     n: usize,
