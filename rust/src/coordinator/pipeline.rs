@@ -64,7 +64,9 @@ use std::time::Instant;
 
 use crate::coordinator::sink::{CollectSink, PipelineSink};
 use crate::data::dataset::{Example, SparseDataset};
-use crate::data::libsvm::{parse_block, BlockReader, ParsedChunk, RawBlock};
+use crate::data::libsvm::{
+    parse_block, parse_block_lossy, BadLine, BlockReader, ParsedChunk, RawBlock,
+};
 use crate::encode::encoder::{EncodedChunk, EncoderSpec, FeatureEncoder};
 use crate::encode::expansion::BbitDataset;
 use crate::metrics::trace::{self, TraceCtx};
@@ -205,6 +207,10 @@ pub struct PipelineReport {
     /// equals total chunks when a [`DeviceEncoder`](crate::encode::DeviceEncoder)
     /// drove the run.
     pub device_fallbacks: u64,
+    /// Malformed input lines skipped under `--on-error skip`
+    /// ([`IngestOptions::skip_errors`]) — 0 on the default fail-fast path,
+    /// where the first bad line aborts the run instead.
+    pub parse_errors: u64,
 }
 
 impl PipelineReport {
@@ -247,8 +253,8 @@ impl PipelineReport {
              \"wall_seconds\":{:.6},\"backpressure_stalls\":{},\"reorder_peak\":{},\
              \"per_worker_chunks\":[{}],\"replay_threads\":{},\"replay_bytes\":{},\
              \"input_bytes\":{},\"encode_device_seconds\":{:.6},\"device_chunks\":{},\
-             \"device_fallbacks\":{},\"rows_per_sec\":{:.1},\"parse_rows_per_sec\":{:.1},\
-             \"ingest_mb_per_sec\":{:.3}}}",
+             \"device_fallbacks\":{},\"parse_errors\":{},\"rows_per_sec\":{:.1},\
+             \"parse_rows_per_sec\":{:.1},\"ingest_mb_per_sec\":{:.3}}}",
             self.docs,
             self.chunks,
             self.read_seconds,
@@ -266,6 +272,7 @@ impl PipelineReport {
             self.encode_device_seconds,
             self.device_chunks,
             self.device_fallbacks,
+            self.parse_errors,
             self.rows_per_sec(),
             self.parse_rows_per_sec(),
             self.ingest_mb_per_sec(),
@@ -282,6 +289,25 @@ fn fold_device_stats(report: &mut PipelineReport, encoder: &dyn FeatureEncoder) 
         report.device_chunks = ds.device_chunks;
         report.device_fallbacks = ds.device_fallbacks;
     }
+}
+
+/// Ingest policy for the block pipeline
+/// ([`run_encoder_blocks_opts`](Pipeline::run_encoder_blocks_opts)):
+/// what to do with malformed LibSVM lines.
+///
+/// Default is fail-fast (the first bad line aborts the run with its line
+/// number, exactly as before).  With `skip_errors` the parse continues
+/// past bad lines: each one is counted in
+/// [`PipelineReport::parse_errors`] and handed — in input order, on the
+/// collector thread — to `on_bad_line`, which is where `preprocess
+/// --quarantine FILE` appends the raw bytes for later inspection.
+#[derive(Default)]
+pub struct IngestOptions<'a> {
+    /// Continue past malformed lines instead of failing the run.
+    pub skip_errors: bool,
+    /// In-order receiver for skipped lines (ignored unless
+    /// `skip_errors`); an error here aborts the run.
+    pub on_bad_line: Option<&'a mut dyn FnMut(&BadLine) -> Result<()>>,
 }
 
 /// The streaming orchestrator.
@@ -717,7 +743,8 @@ impl Pipeline {
     /// default `preprocess`/`train --stream` ingest path.  Workers parse
     /// *and* encode ([`FeatureEncoder::encode_parsed`]); empty blocks
     /// (all comments/blanks) are skipped rather than written as zero-row
-    /// sink chunks.
+    /// sink chunks, but still advance the sink's
+    /// [`mark_progress`](PipelineSink::mark_progress) cursor.
     pub fn run_encoder_blocks<R, S>(
         &self,
         blocks: BlockReader<R>,
@@ -729,22 +756,104 @@ impl Pipeline {
         R: std::io::Read + Send,
         S: PipelineSink,
     {
-        let mut report = self.run_blocks_each(
+        self.run_encoder_blocks_opts(blocks, binary, encoder, sink, IngestOptions::default())
+    }
+
+    /// [`run_encoder_blocks`](Self::run_encoder_blocks) with ingest
+    /// policy: error skipping/quarantine ([`IngestOptions`]) and per-block
+    /// input-progress notification.  After every block's rows reach the
+    /// sink — in block order, including blocks that produced no rows —
+    /// the sink's [`mark_progress`](PipelineSink::mark_progress) receives
+    /// the raw-input byte offset and line number ingest would restart
+    /// from, which is what lets a durable [`CacheSink`] journal a resume
+    /// point that is always consistent with the records it has consumed.
+    pub fn run_encoder_blocks_opts<R, S>(
+        &self,
+        mut blocks: BlockReader<R>,
+        binary: bool,
+        encoder: &dyn FeatureEncoder,
+        sink: &mut S,
+        mut ingest: IngestOptions<'_>,
+    ) -> Result<PipelineReport>
+    where
+        R: std::io::Read + Send,
+        S: PipelineSink,
+    {
+        let (pool_tx, pool_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+        blocks.set_recycle(pool_rx);
+        let mut root = trace::Span::enter("pipeline.run");
+        let rctx = root.ctx();
+        let mut docs = 0usize;
+        let mut parse_cpu = 0.0f64;
+        let mut parse_errors = 0u64;
+        let skip = ingest.skip_errors;
+        let mut report = self.run_core(
             blocks,
-            binary,
-            |parsed, _wid| encoder.encode_parsed(parsed),
-            |_, chunk: EncodedChunk| {
-                if chunk.is_empty() {
-                    Ok(())
+            rctx,
+            |b: &RawBlock| (0, b.bytes.len() as u64),
+            || (ParsedChunk::default(), pool_tx.clone()),
+            |block: RawBlock, (parsed, recycle), wid| {
+                parsed.clear();
+                let mut bad = Vec::new();
+                let t0 = Instant::now();
+                if skip {
+                    parse_block_lossy(&block.bytes, block.first_line, binary, parsed, &mut bad);
                 } else {
-                    sink.consume(chunk)
+                    parse_block(&block.bytes, block.first_line, binary, parsed)?;
                 }
+                let t1 = Instant::now();
+                let parse_secs = (t1 - t0).as_secs_f64();
+                trace::emit_span(
+                    "pipeline.parse",
+                    rctx,
+                    t0,
+                    t1,
+                    &[("worker", wid as f64), ("rows", parsed.len() as f64)],
+                );
+                let _ = recycle.send(block.bytes);
+                let mut span = trace::Span::child("pipeline.encode", rctx);
+                span.record("worker", wid as f64);
+                span.record("rows", parsed.len() as f64);
+                let out = encoder.encode_parsed(parsed)?;
+                span.record(
+                    "device",
+                    if crate::encode::encoder::take_encode_used_device() { 1.0 } else { 0.0 },
+                );
+                drop(span);
+                Ok((out, parsed.len(), parse_secs, block.end_offset, block.next_line, bad))
+            },
+            |_, (chunk, n, parse_secs, end_offset, next_line, bad): (
+                EncodedChunk,
+                usize,
+                f64,
+                u64,
+                usize,
+                Vec<BadLine>,
+            )| {
+                docs += n;
+                parse_cpu += parse_secs;
+                parse_errors += bad.len() as u64;
+                if let Some(cb) = ingest.on_bad_line.as_mut() {
+                    for b in &bad {
+                        cb(b)?;
+                    }
+                }
+                if !chunk.is_empty() {
+                    sink.consume(chunk)?;
+                }
+                sink.mark_progress(end_offset, next_line as u64)
             },
         )?;
+        report.docs = docs;
+        report.parse_cpu_seconds = parse_cpu;
+        report.parse_errors = parse_errors;
+        report.hash_cpu_seconds = (report.hash_cpu_seconds - parse_cpu).max(0.0);
         let t0 = Instant::now();
         sink.finish()?;
         report.sink_seconds += t0.elapsed().as_secs_f64();
         fold_device_stats(&mut report, encoder);
+        root.record("docs", report.docs as f64);
+        root.record("chunks", report.chunks as f64);
         Ok(report)
     }
 
@@ -1129,12 +1238,97 @@ mod tests {
             "encode_device_seconds",
             "device_chunks",
             "device_fallbacks",
+            "parse_errors",
             "rows_per_sec",
             "parse_rows_per_sec",
             "ingest_mb_per_sec",
         ] {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
         }
+    }
+
+    #[test]
+    fn skip_mode_quarantines_bad_lines_and_counts_them() {
+        // the same 3-bad-lines corpus that fail-fast aborts on (test
+        // above): with skip_errors the run completes, every good row is
+        // encoded, and the bad lines arrive at the quarantine callback in
+        // input order with their original bytes
+        let mut text = String::new();
+        for i in 0..60 {
+            if i == 17 || i == 40 || i == 55 {
+                text.push_str("broken record\n");
+            } else {
+                text.push_str(&format!("+1 {}:1\n", i + 1));
+            }
+        }
+        let spec = EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 16, seed: 1 };
+        let encoder = spec.encoder().unwrap();
+        let pipe = Pipeline::new(PipelineConfig { workers: 4, chunk_size: 4, queue_depth: 2 });
+        for _ in 0..3 {
+            let mut sink = CollectSink::for_spec(&spec).unwrap();
+            let mut bad = Vec::new();
+            let mut on_bad = |b: &BadLine| {
+                bad.push((b.line, b.bytes.clone()));
+                Ok(())
+            };
+            let blocks = BlockReader::new(text.as_bytes()).with_block_bytes(8);
+            let report = pipe
+                .run_encoder_blocks_opts(
+                    blocks,
+                    true,
+                    encoder.as_ref(),
+                    &mut sink,
+                    IngestOptions { skip_errors: true, on_bad_line: Some(&mut on_bad) },
+                )
+                .unwrap();
+            assert_eq!(report.docs, 57);
+            assert_eq!(report.parse_errors, 3);
+            assert!(report.to_json().contains("\"parse_errors\":3"));
+            assert_eq!(
+                bad.iter().map(|(l, _)| *l).collect::<Vec<_>>(),
+                vec![18, 41, 56],
+                "quarantine order must be input order"
+            );
+            assert!(bad.iter().all(|(_, b)| b == b"broken record"));
+            let out = sink.into_output().into_packed().unwrap();
+            assert_eq!(out.len(), 57);
+        }
+    }
+
+    #[test]
+    fn mark_progress_fires_in_order_for_every_block() {
+        struct ProgressSink {
+            rows: usize,
+            marks: Vec<(u64, u64)>,
+        }
+        impl crate::coordinator::sink::PipelineSink for ProgressSink {
+            fn consume(&mut self, chunk: EncodedChunk) -> Result<()> {
+                self.rows += chunk.len();
+                Ok(())
+            }
+            fn mark_progress(&mut self, off: u64, line: u64) -> Result<()> {
+                self.marks.push((off, line));
+                Ok(())
+            }
+        }
+        // comment/blank lines force empty blocks: those must still mark
+        // progress (a durable cache journals the input cursor off this)
+        let text = b"# c\n\n+1 1:1\n-1 2:1\n# d\n+1 3:1\n";
+        let pipe = Pipeline::new(PipelineConfig { workers: 3, chunk_size: 8, queue_depth: 2 });
+        let spec = EncoderSpec::Bbit { b: 4, k: 8, d: 1 << 16, seed: 1 };
+        let mut sink = ProgressSink { rows: 0, marks: Vec::new() };
+        let blocks = BlockReader::new(&text[..]).with_block_bytes(4);
+        let report = pipe.run_sink_blocks(blocks, true, &spec, &mut sink).unwrap();
+        assert_eq!(sink.rows, 3);
+        assert_eq!(sink.marks.len(), report.chunks, "every block marks progress");
+        assert!(
+            sink.marks.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 <= w[1].1),
+            "marks must advance monotonically: {:?}",
+            sink.marks
+        );
+        let last = sink.marks.last().unwrap();
+        assert_eq!(last.0, text.len() as u64);
+        assert_eq!(last.1, 7, "6 input lines consumed, cursor on line 7");
     }
 
     #[test]

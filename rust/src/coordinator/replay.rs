@@ -35,7 +35,7 @@
 //! paranoia twin of [`ChunkIndex::load`] returning `Ok(None)`.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -68,6 +68,18 @@ where
     replay_cache_with(path, index.as_ref(), threads, emit)
 }
 
+/// Process-wide count of replays that wanted the pooled reader but had to
+/// fall back to the sequential scan (pre-v3 cache or damaged footer).
+/// The stderr warning in [`load_index_or_warn`] is easy to lose in fleet
+/// logs; this counter is rendered as `replay_index_fallback_total` on the
+/// serve tier's `/metrics` so a degraded cache shows up on a dashboard.
+static INDEX_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Read the [`INDEX_FALLBACKS`] counter (monotonic since process start).
+pub fn index_fallbacks() -> u64 {
+    INDEX_FALLBACKS.load(Ordering::Relaxed)
+}
+
 /// Load a cache's chunk index for pooled replay, downgrading "no usable
 /// index" to `None` with the standard one-line warning.  Callers that
 /// replay the same cache repeatedly (multi-epoch training) load once and
@@ -77,6 +89,7 @@ pub fn load_index_or_warn(path: &Path) -> Result<Option<ChunkIndex>> {
     match ChunkIndex::load(path)? {
         Some(index) => Ok(Some(index)),
         None => {
+            INDEX_FALLBACKS.fetch_add(1, Ordering::Relaxed);
             eprintln!(
                 "warning: cache {} has no chunk index (pre-v3 file or damaged footer); \
                  replaying on one thread",
@@ -100,19 +113,27 @@ where
 {
     let mut report = match index {
         Some(index) if threads > 1 => replay_pool(path, index, threads, emit)?,
-        _ => replay_sequential(path, emit)?,
+        // threads > 1 without an index means the pooled reader was
+        // requested but degraded — flag it on the replay.run span
+        _ => replay_sequential(path, threads > 1, emit)?,
     };
     report.replay_bytes = std::fs::metadata(path)?.len();
     Ok(report)
 }
 
 /// The single-threaded scan: one reader, one pair of scratch buffers.
-fn replay_sequential<F>(path: &Path, mut emit: F) -> Result<PipelineReport>
+/// `index_fallback` marks a scan that was *meant* to be pooled (threads
+/// requested, no usable index) — recorded on the `replay.run` span so a
+/// trace-side degradation is visible next to the `/metrics` counter.
+fn replay_sequential<F>(path: &Path, index_fallback: bool, mut emit: F) -> Result<PipelineReport>
 where
     F: FnMut(usize, u64, &PackedCodes, &[i8]) -> Result<()>,
 {
     let wall0 = Instant::now();
     let mut root = trace::Span::enter("replay.run");
+    if index_fallback {
+        root.record("index_fallback", 1.0);
+    }
     let rctx = root.ctx();
     let mut reader = CacheReader::open(path)?;
     let meta = reader.meta();
@@ -456,9 +477,11 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
         let (seq, _) = collect_replay(&path, 1);
+        let before = index_fallbacks();
         let (par, report) = collect_replay(&path, 4);
         assert_eq!(par, seq, "fallback must replay the identical stream");
         assert_eq!(report.replay_threads, 1, "fallback runs sequentially");
+        assert!(index_fallbacks() > before, "fallback must bump the process counter");
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 

@@ -48,6 +48,17 @@ pub trait PipelineSink {
     fn finish(&mut self) -> Result<()> {
         Ok(())
     }
+
+    /// Input-progress notification from the block pipeline: every raw
+    /// block — including blocks that produced no rows — reports, in block
+    /// order and after its rows reached [`consume`](Self::consume), the
+    /// input byte offset and 1-based line number ingest would restart
+    /// from.  Most sinks ignore it; a durable [`CacheSink`] journals it
+    /// so `preprocess --resume` can restart a killed run from the last
+    /// consistent (cache prefix, input cursor) pair.
+    fn mark_progress(&mut self, _input_offset: u64, _next_line: u64) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// In-memory accumulation — preserves the original `Pipeline::run`
@@ -128,6 +139,34 @@ impl CacheSink<BufWriter<File>> {
     ) -> Result<Self> {
         Ok(CacheSink { writer: CacheWriter::create_opts(path, spec, opts)? })
     }
+
+    /// Crash-safe [`create_opts`](Self::create_opts): writes to
+    /// `<path>.tmp` beside a resume journal, fsyncs every `sync_chunks`
+    /// progress marks, and atomically renames onto `path` in `finish` —
+    /// so `path` only ever names a complete, finalized cache.
+    pub fn create_durable<P: AsRef<Path>>(
+        path: P,
+        spec: &EncoderSpec,
+        opts: crate::encode::cache::CacheWriteOptions,
+        sync_chunks: usize,
+    ) -> Result<Self> {
+        Ok(CacheSink { writer: CacheWriter::create_durable(path, spec, opts, sync_chunks)? })
+    }
+
+    /// Resume a durable write that died before `finish`: validates the
+    /// partial `<path>.tmp` against its journal, truncates any torn
+    /// tail, and returns the reopened sink plus the input cursor
+    /// (`ResumePoint`) ingest must restart from.  `Ok(None)` when there
+    /// is nothing to resume (no partial output on disk).
+    pub fn resume_durable<P: AsRef<Path>>(
+        path: P,
+        spec: &EncoderSpec,
+        opts: crate::encode::cache::CacheWriteOptions,
+        sync_chunks: usize,
+    ) -> Result<Option<(Self, crate::encode::cache::ResumePoint)>> {
+        Ok(CacheWriter::resume_durable(path, spec, opts, sync_chunks)?
+            .map(|(writer, point)| (CacheSink { writer }, point)))
+    }
 }
 
 impl<W: Write + Seek> CacheSink<W> {
@@ -159,6 +198,10 @@ impl<W: Write + Seek> PipelineSink for CacheSink<W> {
 
     fn finish(&mut self) -> Result<()> {
         self.writer.finalize()
+    }
+
+    fn mark_progress(&mut self, input_offset: u64, next_line: u64) -> Result<()> {
+        self.writer.mark_progress(input_offset, next_line)
     }
 }
 

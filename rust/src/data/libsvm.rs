@@ -199,11 +199,17 @@ pub const DEFAULT_BLOCK_BYTES: usize = 256 << 10;
 /// `bytes` holds only complete lines (the final block of a file may lack
 /// its trailing newline); `first_line` is the 1-based file line number of
 /// the first line, so workers parsing blocks out of band still report
-/// exact error locations.
+/// exact error locations.  `end_offset`/`next_line` are the input cursor
+/// *after* this block — what `preprocess --resume` journals so a restarted
+/// run can re-carve the identical block stream from mid-file.
 #[derive(Debug)]
 pub struct RawBlock {
     pub bytes: Vec<u8>,
     pub first_line: usize,
+    /// Input byte offset one past this block's last byte.
+    pub end_offset: u64,
+    /// 1-based line number of the first line after this block.
+    pub next_line: usize,
 }
 
 /// Carves a byte stream into newline-aligned [`RawBlock`]s — the reader
@@ -220,6 +226,9 @@ pub struct BlockReader<R: Read> {
     carry: Vec<u8>,
     /// 1-based line number of the first line of the next block.
     next_line: usize,
+    /// Input byte offset of the first byte of the next block (cumulative
+    /// bytes emitted; starts at the resume offset for mid-file readers).
+    offset: u64,
     eof: bool,
     done: bool,
     recycle: Option<Receiver<Vec<u8>>>,
@@ -228,6 +237,22 @@ pub struct BlockReader<R: Read> {
 impl BlockReader<File> {
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
         Ok(BlockReader::new(File::open(path)?))
+    }
+
+    /// Open mid-file for `preprocess --resume`: carving starts at byte
+    /// `offset` (which must sit on a line boundary — the resume journal
+    /// only records block edges, and blocks end at newlines), with line
+    /// numbering continuing from `first_line`.  Because blocks are carved
+    /// greedily and contiguously, the stream from here is identical to the
+    /// tail of a full-file read that crossed `offset` at a block edge.
+    pub fn open_at<P: AsRef<Path>>(path: P, offset: u64, first_line: usize) -> Result<Self> {
+        use std::io::Seek;
+        let mut f = File::open(path)?;
+        f.seek(std::io::SeekFrom::Start(offset))?;
+        let mut r = BlockReader::new(f);
+        r.offset = offset;
+        r.next_line = first_line.max(1);
+        Ok(r)
     }
 }
 
@@ -238,6 +263,7 @@ impl<R: Read> BlockReader<R> {
             block_bytes: DEFAULT_BLOCK_BYTES,
             carry: Vec::new(),
             next_line: 1,
+            offset: 0,
             eof: false,
             done: false,
             recycle: None,
@@ -338,7 +364,13 @@ impl<R: Read> Iterator for BlockReader<R> {
         }
         let first_line = self.next_line;
         self.next_line += buf.iter().filter(|&&b| b == b'\n').count();
-        Some(Ok(RawBlock { bytes: buf, first_line }))
+        self.offset += buf.len() as u64;
+        Some(Ok(RawBlock {
+            bytes: buf,
+            first_line,
+            end_offset: self.offset,
+            next_line: self.next_line,
+        }))
     }
 }
 
@@ -443,6 +475,41 @@ pub fn parse_block(
         parse_line_into(line, first_line + off, binary, out)?;
     }
     Ok(())
+}
+
+/// A malformed input line captured by the skip-on-error ingest policy
+/// (`--on-error skip`): the 1-based file line number, the raw bytes as
+/// they appeared in the input, and what was wrong with them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BadLine {
+    pub line: usize,
+    pub bytes: Vec<u8>,
+    pub msg: String,
+}
+
+/// [`parse_block`] with the skip-on-error policy: a malformed line is
+/// rolled back out of `out` (good rows before and after it are kept),
+/// captured into `bad`, and parsing continues.  The default pipeline stays
+/// fail-fast via [`parse_block`]; this variant backs `--on-error skip`.
+pub fn parse_block_lossy(
+    block: &[u8],
+    first_line: usize,
+    binary: bool,
+    out: &mut ParsedChunk,
+    bad: &mut Vec<BadLine>,
+) {
+    if out.indptr.is_empty() {
+        out.indptr.push(0);
+    }
+    for (off, line) in block.split(|&b| b == b'\n').enumerate() {
+        if let Err(e) = parse_line_into(line, first_line + off, binary, out) {
+            let msg = match e {
+                Error::LibsvmParse { msg, .. } => msg,
+                other => other.to_string(),
+            };
+            bad.push(BadLine { line: first_line + off, bytes: line.to_vec(), msg });
+        }
+    }
 }
 
 /// Byte-level scan of one line into `out` (comments/blanks append nothing).
@@ -1096,6 +1163,76 @@ mod tests {
         assert_eq!(fast.len(), 2);
         assert_eq!(fast[0].indices.len(), 2000);
         assert_eq!(fast[1].indices, vec![5]);
+    }
+
+    #[test]
+    fn block_offsets_are_contiguous_and_open_at_resumes_identically() {
+        let mut data = String::new();
+        for i in 0..300 {
+            data.push_str(&format!("+1 {}:1 {}:1\n", i + 1, i + 7));
+        }
+        let dir = std::env::temp_dir().join(format!("bbit_blockoff_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("in.svm");
+        std::fs::write(&path, &data).unwrap();
+
+        let blocks: Vec<RawBlock> = BlockReader::open(&path)
+            .unwrap()
+            .with_block_bytes(128)
+            .map(|b| b.unwrap())
+            .collect();
+        assert!(blocks.len() > 2);
+        // offsets tile the file exactly
+        let mut expect = 0u64;
+        for b in &blocks {
+            expect += b.bytes.len() as u64;
+            assert_eq!(b.end_offset, expect);
+            assert_eq!(
+                b.next_line,
+                b.first_line + b.bytes.iter().filter(|&&c| c == b'\n').count()
+            );
+        }
+        assert_eq!(expect, data.len() as u64);
+        // resuming from any block edge re-carves the identical tail stream
+        for cut in [0usize, 1, blocks.len() / 2, blocks.len() - 1] {
+            let (off, line) = if cut == 0 {
+                (0, 1)
+            } else {
+                (blocks[cut - 1].end_offset, blocks[cut - 1].next_line)
+            };
+            let resumed: Vec<RawBlock> = BlockReader::open_at(&path, off, line)
+                .unwrap()
+                .with_block_bytes(128)
+                .map(|b| b.unwrap())
+                .collect();
+            assert_eq!(resumed.len(), blocks.len() - cut, "cut at block {cut}");
+            for (r, orig) in resumed.iter().zip(&blocks[cut..]) {
+                assert_eq!(r.bytes, orig.bytes);
+                assert_eq!(r.first_line, orig.first_line);
+                assert_eq!(r.end_offset, orig.end_offset);
+                assert_eq!(r.next_line, orig.next_line);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parse_block_lossy_quarantines_bad_lines_and_keeps_good_rows() {
+        let data = b"+1 1:1\nbogus line\n-1 2:1\n+1 bad:idx:here\n+1 3:1\n";
+        let mut parsed = ParsedChunk::default();
+        let mut bad = Vec::new();
+        parse_block_lossy(data, 1, true, &mut parsed, &mut bad);
+        assert_eq!(parsed.len(), 3, "three good rows survive");
+        let idx: Vec<u32> = (0..parsed.len()).map(|i| parsed.row(i).0[0]).collect();
+        assert_eq!(idx, vec![1, 2, 3]);
+        assert_eq!(bad.len(), 2);
+        assert_eq!(bad[0].line, 2);
+        assert_eq!(bad[0].bytes, b"bogus line");
+        assert_eq!(bad[1].line, 4);
+        assert!(!bad[1].msg.is_empty());
+        // fail-fast twin errors on the same input
+        let mut strict = ParsedChunk::default();
+        assert!(parse_block(data, 1, true, &mut strict).is_err());
     }
 
     #[test]

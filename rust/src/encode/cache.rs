@@ -76,15 +76,53 @@
 //! and the reader replays the identical chunk stream into the streaming
 //! trainer, so `hash → cache → train` and `hash → train` see byte-identical
 //! data in identical order.
+//!
+//! ## Durable commits and resume (the crash-safety protocol)
+//!
+//! A 200GB preprocess runs for hours; `preprocess --cache-out` therefore
+//! never writes the destination path directly.  The durable writer
+//! ([`CacheWriter::create_durable`]) follows the tmp/rename protocol of
+//! [`crate::util::atomic_file`]:
+//!
+//! 1. records stream into `<cache>.tmp`, with a *resume journal* sidecar
+//!    `<cache>.tmp.resume` recording, per pipeline block, a checksummed
+//!    fixed-width entry: records written, cache byte offset, row/byte
+//!    counters, and the input byte offset + line number the next block
+//!    starts at;
+//! 2. every `sync_chunks` blocks the data file is flushed + fsync'd and
+//!    then the journal is flushed + fsync'd (data before journal, so a
+//!    journal entry never outlives the bytes it describes — and even if
+//!    OS writeback reorders them, resume *validates* rather than trusts);
+//! 3. `finalize` writes the index footer, patches the header, fsyncs the
+//!    tmp, atomically renames it onto the destination, fsyncs the parent
+//!    directory, and deletes the journal.
+//!
+//! A reader thus only ever sees the destination path as absent or
+//! complete.  `preprocess --resume` ([`CacheWriter::resume_durable`])
+//! recovers a crashed run from the leftovers: it re-scans `.tmp` record
+//! by record (checksums verified) to find where valid data ends, picks
+//! the **latest journal entry whose claimed prefix fully validates**,
+//! truncates the torn tail back to that entry, and hands the caller the
+//! input offset + line number to restart ingest at.  Because pipeline
+//! blocks are carved at newline boundaries, re-carving from that offset
+//! reproduces the identical block/record stream — a resumed cache is
+//! byte-identical to one written by an uninterrupted run.
+//!
+//! Failpoints [`crate::faults::site::CACHE_WRITE_RECORD`] (torn-write /
+//! error / delay injection per record) and
+//! [`crate::faults::site::CACHE_FINALIZE`] (crash before commit) sit on
+//! this path so the recovery story stays tested, not aspirational.
 
-use std::fs::File;
+use std::fs::{File, OpenOptions};
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::encode::codec;
 use crate::encode::encoder::EncoderSpec;
 use crate::encode::expansion::BbitDataset;
 use crate::encode::packed::PackedCodes;
+use crate::faults;
+use crate::util::atomic_file;
 use crate::{Error, Result};
 
 /// File magic for the hashed-chunk cache.
@@ -112,6 +150,13 @@ pub const INDEX_ENTRY_BYTES: u64 = 8 + 4 + 8;
 pub const TRAILER_BYTES: u64 = 8 + 8 + 8 + 8;
 /// Trailer magic: "BBHC index v1".
 const TRAILER_MAGIC: &[u8; 8] = b"BBHCIDX1";
+/// Resume-journal magic ("BBHC journal v1").
+const JOURNAL_MAGIC: &[u8; 8] = b"BBHCJRN1";
+/// Bytes per resume-journal entry: records, cache offset, n, raw bytes,
+/// stored bytes, input offset, next line, FNV-1a over the first 56 bytes.
+const JOURNAL_ENTRY_BYTES: usize = 8 * 8;
+/// Default blocks between fsync'd journal flushes on the durable path.
+pub const DEFAULT_SYNC_CHUNKS: usize = 64;
 
 /// The encoder recipe + row count stored in the cache header.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -197,10 +242,101 @@ pub struct CacheWriter<W: Write + Seek> {
     scratch: Vec<u8>,
     /// Compressed-payload staging (used only with `compress`).
     comp: Vec<u8>,
+    /// tmp/rename + journal state for file-backed durable writers
+    /// (`None` for plain writers and in-memory cursors).
+    durable: Option<DurableState>,
+}
+
+/// Where a resumed `preprocess` run picks its input back up — the payload
+/// of the latest resume-journal entry whose cache prefix validated.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResumePoint {
+    /// Records already committed to the cache.
+    pub records: u64,
+    /// Rows already committed.
+    pub rows: u64,
+    /// Input byte offset the next pipeline block starts at.
+    pub input_offset: u64,
+    /// 1-based line number of the first unprocessed input line.
+    pub next_line: u64,
+}
+
+struct DurableState {
+    tmp: PathBuf,
+    dst: PathBuf,
+    journal_path: PathBuf,
+    journal: BufWriter<File>,
+    /// Blocks between fsync'd flushes of data-then-journal.
+    sync_chunks: usize,
+    marks_since_sync: usize,
+}
+
+/// The resume-journal sidecar for a cache destination (`<dst>.tmp.resume`).
+pub fn journal_path(dst: &Path) -> PathBuf {
+    let mut os = atomic_file::tmp_path(dst).into_os_string();
+    os.push(".resume");
+    PathBuf::from(os)
+}
+
+struct JournalEntry {
+    records: u64,
+    cache_offset: u64,
+    n: u64,
+    raw_bytes: u64,
+    stored_bytes: u64,
+    input_offset: u64,
+    next_line: u64,
+}
+
+impl JournalEntry {
+    fn to_bytes(&self) -> [u8; JOURNAL_ENTRY_BYTES] {
+        let mut buf = [0u8; JOURNAL_ENTRY_BYTES];
+        for (i, v) in [
+            self.records,
+            self.cache_offset,
+            self.n,
+            self.raw_bytes,
+            self.stored_bytes,
+            self.input_offset,
+            self.next_line,
+        ]
+        .iter()
+        .enumerate()
+        {
+            buf[i * 8..i * 8 + 8].copy_from_slice(&v.to_le_bytes());
+        }
+        let mut sum = Fnv1a::new();
+        sum.update(&buf[..56]);
+        buf[56..64].copy_from_slice(&sum.finish().to_le_bytes());
+        buf
+    }
+
+    fn from_bytes(buf: &[u8; JOURNAL_ENTRY_BYTES]) -> Option<JournalEntry> {
+        let mut sum = Fnv1a::new();
+        sum.update(&buf[..56]);
+        let stored = u64::from_le_bytes(buf[56..64].try_into().unwrap());
+        if stored != sum.finish() {
+            return None;
+        }
+        let f = |i: usize| u64::from_le_bytes(buf[i * 8..i * 8 + 8].try_into().unwrap());
+        Some(JournalEntry {
+            records: f(0),
+            cache_offset: f(1),
+            n: f(2),
+            raw_bytes: f(3),
+            stored_bytes: f(4),
+            input_offset: f(5),
+            next_line: f(6),
+        })
+    }
 }
 
 impl CacheWriter<BufWriter<File>> {
     /// Create (truncating) a cache file for the given encoder spec.
+    ///
+    /// This writes `path` directly (no tmp/rename): the legacy shape, kept
+    /// for callers that manage their own commit.  `preprocess` uses
+    /// [`create_durable`](Self::create_durable).
     pub fn create<P: AsRef<Path>>(path: P, spec: &EncoderSpec) -> Result<Self> {
         CacheWriter::create_opts(path, spec, CacheWriteOptions::default())
     }
@@ -217,6 +353,256 @@ impl CacheWriter<BufWriter<File>> {
             opts,
         )
     }
+
+    /// Create a crash-safe writer: records stream into `<path>.tmp` with a
+    /// `<path>.tmp.resume` journal, and [`finalize`](Self::finalize)
+    /// atomically renames the tmp onto `path` (see the module docs).  Any
+    /// stale leftovers from an earlier crash are discarded.
+    pub fn create_durable<P: AsRef<Path>>(
+        path: P,
+        spec: &EncoderSpec,
+        opts: CacheWriteOptions,
+        sync_chunks: usize,
+    ) -> Result<Self> {
+        let dst = path.as_ref().to_path_buf();
+        let tmp = atomic_file::tmp_path(&dst);
+        let jpath = journal_path(&dst);
+        let _ = std::fs::remove_file(&tmp);
+        let _ = std::fs::remove_file(&jpath);
+        let mut journal = BufWriter::new(File::create(&jpath)?);
+        journal.write_all(JOURNAL_MAGIC)?;
+        journal.flush()?;
+        let out = BufWriter::with_capacity(1 << 20, File::create(&tmp)?);
+        let mut w = CacheWriter::with_options(out, spec, opts)?;
+        w.durable = Some(DurableState {
+            tmp,
+            dst,
+            journal_path: jpath,
+            journal,
+            sync_chunks: sync_chunks.max(1),
+            marks_since_sync: 0,
+        });
+        Ok(w)
+    }
+
+    /// Reopen a crashed durable run for `path`.  Returns `Ok(None)` when
+    /// there is nothing usable to resume (no `.tmp`, no journal, or an
+    /// unreadable tmp header) — the caller starts fresh.  On success the
+    /// writer is positioned after the last journaled-and-validated record
+    /// and the [`ResumePoint`] says where to restart ingest.
+    ///
+    /// The spec and options must match the crashed run: resuming under a
+    /// different encoder or compression flag is a typed error, not silent
+    /// corruption.
+    pub fn resume_durable<P: AsRef<Path>>(
+        path: P,
+        spec: &EncoderSpec,
+        opts: CacheWriteOptions,
+        sync_chunks: usize,
+    ) -> Result<Option<(Self, ResumePoint)>> {
+        let dst = path.as_ref().to_path_buf();
+        let tmp = atomic_file::tmp_path(&dst);
+        let jpath = journal_path(&dst);
+        if !tmp.exists() || !jpath.exists() {
+            return Ok(None);
+        }
+        // The partial header: same fields as a finished v3 cache, but `n`
+        // may still be the unfinalized placeholder.
+        let (tmp_spec, tmp_compressed) = match read_partial_header(&tmp) {
+            Ok(v) => v,
+            Err(_) => return Ok(None),
+        };
+        if tmp_spec != *spec {
+            return Err(Error::InvalidArg(format!(
+                "--resume spec mismatch: partial cache was written with {:?}, this run asks for {:?}",
+                tmp_spec, spec
+            )));
+        }
+        if tmp_compressed != opts.compress {
+            return Err(Error::InvalidArg(
+                "--resume compression mismatch: partial cache and this run disagree on \
+                 --cache-compress"
+                    .into(),
+            ));
+        }
+        // Where does valid data actually end?  Scan record by record,
+        // checksums verified; the scan result is the ground truth the
+        // journal is checked against.
+        let (scanned, _valid_end) = scan_records(&tmp, spec, opts.compress)?;
+        // Offset after each scanned record prefix (scan_offsets[i] = end of
+        // record i-1), so journal claims can be checked exactly.
+        let mut scan_offsets = Vec::with_capacity(scanned.len() + 1);
+        scan_offsets.push(HEADER_BYTES_V3);
+        for (i, e) in scanned.iter().enumerate() {
+            let next = match scanned.get(i + 1) {
+                Some(n) => n.offset,
+                None => _valid_end,
+            };
+            debug_assert!(next > e.offset);
+            scan_offsets.push(next);
+        }
+        let entries = read_journal(&jpath);
+        // Latest journal entry whose claimed prefix fully validated.
+        let mut chosen = JournalEntry {
+            records: 0,
+            cache_offset: HEADER_BYTES_V3,
+            n: 0,
+            raw_bytes: 0,
+            stored_bytes: 0,
+            input_offset: 0,
+            next_line: 1,
+        };
+        let mut chosen_idx = 0usize; // journal entries kept (excl. implicit baseline)
+        for (i, e) in entries.iter().enumerate() {
+            let r = e.records as usize;
+            if r <= scanned.len() && scan_offsets[r] == e.cache_offset {
+                chosen = JournalEntry {
+                    records: e.records,
+                    cache_offset: e.cache_offset,
+                    n: e.n,
+                    raw_bytes: e.raw_bytes,
+                    stored_bytes: e.stored_bytes,
+                    input_offset: e.input_offset,
+                    next_line: e.next_line,
+                };
+                chosen_idx = i + 1;
+            }
+        }
+        // Truncate the torn tail (data and journal) back to the chosen
+        // entry, then reopen both for appending.
+        let data = OpenOptions::new().read(true).write(true).open(&tmp)?;
+        data.set_len(chosen.cache_offset)?;
+        let jfile = OpenOptions::new().read(true).write(true).open(&jpath)?;
+        jfile.set_len((JOURNAL_MAGIC.len() + chosen_idx * JOURNAL_ENTRY_BYTES) as u64)?;
+        let mut out = BufWriter::with_capacity(1 << 20, data);
+        out.seek(SeekFrom::Start(chosen.cache_offset))?;
+        let mut journal = BufWriter::new(jfile);
+        journal.seek(SeekFrom::End(0))?;
+        let mut w = CacheWriter::with_options_resumed(out, spec, opts)?;
+        w.meta.n = chosen.n;
+        w.meta.raw_bytes = chosen.raw_bytes;
+        w.meta.stored_bytes = chosen.stored_bytes;
+        w.offset = chosen.cache_offset;
+        w.index = scanned[..chosen.records as usize].to_vec();
+        w.durable = Some(DurableState {
+            tmp,
+            dst,
+            journal_path: jpath,
+            journal,
+            sync_chunks: sync_chunks.max(1),
+            marks_since_sync: 0,
+        });
+        let point = ResumePoint {
+            records: chosen.records,
+            rows: chosen.n,
+            input_offset: chosen.input_offset,
+            next_line: chosen.next_line,
+        };
+        Ok(Some((w, point)))
+    }
+}
+
+/// Read the v3 header of a (possibly unfinalized) partial cache, returning
+/// its spec and compression flag.
+fn read_partial_header(path: &Path) -> Result<(EncoderSpec, bool)> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != CACHE_MAGIC {
+        return Err(Error::InvalidArg("bad cache magic (not a BBHC file)".into()));
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u32buf)?;
+    if u32::from_le_bytes(u32buf) != CACHE_VERSION {
+        return Err(Error::InvalidArg("partial cache is not v3".into()));
+    }
+    r.read_exact(&mut u32buf)?;
+    let tag = u32::from_le_bytes(u32buf);
+    r.read_exact(&mut u32buf)?;
+    let p0 = u32::from_le_bytes(u32buf);
+    let mut next_u64 = |r: &mut BufReader<File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let p1 = next_u64(&mut r)?;
+    let p2 = next_u64(&mut r)?;
+    let seed = next_u64(&mut r)?;
+    r.read_exact(&mut u32buf)?;
+    let flags = u32::from_le_bytes(u32buf);
+    if flags & !CACHE_FLAG_COMPRESSED != 0 {
+        return Err(Error::InvalidArg(format!(
+            "partial cache uses unknown feature flags {flags:#x}"
+        )));
+    }
+    let spec = EncoderSpec::from_header_fields(tag, p0, p1, p2, seed)?;
+    spec.validate()?;
+    Ok((spec, flags & CACHE_FLAG_COMPRESSED != 0))
+}
+
+/// Walk the record region of a partial cache from the first record, keeping
+/// every record that fully decodes with a matching checksum.  Returns the
+/// entries (in file order) and the byte offset where validity ends.
+fn scan_records(
+    path: &Path,
+    spec: &EncoderSpec,
+    compressed: bool,
+) -> Result<(Vec<ChunkIndexEntry>, u64)> {
+    let meta = CacheMeta {
+        spec: *spec,
+        n: 0,
+        compressed,
+        raw_bytes: 0,
+        stored_bytes: 0,
+    };
+    let mut decoder = RecordDecoder::for_meta(&meta)?;
+    let (b, k, _stride) = packed_geometry(spec)?;
+    let mut codes = PackedCodes::new(b, k);
+    let mut labels = Vec::new();
+    let mut r = BufReader::with_capacity(1 << 20, File::open(path)?);
+    let len = r.seek(SeekFrom::End(0))?;
+    r.seek(SeekFrom::Start(HEADER_BYTES_V3))?;
+    let mut offset = HEADER_BYTES_V3.min(len);
+    let mut entries = Vec::new();
+    let mut row = 0u64;
+    while offset < len {
+        match decoder.read_from(&mut r, row, u32::MAX as u64, &mut codes, &mut labels) {
+            Ok((rows, checksum)) => {
+                let entry = ChunkIndexEntry {
+                    offset,
+                    rows: rows as u32,
+                    checksum,
+                };
+                offset = r.stream_position()?;
+                row += rows as u64;
+                entries.push(entry);
+            }
+            Err(_) => break,
+        }
+    }
+    Ok((entries, offset))
+}
+
+/// All checksum-valid entries at the front of a resume journal (an invalid
+/// or torn entry ends the walk; a bad header yields no entries).
+fn read_journal(path: &Path) -> Vec<JournalEntry> {
+    let mut out = Vec::new();
+    let mut r = match File::open(path) {
+        Ok(f) => BufReader::new(f),
+        Err(_) => return out,
+    };
+    let mut magic = [0u8; 8];
+    if r.read_exact(&mut magic).is_err() || &magic != JOURNAL_MAGIC {
+        return out;
+    }
+    let mut buf = [0u8; JOURNAL_ENTRY_BYTES];
+    while r.read_exact(&mut buf).is_ok() {
+        match JournalEntry::from_bytes(&buf) {
+            Some(e) => out.push(e),
+            None => break,
+        }
+    }
+    out
 }
 
 impl<W: Write + Seek> CacheWriter<W> {
@@ -226,7 +612,6 @@ impl<W: Write + Seek> CacheWriter<W> {
 
     pub fn with_options(mut out: W, spec: &EncoderSpec, opts: CacheWriteOptions) -> Result<Self> {
         spec.validate()?;
-        let (b, k, stride) = packed_geometry(spec)?;
         let (tag, p0, p1, p2, seed) = spec.header_fields();
         let flags = if opts.compress { CACHE_FLAG_COMPRESSED } else { 0 };
         out.write_all(CACHE_MAGIC)?;
@@ -240,6 +625,14 @@ impl<W: Write + Seek> CacheWriter<W> {
         for v in [0u64, 0u64, N_UNFINALIZED] {
             out.write_all(&v.to_le_bytes())?;
         }
+        CacheWriter::with_options_resumed(out, spec, opts)
+    }
+
+    /// Build the writer state over `out` without emitting a header — the
+    /// resume path reopens a tmp whose header already exists on disk.
+    fn with_options_resumed(out: W, spec: &EncoderSpec, opts: CacheWriteOptions) -> Result<Self> {
+        spec.validate()?;
+        let (b, k, stride) = packed_geometry(spec)?;
         Ok(CacheWriter {
             out,
             meta: CacheMeta {
@@ -257,6 +650,7 @@ impl<W: Write + Seek> CacheWriter<W> {
             index: Vec::new(),
             scratch: Vec::new(),
             comp: Vec::new(),
+            durable: None,
         })
     }
 
@@ -313,6 +707,22 @@ impl<W: Write + Seek> CacheWriter<W> {
         sum.update(&rows.to_le_bytes());
         sum.update(stored);
         let checksum = sum.finish();
+        match faults::trigger(faults::site::CACHE_WRITE_RECORD) {
+            None => {}
+            Some(faults::Injected::Error) => {
+                return Err(faults::injected_error(faults::site::CACHE_WRITE_RECORD));
+            }
+            Some(faults::Injected::PartialWrite) => {
+                // a torn write: the framing plus half the payload land on
+                // disk, then the writer dies — exactly what a crash between
+                // write() calls leaves behind
+                self.out.write_all(&rows.to_le_bytes())?;
+                self.out.write_all(&stored_len.to_le_bytes())?;
+                self.out.write_all(&stored[..stored.len() / 2])?;
+                self.out.flush()?;
+                return Err(faults::injected_error(faults::site::CACHE_WRITE_RECORD));
+            }
+        }
         self.out.write_all(&rows.to_le_bytes())?;
         self.out.write_all(&stored_len.to_le_bytes())?;
         self.out.write_all(stored)?;
@@ -325,13 +735,53 @@ impl<W: Write + Seek> CacheWriter<W> {
         Ok(())
     }
 
+    /// Record a resume-journal entry: "the cache is consistent through
+    /// `self.offset`, and ingest continues at input byte `input_offset`,
+    /// line `next_line`".  Called by the preprocess pipeline after every
+    /// block (including blocks that produced no record — those still
+    /// advance the input cursor).  Every `sync_chunks` calls the data file
+    /// and then the journal are flushed + fsync'd.  No-op for non-durable
+    /// writers.
+    pub fn mark_progress(&mut self, input_offset: u64, next_line: u64) -> Result<()> {
+        let entry = JournalEntry {
+            records: self.index.len() as u64,
+            cache_offset: self.offset,
+            n: self.meta.n,
+            raw_bytes: self.meta.raw_bytes,
+            stored_bytes: self.meta.stored_bytes,
+            input_offset,
+            next_line,
+        };
+        let d = match self.durable.as_mut() {
+            Some(d) => d,
+            None => return Ok(()),
+        };
+        d.journal.write_all(&entry.to_bytes())?;
+        d.marks_since_sync += 1;
+        if d.marks_since_sync >= d.sync_chunks {
+            d.marks_since_sync = 0;
+            // data before journal: an entry should never describe bytes
+            // that have not at least been handed to the OS
+            self.out.flush()?;
+            atomic_file::sync_file(&d.tmp)?;
+            d.journal.flush()?;
+            atomic_file::sync_file(&d.journal_path)?;
+        }
+        Ok(())
+    }
+
     /// Write the chunk-index footer, patch the header byte/row counts, and
     /// flush.  Idempotent; a cache that was never finalized (crash
     /// mid-write) is rejected by the reader.
+    ///
+    /// Durable writers ([`create_durable`](Self::create_durable)) then
+    /// commit: fsync the tmp, atomically rename it onto the destination,
+    /// fsync the parent directory, and delete the resume journal.
     pub fn finalize(&mut self) -> Result<()> {
         if self.finalized {
             return Ok(());
         }
+        faults::fail(faults::site::CACHE_FINALIZE)?;
         // footer: one fixed-width entry per record, checksummed as a block
         let mut entries = Vec::with_capacity(self.index.len() * INDEX_ENTRY_BYTES as usize);
         for e in &self.index {
@@ -353,6 +803,11 @@ impl<W: Write + Seek> CacheWriter<W> {
         }
         self.out.seek(SeekFrom::End(0))?;
         self.out.flush()?;
+        if let Some(d) = self.durable.take() {
+            atomic_file::commit(&d.tmp, &d.dst)?;
+            drop(d.journal);
+            let _ = std::fs::remove_file(&d.journal_path);
+        }
         self.finalized = true;
         Ok(())
     }
@@ -471,6 +926,7 @@ impl RecordDecoder {
         codes: &mut PackedCodes,
         labels: &mut Vec<i8>,
     ) -> Result<(usize, u64)> {
+        faults::fail(faults::site::REPLAY_DECODE)?;
         if codes.b != self.b || codes.k != self.k {
             return Err(Error::InvalidArg(format!(
                 "scratch geometry (b={}, k={}) does not match cache (b={}, k={})",
@@ -1226,5 +1682,165 @@ mod tests {
         assert!(w.write_chunk(&pc, &ls).is_err());
         let (pc, _) = random_chunk(8, 16, 3, &mut Rng::new(4));
         assert!(w.write_chunk(&pc, &[1, -1]).is_err()); // label count
+    }
+
+    // ---- durable (tmp/rename + resume journal) path ----
+
+    fn durable_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("bbmh_cache_{}_{}", name, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fixed_chunks(count: usize, seed: u64) -> Vec<(PackedCodes, Vec<i8>)> {
+        let mut rng = Rng::new(seed);
+        (0..count).map(|i| random_chunk(6, 20, 5 + i, &mut rng)).collect()
+    }
+
+    #[test]
+    fn durable_writer_commits_atomically_and_matches_plain_bytes() {
+        let d = durable_dir("commit");
+        let dst = d.join("out.cache");
+        let spec = bbit_spec(6, 20, 1 << 20, 11);
+        let chunks = fixed_chunks(4, 0xD0C5);
+
+        let mut w =
+            CacheWriter::create_durable(&dst, &spec, CacheWriteOptions::default(), 2).unwrap();
+        for (i, (pc, ls)) in chunks.iter().enumerate() {
+            w.write_chunk(pc, ls).unwrap();
+            w.mark_progress(100 * (i as u64 + 1), i as u64 + 2).unwrap();
+        }
+        // mid-run: destination absent, tmp + journal present
+        assert!(!dst.exists());
+        assert!(atomic_file::tmp_path(&dst).exists());
+        assert!(journal_path(&dst).exists());
+        w.finalize().unwrap();
+        assert!(dst.exists());
+        assert!(!atomic_file::tmp_path(&dst).exists());
+        assert!(!journal_path(&dst).exists());
+
+        // byte-for-byte the same file a plain in-memory writer produces
+        let mut cur = Cursor::new(Vec::new());
+        let mut pw = CacheWriter::new(&mut cur, &spec).unwrap();
+        for (pc, ls) in &chunks {
+            pw.write_chunk(pc, ls).unwrap();
+        }
+        pw.finalize().unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), *cur.get_ref());
+    }
+
+    #[test]
+    fn resume_recovers_torn_tail_to_byte_identical_cache() {
+        let d = durable_dir("resume");
+        let spec = bbit_spec(6, 20, 1 << 20, 11);
+        let chunks = fixed_chunks(5, 0xBEEF);
+
+        // reference: uninterrupted durable run over all five chunks
+        let ref_dst = d.join("ref.cache");
+        let mut w =
+            CacheWriter::create_durable(&ref_dst, &spec, CacheWriteOptions::default(), 1).unwrap();
+        for (i, (pc, ls)) in chunks.iter().enumerate() {
+            w.write_chunk(pc, ls).unwrap();
+            w.mark_progress(100 * (i as u64 + 1), 10 * (i as u64 + 1)).unwrap();
+        }
+        w.finalize().unwrap();
+
+        // crashed run: three chunks journaled, then a torn fourth record
+        let dst = d.join("out.cache");
+        let mut w =
+            CacheWriter::create_durable(&dst, &spec, CacheWriteOptions::default(), 1).unwrap();
+        for (i, (pc, ls)) in chunks.iter().take(3).enumerate() {
+            w.write_chunk(pc, ls).unwrap();
+            w.mark_progress(100 * (i as u64 + 1), 10 * (i as u64 + 1)).unwrap();
+        }
+        drop(w); // crash: no finalize; BufWriter flushes what it has
+        let tmp = atomic_file::tmp_path(&dst);
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&tmp).unwrap();
+            // half a record's framing: rows + length, payload missing
+            f.write_all(&7u32.to_le_bytes()).unwrap();
+            f.write_all(&999u64.to_le_bytes()).unwrap();
+            f.write_all(&[0xAB; 40]).unwrap();
+        }
+
+        let (mut w, point) =
+            CacheWriter::resume_durable(&dst, &spec, CacheWriteOptions::default(), 1)
+                .unwrap()
+                .expect("leftovers should be resumable");
+        assert_eq!(point.records, 3);
+        assert_eq!(point.rows, (5 + 6 + 7) as u64);
+        assert_eq!(point.input_offset, 300);
+        assert_eq!(point.next_line, 30);
+        for (i, (pc, ls)) in chunks.iter().enumerate().skip(3) {
+            w.write_chunk(pc, ls).unwrap();
+            w.mark_progress(100 * (i as u64 + 1), 10 * (i as u64 + 1)).unwrap();
+        }
+        w.finalize().unwrap();
+        assert_eq!(
+            std::fs::read(&dst).unwrap(),
+            std::fs::read(&ref_dst).unwrap(),
+            "resumed cache must be byte-identical to the uninterrupted run"
+        );
+        assert!(!tmp.exists());
+        assert!(!journal_path(&dst).exists());
+    }
+
+    #[test]
+    fn resume_with_unjournaled_tail_reingests_from_last_mark() {
+        let d = durable_dir("tail");
+        let spec = bbit_spec(6, 20, 1 << 20, 11);
+        let chunks = fixed_chunks(4, 0x7A11);
+        let dst = d.join("out.cache");
+        // journal only the first two blocks; write (valid) chunks past them
+        let mut w =
+            CacheWriter::create_durable(&dst, &spec, CacheWriteOptions::default(), 1).unwrap();
+        for (i, (pc, ls)) in chunks.iter().enumerate() {
+            w.write_chunk(pc, ls).unwrap();
+            if i < 2 {
+                w.mark_progress(100 * (i as u64 + 1), 10 * (i as u64 + 1)).unwrap();
+            }
+        }
+        drop(w);
+        let (w, point) =
+            CacheWriter::resume_durable(&dst, &spec, CacheWriteOptions::default(), 1)
+                .unwrap()
+                .expect("resumable");
+        // valid-but-unjournaled records are discarded: input position for
+        // them is unknown, so ingest restarts at the last journal mark
+        assert_eq!(point.records, 2);
+        assert_eq!(point.input_offset, 200);
+        drop(w);
+    }
+
+    #[test]
+    fn resume_without_leftovers_is_none_and_mismatches_are_typed() {
+        let d = durable_dir("none");
+        let dst = d.join("out.cache");
+        let spec = bbit_spec(6, 20, 1 << 20, 11);
+        assert!(CacheWriter::resume_durable(&dst, &spec, CacheWriteOptions::default(), 1)
+            .unwrap()
+            .is_none());
+
+        // leftovers written under a different spec are a typed error
+        let mut w =
+            CacheWriter::create_durable(&dst, &spec, CacheWriteOptions::default(), 1).unwrap();
+        let chunks = fixed_chunks(1, 1);
+        let (pc, ls) = &chunks[0];
+        w.write_chunk(pc, ls).unwrap();
+        w.mark_progress(10, 2).unwrap();
+        drop(w);
+        let other = bbit_spec(6, 20, 1 << 20, 12);
+        assert!(CacheWriter::resume_durable(&dst, &other, CacheWriteOptions::default(), 1)
+            .is_err());
+        let err = CacheWriter::resume_durable(
+            &dst,
+            &spec,
+            CacheWriteOptions { compress: true },
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("compression"), "{err}");
     }
 }

@@ -162,6 +162,13 @@ impl DriverEngine {
 
     fn serve(&self, job: DeviceJob) {
         let DeviceJob { idx, mask, reply } = job;
+        // failpoint: an injected launch failure surfaces exactly like a
+        // PJRT execute error — the worker falls back to the CPU twin for
+        // the whole chunk, and the output stays bit-identical
+        if let Err(e) = crate::faults::fail(crate::faults::site::DEVICE_LAUNCH) {
+            let _ = reply.send(Err(e));
+            return;
+        }
         let result = match &self.kind {
             EngineKind::Minhash { eng, c1, c2 } => {
                 eng.minhash_padded(&idx, &mask, c1, c2).map(DeviceOut::Minhash)

@@ -1,0 +1,355 @@
+//! Env-armed failpoints for crash and fault testing.
+//!
+//! Modeled on the [`crate::metrics::trace`] pattern: a process-global
+//! facility that is **off by default** and costs exactly one relaxed atomic
+//! load per site when disarmed, so failpoints can sit permanently on hot
+//! paths (the cache writer, the replay decoder, the batch scorer).
+//!
+//! ## Arming
+//!
+//! ```text
+//! BBMH_FAILPOINTS=site=action[:prob][:count][;site=action...]
+//! ```
+//!
+//! Clauses are separated by `;` (or `,`).  Actions:
+//!
+//! | action | effect at the site |
+//! |---|---|
+//! | `error` | the site reports an injected [`crate::Error`] |
+//! | `panic` | the site panics (simulates an abrupt crash) |
+//! | `partial-write` | write sites persist a truncated prefix, then error (a torn write) |
+//! | `delay-ms:N` | the site sleeps `N` milliseconds, then proceeds normally |
+//!
+//! `prob` is an optional trigger probability and **must contain a decimal
+//! point** (`0.25`, `1.0`); it defaults to always-fire.  `count` is an
+//! optional integer cap on total triggers.  The probability draw uses a
+//! fixed-seed xorshift so a given arming is reproducible run-to-run.
+//!
+//! Non-write sites treat `partial-write` as `error`.
+//!
+//! ## Sites
+//!
+//! The named sites are listed in [`site`]; the "Fault tolerance" section of
+//! the crate docs maps each to the subsystem it cuts.  Example:
+//!
+//! ```text
+//! BBMH_FAILPOINTS='cache.write_record=partial-write:1.0:1;route.forward=delay-ms:20'
+//! ```
+//!
+//! ## Testing discipline
+//!
+//! Arming is read from the environment once per process (same discipline as
+//! `trace::init_file`), so unit tests exercise only the parser and the
+//! disarmed fast path; armed behavior is driven through `CARGO_BIN_EXE`
+//! subprocesses in `tests/crash_recovery.rs`, each with an explicit
+//! `BBMH_FAILPOINTS` value so the suite stays hermetic even when CI arms
+//! the environment globally.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// The named failpoint sites wired through the codebase.
+pub mod site {
+    /// [`crate::encode::cache::CacheWriter`] staging one chunk record.
+    pub const CACHE_WRITE_RECORD: &str = "cache.write_record";
+    /// [`crate::encode::cache::CacheWriter::finalize`] committing the cache.
+    pub const CACHE_FINALIZE: &str = "cache.finalize";
+    /// [`crate::encode::cache::RecordDecoder`] decoding a replayed record.
+    pub const REPLAY_DECODE: &str = "replay.decode";
+    /// The serve tier scoring one assembled batch.
+    pub const SERVE_BATCH: &str = "serve.batch";
+    /// The router forwarding a request to a backend.
+    pub const ROUTE_FORWARD: &str = "route.forward";
+    /// The device encoder launching a compiled artifact.
+    pub const DEVICE_LAUNCH: &str = "device.launch";
+
+    /// Every site, for docs and spec validation.
+    pub const ALL: &[&str] = &[
+        CACHE_WRITE_RECORD,
+        CACHE_FINALIZE,
+        REPLAY_DECODE,
+        SERVE_BATCH,
+        ROUTE_FORWARD,
+        DEVICE_LAUNCH,
+    ];
+}
+
+/// What an armed failpoint asks the *caller* to do.  Delays and panics are
+/// handled inside [`trigger`]; these two need site-specific behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Injected {
+    /// Report an injected error.
+    Error,
+    /// Persist a truncated prefix of the pending write, then error.
+    PartialWrite,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    Error,
+    Panic,
+    PartialWrite,
+    DelayMs(u64),
+}
+
+#[derive(Debug)]
+struct Rule {
+    site: String,
+    action: Action,
+    /// Trigger probability in (0, 1]; 1.0 = always.
+    prob: f64,
+    /// Remaining triggers; `u64::MAX` = unlimited.
+    remaining: AtomicU64,
+}
+
+const STATE_UNKNOWN: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNKNOWN);
+static RULES: OnceLock<Vec<Rule>> = OnceLock::new();
+// Fixed seed: a given BBMH_FAILPOINTS arming fires at the same call
+// sequence every run, which is what a CI matrix wants.
+static RNG: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+fn parse_clause(clause: &str) -> std::result::Result<Rule, String> {
+    let (site, rest) = clause
+        .split_once('=')
+        .ok_or_else(|| format!("'{clause}': expected site=action"))?;
+    let site = site.trim();
+    if !site::ALL.contains(&site) {
+        return Err(format!("'{site}': unknown failpoint site"));
+    }
+    let mut toks = rest.trim().split(':');
+    let action_tok = toks.next().unwrap_or("");
+    let action = match action_tok {
+        "error" => Action::Error,
+        "panic" => Action::Panic,
+        "partial-write" => Action::PartialWrite,
+        "delay-ms" => {
+            let ms = toks
+                .next()
+                .ok_or_else(|| format!("'{clause}': delay-ms needs a value (delay-ms:N)"))?;
+            let ms: u64 = ms
+                .parse()
+                .map_err(|_| format!("'{clause}': bad delay-ms value '{ms}'"))?;
+            Action::DelayMs(ms)
+        }
+        other => return Err(format!("'{clause}': unknown action '{other}'")),
+    };
+    let mut prob = 1.0f64;
+    let mut count = u64::MAX;
+    for tok in toks {
+        if tok.contains('.') {
+            let p: f64 = tok
+                .parse()
+                .map_err(|_| format!("'{clause}': bad probability '{tok}'"))?;
+            if !(p > 0.0 && p <= 1.0) {
+                return Err(format!("'{clause}': probability must be in (0, 1]"));
+            }
+            prob = p;
+        } else {
+            count = tok
+                .parse()
+                .map_err(|_| format!("'{clause}': bad count '{tok}'"))?;
+        }
+    }
+    Ok(Rule {
+        site: site.to_string(),
+        action,
+        prob,
+        remaining: AtomicU64::new(count),
+    })
+}
+
+/// Parse a full `BBMH_FAILPOINTS` value.  Public so unit tests can cover
+/// the grammar without arming the process.
+#[doc(hidden)]
+pub fn parse_spec(spec: &str) -> std::result::Result<(), String> {
+    parse_rules(spec).map(|_| ())
+}
+
+fn parse_rules(spec: &str) -> std::result::Result<Vec<Rule>, String> {
+    let mut rules = Vec::new();
+    for clause in spec.split([';', ',']) {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        rules.push(parse_clause(clause)?);
+    }
+    Ok(rules)
+}
+
+#[cold]
+fn init() -> bool {
+    let armed = match std::env::var("BBMH_FAILPOINTS") {
+        Ok(spec) if !spec.trim().is_empty() => match parse_rules(&spec) {
+            Ok(rules) if !rules.is_empty() => {
+                let _ = RULES.set(rules);
+                true
+            }
+            Ok(_) => false,
+            Err(e) => {
+                eprintln!("warning: BBMH_FAILPOINTS ignored: {e}");
+                false
+            }
+        },
+        _ => false,
+    };
+    STATE.store(if armed { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+    armed
+}
+
+#[inline]
+fn armed() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_OFF => false,
+        STATE_ON => true,
+        _ => init(),
+    }
+}
+
+fn rng_next() -> f64 {
+    // xorshift64*; a lost race between concurrent callers only perturbs the
+    // stream, which is fine for a trigger probability.
+    let mut x = RNG.load(Ordering::Relaxed);
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    RNG.store(x, Ordering::Relaxed);
+    (x.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cold]
+fn evaluate(name: &str) -> Option<Injected> {
+    let rules = RULES.get()?;
+    let rule = rules.iter().find(|r| r.site == name)?;
+    if rule.prob < 1.0 && rng_next() >= rule.prob {
+        return None;
+    }
+    // Claim one trigger from the budget.
+    let mut left = rule.remaining.load(Ordering::Relaxed);
+    loop {
+        if left == 0 {
+            return None;
+        }
+        let next = if left == u64::MAX { left } else { left - 1 };
+        match rule.remaining.compare_exchange_weak(
+            left,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(cur) => left = cur,
+        }
+    }
+    match rule.action {
+        Action::DelayMs(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        Action::Panic => panic!("failpoint '{name}' injected panic"),
+        Action::Error => Some(Injected::Error),
+        Action::PartialWrite => Some(Injected::PartialWrite),
+    }
+}
+
+/// Evaluate the failpoint `name`.  Disarmed cost: one relaxed atomic load.
+///
+/// `delay-ms` sleeps here and returns `None`; `panic` panics here.  `error`
+/// and `partial-write` are returned so the site can fail in its own idiom
+/// (write sites persist a torn prefix first; everything else should treat
+/// both as an error — see [`fail`]).
+#[inline]
+pub fn trigger(name: &str) -> Option<Injected> {
+    if !armed() {
+        return None;
+    }
+    evaluate(name)
+}
+
+/// Convenience for non-write sites: any injection becomes a typed error.
+#[inline]
+pub fn fail(name: &str) -> Result<()> {
+    match trigger(name) {
+        None => Ok(()),
+        Some(_) => Err(injected_error(name)),
+    }
+}
+
+/// The error a failpoint injects; also used by write sites after
+/// persisting a torn prefix.
+pub fn injected_error(name: &str) -> Error {
+    Error::Pipeline(format!("failpoint '{name}' injected error"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests never set BBMH_FAILPOINTS: arming is process-global, and
+    // flipping it here would leak into sibling tests.  Armed behavior runs
+    // in subprocesses in tests/crash_recovery.rs.
+
+    #[test]
+    fn disarmed_trigger_is_none_for_every_site() {
+        for s in site::ALL {
+            assert_eq!(trigger(s), None);
+            assert!(fail(s).is_ok());
+        }
+    }
+
+    #[test]
+    fn parses_every_action_and_modifier() {
+        for spec in [
+            "cache.write_record=error",
+            "cache.finalize=panic",
+            "cache.write_record=partial-write:1.0:1",
+            "route.forward=delay-ms:20",
+            "route.forward=delay-ms:20:0.5:3",
+            "cache.write_record=error;serve.batch=delay-ms:5,replay.decode=error:0.25",
+            "  ",
+        ] {
+            assert!(parse_spec(spec).is_ok(), "spec should parse: {spec}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for spec in [
+            "cache.write_record",              // no action
+            "nosuch.site=error",               // unknown site
+            "cache.write_record=explode",      // unknown action
+            "route.forward=delay-ms",          // missing ms value
+            "route.forward=delay-ms:abc",      // bad ms value
+            "cache.write_record=error:2.0",    // probability out of range
+            "cache.write_record=error:0.0",    // probability out of range
+            "cache.write_record=error:notanum", // bad count
+        ] {
+            assert!(parse_spec(spec).is_err(), "spec should be rejected: {spec}");
+        }
+    }
+
+    #[test]
+    fn count_and_prob_positions_are_flexible() {
+        assert!(parse_spec("cache.write_record=error:3:0.5").is_ok());
+        assert!(parse_spec("cache.write_record=error:0.5:3").is_ok());
+    }
+
+    #[test]
+    fn clause_parser_fills_defaults() {
+        let r = parse_clause("cache.write_record=error").unwrap();
+        assert_eq!(r.action, Action::Error);
+        assert_eq!(r.prob, 1.0);
+        assert_eq!(r.remaining.load(Ordering::Relaxed), u64::MAX);
+        let r = parse_clause("serve.batch=delay-ms:7:0.25:2").unwrap();
+        assert_eq!(r.action, Action::DelayMs(7));
+        assert_eq!(r.prob, 0.25);
+        assert_eq!(r.remaining.load(Ordering::Relaxed), 2);
+    }
+}

@@ -30,6 +30,7 @@
 //! | [`serve`] | online scoring: micro-batched HTTP model server with hot reload, admission control, a load generator, and the consistent-hash `route` fleet tier scatter-gathering `/similar` over shard servers (the paper's "used in industry / search" request path) |
 //! | [`similarity`] | online near-neighbor search: sharded, snapshottable LSH index over b-bit signatures, built out-of-core from the hashed cache (the paper's Section 6 "re-use the hashed data" workflow, made a serving subsystem) |
 //! | [`metrics`] | the unified telemetry layer: counters/gauges/histograms, one Prometheus text renderer + format validator ([`metrics::prom`]), and structured JSONL tracing spans with fleet-wide trace-id propagation ([`metrics::trace`]) |
+//! | [`faults`] | env-armed failpoints (`BBMH_FAILPOINTS`) on the crash-critical sites — cache write/finalize, replay decode, batch scoring, router forward, device launch — one relaxed atomic when disarmed |
 //! | [`runtime`] | PJRT CPU client executing `artifacts/*.hlo.txt` (typed input-geometry validation before every launch); feeds the `--device xla` encode path |
 //! | [`experiments`] | one harness per table/figure (Table 1–2, Fig 1–8, …) |
 //!
@@ -141,6 +142,49 @@
 //! - **Machine-readable reports.**  `--report-json FILE` (on
 //!   `preprocess` and `train --stream`) dumps the
 //!   [`PipelineReport`](coordinator::PipelineReport) as JSON.
+//!
+//! ## Fault tolerance (crash-safe pipelines)
+//!
+//! A 200GB preprocess or a long SGD sweep must survive `kill -9`,
+//! torn writes and rolling restarts.  Every durable artifact in the
+//! crate commits atomically, and every long-running pass can resume:
+//!
+//! - **Crash-safe cache commits.**  `preprocess --cache-out` writes
+//!   through `<cache>.tmp` plus an fsync'd sidecar journal recording,
+//!   every `--sync-chunks` chunks, the validated record prefix and the
+//!   exact input byte offset/line that produced it.  Finalize writes the
+//!   footer and publishes with one atomic rename — a crash at *any*
+//!   point leaves either the complete old artifact or no artifact, never
+//!   a torn cache.  `preprocess --resume` salvages the checksummed
+//!   prefix of the tmp file, seeks raw input to the journaled offset and
+//!   continues; the resumed cache is byte-identical to an uninterrupted
+//!   run (asserted in `tests/crash_recovery.rs` by SIGKILLing a live
+//!   preprocess at varying depths).
+//! - **Malformed-input policy.**  `--on-error skip` (on `preprocess`
+//!   and `train --stream`) skips unparseable lines instead of aborting
+//!   mid-corpus, counts them in the report (`parse_errors`), and
+//!   `--quarantine FILE` preserves the raw bytes with line numbers for
+//!   offline triage.
+//! - **Training checkpoints.**  `train --cache --checkpoint FILE
+//!   [--checkpoint-every N]` snapshots the streaming SGD state (weights
+//!   + optimizer position) atomically between epochs; `--resume` picks
+//!   up from the snapshot and reaches **bit-identical** final weights
+//!   versus the uninterrupted run.  A checkpoint is a valid saved model
+//!   — `serve`'s hot-reload registry can load it mid-train.
+//! - **Online-tier drain.**  On SIGTERM the server fails `/healthz`
+//!   first (so load balancers stop routing), finishes in-flight
+//!   requests, then exits within `--drain-ms`.  The `route` tier
+//!   retries transient backend failures with backoff, so a draining
+//!   shard is invisible to fleet callers.
+//! - **Failpoints.**  [`faults`] is a std-only failpoint facility:
+//!   `BBMH_FAILPOINTS=site=action[:prob][:count]` arms error / panic /
+//!   partial-write / delay injection at the crash-critical sites
+//!   (`cache.write_record`, `cache.finalize`, `replay.decode`,
+//!   `serve.batch`, `route.forward`, `device.launch`).  Disarmed cost is
+//!   one relaxed atomic load.  `tests/crash_recovery.rs` drives the
+//!   recovery guarantees through these sites, and CI's `fault-injection`
+//!   job runs the suite under a failpoint matrix (delays everywhere,
+//!   forced torn writes, forced finalize crashes).
 
 pub mod config;
 pub mod coordinator;
@@ -148,6 +192,7 @@ pub mod data;
 pub mod encode;
 pub mod error;
 pub mod experiments;
+pub mod faults;
 pub mod hashing;
 pub mod kernels;
 pub mod metrics;

@@ -85,11 +85,22 @@ USAGE:
              [--encoder bbit|vw|rp|oph] [scheme flags] [--workers N] [--seed N]
              [--cache-compress] [--block-kb 256] [--legacy-reader]
              [--device cpu|xla] [--artifacts DIR]
+             [--on-error fail|skip] [--quarantine FILE]
+             [--sync-chunks 64] [--resume]
              [--trace-out FILE] [--report-json FILE]
              (--cache-out streams packed-code chunks to the on-disk hashed
               cache: hash once, train many times, constant memory; the v3
               cache carries a chunk index for parallel replay, and
-              --cache-compress RLE-compresses record payloads)
+              --cache-compress RLE-compresses record payloads.
+              The cache write is crash-safe: records land in CACHE.tmp
+              beside a resume journal fsynced every --sync-chunks chunks,
+              and an atomic rename publishes the finished cache; after a
+              crash, --resume salvages the validated prefix and restarts
+              ingest at the journaled byte offset — the resumed cache is
+              byte-identical to an uninterrupted run.
+              --on-error skip parses past malformed LibSVM lines instead
+              of failing fast, counting them in the summary/report;
+              --quarantine FILE appends each skipped line's raw bytes)
   bbit-mh train --input FILE --solver svm|lr [--c 1.0] [--cv FOLDS]
              [--encoder bbit|vw|rp|oph|none] [scheme flags]
              [--train-frac 0.5] [--seed N] [--save-model FILE]
@@ -97,6 +108,7 @@ USAGE:
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda L]
              [--holdout FRAC] [--holdout-seed N] [--eval] [--save-model FILE]
              [--replay-threads N]
+             [--checkpoint FILE] [--checkpoint-every 1] [--resume]
              (multi-epoch replay of a hashed cache; the cache header
               records the encoder spec; sgd streams in O(dim) memory;
               --holdout (sgd only) carves a deterministic FRAC held-out
@@ -105,10 +117,16 @@ USAGE:
               --replay-threads N>1 fans replay across a reader pool —
               svm/lr materialize and --holdout decode in parallel with
               bit-identical results; plain sgd runs per-shard workers
-              synchronized by iterate averaging at epoch boundaries)
+              synchronized by iterate averaging at epoch boundaries;
+              --checkpoint FILE (sgd, sequential replay) atomically
+              snapshots weights + optimizer state every --checkpoint-every
+              epochs — a checkpoint is a valid model file serve can
+              hot-load — and --resume continues a crashed run to
+              bit-identical final weights)
   bbit-mh train --input FILE --stream [--encoder bbit|oph] [scheme flags]
              [--loss logistic|sqhinge] [--lr0 0.5] [--batch 256] [--lambda 1e-4]
              [--seed N] [--save-model FILE] [--device cpu|xla] [--artifacts DIR]
+             [--on-error fail|skip] [--quarantine FILE]
              [--trace-out FILE] [--report-json FILE]
              (one-pass hash-and-train: nothing materialized, prints progressive loss)
   bbit-mh classify --model FILE (--input FILE [--out FILE] [--block-kb 256]
@@ -124,10 +142,14 @@ USAGE:
              [--batch-max 64] [--batch-wait-us 200] [--queue 1024]
              [--deadline-ms 50] [--reload-poll-ms 200] [--idle-timeout-s 10]
              [--similar-index FILE[,FILE...]] [--slow-ms N] [--trace-out FILE]
+             [--drain-ms 5000]
              (micro-batched HTTP scoring: POST /score LibSVM lines,
               GET /metrics, GET /healthz; bounded queue sheds with 503;
               the model file is watched and hot-reloaded; port 0 picks an
               ephemeral port; Enter or EOF on stdin stops the server;
+              SIGTERM drains gracefully — /healthz fails first so load
+              balancers stop routing here, in-flight requests finish,
+              bounded by --drain-ms;
               --similar-index loads one or more BBMHSIM1 shard snapshots
               and adds POST /similar: body `doc:<id>` or a LibSVM line,
               optional X-Top-K header, answers top-K neighbor ids with
@@ -402,6 +424,15 @@ fn ingest_summary(report: &bbit_mh::coordinator::PipelineReport) -> String {
     )
 }
 
+/// Skipped-line counter for the `preprocess`/`train --stream` summaries —
+/// empty unless `--on-error skip` actually skipped something.
+fn errors_summary(report: &bbit_mh::coordinator::PipelineReport) -> String {
+    if report.parse_errors == 0 {
+        return String::new();
+    }
+    format!(", {} malformed lines skipped", report.parse_errors)
+}
+
 /// `--report-json FILE`: persist the machine-readable [`PipelineReport`]
 /// alongside the human summary — the hook the benchmark harness and any
 /// dashboard scrape instead of parsing stderr.
@@ -418,6 +449,34 @@ fn write_report_json(
     Ok(())
 }
 
+/// `--on-error fail|skip` (+ `--quarantine FILE`): the raw-ingest error
+/// policy.  Returns whether malformed lines are skipped.  `--quarantine`
+/// without skip would read as "errors recorded" while the run still
+/// fails fast, and the legacy line reader has no lossy parse — both are
+/// typed errors, checked before any IO.
+fn ingest_error_flags(args: &Args) -> Result<bool> {
+    let skip = match args.get("on-error", "fail".to_string())?.as_str() {
+        "fail" => false,
+        "skip" => true,
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "unknown --on-error {other:?} (want fail|skip)"
+            )))
+        }
+    };
+    if args.has("quarantine") && !skip {
+        return Err(Error::InvalidArg(
+            "--quarantine records skipped lines; it requires --on-error skip".into(),
+        ));
+    }
+    if skip && args.has("legacy-reader") {
+        return Err(Error::InvalidArg(
+            "--on-error skip lives in the byte-block parser; drop --legacy-reader".into(),
+        ));
+    }
+    Ok(skip)
+}
+
 /// Run `spec` over a raw LibSVM file into `sink`, choosing the default
 /// byte-block parse-in-worker path or the legacy line reader
 /// (`--legacy-reader`).
@@ -428,20 +487,63 @@ fn run_raw_input<S: bbit_mh::coordinator::PipelineSink>(
     spec: &EncoderSpec,
     sink: &mut S,
 ) -> Result<bbit_mh::coordinator::PipelineReport> {
+    run_raw_input_at(args, pipe, input, spec, sink, None)
+}
+
+/// [`run_raw_input`] with an optional resume cursor: `Some((byte_offset,
+/// next_line))` — the [`ResumePoint`](bbit_mh::encode::cache::ResumePoint)
+/// a durable cache journaled — starts the block reader mid-file instead
+/// of at byte 0.  Callers reject `--legacy-reader` before passing a
+/// cursor (the line reader cannot seek).
+fn run_raw_input_at<S: bbit_mh::coordinator::PipelineSink>(
+    args: &Args,
+    pipe: &Pipeline,
+    input: &str,
+    spec: &EncoderSpec,
+    sink: &mut S,
+    resume_at: Option<(u64, u64)>,
+) -> Result<bbit_mh::coordinator::PipelineReport> {
     let device_dir = device_flag(args)?; // validate before IO
+    let skip = ingest_error_flags(args)?; // validate before IO
     if args.has("legacy-reader") {
         let source = ChunkedReader::new(LibsvmReader::open(input)?.binary(), 256);
-        pipe.run_sink(source, spec, sink)
-    } else {
-        let block_bytes = block_bytes_flag(args)?; // validate before IO
-        let blocks = BlockReader::open(input)?.with_block_bytes(block_bytes);
-        if let Some(dir) = device_dir {
-            let encoder = bbit_mh::encode::DeviceEncoder::new(spec, &dir)?;
-            pipe.run_encoder_blocks(blocks, true, &encoder, sink)
-        } else {
-            pipe.run_sink_blocks(blocks, true, spec, sink)
-        }
+        return pipe.run_sink(source, spec, sink);
     }
+    let block_bytes = block_bytes_flag(args)?; // validate before IO
+    let blocks = match resume_at {
+        Some((offset, line)) => BlockReader::open_at(input, offset, line as usize)?,
+        None => BlockReader::open(input)?,
+    }
+    .with_block_bytes(block_bytes);
+    // skipped lines land here raw, with their line number and parse error,
+    // so a quarantine file is directly re-feedable after hand repair
+    let mut qw = match args.flags.get("quarantine") {
+        Some(p) => Some(std::io::BufWriter::new(std::fs::File::create(p)?)),
+        None => None,
+    };
+    let mut on_bad = |b: &bbit_mh::data::libsvm::BadLine| -> Result<()> {
+        if let Some(w) = qw.as_mut() {
+            writeln!(w, "# line {}: {}", b.line, b.msg)?;
+            w.write_all(&b.bytes)?;
+            w.write_all(b"\n")?;
+        }
+        Ok(())
+    };
+    let ingest = bbit_mh::coordinator::pipeline::IngestOptions {
+        skip_errors: skip,
+        on_bad_line: Some(&mut on_bad),
+    };
+    let report = if let Some(dir) = device_dir {
+        let encoder = bbit_mh::encode::DeviceEncoder::new(spec, &dir)?;
+        pipe.run_encoder_blocks_opts(blocks, true, &encoder, sink, ingest)?
+    } else {
+        let encoder = spec.encoder()?;
+        pipe.run_encoder_blocks_opts(blocks, true, encoder.as_ref(), sink, ingest)?
+    };
+    if let Some(mut w) = qw {
+        w.flush()?;
+    }
+    Ok(report)
 }
 
 fn cmd_preprocess(args: &Args) -> Result<()> {
@@ -450,6 +552,34 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
     let workers: usize = args.get("workers", bbit_mh::config::available_workers())?;
     let seed: u64 = args.get("seed", 1)?;
     let spec = encoder_spec(args, &scheme, seed)?;
+    // durable-cache flags, validated before any IO: --resume restarts a
+    // crashed --cache-out run at its journaled byte offset, --sync-chunks
+    // sets how often the journal fsyncs (bounding replayed work)
+    let resume = args.has("resume");
+    let sync_chunks: usize =
+        args.get("sync-chunks", bbit_mh::encode::cache::DEFAULT_SYNC_CHUNKS)?;
+    if sync_chunks == 0 {
+        return Err(Error::InvalidArg("--sync-chunks must be >= 1".into()));
+    }
+    if (resume || args.has("sync-chunks")) && !args.has("cache-out") {
+        return Err(Error::InvalidArg(
+            "--resume/--sync-chunks apply to the durable --cache-out path".into(),
+        ));
+    }
+    if resume && args.has("legacy-reader") {
+        return Err(Error::InvalidArg(
+            "--resume restarts at a journaled byte offset; the legacy line reader \
+             cannot seek — drop --legacy-reader"
+                .into(),
+        ));
+    }
+    if resume && device_flag(args)?.is_some() {
+        return Err(Error::InvalidArg(
+            "--resume with --device xla is untested; rerun the resumed pass with \
+             --device cpu (output is bit-identical)"
+                .into(),
+        ));
+    }
     let pipe = Pipeline::new(PipelineConfig { workers, chunk_size: 256, queue_depth: 4 });
     if let Some(cache_out) = args.flags.get("cache-out") {
         if spec.packed_geometry().is_none() {
@@ -459,12 +589,38 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             )));
         }
         // out-of-core path: chunks stream to disk as they are encoded;
-        // memory stays bounded by the pipeline queues
+        // memory stays bounded by the pipeline queues.  The write is
+        // crash-safe: records land in <cache>.tmp beside a resume
+        // journal, and finalize renames the tmp into place — a reader
+        // never sees a partial cache under the destination name.
         let opts = bbit_mh::encode::cache::CacheWriteOptions {
             compress: args.has("cache-compress"),
         };
-        let mut sink = CacheSink::create_opts(cache_out, &spec, opts)?;
-        let report = run_raw_input(args, &pipe, input, &spec, &mut sink)?;
+        let (mut sink, resume_at) = if resume {
+            match CacheSink::resume_durable(cache_out, &spec, opts, sync_chunks)? {
+                Some((sink, point)) => {
+                    eprintln!(
+                        "resuming {cache_out}: {} records ({} rows) salvaged; \
+                         restarting input at byte {} (line {})",
+                        point.records, point.rows, point.input_offset, point.next_line,
+                    );
+                    (sink, Some((point.input_offset, point.next_line)))
+                }
+                None if Path::new(cache_out).exists() => {
+                    // no tmp/journal but the destination is there: the
+                    // crashed run actually finished its rename
+                    eprintln!("{cache_out} is already finalized; nothing to resume");
+                    return Ok(());
+                }
+                None => {
+                    eprintln!("no partial cache for {cache_out}; starting fresh");
+                    (CacheSink::create_durable(cache_out, &spec, opts, sync_chunks)?, None)
+                }
+            }
+        } else {
+            (CacheSink::create_durable(cache_out, &spec, opts, sync_chunks)?, None)
+        };
+        let report = run_raw_input_at(args, &pipe, input, &spec, &mut sink, resume_at)?;
         write_report_json(args, &report)?;
         let bytes = if opts.compress {
             let m = sink.meta();
@@ -479,7 +635,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         };
         eprintln!(
             "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read + {:.2}s stalled, \
-             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks{}{}{}) -> {}",
+             {:.2} hash-cpu-s, {:.2}s cache write, reorder peak {} chunks{}{}{}{}) -> {}",
             report.docs,
             report.wall_seconds,
             report.read_seconds,
@@ -489,6 +645,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             report.reorder_peak,
             ingest_summary(&report),
             device_summary(&report),
+            errors_summary(&report),
             bytes,
             cache_out,
         );
@@ -514,7 +671,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             )?;
             eprintln!(
                 "{scheme}-encoded {} docs in {:.2}s wall ({:.2}s read, {:.2} hash-cpu-s, \
-                 {} stalls{}{}) -> {} ({} ideal bytes)",
+                 {} stalls{}{}{}) -> {} ({} ideal bytes)",
                 report.docs,
                 report.wall_seconds,
                 report.read_seconds,
@@ -522,6 +679,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
                 report.backpressure_stalls,
                 ingest_summary(&report),
                 device_summary(&report),
+                errors_summary(&report),
                 out,
                 bb.codes.ideal_bytes(),
             );
@@ -531,11 +689,12 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
             w.write_dataset(&ds)?;
             w.finish()?;
             eprintln!(
-                "{scheme}-encoded {} docs in {:.2}s wall{}{} -> {out}",
+                "{scheme}-encoded {} docs in {:.2}s wall{}{}{} -> {out}",
                 report.docs,
                 report.wall_seconds,
                 ingest_summary(&report),
                 device_summary(&report),
+                errors_summary(&report),
             );
         }
     }
@@ -601,6 +760,44 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
     }
     let c: f64 = args.get("c", 1.0)?;
     let replay_threads = replay_threads_flag(args)?;
+    // crash-safe training: --checkpoint PATH snapshots weights + optimizer
+    // state atomically every --checkpoint-every epochs; --resume continues
+    // a crashed run to bit-identical final weights.  Validated before the
+    // cache is opened so misuse fails fast and typed.
+    let checkpoint = args.flags.get("checkpoint");
+    if checkpoint.is_none() && (args.has("checkpoint-every") || args.has("resume")) {
+        return Err(Error::InvalidArg(
+            "--checkpoint-every/--resume ride on --checkpoint PATH".into(),
+        ));
+    }
+    let checkpoint_every: usize = args.get("checkpoint-every", 1usize)?;
+    if checkpoint.is_some() {
+        if solver != "sgd" {
+            return Err(Error::InvalidArg(format!(
+                "--checkpoint snapshots streaming SGD state between epochs; \
+                 --solver {solver} trains in one batch"
+            )));
+        }
+        if args.has("holdout") {
+            return Err(Error::InvalidArg(
+                "--checkpoint with --holdout is not supported: the holdout replay \
+                 carries split state the checkpoint format does not"
+                    .into(),
+            ));
+        }
+        if replay_threads != 1 {
+            return Err(Error::InvalidArg(
+                "--checkpoint requires --replay-threads 1: iterate-averaged shards \
+                 have per-worker state the checkpoint format does not carry"
+                    .into(),
+            ));
+        }
+        if checkpoint_every == 0 {
+            return Err(Error::InvalidArg(
+                "--checkpoint-every must be >= 1 (epochs between snapshots)".into(),
+            ));
+        }
+    }
     let meta = CacheReader::open(cache)?.meta();
     eprintln!("cache {cache}: {} docs, encoder {:?}", meta.n, meta.spec);
     let model = match solver.as_str() {
@@ -632,9 +829,18 @@ fn cmd_train_cache(args: &Args, cache: &str) -> Result<()> {
                     (m, s, Some(h))
                 }
                 None => {
-                    let (m, s) = bbit_mh::solver::train_from_cache_threads(
-                        cache, &cfg, replay_threads,
-                    )?;
+                    let (m, s) = match checkpoint {
+                        Some(ck) => bbit_mh::solver::train_from_cache_checkpointed(
+                            cache,
+                            &cfg,
+                            Path::new(ck),
+                            checkpoint_every,
+                            args.has("resume"),
+                        )?,
+                        None => bbit_mh::solver::train_from_cache_threads(
+                            cache, &cfg, replay_threads,
+                        )?,
+                    };
                     (m, s, None)
                 }
             };
@@ -717,7 +923,7 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
     println!(
         "solver=sgd method=stream: one-pass trained on {} docs, progressive loss {:.4}, \
          {:.2}s wall ({:.2}s read + {:.2}s stalled, {:.2} hash-cpu-s, {:.2}s solver, \
-         reorder peak {} chunks{}{})",
+         reorder peak {} chunks{}{}{})",
         report.docs,
         stats.objective,
         report.wall_seconds,
@@ -728,6 +934,7 @@ fn cmd_train_stream(args: &Args) -> Result<()> {
         report.reorder_peak,
         ingest_summary(&report),
         device_summary(&report),
+        errors_summary(&report),
     );
     if let Some(model_path) = args.flags.get("save-model") {
         let saved = bbit_mh::solver::SavedModel::new(spec, model)?;
@@ -783,8 +990,26 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .into(),
         ));
     }
+    // the skip/quarantine policy lives in the byte-block ingest pipeline;
+    // cache replay and the in-memory split read already-validated bytes
+    if (args.has("on-error") || args.has("quarantine")) && !args.has("stream") {
+        return Err(Error::InvalidArg(
+            "--on-error/--quarantine apply to preprocess and train --stream \
+             (the raw-ingest pipeline paths)"
+                .into(),
+        ));
+    }
     if let Some(cache) = args.flags.get("cache") {
         return cmd_train_cache(args, cache.as_str());
+    }
+    // epoch checkpoints ride the streaming cache replay — every other
+    // train path rejects the flags rather than silently not snapshotting
+    if args.has("checkpoint") || args.has("checkpoint-every") || args.has("resume") {
+        return Err(Error::InvalidArg(
+            "--checkpoint/--checkpoint-every/--resume apply to train --cache \
+             (streaming cache replay)"
+                .into(),
+        ));
     }
     // the held-out split is carved during cache replay; the one-pass
     // stream and the in-memory paths have their own eval story
@@ -1064,6 +1289,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         idle_timeout: Duration::from_secs(args.get("idle-timeout-s", 10u64)?),
         slow_ms: slow_ms_flag(args)?,
     };
+    let drain_ms: u64 = args.get("drain-ms", 5000u64)?;
     let similar = match args.flags.get("similar-index") {
         None => None,
         Some(list) => {
@@ -1090,16 +1316,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         "POST /score, GET /metrics, GET /healthz"
     };
+    // arm the SIGTERM flag before the listener exists so a signal racing
+    // startup is never lost
+    bbit_mh::util::signal::install_sigterm_handler();
     let server = bbit_mh::serve::ModelServer::start_with_index(model, cfg, similar)?;
     eprintln!(
         "serving {model} at http://{} ({routes}); \
-         watching the model file for hot reload; press Enter (or close stdin) to stop",
+         watching the model file for hot reload; press Enter (or close stdin) to \
+         stop, SIGTERM to drain (fails /healthz, finishes in-flight work, \
+         bounded by --drain-ms)",
         server.local_addr(),
     );
-    let mut line = String::new();
-    let _ = std::io::stdin().read_line(&mut line);
+    // stdin blocks, so it gets its own thread; the main loop multiplexes
+    // "operator pressed Enter" against "the platform sent SIGTERM"
+    let (stdin_tx, stdin_rx) = std::sync::mpsc::channel::<()>();
+    std::thread::spawn(move || {
+        let mut line = String::new();
+        let _ = std::io::stdin().read_line(&mut line);
+        let _ = stdin_tx.send(());
+    });
+    let report = loop {
+        if bbit_mh::util::signal::term_requested() {
+            eprintln!("SIGTERM: draining (bound {drain_ms} ms)");
+            break server.drain(Duration::from_millis(drain_ms));
+        }
+        match stdin_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(()) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                break server.shutdown()
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+        }
+    };
     eprintln!("--- shutdown report ---");
-    eprint!("{}", server.shutdown());
+    eprint!("{report}");
     Ok(())
 }
 
@@ -1457,6 +1706,107 @@ mod tests {
         let err =
             run(&argv(&["train", "--input", "f", "--holdout", "0.2"])).unwrap_err();
         assert!(err.to_string().contains("holdout"), "{err}");
+    }
+
+    #[test]
+    fn preprocess_resume_flags_are_validated_before_io() {
+        // rejected before any file IO — bogus paths never get opened and
+        // no .tmp/journal files appear
+        let err = run(&argv(&["preprocess", "--input", "f", "--out", "o", "--resume"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--resume"), "{err}");
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--out", "o", "--sync-chunks", "8",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("sync-chunks"), "{err}");
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--cache-out", "c", "--sync-chunks", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("sync-chunks"), "{err}");
+        // the legacy line reader cannot seek to the journaled offset
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--cache-out", "c", "--resume", "--legacy-reader",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("legacy-reader"), "{err}");
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--cache-out", "c", "--resume", "--device", "xla",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("--device"), "{err}");
+    }
+
+    #[test]
+    fn ingest_error_flags_are_validated_before_io() {
+        // --quarantine without skip would read as "errors recorded" while
+        // the run still fails fast on the first bad line
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--out", "o", "--quarantine", "q",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("quarantine"), "{err}");
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--out", "o", "--on-error", "explode",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("on-error"), "{err}");
+        // the lossy parse lives in the byte-block path only
+        let err = run(&argv(&[
+            "preprocess", "--input", "f", "--out", "o", "--on-error", "skip",
+            "--legacy-reader",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("legacy-reader"), "{err}");
+        // cache replay and the in-memory split read already-validated bytes
+        let err = run(&argv(&["train", "--cache", "c", "--on-error", "skip"])).unwrap_err();
+        assert!(err.to_string().contains("on-error"), "{err}");
+        let err = run(&argv(&["train", "--input", "f", "--quarantine", "q"])).unwrap_err();
+        assert!(err.to_string().contains("quarantine"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_flags_are_validated_before_io() {
+        // checkpoints ride the streaming cache replay — other paths reject
+        let err = run(&argv(&["train", "--input", "f", "--checkpoint", "ck"])).unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
+        let err = run(&argv(&["train", "--input", "f", "--stream", "--resume"])).unwrap_err();
+        assert!(err.to_string().contains("resume"), "{err}");
+        // the companion flags mean nothing without --checkpoint PATH
+        let err =
+            run(&argv(&["train", "--cache", "c", "--checkpoint-every", "2"])).unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
+        let err = run(&argv(&["train", "--cache", "c", "--resume"])).unwrap_err();
+        assert!(err.to_string().contains("resume"), "{err}");
+        // sequential sgd only: batch solvers, the holdout split and the
+        // reader pool all carry state the checkpoint format does not
+        let err = run(&argv(&[
+            "train", "--cache", "c", "--solver", "svm", "--checkpoint", "ck",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
+        let err = run(&argv(&[
+            "train", "--cache", "c", "--checkpoint", "ck", "--holdout", "0.2",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("holdout"), "{err}");
+        let err = run(&argv(&[
+            "train", "--cache", "c", "--checkpoint", "ck", "--replay-threads", "2",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("replay-threads"), "{err}");
+        let err = run(&argv(&[
+            "train", "--cache", "c", "--checkpoint", "ck", "--checkpoint-every", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("checkpoint-every"), "{err}");
+    }
+
+    #[test]
+    fn drain_ms_rejects_garbage_before_binding() {
+        let err = run(&argv(&["serve", "--model", "m", "--drain-ms", "soon"])).unwrap_err();
+        assert!(err.to_string().contains("drain-ms"), "{err}");
     }
 }
 

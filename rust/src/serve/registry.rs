@@ -193,6 +193,48 @@ mod tests {
         std::fs::remove_dir_all(dir).ok();
     }
 
+    /// The crash regression behind the atomic-save protocol: a model file
+    /// torn mid-write (a valid prefix, truncated inside the weight block)
+    /// must never swap in over the live model.  Checkpoint saves now go
+    /// through tmp+rename so the watcher never sees this state from our
+    /// own trainer, but anything else writing the path can still tear.
+    #[test]
+    fn torn_model_file_never_poisons_live_server() {
+        let dir = temp_dir("torn");
+        let path = dir.join("m.bbmh");
+        let spec = EncoderSpec::Oph { bins: 4, b: 2, seed: 3 };
+        write_model(&path, spec, 0.0);
+        let reg = ModelRegistry::open(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // tear the file at several depths inside the weight block
+        for cut in [good.len() - 1, good.len() - 7, good.len() / 2] {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            std::fs::write(&path, &good[..cut]).unwrap();
+            let mut saw_error = false;
+            for _ in 0..50 {
+                match reg.poll_reload() {
+                    Err(_) => {
+                        saw_error = true;
+                        break;
+                    }
+                    Ok(true) => panic!("torn file (cut at {cut}) must not swap in"),
+                    Ok(false) => std::thread::sleep(std::time::Duration::from_millis(25)),
+                }
+            }
+            assert!(saw_error, "torn file (cut at {cut}) never surfaced as an error");
+            assert_eq!(reg.epoch(), 1, "old model must keep serving");
+            assert_eq!(reg.current().model.model.w.len(), spec.output_dim());
+        }
+
+        // the atomic rewrite that follows a torn interval recovers
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        write_model(&path, spec, 3.0);
+        assert!(filetime_changed(&path, &reg));
+        assert_eq!(reg.epoch(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
     #[test]
     fn missing_file_is_a_typed_error() {
         let dir = temp_dir("missing");

@@ -101,6 +101,10 @@ pub struct RouterConfig {
     pub fail_threshold: u32,
     /// Backoff ceiling for probing a down backend.
     pub max_backoff: Duration,
+    /// Pause before retrying a failed forward on another (or, for pinned
+    /// doc lookups, the same) backend — long enough for a crashed backend
+    /// to finish dying, short enough to stay inside client deadlines.
+    pub retry_backoff: Duration,
     /// Idle keep-alive client connections close after this long.
     pub idle_timeout: Duration,
     /// Log any request slower than this (milliseconds, with its trace id)
@@ -119,6 +123,7 @@ impl Default for RouterConfig {
             health_timeout: Duration::from_secs(2),
             fail_threshold: 2,
             max_backoff: Duration::from_secs(2),
+            retry_backoff: Duration::from_millis(20),
             idle_timeout: Duration::from_secs(10),
             slow_ms: None,
         }
@@ -138,6 +143,9 @@ pub struct RouterMetrics {
     pub partial_results: Counter,
     /// Backend forwards that failed at the socket level.
     pub forward_failures: Counter,
+    /// Forwards re-attempted (alternate backend for `/score`, same owner
+    /// for `doc:<id>`) after a socket-level failure, post-backoff.
+    pub forward_retries: Counter,
     /// Up→down and down→up health transitions.
     pub health_transitions: Counter,
     /// Backends currently passing health probes.
@@ -182,6 +190,11 @@ impl RouterMetrics {
             "route_forward_failures_total",
             "Backend forwards that failed at the socket level.",
             self.forward_failures.get(),
+        )
+        .counter(
+            "route_forward_retries_total",
+            "Forwards re-attempted on another (or the owning) backend after a failure.",
+            self.forward_retries.get(),
         )
         .counter(
             "route_health_transitions_total",
@@ -487,6 +500,10 @@ fn forward_post(
 ) -> Option<http::Response> {
     let name = &ctx.cfg.backends[backend];
     let result = (|| -> Result<http::Response> {
+        // failpoint: an injected error is indistinguishable from a
+        // connect-refused here — it feeds the same failure accounting,
+        // health demotion and retry machinery the real fault would
+        crate::faults::fail(crate::faults::site::ROUTE_FORWARD)?;
         let addr = name
             .to_socket_addrs()?
             .next()
@@ -535,10 +552,18 @@ fn handle_score(
     let fwd_hdrs = [tid()];
     let n = ctx.cfg.backends.len();
     let start = ctx.rr.fetch_add(1, Ordering::Relaxed);
+    let mut failed_before = false;
     for probe in 0..n {
         let backend = (start + probe) % n;
         if !ctx.is_healthy(backend) {
             continue;
+        }
+        // every attempt after a socket-level failure is a retry: pause one
+        // backoff beat first so a backend crashing under us finishes dying
+        // before the alternate takes the request
+        if failed_before {
+            ctx.metrics.forward_retries.inc();
+            std::thread::sleep(ctx.cfg.retry_backoff);
         }
         let mut leg = trace::Span::child("route.forward", rctx);
         leg.record("backend", backend as f64);
@@ -554,6 +579,7 @@ fn handle_score(
             return http::write_response(stream, resp.status, reason, &headers, &resp.body)
                 .is_ok();
         }
+        failed_before = true;
     }
     ctx.metrics.errors.inc();
     root.record("status", 503.0);
@@ -638,7 +664,18 @@ fn handle_similar(
         };
         let shard = (id % ctx.cfg.shards as u64) as usize;
         let backend = ctx.assignment[shard];
-        if ctx.is_healthy(backend) {
+        // the shard is pinned to its owner, so there is no alternate to
+        // fail over to — instead one retry against the same owner after a
+        // backoff beat, covering the transient-refusal window (backend
+        // restarting, accept queue momentarily full)
+        for attempt in 0..2 {
+            if !ctx.is_healthy(backend) {
+                break;
+            }
+            if attempt > 0 {
+                ctx.metrics.forward_retries.inc();
+                std::thread::sleep(ctx.cfg.retry_backoff);
+            }
             let mut leg = trace::Span::child("route.forward", rctx);
             leg.record("backend", backend as f64);
             leg.record("shard", shard as f64);
@@ -839,6 +876,7 @@ mod tests {
         assert!(text.contains("route_backends_up 1"), "{text}");
         assert!(text.contains("route_backends_configured 2"), "{text}");
         assert!(text.contains("route_requests_total 5"), "{text}");
+        assert!(text.contains("route_forward_retries_total 0"), "{text}");
         assert!(text.contains("route_health_transitions_total 0"), "{text}");
     }
 

@@ -42,7 +42,7 @@
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -147,6 +147,9 @@ pub struct ServeMetrics {
     pub queue_depth: Gauge,
     /// Similarity shards resident in this replica (0 without an index).
     pub similar_shards: Gauge,
+    /// 1 while the server is draining (SIGTERM received, `/healthz`
+    /// failing, in-flight work finishing), 0 otherwise.
+    pub draining: Gauge,
 }
 
 impl ServeMetrics {
@@ -171,6 +174,11 @@ impl ServeMetrics {
             "serve_similar_shards",
             "Similarity shards resident in this replica.",
             self.similar_shards.get(),
+        )
+        .gauge(
+            "serve_draining",
+            "1 while the server is draining after SIGTERM, 0 otherwise.",
+            self.draining.get(),
         )
         .counter(
             "serve_docs_received_total",
@@ -222,6 +230,11 @@ impl ServeMetrics {
             "/similar queries answered by a worker.",
             self.similar_served.get(),
         )
+        .counter(
+            "replay_index_fallback_total",
+            "Pooled cache replays that degraded to sequential because the index footer was missing or corrupt.",
+            crate::coordinator::replay::index_fallbacks(),
+        )
         .histogram("serve_batch_size", "Documents per scored micro-batch.", &self.batch_size, 1.0)
         .histogram(
             "serve_queue_wait_seconds",
@@ -267,6 +280,22 @@ struct ServerCtx {
     /// at startup.  Immutable once loaded (rebuild + restart to refresh).
     similar: Option<Arc<LshIndex>>,
     shutdown: AtomicBool,
+    /// Set by [`ModelServer::begin_drain`]: `/healthz` answers 503 (load
+    /// balancers stop routing here) while in-flight requests finish.
+    draining: AtomicBool,
+    /// Requests currently inside a handler (parsed but not yet answered).
+    /// [`ModelServer::drain`] waits for this to reach zero.
+    inflight: AtomicU64,
+}
+
+/// Decrements the in-flight gauge when a request handler finishes, even on
+/// an early return or panic.
+struct InflightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// A running server; dropping it without [`shutdown`](Self::shutdown)
@@ -314,6 +343,8 @@ impl ModelServer {
             metrics,
             similar,
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
             cfg,
         });
         let mut threads = Vec::new();
@@ -344,6 +375,30 @@ impl ModelServer {
 
     pub fn registry(&self) -> &ModelRegistry {
         &self.ctx.registry
+    }
+
+    /// Flip the server into draining mode: `/healthz` starts answering
+    /// `503 draining` immediately so load balancers (and the fleet
+    /// router's health poller) stop routing new work here, while score
+    /// and similar traffic already inside a handler keeps being served.
+    /// New `POST` work arriving after this point is refused with 503.
+    pub fn begin_drain(&self) {
+        self.ctx.draining.store(true, Ordering::SeqCst);
+        self.ctx.metrics.draining.set(1);
+    }
+
+    /// Graceful SIGTERM sequence: [`begin_drain`](Self::begin_drain), wait
+    /// (bounded by `bound`) for every in-flight request to finish, then
+    /// [`shutdown`](Self::shutdown).  Requests still in flight when the
+    /// bound expires are abandoned to the normal shutdown path, which
+    /// still scores whatever is already in the admission queue.
+    pub fn drain(self, bound: Duration) -> String {
+        self.begin_drain();
+        let give_up = Instant::now() + bound;
+        while self.ctx.inflight.load(Ordering::SeqCst) > 0 && Instant::now() < give_up {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.shutdown()
     }
 
     /// Graceful stop: close admission (in-queue jobs still get scored),
@@ -420,6 +475,17 @@ fn scorer_loop(ctx: &Arc<ServerCtx>) {
     // per-worker signature scratch for /similar (the index never reloads)
     let mut sim_scratch = None;
     while ctx.batcher.next_batch(ctx.cfg.batch_max, ctx.cfg.batch_wait, &mut batch) {
+        // failpoint: `delay-ms` stretches the scoring window (the drain
+        // tests widen their race window with it); an injected error drops
+        // the whole batch unscored — every job answers Expired, exactly
+        // what a handler sees from a worker that died mid-batch
+        if crate::faults::trigger(crate::faults::site::SERVE_BATCH).is_some() {
+            for job in batch.drain(..) {
+                ctx.metrics.docs_expired.inc();
+                let _ = job.resp.send(ScoreOutcome::Expired);
+            }
+            continue;
+        }
         ctx.metrics.batch_size.observe(batch.len() as u64);
         let em = ctx.registry.current();
         let stale = match &scratch {
@@ -532,14 +598,28 @@ fn handle_conn(ctx: &Arc<ServerCtx>, mut stream: TcpStream) {
             }
         };
         ctx.metrics.http_requests.inc();
+        ctx.inflight.fetch_add(1, Ordering::SeqCst);
+        let _inflight = InflightGuard(&ctx.inflight);
         // the request's correlation id: taken from the client's
         // X-Trace-Id when it sent a valid one, minted here otherwise —
         // either way it is echoed on every response this server writes
         let trace_id =
             req.trace_id().and_then(trace::parse_id).unwrap_or_else(trace::gen_id);
         let tid = (http::TRACE_HEADER, trace::format_id(trace_id));
-        let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::Relaxed);
+        let draining = ctx.draining.load(Ordering::SeqCst);
+        let keep =
+            req.keep_alive() && !ctx.shutdown.load(Ordering::Relaxed) && !draining;
         let io_ok = match (req.method.as_str(), req.path.as_str()) {
+            // work arriving *after* the drain began is refused; requests
+            // already inside a handler when SIGTERM landed complete
+            ("POST", "/score") | ("POST", "/similar") if draining => http::write_response(
+                &mut stream,
+                503,
+                "Service Unavailable",
+                &[("Retry-After", "1".to_string()), tid],
+                b"draining\n",
+            )
+            .is_ok(),
             ("POST", "/score") => handle_score(ctx, &req.body, &mut stream, trace_id),
             ("POST", "/similar") => handle_similar(ctx, &req, &mut stream, trace_id),
             ("GET", "/metrics") => {
@@ -548,6 +628,16 @@ fn handle_conn(ctx: &Arc<ServerCtx>, mut stream: TcpStream) {
                     .render(ctx.registry.epoch(), ctx.batcher.depth());
                 http::write_response(&mut stream, 200, "OK", &[tid], body.as_bytes()).is_ok()
             }
+            // the drain sequence fails health *first*: pollers see the
+            // 503 and stop routing before any capacity disappears
+            ("GET", "/healthz") if draining => http::write_response(
+                &mut stream,
+                503,
+                "Service Unavailable",
+                &[tid],
+                b"draining\n",
+            )
+            .is_ok(),
             ("GET", "/healthz") => {
                 let em = ctx.registry.current();
                 let mut body = format!(
@@ -870,6 +960,10 @@ mod tests {
             "serve_model_epoch 2",
             "serve_queue_depth 1",
             "serve_similar_shards 0",
+            "serve_draining 0",
+            // value elided: the fallback counter is process-global and
+            // sibling tests may bump it concurrently
+            "# TYPE replay_index_fallback_total counter",
             "# TYPE serve_docs_received_total counter",
             "serve_docs_received_total 3",
             "serve_docs_shed_total 0",

@@ -29,9 +29,9 @@ pub use cv::{cross_validate, CvReport};
 pub use dcd_svm::{train_svm, SvmConfig, SvmLoss};
 pub use linear::{accuracy, FeatureMatrix, LinearModel, TrainStats};
 pub use lr_newton::{train_lr, LrConfig};
-pub use model_io::SavedModel;
+pub use model_io::{OptState, SavedModel};
 pub use sgd::{
-    eval_from_cache, eval_from_cache_threads, train_from_cache, train_from_cache_holdout,
-    train_from_cache_holdout_threads, train_from_cache_threads, train_sgd, train_sgd_stream,
-    CacheEval, HoldoutReport, SgdConfig, SgdLoss, SgdStream,
+    eval_from_cache, eval_from_cache_threads, train_from_cache, train_from_cache_checkpointed,
+    train_from_cache_holdout, train_from_cache_holdout_threads, train_from_cache_threads,
+    train_sgd, train_sgd_stream, CacheEval, HoldoutReport, SgdConfig, SgdLoss, SgdStream,
 };

@@ -8,9 +8,22 @@
 //! documents with any scheme without any other state.  Text header +
 //! little-endian f32 weights.
 //!
-//! Format v2 (current): `BBMH-MODEL v2`, an `encoder <scheme>` line, the
-//! scheme's parameters as `key value` lines, `dim`, then weights.  v1
-//! files (b-bit only: `b/k/d/seed/dim`) are still readable.
+//! Format v2: `BBMH-MODEL v2`, an `encoder <scheme>` line, the scheme's
+//! parameters as `key value` lines, `dim`, then weights.  v1 files (b-bit
+//! only: `b/k/d/seed/dim`) are still readable.
+//!
+//! Format v3 (training checkpoints): v2 plus an [`OptState`] block —
+//! `step`/`rows_seen`/`epochs_done`/`loss_sum_bits` lines between `dim`
+//! and `weights` — everything [`SgdStream`](crate::solver::SgdStream)
+//! needs to continue a killed run to bit-identical final weights.
+//! `save` writes v3 exactly when [`SavedModel::opt`] is set, so plain
+//! models keep the v2 format older readers understand.
+//!
+//! Every save commits through
+//! [`atomic_file::write_atomic`](crate::util::atomic_file::write_atomic)
+//! (tmp + fsync + rename): a model path never names a half-written file,
+//! which is what makes the serve tier's hot reload safe against a crash
+//! mid-checkpoint.
 
 use std::fmt;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -18,7 +31,25 @@ use std::path::Path;
 
 use crate::encode::encoder::{EncodeScratch, EncoderSpec, FeatureEncoder};
 use crate::solver::linear::LinearModel;
+use crate::util::atomic_file;
 use crate::{Error, Result};
+
+/// Optimizer state carried by a v3 training checkpoint: the schedule
+/// position ([`SgdStream`](crate::solver::SgdStream) step counter), the
+/// progressive-loss accumulators, and how many epochs are already done.
+/// `loss_sum` round-trips through its raw f64 bits so a resumed run's
+/// progressive loss is bit-identical to an uninterrupted one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OptState {
+    /// Minibatch steps taken (drives the learning-rate schedule).
+    pub step: u64,
+    /// Rows consumed across all epochs.
+    pub rows_seen: u64,
+    /// Epochs fully completed — a resumed run restarts at this epoch.
+    pub epochs_done: usize,
+    /// Progressive-loss numerator (pre-update loss summed over all rows).
+    pub loss_sum: f64,
+}
 
 /// Everything needed to classify a raw document: the encoder spec, the
 /// weights, and the encoder itself — drawn **once** at construction/load
@@ -27,6 +58,9 @@ use crate::{Error, Result};
 pub struct SavedModel {
     pub spec: EncoderSpec,
     pub model: LinearModel,
+    /// Optimizer state when this file is a training checkpoint (`None`
+    /// for plain models; its presence selects the v3 on-disk format).
+    pub opt: Option<OptState>,
     encoder: Box<dyn FeatureEncoder>,
 }
 
@@ -44,7 +78,7 @@ impl SavedModel {
             )));
         }
         let encoder = spec.encoder()?;
-        Ok(SavedModel { spec, model, encoder })
+        Ok(SavedModel { spec, model, opt: None, encoder })
     }
 
     /// The cached encoder this model classifies with.
@@ -62,20 +96,30 @@ impl SavedModel {
         self.encoder.scratch()
     }
 
+    /// Write the model file atomically (tmp + fsync + rename): readers —
+    /// including a live server's hot-reload poller — only ever see the
+    /// old complete file or the new complete file, never a torn one.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
-        let f = std::fs::File::create(path)?;
-        let mut w = BufWriter::new(f);
-        writeln!(w, "BBMH-MODEL v2")?;
-        // the spec's text form is owned by EncoderSpec, next to its binary
-        // cache-header form — one place per serialization
-        self.spec.write_text_fields(&mut w)?;
-        writeln!(w, "dim {}", self.model.w.len())?;
-        writeln!(w, "weights")?;
-        for x in &self.model.w {
-            w.write_all(&x.to_le_bytes())?;
-        }
-        w.flush()?;
-        Ok(())
+        atomic_file::write_atomic(path.as_ref(), |f| -> Result<()> {
+            let mut w = BufWriter::new(f);
+            writeln!(w, "BBMH-MODEL v{}", if self.opt.is_some() { 3 } else { 2 })?;
+            // the spec's text form is owned by EncoderSpec, next to its
+            // binary cache-header form — one place per serialization
+            self.spec.write_text_fields(&mut w)?;
+            writeln!(w, "dim {}", self.model.w.len())?;
+            if let Some(opt) = &self.opt {
+                writeln!(w, "step {}", opt.step)?;
+                writeln!(w, "rows_seen {}", opt.rows_seen)?;
+                writeln!(w, "epochs_done {}", opt.epochs_done)?;
+                writeln!(w, "loss_sum_bits {}", opt.loss_sum.to_bits())?;
+            }
+            writeln!(w, "weights")?;
+            for x in &self.model.w {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            w.flush()?;
+            Ok(())
+        })
     }
 
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
@@ -98,6 +142,7 @@ impl SavedModel {
         let version = match lines.next() {
             Some("BBMH-MODEL v1") => 1u32,
             Some("BBMH-MODEL v2") => 2u32,
+            Some("BBMH-MODEL v3") => 3u32,
             _ => return Err(Error::InvalidArg("bad model magic".into())),
         };
         let mut next_kv = |key: &str| -> Result<String> {
@@ -135,13 +180,25 @@ impl SavedModel {
                 spec.output_dim()
             )));
         }
+        let opt = if version == 3 {
+            Some(OptState {
+                step: num(&next_kv("step")?, "step")?,
+                rows_seen: num(&next_kv("rows_seen")?, "rows_seen")?,
+                epochs_done: num(&next_kv("epochs_done")?, "epochs_done")?,
+                loss_sum: f64::from_bits(num(&next_kv("loss_sum_bits")?, "loss_sum_bits")?),
+            })
+        } else {
+            None
+        };
         let mut bytes = vec![0u8; dim * 4];
         r.read_exact(&mut bytes)?;
         let w: Vec<f32> = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        SavedModel::new(spec, LinearModel { w })
+        let mut saved = SavedModel::new(spec, LinearModel { w })?;
+        saved.opt = opt;
+        Ok(saved)
     }
 }
 
@@ -149,8 +206,10 @@ impl Clone for SavedModel {
     fn clone(&self) -> Self {
         // the encoder draw is deterministic in the spec, and `self` was
         // validated at construction — re-drawing cannot fail
-        SavedModel::new(self.spec, self.model.clone())
-            .expect("cloning a validated model cannot fail")
+        let mut clone = SavedModel::new(self.spec, self.model.clone())
+            .expect("cloning a validated model cannot fail");
+        clone.opt = self.opt;
+        clone
     }
 }
 
@@ -254,6 +313,44 @@ mod tests {
         let loaded = SavedModel::load(&path).unwrap();
         assert_eq!(loaded.spec, EncoderSpec::Bbit { b, k, d: 1024, seed: 9 });
         assert_eq!(loaded.model.w.len(), dim);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v3_checkpoint_roundtrips_opt_state_bit_exactly() {
+        let dir = std::env::temp_dir().join(format!("bbmh_v3model_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bbmh");
+        let spec = EncoderSpec::Bbit { b: 4, k: 6, d: 1 << 12, seed: 7 };
+        let w: Vec<f32> = (0..spec.output_dim()).map(|j| (j as f32).sin()).collect();
+        let mut saved = SavedModel::new(spec, LinearModel { w }).unwrap();
+        saved.opt = Some(OptState {
+            step: 12345,
+            rows_seen: 987654,
+            epochs_done: 3,
+            // a value with no short decimal form: bits must survive
+            loss_sum: 0.1 + 0.2,
+        });
+        saved.save(&path).unwrap();
+        assert!(
+            std::fs::read(&path).unwrap().starts_with(b"BBMH-MODEL v3\n"),
+            "opt state selects the v3 format"
+        );
+        assert!(!crate::util::atomic_file::tmp_path(&path).exists(), "save must not leave a tmp");
+        let loaded = SavedModel::load(&path).unwrap();
+        assert_eq!(loaded.opt, saved.opt);
+        assert_eq!(
+            loaded.opt.unwrap().loss_sum.to_bits(),
+            (0.1f64 + 0.2).to_bits(),
+            "loss_sum must round-trip bit-exactly"
+        );
+        assert_eq!(loaded.model.w, saved.model.w);
+        assert_eq!(loaded.clone().opt, saved.opt, "clone keeps the checkpoint state");
+        // a plain model (opt None) keeps writing the v2 format
+        let plain = SavedModel::new(spec, saved.model.clone()).unwrap();
+        plain.save(&path).unwrap();
+        assert!(std::fs::read(&path).unwrap().starts_with(b"BBMH-MODEL v2\n"));
+        assert_eq!(SavedModel::load(&path).unwrap().opt, None);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -389,6 +389,31 @@ impl SgdStream {
         self.loss_sum
     }
 
+    /// Snapshot the optimizer state for a checkpoint (the weights travel
+    /// separately as the model vector).  Only meaningful at an epoch
+    /// boundary: the partial-minibatch buffer is *not* part of the
+    /// snapshot, and [`train_from_cache_checkpointed`] only checkpoints
+    /// after [`end_epoch`](Self::end_epoch), when the buffer is empty.
+    pub fn opt_state(&self) -> crate::solver::model_io::OptState {
+        crate::solver::model_io::OptState {
+            step: self.step,
+            rows_seen: self.rows_seen,
+            epochs_done: self.epochs_done,
+            loss_sum: self.loss_sum,
+        }
+    }
+
+    /// Restore a snapshot taken by [`opt_state`](Self::opt_state);
+    /// together with [`set_weights`](Self::set_weights) this resumes the
+    /// schedule exactly where the checkpoint left it — step counter,
+    /// learning rate, progressive loss, all bit-identical.
+    pub fn restore_opt_state(&mut self, s: &crate::solver::model_io::OptState) {
+        self.step = s.step;
+        self.rows_seen = s.rows_seen;
+        self.epochs_done = s.epochs_done;
+        self.loss_sum = s.loss_sum;
+    }
+
     /// Consume the trainer.  `TrainStats.objective` is the *progressive
     /// loss* (no second pass over data that may already be gone), not the
     /// batch objective `train_sgd` reports.
@@ -440,7 +465,10 @@ fn sgd_geometry(meta: &crate::encode::cache::CacheMeta) -> Result<(u32, usize)> 
 /// allocation per record: one pair of scratch buffers serves the whole
 /// run).  Works for any packed-code encoder scheme the cache header
 /// records (b-bit minwise, OPH, ...).
-pub fn train_from_cache<P: AsRef<Path>>(path: P, cfg: &SgdConfig) -> Result<(LinearModel, TrainStats)> {
+pub fn train_from_cache<P: AsRef<Path>>(
+    path: P,
+    cfg: &SgdConfig,
+) -> Result<(LinearModel, TrainStats)> {
     let meta = CacheReader::open(&path)?.meta();
     let (b, k) = sgd_geometry(&meta)?;
     let mut stream = SgdStream::new(cfg.clone(), b, k);
@@ -452,6 +480,76 @@ pub fn train_from_cache<P: AsRef<Path>>(path: P, cfg: &SgdConfig) -> Result<(Lin
             stream.push_chunk_ref(&codes, &labels)?;
         }
         stream.end_epoch();
+    }
+    Ok(stream.finalize())
+}
+
+/// [`train_from_cache`] with crash-safe epoch checkpoints: after every
+/// `every`-th epoch (and always after the last) the weights plus the full
+/// optimizer state ([`crate::solver::OptState`]) are written atomically to
+/// `checkpoint` as a v3 model file — which the serve tier can hot-load
+/// directly, since a checkpoint *is* a valid model.  With `resume`, an
+/// existing checkpoint is loaded, already-completed epochs are skipped,
+/// and the run continues to **bit-identical** final weights vs. an
+/// uninterrupted run (the schedule position, progressive loss and weights
+/// all round-trip exactly; `tests/crash_recovery.rs` kills a training
+/// subprocess mid-epoch to prove it).  A `resume` with no checkpoint on
+/// disk is a fresh start, so one CLI invocation is idempotent across
+/// crashes.  Restricted to the sequential replay path: iterate-averaged
+/// multi-thread training has per-shard state this format does not carry.
+pub fn train_from_cache_checkpointed<P: AsRef<Path>>(
+    path: P,
+    cfg: &SgdConfig,
+    checkpoint: &Path,
+    every: usize,
+    resume: bool,
+) -> Result<(LinearModel, TrainStats)> {
+    let meta = CacheReader::open(&path)?.meta();
+    let (b, k) = sgd_geometry(&meta)?;
+    let mut stream = SgdStream::new(cfg.clone(), b, k);
+    let mut start_epoch = 0usize;
+    if resume && checkpoint.exists() {
+        let saved = SavedModel::load(checkpoint)?;
+        let opt = saved.opt.ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "{} is a plain model, not a training checkpoint (no optimizer state)",
+                checkpoint.display()
+            ))
+        })?;
+        if saved.spec != meta.spec {
+            return Err(Error::InvalidArg(format!(
+                "checkpoint encoder spec {:?} does not match cache spec {:?}",
+                saved.spec, meta.spec
+            )));
+        }
+        stream.set_weights(&saved.model.w)?;
+        stream.restore_opt_state(&opt);
+        start_epoch = opt.epochs_done;
+        eprintln!(
+            "resuming from checkpoint {} (epoch {start_epoch}, {} rows seen)",
+            checkpoint.display(),
+            opt.rows_seen
+        );
+    } else if resume {
+        eprintln!("note: checkpoint {} not found; starting fresh", checkpoint.display());
+    }
+    let epochs = cfg.epochs.max(1);
+    let every = every.max(1);
+    let mut codes = PackedCodes::new(b, k);
+    let mut labels: Vec<i8> = Vec::new();
+    for epoch in start_epoch..epochs {
+        let mut reader = CacheReader::open(&path)?;
+        while reader.next_chunk_into(&mut codes, &mut labels)? {
+            stream.push_chunk_ref(&codes, &labels)?;
+        }
+        stream.end_epoch();
+        let done = epoch + 1;
+        if done % every == 0 || done == epochs {
+            let mut snap =
+                SavedModel::new(meta.spec, LinearModel { w: stream.weights().to_vec() })?;
+            snap.opt = Some(stream.opt_state());
+            snap.save(checkpoint)?;
+        }
     }
     Ok(stream.finalize())
 }
@@ -1035,6 +1133,58 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_diff < 1e-6, "divergence: {max_diff}");
+    }
+
+    #[test]
+    fn checkpointed_cache_training_resumes_bit_identically() {
+        use crate::encode::cache::CacheWriter;
+        use crate::encode::encoder::EncoderSpec;
+        let dir = std::env::temp_dir().join(format!("bbmh_ckpt_sgd_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache = dir.join("train.cache");
+        let ds = random_bbit(4, 12, 200, 0xC0FFEE);
+        let spec = EncoderSpec::Bbit { b: 4, k: 12, d: 1 << 16, seed: 1 };
+        let mut w = CacheWriter::create(&cache, &spec).unwrap();
+        for lo in (0..ds.len()).step_by(16) {
+            let (pc, ls) = chunk_of(&ds, lo, (lo + 16).min(ds.len()));
+            w.write_chunk(&pc, &ls).unwrap();
+        }
+        w.finalize().unwrap();
+
+        let full_cfg = SgdConfig { epochs: 6, batch: 32, lambda: 1e-3, ..Default::default() };
+        let (reference, _) = train_from_cache(&cache, &full_cfg).unwrap();
+
+        // checkpointing must not perturb an uninterrupted run
+        let ck_a = dir.join("a.ckpt");
+        let (m_a, _) =
+            train_from_cache_checkpointed(&cache, &full_cfg, &ck_a, 2, false).unwrap();
+        assert_eq!(m_a.w, reference.w);
+
+        // "crash" after 3 epochs, then resume to 6: bit-identical weights
+        let ck_b = dir.join("b.ckpt");
+        let half_cfg = SgdConfig { epochs: 3, ..full_cfg.clone() };
+        train_from_cache_checkpointed(&cache, &half_cfg, &ck_b, 1, false).unwrap();
+        let mid = SavedModel::load(&ck_b).unwrap();
+        assert_eq!(mid.opt.unwrap().epochs_done, 3);
+        assert_ne!(mid.model.w, reference.w, "3 epochs must differ from 6");
+        let (m_b, stats) =
+            train_from_cache_checkpointed(&cache, &full_cfg, &ck_b, 2, true).unwrap();
+        assert_eq!(m_b.w, reference.w, "resumed weights must be bit-identical");
+        assert_eq!(stats.iterations, 6);
+        let done = SavedModel::load(&ck_b).unwrap();
+        assert_eq!(done.model.w, reference.w, "final checkpoint carries the finished weights");
+        assert_eq!(done.opt.unwrap().epochs_done, 6);
+
+        // resuming an already-finished run is a no-op with the same result
+        let (m_c, _) =
+            train_from_cache_checkpointed(&cache, &full_cfg, &ck_b, 2, true).unwrap();
+        assert_eq!(m_c.w, reference.w);
+
+        // a plain (v2) model is rejected as a resume source
+        let plain = SavedModel::new(spec, reference.clone()).unwrap();
+        plain.save(&ck_a).unwrap();
+        assert!(train_from_cache_checkpointed(&cache, &full_cfg, &ck_a, 2, true).is_err());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

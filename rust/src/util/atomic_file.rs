@@ -1,0 +1,132 @@
+//! Durable file commits: write-to-tmp, fsync, atomic rename.
+//!
+//! Every on-disk artifact that a crashed writer could leave half-written
+//! (the encode cache, saved models, training checkpoints, index snapshots)
+//! commits through this module.  The protocol is the classic one:
+//!
+//! 1. write the full payload to `<dst>.tmp` (same directory, so the rename
+//!    stays within one filesystem),
+//! 2. flush and `fsync` the tmp file,
+//! 3. `rename(tmp, dst)` — atomic on POSIX,
+//! 4. `fsync` the parent directory so the rename itself is durable.
+//!
+//! A reader therefore only ever observes `dst` as either absent or complete;
+//! the worst a crash leaves behind is a stale `.tmp` sibling.
+
+use std::fs::{self, File, OpenOptions};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The conventional tmp sibling for `dst` (`<dst>.tmp`).
+pub fn tmp_path(dst: &Path) -> PathBuf {
+    let mut os = dst.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// fsync a file by path.  Opening read-only is sufficient on Linux: the
+/// fsync applies to the inode, not the descriptor's access mode.
+pub fn sync_file(path: &Path) -> io::Result<()> {
+    File::open(path)?.sync_all()
+}
+
+/// fsync the directory containing `path`, making a rename into it durable.
+/// Platforms that refuse to open directories (or to fsync them) are treated
+/// as best-effort: the rename is still atomic, just not crash-durable.
+pub fn sync_parent_dir(path: &Path) -> io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let dir = match dir {
+        Some(d) => d,
+        None => Path::new("."),
+    };
+    match File::open(dir) {
+        Ok(f) => match f.sync_all() {
+            Ok(()) => Ok(()),
+            Err(_) => Ok(()),
+        },
+        Err(_) => Ok(()),
+    }
+}
+
+/// Steps 2–4 of the protocol: fsync `tmp`, rename it onto `dst`, fsync the
+/// parent directory.  The caller has already written and flushed `tmp`.
+pub fn commit(tmp: &Path, dst: &Path) -> io::Result<()> {
+    sync_file(tmp)?;
+    fs::rename(tmp, dst)?;
+    sync_parent_dir(dst)
+}
+
+/// Write `dst` atomically: `fill` receives a fresh `<dst>.tmp` file, and on
+/// success the tmp is fsync'd and renamed into place.  On error the tmp is
+/// removed so a failed save never litters (or worse, resembles) real output.
+pub fn write_atomic<E, F>(dst: &Path, fill: F) -> Result<(), E>
+where
+    E: From<io::Error>,
+    F: FnOnce(&mut File) -> Result<(), E>,
+{
+    let tmp = tmp_path(dst);
+    let mut f = OpenOptions::new()
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&tmp)
+        .map_err(E::from)?;
+    match fill(&mut f).and_then(|()| f.sync_all().map_err(E::from)) {
+        Ok(()) => {
+            drop(f);
+            fs::rename(&tmp, dst).map_err(E::from)?;
+            sync_parent_dir(dst).map_err(E::from)?;
+            Ok(())
+        }
+        Err(e) => {
+            drop(f);
+            let _ = fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bbmh_atomic_{}_{}", name, std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_lands_full_content_and_no_tmp() {
+        let d = tdir("ok");
+        let dst = d.join("out.bin");
+        write_atomic::<io::Error, _>(&dst, |f| f.write_all(b"hello world")).unwrap();
+        assert_eq!(fs::read(&dst).unwrap(), b"hello world");
+        assert!(!tmp_path(&dst).exists());
+    }
+
+    #[test]
+    fn failed_fill_leaves_neither_dst_nor_tmp() {
+        let d = tdir("fail");
+        let dst = d.join("out.bin");
+        let err = write_atomic::<io::Error, _>(&dst, |f| {
+            f.write_all(b"partial")?;
+            Err(io::Error::new(io::ErrorKind::Other, "boom"))
+        })
+        .unwrap_err();
+        assert_eq!(err.to_string(), "boom");
+        assert!(!dst.exists());
+        assert!(!tmp_path(&dst).exists());
+    }
+
+    #[test]
+    fn write_atomic_replaces_existing_file() {
+        let d = tdir("replace");
+        let dst = d.join("out.bin");
+        fs::write(&dst, b"old").unwrap();
+        write_atomic::<io::Error, _>(&dst, |f| f.write_all(b"new content")).unwrap();
+        assert_eq!(fs::read(&dst).unwrap(), b"new content");
+    }
+}

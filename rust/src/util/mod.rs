@@ -2,8 +2,10 @@
 //! and stats helpers.  Hand-rolled (no external deps) so every randomized
 //! result in the repo is reproducible from a single `u64` seed.
 
+pub mod atomic_file;
 pub mod bench;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 
 pub use rng::Rng;

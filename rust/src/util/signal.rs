@@ -1,0 +1,53 @@
+//! Minimal std-only SIGTERM latch for the online tier.
+//!
+//! std already links libc on unix, so we declare `signal(2)` ourselves
+//! rather than pulling in a crate.  The handler does the only
+//! async-signal-safe thing worth doing: it sets a flag.  The serving loop
+//! polls the flag and runs the drain sequence on the main thread.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static TERM_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+const SIGTERM: i32 = 15;
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_sig: i32) {
+    TERM_REQUESTED.store(true, Ordering::Relaxed);
+}
+
+/// Install the SIGTERM handler (idempotent).  On non-unix platforms this is
+/// a no-op and [`term_requested`] simply never fires.
+pub fn install_sigterm_handler() {
+    #[cfg(unix)]
+    unsafe {
+        signal(SIGTERM, on_sigterm as usize);
+    }
+}
+
+/// Has a SIGTERM arrived since the handler was installed?
+pub fn term_requested() -> bool {
+    TERM_REQUESTED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The latch itself is process-global; delivering a real SIGTERM to the
+    // test harness would stop other tests, so end-to-end delivery is covered
+    // by the subprocess drain test in tests/crash_recovery.rs.  Here we only
+    // check that installation is safe and the flag starts clear.
+    #[test]
+    fn install_is_idempotent_and_flag_starts_clear() {
+        install_sigterm_handler();
+        install_sigterm_handler();
+        assert!(!term_requested());
+    }
+}
